@@ -1,0 +1,41 @@
+//! Dual-phase rate detection (paper Fig. 10/14): the consumer's service
+//! rate drops from ~2.66 MB/s to ~1 MB/s halfway through; the monitor's
+//! successive converged estimates should track both levels.
+//!
+//! Run: `cargo run --release --example dual_phase -- [--rate-a 2.66]
+//!       [--rate-b 1.0] [--secs 6]`
+
+use streamflow::campaign::{classify_dual, run_dual};
+use streamflow::cli::Args;
+use streamflow::rng::dist::DistKind;
+
+fn main() -> streamflow::Result<()> {
+    let args = Args::from_env()?;
+    let rate_a: f64 = args.get_or("rate-a", 2.66)?;
+    let rate_b: f64 = args.get_or("rate-b", 1.0)?;
+    let secs: f64 = args.get_or("secs", 6.0)?;
+
+    println!("dual-phase: {rate_a} MB/s → {rate_b} MB/s halfway (exponential service)");
+    let run = run_dual(rate_a, rate_b, 1.8, DistKind::Exponential, 2048, secs, 0xCAFE)?;
+
+    if run.estimates.is_empty() {
+        println!("no converged estimates — try a longer --secs");
+    }
+    for (i, est) in run.estimates.iter().enumerate() {
+        let near_a = ((est - rate_a) / rate_a).abs() <= 0.2;
+        let near_b = ((est - rate_b) / rate_b).abs() <= 0.2;
+        let tag = if near_a {
+            "≈ phase A"
+        } else if near_b {
+            "≈ phase B"
+        } else {
+            "  (transition)"
+        };
+        println!("estimate {i:>2}: {est:.3} MB/s  {tag}");
+    }
+    println!(
+        "classification (20% criterion): {:?}   [paper Fig. 15 categories]",
+        classify_dual(&run.estimates, rate_a, rate_b, 20.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,229 @@
+//! End-to-end validation driver — the headline experiment.
+//!
+//! Runs (scaled-down by default; scale with `SF_RUNS`, `SF_SECS`):
+//!
+//! 1. the single-phase micro-benchmark campaign (paper Fig. 13): rate
+//!    sweep 0.8 → 8 MB/s, exponential + deterministic service processes,
+//!    scoring the % error histogram and the within-20% mass;
+//! 2. the dual-phase campaign (Fig. 15): high-ρ and low-ρ splits,
+//!    classifying Neither/A/B/Both per run;
+//! 3. both full applications with instrumented queues (Figs. 16–17),
+//!    reporting in-range fractions against ground truth;
+//! 4. the monitoring-overhead measurement (§VI: "1–2%").
+//!
+//! Record the output in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_campaign`
+
+use streamflow::apps::{matmul, rabin_karp};
+use streamflow::campaign::{
+    run_dual, single_phase_campaign, tally, PhaseClass,
+};
+use streamflow::config::{env_f64, env_usize, MatmulConfig, MicrobenchConfig, RabinKarpConfig};
+use streamflow::monitor::MonitorConfig;
+use streamflow::rng::dist::DistKind;
+use streamflow::rng::Xoshiro256pp;
+use streamflow::stats::Histogram;
+
+fn main() -> streamflow::Result<()> {
+    let runs = env_usize("SF_RUNS", 48);
+    let secs = env_f64("SF_SECS", 1.2);
+    println!("=== streamflow end-to-end campaign (runs={runs}, secs/run={secs}) ===\n");
+
+    single_phase(runs, secs)?;
+    dual_phase(runs / 3, secs)?;
+    applications()?;
+    overhead(secs)?;
+    println!("\n=== campaign complete ===");
+    Ok(())
+}
+
+/// Part 1 — Fig. 13: accuracy histogram over the rate sweep.
+fn single_phase(runs: usize, secs: f64) -> streamflow::Result<()> {
+    println!("--- part 1: single-phase campaign (paper Fig. 13) ---");
+    let mut all_errs = Vec::new();
+    let mut unconverged = 0usize;
+    for dist in [DistKind::Exponential, DistKind::Deterministic] {
+        let cfg = MicrobenchConfig {
+            runs: runs / 2,
+            dist,
+            seed: 0xF13 + dist as u64,
+            ..Default::default()
+        };
+        let results = single_phase_campaign(&cfg, secs, |i, r| {
+            if i % 8 == 0 {
+                eprintln!(
+                    "  [{dist:?} {i:>3}] set {:.2} MB/s → est {:?} MB/s",
+                    r.set_mbps,
+                    r.est_mbps.map(|e| (e * 1000.0).round() / 1000.0)
+                );
+            }
+        })?;
+        for r in &results {
+            match r.pct_err {
+                Some(e) => all_errs.push(e),
+                None => unconverged += 1,
+            }
+        }
+    }
+    let mut hist = Histogram::new(-100.0, 100.0, 40);
+    for &e in &all_errs {
+        hist.add(e);
+    }
+    let within20 = all_errs.iter().filter(|e| e.abs() <= 20.0).count();
+    let low_bias = all_errs.iter().filter(|e| **e < 0.0).count();
+    println!(
+        "single-phase: {} runs, {} converged, {} unconverged ({}— the paper's 'fails knowingly')",
+        all_errs.len() + unconverged,
+        all_errs.len(),
+        unconverged,
+        if unconverged > 0 { "" } else { "0 " }
+    );
+    println!(
+        "  within ±20%: {}/{} = {:.1}%   (paper: 'the majority')",
+        within20,
+        all_errs.len(),
+        100.0 * within20 as f64 / all_errs.len().max(1) as f64
+    );
+    println!(
+        "  erring low: {:.1}%   (paper: 'when it errs, the estimate is typically low')",
+        100.0 * low_bias as f64 / all_errs.len().max(1) as f64
+    );
+    println!("  histogram (±100%, 5%-bins): center,probability");
+    for (c, p) in hist.probabilities() {
+        if p > 0.0 {
+            println!("    {c:>6.1}% {p:.3}");
+        }
+    }
+    Ok(())
+}
+
+/// Part 2 — Fig. 15: dual-phase classification split by ρ.
+fn dual_phase(runs: usize, secs: f64) -> streamflow::Result<()> {
+    println!("\n--- part 2: dual-phase campaign (paper Fig. 15) ---");
+    let mut rng = Xoshiro256pp::new(0xD0A1);
+    for (label, rho) in [("high ρ (≈1.6)", 1.6), ("low ρ (≈0.5)", 0.5)] {
+        let mut results = Vec::new();
+        for i in 0..runs.max(4) {
+            let a = rng.uniform(1.5, 6.0);
+            let b = rng.uniform(0.8, a * 0.6); // distinct second phase
+            results.push(run_dual(
+                a,
+                b,
+                rho,
+                DistKind::Exponential,
+                2048,
+                secs * 2.0,
+                0xD0A1 + i as u64,
+            )?);
+        }
+        let t = tally(&results);
+        let get = |c| t.get(&c).copied().unwrap_or(0);
+        println!(
+            "  {label}: Both {:>2}  OnlyA {:>2}  OnlyB {:>2}  Neither {:>2}   (n = {})",
+            get(PhaseClass::Both),
+            get(PhaseClass::OnlyA),
+            get(PhaseClass::OnlyB),
+            get(PhaseClass::Neither),
+            results.len()
+        );
+    }
+    println!("  (paper: both phases found more often at high ρ; errors conservative — find B)");
+    Ok(())
+}
+
+/// Part 3 — Figs. 16/17: the full applications.
+fn applications() -> streamflow::Result<()> {
+    println!("\n--- part 3: full applications (paper Figs. 16–17) ---");
+
+    // Matrix multiply with 5 dot kernels (paper's setup), reduce instrumented.
+    let mm = MatmulConfig::default();
+    let run = matmul::run_matmul(&mm, streamflow::campaign::campaign_monitor())?;
+    let ests: Vec<f64> = run
+        .reduce_streams
+        .iter()
+        .flat_map(|s| run.report.rates_for(*s))
+        .map(|e| e.rate_mbps())
+        .collect();
+    println!(
+        "  matmul {}×{}: wall {:.2} s, {} converged reduce-queue estimates{}",
+        mm.n,
+        mm.n,
+        run.report.wall_secs(),
+        ests.len(),
+        if ests.is_empty() { " (short run — see fig16 bench for the long version)" } else { "" }
+    );
+    if !ests.is_empty() {
+        let lo = ests.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ests.iter().cloned().fold(0.0, f64::max);
+        println!("    estimate range: {lo:.4} – {hi:.4} MB/s per queue");
+    }
+
+    // Rabin–Karp: verify queues at very low ρ.
+    let rk = RabinKarpConfig::default();
+    let run = rabin_karp::run_rabin_karp(&rk, streamflow::campaign::campaign_monitor())?;
+    let n_conv: usize = run.verify_streams.iter().map(|s| run.report.rates_for(*s).len()).sum();
+    println!(
+        "  rabin-karp {} MiB: wall {:.2} s, {} matches, {} converged verify-queue estimates \
+         (low ρ — paper: ~35% in range, hardest case)",
+        rk.corpus_bytes >> 20,
+        run.report.wall_secs(),
+        run.matches.len(),
+        n_conv
+    );
+    Ok(())
+}
+
+/// Part 4 — §VI overhead: instrumented vs uninstrumented wall time.
+fn overhead(secs: f64) -> streamflow::Result<()> {
+    println!("\n--- part 4: monitoring overhead (paper §VI: 1–2%) ---");
+    let reps = 5;
+    let mut on = Vec::new();
+    let mut off = Vec::new();
+    for monitored in [true, false] {
+        for i in 0..reps {
+            let mut topo = streamflow::topology::Topology::new("ovh");
+            let p = topo.add_kernel(Box::new(
+                streamflow::workload::RateControlledProducer::new(
+                    "p",
+                    streamflow::workload::WorkloadSpec::fixed_rate_mbps(8.0),
+                    (secs * 1.0e6) as u64, // 8 MB/s → 1e6 items/s
+                ),
+            ));
+            let c = topo.add_kernel(Box::new(
+                streamflow::workload::RateControlledConsumer::new(
+                    "c",
+                    streamflow::workload::WorkloadSpec::fixed_rate_mbps(4.0),
+                ),
+            ));
+            topo.connect::<u64>(
+                p,
+                0,
+                c,
+                0,
+                streamflow::queue::StreamConfig::default().with_capacity(1024).with_item_bytes(8),
+            )?;
+            let mcfg = if monitored {
+                streamflow::campaign::campaign_monitor()
+            } else {
+                MonitorConfig::disabled()
+            };
+            let rep = streamflow::scheduler::Scheduler::new(topo).with_monitoring(mcfg).run()?;
+            if monitored {
+                on.push(rep.wall_ns as f64);
+            } else {
+                off.push(rep.wall_ns as f64);
+            }
+            let _ = i;
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (m_on, m_off) = (mean(&on), mean(&off));
+    println!(
+        "  instrumented {:.1} ms vs bare {:.1} ms → overhead {:+.2}%  (paper: 1–2%)",
+        m_on / 1e6,
+        m_off / 1e6,
+        (m_on - m_off) / m_off * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! The paper's matrix-multiply streaming application (§V-B1, Fig. 11):
+//! reader → n× dot-product kernels → reducer, with the reduce-side queues
+//! instrumented (Fig. 16).
+//!
+//! Run: `cargo run --release --example matrix_multiply -- [--n 256]
+//!       [--dots 5] [--xla] [--sweep]`
+//!
+//! `--xla` executes the dot product through the AOT Pallas artifact
+//! (requires `make artifacts`; shipped shape is n = 256, block 16).
+//! `--sweep` additionally reproduces the Fig.-2 buffer-size sweep.
+
+use streamflow::apps::matmul::{matmul_ref, random_matrix, run_matmul};
+use streamflow::campaign::campaign_monitor;
+use streamflow::cli::Args;
+use streamflow::config::MatmulConfig;
+use streamflow::monitor::MonitorConfig;
+use streamflow::report::Summary;
+
+fn main() -> streamflow::Result<()> {
+    let args = Args::from_env()?;
+    let mut cfg = MatmulConfig::default();
+    cfg.n = args.get_or("n", cfg.n)?;
+    cfg.dot_kernels = args.get_or("dots", cfg.dot_kernels)?;
+    cfg.use_xla = args.has_flag("xla");
+
+    println!(
+        "matmul: {}×{} f32, {} dot kernels, block {} rows, backend {}",
+        cfg.n,
+        cfg.n,
+        cfg.dot_kernels,
+        cfg.block_rows,
+        if cfg.use_xla { "xla artifact" } else { "native" }
+    );
+
+    let run = run_matmul(&cfg, campaign_monitor())?;
+    println!("wall time: {:.3} s", run.report.wall_secs());
+
+    // Verify against the reference product.
+    let a = random_matrix(cfg.n, cfg.seed);
+    let b = random_matrix(cfg.n, cfg.seed ^ 0xFEED);
+    let expect = matmul_ref(&a, &b, cfg.n);
+    let max_err = run
+        .c
+        .iter()
+        .zip(&expect)
+        .map(|(&g, &w)| (g - w).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |C - C_ref| = {max_err:.2e}  ({})", if max_err < 1e-2 { "OK" } else { "FAIL" });
+
+    // Fig.-16-style report: converged rates on the reduce-side queues.
+    for sid in &run.reduce_streams {
+        for est in run.report.rates_for(*sid) {
+            println!(
+                "  reduce queue {:>2}: {:.4} MB/s (T = {} µs)",
+                sid.0,
+                est.rate_mbps(),
+                est.period_ns / 1000
+            );
+        }
+    }
+
+    if args.has_flag("sweep") {
+        fig2_buffer_sweep(&cfg)?;
+    }
+    Ok(())
+}
+
+/// Fig. 2: execution time vs queue capacity (mean + 5th/95th percentiles).
+fn fig2_buffer_sweep(base: &MatmulConfig) -> streamflow::Result<()> {
+    println!("\nFig.-2 sweep: wall time vs buffer capacity");
+    println!("{:>10} {:>12} {:>12} {:>12}", "capacity", "mean_ms", "p5_ms", "p95_ms");
+    for cap in [1usize, 2, 4, 8, 16, 64, 256, 1024] {
+        let mut cfg = base.clone();
+        cfg.capacity = cap;
+        let mut times = Vec::new();
+        for _ in 0..5 {
+            let run = run_matmul(&cfg, MonitorConfig::disabled())?;
+            times.push(run.report.wall_ns as f64 / 1.0e6);
+        }
+        let s = Summary::of(&times);
+        println!("{:>10} {:>12.2} {:>12.2} {:>12.2}", cap, s.mean, s.p5, s.p95);
+    }
+    Ok(())
+}

@@ -1,0 +1,107 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts for the Rust (L3) runtime.
+
+HLO *text* is the interchange format, NOT ``lowered.compile().serialize()``:
+the image's xla_extension 0.5.1 rejects jax>=0.5 serialized HloModuleProto
+(64-bit instruction ids fail its ``proto.id() <= INT_MAX`` check), while the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per graph variant plus ``manifest.json`` with
+the input/output shapes the Rust runtime validates against at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Monitor window width (paper: sliding window w; 64 balances the Gaussian
+#: tail discarded by the unpadded filter against estimator responsiveness).
+WINDOW_W = 64
+#: Convergence window (paper section IV-B: w <- 16).
+CONV_W = 16
+#: Queue-batch sizes the runtime may use per launch.
+BATCHES = (1, 8)
+#: MM-app row-block / matrix dims (DESIGN.md section 3 substitution: 256x256).
+DOT_M, DOT_K, DOT_N = (16, 256, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jax.numpy.float32)
+
+
+def build_specs():
+    """(name, fn, example_args) for every artifact we ship."""
+    specs = []
+    for b in BATCHES:
+        specs.append(
+            (f"estimator_b{b}_w{WINDOW_W}", model.estimator_step, (f32(b, WINDOW_W),))
+        )
+    specs.append((f"convergence_b1_w{CONV_W}", model.convergence_step, (f32(1, CONV_W),)))
+    specs.append(
+        (
+            f"dot_m{DOT_M}_k{DOT_K}_n{DOT_N}",
+            model.dot_block_graph,
+            (f32(DOT_M, DOT_K), f32(DOT_K, DOT_N)),
+        )
+    )
+    specs.append(
+        (
+            f"matmul_{DOT_K}x{DOT_K}",
+            model.matmul_graph,
+            (f32(DOT_K, DOT_K), f32(DOT_K, DOT_K)),
+        )
+    )
+    return specs
+
+
+def lower_one(name, fn, args, out_dir):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_aval = jax.eval_shape(fn, *args)
+    leaves = jax.tree_util.tree_leaves(out_aval)
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in leaves
+        ],
+    }
+    print(f"  {name}: {len(text)} chars, {len(leaves)} output(s)")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias (ignored)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = [lower_one(n, f, a, args.out_dir) for n, f, a in build_specs()]
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

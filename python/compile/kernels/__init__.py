@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels for the streamflow estimation stack.
+
+The paper's numeric hot-spot (Algorithm 1 + Eq. 4 convergence detection) and
+the matrix-multiply application's dot-product block, expressed as Pallas
+kernels. All kernels lower with ``interpret=True`` so the resulting HLO runs
+on the CPU PJRT client the Rust coordinator embeds (real-TPU Mosaic
+custom-calls are not executable there; see DESIGN.md section
+Hardware-Adaptation).
+"""
+
+from .filters import GAUSS_RADIUS, GAUSS_TAPS, LOG_RADIUS, LOG_TAPS, QUANTILE_Z
+from .gauss1d import gauss1d
+from .logconv import logconv
+from .moments import moments
+from .dot_block import dot_block
+
+__all__ = [
+    "GAUSS_RADIUS",
+    "GAUSS_TAPS",
+    "gauss1d",
+    "LOG_RADIUS",
+    "LOG_TAPS",
+    "logconv",
+    "QUANTILE_Z",
+    "moments",
+    "dot_block",
+]

@@ -1,0 +1,43 @@
+"""Tiled matmul block for the matrix-multiply application (paper §V-B1).
+
+The paper streams rows/columns to scalar dot-product kernels; the TPU-shaped
+rethinking (DESIGN.md section Hardware-Adaptation) processes a whole row-block
+of A against B in one launch: ``f32[M, K] @ f32[K, N] -> f32[M, N]`` with
+MXU-aligned 128x128 output tiles and the full contraction dimension resident
+in VMEM (K is a matrix dimension of the streamed problem, small enough here).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def dot_block(a, b, block_m: int = 128, block_n: int = 128):
+    """Compute ``a @ b`` with a Pallas grid over MXU-aligned output tiles."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n))
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

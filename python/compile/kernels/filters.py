@@ -1,0 +1,39 @@
+"""Filter tap definitions shared by the Pallas kernels and the reference
+oracles.
+
+Faithful to the paper:
+
+* Eq. 2 — discrete Gaussian, radius 2, **unnormalized** (the paper convolves
+  with the raw density values; their sum is ~0.97087, which slightly shrinks
+  the estimate and is consistent with the paper's observation that the
+  heuristic "typically errs low").
+* Eq. 4 — Gaussian (radius 1, sigma = 1/2) composed with a Laplacian,
+  evaluated analytically as the Laplacian-of-Gaussian density.
+
+The Rust native backend (rust/src/estimator/filters.rs) carries the same
+constants; test_filters.py locks the numeric values so the two layers cannot
+drift apart.
+"""
+
+import math
+
+GAUSS_RADIUS = 2
+#: Eq. 2: g(x) = exp(-x^2/2) / sqrt(2*pi), x in [-2, 2].
+GAUSS_TAPS = tuple(
+    math.exp(-(x * x) / 2.0) / math.sqrt(2.0 * math.pi)
+    for x in range(-GAUSS_RADIUS, GAUSS_RADIUS + 1)
+)
+
+LOG_RADIUS = 1
+_LOG_SIGMA = 0.5
+#: Eq. 4: LoG(x) with sigma = 1/2, x in [-1, 1].
+LOG_TAPS = tuple(
+    (x * x) * math.exp(-(x * x) / (2.0 * _LOG_SIGMA**2))
+    / (math.sqrt(2.0 * math.pi) * _LOG_SIGMA**5)
+    - math.exp(-(x * x) / (2.0 * _LOG_SIGMA**2))
+    / (math.sqrt(2.0 * math.pi) * _LOG_SIGMA**3)
+    for x in range(-LOG_RADIUS, LOG_RADIUS + 1)
+)
+
+#: Eq. 3: standard-normal 95th-percentile z-score.
+QUANTILE_Z = 1.64485

@@ -1,0 +1,48 @@
+"""Radius-2 discrete Gaussian filter (paper Eq. 2) as a Pallas kernel.
+
+Input is a batch of monitor windows ``S`` with shape ``[B, W]`` (one row per
+instrumented queue — see DESIGN.md section Hardware-Adaptation: we batch the
+per-queue windows so one launch filters every queue). Output is the 'valid'
+interior ``[B, W - 4]`` exactly as Algorithm 1 specifies (no padding; the
+filter starts at the radius).
+
+TPU mapping: rows tile into VMEM via BlockSpec on the batch dimension; the
+5-tap stencil is unrolled into shifted vector loads so the VPU sees five
+fused multiply-adds per lane, no gather.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .filters import GAUSS_RADIUS, GAUSS_TAPS
+
+
+def _gauss1d_kernel(s_ref, o_ref, *, width):
+    s = s_ref[...]
+    out_w = width - 2 * GAUSS_RADIUS
+    acc = jnp.zeros(s.shape[:-1] + (out_w,), dtype=s.dtype)
+    # Unrolled 5-tap stencil: shifted slices instead of a gather.
+    for j, tap in enumerate(GAUSS_TAPS):
+        acc = acc + jnp.asarray(tap, dtype=s.dtype) * s[..., j : out_w + j]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def gauss1d(s, block_b: int = 8):
+    """Filter each row of ``s`` (f32[B, W]) -> f32[B, W-4]."""
+    b, w = s.shape
+    if w <= 2 * GAUSS_RADIUS:
+        raise ValueError(f"window width {w} <= 2*radius {2 * GAUSS_RADIUS}")
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    return pl.pallas_call(
+        functools.partial(_gauss1d_kernel, width=w),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, w - 2 * GAUSS_RADIUS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w - 2 * GAUSS_RADIUS), s.dtype),
+        interpret=True,
+    )(s)

@@ -1,0 +1,45 @@
+"""Laplacian-of-Gaussian convergence filter (paper Eq. 4) as a Pallas kernel.
+
+The paper detects convergence of the running estimate ``q-bar`` by filtering
+the trace of its standard deviation with a radius-1 Gaussian composed with a
+Laplacian ("in practice, one combined filter"), then testing whether the
+min/max of the filtered trace sit within 5e-7 over a window of 16. This
+kernel performs the combined filter over a batch of traces ``[B, W]`` ->
+``[B, W - 2]``; the min/max + tolerance test live one level up (L2
+``convergence_step`` / Rust ``estimator::convergence``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .filters import LOG_RADIUS, LOG_TAPS
+
+
+def _logconv_kernel(v_ref, o_ref, *, width):
+    v = v_ref[...]
+    out_w = width - 2 * LOG_RADIUS
+    acc = jnp.zeros(v.shape[:-1] + (out_w,), dtype=v.dtype)
+    for j, tap in enumerate(LOG_TAPS):
+        acc = acc + jnp.asarray(tap, dtype=v.dtype) * v[..., j : out_w + j]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def logconv(v, block_b: int = 8):
+    """Filter each row of ``v`` (f32[B, W]) -> f32[B, W-2]."""
+    b, w = v.shape
+    if w <= 2 * LOG_RADIUS:
+        raise ValueError(f"window width {w} <= 2*radius {2 * LOG_RADIUS}")
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    return pl.pallas_call(
+        functools.partial(_logconv_kernel, width=w),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, w - 2 * LOG_RADIUS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w - 2 * LOG_RADIUS), v.dtype),
+        interpret=True,
+    )(v)

@@ -1,0 +1,58 @@
+"""Fused Algorithm-1 estimator step as a single Pallas kernel.
+
+One launch takes the batched monitor windows ``S`` (``f32[B, W]``, one row
+per instrumented queue) and produces, per row:
+
+    mu    — mean of the radius-2 Gaussian-filtered interior S'
+    sigma — sample (ddof=1) standard deviation of S'
+    q     — mu + 1.64485 * sigma          (Eq. 3, the 0.95 N-quantile)
+
+Fusing the filter with the moment computation is the §Perf optimization the
+paper's per-sample monitor cannot do: S' never round-trips to HBM — the
+filtered row lives in VMEM/registers and is reduced in the same kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .filters import GAUSS_RADIUS, GAUSS_TAPS, QUANTILE_Z
+
+
+def _moments_kernel(s_ref, mu_ref, sigma_ref, q_ref, *, width):
+    s = s_ref[...]
+    out_w = width - 2 * GAUSS_RADIUS
+    sp = jnp.zeros(s.shape[:-1] + (out_w,), dtype=s.dtype)
+    for j, tap in enumerate(GAUSS_TAPS):
+        sp = sp + jnp.asarray(tap, dtype=s.dtype) * s[..., j : out_w + j]
+    mu = jnp.mean(sp, axis=-1)
+    var = jnp.sum((sp - mu[..., None]) ** 2, axis=-1) / max(out_w - 1, 1)
+    sigma = jnp.sqrt(var)
+    mu_ref[...] = mu
+    sigma_ref[...] = sigma
+    q_ref[...] = mu + jnp.asarray(QUANTILE_Z, dtype=s.dtype) * sigma
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def moments(s, block_b: int = 8):
+    """Fused filter+moments. s: f32[B, W] -> (mu, sigma, q) each f32[B]."""
+    b, w = s.shape
+    if w <= 2 * GAUSS_RADIUS + 1:
+        raise ValueError(f"window width {w} too small for radius {GAUSS_RADIUS}")
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    vec = jax.ShapeDtypeStruct((b,), s.dtype)
+    return pl.pallas_call(
+        functools.partial(_moments_kernel, width=w),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, w), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[vec, vec, vec],
+        interpret=True,
+    )(s)

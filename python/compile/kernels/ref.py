@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+These implement Algorithm 1's math directly with jax.numpy primitives and are
+the ground truth both for pytest/hypothesis (python/tests/) and -- via the
+shared constants in filters.py -- for the Rust native estimator backend.
+"""
+
+import jax.numpy as jnp
+
+from .filters import GAUSS_RADIUS, GAUSS_TAPS, LOG_RADIUS, LOG_TAPS, QUANTILE_Z
+
+
+def _conv_valid(x, taps, radius):
+    """'valid'-mode 1-D convolution of each row of ``x`` with ``taps``.
+
+    The paper's Algorithm 1 runs the filter without padding, so the output of
+    a radius-r filter over a width-W window has width W - 2r.
+    """
+    w = x.shape[-1]
+    out = jnp.zeros(x.shape[:-1] + (w - 2 * radius,), dtype=x.dtype)
+    for j, t in enumerate(taps):
+        out = out + jnp.asarray(t, dtype=x.dtype) * x[..., j : w - 2 * radius + j]
+    return out
+
+
+def gauss1d_ref(s):
+    """Eq. 2 radius-2 Gaussian filter. s: f32[..., W] -> f32[..., W-4]."""
+    return _conv_valid(s, GAUSS_TAPS, GAUSS_RADIUS)
+
+
+def logconv_ref(v):
+    """Eq. 4 Laplacian-of-Gaussian filter. v: f32[..., W] -> f32[..., W-2]."""
+    return _conv_valid(v, LOG_TAPS, LOG_RADIUS)
+
+
+def moments_ref(s):
+    """Fused Algorithm-1 step: Gaussian filter then (mean, sample std, q).
+
+    s: f32[B, W] -> (mu, sigma, q) each f32[B], where
+    q = mu + 1.64485 * sigma (Eq. 3, the N-quantile at 0.95).
+    Sample (ddof=1) standard deviation -- matches the Welford implementation
+    used on the Rust side.
+    """
+    sp = gauss1d_ref(s)
+    n = sp.shape[-1]
+    mu = jnp.mean(sp, axis=-1)
+    var = jnp.sum((sp - mu[..., None]) ** 2, axis=-1) / max(n - 1, 1)
+    sigma = jnp.sqrt(var)
+    q = mu + jnp.asarray(QUANTILE_Z, dtype=s.dtype) * sigma
+    return mu, sigma, q
+
+
+def dot_block_ref(a, b):
+    """Matrix product oracle for the MM application block. f32[M,K]@f32[K,N]."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,53 @@
+"""Layer-2 JAX compute graphs for the streamflow estimation stack.
+
+Each public function here is a jit-able graph built on the Layer-1 Pallas
+kernels. ``aot.py`` lowers them once, at build time, to HLO text artifacts
+that the Rust coordinator loads through PJRT; Python never runs on the
+monitor's sampling path.
+
+Graphs
+------
+``estimator_step``   Algorithm-1 inner step over batched monitor windows.
+``convergence_step`` Eq.-4 LoG filter + min/max reduction over sigma(q-bar)
+                     traces (the 5e-7 tolerance test stays in Rust, where the
+                     tolerance is a runtime config value).
+``dot_block_graph``  Row-block matmul for the matrix-multiply application.
+``matmul_graph``     Whole-matrix product (reducer-side verification).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import dot_block, logconv, moments
+
+
+def estimator_step(s):
+    """Batched Algorithm-1 step.
+
+    s: f32[B, W] of per-queue monitor windows (tc samples) ->
+    (mu, sigma, q): each f32[B]. q is the Eq.-3 estimate of the maximum
+    well-behaved non-blocking transaction count for each queue.
+    """
+    mu, sigma, q = moments(s)
+    return mu, sigma, q
+
+
+def convergence_step(v):
+    """Batched Eq.-4 convergence filter.
+
+    v: f32[B, W] windows of the streamed sigma(q-bar) trace ->
+    (filtered, lo, hi): f32[B, W-2], f32[B], f32[B]. Convergence is declared
+    upstream when hi - lo (and |hi|, |lo|) sit within the configured
+    tolerance (paper: 5e-7 over a window of 16).
+    """
+    f = logconv(v)
+    return f, jnp.min(f, axis=-1), jnp.max(f, axis=-1)
+
+
+def dot_block_graph(a, b):
+    """Row-block of the MM app: f32[M, K] @ f32[K, N] -> f32[M, N]."""
+    return (dot_block(a, b),)
+
+
+def matmul_graph(a, b):
+    """Full-matrix product used by the reducer-side verification path."""
+    return (dot_block(a, b),)

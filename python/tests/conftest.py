@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Make `compile.*` importable regardless of pytest invocation directory.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep per-test budgets sane and deterministic.
+settings.register_profile("streamflow", deadline=None, max_examples=20, derandomize=True)
+settings.load_profile("streamflow")

@@ -1,0 +1,106 @@
+"""AOT pipeline tests: HLO text artifacts parse, execute, and match jit.
+
+This closes the loop the Rust runtime depends on: the HLO **text** we emit
+must compile on the CPU PJRT client and produce the same numbers as the
+jitted L2 graph. (Rust-side integration tests repeat this through the `xla`
+crate; here we prove it inside one process.)
+"""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def art_dir():
+    d = tempfile.mkdtemp(prefix="sf_artifacts_")
+    entries = [aot.lower_one(n, f, a, d) for n, f, a in aot.build_specs()]
+    with open(os.path.join(d, "manifest.json"), "w") as fh:
+        json.dump({"version": 1, "artifacts": entries}, fh)
+    return d
+
+
+def test_manifest_structure(art_dir):
+    with open(os.path.join(art_dir, "manifest.json")) as fh:
+        man = json.load(fh)
+    assert man["version"] == 1
+    names = {e["name"] for e in man["artifacts"]}
+    assert f"estimator_b1_w{aot.WINDOW_W}" in names
+    assert f"convergence_b1_w{aot.CONV_W}" in names
+    for e in man["artifacts"]:
+        assert os.path.exists(os.path.join(art_dir, e["file"]))
+        assert e["inputs"] and e["outputs"]
+
+
+def test_hlo_text_has_entry_and_no_custom_calls(art_dir):
+    # interpret=True must leave no Mosaic custom-call in the lowered HLO —
+    # that is the whole reason the CPU PJRT client can run these.
+    for fn in os.listdir(art_dir):
+        if not fn.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(art_dir, fn)).read()
+        assert "ENTRY" in text, fn
+        assert "custom-call" not in text.lower(), fn
+
+
+_CLIENT = None
+
+
+def _run_hlo(art_dir, name, args):
+    """Parse the HLO *text* artifact and execute it on the CPU PJRT client.
+
+    This is the same round trip the Rust runtime performs through the `xla`
+    crate (text -> HloModuleProto -> compile -> execute); jaxlib's loader
+    only accepts MLIR these days, so we hop HLO->XlaComputation->MLIR.
+    """
+    global _CLIENT
+    if _CLIENT is None:
+        _CLIENT = xc.make_cpu_client()
+    client = _CLIENT
+    path = os.path.join(art_dir, f"{name}.hlo.txt")
+    mod = xc._xla.hlo_module_from_text(open(path).read())
+    comp = xc.XlaComputation(mod.as_serialized_hlo_module_proto())
+    mlir = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    exe = client.compile_and_load(mlir, list(client.devices()))
+    out = exe.execute([client.buffer_from_pyval(a) for a in args])
+    return [np.asarray(o) for o in out]
+
+
+def test_estimator_artifact_matches_jit(art_dir):
+    rng = np.random.default_rng(0)
+    s = rng.normal(500.0, 20.0, size=(1, aot.WINDOW_W)).astype(np.float32)
+    got = _run_hlo(art_dir, f"estimator_b1_w{aot.WINDOW_W}", [s])
+    want = [np.asarray(x) for x in model.estimator_step(s)]
+    # return_tuple=True => single tuple result; xla_client flattens to list.
+    flat = got[0] if isinstance(got[0], (list, tuple)) else got
+    for g, w in zip(flat, want):
+        np.testing.assert_allclose(np.asarray(g).ravel(), w.ravel(), rtol=1e-4)
+
+
+def test_convergence_artifact_matches_jit(art_dir):
+    rng = np.random.default_rng(1)
+    v = rng.normal(0, 1e-6, size=(1, aot.CONV_W)).astype(np.float32)
+    got = _run_hlo(art_dir, f"convergence_b1_w{aot.CONV_W}", [v])
+    want = [np.asarray(x) for x in model.convergence_step(v)]
+    flat = got[0] if isinstance(got[0], (list, tuple)) else got
+    for g, w in zip(flat, want):
+        np.testing.assert_allclose(
+            np.asarray(g).ravel(), w.ravel(), rtol=1e-4, atol=1e-9
+        )
+
+
+def test_dot_artifact_matches_jit(art_dir):
+    rng = np.random.default_rng(2)
+    a = rng.uniform(-1, 1, size=(aot.DOT_M, aot.DOT_K)).astype(np.float32)
+    b = rng.uniform(-1, 1, size=(aot.DOT_K, aot.DOT_N)).astype(np.float32)
+    got = _run_hlo(art_dir, f"dot_m{aot.DOT_M}_k{aot.DOT_K}_n{aot.DOT_N}", [a, b])
+    flat = got[0] if isinstance(got[0], (list, tuple)) else got
+    np.testing.assert_allclose(
+        np.asarray(flat[0]).reshape(aot.DOT_M, aot.DOT_N), a @ b, rtol=1e-3, atol=1e-3
+    )

@@ -1,0 +1,74 @@
+"""Lock the filter constants to the paper's equations.
+
+The Rust native backend (rust/src/estimator/filters.rs) duplicates these
+values; this file is the cross-layer drift guard. If either side changes,
+one of these tests (or the Rust twin `filters::tests`) fails.
+"""
+
+import math
+
+import pytest
+
+from compile.kernels.filters import (
+    GAUSS_RADIUS,
+    GAUSS_TAPS,
+    LOG_RADIUS,
+    LOG_TAPS,
+    QUANTILE_Z,
+)
+
+
+def test_gauss_radius_is_two():
+    # Paper: "Through experimentation a radius of two was selected".
+    assert GAUSS_RADIUS == 2
+    assert len(GAUSS_TAPS) == 5
+
+
+def test_gauss_taps_match_eq2():
+    for i, x in enumerate(range(-2, 3)):
+        expected = math.exp(-(x**2) / 2.0) / math.sqrt(2.0 * math.pi)
+        assert GAUSS_TAPS[i] == pytest.approx(expected, rel=1e-12)
+
+
+def test_gauss_taps_locked_values():
+    # Numeric lock — these exact values are mirrored in Rust.
+    assert GAUSS_TAPS[2] == pytest.approx(0.3989422804014327, rel=1e-12)
+    assert GAUSS_TAPS[1] == pytest.approx(0.24197072451914337, rel=1e-12)
+    assert GAUSS_TAPS[0] == pytest.approx(0.05399096651318806, rel=1e-12)
+
+
+def test_gauss_taps_symmetric():
+    assert GAUSS_TAPS[0] == GAUSS_TAPS[4]
+    assert GAUSS_TAPS[1] == GAUSS_TAPS[3]
+
+
+def test_gauss_taps_unnormalized_like_paper():
+    # Eq. 2 uses raw density values; their sum is ~0.99087, NOT 1.0. The
+    # ~0.9% shrinkage is a property of the paper's heuristic we reproduce.
+    assert sum(GAUSS_TAPS) == pytest.approx(0.9908656624660955, rel=1e-9)
+
+
+def test_log_radius_is_one():
+    assert LOG_RADIUS == 1
+    assert len(LOG_TAPS) == 3
+
+
+def test_log_taps_match_eq4():
+    sigma = 0.5
+    for i, x in enumerate(range(-1, 2)):
+        e = math.exp(-(x**2) / (2 * sigma**2))
+        expected = (x**2) * e / (math.sqrt(2 * math.pi) * sigma**5) - e / (
+            math.sqrt(2 * math.pi) * sigma**3
+        )
+        assert LOG_TAPS[i] == pytest.approx(expected, rel=1e-12)
+
+
+def test_log_taps_locked_values():
+    assert LOG_TAPS[1] == pytest.approx(-3.1915382432114616, rel=1e-9)
+    assert LOG_TAPS[0] == pytest.approx(1.2957831963165134, rel=1e-9)
+    assert LOG_TAPS[0] == LOG_TAPS[2]
+
+
+def test_quantile_z_is_papers_95th():
+    # Eq. 3: q = mu + 1.64485 sigma.
+    assert QUANTILE_Z == 1.64485

@@ -1,0 +1,80 @@
+"""Pallas gauss1d kernel vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import GAUSS_TAPS, gauss1d
+from compile.kernels.ref import gauss1d_ref
+
+
+def _windows(b, w, seed, lo=0.0, hi=1e6):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=(b, w)).astype(np.float32)
+
+
+@given(
+    b=st.integers(1, 17),
+    w=st.integers(5, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref(b, w, seed):
+    s = _windows(b, w, seed, hi=1e4)
+    got = np.asarray(gauss1d(s))
+    want = np.asarray(gauss1d_ref(s))
+    assert got.shape == (b, w - 4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@given(b=st.integers(1, 9), w=st.integers(5, 64), block_b=st.integers(1, 12))
+def test_block_size_invariant(b, w, block_b):
+    # The BlockSpec tiling must not change the numerics.
+    s = _windows(b, w, seed=7, hi=1e3)
+    a = np.asarray(gauss1d(s, block_b=block_b))
+    c = np.asarray(gauss1d_ref(s))
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-3)
+
+
+@given(w=st.integers(5, 48), c=st.floats(0.0, 1e5, allow_nan=False))
+def test_constant_window_scales_by_tap_sum(w, c):
+    # Filtering a constant window yields c * sum(taps) everywhere — the
+    # unnormalized Eq. 2 shrinkage made visible.
+    s = np.full((1, w), c, dtype=np.float32)
+    got = np.asarray(gauss1d(s))
+    np.testing.assert_allclose(got, c * sum(GAUSS_TAPS), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10)
+@given(w=st.integers(5, 32), seed=st.integers(0, 1000))
+def test_linearity(w, seed):
+    s = _windows(2, w, seed, hi=100.0)
+    a, b = s[:1], s[1:]
+    lhs = np.asarray(gauss1d((2.0 * a + 3.0 * b).astype(np.float32)))
+    rhs = 2.0 * np.asarray(gauss1d(a)) + 3.0 * np.asarray(gauss1d(b))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)
+
+
+def test_output_width_is_interior():
+    # Algorithm 1: no padding, output is 2*radius narrower.
+    s = _windows(3, 64, seed=1)
+    assert np.asarray(gauss1d(s)).shape == (3, 60)
+
+
+def test_rejects_too_narrow_window():
+    import pytest
+
+    with pytest.raises(ValueError):
+        gauss1d(np.zeros((1, 4), dtype=np.float32))
+
+
+def test_impulse_response_is_taps():
+    # A unit impulse recovers the filter taps (reversed == symmetric).
+    w = 11
+    s = np.zeros((1, w), dtype=np.float32)
+    s[0, 5] = 1.0
+    got = np.asarray(gauss1d(s))[0]
+    expect = np.zeros(w - 4, dtype=np.float32)
+    for j, t in enumerate(GAUSS_TAPS):
+        # output[i] = sum_j taps[j] * s[i + j]; impulse at 5 hits i = 5 - j.
+        expect[5 - j] += t
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-7)

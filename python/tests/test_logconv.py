@@ -1,0 +1,67 @@
+"""Pallas logconv (Eq. 4 convergence filter) vs oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import LOG_TAPS, logconv
+from compile.kernels.ref import logconv_ref
+
+
+def _trace(b, w, seed, scale=1e-5):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0.0, scale, size=(b, w)).astype(np.float32)
+
+
+@given(b=st.integers(1, 9), w=st.integers(3, 48), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref(b, w, seed):
+    v = _trace(b, w, seed)
+    got = np.asarray(logconv(v))
+    want = np.asarray(logconv_ref(v))
+    assert got.shape == (b, w - 2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-9)
+
+
+@given(w=st.integers(3, 32), c=st.floats(0, 10.0, allow_nan=False))
+def test_constant_trace_response(w, c):
+    # A perfectly flat sigma(q-bar) trace responds with c * sum(taps):
+    # near-zero whenever c is small — exactly the converged regime.
+    v = np.full((1, w), c, dtype=np.float32)
+    got = np.asarray(logconv(v))
+    np.testing.assert_allclose(got, c * sum(LOG_TAPS), rtol=1e-3, atol=1e-5)
+
+
+def test_paper_convergence_regime():
+    # Sub-tolerance trace (sigma(q-bar) changes < 5e-7) must filter to
+    # values whose spread stays below the paper's 5e-7 threshold.
+    rng = np.random.default_rng(3)
+    v = (1e-8 * rng.standard_normal((1, 16))).astype(np.float32)
+    f = np.asarray(logconv(v))
+    assert float(f.max() - f.min()) < 5e-7
+
+
+def test_edge_detection_polarity():
+    # A step in the trace (rate change!) produces a strong response: the
+    # LoG magnitude at the step dwarfs the flat regions.
+    v = np.concatenate(
+        [np.zeros((1, 8)), np.ones((1, 8))], axis=1
+    ).astype(np.float32)
+    f = np.asarray(logconv(v))[0]
+    flat = np.abs(f[:4])
+    edge = np.abs(f[5:9]).max()
+    assert edge > 10 * (flat.max() + 1e-12)
+
+
+def test_rejects_too_narrow():
+    with pytest.raises(ValueError):
+        logconv(np.zeros((1, 2), dtype=np.float32))
+
+
+@given(w=st.integers(3, 24), seed=st.integers(0, 500))
+def test_linearity(w, seed):
+    v = _trace(2, w, seed, scale=1.0)
+    a, b = v[:1], v[1:]
+    lhs = np.asarray(logconv((0.5 * a - 2.0 * b).astype(np.float32)))
+    rhs = 0.5 * np.asarray(logconv(a)) - 2.0 * np.asarray(logconv(b))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)

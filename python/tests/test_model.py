@@ -1,0 +1,51 @@
+"""Layer-2 graph tests: shapes, composition, and convergence semantics."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import gauss1d_ref, logconv_ref
+
+
+def test_estimator_step_shapes():
+    s = np.random.default_rng(0).normal(100, 3, (8, 64)).astype(np.float32)
+    mu, sigma, q = model.estimator_step(s)
+    assert mu.shape == sigma.shape == q.shape == (8,)
+
+
+def test_estimator_step_is_algorithm1():
+    rng = np.random.default_rng(1)
+    s = rng.normal(2000, 40, (4, 64)).astype(np.float32)
+    mu, sigma, q = (np.asarray(x) for x in model.estimator_step(s))
+    sp = np.asarray(gauss1d_ref(s))
+    np.testing.assert_allclose(mu, sp.mean(axis=-1), rtol=1e-5)
+    np.testing.assert_allclose(sigma, sp.std(axis=-1, ddof=1), rtol=1e-3)
+    np.testing.assert_allclose(q, mu + 1.64485 * sigma, rtol=1e-5)
+
+
+def test_convergence_step_shapes_and_bounds():
+    v = np.random.default_rng(2).normal(0, 1e-6, (3, 16)).astype(np.float32)
+    f, lo, hi = (np.asarray(x) for x in model.convergence_step(v))
+    assert f.shape == (3, 14)
+    assert lo.shape == hi.shape == (3,)
+    np.testing.assert_allclose(lo, f.min(axis=-1), rtol=1e-6)
+    np.testing.assert_allclose(hi, f.max(axis=-1), rtol=1e-6)
+    np.testing.assert_allclose(f, np.asarray(logconv_ref(v)), rtol=1e-5, atol=1e-9)
+
+
+def test_convergence_step_flags_converged_trace():
+    # Paper: converged when filtered min/max within 5e-7 over window 16.
+    flat = np.full((1, 16), 0.0, dtype=np.float32)
+    _, lo, hi = (np.asarray(x) for x in model.convergence_step(flat))
+    assert float(hi[0] - lo[0]) < 5e-7
+
+    moving = np.linspace(0, 1e-3, 16, dtype=np.float32)[None, :]
+    _, lo2, hi2 = (np.asarray(x) for x in model.convergence_step(moving))
+    assert float(hi2[0] - lo2[0]) > 5e-7
+
+
+def test_dot_graphs():
+    rng = np.random.default_rng(3)
+    a = rng.uniform(-1, 1, (16, 256)).astype(np.float32)
+    b = rng.uniform(-1, 1, (256, 256)).astype(np.float32)
+    (out,) = model.dot_block_graph(a, b)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,69 @@
+"""Fused moments kernel (Algorithm-1 step) vs oracle + statistical props."""
+
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import QUANTILE_Z, moments
+from compile.kernels.ref import gauss1d_ref, moments_ref
+
+
+def _windows(b, w, seed, mean=1000.0, sd=50.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(mean, sd, size=(b, w)).astype(np.float32)
+
+
+@given(b=st.integers(1, 12), w=st.integers(6, 96), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref(b, w, seed):
+    s = _windows(b, w, seed)
+    mu, sigma, q = (np.asarray(x) for x in moments(s))
+    rmu, rsigma, rq = (np.asarray(x) for x in moments_ref(s))
+    np.testing.assert_allclose(mu, rmu, rtol=1e-5)
+    np.testing.assert_allclose(sigma, rsigma, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(q, rq, rtol=1e-4)
+
+
+@given(b=st.integers(1, 6), w=st.integers(6, 64), seed=st.integers(0, 10_000))
+def test_q_identity(b, w, seed):
+    # Eq. 3 must hold exactly on the kernel's own outputs.
+    s = _windows(b, w, seed)
+    mu, sigma, q = (np.asarray(x) for x in moments(s))
+    np.testing.assert_allclose(q, mu + QUANTILE_Z * sigma, rtol=1e-5)
+
+
+@given(b=st.integers(1, 6), w=st.integers(6, 64), seed=st.integers(0, 10_000))
+def test_sigma_nonnegative_and_q_dominates_mu(b, w, seed):
+    s = _windows(b, w, seed)
+    mu, sigma, q = (np.asarray(x) for x in moments(s))
+    assert (sigma >= 0).all()
+    assert (q >= mu - 1e-3).all()
+
+
+@given(w=st.integers(6, 48), c=st.floats(0.0, 1e5, allow_nan=False))
+def test_constant_window_collapses(w, c):
+    # Constant tc stream: sigma == 0, q == mu == c * sum(gauss taps).
+    s = np.full((2, w), c, dtype=np.float32)
+    mu, sigma, q = (np.asarray(x) for x in moments(s))
+    np.testing.assert_allclose(sigma, 0.0, atol=max(1e-2, c * 1e-5))
+    np.testing.assert_allclose(q, mu, rtol=1e-4, atol=1e-2)
+
+
+@given(b=st.integers(1, 4), seed=st.integers(0, 1000), block_b=st.integers(1, 8))
+def test_block_size_invariant(b, seed, block_b):
+    s = _windows(b, 64, seed)
+    a = [np.asarray(x) for x in moments(s, block_b=block_b)]
+    c = [np.asarray(x) for x in moments_ref(s)]
+    for got, want in zip(a, c):
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+def test_q_tracks_95th_quantile_of_gaussian_stream():
+    # For genuinely Gaussian tc samples, q should approximate the 95th
+    # percentile of the *filtered* distribution (the paper's whole premise).
+    rng = np.random.default_rng(42)
+    s = rng.normal(5000.0, 100.0, size=(64, 64)).astype(np.float32)
+    _, _, q = (np.asarray(x) for x in moments(s))
+    filtered = np.asarray(gauss1d_ref(s))
+    empirical = np.quantile(filtered, 0.95)
+    # Averaged across rows, q-bar lands near the empirical 95th percentile.
+    assert abs(q.mean() - empirical) / empirical < 0.02

@@ -1,0 +1,66 @@
+//! Backend ablation — the Algorithm-1 numeric step (Gaussian filter →
+//! moments → q) on the native Rust path vs the AOT Pallas/XLA artifact,
+//! checking (a) numeric parity and (b) per-step latency.
+//!
+//! This quantifies the DESIGN.md decision to keep the native path on the
+//! monitor's hot loop and use the XLA path for batched offline analysis:
+//! a PJRT dispatch has fixed overhead that dwarfs a 64-wide filter.
+
+use streamflow::bench::{black_box, Runner};
+use streamflow::estimator::{MomentsBackend, NativeBackend};
+use streamflow::report::{Cell, Table};
+use streamflow::rng::Xoshiro256pp;
+
+fn main() {
+    let mut rng = Xoshiro256pp::new(0xAB1);
+    let window: Vec<f64> = (0..64).map(|_| rng.uniform(40.0, 60.0)).collect();
+
+    let mut native = NativeBackend::new();
+    let (n_mu, n_sigma, n_q) = native.moments(&window, 1.64485).expect("native");
+
+    let dir = streamflow::runtime::default_artifact_dir();
+    let xla = streamflow::estimator::backend::XlaBackend::from_dir(&dir, 64);
+
+    let mut table = Table::new(
+        "ablation_backend",
+        &["backend", "mu", "sigma", "q", "mean_step_ns"],
+    );
+
+    let mut runner = Runner::new();
+    let r = runner.bench("estimator_step/native_w64", Some(1.0), || {
+        let mut b = NativeBackend::new();
+        black_box(b.moments(black_box(&window), 1.64485).unwrap());
+    });
+    table.row_mixed(&[
+        Cell::S("native".into()),
+        Cell::F(n_mu),
+        Cell::F(n_sigma),
+        Cell::F(n_q),
+        Cell::F(r.ns.mean),
+    ]);
+
+    match xla {
+        Ok(mut xb) => {
+            let (x_mu, x_sigma, x_q) = xb.moments(&window, 1.64485).expect("xla step");
+            // Parity: f32 artifact vs f64 native — expect ~1e-4 relative.
+            let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-12);
+            assert!(rel(n_mu, x_mu) < 1e-3, "mu parity: {n_mu} vs {x_mu}");
+            assert!(rel(n_q, x_q) < 1e-3, "q parity: {n_q} vs {x_q}");
+            let r = runner.bench("estimator_step/xla_w64", Some(1.0), || {
+                black_box(xb.moments(black_box(&window), 1.64485).unwrap());
+            });
+            table.row_mixed(&[
+                Cell::S("xla".into()),
+                Cell::F(x_mu),
+                Cell::F(x_sigma),
+                Cell::F(x_q),
+                Cell::F(r.ns.mean),
+            ]);
+            println!("# parity OK (native f64 vs Pallas f32 artifact within 1e-3)");
+        }
+        Err(e) => {
+            println!("# xla backend unavailable ({e}); run `make artifacts` for the full ablation");
+        }
+    }
+    table.emit().expect("emit");
+}

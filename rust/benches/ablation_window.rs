@@ -1,0 +1,70 @@
+//! Ablation — sliding-window size `w` (the set `S` in Algorithm 1).
+//!
+//! Small windows converge fast but with noisy q estimates (σ̂ dominated by
+//! sampling error); large windows smooth more but delay response to rate
+//! changes (Fig. 10's restart latency). This sweep quantifies both sides:
+//! steady-state error and detection delay after a mid-stream rate switch.
+
+use streamflow::config::env_usize;
+use streamflow::estimator::{EstimatorConfig, FeedOutcome, NativeBackend, ServiceRateEstimator};
+use streamflow::report::{Cell, Table};
+use streamflow::rng::Xoshiro256pp;
+
+fn noisy(rng: &mut Xoshiro256pp, level: f64) -> f64 {
+    let u = rng.next_f64();
+    if u < 0.75 {
+        level + rng.uniform(-1.5, 1.5)
+    } else {
+        rng.uniform(0.4, 0.9) * level
+    }
+}
+
+fn main() {
+    let steps = env_usize("SF_SAMPLES", 60_000);
+    let (level_a, level_b) = (50.0, 20.0);
+    let switch = steps / 2;
+
+    let mut table = Table::new(
+        "ablation_window",
+        &["window", "steadystate_pct_err", "detect_delay_steps", "epochs"],
+    );
+    for w in [8usize, 16, 32, 64, 128, 256] {
+        let cfg = EstimatorConfig {
+            window: w,
+            rel_tol: Some(1e-4),
+            min_q_updates: 16,
+            ..Default::default()
+        };
+        let mut est = ServiceRateEstimator::new(cfg, NativeBackend::new()).expect("estimator");
+        let mut rng = Xoshiro256pp::new(0xAB3 + w as u64);
+        let mut first_a = None;
+        let mut detect_b = None;
+        for i in 0..steps {
+            let level = if i < switch { level_a } else { level_b };
+            if let FeedOutcome::Converged(r) =
+                est.feed(noisy(&mut rng, level), 1000, 8, i as u64).unwrap()
+            {
+                if i < switch && first_a.is_none() {
+                    first_a = Some(r.q_bar);
+                }
+                // Detection: first estimate within 25% of level B after the
+                // switch.
+                if i >= switch
+                    && detect_b.is_none()
+                    && ((r.q_bar - level_b) / level_b).abs() < 0.25
+                {
+                    detect_b = Some(i - switch);
+                }
+            }
+        }
+        let err = first_a.map(|q| (q - level_a) / level_a * 100.0);
+        table.row_mixed(&[
+            Cell::U(w as u64),
+            Cell::F(err.unwrap_or(f64::NAN)),
+            Cell::I(detect_b.map(|d| d as i64).unwrap_or(-1)),
+            Cell::U(est.epochs()),
+        ]);
+    }
+    table.emit().expect("emit");
+    println!("# expect: tiny windows noisier steady-state; huge windows slower to detect the switch");
+}

@@ -1,0 +1,35 @@
+//! Fig. 2 — "Incorrect buffer sizes can have a deleterious effect":
+//! matrix-multiply wall time vs queue capacity, mean + 5th/95th pct.
+//!
+//! Expected shape: times fall steeply as capacity leaves the single-digit
+//! regime (upstream stalls vanish), then flatten — exactly the left 2/3 of
+//! the paper's curve. (The paper's right-side degradation comes from page
+//! faults at multi-GB buffers, out of scope at this scale.)
+
+use streamflow::apps::matmul::run_matmul;
+use streamflow::config::{env_usize, MatmulConfig};
+use streamflow::monitor::MonitorConfig;
+use streamflow::report::{Summary, Table};
+
+fn main() {
+    let reps = env_usize("SF_REPS", 5);
+    let n = env_usize("SF_MM_N", 192);
+    let mut table = Table::new(
+        "fig02_buffer_size",
+        &["capacity_items", "mean_ms", "p5_ms", "p95_ms", "n"],
+    );
+    for cap in [1usize, 2, 4, 8, 16, 32, 128, 512, 2048] {
+        let cfg = MatmulConfig { n, capacity: cap, ..Default::default() };
+        let mut times = Vec::new();
+        for _ in 0..reps {
+            let run = run_matmul(&cfg, MonitorConfig::disabled()).expect("matmul run");
+            times.push(run.report.wall_ns as f64 / 1.0e6);
+        }
+        let s = Summary::of(&times);
+        table.row_f(&[cap as f64, s.mean, s.p5, s.p95, reps as f64]);
+    }
+    table.emit().expect("emit");
+
+    // Shape check for EXPERIMENTS.md: tiny buffers must be slower.
+    println!("# shape: capacity-1 vs capacity-512 wall-time ratio should exceed 1.0");
+}

@@ -1,0 +1,46 @@
+//! Fig. 4 — Eq. 1: probability of observing a non-blocking read over a
+//! whole sampling period `T`, for several service rates, plus the Eq.-1d
+//! write-side companion. Pure analytics over `queueing::mm1`.
+//!
+//! Expected shape: monotonically decreasing in T; faster servers lower.
+
+use streamflow::queueing::mm1;
+use streamflow::report::Table;
+
+fn main() {
+    let rho = 0.95;
+    // Service rates in items/sec (paper's ~0.8–8 MB/s over 8-byte items).
+    let rates: [(f64, &str); 4] =
+        [(1.0e5, "0.8MB/s"), (2.5e5, "2MB/s"), (5.0e5, "4MB/s"), (1.0e6, "8MB/s")];
+
+    let mut table = Table::new(
+        "fig04_nonblocking_prob",
+        &["t_us", "rate_label", "pr_read", "pr_write_c4096"],
+    );
+    // T sweep: 1 µs … 10 ms, log-spaced.
+    let mut t_us = 1.0;
+    while t_us <= 10_000.0 {
+        for (mu, label) in rates {
+            let t = t_us * 1.0e-6;
+            let pr_r = mm1::pr_nonblocking_read(t, rho, mu);
+            let pr_w = mm1::pr_nonblocking_write(t, 4096, rho, mu);
+            table.row(&[
+                format!("{t_us}"),
+                label.to_string(),
+                format!("{pr_r:.6e}"),
+                format!("{pr_w:.6}"),
+            ]);
+        }
+        t_us *= 2.0;
+    }
+    table.emit().expect("emit");
+
+    // Shape assertions (the paper's qualitative claims).
+    let p_short = mm1::pr_nonblocking_read(1e-6, rho, 1.0e6);
+    let p_long = mm1::pr_nonblocking_read(1e-3, rho, 1.0e6);
+    assert!(p_short > p_long, "probability must decay with T");
+    let p_slow = mm1::pr_nonblocking_read(1e-4, rho, 1.0e5);
+    let p_fast = mm1::pr_nonblocking_read(1e-4, rho, 1.0e6);
+    assert!(p_slow > p_fast, "faster servers are harder to observe");
+    println!("# shape OK: decreasing in T; faster rate ⇒ lower probability");
+}

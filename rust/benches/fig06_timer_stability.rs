@@ -1,0 +1,48 @@
+//! Fig. 6 — realized sampling-period variation vs requested multiples of
+//! the time reference's minimum latency ("@"). Box-whisker stats per
+//! multiple.
+//!
+//! Expected shape: relative spread (p95−p5)/T shrinks as T widens —
+//! "wider time frames give more stable values of T".
+
+use streamflow::config::env_usize;
+use streamflow::report::{Summary, Table};
+use streamflow::timing::TimeRef;
+
+fn main() {
+    let reps = env_usize("SF_SAMPLES", 400);
+    let time = TimeRef::new();
+    let min_lat = time.min_latency_ns();
+    println!("# min back-to-back latency (@) = {min_lat} ns, tsc = {}", time.is_tsc());
+
+    let mut table = Table::new(
+        "fig06_timer_stability",
+        &["multiple", "t_ns", "mean_ns", "p5_ns", "p50_ns", "p95_ns", "rel_spread"],
+    );
+    let mut rel_spreads = Vec::new();
+    for mult in [1u64, 4, 16, 64, 256, 1024, 4096, 16384] {
+        let t_ns = min_lat * mult;
+        let mut realized = Vec::with_capacity(reps);
+        let mut next = time.now_ns() + t_ns;
+        for _ in 0..reps {
+            let before = time.now_ns();
+            time.wait_until(next);
+            let after = time.now_ns();
+            realized.push((after - before) as f64);
+            next = after + t_ns;
+        }
+        let s = Summary::of(&realized);
+        let rel = (s.p95 - s.p5) / t_ns as f64;
+        rel_spreads.push(rel);
+        table.row_f(&[mult as f64, t_ns as f64, s.mean, s.p5, s.p50, s.p95, rel]);
+    }
+    table.emit().expect("emit");
+
+    // Shape: the widest period must be relatively more stable than the
+    // narrowest one.
+    assert!(
+        rel_spreads.last().unwrap() < rel_spreads.first().unwrap(),
+        "wide T should be relatively more stable: {rel_spreads:?}"
+    );
+    println!("# shape OK: relative spread shrinks with wider T");
+}

@@ -1,0 +1,65 @@
+//! Fig. 13 — histogram of percent difference between the estimated and set
+//! service rates over the single-phase campaign (paper: 1800 executions;
+//! default here 24 per distribution, `SF_RUNS` scales up).
+//!
+//! Expected shape: mass concentrated within ±20%, skewed low ("when it
+//! errs, the estimate is typically low"), occasional gross outliers.
+
+use streamflow::campaign::single_phase_campaign;
+use streamflow::config::{env_f64, env_usize, MicrobenchConfig};
+use streamflow::report::{Cell, Table};
+use streamflow::rng::dist::DistKind;
+use streamflow::stats::Histogram;
+
+fn main() {
+    let runs = env_usize("SF_RUNS", 24);
+    let secs = env_f64("SF_SECS", 1.0);
+
+    let mut errs = Vec::new();
+    let mut unconverged = 0usize;
+    let mut rows = Table::new(
+        "fig13_runs",
+        &["dist", "set_mbps", "rho", "est_mbps", "pct_err", "convergences"],
+    );
+    for dist in [DistKind::Exponential, DistKind::Deterministic] {
+        let cfg = MicrobenchConfig { runs, dist, seed: 0xF13, ..Default::default() };
+        let results = single_phase_campaign(&cfg, secs, |_, _| {}).expect("campaign");
+        for r in results {
+            rows.row_mixed(&[
+                Cell::S(format!("{dist:?}")),
+                Cell::F(r.set_mbps),
+                Cell::F(r.rho),
+                Cell::F(r.est_mbps.unwrap_or(f64::NAN)),
+                Cell::F(r.pct_err.unwrap_or(f64::NAN)),
+                Cell::U(r.convergences as u64),
+            ]);
+            match r.pct_err {
+                Some(e) => errs.push(e),
+                None => unconverged += 1,
+            }
+        }
+    }
+    rows.emit().expect("emit rows");
+
+    let mut hist = Histogram::new(-100.0, 100.0, 40);
+    errs.iter().for_each(|&e| hist.add(e));
+    let mut table = Table::new("fig13_accuracy_histogram", &["pct_err_bin_center", "probability"]);
+    for (c, p) in hist.probabilities() {
+        table.row_f(&[c, p]);
+    }
+    table.emit().expect("emit hist");
+
+    let within = 100.0 * errs.iter().filter(|e| e.abs() <= 20.0).count() as f64
+        / errs.len().max(1) as f64;
+    let low = 100.0 * errs.iter().filter(|e| **e < 0.0).count() as f64 / errs.len().max(1) as f64;
+    println!("# {} runs: {:.1}% within ±20% (paper: majority), {:.1}% err low, {} unconverged, {} gross outliers (>100%)",
+        errs.len() + unconverged, within, low, unconverged, hist.overflow() + hist.underflow());
+    if within <= 50.0 {
+        // Single-core contention can slow the consumer below its set rate
+        // for whole campaigns (see EXPERIMENTS.md Fig. 13 notes) — warn,
+        // don't abort the whole bench suite.
+        println!("# WARNING: below the paper's 'majority within 20%' on this run \
+                  ({within:.1}%) — rerun on an idle/multi-core host");
+    }
+    assert!(within > 5.0, "estimator catastrophically off: {within:.1}% within ±20%");
+}

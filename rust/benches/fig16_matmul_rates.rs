@@ -1,0 +1,66 @@
+//! Fig. 16 — matrix multiply: instrumented partial service rate of the
+//! reduce kernel (one trace point per converged estimate on its in-bound
+//! queues), scored against the manually-measured range.
+//!
+//! Ground truth: the reduce kernel's per-queue consumption rate measured
+//! with monitoring off (the paper's "removing each kernel from the system
+//! and manually measuring data rates at each input port").
+
+use streamflow::apps::matmul::run_matmul;
+use streamflow::campaign::campaign_monitor;
+use streamflow::config::{env_usize, MatmulConfig};
+use streamflow::monitor::MonitorConfig;
+use streamflow::report::{Cell, Table};
+
+fn main() {
+    let n = env_usize("SF_MM_N", 384);
+    let reps = env_usize("SF_REPS", 3);
+    let cfg = MatmulConfig { n, dot_kernels: 5, ..Default::default() };
+
+    // Manual ground-truth band: per-queue byte rate with monitoring off.
+    let mut manual = Vec::new();
+    for _ in 0..reps {
+        let run = run_matmul(&cfg, MonitorConfig::disabled()).expect("bare run");
+        let secs = run.report.wall_secs();
+        for (_, (pushes, _)) in
+            run.report.stream_totals.iter().filter(|(l, _)| l.contains("-> reduce"))
+        {
+            let bytes = *pushes as f64 * (cfg.block_rows * n * 4) as f64;
+            manual.push(bytes / secs / 1.0e6);
+        }
+    }
+    let lo = manual.iter().cloned().fold(f64::INFINITY, f64::min) * 0.8;
+    let hi = manual.iter().cloned().fold(0.0f64, f64::max) * 1.2;
+    println!("# manual per-queue rate band: {lo:.3} – {hi:.3} MB/s");
+
+    // Instrumented runs: collect every converged estimate on reduce queues.
+    let mut table =
+        Table::new("fig16_matmul_rates", &["run", "estimate_idx", "rate_mbps", "in_range"]);
+    let mut total = 0usize;
+    let mut in_range = 0usize;
+    for rep in 0..reps {
+        let run = run_matmul(&cfg, campaign_monitor()).expect("monitored run");
+        let mut idx = 0u64;
+        for sid in &run.reduce_streams {
+            for est in run.report.rates_for(*sid) {
+                let r = est.rate_mbps();
+                let ok = (lo..=hi).contains(&r);
+                total += 1;
+                in_range += ok as usize;
+                table.row_mixed(&[
+                    Cell::U(rep as u64),
+                    Cell::U(idx),
+                    Cell::F(r),
+                    Cell::B(ok),
+                ]);
+                idx += 1;
+            }
+        }
+    }
+    table.emit().expect("emit");
+    let pct = 100.0 * in_range as f64 / total.max(1) as f64;
+    println!(
+        "# {in_range}/{total} estimates within the manual band = {pct:.0}% \
+         (paper: ~63% — low-ρ reduce kernel)"
+    );
+}

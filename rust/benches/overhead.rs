@@ -1,0 +1,108 @@
+//! §VI overhead — "using the GNU time command over dozens of executions,
+//! the average impact is only 1–2%."
+//!
+//! Runs the single-queue micro-benchmark with and without instrumentation
+//! and compares wall time plus `getrusage` CPU time (our in-process
+//! substitute for GNU time).
+
+use streamflow::config::{env_f64, env_usize};
+use streamflow::monitor::MonitorConfig;
+use streamflow::prelude::*;
+use streamflow::queue::StreamConfig;
+use streamflow::report::{Summary, Table};
+use streamflow::workload::{RateControlledConsumer, RateControlledProducer, WorkloadSpec};
+
+fn rusage_cpu_secs() -> f64 {
+    // SAFETY: plain libc call with a valid out-pointer.
+    let mut ru: libc::rusage = unsafe { std::mem::zeroed() };
+    unsafe { libc::getrusage(libc::RUSAGE_SELF, &mut ru) };
+    let tv = |t: libc::timeval| t.tv_sec as f64 + t.tv_usec as f64 / 1.0e6;
+    tv(ru.ru_utime) + tv(ru.ru_stime)
+}
+
+fn one_run(monitored: Option<u64>, items: u64) -> (f64, f64) {
+    let mut topo = Topology::new("overhead");
+    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
+        "p",
+        WorkloadSpec::fixed_rate_mbps(8.0),
+        items,
+    )));
+    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
+        "c",
+        WorkloadSpec::fixed_rate_mbps(4.0),
+    )));
+    topo.connect::<u64>(p, 0, c, 0, StreamConfig::default().with_capacity(1024).with_item_bytes(8))
+        .expect("connect");
+    let mcfg = match monitored {
+        Some(max_t) => {
+            let mut m = streamflow::campaign::campaign_monitor();
+            m.period.max_period_ns = max_t;
+            m
+        }
+        None => MonitorConfig::disabled(),
+    };
+    let cpu0 = rusage_cpu_secs();
+    let report = Scheduler::new(topo).with_monitoring(mcfg).run().expect("run");
+    (report.wall_ns as f64 / 1.0e9, rusage_cpu_secs() - cpu0)
+}
+
+fn main() {
+    let reps = env_usize("SF_REPS", 7);
+    let secs = env_f64("SF_SECS", 1.0);
+    let items = (secs * 0.5e6) as u64; // bottleneck 4 MB/s = 500k items/s
+
+    // Interleave to decorrelate from thermal/scheduler drift; sweep the
+    // period cap — the paper's T grows to the scheduler quantum (~ms),
+    // and on an oversubscribed single core each monitor tick costs a
+    // sleep/wake context-switch pair, so wider T ⇒ lower overhead.
+    let mut wall_off = Vec::new();
+    let mut cpu_off = Vec::new();
+    let caps: [(u64, &str); 2] = [(400_000, "T≤400µs"), (2_000_000, "T≤2ms")];
+    let mut wall_on: Vec<Vec<f64>> = vec![Vec::new(); caps.len()];
+    let mut cpu_on: Vec<Vec<f64>> = vec![Vec::new(); caps.len()];
+    for _ in 0..reps {
+        let (w, c) = one_run(None, items);
+        wall_off.push(w);
+        cpu_off.push(c);
+        for (i, (cap, _)) in caps.iter().enumerate() {
+            let (w, c) = one_run(Some(*cap), items);
+            wall_on[i].push(w);
+            cpu_on[i].push(c);
+        }
+    }
+
+    let mut table = Table::new(
+        "overhead",
+        &["metric", "instrumented_mean", "bare_mean", "overhead_pct"],
+    );
+    let w_off = Summary::of(&wall_off).mean;
+    let c_off = Summary::of(&cpu_off).mean;
+    let mut final_pct = 0.0;
+    for (i, (_, label)) in caps.iter().enumerate() {
+        let w_on = Summary::of(&wall_on[i]).mean;
+        let c_on = Summary::of(&cpu_on[i]).mean;
+        let w_pct = (w_on - w_off) / w_off * 100.0;
+        let c_pct = (c_on - c_off) / c_off * 100.0;
+        table.row(&[
+            format!("wall_secs_{label}"),
+            format!("{w_on:.4}"),
+            format!("{w_off:.4}"),
+            format!("{w_pct:+.2}"),
+        ]);
+        table.row(&[
+            format!("cpu_secs_{label}"),
+            format!("{c_on:.4}"),
+            format!("{c_off:.4}"),
+            format!("{c_pct:+.2}"),
+        ]);
+        println!("# {label}: wall {w_pct:+.2}%, cpu {c_pct:+.2}%");
+        final_pct = w_pct;
+    }
+    table.emit().expect("emit");
+    println!(
+        "# paper: 1–2% wall-clock impact on multi-core hosts; this box is a single \
+         shared core, so the monitor's cpu cannot be hidden — the T≤2ms row is the \
+         comparable configuration"
+    );
+    assert!(final_pct < 10.0, "wall-clock overhead out of hand: {final_pct:.2}%");
+}

@@ -1,0 +1,4 @@
+//! The paper's two full streaming applications (§V-B).
+
+pub mod matmul;
+pub mod rabin_karp;

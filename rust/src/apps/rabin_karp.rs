@@ -1,0 +1,425 @@
+//! Rabin–Karp string search as a streaming application (paper §V-B2,
+//! Fig. 12).
+//!
+//! ```text
+//! Segmenter ──►(round robin)──► RollingHash ×n ──►(mod j)──► Verify ×j ──► Reducer
+//! ```
+//!
+//! The corpus is divided into segments with an `m−1` overlap (pattern
+//! length `m`) "so that a match at the end of one pattern will not result
+//! in a duplicate match on the next segment". Rolling-hash kernels emit
+//! candidate byte positions; verify kernels re-check the actual bytes to
+//! guard against hash collisions; the reducer consolidates sorted match
+//! positions. The hash→verify queues are the instrumented streams of
+//! Fig. 17 (utilization < 0.1 — deliberately hard for the monitor).
+
+use std::sync::Arc;
+
+use crate::config::RabinKarpConfig;
+use crate::kernel::{Kernel, KernelContext, KernelStatus};
+use crate::monitor::MonitorConfig;
+use crate::queue::StreamConfig;
+use crate::scheduler::{RunReport, Scheduler};
+use crate::topology::{StreamId, Topology};
+use crate::{Result, SfError};
+
+/// Rabin–Karp parameters: base-256 rolling hash modulo a large prime.
+const HASH_BASE: u64 = 256;
+const HASH_MOD: u64 = 1_000_000_007;
+
+/// A corpus segment streamed to a hash kernel.
+pub struct Segment {
+    /// Byte offset of `data[0]` within the corpus.
+    pub offset: usize,
+    pub data: Vec<u8>,
+}
+
+/// A candidate match position (byte offset of the pattern start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate(pub usize);
+
+/// Build the paper's corpus: repeated "foobar" truncated to `bytes`.
+pub fn foobar_corpus(bytes: usize) -> Vec<u8> {
+    b"foobar".iter().copied().cycle().take(bytes).collect()
+}
+
+/// Polynomial hash of `data` (the pattern hash).
+pub fn hash_of(data: &[u8]) -> u64 {
+    data.iter().fold(0u64, |h, &b| (h * HASH_BASE + b as u64) % HASH_MOD)
+}
+
+/// All match positions by naive scan (test oracle).
+pub fn naive_matches(corpus: &[u8], pattern: &[u8]) -> Vec<usize> {
+    if pattern.is_empty() || corpus.len() < pattern.len() {
+        return Vec::new();
+    }
+    (0..=corpus.len() - pattern.len())
+        .filter(|&i| &corpus[i..i + pattern.len()] == pattern)
+        .collect()
+}
+
+/// Segmenter kernel: slices the corpus with m−1 overlap, round-robins
+/// segments across `n_out` hash kernels.
+struct Segmenter {
+    corpus: Arc<Vec<u8>>,
+    segment_bytes: usize,
+    overlap: usize,
+    next_off: usize,
+    next_port: usize,
+    n_out: usize,
+}
+
+impl Kernel for Segmenter {
+    fn name(&self) -> &str {
+        "segmenter"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.next_off >= self.corpus.len() {
+            return KernelStatus::Done;
+        }
+        let start = self.next_off.saturating_sub(self.overlap);
+        let end = (self.next_off + self.segment_bytes).min(self.corpus.len());
+        let seg = Segment { offset: start, data: self.corpus[start..end].to_vec() };
+        let port = ctx.output::<Segment>(self.next_port).expect("segmenter port");
+        if port.push(seg).is_err() {
+            return KernelStatus::Done;
+        }
+        self.next_off = end;
+        self.next_port = (self.next_port + 1) % self.n_out;
+        KernelStatus::Continue
+    }
+}
+
+/// Rolling-hash kernel: emits candidate positions whose window hash equals
+/// the pattern hash. Routes candidate `pos` to verify kernel `pos % j`
+/// — wait, no: round-robins across its `n_out` verify ports.
+struct RollingHash {
+    name: String,
+    pattern_len: usize,
+    pattern_hash: u64,
+    /// base^(m-1) mod p, for removing the leading byte.
+    pow: u64,
+    next_port: usize,
+    n_out: usize,
+}
+
+impl RollingHash {
+    fn new(name: String, pattern: &[u8], n_out: usize) -> Self {
+        let m = pattern.len();
+        let mut pow = 1u64;
+        for _ in 1..m {
+            pow = (pow * HASH_BASE) % HASH_MOD;
+        }
+        RollingHash {
+            name,
+            pattern_len: m,
+            pattern_hash: hash_of(pattern),
+            pow,
+            next_port: 0,
+            n_out,
+        }
+    }
+}
+
+impl Kernel for RollingHash {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let seg = match ctx.input::<Segment>(0).expect("hash input").pop() {
+            Some(s) => s,
+            None => return KernelStatus::Done,
+        };
+        let m = self.pattern_len;
+        if seg.data.len() < m {
+            return KernelStatus::Continue;
+        }
+        let n_out = self.n_out;
+        let mut port_idx = self.next_port;
+        let mut h = hash_of(&seg.data[..m]);
+        if h == self.pattern_hash {
+            let port = ctx.output::<Candidate>(port_idx).expect("hash output");
+            port_idx = (port_idx + 1) % n_out;
+            if port.push(Candidate(seg.offset)).is_err() {
+                return KernelStatus::Done;
+            }
+        }
+        for i in 1..=seg.data.len() - m {
+            // Roll: drop data[i-1], add data[i+m-1].
+            let out_b = seg.data[i - 1] as u64;
+            let in_b = seg.data[i + m - 1] as u64;
+            h = (h + HASH_MOD - (out_b * self.pow) % HASH_MOD) % HASH_MOD;
+            h = (h * HASH_BASE + in_b) % HASH_MOD;
+            if h == self.pattern_hash {
+                let port = ctx.output::<Candidate>(port_idx).expect("hash output");
+                port_idx = (port_idx + 1) % n_out;
+                if port.push(Candidate(seg.offset + i)).is_err() {
+                    return KernelStatus::Done;
+                }
+            }
+        }
+        self.next_port = port_idx;
+        KernelStatus::Continue
+    }
+}
+
+/// Verify kernel: re-checks the corpus bytes at each candidate position.
+struct Verify {
+    name: String,
+    corpus: Arc<Vec<u8>>,
+    pattern: Vec<u8>,
+}
+
+impl Kernel for Verify {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        // Drain all inputs (one per upstream hash kernel).
+        let mut all_finished = true;
+        let mut any = false;
+        for i in 0..ctx.num_inputs() {
+            let port = ctx.input::<Candidate>(i).expect("verify input");
+            match port.try_pop() {
+                crate::queue::PopResult::Item(Candidate(pos)) => {
+                    any = true;
+                    all_finished = false;
+                    let m = self.pattern.len();
+                    if pos + m <= self.corpus.len() && &self.corpus[pos..pos + m] == &self.pattern[..]
+                    {
+                        if ctx
+                            .output::<Candidate>(0)
+                            .expect("verify output")
+                            .push(Candidate(pos))
+                            .is_err()
+                        {
+                            return KernelStatus::Done;
+                        }
+                    }
+                }
+                crate::queue::PopResult::Empty => all_finished = false,
+                crate::queue::PopResult::Closed => {}
+            }
+        }
+        if all_finished {
+            return KernelStatus::Done;
+        }
+        if any {
+            KernelStatus::Continue
+        } else {
+            KernelStatus::Stall
+        }
+    }
+}
+
+/// Reducer: consolidates verified matches (deduplicating the overlap).
+struct MatchReducer {
+    out: Arc<std::sync::Mutex<Vec<usize>>>,
+}
+
+impl Kernel for MatchReducer {
+    fn name(&self) -> &str {
+        "reduce"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let mut all_finished = true;
+        let mut any = false;
+        for i in 0..ctx.num_inputs() {
+            let port = ctx.input::<Candidate>(i).expect("reduce input");
+            match port.try_pop() {
+                crate::queue::PopResult::Item(Candidate(pos)) => {
+                    self.out.lock().unwrap().push(pos);
+                    any = true;
+                    all_finished = false;
+                }
+                crate::queue::PopResult::Empty => all_finished = false,
+                crate::queue::PopResult::Closed => {}
+            }
+        }
+        if all_finished {
+            KernelStatus::Done
+        } else if any {
+            KernelStatus::Continue
+        } else {
+            KernelStatus::Stall
+        }
+    }
+}
+
+/// Everything a Rabin–Karp run produced.
+pub struct RabinKarpRun {
+    /// Sorted, deduplicated match positions.
+    pub matches: Vec<usize>,
+    pub report: RunReport,
+    /// Instrumented hash→verify streams (Fig. 17's queues).
+    pub verify_streams: Vec<StreamId>,
+}
+
+/// Build and run the Rabin–Karp application.
+pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<RabinKarpRun> {
+    let pattern = cfg.pattern.as_bytes().to_vec();
+    if pattern.is_empty() {
+        return Err(SfError::Config("rabin-karp: empty pattern".into()));
+    }
+    if cfg.hash_kernels == 0 || cfg.verify_kernels == 0 {
+        return Err(SfError::Config("rabin-karp: kernel counts must be > 0".into()));
+    }
+    if cfg.verify_kernels > cfg.hash_kernels {
+        return Err(SfError::Config("rabin-karp: j must be ≤ n (paper: j ≤ n)".into()));
+    }
+    let corpus = Arc::new(foobar_corpus(cfg.corpus_bytes));
+
+    let mut topo = Topology::new("rabin_karp");
+    let seg = topo.add_kernel(Box::new(Segmenter {
+        corpus: corpus.clone(),
+        segment_bytes: cfg.segment_bytes,
+        overlap: pattern.len() - 1,
+        next_off: 0,
+        next_port: 0,
+        n_out: cfg.hash_kernels,
+    }));
+
+    let matches_cell = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let red = topo.add_kernel(Box::new(MatchReducer { out: matches_cell.clone() }));
+
+    // Hash kernels.
+    let mut hash_ids = Vec::new();
+    for i in 0..cfg.hash_kernels {
+        let h = topo.add_kernel(Box::new(RollingHash::new(
+            format!("hash{i}"),
+            &pattern,
+            cfg.verify_kernels,
+        )));
+        topo.connect::<Segment>(
+            seg,
+            i,
+            h,
+            0,
+            StreamConfig::default()
+                .with_capacity(cfg.capacity)
+                .with_item_bytes(cfg.segment_bytes)
+                .uninstrumented(),
+        )?;
+        hash_ids.push(h);
+    }
+
+    // Verify kernels; each takes one input from every hash kernel.
+    let mut verify_streams = Vec::new();
+    for j in 0..cfg.verify_kernels {
+        let v = topo.add_kernel(Box::new(Verify {
+            name: format!("verify{j}"),
+            corpus: corpus.clone(),
+            pattern: pattern.clone(),
+        }));
+        for (i, &h) in hash_ids.iter().enumerate() {
+            // Hash i's output port j feeds verify j's input port i.
+            let s = topo.connect::<Candidate>(
+                h,
+                j,
+                v,
+                i,
+                StreamConfig::default()
+                    .with_capacity(cfg.capacity)
+                    .with_item_bytes(std::mem::size_of::<Candidate>()),
+            )?;
+            verify_streams.push(s);
+        }
+        // Verify j → reducer input j.
+        topo.connect::<Candidate>(
+            v,
+            0,
+            red,
+            j,
+            StreamConfig::default()
+                .with_capacity(cfg.capacity)
+                .with_item_bytes(std::mem::size_of::<Candidate>())
+                .uninstrumented(),
+        )?;
+    }
+
+    let report = Scheduler::new(topo).with_monitoring(monitor).run()?;
+    let mut matches = std::mem::take(&mut *matches_cell.lock().unwrap());
+    matches.sort_unstable();
+    matches.dedup();
+    Ok(RabinKarpRun { matches, report, verify_streams })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_and_hash_helpers() {
+        let c = foobar_corpus(13);
+        assert_eq!(&c, b"foobarfoobarf");
+        assert_eq!(hash_of(b"ab"), (97 * 256 + 98) % HASH_MOD);
+    }
+
+    #[test]
+    fn naive_oracle() {
+        assert_eq!(naive_matches(b"foobarfoobar", b"foobar"), vec![0, 6]);
+        assert_eq!(naive_matches(b"aaa", b"aa"), vec![0, 1]);
+        assert!(naive_matches(b"abc", b"xyz").is_empty());
+    }
+
+    #[test]
+    fn finds_all_foobar_matches() {
+        let cfg = RabinKarpConfig {
+            corpus_bytes: 4096,
+            hash_kernels: 3,
+            verify_kernels: 2,
+            segment_bytes: 512,
+            ..Default::default()
+        };
+        let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+        let corpus = foobar_corpus(cfg.corpus_bytes);
+        let expect = naive_matches(&corpus, b"foobar");
+        assert_eq!(run.matches, expect, "matches differ from oracle");
+        // "foobar" every 6 bytes: 4096/6 starts minus tail.
+        assert_eq!(run.matches.len(), (4096 - 6) / 6 + 1);
+    }
+
+    #[test]
+    fn overlap_catches_straddling_matches() {
+        // Segment boundary inside a match: overlap m-1 must recover it.
+        let cfg = RabinKarpConfig {
+            corpus_bytes: 600,
+            hash_kernels: 2,
+            verify_kernels: 1,
+            segment_bytes: 7, // pathological: barely longer than pattern
+            ..Default::default()
+        };
+        let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+        let corpus = foobar_corpus(cfg.corpus_bytes);
+        assert_eq!(run.matches, naive_matches(&corpus, b"foobar"));
+    }
+
+    #[test]
+    fn arbitrary_pattern() {
+        let cfg = RabinKarpConfig {
+            corpus_bytes: 6000,
+            pattern: "barfoo".to_string(),
+            hash_kernels: 2,
+            verify_kernels: 2,
+            segment_bytes: 777,
+            ..Default::default()
+        };
+        let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+        let corpus = foobar_corpus(cfg.corpus_bytes);
+        assert_eq!(run.matches, naive_matches(&corpus, b"barfoo"));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut cfg = RabinKarpConfig::default();
+        cfg.pattern = String::new();
+        assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
+        let mut cfg = RabinKarpConfig::default();
+        cfg.verify_kernels = cfg.hash_kernels + 1;
+        assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
+    }
+}

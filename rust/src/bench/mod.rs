@@ -1,0 +1,154 @@
+//! In-crate micro-benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` drives the `benches/*.rs` targets (all `harness = false`);
+//! each builds a [`Runner`], registers closures with [`Runner::bench`], and
+//! emits paper-style figure tables via [`crate::report`]. Iteration counts
+//! auto-scale to a target wall time; `SF_BENCH_SECS` and `SF_SCALE` shrink
+//! or grow everything for CI vs full paper-scale runs.
+
+use crate::report::{format_g, Summary};
+use crate::timing::TimeRef;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    /// Per-iteration wall time summary (ns).
+    pub ns: Summary,
+    /// Optional throughput unit count per iteration (items, bytes, ...).
+    pub per_iter_units: Option<f64>,
+}
+
+impl BenchResult {
+    /// Units per second, if units were declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.per_iter_units.map(|u| u / (self.ns.mean / 1.0e9))
+    }
+}
+
+/// Benchmark runner: times closures, prints aligned rows.
+pub struct Runner {
+    time: TimeRef,
+    target_ns: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        let secs = crate::config::env_f64("SF_BENCH_SECS", 1.0);
+        Runner {
+            time: TimeRef::new(),
+            target_ns: (secs * 1.0e9) as u64,
+            results: Vec::new(),
+        }
+    }
+
+    /// Global scale factor for workload sizes (1.0 = CI default).
+    pub fn scale() -> f64 {
+        crate::config::env_f64("SF_SCALE", 1.0)
+    }
+
+    /// Benchmark `f`, auto-calibrating the iteration count to the target
+    /// time. `units` is the per-iteration throughput denominator.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, units: Option<f64>, mut f: F) -> &BenchResult {
+        // Warmup + calibration: run until ~10% of target, at least 3 iters.
+        let warm_budget = self.target_ns / 10;
+        let t0 = self.time.now_ns();
+        let mut warm_iters = 0u64;
+        while self.time.now_ns() - t0 < warm_budget || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = ((self.time.now_ns() - t0) / warm_iters).max(1);
+        let iters = (self.target_ns / per_iter).clamp(5, 1_000_000);
+
+        // Timed phase: record each iteration.
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let s = self.time.now_ns();
+            f();
+            samples.push((self.time.now_ns() - s) as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            ns: Summary::of(&samples),
+            per_iter_units: units,
+        };
+        println!("{}", Self::format_row(&res));
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// One aligned result row.
+    pub fn format_row(r: &BenchResult) -> String {
+        let tput = match r.throughput() {
+            Some(t) if t >= 1.0e6 => format!("  {:>10.3} M/s", t / 1.0e6),
+            Some(t) => format!("  {:>10.1} /s", t),
+            None => String::new(),
+        };
+        format!(
+            "bench {:<42} {:>10} iters  mean {:>12} ns  p5 {:>12} p95 {:>12}{}",
+            r.name,
+            r.iters,
+            format_g(r.ns.mean),
+            format_g(r.ns.p5),
+            format_g(r.ns.p95),
+            tput
+        )
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("SF_BENCH_SECS", "0.05");
+        let mut r = Runner::new();
+        let mut acc = 0u64;
+        let res = r.bench("spin", Some(1000.0), || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(res.iters >= 5);
+        assert!(res.ns.mean > 0.0);
+        assert!(res.ns.p5 <= res.ns.p95);
+        assert!(res.throughput().unwrap() > 0.0);
+        std::env::remove_var("SF_BENCH_SECS");
+    }
+
+    #[test]
+    fn format_row_contains_name() {
+        let res = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            ns: Summary::of(&[1.0, 2.0, 3.0]),
+            per_iter_units: None,
+        };
+        assert!(Runner::format_row(&res).contains("bench x"));
+    }
+}

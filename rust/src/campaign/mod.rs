@@ -1,0 +1,278 @@
+//! Micro-benchmark campaigns (paper §V-A / §VI).
+//!
+//! Shared by `examples/e2e_campaign.rs` and the Fig. 13/14/15 benches:
+//! build the Fig.-1 tandem topology, sweep set service rates and
+//! distributions, run the monitor, and score the converged estimates
+//! against the known ground truth — exactly the paper's evaluation.
+
+use crate::config::MicrobenchConfig;
+use crate::monitor::MonitorConfig;
+use crate::queue::StreamConfig;
+use crate::rng::dist::DistKind;
+use crate::rng::Xoshiro256pp;
+use crate::scheduler::Scheduler;
+use crate::topology::Topology;
+use crate::workload::{RateControlledConsumer, RateControlledProducer, WorkloadSpec, ITEM_BYTES};
+use crate::Result;
+
+/// One single-phase execution's outcome.
+#[derive(Debug, Clone)]
+pub struct SingleRun {
+    /// The set (ground-truth) consumer service rate, MB/s.
+    pub set_mbps: f64,
+    /// The producer (arrival) rate, MB/s.
+    pub arrival_mbps: f64,
+    /// Nominal utilization λ/μ.
+    pub rho: f64,
+    /// Service distribution family.
+    pub dist: DistKind,
+    /// Last converged estimate, MB/s (None ⇒ never converged).
+    pub est_mbps: Option<f64>,
+    /// Number of converged estimates during the run.
+    pub convergences: usize,
+    /// Percent difference (observed − set)/set × 100 (None ⇒ no estimate).
+    pub pct_err: Option<f64>,
+}
+
+/// Monitoring configuration used by all campaigns: paper-faithful
+/// Algorithm 1 with a relative tolerance (the synthetic streams here are
+/// far faster than the paper's testbed, so the absolute 5e-7 would demand
+/// hours per run) and departure-side instrumentation.
+pub fn campaign_monitor() -> MonitorConfig {
+    let mut m = MonitorConfig::practical();
+    m.instrument_tail = false;
+    m.estimator.min_q_updates = 24;
+    m.period.max_period_ns = 400_000;
+    m
+}
+
+/// Run one tandem micro-benchmark (Fig. 1 topology) and score it.
+///
+/// `rate_mbps` sets the consumer (kernel B) service rate; `arrival_mbps`
+/// the producer. Items are sized so the run lasts roughly `target_secs`.
+pub fn run_single(
+    rate_mbps: f64,
+    arrival_mbps: f64,
+    dist: DistKind,
+    capacity: usize,
+    target_secs: f64,
+    seed: u64,
+) -> Result<SingleRun> {
+    // The slower side dictates wall time.
+    let bottleneck = rate_mbps.min(arrival_mbps);
+    let items_per_sec = bottleneck * 1.0e6 / ITEM_BYTES as f64;
+    let items = (items_per_sec * target_secs) as u64;
+
+    let mut topo = Topology::new("microbench");
+    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
+        "producer",
+        WorkloadSpec::single(dist, arrival_mbps, seed),
+        items,
+    )));
+    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
+        "consumer",
+        WorkloadSpec::single(dist, rate_mbps, seed ^ 0x5A5A),
+    )));
+    let sid = topo.connect::<u64>(
+        p,
+        0,
+        c,
+        0,
+        StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
+    )?;
+    let report = Scheduler::new(topo).with_monitoring(campaign_monitor()).run()?;
+
+    let rates = report.rates_for(sid);
+    let est = rates.last().map(|r| r.rate_mbps());
+    Ok(SingleRun {
+        set_mbps: rate_mbps,
+        arrival_mbps,
+        rho: crate::queueing::utilization(arrival_mbps, rate_mbps),
+        dist,
+        est_mbps: est,
+        convergences: rates.len(),
+        pct_err: est.map(|e| (e - rate_mbps) / rate_mbps * 100.0),
+    })
+}
+
+/// The paper's single-phase campaign: `cfg.runs` executions with service
+/// rates drawn uniformly in [lo, hi] and the configured distribution.
+/// Returns one [`SingleRun`] per execution.
+pub fn single_phase_campaign(
+    cfg: &MicrobenchConfig,
+    target_secs: f64,
+    mut progress: impl FnMut(usize, &SingleRun),
+) -> Result<Vec<SingleRun>> {
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut out = Vec::with_capacity(cfg.runs);
+    for i in 0..cfg.runs {
+        let rate = rng.uniform(cfg.rate_lo_mbps, cfg.rate_hi_mbps);
+        // Keep the server busy: arrivals at 1.3–2× the service rate, capped
+        // at the generator's practical ceiling (paper: ~8 MB/s).
+        let arrival = (rate * rng.uniform(1.3, 2.0)).min(8.5);
+        let run = run_single(rate, arrival, cfg.dist, cfg.capacity, target_secs, cfg.seed + i as u64)?;
+        progress(i, &run);
+        out.push(run);
+    }
+    Ok(out)
+}
+
+/// Phase-detection outcome for a dual-phase run (paper Fig. 15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PhaseClass {
+    Neither,
+    OnlyA,
+    OnlyB,
+    Both,
+}
+
+/// One dual-phase execution's outcome.
+#[derive(Debug, Clone)]
+pub struct DualRun {
+    pub rate_a_mbps: f64,
+    pub rate_b_mbps: f64,
+    pub rho: f64,
+    pub dist: DistKind,
+    /// Converged estimates in time order (MB/s).
+    pub estimates: Vec<f64>,
+    pub class: PhaseClass,
+}
+
+/// Classify estimates against the two nominal rates with the paper's 20%
+/// criterion.
+pub fn classify_dual(estimates: &[f64], rate_a: f64, rate_b: f64, pct: f64) -> PhaseClass {
+    let hit = |set: f64| {
+        estimates.iter().any(|e| ((e - set) / set).abs() * 100.0 <= pct)
+    };
+    match (hit(rate_a), hit(rate_b)) {
+        (true, true) => PhaseClass::Both,
+        (true, false) => PhaseClass::OnlyA,
+        (false, true) => PhaseClass::OnlyB,
+        (false, false) => PhaseClass::Neither,
+    }
+}
+
+/// Run one dual-phase micro-benchmark: the consumer's service rate shifts
+/// from `rate_a` to `rate_b` halfway through (by items), as in §VI.
+/// `rho_target` scales the arrival rate (low ρ makes detection hard —
+/// the Fig. 15 split).
+pub fn run_dual(
+    rate_a: f64,
+    rate_b: f64,
+    rho_target: f64,
+    dist: DistKind,
+    capacity: usize,
+    target_secs: f64,
+    seed: u64,
+) -> Result<DualRun> {
+    let items_per_sec_a = rate_a * 1.0e6 / ITEM_BYTES as f64;
+    let items_per_sec_b = rate_b * 1.0e6 / ITEM_BYTES as f64;
+    // Split the time budget between the phases.
+    let items_a = (items_per_sec_a * target_secs / 2.0) as u64;
+    let items_b = (items_per_sec_b * target_secs / 2.0) as u64;
+    let items = items_a + items_b;
+
+    // Arrival rate sized against the *faster* phase so ρ is controlled
+    // throughout; clamp to the practical generator ceiling.
+    let arrival = (rho_target * rate_a.max(rate_b)).clamp(0.2, 8.5);
+
+    let mut topo = Topology::new("dualphase");
+    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
+        "producer",
+        WorkloadSpec::single(dist, arrival, seed ^ 0xD00D),
+        items,
+    )));
+    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
+        "consumer",
+        WorkloadSpec::dual_phase(dist, rate_a, rate_b, items_a, seed),
+    )));
+    let sid = topo.connect::<u64>(
+        p,
+        0,
+        c,
+        0,
+        StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
+    )?;
+    let report = Scheduler::new(topo).with_monitoring(campaign_monitor()).run()?;
+    let estimates: Vec<f64> = report.rates_for(sid).iter().map(|r| r.rate_mbps()).collect();
+    let class = classify_dual(&estimates, rate_a, rate_b, 20.0);
+    Ok(DualRun {
+        rate_a_mbps: rate_a,
+        rate_b_mbps: rate_b,
+        rho: rho_target,
+        dist,
+        estimates,
+        class,
+    })
+}
+
+/// Aggregate Fig.-15-style counts.
+pub fn tally(runs: &[DualRun]) -> std::collections::HashMap<PhaseClass, usize> {
+    let mut m = std::collections::HashMap::new();
+    for r in runs {
+        *m.entry(r.class).or_insert(0) += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_dual_cases() {
+        assert_eq!(classify_dual(&[2.0, 1.0], 2.0, 1.0, 20.0), PhaseClass::Both);
+        assert_eq!(classify_dual(&[2.1], 2.0, 1.0, 20.0), PhaseClass::OnlyA);
+        assert_eq!(classify_dual(&[0.95], 2.0, 1.0, 20.0), PhaseClass::OnlyB);
+        assert_eq!(classify_dual(&[5.0], 2.0, 1.0, 20.0), PhaseClass::Neither);
+        assert_eq!(classify_dual(&[], 2.0, 1.0, 20.0), PhaseClass::Neither);
+    }
+
+    #[test]
+    fn single_run_converges_and_scores() {
+        // One fast run: 4 MB/s consumer, saturating producer.
+        let run = run_single(4.0, 8.0, DistKind::Deterministic, 2048, 1.0, 7).unwrap();
+        assert!(run.rho >= 0.99);
+        let est = run.est_mbps.expect("no convergence in campaign single run");
+        let err = run.pct_err.unwrap();
+        assert!(est > 0.0);
+        // The paper's own histogram spans ±20% for the majority; allow
+        // wider here to keep CI robust, the benches do the real scoring.
+        assert!(err.abs() < 60.0, "err = {err}% (est {est} vs set 4.0)");
+    }
+
+    #[test]
+    fn dual_run_produces_classification() {
+        let run =
+            run_dual(4.0, 1.5, 1.6, DistKind::Deterministic, 2048, 2.0, 11).unwrap();
+        // High ρ: we should find at least one of the phases.
+        assert!(
+            run.class != PhaseClass::Neither,
+            "high-ρ dual run found neither phase: {:?}",
+            run.estimates
+        );
+    }
+
+    #[test]
+    fn tally_counts() {
+        let runs = vec![
+            DualRun {
+                rate_a_mbps: 1.0,
+                rate_b_mbps: 2.0,
+                rho: 1.0,
+                dist: DistKind::Deterministic,
+                estimates: vec![],
+                class: PhaseClass::Both,
+            },
+            DualRun {
+                rate_a_mbps: 1.0,
+                rate_b_mbps: 2.0,
+                rho: 1.0,
+                dist: DistKind::Deterministic,
+                estimates: vec![],
+                class: PhaseClass::Both,
+            },
+        ];
+        assert_eq!(tally(&runs)[&PhaseClass::Both], 2);
+    }
+}

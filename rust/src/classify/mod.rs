@@ -1,0 +1,175 @@
+//! Online distribution classification (paper §VII future work).
+//!
+//! "Using the method of moments along with some simple classification, it
+//! should be clear that online distribution selection can be performed
+//! using the techniques described within this work as a basis."
+//!
+//! Given streamed moments of the service process ([`crate::stats::Moments`],
+//! Pébay one-pass), score candidate families by their theoretical
+//! (cv, skewness, excess-kurtosis) signatures and pick the nearest. The
+//! winner selects the closed-form queueing model (M/D/1 vs M/M/1 …) the
+//! runtime then applies.
+
+use crate::stats::Moments;
+
+/// Candidate service-process families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DistributionClass {
+    /// cv = 0 (σ ≈ 0): M/D/1 territory.
+    Deterministic,
+    /// cv = 1, skew = 2, kurt = 6: M/M/1 territory.
+    Exponential,
+    /// cv = 1/√3, skew = 0, kurt = −1.2.
+    Uniform,
+    /// skew = 0, kurt = 0, cv small-ish.
+    Normal,
+    /// Nothing matched confidently.
+    Unknown,
+}
+
+/// (cv, skewness, excess kurtosis) signature.
+#[derive(Debug, Clone, Copy)]
+pub struct Signature {
+    pub cv: f64,
+    pub skew: f64,
+    pub kurt: f64,
+}
+
+impl Signature {
+    /// Extract from streamed moments.
+    pub fn from_moments(m: &Moments) -> Self {
+        Signature { cv: m.cv(), skew: m.skewness(), kurt: m.kurtosis_excess() }
+    }
+
+    /// Weighted squared distance to another signature. Kurtosis is noisy
+    /// online, so it gets the smallest weight.
+    fn distance2(&self, o: &Signature) -> f64 {
+        let dc = self.cv - o.cv;
+        let ds = self.skew - o.skew;
+        let dk = self.kurt - o.kurt;
+        4.0 * dc * dc + 1.0 * ds * ds + 0.1 * dk * dk
+    }
+}
+
+/// Theoretical signatures per family.
+fn reference(class: DistributionClass) -> Signature {
+    match class {
+        DistributionClass::Deterministic => Signature { cv: 0.0, skew: 0.0, kurt: -1.2 },
+        DistributionClass::Exponential => Signature { cv: 1.0, skew: 2.0, kurt: 6.0 },
+        DistributionClass::Uniform => {
+            Signature { cv: 1.0 / 3.0f64.sqrt(), skew: 0.0, kurt: -1.2 }
+        }
+        DistributionClass::Normal => Signature { cv: 0.3, skew: 0.0, kurt: 0.0 },
+        DistributionClass::Unknown => Signature { cv: f64::NAN, skew: f64::NAN, kurt: f64::NAN },
+    }
+}
+
+/// Classification result with per-class scores (smaller = closer).
+#[derive(Debug, Clone)]
+pub struct Classification {
+    pub best: DistributionClass,
+    /// (class, distance²) sorted ascending.
+    pub scores: Vec<(DistributionClass, f64)>,
+    /// Samples the decision is based on.
+    pub n: u64,
+}
+
+/// Minimum samples before classification is attempted.
+pub const MIN_SAMPLES: u64 = 64;
+
+/// Distance² above which the best match is reported as `Unknown`.
+pub const REJECT_THRESHOLD: f64 = 1.5;
+
+/// Classify a streamed service process.
+pub fn classify(m: &Moments) -> Classification {
+    let n = m.count();
+    if n < MIN_SAMPLES {
+        return Classification { best: DistributionClass::Unknown, scores: vec![], n };
+    }
+    let sig = Signature::from_moments(m);
+    // Deterministic is special-cased on cv alone: a near-zero spread makes
+    // skew/kurt numerically meaningless.
+    if sig.cv < 0.02 {
+        return Classification {
+            best: DistributionClass::Deterministic,
+            scores: vec![(DistributionClass::Deterministic, 0.0)],
+            n,
+        };
+    }
+    let candidates = [
+        DistributionClass::Deterministic,
+        DistributionClass::Exponential,
+        DistributionClass::Uniform,
+        DistributionClass::Normal,
+    ];
+    let mut scores: Vec<(DistributionClass, f64)> = candidates
+        .iter()
+        .map(|&c| (c, sig.distance2(&reference(c))))
+        .collect();
+    scores.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let best = if scores[0].1 > REJECT_THRESHOLD {
+        DistributionClass::Unknown
+    } else {
+        scores[0].0
+    };
+    Classification { best, scores, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn stream(f: impl Fn(&mut Xoshiro256pp) -> f64, n: usize, seed: u64) -> Moments {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut m = Moments::new();
+        for _ in 0..n {
+            m.update(f(&mut rng));
+        }
+        m
+    }
+
+    #[test]
+    fn classifies_exponential() {
+        let m = stream(|r| r.exponential(5.0), 50_000, 1);
+        assert_eq!(classify(&m).best, DistributionClass::Exponential);
+    }
+
+    #[test]
+    fn classifies_deterministic() {
+        let m = stream(|_| 42.0, 1000, 2);
+        assert_eq!(classify(&m).best, DistributionClass::Deterministic);
+    }
+
+    #[test]
+    fn classifies_uniform() {
+        let m = stream(|r| r.uniform(1.0, 9.0), 50_000, 3);
+        assert_eq!(classify(&m).best, DistributionClass::Uniform);
+    }
+
+    #[test]
+    fn classifies_normal() {
+        let mut rng = Xoshiro256pp::new(4);
+        let mut cache = None;
+        let mut m = Moments::new();
+        for _ in 0..50_000 {
+            m.update(10.0 + 3.0 * rng.standard_normal(&mut cache));
+        }
+        assert_eq!(classify(&m).best, DistributionClass::Normal);
+    }
+
+    #[test]
+    fn too_few_samples_is_unknown() {
+        let m = stream(|r| r.exponential(1.0), 10, 5);
+        assert_eq!(classify(&m).best, DistributionClass::Unknown);
+    }
+
+    #[test]
+    fn scores_are_sorted() {
+        let m = stream(|r| r.exponential(1.0), 10_000, 6);
+        let c = classify(&m);
+        for w in c.scores.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal CLI argument parser (clap is not vendored offline).
+//!
+//! Grammar: `streamflow <subcommand> [--key value]... [--flag]...`
+//! Used by `src/main.rs` and a few examples.
+
+use std::collections::HashMap;
+
+use crate::{Result, SfError};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` pairs.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag` tokens.
+    pub flags: Vec<String>,
+    /// Remaining positionals after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(SfError::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed option lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                SfError::Config(format!("--{key}: cannot parse '{v}'"))
+            }),
+        }
+    }
+
+    /// Required typed option.
+    pub fn get_req<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        let v = self
+            .options
+            .get(key)
+            .ok_or_else(|| SfError::Config(format!("missing required --{key}")))?;
+        v.parse::<T>()
+            .map_err(|_| SfError::Config(format!("--{key}: cannot parse '{v}'")))
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse("microbench extra --runs 10 --dist exp --verbose");
+        assert_eq!(a.command.as_deref(), Some("microbench"));
+        assert_eq!(a.options["runs"], "10");
+        assert_eq!(a.options["dist"], "exp");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn flag_followed_by_positional_binds_as_value() {
+        // Documented ambiguity: `--flag token` parses as an option pair.
+        let a = parse("x --verbose extra");
+        assert_eq!(a.options["verbose"], "extra");
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --rate=4.5");
+        assert_eq!(a.options["rate"], "4.5");
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("x --a --b");
+        assert!(a.has_flag("a") && a.has_flag("b"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 5");
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 5);
+        assert_eq!(a.get_or("missing", 7u32).unwrap(), 7);
+        assert!(a.get_req::<f64>("absent").is_err());
+        let b = parse("x --n five");
+        assert!(b.get_or("n", 0usize).is_err());
+    }
+}

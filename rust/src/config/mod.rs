@@ -1,0 +1,197 @@
+//! Experiment / application configuration.
+//!
+//! A small typed layer over the built-in [`json`] module: experiment
+//! configs can be loaded from JSON files (see `examples/` and the bench
+//! harness) and defaulted from code. Environment variables prefixed `SF_`
+//! override scale knobs so CI can shrink the paper-scale campaigns.
+
+pub mod json;
+
+pub use json::Json;
+
+use crate::rng::dist::DistKind;
+use crate::{Result, SfError};
+
+/// Micro-benchmark campaign configuration (paper §V-A / §VI).
+#[derive(Debug, Clone)]
+pub struct MicrobenchConfig {
+    /// Executions in the campaign (paper: 1800; default scaled down).
+    pub runs: usize,
+    /// Service-rate sweep lower bound (MB/s). Paper: 0.8.
+    pub rate_lo_mbps: f64,
+    /// Service-rate sweep upper bound (MB/s). Paper: ~8.
+    pub rate_hi_mbps: f64,
+    /// Item size in bytes. Paper: 8.
+    pub item_bytes: usize,
+    /// Items per execution.
+    pub items: u64,
+    /// Service distribution family.
+    pub dist: DistKind,
+    /// Queue capacity between the two kernels.
+    pub capacity: usize,
+    /// RNG seed for the campaign.
+    pub seed: u64,
+}
+
+impl Default for MicrobenchConfig {
+    fn default() -> Self {
+        MicrobenchConfig {
+            runs: env_usize("SF_RUNS", 180),
+            rate_lo_mbps: 0.8,
+            rate_hi_mbps: 8.0,
+            item_bytes: 8,
+            items: env_u64("SF_ITEMS", 400_000),
+            dist: DistKind::Exponential,
+            capacity: 1024,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Matrix-multiply application configuration (paper §V-B1).
+#[derive(Debug, Clone)]
+pub struct MatmulConfig {
+    /// Square matrix dimension (paper: 10_000; default scaled down).
+    pub n: usize,
+    /// Parallel dot-product kernels (paper Fig. 16: five).
+    pub dot_kernels: usize,
+    /// Rows per streamed block.
+    pub block_rows: usize,
+    /// Queue capacity (items = row blocks).
+    pub capacity: usize,
+    /// Use the AOT XLA artifact for the dot product (vs native loops).
+    pub use_xla: bool,
+    /// RNG seed for matrix contents.
+    pub seed: u64,
+}
+
+impl Default for MatmulConfig {
+    fn default() -> Self {
+        MatmulConfig {
+            n: env_usize("SF_MM_N", 256),
+            dot_kernels: 5,
+            block_rows: 16,
+            capacity: 64,
+            use_xla: false,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Rabin–Karp application configuration (paper §V-B2).
+#[derive(Debug, Clone)]
+pub struct RabinKarpConfig {
+    /// Corpus size in bytes (paper: 2 GB of "foobar"; default scaled).
+    pub corpus_bytes: usize,
+    /// Pattern to search.
+    pub pattern: String,
+    /// Rolling-hash kernels `n` (paper Fig. 17: four).
+    pub hash_kernels: usize,
+    /// Verification kernels `j ≤ n` (paper: two).
+    pub verify_kernels: usize,
+    /// Segment size streamed to each hash kernel.
+    pub segment_bytes: usize,
+    /// Queue capacity (segments / candidates).
+    pub capacity: usize,
+}
+
+impl Default for RabinKarpConfig {
+    fn default() -> Self {
+        RabinKarpConfig {
+            corpus_bytes: env_usize("SF_RK_BYTES", 8 << 20),
+            pattern: "foobar".to_string(),
+            hash_kernels: 4,
+            verify_kernels: 2,
+            segment_bytes: 64 << 10,
+            capacity: 64,
+        }
+    }
+}
+
+impl MicrobenchConfig {
+    /// Parse overrides from a JSON object (missing fields keep defaults).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = MicrobenchConfig::default();
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| SfError::Config("microbench config must be an object".into()))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "runs" => c.runs = req_u64(v, k)? as usize,
+                "rate_lo_mbps" => c.rate_lo_mbps = req_f64(v, k)?,
+                "rate_hi_mbps" => c.rate_hi_mbps = req_f64(v, k)?,
+                "item_bytes" => c.item_bytes = req_u64(v, k)? as usize,
+                "items" => c.items = req_u64(v, k)?,
+                "capacity" => c.capacity = req_u64(v, k)? as usize,
+                "seed" => c.seed = req_u64(v, k)?,
+                "dist" => {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| SfError::Config(format!("{k} must be a string")))?;
+                    c.dist = s.parse().map_err(SfError::Config)?;
+                }
+                other => {
+                    return Err(SfError::Config(format!("unknown microbench key: {other}")))
+                }
+            }
+        }
+        Ok(c)
+    }
+}
+
+fn req_f64(v: &Json, k: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| SfError::Config(format!("{k} must be a number")))
+}
+
+fn req_u64(v: &Json, k: &str) -> Result<u64> {
+    v.as_u64().ok_or_else(|| SfError::Config(format!("{k} must be a non-negative integer")))
+}
+
+/// `SF_*` env override helpers (scale knobs for CI).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbench_from_json_overrides() {
+        let j = Json::parse(r#"{"runs": 10, "dist": "det", "rate_hi_mbps": 4.5}"#).unwrap();
+        let c = MicrobenchConfig::from_json(&j).unwrap();
+        assert_eq!(c.runs, 10);
+        assert_eq!(c.dist, DistKind::Deterministic);
+        assert!((c.rate_hi_mbps - 4.5).abs() < 1e-12);
+        // Untouched fields keep defaults.
+        assert_eq!(c.item_bytes, 8);
+    }
+
+    #[test]
+    fn microbench_rejects_unknown_keys() {
+        let j = Json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(MicrobenchConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn microbench_rejects_bad_types() {
+        let j = Json::parse(r#"{"runs": "many"}"#).unwrap();
+        assert!(MicrobenchConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"dist": 7}"#).unwrap();
+        assert!(MicrobenchConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn env_helpers_default() {
+        assert_eq!(env_usize("SF_DOES_NOT_EXIST_XYZ", 7), 7);
+        assert_eq!(env_f64("SF_DOES_NOT_EXIST_XYZ", 1.5), 1.5);
+    }
+}

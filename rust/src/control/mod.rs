@@ -1,0 +1,262 @@
+//! Closed-loop control — what the online rates are *for* (paper §I–II).
+//!
+//! The paper motivates online service-rate estimation with two runtime
+//! optimizations RaftLib performs:
+//!
+//! 1. **Analytic buffer sizing** — "analytic queueing models are highly
+//!    desirable … since they can divine a buffer size directly, eschewing
+//!    many unnecessary buffer re-allocations". [`BufferAdvisor`] consumes
+//!    the monitor's converged arrival/service rates per stream, selects a
+//!    model via the §VII moment classifier, and recommends (or applies —
+//!    the queue's capacity is an atomic) a capacity.
+//! 2. **Parallelization decisions** — "knowing the downstream kernel's
+//!    non-blocking service rate is exactly what we need to know to make an
+//!    informed parallelization decision". [`parallelism_advice`] computes
+//!    the replica count that matches a downstream kernel to its observed
+//!    arrival rate.
+
+use std::collections::HashMap;
+
+use crate::classify::DistributionClass;
+use crate::estimator::RateEstimate;
+use crate::monitor::QueueEnd;
+use crate::queueing::{mg1, mm1, utilization};
+use crate::topology::StreamId;
+
+/// Latest known rates for one stream (bytes/sec), by queue end.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamRates {
+    /// Arrival (tail) rate λ, items/sec.
+    pub lambda_items: Option<f64>,
+    /// Service (head) rate μ, items/sec.
+    pub mu_items: Option<f64>,
+}
+
+/// Rolling registry of per-stream rates fed from [`RateEstimate`]s.
+#[derive(Debug, Default)]
+pub struct RateRegistry {
+    rates: HashMap<StreamId, StreamRates>,
+}
+
+impl RateRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Absorb one converged estimate.
+    pub fn update(&mut self, stream: StreamId, end: QueueEnd, est: &RateEstimate) {
+        let e = self.rates.entry(stream).or_default();
+        match end {
+            QueueEnd::Tail => e.lambda_items = Some(est.items_per_sec()),
+            QueueEnd::Head => e.mu_items = Some(est.items_per_sec()),
+        }
+    }
+
+    /// Current snapshot for a stream.
+    pub fn get(&self, stream: StreamId) -> Option<StreamRates> {
+        self.rates.get(&stream).copied()
+    }
+
+    /// Utilization λ/μ when both ends are known.
+    pub fn rho(&self, stream: StreamId) -> Option<f64> {
+        let r = self.get(stream)?;
+        Some(utilization(r.lambda_items?, r.mu_items?))
+    }
+
+    /// Streams with both rates known.
+    pub fn complete_streams(&self) -> Vec<StreamId> {
+        let mut v: Vec<StreamId> = self
+            .rates
+            .iter()
+            .filter(|(_, r)| r.lambda_items.is_some() && r.mu_items.is_some())
+            .map(|(s, _)| *s)
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// A buffer-capacity recommendation with its provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityAdvice {
+    pub stream: StreamId,
+    pub capacity: usize,
+    /// Model used ("mm1c", "mg1", "saturated").
+    pub model: &'static str,
+    /// Utilization the advice was computed at.
+    pub rho: f64,
+}
+
+/// Analytic buffer sizing from measured rates + classified service process.
+#[derive(Debug, Clone)]
+pub struct BufferAdvisor {
+    /// Target blocking probability for the M/M/1/C sizing (paper Fig. 2's
+    /// "big enough that upstream isn't stifled").
+    pub target_blocking: f64,
+    /// Headroom (σ's) for the M/G/1 mean-queue-based sizing.
+    pub headroom_sigmas: f64,
+    /// Never recommend above this.
+    pub max_capacity: usize,
+}
+
+impl Default for BufferAdvisor {
+    fn default() -> Self {
+        BufferAdvisor { target_blocking: 0.01, headroom_sigmas: 3.0, max_capacity: 1 << 20 }
+    }
+}
+
+impl BufferAdvisor {
+    /// Recommend a capacity for a stream given measured rates and the
+    /// classified service distribution.
+    pub fn advise(
+        &self,
+        stream: StreamId,
+        rates: StreamRates,
+        class: DistributionClass,
+    ) -> Option<CapacityAdvice> {
+        let lambda = rates.lambda_items?;
+        let mu = rates.mu_items?;
+        let rho = utilization(lambda, mu);
+        if rho >= 1.0 {
+            // Saturated server: buffering cannot fix throughput; size for
+            // burst absorption only.
+            return Some(CapacityAdvice {
+                stream,
+                capacity: mg1::suggest_capacity(lambda, mu, 1.0, self.headroom_sigmas)
+                    .min(self.max_capacity),
+                model: "saturated",
+                rho,
+            });
+        }
+        match class {
+            DistributionClass::Exponential | DistributionClass::Unknown => {
+                // M/M/1/C closed form: smallest C with P(block) ≤ target.
+                let c = mm1::min_capacity_for_blocking(
+                    rho,
+                    self.target_blocking,
+                    self.max_capacity as u64,
+                )
+                .unwrap_or(self.max_capacity as u64) as usize;
+                Some(CapacityAdvice { stream, capacity: c, model: "mm1c", rho })
+            }
+            other => {
+                let cs2 = match other {
+                    DistributionClass::Deterministic => 0.0,
+                    DistributionClass::Uniform => 1.0 / 3.0,
+                    DistributionClass::Normal => 0.09,
+                    _ => 1.0,
+                };
+                Some(CapacityAdvice {
+                    stream,
+                    capacity: mg1::suggest_capacity(lambda, mu, cs2, self.headroom_sigmas)
+                        .min(self.max_capacity),
+                    model: "mg1",
+                    rho,
+                })
+            }
+        }
+    }
+}
+
+/// Parallelization advice (§I): replicas of the downstream kernel needed
+/// so aggregate service capacity covers arrivals with `headroom` slack
+/// (e.g. 0.8 targets ρ = 0.8 per replica).
+pub fn parallelism_advice(lambda_items: f64, mu_items_per_replica: f64, target_rho: f64) -> usize {
+    assert!(target_rho > 0.0 && target_rho <= 1.0);
+    if mu_items_per_replica <= 0.0 {
+        return 1;
+    }
+    ((lambda_items / (mu_items_per_replica * target_rho)).ceil() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(items_per_sec: f64) -> RateEstimate {
+        RateEstimate {
+            q_bar: 1.0,
+            rate_bps: items_per_sec * 8.0,
+            period_ns: 1000,
+            item_bytes: 8,
+            n_q: 10,
+            at_ns: 0,
+        }
+    }
+
+    #[test]
+    fn registry_tracks_both_ends() {
+        let mut reg = RateRegistry::new();
+        let s = StreamId(0);
+        reg.update(s, QueueEnd::Tail, &est(500.0));
+        assert!(reg.rho(s).is_none());
+        reg.update(s, QueueEnd::Head, &est(1000.0));
+        assert!((reg.rho(s).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(reg.complete_streams(), vec![s]);
+    }
+
+    #[test]
+    fn advisor_mm1c_hits_target_blocking() {
+        let adv = BufferAdvisor::default();
+        let rates = StreamRates { lambda_items: Some(800.0), mu_items: Some(1000.0) };
+        let a = adv.advise(StreamId(1), rates, DistributionClass::Exponential).unwrap();
+        assert_eq!(a.model, "mm1c");
+        assert!(mm1::blocking_probability(0.8, a.capacity as u64) <= 0.01);
+        assert!(mm1::blocking_probability(0.8, a.capacity as u64 - 1) > 0.01);
+    }
+
+    #[test]
+    fn advisor_deterministic_uses_mg1() {
+        let adv = BufferAdvisor::default();
+        let rates = StreamRates { lambda_items: Some(500.0), mu_items: Some(1000.0) };
+        let a = adv.advise(StreamId(2), rates, DistributionClass::Deterministic).unwrap();
+        assert_eq!(a.model, "mg1");
+        // Deterministic service at ρ = 0.5 needs almost nothing.
+        assert!(a.capacity <= 8, "capacity = {}", a.capacity);
+    }
+
+    #[test]
+    fn advisor_saturated_path() {
+        let adv = BufferAdvisor::default();
+        let rates = StreamRates { lambda_items: Some(2000.0), mu_items: Some(1000.0) };
+        let a = adv.advise(StreamId(3), rates, DistributionClass::Exponential).unwrap();
+        assert_eq!(a.model, "saturated");
+        assert!(a.capacity >= 64);
+    }
+
+    #[test]
+    fn advisor_requires_both_rates() {
+        let adv = BufferAdvisor::default();
+        let rates = StreamRates { lambda_items: Some(2000.0), mu_items: None };
+        assert!(adv.advise(StreamId(4), rates, DistributionClass::Unknown).is_none());
+    }
+
+    #[test]
+    fn parallelism_matches_arrivals() {
+        // 10k items/s arriving, replicas serve 3k each, target ρ 0.8:
+        // need ceil(10000 / 2400) = 5.
+        assert_eq!(parallelism_advice(10_000.0, 3_000.0, 0.8), 5);
+        assert_eq!(parallelism_advice(100.0, 3_000.0, 0.8), 1);
+        assert_eq!(parallelism_advice(100.0, 0.0, 0.8), 1);
+    }
+
+    #[test]
+    fn higher_utilization_needs_bigger_buffers() {
+        let adv = BufferAdvisor::default();
+        let lo = adv
+            .advise(
+                StreamId(0),
+                StreamRates { lambda_items: Some(300.0), mu_items: Some(1000.0) },
+                DistributionClass::Exponential,
+            )
+            .unwrap();
+        let hi = adv
+            .advise(
+                StreamId(0),
+                StreamRates { lambda_items: Some(950.0), mu_items: Some(1000.0) },
+                DistributionClass::Exponential,
+            )
+            .unwrap();
+        assert!(hi.capacity > lo.capacity);
+    }
+}

@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All the ways streamflow operations can fail.
+#[derive(Debug, Error)]
+pub enum SfError {
+    /// Topology construction errors (dangling ports, duplicate edges, ...).
+    #[error("topology error: {0}")]
+    Topology(String),
+
+    /// A port index or type did not match the kernel's declaration.
+    #[error("port error: {0}")]
+    Port(String),
+
+    /// Scheduler lifecycle errors (double start, failed join, ...).
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    /// The sampling-period controller failed to find a stable period
+    /// (the paper's explicit "our approach will not work here" outcome).
+    #[error("no stable sampling period: {0}")]
+    NoStablePeriod(String),
+
+    /// Artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Errors bubbled up from the XLA/PJRT runtime.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Configuration parse/validation errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON syntax errors from the built-in parser.
+    #[error("json error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for SfError {
+    fn from(e: xla::Error) -> Self {
+        SfError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, SfError>;

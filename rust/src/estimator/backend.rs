@@ -1,0 +1,196 @@
+//! Moments backends: the Algorithm-1 numeric step (Gaussian filter → mean,
+//! sample std, q) behind a small trait so the monitor can run either the
+//! pure-Rust hot path or the AOT-compiled Pallas kernel through PJRT.
+//!
+//! Numerics are identical by construction: both sides implement
+//!
+//! ```text
+//! S′    = conv_valid(S, GAUSS_TAPS)
+//! μ̂     = mean(S′)
+//! σ̂     = sqrt( Σ(S′−μ̂)² / (|S′|−1) )      (sample, ddof = 1)
+//! q     = μ̂ + z·σ̂                            (z = 1.64485)
+//! ```
+//!
+//! and the cross-layer agreement is enforced by
+//! `tests/xla_backend_parity.rs`.
+
+use super::filters::{conv_valid, GAUSS_RADIUS, GAUSS_TAPS};
+use crate::Result;
+
+/// One Algorithm-1 numeric step over a window of tc samples.
+pub trait MomentsBackend {
+    /// Returns `(μ̂, σ̂, q)` of the Gaussian-filtered window.
+    fn moments(&mut self, window: &[f64], z: f64) -> Result<(f64, f64, f64)>;
+
+    /// Human-readable backend name (reports/benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Backend selector for configs/CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust (default; the production hot path).
+    #[default]
+    Native,
+    /// AOT Pallas kernel via PJRT (artifacts/estimator_*.hlo.txt).
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(format!("unknown backend: {other}")),
+        }
+    }
+}
+
+/// Pure-Rust implementation. Allocation-free after warmup.
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    filtered: Vec<f64>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend::default()
+    }
+}
+
+impl MomentsBackend for NativeBackend {
+    #[inline]
+    fn moments(&mut self, window: &[f64], z: f64) -> Result<(f64, f64, f64)> {
+        conv_valid(window, &GAUSS_TAPS, &mut self.filtered);
+        let sp = &self.filtered;
+        if sp.is_empty() {
+            return Err(crate::SfError::Config(format!(
+                "window of {} too small for radius-{GAUSS_RADIUS} filter",
+                window.len()
+            )));
+        }
+        let n = sp.len() as f64;
+        let mut sum = 0.0;
+        for &v in sp {
+            sum += v;
+        }
+        let mu = sum / n;
+        let mut ss = 0.0;
+        for &v in sp {
+            let d = v - mu;
+            ss += d * d;
+        }
+        let var = if sp.len() > 1 { ss / (n - 1.0) } else { 0.0 };
+        let sigma = var.sqrt();
+        Ok((mu, sigma, mu + z * sigma))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT-backed implementation executing the fused Pallas `moments` kernel.
+///
+/// Holds a compiled executable for a fixed window width (the artifact's
+/// static shape). Construction is expensive (client + compile) — build once
+/// per thread and reuse. Lives here (not in `runtime`) so the trait impl
+/// sits next to its native twin; the heavy lifting is `runtime::Engine`.
+pub struct XlaBackend {
+    exec: crate::runtime::ArtifactExec,
+    width: usize,
+    name: String,
+}
+
+impl XlaBackend {
+    /// Load `estimator_b1_w{width}` from the artifact directory.
+    pub fn from_dir(dir: &std::path::Path, width: usize) -> Result<Self> {
+        let engine = crate::runtime::Engine::load_dir(dir)?;
+        let name = format!("estimator_b1_w{width}");
+        let exec = engine.load_artifact(&name)?;
+        Ok(XlaBackend { exec, width, name })
+    }
+
+    /// Wrap an already-loaded executable (shared engine).
+    pub fn from_exec(exec: crate::runtime::ArtifactExec, width: usize) -> Self {
+        let name = format!("estimator_b1_w{width}");
+        XlaBackend { exec, width, name }
+    }
+
+    /// Artifact name in the manifest.
+    pub fn artifact_name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl MomentsBackend for XlaBackend {
+    fn moments(&mut self, window: &[f64], _z: f64) -> Result<(f64, f64, f64)> {
+        // The z-score is baked into the artifact at AOT time (QUANTILE_Z);
+        // _z is ignored by construction — both sides pin 1.64485.
+        if window.len() != self.width {
+            return Err(crate::SfError::Artifact(format!(
+                "XLA backend compiled for window {}, got {}",
+                self.width,
+                window.len()
+            )));
+        }
+        let input: Vec<f32> = window.iter().map(|&x| x as f32).collect();
+        let outs = self.exec.run_f32(&[(&input, &[1, self.width as i64])])?;
+        if outs.len() != 3 {
+            return Err(crate::SfError::Artifact(format!(
+                "estimator artifact returned {} outputs, want 3",
+                outs.len()
+            )));
+        }
+        Ok((outs[0][0] as f64, outs[1][0] as f64, outs[2][0] as f64))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_matches_two_pass_reference() {
+        let window: Vec<f64> = (0..64).map(|i| 100.0 + (i % 9) as f64).collect();
+        let mut b = NativeBackend::new();
+        let (mu, sigma, q) = b.moments(&window, 1.64485).unwrap();
+        // Reference: filter then naive two-pass.
+        let sp = super::super::filters::gauss_filter(&window);
+        let n = sp.len() as f64;
+        let rmu = sp.iter().sum::<f64>() / n;
+        let rvar = sp.iter().map(|v| (v - rmu).powi(2)).sum::<f64>() / (n - 1.0);
+        assert!((mu - rmu).abs() < 1e-12);
+        assert!((sigma - rvar.sqrt()).abs() < 1e-12);
+        assert!((q - (rmu + 1.64485 * rvar.sqrt())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_constant_window() {
+        let window = vec![42.0; 64];
+        let mut b = NativeBackend::new();
+        let (mu, sigma, q) = b.moments(&window, 1.64485).unwrap();
+        let taps_sum: f64 = GAUSS_TAPS.iter().sum();
+        assert!((mu - 42.0 * taps_sum).abs() < 1e-9);
+        assert!(sigma.abs() < 1e-9);
+        assert!((q - mu).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_rejects_tiny_window() {
+        let mut b = NativeBackend::new();
+        assert!(b.moments(&[1.0, 2.0], 1.64485).is_err());
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert!("cuda".parse::<BackendKind>().is_err());
+    }
+}

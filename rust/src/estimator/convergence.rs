@@ -1,0 +1,176 @@
+//! Convergence detection for q̄ (paper §IV-B, Eq. 4).
+//!
+//! "A discrete Gaussian filter with a radius of one is followed by a
+//! Laplacian filter with discretized values (in practice, one combined
+//! filter). … The values of the minimum and maximum of the filtered σ(q̄)
+//! are kept over a window w ← 16 where convergence is judged by these
+//! values all being within some tolerance (ours set to 5×10⁻⁷)."
+//!
+//! We feed the standard *error* of q̄ (σ of the mean) into a 16-deep
+//! window, LoG-filter it, and declare convergence when the spread
+//! (max − min) of the filtered values falls inside the tolerance — i.e.
+//! the error term's rate of change has flattened out.
+
+use std::collections::VecDeque;
+
+use super::filters::{conv_valid, LOG_RADIUS, LOG_TAPS};
+
+/// Windowed LoG-filtered convergence detector.
+#[derive(Debug, Clone)]
+pub struct ConvergenceDetector {
+    window: VecDeque<f64>,
+    cap: usize,
+    tol: f64,
+    /// Last filtered trace (exposed for Fig. 9 reproduction).
+    last_filtered: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl ConvergenceDetector {
+    /// `cap` = window size (paper: 16); `tol` = tolerance (paper: 5e-7).
+    pub fn new(cap: usize, tol: f64) -> Self {
+        assert!(cap > 2 * LOG_RADIUS + 1, "window too small for LoG filter");
+        assert!(tol > 0.0);
+        ConvergenceDetector {
+            window: VecDeque::with_capacity(cap),
+            cap,
+            tol,
+            last_filtered: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Feed the next σ(q̄) observation; true ⇒ converged.
+    pub fn feed(&mut self, sigma_qbar: f64) -> bool {
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(sigma_qbar);
+        if self.window.len() < self.cap {
+            return false;
+        }
+        self.scratch.clear();
+        self.scratch.extend(self.window.iter().copied());
+        // §Perf: conv_valid reuses last_filtered's allocation — the feed
+        // path is allocation-free after warmup.
+        conv_valid(&self.scratch, &LOG_TAPS, &mut self.last_filtered);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &self.last_filtered {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (hi - lo) < self.tol
+    }
+
+    /// The most recent filtered trace (Fig. 9's y-values).
+    pub fn filtered(&self) -> &[f64] {
+        &self.last_filtered
+    }
+
+    /// Spread (max − min) of the last filtered trace; `None` until full.
+    pub fn spread(&self) -> Option<f64> {
+        if self.last_filtered.is_empty() {
+            return None;
+        }
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &self.last_filtered {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        Some(hi - lo)
+    }
+
+    /// Clear state for the next estimation epoch (post-convergence restart).
+    pub fn reset(&mut self) {
+        self.window.clear();
+        self.last_filtered.clear();
+    }
+
+    /// Current tolerance.
+    pub fn tol(&self) -> f64 {
+        self.tol
+    }
+
+    /// Replace the tolerance (used by the relative-tolerance mode).
+    pub fn set_tol(&mut self, tol: f64) {
+        assert!(tol > 0.0);
+        self.tol = tol;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_full_window() {
+        let mut d = ConvergenceDetector::new(16, 5e-7);
+        for i in 0..15 {
+            assert!(!d.feed(0.0), "sample {i}");
+        }
+        // 16th sample of a perfectly flat trace → converged.
+        assert!(d.feed(0.0));
+    }
+
+    #[test]
+    fn flat_trace_converges() {
+        let mut d = ConvergenceDetector::new(16, 5e-7);
+        let mut converged = false;
+        for _ in 0..16 {
+            converged = d.feed(1.0e-3); // constant, any level
+        }
+        assert!(converged, "constant trace must converge (rate of change = 0)");
+    }
+
+    #[test]
+    fn decaying_trace_converges_eventually() {
+        // σ(q̄) ∝ 1/√n — the real signal shape. Must converge once the
+        // changes flatten below tolerance.
+        let mut d = ConvergenceDetector::new(16, 5e-7);
+        let sigma_q = 1.0;
+        let mut n = 2.0f64;
+        let mut steps = 0u64;
+        loop {
+            n += 1.0;
+            steps += 1;
+            if d.feed(sigma_q / n.sqrt()) {
+                break;
+            }
+            assert!(steps < 10_000_000, "never converged");
+        }
+        assert!(steps > 16, "converged implausibly fast: {steps}");
+    }
+
+    #[test]
+    fn moving_trace_does_not_converge() {
+        let mut d = ConvergenceDetector::new(16, 5e-7);
+        for i in 0..64 {
+            // Oscillating error term — far from converged.
+            let v = 1e-3 * (1.0 + (i as f64 * 0.7).sin());
+            assert!(!d.feed(v), "sample {i}");
+        }
+    }
+
+    #[test]
+    fn reset_requires_refill() {
+        let mut d = ConvergenceDetector::new(16, 5e-7);
+        for _ in 0..16 {
+            d.feed(0.0);
+        }
+        d.reset();
+        for i in 0..15 {
+            assert!(!d.feed(0.0), "sample {i} after reset");
+        }
+        assert!(d.feed(0.0));
+    }
+
+    #[test]
+    fn filtered_trace_has_valid_width() {
+        let mut d = ConvergenceDetector::new(16, 5e-7);
+        for _ in 0..16 {
+            d.feed(1.0);
+        }
+        assert_eq!(d.filtered().len(), 14); // 16 - 2*radius(1)
+        assert!(d.spread().unwrap() < 1e-12);
+    }
+}

@@ -1,0 +1,144 @@
+//! Filter taps (Eqs. 2 and 4) — the Rust twins of
+//! `python/compile/kernels/filters.py`.
+//!
+//! The values are locked by tests on BOTH sides so the native backend and
+//! the Pallas/XLA backend cannot drift: `python/tests/test_filters.py`
+//! pins the Python constants; `tests::taps_locked_to_python` pins these.
+
+/// Gaussian filter radius (paper: "a radius of two was selected").
+pub const GAUSS_RADIUS: usize = 2;
+
+/// Eq. 2: `g(x) = exp(-x²/2)/√(2π)`, x ∈ [-2, 2]. Deliberately
+/// **unnormalized** (Σ ≈ 0.99087), exactly as the paper specifies.
+pub const GAUSS_TAPS: [f64; 5] = [
+    0.053990966513188056,
+    0.24197072451914337,
+    0.3989422804014327,
+    0.24197072451914337,
+    0.053990966513188056,
+];
+
+/// LoG filter radius (paper: "a radius of one").
+pub const LOG_RADIUS: usize = 1;
+
+/// Eq. 4: Laplacian-of-Gaussian with σ = ½, x ∈ [-1, 1].
+pub const LOG_TAPS: [f64; 3] = [
+    1.2957831963165134,
+    -3.1915382432114616,
+    1.2957831963165134,
+];
+
+/// 'valid'-mode convolution: `out[i] = Σ_j taps[j]·x[i+j]`, no padding —
+/// "the filter starts at the radius so that the result has a width
+/// 2×radius smaller than the data window" (Algorithm 1).
+pub fn conv_valid<const K: usize>(x: &[f64], taps: &[f64; K], out: &mut Vec<f64>) {
+    out.clear();
+    if x.len() < K {
+        return;
+    }
+    let out_len = x.len() - K + 1;
+    out.reserve(out_len);
+    for i in 0..out_len {
+        let mut acc = 0.0;
+        for (j, t) in taps.iter().enumerate() {
+            acc += t * x[i + j];
+        }
+        out.push(acc);
+    }
+}
+
+/// Gaussian-filter a window (allocating convenience wrapper).
+pub fn gauss_filter(x: &[f64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    conv_valid(x, &GAUSS_TAPS, &mut out);
+    out
+}
+
+/// LoG-filter a trace (allocating convenience wrapper).
+pub fn log_filter(x: &[f64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    conv_valid(x, &LOG_TAPS, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taps_locked_to_python() {
+        // Recompute from the closed forms and compare to the constants.
+        let sqrt_2pi = (2.0 * std::f64::consts::PI).sqrt();
+        for (i, x) in (-2i32..=2).enumerate() {
+            let x = x as f64;
+            let expect = (-(x * x) / 2.0).exp() / sqrt_2pi;
+            assert!((GAUSS_TAPS[i] - expect).abs() < 1e-15, "tap {i}");
+        }
+        let sigma = 0.5f64;
+        for (i, x) in (-1i32..=1).enumerate() {
+            let x = x as f64;
+            let e = (-(x * x) / (2.0 * sigma * sigma)).exp();
+            let expect = (x * x) * e / (sqrt_2pi * sigma.powi(5)) - e / (sqrt_2pi * sigma.powi(3));
+            assert!((LOG_TAPS[i] - expect).abs() < 1e-12, "log tap {i}");
+        }
+    }
+
+    #[test]
+    fn gauss_sum_is_unnormalized() {
+        let s: f64 = GAUSS_TAPS.iter().sum();
+        assert!((s - 0.9908656624660955).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_valid_width() {
+        let x = vec![1.0; 64];
+        let out = gauss_filter(&x);
+        assert_eq!(out.len(), 60);
+        let out = log_filter(&x);
+        assert_eq!(out.len(), 62);
+    }
+
+    #[test]
+    fn conv_valid_too_short_yields_empty() {
+        let x = vec![1.0; 3];
+        assert!(gauss_filter(&x).is_empty());
+    }
+
+    #[test]
+    fn constant_response() {
+        let x = vec![5.0; 16];
+        let g = gauss_filter(&x);
+        let gs: f64 = GAUSS_TAPS.iter().sum();
+        for v in g {
+            assert!((v - 5.0 * gs).abs() < 1e-12);
+        }
+        let l = log_filter(&x);
+        let ls: f64 = LOG_TAPS.iter().sum();
+        for v in l {
+            assert!((v - 5.0 * ls).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn impulse_recovers_taps() {
+        let mut x = vec![0.0; 11];
+        x[5] = 1.0;
+        let g = gauss_filter(&x);
+        // out[i] = taps[5 - i] for i in 1..=5 ... verify symmetric taps appear.
+        for (j, t) in GAUSS_TAPS.iter().enumerate() {
+            assert!((g[5 - j] - t).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn log_responds_to_edges_not_flats() {
+        let mut x = vec![0.0; 16];
+        for v in x.iter_mut().skip(8) {
+            *v = 1.0;
+        }
+        let f = log_filter(&x);
+        let flat_max = f[..5].iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let edge_max = f[6..9].iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        assert!(edge_max > 10.0 * (flat_max + 1e-12));
+    }
+}

@@ -1,0 +1,318 @@
+//! Algorithm 1 — the online service-rate heuristic.
+
+use std::collections::VecDeque;
+
+use super::backend::MomentsBackend;
+use super::convergence::ConvergenceDetector;
+use super::{EstimatorConfig, RateEstimate};
+use crate::stats::Welford;
+use crate::Result;
+
+/// What a single `feed()` produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FeedOutcome {
+    /// Window not yet full — still accumulating tc samples.
+    Accumulating,
+    /// A new q was computed and folded into q̄ (no convergence yet).
+    Updated {
+        /// The Eq.-3 quantile estimate from this window position.
+        q: f64,
+        /// Running q̄ after the update.
+        q_bar: f64,
+        /// Standard error of q̄ (the convergence detector's input).
+        sigma_q_bar: f64,
+    },
+    /// q̄ converged: an estimate was emitted and the epoch restarted.
+    Converged(RateEstimate),
+}
+
+/// The per-queue-end estimator: sliding window S + q̄ accumulator +
+/// convergence detector, generic over the numeric backend.
+pub struct ServiceRateEstimator<B: MomentsBackend> {
+    cfg: EstimatorConfig,
+    backend: B,
+    /// Sliding window S of tc samples (FIFO, size w).
+    s: VecDeque<f64>,
+    /// Scratch buffer handed to the backend.
+    scratch: Vec<f64>,
+    /// Welford accumulator over successive q values → q̄.
+    q_stats: Welford,
+    /// Eq.-4 convergence detector over the σ(q̄) trace.
+    conv: ConvergenceDetector,
+    /// Epochs completed (number of converged estimates emitted).
+    epochs: u64,
+    /// Total tc samples absorbed (across epochs).
+    fed: u64,
+}
+
+impl<B: MomentsBackend> ServiceRateEstimator<B> {
+    pub fn new(cfg: EstimatorConfig, backend: B) -> Result<Self> {
+        cfg.validate()?;
+        let conv = ConvergenceDetector::new(cfg.conv_window, cfg.conv_tol);
+        Ok(ServiceRateEstimator {
+            s: VecDeque::with_capacity(cfg.window),
+            scratch: Vec::with_capacity(cfg.window),
+            q_stats: Welford::new(),
+            conv,
+            epochs: 0,
+            fed: 0,
+            cfg,
+            backend,
+        })
+    }
+
+    /// Feed one valid (non-blocked) tc sample.
+    ///
+    /// `period_ns`, `item_bytes`, `now_ns` parameterize the rate emitted on
+    /// convergence: `rate = q̄·d̄/T`.
+    pub fn feed(
+        &mut self,
+        tc: f64,
+        period_ns: u64,
+        item_bytes: usize,
+        now_ns: u64,
+    ) -> Result<FeedOutcome> {
+        self.fed += 1;
+        if self.s.len() == self.cfg.window {
+            self.s.pop_front();
+        }
+        self.s.push_back(tc);
+        if self.s.len() < self.cfg.window {
+            return Ok(FeedOutcome::Accumulating);
+        }
+
+        // Window full: run the numeric step (filter → μ̂, σ̂ → q).
+        self.scratch.clear();
+        self.scratch.extend(self.s.iter().copied());
+        let (_mu, _sigma, q) = self.backend.moments(&self.scratch, self.cfg.quantile_z)?;
+
+        // updateStats(q)
+        self.q_stats.update(q);
+        let q_bar = self.q_stats.mean();
+        let sigma_q_bar = self.q_stats.std_error();
+
+        // Optional relative tolerance: scale Eq. 4's threshold by q̄ so the
+        // detector behaves identically at any tc magnitude. `None` = paper.
+        if let Some(rel) = self.cfg.rel_tol {
+            let tol = (rel * q_bar.abs()).max(self.cfg.conv_tol);
+            self.conv.set_tol(tol);
+        }
+
+        // QConverged()
+        let converged =
+            self.conv.feed(sigma_q_bar) && self.q_stats.count() >= self.cfg.min_q_updates;
+        if !converged {
+            return Ok(FeedOutcome::Updated { q, q_bar, sigma_q_bar });
+        }
+
+        // push(output, getMeanQ()); resetStats()
+        let est = RateEstimate {
+            q_bar,
+            rate_bps: q_bar * item_bytes as f64 / (period_ns as f64 / 1.0e9),
+            period_ns,
+            item_bytes,
+            n_q: self.q_stats.count(),
+            at_ns: now_ns,
+        };
+        self.q_stats.reset();
+        self.conv.reset();
+        self.epochs += 1;
+        Ok(FeedOutcome::Converged(est))
+    }
+
+    /// Converged epochs so far.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Total samples fed.
+    pub fn samples_fed(&self) -> u64 {
+        self.fed
+    }
+
+    /// Current (unconverged) q̄ and its sample count — the paper's RaftLib
+    /// falls back to "the current best solution" when convergence is never
+    /// reached; this is that value.
+    pub fn current_q_bar(&self) -> Option<(f64, u64)> {
+        if self.q_stats.count() == 0 {
+            None
+        } else {
+            Some((self.q_stats.mean(), self.q_stats.count()))
+        }
+    }
+
+    /// Build an unconverged best-effort estimate (the fallback path).
+    pub fn best_effort(
+        &self,
+        period_ns: u64,
+        item_bytes: usize,
+        now_ns: u64,
+    ) -> Option<RateEstimate> {
+        let (q_bar, n_q) = self.current_q_bar()?;
+        Some(RateEstimate {
+            q_bar,
+            rate_bps: q_bar * item_bytes as f64 / (period_ns as f64 / 1.0e9),
+            period_ns,
+            item_bytes,
+            n_q,
+            at_ns: now_ns,
+        })
+    }
+
+    /// The estimator configuration in effect.
+    pub fn config(&self) -> &EstimatorConfig {
+        &self.cfg
+    }
+
+    /// Drop windowed state but keep epoch counters (used when the sampling
+    /// period changes: tc counts under a different T are incomparable).
+    pub fn reset_window(&mut self) {
+        self.s.clear();
+        self.q_stats.reset();
+        self.conv.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::NativeBackend;
+    use crate::rng::Xoshiro256pp;
+
+    fn estimator(cfg: EstimatorConfig) -> ServiceRateEstimator<NativeBackend> {
+        ServiceRateEstimator::new(cfg, NativeBackend::new()).unwrap()
+    }
+
+    #[test]
+    fn accumulates_until_window_full() {
+        let mut e = estimator(EstimatorConfig::default());
+        for i in 0..63 {
+            assert_eq!(
+                e.feed(5.0, 1000, 8, i).unwrap(),
+                FeedOutcome::Accumulating,
+                "sample {i}"
+            );
+        }
+        match e.feed(5.0, 1000, 8, 63).unwrap() {
+            FeedOutcome::Updated { .. } => {}
+            other => panic!("expected Updated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn constant_stream_converges_to_scaled_constant() {
+        // A noiseless tc stream: q = c·Σtaps, σ(q̄) = 0 → fast convergence.
+        let mut e = estimator(EstimatorConfig::default());
+        let c = 10.0;
+        let mut est = None;
+        for i in 0..10_000 {
+            if let FeedOutcome::Converged(r) = e.feed(c, 1_000_000, 8, i).unwrap() {
+                est = Some(r);
+                break;
+            }
+        }
+        let r = est.expect("no convergence on constant stream");
+        let taps_sum: f64 = crate::estimator::filters::GAUSS_TAPS.iter().sum();
+        assert!((r.q_bar - c * taps_sum).abs() < 1e-6, "q_bar = {}", r.q_bar);
+        // rate = q̄·d/T = 9.91 items/ms · 8 B = ~79.3 KB/s
+        let expect_bps = c * taps_sum * 8.0 / 1.0e-3;
+        assert!((r.rate_bps - expect_bps).abs() / expect_bps < 1e-9);
+    }
+
+    #[test]
+    fn noisy_stream_estimate_tracks_the_max_not_the_mean() {
+        // tc samples: mostly full-rate (10) with occasional partial
+        // observations (the paper's "less than realized service rate"
+        // artifacts). The q̄ estimate must sit near the well-behaved
+        // maximum, i.e. materially above the arithmetic mean.
+        let mut rng = Xoshiro256pp::new(1);
+        let cfg = EstimatorConfig { rel_tol: Some(1e-4), ..Default::default() };
+        let mut e = estimator(cfg);
+        let mut sum = 0.0;
+        let mut n = 0.0;
+        let mut est = None;
+        for i in 0..200_000 {
+            let tc = if rng.next_f64() < 0.25 {
+                rng.uniform(2.0, 8.0) // partial observation
+            } else {
+                10.0 + rng.uniform(-0.5, 0.5) // full service rate ± noise
+            };
+            sum += tc;
+            n += 1.0;
+            if let FeedOutcome::Converged(r) = e.feed(tc, 1000, 8, i).unwrap() {
+                est = Some(r);
+                break;
+            }
+        }
+        let r = est.expect("no convergence");
+        let mean = sum / n;
+        assert!(
+            r.q_bar > mean,
+            "q̄ = {} should exceed plain mean {mean}",
+            r.q_bar
+        );
+        // And it should land in the vicinity of the true full rate
+        // (scaled by the unnormalized filter sum ≈ 0.9909).
+        assert!(r.q_bar > 8.0 && r.q_bar < 11.5, "q̄ = {}", r.q_bar);
+    }
+
+    #[test]
+    fn restart_after_convergence_tracks_rate_change() {
+        // Fig. 10: two service-rate phases; the estimator re-converges at
+        // the new level after the switch.
+        let cfg = EstimatorConfig { rel_tol: Some(1e-4), ..Default::default() };
+        let mut e = estimator(cfg);
+        let mut estimates = Vec::new();
+        let mut rng = Xoshiro256pp::new(2);
+        for i in 0..400_000u64 {
+            let base = if i < 200_000 { 20.0 } else { 5.0 };
+            let tc = base + rng.uniform(-0.25, 0.25);
+            if let FeedOutcome::Converged(r) = e.feed(tc, 1000, 8, i).unwrap() {
+                estimates.push((i, r));
+            }
+        }
+        assert!(e.epochs() >= 2, "epochs = {}", e.epochs());
+        let first = estimates.iter().find(|(i, _)| *i < 200_000);
+        let last = estimates.iter().rev().find(|(i, _)| *i >= 250_000);
+        let (_, f) = first.expect("no phase-1 estimate");
+        let (_, l) = last.expect("no phase-2 estimate");
+        assert!((f.q_bar - 20.0).abs() < 2.0, "phase 1 q̄ = {}", f.q_bar);
+        assert!((l.q_bar - 5.0).abs() < 1.0, "phase 2 q̄ = {}", l.q_bar);
+    }
+
+    #[test]
+    fn min_q_updates_guard() {
+        let cfg = EstimatorConfig { min_q_updates: 100, ..Default::default() };
+        let mut e = estimator(cfg);
+        for i in 0..64 + 98 {
+            let out = e.feed(3.0, 1000, 8, i).unwrap();
+            assert!(
+                !matches!(out, FeedOutcome::Converged(_)),
+                "converged too early at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn best_effort_fallback_available_before_convergence() {
+        let mut e = estimator(EstimatorConfig::default());
+        assert!(e.best_effort(1000, 8, 0).is_none());
+        for i in 0..70 {
+            e.feed(4.0, 1000, 8, i).unwrap();
+        }
+        let be = e.best_effort(1000, 8, 70).unwrap();
+        assert!(be.q_bar > 0.0);
+        assert_eq!(be.item_bytes, 8);
+    }
+
+    #[test]
+    fn reset_window_clears_state() {
+        let mut e = estimator(EstimatorConfig::default());
+        for i in 0..100 {
+            e.feed(4.0, 1000, 8, i).unwrap();
+        }
+        e.reset_window();
+        assert_eq!(e.feed(4.0, 1000, 8, 0).unwrap(), FeedOutcome::Accumulating);
+        assert!(e.current_q_bar().is_none());
+    }
+}

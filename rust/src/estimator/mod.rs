@@ -1,0 +1,156 @@
+//! The paper's service-rate heuristic (§IV-B, Algorithm 1).
+//!
+//! Pipeline per instrumented queue end:
+//!
+//! ```text
+//! tc samples ──► sliding window S (w) ──► Gaussian filter r=2 (Eq. 2) ──► S′
+//!         S′ ──► μ̂, σ̂ ──► q = μ̂ + 1.64485·σ̂ (Eq. 3) ──► Welford q̄
+//!   σ(q̄) trace ──► LoG filter (Eq. 4) over window 16 ──► converged?
+//!   converged ──► emit rate = q̄·d̄/T, reset, re-estimate (Fig. 10)
+//! ```
+//!
+//! The numeric step (filter + moments + quantile) runs through a
+//! [`MomentsBackend`]: [`NativeBackend`] is the pure-Rust hot path;
+//! [`backend::XlaBackend`] executes the AOT-compiled Pallas kernel through
+//! PJRT (see `python/compile/kernels/moments.py`), proving the three-layer
+//! stack end to end and backing the backend-ablation bench.
+
+pub mod backend;
+pub mod convergence;
+pub mod filters;
+pub mod heuristic;
+
+pub use backend::{BackendKind, MomentsBackend, NativeBackend};
+pub use convergence::ConvergenceDetector;
+pub use heuristic::{FeedOutcome, ServiceRateEstimator};
+
+/// Tuning knobs for Algorithm 1. Defaults are the paper's values.
+#[derive(Debug, Clone)]
+pub struct EstimatorConfig {
+    /// Sliding-window size `w` over tc samples (the set `S`).
+    pub window: usize,
+    /// Convergence window over the σ(q̄) trace (paper: `w ← 16`).
+    pub conv_window: usize,
+    /// Convergence tolerance on the filtered σ(q̄) spread (paper: 5e-7).
+    pub conv_tol: f64,
+    /// Quantile z-score (paper: 1.64485 — the 95th percentile).
+    pub quantile_z: f64,
+    /// Minimum number of q updates before convergence may be declared.
+    /// Guards the first few σ(q̄) values, which are degenerate (n < 2).
+    pub min_q_updates: u64,
+    /// Treat the convergence tolerance as relative to q̄ when q̄ is large.
+    /// `None` reproduces the paper exactly (absolute tolerance).
+    pub rel_tol: Option<f64>,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig {
+            window: 64,
+            conv_window: 16,
+            conv_tol: 5.0e-7,
+            quantile_z: crate::stats::quantile::Z_95,
+            min_q_updates: 32,
+            rel_tol: None,
+        }
+    }
+}
+
+impl EstimatorConfig {
+    /// Validate invariants (window large enough for the radius-2 filter...).
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.window < 2 * filters::GAUSS_RADIUS + 2 {
+            return Err(crate::SfError::Config(format!(
+                "window {} too small for radius-{} filter",
+                self.window,
+                filters::GAUSS_RADIUS
+            )));
+        }
+        if self.conv_window < 2 * filters::LOG_RADIUS + 2 {
+            return Err(crate::SfError::Config(format!(
+                "conv_window {} too small for radius-{} filter",
+                self.conv_window,
+                filters::LOG_RADIUS
+            )));
+        }
+        if self.conv_tol <= 0.0 {
+            return Err(crate::SfError::Config("conv_tol must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// A converged service-rate estimate for one queue end.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateEstimate {
+    /// The averaged estimated maximum well-behaved transaction count `q̄`
+    /// (items per sampling period).
+    pub q_bar: f64,
+    /// Service rate in bytes/second: `q̄ · d̄ / T`.
+    pub rate_bps: f64,
+    /// Sampling period `T` (ns) in effect for this estimate.
+    pub period_ns: u64,
+    /// Bytes per item `d̄`.
+    pub item_bytes: usize,
+    /// Number of q updates folded into q̄.
+    pub n_q: u64,
+    /// Timestamp (TimeRef ns) at which convergence was declared.
+    pub at_ns: u64,
+}
+
+impl RateEstimate {
+    /// Service rate in MB/s (the paper's reporting unit).
+    pub fn rate_mbps(&self) -> f64 {
+        self.rate_bps / 1.0e6
+    }
+
+    /// Items per second.
+    pub fn items_per_sec(&self) -> f64 {
+        if self.item_bytes == 0 {
+            0.0
+        } else {
+            self.rate_bps / self.item_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_papers() {
+        let c = EstimatorConfig::default();
+        assert_eq!(c.conv_window, 16);
+        assert_eq!(c.conv_tol, 5.0e-7);
+        assert_eq!(c.quantile_z, 1.64485);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_tiny_windows() {
+        let mut c = EstimatorConfig::default();
+        c.window = 4;
+        assert!(c.validate().is_err());
+        let mut c = EstimatorConfig::default();
+        c.conv_window = 2;
+        assert!(c.validate().is_err());
+        let mut c = EstimatorConfig::default();
+        c.conv_tol = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rate_units() {
+        let e = RateEstimate {
+            q_bar: 10.0,
+            rate_bps: 8.0e6,
+            period_ns: 1000,
+            item_bytes: 8,
+            n_q: 100,
+            at_ns: 0,
+        };
+        assert!((e.rate_mbps() - 8.0).abs() < 1e-12);
+        assert!((e.items_per_sec() - 1.0e6).abs() < 1e-6);
+    }
+}

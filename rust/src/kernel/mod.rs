@@ -1,0 +1,231 @@
+//! Compute kernels — the user-visible programming model.
+//!
+//! RaftLib-style: a kernel is a sequential function `run()` invoked
+//! repeatedly by its own thread, reading typed input ports and writing
+//! typed output ports. All state lives inside the kernel ("state
+//! compartmentalization"); the only communication is the streams.
+
+use std::any::Any;
+
+use crate::port::{InputPort, OutputPort};
+use crate::{Result, SfError};
+
+/// What a `run()` invocation tells the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelStatus {
+    /// More work to do — call `run()` again.
+    Continue,
+    /// This kernel is finished; close its output streams.
+    Done,
+    /// Nothing to do right now (inputs empty but open) — re-poll politely.
+    Stall,
+}
+
+/// A compute kernel. Implementations are moved onto their own thread.
+pub trait Kernel: Send {
+    /// Stable name for reports and debugging.
+    fn name(&self) -> &str;
+
+    /// One scheduling quantum. Blocking on ports inside `run()` is fine —
+    /// that is exactly what the instrumentation measures.
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus;
+
+    /// Called once before the first `run()` on the kernel's thread.
+    fn on_start(&mut self, _ctx: &mut KernelContext) {}
+
+    /// Called once after the last `run()` (before outputs close).
+    fn on_stop(&mut self, _ctx: &mut KernelContext) {}
+}
+
+/// The port bundle handed to a kernel. Ports are type-erased; kernels
+/// recover them by index and type.
+#[derive(Default)]
+pub struct KernelContext {
+    inputs: Vec<Box<dyn Any + Send>>,
+    outputs: Vec<Box<dyn Any + Send>>,
+}
+
+impl KernelContext {
+    /// Build from type-erased ports (scheduler-internal).
+    pub fn new(inputs: Vec<Box<dyn Any + Send>>, outputs: Vec<Box<dyn Any + Send>>) -> Self {
+        KernelContext { inputs, outputs }
+    }
+
+    /// Number of input ports.
+    pub fn num_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Number of output ports.
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Typed input port `idx`.
+    pub fn input<T: Send + 'static>(&self, idx: usize) -> Result<&InputPort<T>> {
+        self.inputs
+            .get(idx)
+            .ok_or_else(|| SfError::Port(format!("no input port {idx}")))?
+            .downcast_ref::<InputPort<T>>()
+            .ok_or_else(|| {
+                SfError::Port(format!(
+                    "input port {idx} is not InputPort<{}>",
+                    std::any::type_name::<T>()
+                ))
+            })
+    }
+
+    /// Typed output port `idx`.
+    pub fn output<T: Send + 'static>(&self, idx: usize) -> Result<&OutputPort<T>> {
+        self.outputs
+            .get(idx)
+            .ok_or_else(|| SfError::Port(format!("no output port {idx}")))?
+            .downcast_ref::<OutputPort<T>>()
+            .ok_or_else(|| {
+                SfError::Port(format!(
+                    "output port {idx} is not OutputPort<{}>",
+                    std::any::type_name::<T>()
+                ))
+            })
+    }
+
+    /// All inputs closed and drained — the usual sink-side Done condition.
+    pub fn all_inputs_finished<T: Send + 'static>(&self) -> bool {
+        (0..self.inputs.len()).all(|i| {
+            self.input::<T>(i).map(|p| p.is_finished()).unwrap_or(false)
+        })
+    }
+}
+
+/// A trivial source kernel built from a closure iterator — handy in tests
+/// and examples: emits items until the closure returns `None`.
+pub struct ClosureSource<T, F>
+where
+    T: Send + 'static,
+    F: FnMut() -> Option<T> + Send,
+{
+    name: String,
+    f: F,
+}
+
+impl<T, F> ClosureSource<T, F>
+where
+    T: Send + 'static,
+    F: FnMut() -> Option<T> + Send,
+{
+    pub fn new(name: impl Into<String>, f: F) -> Self {
+        ClosureSource { name: name.into(), f }
+    }
+}
+
+impl<T, F> Kernel for ClosureSource<T, F>
+where
+    T: Send + 'static,
+    F: FnMut() -> Option<T> + Send,
+{
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        match (self.f)() {
+            Some(v) => {
+                if ctx.output::<T>(0).unwrap().push(v).is_err() {
+                    return KernelStatus::Done;
+                }
+                KernelStatus::Continue
+            }
+            None => KernelStatus::Done,
+        }
+    }
+}
+
+/// A trivial sink kernel folding items into a closure.
+pub struct ClosureSink<T, F>
+where
+    T: Send + 'static,
+    F: FnMut(T) + Send,
+{
+    name: String,
+    f: F,
+    _marker: std::marker::PhantomData<fn(T)>,
+}
+
+impl<T, F> ClosureSink<T, F>
+where
+    T: Send + 'static,
+    F: FnMut(T) + Send,
+{
+    pub fn new(name: impl Into<String>, f: F) -> Self {
+        ClosureSink { name: name.into(), f, _marker: std::marker::PhantomData }
+    }
+}
+
+impl<T, F> Kernel for ClosureSink<T, F>
+where
+    T: Send + 'static,
+    F: FnMut(T) + Send,
+{
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        match ctx.input::<T>(0).unwrap().pop() {
+            Some(v) => {
+                (self.f)(v);
+                KernelStatus::Continue
+            }
+            None => KernelStatus::Done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::StreamConfig;
+
+    #[test]
+    fn context_downcasts_ports() {
+        let (q, _h) = crate::queue::instrumented::<u64>(&StreamConfig::default());
+        let ctx = KernelContext::new(
+            vec![Box::new(InputPort::new(q.clone()))],
+            vec![Box::new(OutputPort::new(q))],
+        );
+        assert_eq!(ctx.num_inputs(), 1);
+        assert_eq!(ctx.num_outputs(), 1);
+        ctx.output::<u64>(0).unwrap().push(3).unwrap();
+        assert_eq!(ctx.input::<u64>(0).unwrap().pop(), Some(3));
+    }
+
+    #[test]
+    fn context_type_mismatch_is_error() {
+        let (q, _h) = crate::queue::instrumented::<u64>(&StreamConfig::default());
+        let ctx = KernelContext::new(vec![Box::new(InputPort::new(q))], vec![]);
+        assert!(ctx.input::<u32>(0).is_err());
+        assert!(ctx.input::<u64>(1).is_err());
+        assert!(ctx.output::<u64>(0).is_err());
+    }
+
+    #[test]
+    fn closure_kernels_roundtrip() {
+        let mut n = 0u64;
+        let mut src = ClosureSource::new("src", move || {
+            n += 1;
+            (n <= 3).then_some(n)
+        });
+        let collected = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let c2 = collected.clone();
+        let mut snk = ClosureSink::new("snk", move |v: u64| c2.lock().unwrap().push(v));
+
+        let (q, _h) = crate::queue::instrumented::<u64>(&StreamConfig::default());
+        let mut src_ctx = KernelContext::new(vec![], vec![Box::new(OutputPort::new(q.clone()))]);
+        let mut snk_ctx = KernelContext::new(vec![Box::new(InputPort::new(q.clone()))], vec![]);
+
+        while src.run(&mut src_ctx) == KernelStatus::Continue {}
+        q.close();
+        while snk.run(&mut snk_ctx) == KernelStatus::Continue {}
+        assert_eq!(*collected.lock().unwrap(), vec![1, 2, 3]);
+    }
+}

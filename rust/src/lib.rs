@@ -1,0 +1,81 @@
+//! # streamflow
+//!
+//! A streaming (data-flow) runtime with **online non-blocking service-rate
+//! approximation**, reproducing Beard & Chamberlain, *"Run Time Approximation
+//! of Non-blocking Service Rates for Streaming Systems"* (2015).
+//!
+//! The crate is a full RaftLib-style substrate plus the paper's contribution:
+//!
+//! * [`queue`] — lock-free SPSC streams with byte-level instrumentation
+//!   (non-blocking transaction counters `tc`, blocked booleans, a
+//!   copy-and-zero monitor protocol, and dynamic resize).
+//! * [`kernel`] / [`port`] / [`topology`] / [`scheduler`] — compute kernels
+//!   on independent threads wired into an application graph.
+//! * [`monitor`] — the per-queue monitor thread: sampling-period
+//!   determination (§IV-A) and the service-rate heuristic driver.
+//! * [`estimator`] — Algorithm 1: radius-2 Gaussian filter (Eq. 2), the
+//!   95th-quantile estimate `q = μ + 1.64485σ` (Eq. 3), the streamed mean
+//!   `q̄`, and Laplacian-of-Gaussian convergence detection (Eq. 4) — with a
+//!   pure-Rust backend and an XLA/PJRT backend built from the Pallas
+//!   kernels under `python/`.
+//! * [`queueing`] — the M/M/1 analytics of Eq. 1 (non-blocking observation
+//!   probabilities) and analytic buffer sizing.
+//! * [`stats`] — Welford/Chan streaming moments, Pébay higher moments,
+//!   quantiles and histograms.
+//! * [`timing`] — the calibrated monotonic time reference of [2].
+//! * [`workload`] — the paper's tandem-queue micro-benchmarks (single- and
+//!   dual-phase, exponential/deterministic service processes).
+//! * [`apps`] — the two full applications: dense matrix multiply and
+//!   Rabin–Karp string search.
+//! * [`runtime`] — PJRT artifact loading/execution (HLO text interchange).
+
+pub mod bench;
+pub mod campaign;
+pub mod cli;
+pub mod config;
+pub mod control;
+pub mod error;
+pub mod estimator;
+pub mod kernel;
+pub mod monitor;
+pub mod port;
+pub mod queue;
+pub mod queueing;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod stats;
+pub mod testutil;
+pub mod timing;
+pub mod topology;
+pub mod workload;
+
+pub mod apps;
+pub mod classify;
+
+pub use error::{Result, SfError};
+
+/// Convenience re-exports for application authors.
+pub mod prelude {
+    pub use crate::error::{Result, SfError};
+    pub use crate::estimator::{EstimatorConfig, RateEstimate};
+    pub use crate::kernel::{Kernel, KernelContext, KernelStatus};
+    pub use crate::monitor::MonitorConfig;
+    pub use crate::queue::StreamConfig;
+    pub use crate::scheduler::{RunReport, Scheduler};
+    pub use crate::topology::{KernelId, StreamId, Topology};
+}
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn version_is_set() {
+        assert!(!super::version().is_empty());
+    }
+}

@@ -1,0 +1,275 @@
+//! `streamflow` — the CLI launcher.
+//!
+//! Subcommands:
+//!
+//! * `probe`        — host/timer/artifact diagnostics (Table-III substitute)
+//! * `microbench`   — one tandem-queue micro-benchmark run (§V-A)
+//! * `dualphase`    — one dual-phase run (Fig. 10/14/15 setup)
+//! * `matmul`       — the matrix-multiply application (§V-B1)
+//! * `rabinkarp`    — the Rabin–Karp application (§V-B2)
+//! * `artifacts`    — validate the AOT artifact directory end to end
+
+use streamflow::apps::{matmul, rabin_karp};
+use streamflow::cli::Args;
+use streamflow::config::{MatmulConfig, MicrobenchConfig, RabinKarpConfig};
+use streamflow::monitor::{MonitorConfig, QueueEnd};
+use streamflow::prelude::*;
+use streamflow::rng::dist::DistKind;
+use streamflow::timing::TimeRef;
+use streamflow::workload::{
+    RateControlledConsumer, RateControlledProducer, WorkloadSpec, ITEM_BYTES,
+};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("probe") => cmd_probe(),
+        Some("microbench") => cmd_microbench(&args),
+        Some("dualphase") => cmd_dualphase(&args),
+        Some("matmul") => cmd_matmul(&args),
+        Some("rabinkarp") => cmd_rabinkarp(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "usage: streamflow <probe|microbench|dualphase|matmul|rabinkarp|artifacts> \
+                 [--key value]..."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn report_rates(report: &RunReport, label: &str) {
+    println!("[{label}] wall = {:.3} s", report.wall_secs());
+    for (sid, end, est) in &report.estimates {
+        println!(
+            "  stream {:>2} {:?}: {:.4} MB/s (q̄ = {:.2}, T = {} ns, n_q = {})",
+            sid.0,
+            end,
+            est.rate_mbps(),
+            est.q_bar,
+            est.period_ns,
+            est.n_q
+        );
+    }
+    for (sid, end, est) in &report.best_effort {
+        println!(
+            "  stream {:>2} {:?} (best-effort, unconverged): {:.4} MB/s",
+            sid.0,
+            end,
+            est.rate_mbps()
+        );
+    }
+    for (sid, reason) in &report.failures {
+        println!("  stream {:>2} FAILED: {reason}", sid.0);
+    }
+}
+
+fn cmd_probe() -> i32 {
+    let t = TimeRef::new();
+    println!("streamflow {}", streamflow::version());
+    println!("time reference : {}", if t.is_tsc() { "rdtsc (calibrated)" } else { "clock_gettime" });
+    println!("min latency    : {} ns", t.min_latency_ns());
+    println!("hw threads     : {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0));
+    match streamflow::runtime::Engine::load_dir(&streamflow::runtime::default_artifact_dir()) {
+        Ok(eng) => {
+            println!("pjrt platform  : {}", eng.platform());
+            println!("artifacts      : {:?}", eng.manifest().names());
+        }
+        Err(e) => println!("artifacts      : unavailable ({e})"),
+    }
+    0
+}
+
+fn run_microbench_once(
+    rate_mbps: f64,
+    dist: DistKind,
+    items: u64,
+    capacity: usize,
+    seed: u64,
+) -> streamflow::Result<RunReport> {
+    let mut topo = Topology::new("microbench");
+    // Producer faster than the consumer keeps ρ high (observable reads).
+    let prod_rate = (rate_mbps * 1.6).min(9.0);
+    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
+        "producer",
+        WorkloadSpec::single(dist, prod_rate, seed),
+        items,
+    )));
+    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
+        "consumer",
+        WorkloadSpec::single(dist, rate_mbps, seed ^ 0xABCD),
+    )));
+    topo.connect::<u64>(
+        p,
+        0,
+        c,
+        0,
+        StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
+    )?;
+    Scheduler::new(topo).with_monitoring(MonitorConfig::practical()).run()
+}
+
+fn cmd_microbench(args: &Args) -> i32 {
+    let cfg = MicrobenchConfig::default();
+    let rate = args.get_or("rate", 2.0).unwrap_or(2.0);
+    let items = args.get_or("items", cfg.items).unwrap_or(cfg.items);
+    let dist: String = args.get_or("dist", "exp".to_string()).unwrap();
+    let dist: DistKind = match dist.parse() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match run_microbench_once(rate, dist, items, cfg.capacity, cfg.seed) {
+        Ok(report) => {
+            println!("set consumer service rate: {rate} MB/s ({dist:?})");
+            report_rates(&report, "microbench");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_dualphase(args: &Args) -> i32 {
+    let rate_a = args.get_or("rate-a", 2.66).unwrap_or(2.66);
+    let rate_b = args.get_or("rate-b", 1.0).unwrap_or(1.0);
+    let items = args.get_or("items", 800_000u64).unwrap_or(800_000);
+    let mut topo = Topology::new("dualphase");
+    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
+        "producer",
+        WorkloadSpec::fixed_rate_mbps(8.0),
+        items,
+    )));
+    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
+        "consumer",
+        WorkloadSpec::dual_phase(DistKind::Exponential, rate_a, rate_b, items / 2, 42),
+    )));
+    if topo
+        .connect::<u64>(p, 0, c, 0, StreamConfig::default().with_capacity(1024).with_item_bytes(8))
+        .is_err()
+    {
+        return 1;
+    }
+    match Scheduler::new(topo).with_monitoring(MonitorConfig::practical()).run() {
+        Ok(report) => {
+            println!("phases: {rate_a} MB/s → {rate_b} MB/s at item {}", items / 2);
+            report_rates(&report, "dualphase");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_matmul(args: &Args) -> i32 {
+    let mut cfg = MatmulConfig::default();
+    cfg.n = args.get_or("n", cfg.n).unwrap_or(cfg.n);
+    cfg.dot_kernels = args.get_or("dots", cfg.dot_kernels).unwrap_or(cfg.dot_kernels);
+    cfg.use_xla = args.has_flag("xla");
+    match matmul::run_matmul(&cfg, MonitorConfig::practical()) {
+        Ok(run) => {
+            let checksum: f64 = run.c.iter().map(|&x| x as f64).sum();
+            println!(
+                "matmul {}×{} with {} dot kernels (xla={}), checksum {checksum:.3}",
+                cfg.n, cfg.n, cfg.dot_kernels, cfg.use_xla
+            );
+            report_rates(&run.report, "matmul");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_rabinkarp(args: &Args) -> i32 {
+    let mut cfg = RabinKarpConfig::default();
+    cfg.corpus_bytes = args.get_or("bytes", cfg.corpus_bytes).unwrap_or(cfg.corpus_bytes);
+    cfg.hash_kernels = args.get_or("hash", cfg.hash_kernels).unwrap_or(cfg.hash_kernels);
+    cfg.verify_kernels = args.get_or("verify", cfg.verify_kernels).unwrap_or(cfg.verify_kernels);
+    match rabin_karp::run_rabin_karp(&cfg, MonitorConfig::practical()) {
+        Ok(run) => {
+            println!(
+                "rabin-karp over {} bytes: {} matches of '{}'",
+                cfg.corpus_bytes,
+                run.matches.len(),
+                cfg.pattern
+            );
+            report_rates(&run.report, "rabinkarp");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts(_args: &Args) -> i32 {
+    let dir = streamflow::runtime::default_artifact_dir();
+    let eng = match streamflow::runtime::Engine::load_dir(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("platform {}", eng.platform());
+    let mut failures = 0;
+    for name in eng.manifest().names() {
+        match eng.load_artifact(name) {
+            Ok(exec) => {
+                // Execute with zero inputs of the declared shapes.
+                let specs = exec.spec().inputs.clone();
+                let bufs: Vec<Vec<f32>> =
+                    specs.iter().map(|s| vec![0.0f32; s.elements()]).collect();
+                let dims: Vec<Vec<i64>> = specs
+                    .iter()
+                    .map(|s| s.shape.iter().map(|&d| d as i64).collect())
+                    .collect();
+                let inputs: Vec<(&[f32], &[i64])> = bufs
+                    .iter()
+                    .zip(&dims)
+                    .map(|(b, d)| (b.as_slice(), d.as_slice()))
+                    .collect();
+                match exec.run_f32(&inputs) {
+                    Ok(outs) => println!("  {name}: OK ({} outputs)", outs.len()),
+                    Err(e) => {
+                        println!("  {name}: EXEC FAILED: {e}");
+                        failures += 1;
+                    }
+                }
+            }
+            Err(e) => {
+                println!("  {name}: COMPILE FAILED: {e}");
+                failures += 1;
+            }
+        }
+    }
+    if failures == 0 {
+        0
+    } else {
+        1
+    }
+}
+
+/// Re-exported for QueueEnd usage in report printing.
+#[allow(dead_code)]
+fn _use(end: QueueEnd) -> QueueEnd {
+    end
+}

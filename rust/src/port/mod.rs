@@ -1,0 +1,136 @@
+//! Typed port endpoints binding kernels to streams.
+//!
+//! A kernel sees only its ports; the queue, instrumentation, and the far
+//! end are invisible (the paper's "black-box" kernel view). Ports are
+//! type-erased inside [`crate::kernel::KernelContext`] and recovered with
+//! `ctx.input::<T>(i)` / `ctx.output::<T>(i)`.
+
+use std::sync::Arc;
+
+use crate::queue::{PopResult, PushError, SpscQueue};
+
+/// Consumer end of a stream.
+pub struct InputPort<T: Send> {
+    q: Arc<SpscQueue<T>>,
+}
+
+impl<T: Send> InputPort<T> {
+    pub fn new(q: Arc<SpscQueue<T>>) -> Self {
+        InputPort { q }
+    }
+
+    /// Non-blocking pop.
+    #[inline]
+    pub fn try_pop(&self) -> PopResult<T> {
+        self.q.try_pop()
+    }
+
+    /// Blocking pop; `None` ⇒ upstream closed and drained.
+    #[inline]
+    pub fn pop(&self) -> Option<T> {
+        self.q.pop()
+    }
+
+    /// Items currently waiting.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Nothing waiting right now.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Upstream closed (items may still be in flight).
+    pub fn is_closed(&self) -> bool {
+        self.q.is_closed()
+    }
+
+    /// Closed *and* drained — nothing will ever arrive again.
+    pub fn is_finished(&self) -> bool {
+        self.q.is_closed() && self.q.is_empty()
+    }
+}
+
+/// Producer end of a stream.
+pub struct OutputPort<T: Send> {
+    q: Arc<SpscQueue<T>>,
+}
+
+impl<T: Send> OutputPort<T> {
+    pub fn new(q: Arc<SpscQueue<T>>) -> Self {
+        OutputPort { q }
+    }
+
+    /// Non-blocking push.
+    #[inline]
+    pub fn try_push(&self, v: T) -> Result<(), PushError<T>> {
+        self.q.try_push(v)
+    }
+
+    /// Blocking push (flags `write_blocked` while waiting).
+    #[inline]
+    pub fn push(&self, v: T) -> Result<(), PushError<T>> {
+        self.q.push(v)
+    }
+
+    /// Close the stream — called by the scheduler when the kernel is done,
+    /// or manually for early termination.
+    pub fn close(&self) {
+        self.q.close()
+    }
+
+    /// Downstream queue occupancy (for backpressure-aware kernels).
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True if the stream has no items in flight.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Current capacity.
+    pub fn capacity(&self) -> usize {
+        self.q.capacity()
+    }
+}
+
+/// Type-erased closer so the scheduler can close any output port.
+pub trait PortCloser: Send {
+    fn close_port(&self);
+}
+
+impl<T: Send> PortCloser for OutputPort<T> {
+    fn close_port(&self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::StreamConfig;
+
+    #[test]
+    fn ports_wrap_queue() {
+        let (q, _h) = crate::queue::instrumented::<u32>(&StreamConfig::default());
+        let ip = InputPort::new(q.clone());
+        let op = OutputPort::new(q);
+        op.push(7).unwrap();
+        assert_eq!(ip.len(), 1);
+        assert_eq!(ip.pop(), Some(7));
+        assert!(ip.is_empty());
+        op.close();
+        assert!(ip.is_finished());
+        assert_eq!(ip.pop(), None);
+    }
+
+    #[test]
+    fn closer_is_object_safe() {
+        let (q, _h) = crate::queue::instrumented::<u32>(&StreamConfig::default());
+        let op: Box<dyn PortCloser> = Box::new(OutputPort::new(q.clone()));
+        op.close_port();
+        assert!(q.is_closed());
+    }
+}

@@ -1,0 +1,126 @@
+//! Instrumented lock-free SPSC streams (paper §III).
+//!
+//! Each stream between two kernels is a bounded single-producer /
+//! single-consumer queue carrying:
+//!
+//! * the data itself (segmented ring, allocation amortized per block);
+//! * **instrumentation** the monitor thread samples without locking:
+//!   non-blocking transaction counters `tc` at the head (departures) and
+//!   tail (arrivals), plus "blocked" booleans set when either end had to
+//!   wait ("the only logic … within the queue itself is that necessary to
+//!   tell the monitor thread if it has blocked and that necessary to
+//!   increment an item counter");
+//! * a **dynamically adjustable capacity** — the §III resize trick: growing
+//!   a full outbound queue opens a brief window of guaranteed non-blocking
+//!   writes for the monitor to observe.
+
+pub mod counters;
+pub mod spsc;
+
+pub use counters::{MonitorSample, QueueCounters};
+pub use spsc::{PopResult, PushError, SpscQueue};
+
+use std::sync::Arc;
+
+/// Per-stream configuration.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Capacity in items (paper Fig. 2: the knob that matters).
+    pub capacity: usize,
+    /// Logical bytes per item `d̄` for rate math. `None` ⇒ `size_of::<T>()`.
+    pub item_bytes: Option<usize>,
+    /// Attach a monitor thread to this stream.
+    pub instrument: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { capacity: 1024, item_bytes: None, instrument: true }
+    }
+}
+
+impl StreamConfig {
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        self.capacity = cap;
+        self
+    }
+
+    pub fn with_item_bytes(mut self, d: usize) -> Self {
+        self.item_bytes = Some(d);
+        self
+    }
+
+    pub fn uninstrumented(mut self) -> Self {
+        self.instrument = false;
+        self
+    }
+}
+
+/// Type-erased view of a queue for the monitor thread: counters + capacity
+/// control + occupancy, with no knowledge of the item type.
+pub trait MonitorHandle: Send + Sync {
+    /// The shared instrumentation block.
+    fn counters(&self) -> &QueueCounters;
+    /// Current capacity (items).
+    fn capacity(&self) -> usize;
+    /// Request a new capacity (takes effect immediately for admission).
+    fn set_capacity(&self, cap: usize);
+    /// Items currently in flight.
+    fn len(&self) -> usize;
+    /// True when empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Producer has closed the stream.
+    fn is_closed(&self) -> bool;
+}
+
+impl<T: Send> MonitorHandle for SpscQueue<T> {
+    fn counters(&self) -> &QueueCounters {
+        SpscQueue::counters(self)
+    }
+    fn capacity(&self) -> usize {
+        SpscQueue::capacity(self)
+    }
+    fn set_capacity(&self, cap: usize) {
+        SpscQueue::set_capacity(self, cap)
+    }
+    fn len(&self) -> usize {
+        SpscQueue::len(self)
+    }
+    fn is_closed(&self) -> bool {
+        SpscQueue::is_closed(self)
+    }
+}
+
+/// Build a queue + its monitor view in one step.
+pub fn instrumented<T: Send + 'static>(
+    cfg: &StreamConfig,
+) -> (Arc<SpscQueue<T>>, Arc<dyn MonitorHandle>) {
+    let item_bytes = cfg.item_bytes.unwrap_or(std::mem::size_of::<T>());
+    let q = Arc::new(SpscQueue::<T>::new(cfg.capacity, item_bytes));
+    let h: Arc<dyn MonitorHandle> = q.clone();
+    (q, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_config_builder() {
+        let c = StreamConfig::default().with_capacity(64).with_item_bytes(8).uninstrumented();
+        assert_eq!(c.capacity, 64);
+        assert_eq!(c.item_bytes, Some(8));
+        assert!(!c.instrument);
+    }
+
+    #[test]
+    fn instrumented_builder_defaults_item_bytes() {
+        let (_q, h) = instrumented::<u64>(&StreamConfig::default());
+        assert_eq!(h.counters().item_bytes(), 8);
+        assert_eq!(h.capacity(), 1024);
+        assert!(h.is_empty());
+        assert!(!h.is_closed());
+    }
+}

@@ -1,0 +1,110 @@
+//! M/G/1 and G/G/1 analytics — what the measured rates feed once the
+//! `classify` module has identified the service process (§VII: "quite
+//! useful if the known distribution enables the use of a closed form
+//! modeling solution").
+//!
+//! * Pollaczek–Khinchine for M/G/1 (exact),
+//! * the M/D/1 specialization (deterministic service — the paper's other
+//!   micro-benchmark family),
+//! * Kingman's G/G/1 heavy-traffic approximation for everything else.
+
+/// Mean wait in queue for M/G/1 by Pollaczek–Khinchine:
+/// `Wq = (λ·E[S²]) / (2(1−ρ))` with `E[S²] = σ_s² + (1/μ)²`.
+///
+/// `lambda`, `mu` in items/sec; `cs2` is the squared coefficient of
+/// variation of the service time (0 = deterministic, 1 = exponential).
+pub fn mg1_mean_wait(lambda: f64, mu: f64, cs2: f64) -> f64 {
+    assert!(lambda >= 0.0 && mu > 0.0 && cs2 >= 0.0);
+    let rho = lambda / mu;
+    assert!(rho < 1.0, "M/G/1 requires ρ < 1 (got {rho})");
+    let es2 = (cs2 + 1.0) / (mu * mu); // E[S²] = (cs²+1)/μ²
+    lambda * es2 / (2.0 * (1.0 - rho))
+}
+
+/// Mean number in queue (not in service) for M/G/1 (Little's law).
+pub fn mg1_mean_queue_len(lambda: f64, mu: f64, cs2: f64) -> f64 {
+    lambda * mg1_mean_wait(lambda, mu, cs2)
+}
+
+/// M/D/1 mean wait — the deterministic-service specialization (cs² = 0):
+/// exactly half the M/M/1 wait.
+pub fn md1_mean_wait(lambda: f64, mu: f64) -> f64 {
+    mg1_mean_wait(lambda, mu, 0.0)
+}
+
+/// Kingman's G/G/1 approximation:
+/// `Wq ≈ (ρ/(1−ρ)) · ((ca² + cs²)/2) · (1/μ)`.
+pub fn gg1_kingman_wait(lambda: f64, mu: f64, ca2: f64, cs2: f64) -> f64 {
+    assert!(lambda >= 0.0 && mu > 0.0);
+    let rho = lambda / mu;
+    assert!(rho < 1.0, "G/G/1 requires ρ < 1 (got {rho})");
+    (rho / (1.0 - rho)) * ((ca2 + cs2) / 2.0) / mu
+}
+
+/// Rough buffer sizing from mean queue length: capacity that holds the
+/// steady-state queue plus `headroom_sigmas` standard deviations
+/// (geometric-tail heuristic: σ ≈ L·(1+cv)). Clamped to ≥ 1.
+pub fn suggest_capacity(lambda: f64, mu: f64, cs2: f64, headroom_sigmas: f64) -> usize {
+    if lambda >= mu {
+        // Saturated: capacity only buys burst absorption; pick a large
+        // default proportional to the arrival rate over a 10 ms horizon.
+        return ((lambda * 0.01).ceil() as usize).max(64);
+    }
+    let l = mg1_mean_queue_len(lambda, mu, cs2);
+    let sigma = l * (1.0 + cs2.sqrt());
+    ((l + headroom_sigmas * sigma).ceil() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn md1_is_half_mm1() {
+        let (lambda, mu) = (50.0, 100.0);
+        let mm1 = mg1_mean_wait(lambda, mu, 1.0);
+        let md1 = md1_mean_wait(lambda, mu);
+        assert!((md1 - mm1 / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mm1_matches_closed_form() {
+        // M/M/1: Wq = ρ/(μ−λ).
+        let (lambda, mu) = (60.0, 100.0);
+        let rho: f64 = lambda / mu;
+        let expect = rho / (mu - lambda);
+        assert!((mg1_mean_wait(lambda, mu, 1.0) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kingman_matches_mm1_at_cv1() {
+        // With ca² = cs² = 1 Kingman is exact for M/M/1.
+        let (lambda, mu) = (80.0, 100.0);
+        let rho: f64 = lambda / mu;
+        let expect = rho / (mu - lambda);
+        assert!((gg1_kingman_wait(lambda, mu, 1.0, 1.0) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_grows_with_utilization_and_variance() {
+        assert!(mg1_mean_wait(90.0, 100.0, 1.0) > mg1_mean_wait(50.0, 100.0, 1.0));
+        assert!(mg1_mean_wait(50.0, 100.0, 2.0) > mg1_mean_wait(50.0, 100.0, 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn saturated_mg1_panics() {
+        mg1_mean_wait(100.0, 100.0, 1.0);
+    }
+
+    #[test]
+    fn suggested_capacity_sane() {
+        let c = suggest_capacity(50.0, 100.0, 1.0, 3.0);
+        assert!(c >= 1 && c < 100, "c = {c}");
+        // Higher utilization ⇒ bigger buffer.
+        let c_hot = suggest_capacity(95.0, 100.0, 1.0, 3.0);
+        assert!(c_hot > c);
+        // Saturated path.
+        assert!(suggest_capacity(200.0, 100.0, 1.0, 3.0) >= 64);
+    }
+}

@@ -1,0 +1,172 @@
+//! Queueing analytics (paper §II, Eq. 1; Kleinrock [12]).
+//!
+//! The service rates the monitor estimates feed analytic models like these
+//! — and Eq. 1 itself explains *when* the monitor can expect to observe
+//! non-blocking transactions at all (Fig. 4).
+
+pub mod mg1;
+
+/// M/M/1 (and M/M/1/C) closed forms.
+pub mod mm1 {
+    /// Eq. 1a: `k = ⌈μs·T⌉` — items the server consumes during a period.
+    ///
+    /// `mu_s` in items/sec, `t` in seconds.
+    pub fn k_items(mu_s: f64, t: f64) -> u64 {
+        (mu_s * t).ceil() as u64
+    }
+
+    /// Eq. 1b/1c: probability that an entire sampling period `T` sees only
+    /// non-blocking **reads** — i.e. at least `k` items are available:
+    /// `Pr = ρ^k`.
+    pub fn pr_nonblocking_read(t: f64, rho: f64, mu_s: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&rho), "utilization must be in [0,1]");
+        let k = k_items(mu_s, t);
+        rho.powi(k as i32)
+    }
+
+    /// Eq. 1d: probability of non-blocking **writes** over `T` with output
+    /// queue capacity `c`:
+    /// `Pr = 1 − ρ^(C−k+1)` when `C ≥ μs·T`, else 0.
+    pub fn pr_nonblocking_write(t: f64, c: u64, rho: f64, mu_s: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&rho));
+        if (c as f64) < mu_s * t {
+            return 0.0;
+        }
+        let k = k_items(mu_s, t);
+        let exponent = c.saturating_sub(k).saturating_add(1);
+        1.0 - rho.powi(exponent as i32)
+    }
+
+    /// Steady-state P(N = n) for M/M/1: `(1−ρ)ρⁿ`.
+    pub fn p_n(rho: f64, n: u64) -> f64 {
+        assert!((0.0..1.0).contains(&rho));
+        (1.0 - rho) * rho.powi(n as i32)
+    }
+
+    /// Mean number in system: `ρ/(1−ρ)`.
+    pub fn mean_in_system(rho: f64) -> f64 {
+        assert!((0.0..1.0).contains(&rho));
+        rho / (1.0 - rho)
+    }
+
+    /// Mean waiting time in queue (Little): `ρ/(μ(1−ρ))`.
+    pub fn mean_wait(rho: f64, mu_s: f64) -> f64 {
+        assert!(mu_s > 0.0);
+        mean_in_system(rho) / mu_s
+    }
+
+    /// Blocking (loss) probability of the finite M/M/1/C queue:
+    /// `P_C = (1−ρ)ρ^C / (1−ρ^{C+1})` (ρ ≠ 1), `1/(C+1)` at ρ = 1.
+    pub fn blocking_probability(rho: f64, c: u64) -> f64 {
+        assert!(rho >= 0.0);
+        if (rho - 1.0).abs() < 1e-12 {
+            return 1.0 / (c as f64 + 1.0);
+        }
+        (1.0 - rho) * rho.powi(c as i32) / (1.0 - rho.powi(c as i32 + 1))
+    }
+
+    /// Analytic buffer sizing — the paper's §I motivation: the smallest
+    /// capacity whose blocking probability is below `target`. `None` if
+    /// not reachable below `max_c` (ρ ≥ 1 always saturates).
+    pub fn min_capacity_for_blocking(rho: f64, target: f64, max_c: u64) -> Option<u64> {
+        assert!(target > 0.0 && target < 1.0);
+        (1..=max_c).find(|&c| blocking_probability(rho, c) <= target)
+    }
+}
+
+/// Server utilization ρ = λ/μ, clamped to [0, 1] for stability at the
+/// boundary (measured rates can transiently exceed service rates).
+pub fn utilization(lambda: f64, mu: f64) -> f64 {
+    if mu <= 0.0 {
+        return 1.0;
+    }
+    (lambda / mu).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mm1::*;
+    use super::*;
+
+    #[test]
+    fn k_is_ceiling() {
+        assert_eq!(k_items(1000.0, 0.0101), 11);
+        assert_eq!(k_items(1000.0, 0.01), 10);
+    }
+
+    #[test]
+    fn read_probability_decays_with_t() {
+        // Fig. 4's shape: longer T ⇒ lower probability, faster server ⇒ lower.
+        let rho = 0.9;
+        let p1 = pr_nonblocking_read(0.001, rho, 1.0e5);
+        let p2 = pr_nonblocking_read(0.01, rho, 1.0e5);
+        assert!(p1 > p2, "{p1} !> {p2}");
+        let slow = pr_nonblocking_read(0.001, rho, 1.0e4);
+        assert!(slow > p1);
+    }
+
+    #[test]
+    fn read_probability_bounds() {
+        for &t in &[1e-6, 1e-4, 1e-2] {
+            for &rho in &[0.1, 0.5, 0.99] {
+                let p = pr_nonblocking_read(t, rho, 1.0e6);
+                assert!((0.0..=1.0).contains(&p));
+            }
+        }
+    }
+
+    #[test]
+    fn write_probability_zero_when_capacity_insufficient() {
+        // C < μs·T ⇒ the server MUST block within the period.
+        assert_eq!(pr_nonblocking_write(0.01, 10, 0.5, 1.0e4), 0.0);
+        // C ≥ μs·T ⇒ positive.
+        assert!(pr_nonblocking_write(0.001, 100, 0.5, 1.0e4) > 0.0);
+    }
+
+    #[test]
+    fn write_probability_grows_with_capacity() {
+        let a = pr_nonblocking_write(0.001, 20, 0.9, 1.0e4);
+        let b = pr_nonblocking_write(0.001, 200, 0.9, 1.0e4);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn pn_sums_to_one() {
+        let rho = 0.7;
+        let total: f64 = (0..500).map(|n| p_n(rho, n)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_in_system_matches_sum() {
+        let rho = 0.6;
+        let by_sum: f64 = (0..2000).map(|n| n as f64 * p_n(rho, n)).sum();
+        assert!((mean_in_system(rho) - by_sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blocking_probability_limits() {
+        // Large C ⇒ → 0 for ρ < 1.
+        assert!(blocking_probability(0.5, 60) < 1e-15);
+        // ρ = 1 special case.
+        assert!((blocking_probability(1.0, 9) - 0.1).abs() < 1e-12);
+        // Monotone decreasing in C.
+        assert!(blocking_probability(0.9, 5) > blocking_probability(0.9, 10));
+    }
+
+    #[test]
+    fn buffer_sizing_finds_minimum() {
+        let c = min_capacity_for_blocking(0.8, 0.01, 1000).unwrap();
+        assert!(blocking_probability(0.8, c) <= 0.01);
+        assert!(blocking_probability(0.8, c - 1) > 0.01);
+        // Saturated server can't hit small targets.
+        assert_eq!(min_capacity_for_blocking(1.0, 1e-6, 100), None);
+    }
+
+    #[test]
+    fn utilization_clamps() {
+        assert_eq!(utilization(5.0, 10.0), 0.5);
+        assert_eq!(utilization(20.0, 10.0), 1.0);
+        assert_eq!(utilization(5.0, 0.0), 1.0);
+    }
+}

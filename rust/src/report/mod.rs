@@ -1,0 +1,203 @@
+//! Report emission: CSV rows for every figure/table, plus summary stats.
+//!
+//! Every `benches/figNN_*.rs` target prints its series through this module
+//! — one header + data rows on stdout, and a copy under `target/figures/`
+//! so the paper's plots can be regenerated from files.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use crate::stats::percentile;
+
+/// A rectangular CSV table under construction.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            name: name.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (panics on column-count mismatch — a bench bug).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "table '{}': row width {} != header width {}",
+            self.name,
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: append a row of formatted f64s.
+    pub fn row_f(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format_g(*v)).collect::<Vec<_>>());
+    }
+
+    /// Mixed row helper.
+    pub fn row_mixed(&mut self, cells: &[Cell]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Serialize to CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    /// Print to stdout with a banner, and save under `target/figures/`.
+    pub fn emit(&self) -> std::io::Result<PathBuf> {
+        println!("# --- {} ({} rows) ---", self.name, self.rows.len());
+        print!("{}", self.to_csv());
+        let dir = figures_dir();
+        fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut f = fs::File::create(&path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(path)
+    }
+}
+
+/// Where figure CSVs land (`SF_FIGURES` or `target/figures`).
+pub fn figures_dir() -> PathBuf {
+    std::env::var("SF_FIGURES")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/figures"))
+}
+
+/// A heterogeneous cell.
+#[derive(Debug, Clone)]
+pub enum Cell {
+    U(u64),
+    I(i64),
+    F(f64),
+    S(String),
+    B(bool),
+}
+
+impl std::fmt::Display for Cell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Cell::U(v) => write!(f, "{v}"),
+            Cell::I(v) => write!(f, "{v}"),
+            Cell::F(v) => write!(f, "{}", format_g(*v)),
+            Cell::S(v) => write!(f, "{v}"),
+            Cell::B(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Compact general float formatting (trims trailing zeros, keeps precision).
+pub fn format_g(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if (1e-4..1e9).contains(&a) {
+        let s = format!("{v:.6}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    } else {
+        format!("{v:.6e}")
+    }
+}
+
+/// Five-number-ish summary used across benches: mean, sd, p5, p50, p95.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub p5: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            sd: var.sqrt(),
+            p5: percentile(&sorted, 5.0),
+            p50: percentile(&sorted, 50.0),
+            p95: percentile(&sorted, 95.0),
+            min: sorted[0],
+            max: sorted[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("test_fig", &["x", "y"]);
+        t.row_f(&[1.0, 2.5]);
+        t.row_mixed(&[Cell::U(3), Cell::S("hi".into())]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "x,y\n1,2.5\n3,hi\n");
+        assert_eq!(t.num_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("bad", &["a", "b"]);
+        t.row(&["only one".to_string()]);
+    }
+
+    #[test]
+    fn format_g_cases() {
+        assert_eq!(format_g(0.0), "0");
+        assert_eq!(format_g(1.5), "1.5");
+        assert_eq!(format_g(2.0), "2");
+        assert!(format_g(1.0e-9).contains('e'));
+    }
+
+    #[test]
+    fn summary_of_known_data() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!(s.p5 < s.p50 && s.p50 < s.p95);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Service-time distributions for the micro-benchmark kernels (paper §V-A).
+//!
+//! The paper drives each micro-benchmark kernel with a while-loop that burns
+//! a sampled amount of time per item; "service time distributions are set as
+//! either exponential or deterministic". The dual-phase experiments (§VI)
+//! shift the distribution mean halfway through execution — modeled here by
+//! [`ServiceProcess`] holding one distribution per phase.
+
+use super::Xoshiro256pp;
+
+/// A service-time distribution (nanoseconds per item).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Distribution {
+    /// Every item takes exactly `mean_ns` (M/D/1-style server).
+    Deterministic { mean_ns: f64 },
+    /// Exponentially distributed with mean `mean_ns` (M/M/1-style server).
+    Exponential { mean_ns: f64 },
+    /// Uniform on [lo_ns, hi_ns] — used by classification tests.
+    Uniform { lo_ns: f64, hi_ns: f64 },
+    /// Truncated normal (resampled below 0).
+    Normal { mean_ns: f64, sd_ns: f64 },
+}
+
+impl Distribution {
+    /// Construct from a service *rate* in MB/s and an item size in bytes —
+    /// the paper parameterizes its kernels this way (0.8 → ~8 MB/s, 8-byte
+    /// items).
+    pub fn from_rate_mbps(kind: DistKind, rate_mbps: f64, item_bytes: usize) -> Self {
+        assert!(rate_mbps > 0.0, "rate must be positive");
+        let items_per_sec = rate_mbps * 1.0e6 / item_bytes as f64;
+        let mean_ns = 1.0e9 / items_per_sec;
+        match kind {
+            DistKind::Deterministic => Distribution::Deterministic { mean_ns },
+            DistKind::Exponential => Distribution::Exponential { mean_ns },
+        }
+    }
+
+    /// Mean service time in ns.
+    pub fn mean_ns(&self) -> f64 {
+        match *self {
+            Distribution::Deterministic { mean_ns } => mean_ns,
+            Distribution::Exponential { mean_ns } => mean_ns,
+            Distribution::Uniform { lo_ns, hi_ns } => 0.5 * (lo_ns + hi_ns),
+            Distribution::Normal { mean_ns, .. } => mean_ns,
+        }
+    }
+
+    /// The implied service rate in MB/s for the given item size.
+    pub fn rate_mbps(&self, item_bytes: usize) -> f64 {
+        let items_per_sec = 1.0e9 / self.mean_ns();
+        items_per_sec * item_bytes as f64 / 1.0e6
+    }
+
+    /// Draw one service time (ns).
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256pp, normal_cache: &mut Option<f64>) -> f64 {
+        match *self {
+            Distribution::Deterministic { mean_ns } => mean_ns,
+            Distribution::Exponential { mean_ns } => rng.exponential(mean_ns),
+            Distribution::Uniform { lo_ns, hi_ns } => rng.uniform(lo_ns, hi_ns),
+            Distribution::Normal { mean_ns, sd_ns } => loop {
+                let x = mean_ns + sd_ns * rng.standard_normal(normal_cache);
+                if x >= 0.0 {
+                    break x;
+                }
+            },
+        }
+    }
+
+    /// Theoretical coefficient of variation (σ/μ) — used by `classify`.
+    pub fn cv(&self) -> f64 {
+        match *self {
+            Distribution::Deterministic { .. } => 0.0,
+            Distribution::Exponential { .. } => 1.0,
+            Distribution::Uniform { lo_ns, hi_ns } => {
+                let mean = 0.5 * (lo_ns + hi_ns);
+                let sd = (hi_ns - lo_ns) / (12.0f64).sqrt();
+                if mean == 0.0 {
+                    0.0
+                } else {
+                    sd / mean
+                }
+            }
+            Distribution::Normal { mean_ns, sd_ns } => {
+                if mean_ns == 0.0 {
+                    0.0
+                } else {
+                    sd_ns / mean_ns
+                }
+            }
+        }
+    }
+}
+
+/// Distribution family selector used by CLI/config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistKind {
+    Deterministic,
+    Exponential,
+}
+
+impl std::str::FromStr for DistKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "deterministic" | "det" | "d" => Ok(DistKind::Deterministic),
+            "exponential" | "exp" | "m" => Ok(DistKind::Exponential),
+            other => Err(format!("unknown distribution kind: {other}")),
+        }
+    }
+}
+
+/// A possibly phase-shifting service process.
+///
+/// Single-phase processes have one segment; the paper's dual-phase
+/// micro-benchmark "moves the mean of the distribution halfway through
+/// execution ... with reference to the number of data elements sent".
+#[derive(Debug, Clone)]
+pub struct ServiceProcess {
+    /// (items-processed threshold at which the phase *ends*, distribution).
+    /// The final phase's threshold is ignored (runs to completion).
+    phases: Vec<(u64, Distribution)>,
+    rng: Xoshiro256pp,
+    normal_cache: Option<f64>,
+    items_done: u64,
+}
+
+impl ServiceProcess {
+    /// Single-phase process.
+    pub fn single(dist: Distribution, seed: u64) -> Self {
+        ServiceProcess {
+            phases: vec![(u64::MAX, dist)],
+            rng: Xoshiro256pp::new(seed),
+            normal_cache: None,
+            items_done: 0,
+        }
+    }
+
+    /// Dual-phase process: `first` until `switch_at_items`, then `second`.
+    pub fn dual(first: Distribution, second: Distribution, switch_at_items: u64, seed: u64) -> Self {
+        ServiceProcess {
+            phases: vec![(switch_at_items, first), (u64::MAX, second)],
+            rng: Xoshiro256pp::new(seed),
+            normal_cache: None,
+            items_done: 0,
+        }
+    }
+
+    /// Arbitrary phase schedule.
+    pub fn phased(phases: Vec<(u64, Distribution)>, seed: u64) -> Self {
+        assert!(!phases.is_empty());
+        ServiceProcess { phases, rng: Xoshiro256pp::new(seed), normal_cache: None, items_done: 0 }
+    }
+
+    /// The distribution currently in effect.
+    pub fn current(&self) -> &Distribution {
+        let done = self.items_done;
+        for (limit, d) in &self.phases {
+            if done < *limit {
+                return d;
+            }
+        }
+        &self.phases.last().unwrap().1
+    }
+
+    /// Index of the phase currently in effect.
+    pub fn phase_index(&self) -> usize {
+        let done = self.items_done;
+        for (i, (limit, _)) in self.phases.iter().enumerate() {
+            if done < *limit {
+                return i;
+            }
+        }
+        self.phases.len() - 1
+    }
+
+    /// Draw the service time for the next item and advance the item count.
+    #[inline]
+    pub fn next_service_ns(&mut self) -> f64 {
+        let done = self.items_done;
+        self.items_done += 1;
+        let mut dist = &self.phases.last().unwrap().1;
+        for (limit, d) in &self.phases {
+            if done < *limit {
+                dist = d;
+                break;
+            }
+        }
+        dist.clone().sample(&mut self.rng, &mut self.normal_cache)
+    }
+
+    /// Items drawn so far.
+    pub fn items_done(&self) -> u64 {
+        self.items_done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_round_trips() {
+        let d = Distribution::from_rate_mbps(DistKind::Deterministic, 4.0, 8);
+        assert!((d.rate_mbps(8) - 4.0).abs() < 1e-9);
+        // 4 MB/s over 8-byte items = 500k items/s = 2000 ns/item.
+        assert!((d.mean_ns() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_is_constant() {
+        let mut p = ServiceProcess::single(Distribution::Deterministic { mean_ns: 123.0 }, 1);
+        for _ in 0..100 {
+            assert_eq!(p.next_service_ns(), 123.0);
+        }
+    }
+
+    #[test]
+    fn exponential_sample_mean() {
+        let mut p =
+            ServiceProcess::single(Distribution::Exponential { mean_ns: 500.0 }, 99);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.next_service_ns()).sum::<f64>() / n as f64;
+        assert!((mean - 500.0).abs() < 10.0, "mean = {mean}");
+    }
+
+    #[test]
+    fn dual_phase_switches() {
+        let a = Distribution::Deterministic { mean_ns: 100.0 };
+        let b = Distribution::Deterministic { mean_ns: 900.0 };
+        let mut p = ServiceProcess::dual(a, b, 50, 3);
+        for i in 0..100 {
+            let s = p.next_service_ns();
+            if i < 50 {
+                assert_eq!(s, 100.0, "item {i}");
+                assert_eq!(p.phase_index(), if i < 49 { 0 } else { 1 });
+            } else {
+                assert_eq!(s, 900.0, "item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cv_matches_family() {
+        assert_eq!(Distribution::Deterministic { mean_ns: 5.0 }.cv(), 0.0);
+        assert_eq!(Distribution::Exponential { mean_ns: 5.0 }.cv(), 1.0);
+        let u = Distribution::Uniform { lo_ns: 0.0, hi_ns: 10.0 };
+        assert!((u.cv() - 1.0 / (3.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normal_truncation_nonnegative() {
+        let d = Distribution::Normal { mean_ns: 10.0, sd_ns: 50.0 };
+        let mut rng = Xoshiro256pp::new(5);
+        let mut cache = None;
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng, &mut cache) >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Pseudo-random numbers and service-process distributions.
+//!
+//! Substitute for the GSL random-number source the paper uses to drive its
+//! micro-benchmarks (§V-A): a xoshiro256++ generator (public-domain
+//! reference algorithm by Blackman & Vigna) seeded through SplitMix64, plus
+//! the service-time distributions the paper evaluates — exponential (an
+//! M/M/1-style service process) and deterministic (M/D/1-style) — and the
+//! bimodal/dual-phase modulation used for the phase-detection experiments.
+
+pub mod dist;
+
+pub use dist::{Distribution, ServiceProcess};
+
+/// xoshiro256++ 1.0 — fast, high-quality, 256-bit state.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// SplitMix64 — used only to expand a 64-bit seed into xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 (any seed, including 0, yields a valid state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256pp { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform u32 in [0, bound) via Lemire's method.
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let x = self.next_u64() as u32 as u64;
+        ((x * bound as u64) >> 32) as u32
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (both variates used alternately).
+    pub fn standard_normal(&mut self, cache: &mut Option<f64>) -> f64 {
+        if let Some(z) = cache.take() {
+            return z;
+        }
+        let u1 = self.next_f64_open();
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        *cache = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Exponential with the given mean, via inverse CDF.
+    #[inline]
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * self.next_f64_open().ln()
+    }
+
+    /// Jump function: advances the stream by 2^128 steps — used to hand
+    /// non-overlapping substreams to independent kernels/threads.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] =
+            [0x180EC6D33CFD0ABA, 0xD5A61266F0C9392C, 0xA9582618E03FC9AA, 0x39ABDC4529B1661C];
+        let mut s = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// Split off an independent substream: the child continues the current
+    /// sequence while `self` jumps 2^128 steps ahead — so parent and child
+    /// never overlap (for < 2^128 draws each).
+    pub fn split(&mut self) -> Self {
+        let child = self.clone();
+        self.jump();
+        child
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Xoshiro256pp::new(42);
+        let mut b = Xoshiro256pp::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256pp::new(1);
+        let mut b = Xoshiro256pp::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Xoshiro256pp::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.next_f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Xoshiro256pp::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean = {mean}");
+    }
+
+    #[test]
+    fn exponential_mean_matches() {
+        let mut r = Xoshiro256pp::new(13);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean = {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::new(17);
+        let mut cache = None;
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.standard_normal(&mut cache)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+        assert!(mean.abs() < 0.02, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var = {var}");
+    }
+
+    #[test]
+    fn bounded_is_bounded() {
+        let mut r = Xoshiro256pp::new(19);
+        for _ in 0..10_000 {
+            assert!(r.next_bounded(17) < 17);
+        }
+    }
+
+    #[test]
+    fn jump_produces_disjoint_stream() {
+        let mut a = Xoshiro256pp::new(23);
+        let b0: Vec<u64> = {
+            let mut b = a.split();
+            (0..32).map(|_| b.next_u64()).collect()
+        };
+        let a0: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        assert_ne!(a0, b0);
+    }
+}

@@ -1,0 +1,170 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime. Shapes are validated at artifact-load and at every
+//! execute, so drift between the layers fails loudly.
+
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::{Result, SfError};
+
+/// One tensor's shape/dtype as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| SfError::Artifact("tensor spec missing 'shape'".into()))?
+            .iter()
+            .map(|d| {
+                d.as_u64()
+                    .map(|v| v as usize)
+                    .ok_or_else(|| SfError::Artifact("non-integer dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| SfError::Artifact("tensor spec missing 'dtype'".into()))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            SfError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first?): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| SfError::Artifact("manifest missing 'version'".into()))?;
+        if version != 1 {
+            return Err(SfError::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| SfError::Artifact("manifest missing 'artifacts'".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| SfError::Artifact("artifact missing 'name'".into()))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| SfError::Artifact(format!("artifact '{name}' missing 'file'")))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| SfError::Artifact(format!("artifact '{name}' missing inputs")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .ok_or_else(|| SfError::Artifact(format!("artifact '{name}' missing outputs")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs });
+        }
+        Ok(Manifest { version, artifacts })
+    }
+
+    /// Lookup by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "estimator_b1_w64", "file": "estimator_b1_w64.hlo.txt",
+         "inputs": [{"shape": [1, 64], "dtype": "float32"}],
+         "outputs": [{"shape": [1], "dtype": "float32"},
+                      {"shape": [1], "dtype": "float32"},
+                      {"shape": [1], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let a = m.get("estimator_b1_w64").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![1, 64]);
+        assert_eq!(a.inputs[0].elements(), 64);
+        assert_eq!(a.outputs.len(), 3);
+        assert_eq!(m.names(), vec!["estimator_b1_w64"]);
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let m = Manifest::parse(r#"{"version": 2, "artifacts": []}"#);
+        assert!(m.is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": []}"#).is_err());
+        assert!(Manifest::parse(r#"{"version":1,"artifacts":[{"name":"x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! PJRT runtime: load and execute AOT-compiled HLO artifacts.
+//!
+//! The build-time Python stack (`python/compile/`) lowers the L2 JAX graphs
+//! (which call the L1 Pallas kernels) to **HLO text** under `artifacts/`,
+//! described by `manifest.json`. This module wraps the `xla` crate:
+//! text → `HloModuleProto` → compile once on the CPU PJRT client → execute
+//! from the Rust hot path. Python never runs at request time.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::{Result, SfError};
+
+/// A PJRT client plus the artifact manifest of a directory.
+pub struct Engine {
+    client: Rc<xla::PjRtClient>,
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load `manifest.json` from `dir` and bring up the CPU PJRT client.
+    pub fn load_dir(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client: Rc::new(client), manifest, dir: dir.to_path_buf() })
+    }
+
+    /// Platform string (e.g. "cpu") for reports.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest read at load time.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile one artifact by manifest name.
+    pub fn load_artifact(&self, name: &str) -> Result<ArtifactExec> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| SfError::Artifact(format!("artifact '{name}' not in manifest")))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(ArtifactExec { exe, spec, _client: self.client.clone() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct ArtifactExec {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+    /// Keep the client alive as long as the executable.
+    _client: Rc<xla::PjRtClient>,
+}
+
+impl ArtifactExec {
+    /// The manifest entry this was compiled from.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with f32 inputs `(data, dims)`; returns flattened f32
+    /// outputs in manifest order.
+    ///
+    /// Validates shapes against the manifest before touching PJRT so a
+    /// mismatched artifact fails with a readable error instead of an XLA
+    /// abort.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(SfError::Artifact(format!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (idx, ((data, dims), spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            let want: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            if *dims != want.as_slice() {
+                return Err(SfError::Artifact(format!(
+                    "artifact '{}' input {idx}: shape {:?} != manifest {:?}",
+                    self.spec.name, dims, want
+                )));
+            }
+            let expect_len: i64 = dims.iter().product();
+            if data.len() as i64 != expect_len {
+                return Err(SfError::Artifact(format!(
+                    "artifact '{}' input {idx}: {} elements for shape {:?}",
+                    self.spec.name,
+                    data.len(),
+                    dims
+                )));
+            }
+            literals.push(xla::Literal::vec1(data).reshape(dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| SfError::Artifact("empty execution result".into()))?;
+        let lit = first.to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the result is always a tuple.
+        let parts = lit.to_tuple()?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outs.push(p.to_vec::<f32>()?);
+        }
+        if outs.len() != self.spec.outputs.len() {
+            return Err(SfError::Artifact(format!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+}
+
+/// A cell for PJRT objects that must live entirely on one thread.
+///
+/// The `xla` crate's client/executable types are `!Send` (raw PJRT
+/// pointers). Kernels, however, are moved onto their scheduler thread
+/// *before* running. `ThreadBound` lets a kernel struct cross the spawn
+/// boundary **empty** and lazily create the PJRT object on its own thread:
+/// the value is only ever created, used, and dropped on the thread that
+/// first initialized it (checked at runtime).
+pub struct ThreadBound<T> {
+    inner: Option<T>,
+    owner: Option<std::thread::ThreadId>,
+}
+
+// SAFETY: `inner` is None whenever the value crosses threads (enforced by
+// the owner check on every access and on drop), so the !Send payload never
+// actually migrates.
+unsafe impl<T> Send for ThreadBound<T> {}
+
+impl<T> Default for ThreadBound<T> {
+    fn default() -> Self {
+        ThreadBound { inner: None, owner: None }
+    }
+}
+
+impl<T> ThreadBound<T> {
+    /// An empty (sendable) cell.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Get the value, initializing it on the current thread on first use.
+    /// Panics if accessed from a different thread than the initializer.
+    pub fn get_or_try_init(
+        &mut self,
+        f: impl FnOnce() -> Result<T>,
+    ) -> Result<&mut T> {
+        let me = std::thread::current().id();
+        match self.owner {
+            None => {
+                self.inner = Some(f()?);
+                self.owner = Some(me);
+            }
+            Some(owner) => {
+                assert_eq!(owner, me, "ThreadBound accessed from a foreign thread");
+            }
+        }
+        Ok(self.inner.as_mut().expect("just initialized"))
+    }
+
+    /// True once initialized.
+    pub fn is_init(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+impl<T> Drop for ThreadBound<T> {
+    fn drop(&mut self) {
+        if let (Some(owner), true) = (self.owner, self.inner.is_some()) {
+            assert_eq!(
+                owner,
+                std::thread::current().id(),
+                "ThreadBound with live value dropped on a foreign thread"
+            );
+        }
+    }
+}
+
+/// Default artifact directory: `$SF_ARTIFACTS`, else the first of
+/// `./artifacts` and `../artifacts` that holds a manifest (cargo runs
+/// tests/benches from the package dir, binaries usually from the
+/// workspace root — support both).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("SF_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration coverage lives in `rust/tests/runtime_artifacts.rs`
+    /// (needs `make artifacts` to have run). Here: pure failure paths.
+    #[test]
+    fn missing_dir_is_artifact_error() {
+        let e = match Engine::load_dir(Path::new("/nonexistent/sf_test")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing dir"),
+        };
+        match e {
+            SfError::Artifact(_) | SfError::Io(_) => {}
+            other => panic!("unexpected error: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Fixed-bin histogram for the report layer (Fig. 13 reproduction).
+
+/// A fixed-range, fixed-width-bin histogram with under/overflow tracking.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    /// Histogram over [lo, hi) with `nbins` equal-width bins.
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    /// Insert one observation.
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let w = (self.hi - self.lo) / self.bins.len() as f64;
+            let idx = ((x - self.lo) / w) as usize;
+            let idx = idx.min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    /// Total observations (including under/overflow).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// (bin_center, count) pairs.
+    pub fn bins(&self) -> Vec<(f64, u64)> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + w * (i as f64 + 0.5), c))
+            .collect()
+    }
+
+    /// (bin_center, probability) pairs — Fig. 13's y-axis.
+    pub fn probabilities(&self) -> Vec<(f64, f64)> {
+        let total = self.count.max(1) as f64;
+        self.bins().into_iter().map(|(c, n)| (c, n as f64 / total)).collect()
+    }
+
+    /// Fraction of observations with |x| <= bound (in-range mass helper:
+    /// "the majority of the results are within 20% of nominal").
+    pub fn mass_within(&self, bound: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let mut inside = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            let center = self.lo + w * (i as f64 + 0.5);
+            if center.abs() <= bound {
+                inside += c;
+            }
+        }
+        inside as f64 / self.count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_flows() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [-1.0, 0.0, 0.5, 5.0, 9.99, 10.0, 42.0] {
+            h.add(x);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 2);
+        let bins = h.bins();
+        assert_eq!(bins[0].1, 2); // 0.0 and 0.5
+        assert_eq!(bins[5].1, 1); // 5.0
+        assert_eq!(bins[9].1, 1); // 9.99
+    }
+
+    #[test]
+    fn probabilities_sum_to_in_range_mass() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        for x in [-0.5, 0.0, 0.5, 2.0] {
+            h.add(x);
+        }
+        let total: f64 = h.probabilities().iter().map(|(_, p)| p).sum();
+        assert!((total - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mass_within_bound() {
+        let mut h = Histogram::new(-100.0, 100.0, 200);
+        for i in -50..=50 {
+            h.add(i as f64);
+        }
+        let m = h.mass_within(20.0);
+        assert!(m > 0.35 && m < 0.45, "m = {m}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Streaming statistics.
+//!
+//! Algorithm 1 "presumes there is an implementation of a streaming mean and
+//! standard deviation (see Welford [22] and Chan et al. [6])" — that is
+//! [`Welford`]. The §VII future-work extension (method-of-moments
+//! distribution selection) needs streamed higher moments — that is
+//! [`pebay::Moments`] (Pébay [19]). [`quantile`] and [`histogram`] back the
+//! report/bench layers.
+
+pub mod histogram;
+pub mod pebay;
+pub mod quantile;
+pub mod welford;
+
+pub use histogram::Histogram;
+pub use pebay::Moments;
+pub use quantile::{normal_quantile, percentile};
+pub use welford::Welford;

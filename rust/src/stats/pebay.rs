@@ -1,0 +1,202 @@
+//! Pébay one-pass arbitrary-order moments [19].
+//!
+//! §VII: "Efficient methods also exist for streaming computation of higher
+//! moments" — skewness and kurtosis feed the method-of-moments distribution
+//! classifier (`classify`), enabling online selection of a closed-form
+//! queueing model. Update formulas from SAND2008-6212 (single-observation
+//! case), which generalize Welford to M3/M4.
+
+/// Streaming central moments up to order 4.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    m3: f64,
+    m4: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Moments::default()
+    }
+
+    /// Absorb one observation.
+    #[inline]
+    pub fn update(&mut self, x: f64) {
+        let n1 = self.n as f64;
+        self.n += 1;
+        let n = self.n as f64;
+        let delta = x - self.mean;
+        let delta_n = delta / n;
+        let delta_n2 = delta_n * delta_n;
+        let term1 = delta * delta_n * n1;
+        self.mean += delta_n;
+        self.m4 += term1 * delta_n2 * (n * n - 3.0 * n + 3.0)
+            + 6.0 * delta_n2 * self.m2
+            - 4.0 * delta_n * self.m3;
+        self.m3 += term1 * delta_n * (n - 2.0) - 3.0 * delta_n * self.m2;
+        self.m2 += term1;
+    }
+
+    pub fn reset(&mut self) {
+        *self = Moments::default();
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (ddof = 1).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation σ/μ — the classifier's first discriminator
+    /// (0 ⇒ deterministic, 1 ⇒ exponential).
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std_dev() / self.mean
+        }
+    }
+
+    /// Sample skewness g1 = √n·M3 / M2^{3/2}.
+    pub fn skewness(&self) -> f64 {
+        if self.n < 3 || self.m2 == 0.0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        (n.sqrt() * self.m3) / self.m2.powf(1.5)
+    }
+
+    /// Excess kurtosis g2 = n·M4 / M2² − 3.
+    pub fn kurtosis_excess(&self) -> f64 {
+        if self.n < 4 || self.m2 == 0.0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        (n * self.m4) / (self.m2 * self.m2) - 3.0
+    }
+
+    /// Pairwise merge (SAND2008-6212 eqs. 1.5–2.x), exact.
+    pub fn merge(&self, o: &Moments) -> Moments {
+        if self.n == 0 {
+            return *o;
+        }
+        if o.n == 0 {
+            return *self;
+        }
+        let (na, nb) = (self.n as f64, o.n as f64);
+        let n = na + nb;
+        let delta = o.mean - self.mean;
+        let delta2 = delta * delta;
+        let delta3 = delta2 * delta;
+        let delta4 = delta2 * delta2;
+        let mean = self.mean + delta * nb / n;
+        let m2 = self.m2 + o.m2 + delta2 * na * nb / n;
+        let m3 = self.m3
+            + o.m3
+            + delta3 * na * nb * (na - nb) / (n * n)
+            + 3.0 * delta * (na * o.m2 - nb * self.m2) / n;
+        let m4 = self.m4
+            + o.m4
+            + delta4 * na * nb * (na * na - na * nb + nb * nb) / (n * n * n)
+            + 6.0 * delta2 * (na * na * o.m2 + nb * nb * self.m2) / (n * n)
+            + 4.0 * delta * (na * o.m3 - nb * self.m3) / n;
+        Moments { n: self.n + o.n, mean, m2, m3, m4 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn naive(xs: &[f64]) -> (f64, f64, f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let m2 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>();
+        let m3 = xs.iter().map(|x| (x - mean).powi(3)).sum::<f64>();
+        let m4 = xs.iter().map(|x| (x - mean).powi(4)).sum::<f64>();
+        (mean, m2, m3, m4)
+    }
+
+    #[test]
+    fn matches_naive_moments() {
+        let mut rng = Xoshiro256pp::new(4);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.exponential(2.0)).collect();
+        let mut m = Moments::new();
+        xs.iter().for_each(|&x| m.update(x));
+        let (mean, m2, m3, m4) = naive(&xs);
+        assert!((m.mean - mean).abs() < 1e-9);
+        assert!((m.m2 - m2).abs() / m2 < 1e-9);
+        assert!((m.m3 - m3).abs() / m3.abs() < 1e-7);
+        assert!((m.m4 - m4).abs() / m4 < 1e-7);
+    }
+
+    #[test]
+    fn exponential_signature() {
+        // Exponential: cv = 1, skew = 2, excess kurtosis = 6.
+        let mut rng = Xoshiro256pp::new(5);
+        let mut m = Moments::new();
+        for _ in 0..400_000 {
+            m.update(rng.exponential(3.0));
+        }
+        assert!((m.cv() - 1.0).abs() < 0.02, "cv = {}", m.cv());
+        assert!((m.skewness() - 2.0).abs() < 0.15, "skew = {}", m.skewness());
+        assert!((m.kurtosis_excess() - 6.0).abs() < 1.0, "kurt = {}", m.kurtosis_excess());
+    }
+
+    #[test]
+    fn uniform_signature() {
+        // Uniform: skew = 0, excess kurtosis = -1.2.
+        let mut rng = Xoshiro256pp::new(6);
+        let mut m = Moments::new();
+        for _ in 0..200_000 {
+            m.update(rng.uniform(0.0, 1.0));
+        }
+        assert!(m.skewness().abs() < 0.03);
+        assert!((m.kurtosis_excess() + 1.2).abs() < 0.05);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Xoshiro256pp::new(7);
+        let xs: Vec<f64> = (0..3000).map(|_| rng.exponential(1.0)).collect();
+        let mut all = Moments::new();
+        xs.iter().for_each(|&x| all.update(x));
+        let (mut a, mut b) = (Moments::new(), Moments::new());
+        xs[..1111].iter().for_each(|&x| a.update(x));
+        xs[1111..].iter().for_each(|&x| b.update(x));
+        let m = a.merge(&b);
+        assert!((m.mean() - all.mean()).abs() < 1e-9);
+        assert!((m.skewness() - all.skewness()).abs() < 1e-7);
+        assert!((m.kurtosis_excess() - all.kurtosis_excess()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_stream() {
+        let mut m = Moments::new();
+        for _ in 0..100 {
+            m.update(7.5);
+        }
+        assert_eq!(m.mean(), 7.5);
+        assert_eq!(m.variance(), 0.0);
+        assert_eq!(m.skewness(), 0.0);
+        assert_eq!(m.kurtosis_excess(), 0.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Quantile helpers: the Eq.-3 normal quantile and empirical percentiles.
+
+/// The paper's Eq. 3 z-score for the 95th percentile, locked to the text.
+pub const Z_95: f64 = 1.64485;
+
+/// Parametric normal quantile: `μ + z_p·σ` with z from Acklam's inverse-CDF
+/// approximation (|rel err| < 1.15e-9). `NQuantileFunction(μ, σ, p)` in
+/// Algorithm 1 (the heuristic itself always calls it with p = 0.95 and the
+/// hard-coded 1.64485; this general form backs tests and the classifier).
+pub fn normal_quantile(mu: f64, sigma: f64, p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0, "p in (0,1) required: {p}");
+    mu + sigma * standard_normal_inv_cdf(p)
+}
+
+/// Acklam's rational approximation to Φ⁻¹.
+pub fn standard_normal_inv_cdf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let q;
+    if p < P_LOW {
+        let r = (-2.0 * p.ln()).sqrt();
+        q = (((((C[0] * r + C[1]) * r + C[2]) * r + C[3]) * r + C[4]) * r + C[5])
+            / ((((D[0] * r + D[1]) * r + D[2]) * r + D[3]) * r + 1.0);
+    } else if p <= 1.0 - P_LOW {
+        let r = p - 0.5;
+        let s = r * r;
+        q = (((((A[0] * s + A[1]) * s + A[2]) * s + A[3]) * s + A[4]) * s + A[5]) * r
+            / (((((B[0] * s + B[1]) * s + B[2]) * s + B[3]) * s + B[4]) * s + 1.0);
+    } else {
+        let r = (-2.0 * (1.0 - p).ln()).sqrt();
+        q = -(((((C[0] * r + C[1]) * r + C[2]) * r + C[3]) * r + C[4]) * r + C[5])
+            / ((((D[0] * r + D[1]) * r + D[2]) * r + D[3]) * r + 1.0);
+    }
+    q
+}
+
+/// Empirical percentile (linear interpolation, the "R-7" definition).
+/// `p` in [0, 100]. Sorts a copy — use for reporting, not hot paths.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Empirical percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_cdf_key_points() {
+        assert!((standard_normal_inv_cdf(0.5)).abs() < 1e-9);
+        assert!((standard_normal_inv_cdf(0.95) - 1.6448536269514722).abs() < 1e-6);
+        assert!((standard_normal_inv_cdf(0.975) - 1.959963984540054).abs() < 1e-6);
+        assert!((standard_normal_inv_cdf(0.05) + 1.6448536269514722).abs() < 1e-6);
+    }
+
+    #[test]
+    fn paper_z_is_the_95th() {
+        // The hard-coded 1.64485 is the 95th-percentile z (to 5 decimals).
+        assert!((Z_95 - standard_normal_inv_cdf(0.95)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn normal_quantile_affine() {
+        let q = normal_quantile(10.0, 2.0, 0.95);
+        assert!((q - (10.0 + 2.0 * 1.6448536269514722)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 95.0), 9.5);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_empty_panics() {
+        percentile(&[], 50.0);
+    }
+}

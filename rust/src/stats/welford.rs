@@ -1,0 +1,178 @@
+//! Welford's streaming mean/variance [22] with Chan et al. merging [6].
+//!
+//! This is the `updateStats()` / `getMeanQ()` / `resetStats()` machinery of
+//! Algorithm 1: the heuristic streams successive quantile estimates `q`
+//! through one of these and reads back the running mean `q̄` and the
+//! standard *error* of that mean (whose trace drives convergence, §IV-B).
+
+/// Numerically stable streaming mean and variance.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Welford::default()
+    }
+
+    /// `updateStats(x)`.
+    #[inline]
+    pub fn update(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        let delta2 = x - self.mean;
+        self.m2 += delta * delta2;
+    }
+
+    /// `resetStats()`.
+    pub fn reset(&mut self) {
+        *self = Welford::default();
+    }
+
+    /// Number of samples absorbed.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean (`getMeanQ()` when fed `q` values). 0 when empty.
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample (ddof = 1) variance; 0 for n < 2.
+    #[inline]
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Sample standard deviation.
+    #[inline]
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean — the "σ of q̄" whose decay Algorithm 1
+    /// watches for convergence.
+    #[inline]
+    pub fn std_error(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std_dev() / (self.n as f64).sqrt()
+        }
+    }
+
+    /// Chan et al. [6] pairwise merge: combine two accumulators exactly.
+    pub fn merge(&self, other: &Welford) -> Welford {
+        if self.n == 0 {
+            return *other;
+        }
+        if other.n == 0 {
+            return *self;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        Welford { n, mean, m2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn naive(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+        (mean, var)
+    }
+
+    #[test]
+    fn matches_naive_two_pass() {
+        let mut rng = Xoshiro256pp::new(1);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.uniform(-100.0, 100.0)).collect();
+        let mut w = Welford::new();
+        xs.iter().for_each(|&x| w.update(x));
+        let (mean, var) = naive(&xs);
+        assert!((w.mean() - mean).abs() < 1e-9);
+        assert!((w.variance() - var).abs() / var < 1e-9);
+    }
+
+    #[test]
+    fn catastrophic_cancellation_case() {
+        // Large offset, small spread — the case the textbook formula loses.
+        let base = 1.0e9;
+        let xs: Vec<f64> = (0..1000).map(|i| base + (i % 7) as f64).collect();
+        let mut w = Welford::new();
+        xs.iter().for_each(|&x| w.update(x));
+        let (_, var) = naive(&xs);
+        assert!((w.variance() - var).abs() / var < 1e-6, "{} vs {}", w.variance(), var);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Xoshiro256pp::new(2);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.exponential(5.0)).collect();
+        let mut all = Welford::new();
+        xs.iter().for_each(|&x| all.update(x));
+        let (mut a, mut b) = (Welford::new(), Welford::new());
+        xs[..700].iter().for_each(|&x| a.update(x));
+        xs[700..].iter().for_each(|&x| b.update(x));
+        let m = a.merge(&b);
+        assert_eq!(m.count(), all.count());
+        assert!((m.mean() - all.mean()).abs() < 1e-9);
+        assert!((m.variance() - all.variance()).abs() / all.variance() < 1e-9);
+    }
+
+    #[test]
+    fn std_error_decays() {
+        let mut rng = Xoshiro256pp::new(3);
+        let mut w = Welford::new();
+        let mut prev = f64::INFINITY;
+        for block in 0..5 {
+            for _ in 0..2000 {
+                w.update(rng.uniform(0.0, 1.0));
+            }
+            let se = w.std_error();
+            assert!(se < prev, "block {block}: {se} !< {prev}");
+            prev = se;
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut w = Welford::new();
+        w.update(1.0);
+        w.update(2.0);
+        w.reset();
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let w = Welford::new();
+        assert_eq!(w.std_error(), 0.0);
+        let mut w1 = Welford::new();
+        w1.update(5.0);
+        assert_eq!(w1.mean(), 5.0);
+        assert_eq!(w1.variance(), 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Lightweight property-based testing harness (proptest is not vendored).
+//!
+//! [`check`] runs a property over `cases` seeded random inputs; on the
+//! first failure it performs bounded greedy shrinking via a user-supplied
+//! shrinker and panics with the minimal counterexample. Deterministic:
+//! the failing seed is printed so the case can be replayed.
+
+use crate::rng::Xoshiro256pp;
+
+/// Property-check configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Random cases to run.
+    pub cases: u32,
+    /// Base seed (each case derives `seed + i`).
+    pub seed: u64,
+    /// Shrink attempts bound.
+    pub max_shrink: u32,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x5EED, max_shrink: 400 }
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`. `shrink` proposes smaller
+/// candidates for a failing input (return an empty vec to stop).
+pub fn check_with<T, G, S, P>(cfg: PropConfig, mut gen: G, shrink: S, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Xoshiro256pp) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> bool,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Xoshiro256pp::new(seed);
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink greedily.
+        let mut best = input;
+        let mut budget = cfg.max_shrink;
+        'outer: while budget > 0 {
+            for cand in shrink(&best) {
+                budget = budget.saturating_sub(1);
+                if budget == 0 {
+                    break 'outer;
+                }
+                if !prop(&cand) {
+                    best = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed {seed}, case {case}); minimal counterexample: {best:?}"
+        );
+    }
+}
+
+/// [`check_with`] without shrinking.
+pub fn check<T, G, P>(cfg: PropConfig, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Xoshiro256pp) -> T,
+    P: FnMut(&T) -> bool,
+{
+    check_with(cfg, gen, |_| Vec::new(), prop);
+}
+
+/// Common generator: a f64 vector with length in [lo_len, hi_len] and
+/// values in [lo, hi].
+pub fn gen_vec_f64(
+    rng: &mut Xoshiro256pp,
+    lo_len: usize,
+    hi_len: usize,
+    lo: f64,
+    hi: f64,
+) -> Vec<f64> {
+    let len = lo_len + (rng.next_bounded((hi_len - lo_len + 1) as u32) as usize);
+    (0..len).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+/// Standard shrinker for vectors: halves, tail-trims, element simplification.
+pub fn shrink_vec_f64(v: &[f64]) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[1..].to_vec());
+        out.push(v[..v.len() - 1].to_vec());
+    }
+    // Round elements toward zero.
+    if v.iter().any(|x| x.fract() != 0.0) {
+        out.push(v.iter().map(|x| x.trunc()).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(
+            PropConfig::default(),
+            |rng| gen_vec_f64(rng, 0, 32, -10.0, 10.0),
+            |v| v.len() <= 32,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            PropConfig { cases: 16, ..Default::default() },
+            |rng| rng.next_bounded(100),
+            |&x| x < 50,
+        );
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Property: "no vector contains a value > 5". Failing inputs should
+        // shrink toward short vectors still containing a > 5 value.
+        let result = std::panic::catch_unwind(|| {
+            check_with(
+                PropConfig { cases: 32, seed: 1, max_shrink: 500 },
+                |rng| gen_vec_f64(rng, 1, 64, 0.0, 10.0),
+                |v| shrink_vec_f64(v),
+                |v| v.iter().all(|&x| x <= 5.0),
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // The minimal counterexample should be very short.
+        assert!(msg.contains("minimal counterexample"), "{msg}");
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        let mut rng = Xoshiro256pp::new(9);
+        for _ in 0..100 {
+            let v = gen_vec_f64(&mut rng, 2, 5, -1.0, 1.0);
+            assert!(v.len() >= 2 && v.len() <= 5);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        }
+    }
+}

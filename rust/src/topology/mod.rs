@@ -1,0 +1,240 @@
+//! Application graphs: kernels + streams.
+//!
+//! The builder wires typed SPSC streams between kernel ports, validates
+//! the graph (contiguous port indices, single producer/consumer per
+//! stream), and hands everything to the [`crate::scheduler`]. Kernel
+//! duplication (the parallelization the paper's §I motivates) is provided
+//! by [`Topology::connect_fanout`]-style wiring in the apps layer.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kernel::Kernel;
+use crate::port::{InputPort, OutputPort, PortCloser};
+use crate::queue::{instrumented, MonitorHandle, StreamConfig};
+use crate::{Result, SfError};
+
+/// Kernel identifier within a topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelId(pub usize);
+
+/// Stream identifier within a topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub usize);
+
+/// A kernel plus its (type-erased) port bundles, assembled by `connect`.
+pub(crate) struct KernelNode {
+    pub kernel: Box<dyn Kernel>,
+    /// (port index, erased InputPort<T>)
+    pub inputs: Vec<(usize, Box<dyn Any + Send>)>,
+    /// (port index, erased OutputPort<T>, closer clone)
+    pub outputs: Vec<(usize, Box<dyn Any + Send>, Box<dyn PortCloser>)>,
+}
+
+/// Stream metadata retained for monitoring and reports.
+pub struct StreamEdge {
+    pub id: StreamId,
+    pub src: KernelId,
+    pub src_port: usize,
+    pub dst: KernelId,
+    pub dst_port: usize,
+    pub config: StreamConfig,
+    pub monitor: Arc<dyn MonitorHandle>,
+    /// "kernelA.port -> kernelB.port" label for reports.
+    pub label: String,
+}
+
+/// The application graph under construction.
+pub struct Topology {
+    name: String,
+    pub(crate) kernels: Vec<KernelNode>,
+    pub(crate) streams: Vec<StreamEdge>,
+    kernel_names: Vec<String>,
+    /// (kernel, port) -> stream, for duplicate-wiring detection.
+    used_out: HashMap<(usize, usize), StreamId>,
+    used_in: HashMap<(usize, usize), StreamId>,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>) -> Self {
+        Topology {
+            name: name.into(),
+            kernels: Vec::new(),
+            streams: Vec::new(),
+            kernel_names: Vec::new(),
+            used_out: HashMap::new(),
+            used_in: HashMap::new(),
+        }
+    }
+
+    /// Application name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Add a kernel; returns its id.
+    pub fn add_kernel(&mut self, kernel: Box<dyn Kernel>) -> KernelId {
+        let id = KernelId(self.kernels.len());
+        self.kernel_names.push(kernel.name().to_string());
+        self.kernels.push(KernelNode { kernel, inputs: Vec::new(), outputs: Vec::new() });
+        id
+    }
+
+    /// Kernel name lookup (reports).
+    pub fn kernel_name(&self, id: KernelId) -> &str {
+        &self.kernel_names[id.0]
+    }
+
+    /// Number of kernels.
+    pub fn num_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Stream metadata.
+    pub fn streams(&self) -> &[StreamEdge] {
+        &self.streams
+    }
+
+    /// Wire `src.src_port -> dst.dst_port` with an item type `T`.
+    pub fn connect<T: Send + 'static>(
+        &mut self,
+        src: KernelId,
+        src_port: usize,
+        dst: KernelId,
+        dst_port: usize,
+        cfg: StreamConfig,
+    ) -> Result<StreamId> {
+        if src.0 >= self.kernels.len() {
+            return Err(SfError::Topology(format!("unknown src kernel {src:?}")));
+        }
+        if dst.0 >= self.kernels.len() {
+            return Err(SfError::Topology(format!("unknown dst kernel {dst:?}")));
+        }
+        if let Some(s) = self.used_out.get(&(src.0, src_port)) {
+            return Err(SfError::Topology(format!(
+                "output port {src_port} of {} already wired to stream {s:?}",
+                self.kernel_name(src)
+            )));
+        }
+        if let Some(s) = self.used_in.get(&(dst.0, dst_port)) {
+            return Err(SfError::Topology(format!(
+                "input port {dst_port} of {} already wired to stream {s:?}",
+                self.kernel_name(dst)
+            )));
+        }
+        let id = StreamId(self.streams.len());
+        let (q, monitor) = instrumented::<T>(&cfg);
+        let label = format!(
+            "{}.{} -> {}.{}",
+            self.kernel_name(src),
+            src_port,
+            self.kernel_name(dst),
+            dst_port
+        );
+        let out = OutputPort::new(q.clone());
+        let closer: Box<dyn PortCloser> = Box::new(OutputPort::new(q.clone()));
+        self.kernels[src.0].outputs.push((src_port, Box::new(out), closer));
+        self.kernels[dst.0].inputs.push((dst_port, Box::new(InputPort::new(q))));
+        self.used_out.insert((src.0, src_port), id);
+        self.used_in.insert((dst.0, dst_port), id);
+        self.streams.push(StreamEdge {
+            id,
+            src,
+            src_port,
+            dst,
+            dst_port,
+            config: cfg,
+            monitor,
+            label,
+        });
+        Ok(id)
+    }
+
+    /// Validate the assembled graph: port indices per kernel must be
+    /// contiguous from 0 (so `ctx.input(i)` indexing is meaningful).
+    pub fn validate(&self) -> Result<()> {
+        for (kid, node) in self.kernels.iter().enumerate() {
+            let mut ins: Vec<usize> = node.inputs.iter().map(|(i, _)| *i).collect();
+            ins.sort_unstable();
+            for (expect, got) in ins.iter().enumerate() {
+                if expect != *got {
+                    return Err(SfError::Topology(format!(
+                        "kernel {} input ports not contiguous: expected {expect}, found {got}",
+                        self.kernel_names[kid]
+                    )));
+                }
+            }
+            let mut outs: Vec<usize> = node.outputs.iter().map(|(i, _, _)| *i).collect();
+            outs.sort_unstable();
+            for (expect, got) in outs.iter().enumerate() {
+                if expect != *got {
+                    return Err(SfError::Topology(format!(
+                        "kernel {} output ports not contiguous: expected {expect}, found {got}",
+                        self.kernel_names[kid]
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{ClosureSink, ClosureSource};
+
+    fn src() -> Box<dyn Kernel> {
+        let mut n = 0u64;
+        Box::new(ClosureSource::new("src", move || {
+            n += 1;
+            (n <= 10).then_some(n)
+        }))
+    }
+
+    fn snk() -> Box<dyn Kernel> {
+        Box::new(ClosureSink::new("snk", |_: u64| {}))
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let mut t = Topology::new("t");
+        let a = t.add_kernel(src());
+        let b = t.add_kernel(snk());
+        let s = t.connect::<u64>(a, 0, b, 0, StreamConfig::default()).unwrap();
+        assert_eq!(s, StreamId(0));
+        assert_eq!(t.num_kernels(), 2);
+        assert_eq!(t.streams().len(), 1);
+        assert_eq!(t.streams()[0].label, "src.0 -> snk.0");
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_kernels() {
+        let mut t = Topology::new("t");
+        let a = t.add_kernel(src());
+        assert!(t.connect::<u64>(a, 0, KernelId(5), 0, StreamConfig::default()).is_err());
+        assert!(t.connect::<u64>(KernelId(5), 0, a, 0, StreamConfig::default()).is_err());
+    }
+
+    #[test]
+    fn rejects_double_wiring() {
+        let mut t = Topology::new("t");
+        let a = t.add_kernel(src());
+        let b = t.add_kernel(snk());
+        let c = t.add_kernel(snk());
+        t.connect::<u64>(a, 0, b, 0, StreamConfig::default()).unwrap();
+        assert!(t.connect::<u64>(a, 0, c, 0, StreamConfig::default()).is_err());
+    }
+
+    #[test]
+    fn rejects_gappy_ports() {
+        let mut t = Topology::new("t");
+        let a = t.add_kernel(src());
+        let b = t.add_kernel(snk());
+        // Wire output port 1 with port 0 missing.
+        t.connect::<u64>(a, 1, b, 0, StreamConfig::default()).unwrap();
+        assert!(t.validate().is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! Micro-benchmark workload kernels (paper §V-A).
+//!
+//! "A simple micro-benchmark consisting of two threads connected by a
+//! lock-free queue is used. Each thread consists of a while loop that
+//! consumes a fixed amount of time in order to simulate work with a known
+//! service rate."
+//!
+//! [`RateControlledProducer`] burns a sampled service time then pushes one
+//! 8-byte item; [`RateControlledConsumer`] pops one item then burns its
+//! own service time. Dual-phase variants shift the distribution mean
+//! halfway through (by items sent) for the Fig. 10/14/15 experiments.
+
+use crate::kernel::{Kernel, KernelContext, KernelStatus};
+use crate::rng::dist::{DistKind, Distribution};
+use crate::rng::ServiceProcess;
+use crate::timing::TimeRef;
+
+/// The micro-benchmark item: 8 bytes, exactly as the paper's setup.
+pub type Item = u64;
+/// Bytes per item.
+pub const ITEM_BYTES: usize = 8;
+
+/// A service process + item description, buildable from the paper's
+/// parameterization (rate in MB/s, distribution family).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub process: ServiceProcess,
+    pub item_bytes: usize,
+}
+
+impl WorkloadSpec {
+    /// Deterministic service times at a fixed rate.
+    pub fn fixed_rate_mbps(rate: f64) -> Self {
+        WorkloadSpec {
+            process: ServiceProcess::single(
+                Distribution::from_rate_mbps(DistKind::Deterministic, rate, ITEM_BYTES),
+                0x51D,
+            ),
+            item_bytes: ITEM_BYTES,
+        }
+    }
+
+    /// Exponential service times with the given mean rate.
+    pub fn exponential_mbps(rate: f64, seed: u64) -> Self {
+        WorkloadSpec {
+            process: ServiceProcess::single(
+                Distribution::from_rate_mbps(DistKind::Exponential, rate, ITEM_BYTES),
+                seed,
+            ),
+            item_bytes: ITEM_BYTES,
+        }
+    }
+
+    /// General single-phase spec.
+    pub fn single(kind: DistKind, rate_mbps: f64, seed: u64) -> Self {
+        WorkloadSpec {
+            process: ServiceProcess::single(
+                Distribution::from_rate_mbps(kind, rate_mbps, ITEM_BYTES),
+                seed,
+            ),
+            item_bytes: ITEM_BYTES,
+        }
+    }
+
+    /// Dual-phase spec: `rate_a` until `switch_at` items, then `rate_b`
+    /// (the paper's bi-modal environment-change simulation).
+    pub fn dual_phase(
+        kind: DistKind,
+        rate_a_mbps: f64,
+        rate_b_mbps: f64,
+        switch_at: u64,
+        seed: u64,
+    ) -> Self {
+        WorkloadSpec {
+            process: ServiceProcess::dual(
+                Distribution::from_rate_mbps(kind, rate_a_mbps, ITEM_BYTES),
+                Distribution::from_rate_mbps(kind, rate_b_mbps, ITEM_BYTES),
+                switch_at,
+                seed,
+            ),
+            item_bytes: ITEM_BYTES,
+        }
+    }
+
+    /// Mean rate (MB/s) of the currently-active phase.
+    pub fn current_rate_mbps(&self) -> f64 {
+        self.process.current().rate_mbps(self.item_bytes)
+    }
+}
+
+/// Producer kernel: burns service time, pushes `total_items`, then Done.
+pub struct RateControlledProducer {
+    name: String,
+    spec: WorkloadSpec,
+    total_items: u64,
+    sent: u64,
+    time: TimeRef,
+    /// Deadline-based pacing keeps the long-run rate exact even when
+    /// individual sleeps overshoot.
+    next_deadline_ns: Option<u64>,
+}
+
+impl RateControlledProducer {
+    pub fn new(name: impl Into<String>, spec: WorkloadSpec, total_items: u64) -> Self {
+        RateControlledProducer {
+            name: name.into(),
+            spec,
+            total_items,
+            sent: 0,
+            time: TimeRef::new(),
+            next_deadline_ns: None,
+        }
+    }
+
+    /// Items pushed so far.
+    pub fn sent(&self) -> u64 {
+        self.sent
+    }
+}
+
+impl Kernel for RateControlledProducer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.sent >= self.total_items {
+            return KernelStatus::Done;
+        }
+        let service_ns = self.spec.process.next_service_ns();
+        let now = self.time.now_ns();
+        // No catch-up: a while-loop server that was preempted (or blocked)
+        // did not do work in the meantime, so the next item still costs a
+        // full service time from *now*. (Catch-up pacing would emit bursts
+        // after a descheduling stall — precisely the "faster than the true
+        // service rate" artifact Fig. 3 warns about, but as a systematic
+        // bias rather than occasional noise.)
+        let deadline = match self.next_deadline_ns {
+            Some(d) => d.max(now) + service_ns as u64,
+            None => now + service_ns as u64,
+        };
+        self.next_deadline_ns = Some(deadline);
+        self.time.spin_until(deadline);
+        let out = ctx.output::<Item>(0).expect("producer needs output port 0");
+        if out.push(self.sent).is_err() {
+            return KernelStatus::Done;
+        }
+        self.sent += 1;
+        KernelStatus::Continue
+    }
+}
+
+/// Consumer kernel: pops one item then burns its service time; Done when
+/// upstream closes.
+pub struct RateControlledConsumer {
+    name: String,
+    spec: WorkloadSpec,
+    received: u64,
+    time: TimeRef,
+}
+
+impl RateControlledConsumer {
+    pub fn new(name: impl Into<String>, spec: WorkloadSpec) -> Self {
+        RateControlledConsumer { name: name.into(), spec, received: 0, time: TimeRef::new() }
+    }
+
+    pub fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+impl Kernel for RateControlledConsumer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let inp = ctx.input::<Item>(0).expect("consumer needs input port 0");
+        match inp.pop() {
+            None => KernelStatus::Done,
+            Some(_) => {
+                self.received += 1;
+                // Burn a full service time from now (see the producer's
+                // no-catch-up note): a preempted server does no work.
+                let service_ns = self.spec.process.next_service_ns() as u64;
+                let t = self.time.now_ns();
+                self.time.spin_until(t + service_ns);
+                KernelStatus::Continue
+            }
+        }
+    }
+}
+
+/// Pass-through kernel with its own service time — builds longer chains.
+pub struct RateControlledRelay {
+    name: String,
+    spec: WorkloadSpec,
+    time: TimeRef,
+}
+
+impl RateControlledRelay {
+    pub fn new(name: impl Into<String>, spec: WorkloadSpec) -> Self {
+        RateControlledRelay { name: name.into(), spec, time: TimeRef::new() }
+    }
+}
+
+impl Kernel for RateControlledRelay {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let inp = ctx.input::<Item>(0).expect("relay needs input port 0");
+        match inp.pop() {
+            None => KernelStatus::Done,
+            Some(v) => {
+                let service_ns = self.spec.process.next_service_ns() as u64;
+                let t = self.time.now_ns();
+                self.time.spin_until(t + service_ns);
+                if ctx.output::<Item>(0).expect("relay output").push(v).is_err() {
+                    return KernelStatus::Done;
+                }
+                KernelStatus::Continue
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::MonitorConfig;
+    use crate::queue::StreamConfig;
+    use crate::scheduler::Scheduler;
+    use crate::topology::Topology;
+
+    #[test]
+    fn spec_rates() {
+        let s = WorkloadSpec::fixed_rate_mbps(4.0);
+        assert!((s.current_rate_mbps() - 4.0).abs() < 1e-9);
+        let d = WorkloadSpec::dual_phase(DistKind::Deterministic, 2.0, 1.0, 100, 7);
+        assert!((d.current_rate_mbps() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn producer_consumer_pipeline_realizes_rate() {
+        // 8 MB/s producer into a fast consumer: wall time for N items
+        // should match N · service_time within 30%.
+        let rate = 8.0; // MB/s → 1 µs per 8-byte item
+        let items = 50_000u64;
+        let mut topo = Topology::new("wl");
+        let p = topo.add_kernel(Box::new(RateControlledProducer::new(
+            "prod",
+            WorkloadSpec::fixed_rate_mbps(rate),
+            items,
+        )));
+        let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
+            "cons",
+            WorkloadSpec::fixed_rate_mbps(100.0), // effectively unconstrained
+        )));
+        topo.connect::<Item>(p, 0, c, 0, StreamConfig::default().with_capacity(4096))
+            .unwrap();
+        let report = Scheduler::new(topo).with_monitoring(MonitorConfig::disabled()).run().unwrap();
+        let expect_ns = items as f64 * 1000.0;
+        let got = report.wall_ns as f64;
+        // Loose bound: debug builds + parallel test load can stretch the
+        // wall clock; the paced producer can never run *faster* though.
+        assert!(got > 0.9 * expect_ns, "wall {got} ns impossibly fast (expected ≥ {expect_ns})");
+        assert!(got < 3.0 * expect_ns, "wall {got} ns vs expected {expect_ns} ns");
+    }
+
+    #[test]
+    fn dual_phase_switches_at_item_count() {
+        let mut spec = WorkloadSpec::dual_phase(DistKind::Deterministic, 8.0, 1.0, 10, 3);
+        for _ in 0..10 {
+            assert!((spec.process.next_service_ns() - 1000.0).abs() < 1e-9);
+        }
+        assert!((spec.process.next_service_ns() - 8000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,416 @@
+//! Property-based tests over the coordinator's core invariants, using the
+//! in-crate `testutil` harness (proptest is not vendored in this image).
+
+use streamflow::estimator::filters::{gauss_filter, log_filter, GAUSS_TAPS};
+use streamflow::estimator::{EstimatorConfig, FeedOutcome, NativeBackend, ServiceRateEstimator};
+use streamflow::queue::{PopResult, SpscQueue};
+use streamflow::rng::Xoshiro256pp;
+use streamflow::stats::{percentile, Moments, Welford};
+use streamflow::testutil::{check, check_with, gen_vec_f64, shrink_vec_f64, PropConfig};
+
+fn cfg(cases: u32, seed: u64) -> PropConfig {
+    PropConfig { cases, seed, max_shrink: 200 }
+}
+
+// ---------------------------------------------------------------- queue --
+
+#[test]
+fn prop_queue_fifo_no_loss_any_interleaving() {
+    // For random push/pop interleavings on one thread, the queue is an
+    // exact FIFO: popped sequence is a prefix-respecting subsequence.
+    check(
+        cfg(64, 1),
+        |rng| {
+            let ops: Vec<bool> = (0..rng.next_bounded(512) + 8)
+                .map(|_| rng.next_f64() < 0.55)
+                .collect();
+            let cap = 1 + rng.next_bounded(32) as usize;
+            (ops, cap)
+        },
+        |(ops, cap)| {
+            let q = SpscQueue::new(*cap, 8);
+            let mut pushed = 0u64;
+            let mut expect_next = 0u64;
+            for &is_push in ops {
+                if is_push {
+                    if q.try_push(pushed).is_ok() {
+                        pushed += 1;
+                    }
+                } else if let PopResult::Item(v) = q.try_pop() {
+                    if v != expect_next {
+                        return false;
+                    }
+                    expect_next += 1;
+                }
+            }
+            // Drain the rest.
+            while let PopResult::Item(v) = q.try_pop() {
+                if v != expect_next {
+                    return false;
+                }
+                expect_next += 1;
+            }
+            expect_next == pushed && q.len() == 0
+        },
+    );
+}
+
+#[test]
+fn prop_queue_len_never_exceeds_capacity() {
+    check(
+        cfg(48, 2),
+        |rng| {
+            let cap = 1 + rng.next_bounded(64) as usize;
+            let ops: Vec<bool> =
+                (0..rng.next_bounded(256) + 1).map(|_| rng.next_f64() < 0.7).collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let q = SpscQueue::new(*cap, 8);
+            for &is_push in ops {
+                if is_push {
+                    let _ = q.try_push(0u64);
+                } else {
+                    let _ = q.try_pop();
+                }
+                if q.len() > *cap {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_queue_tc_accounting_exact() {
+    // tc counters summed over arbitrary sampling points equal the true
+    // push/pop counts.
+    check(
+        cfg(48, 3),
+        |rng| {
+            (0..rng.next_bounded(300) + 10)
+                .map(|_| rng.next_bounded(3)) // 0 = push, 1 = pop, 2 = sample
+                .collect::<Vec<u32>>()
+        },
+        |ops| {
+            let q = SpscQueue::new(1024, 8);
+            let (mut pushes, mut pops) = (0u64, 0u64);
+            let (mut tc_tail_sum, mut tc_head_sum) = (0u64, 0u64);
+            for &op in ops {
+                match op {
+                    0 => {
+                        if q.try_push(0u64).is_ok() {
+                            pushes += 1;
+                        }
+                    }
+                    1 => {
+                        if let PopResult::Item(_) = q.try_pop() {
+                            pops += 1;
+                        }
+                    }
+                    _ => {
+                        let s = q.counters().sample();
+                        tc_tail_sum += s.tc_tail;
+                        tc_head_sum += s.tc_head;
+                    }
+                }
+            }
+            let s = q.counters().sample();
+            tc_tail_sum += s.tc_tail;
+            tc_head_sum += s.tc_head;
+            tc_tail_sum == pushes && tc_head_sum == pops
+        },
+    );
+}
+
+// ------------------------------------------------------------- filters --
+
+#[test]
+fn prop_gauss_filter_bounds_and_width() {
+    // Filter output is bounded by (min, max)·Σtaps and exactly 4 narrower.
+    check_with(
+        cfg(128, 4),
+        |rng| gen_vec_f64(rng, 5, 128, 0.0, 1.0e6),
+        |v| shrink_vec_f64(v),
+        |v| {
+            let out = gauss_filter(v);
+            if out.len() != v.len() - 4 {
+                return false;
+            }
+            let taps_sum: f64 = GAUSS_TAPS.iter().sum();
+            let lo = v.iter().cloned().fold(f64::INFINITY, f64::min) * taps_sum;
+            let hi = v.iter().cloned().fold(0.0f64, f64::max) * taps_sum;
+            out.iter().all(|&x| x >= lo - 1e-6 && x <= hi + 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_filters_are_linear() {
+    check(
+        cfg(64, 5),
+        |rng| {
+            let n = 5 + rng.next_bounded(60) as usize;
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            let (s, t) = (rng.uniform(-3.0, 3.0), rng.uniform(-3.0, 3.0));
+            (a, b, s, t)
+        },
+        |(a, b, s, t)| {
+            let combo: Vec<f64> =
+                a.iter().zip(b).map(|(&x, &y)| s * x + t * y).collect();
+            for (filter, tol) in [
+                (gauss_filter as fn(&[f64]) -> Vec<f64>, 1e-7),
+                (log_filter as fn(&[f64]) -> Vec<f64>, 1e-6),
+            ] {
+                let lhs = filter(&combo);
+                let fa = filter(a);
+                let fb = filter(b);
+                for i in 0..lhs.len() {
+                    if (lhs[i] - (s * fa[i] + t * fb[i])).abs() > tol {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_filter_shift_invariance() {
+    // Shifting the input by k shifts the output by k (valid-mode conv).
+    check(
+        cfg(48, 6),
+        |rng| {
+            let n = 16 + rng.next_bounded(48) as usize;
+            let v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let k = 1 + rng.next_bounded(8) as usize;
+            (v, k)
+        },
+        |(v, k)| {
+            if v.len() < k + 10 {
+                return true;
+            }
+            let full = gauss_filter(v);
+            let shifted = gauss_filter(&v[*k..]);
+            shifted
+                .iter()
+                .zip(full[*k..].iter())
+                .all(|(a, b)| (a - b).abs() < 1e-9)
+        },
+    );
+}
+
+// --------------------------------------------------------------- stats --
+
+#[test]
+fn prop_welford_matches_two_pass() {
+    check_with(
+        cfg(96, 7),
+        |rng| gen_vec_f64(rng, 2, 200, -1.0e4, 1.0e4),
+        |v| shrink_vec_f64(v),
+        |v| {
+            let mut w = Welford::new();
+            v.iter().for_each(|&x| w.update(x));
+            let n = v.len() as f64;
+            let mean = v.iter().sum::<f64>() / n;
+            let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+            (w.mean() - mean).abs() < 1e-6 && (w.variance() - var).abs() < 1e-4 * var.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_welford_merge_any_split() {
+    check(
+        cfg(64, 8),
+        |rng| {
+            let v = gen_vec_f64(rng, 4, 120, -100.0, 100.0);
+            let split = 1 + rng.next_bounded(v.len() as u32 - 2) as usize;
+            (v, split)
+        },
+        |(v, split)| {
+            let mut all = Welford::new();
+            v.iter().for_each(|&x| all.update(x));
+            let (mut a, mut b) = (Welford::new(), Welford::new());
+            v[..*split].iter().for_each(|&x| a.update(x));
+            v[*split..].iter().for_each(|&x| b.update(x));
+            let m = a.merge(&b);
+            (m.mean() - all.mean()).abs() < 1e-9
+                && (m.variance() - all.variance()).abs() < 1e-6 * all.variance().max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_moments_merge_any_split() {
+    check(
+        cfg(48, 9),
+        |rng| {
+            let v = gen_vec_f64(rng, 8, 150, 0.0, 50.0);
+            let split = 2 + rng.next_bounded(v.len() as u32 - 4) as usize;
+            (v, split)
+        },
+        |(v, split)| {
+            let mut all = Moments::new();
+            v.iter().for_each(|&x| all.update(x));
+            let (mut a, mut b) = (Moments::new(), Moments::new());
+            v[..*split].iter().for_each(|&x| a.update(x));
+            v[*split..].iter().for_each(|&x| b.update(x));
+            let m = a.merge(&b);
+            (m.skewness() - all.skewness()).abs() < 1e-6
+                && (m.kurtosis_excess() - all.kurtosis_excess()).abs() < 1e-5
+        },
+    );
+}
+
+#[test]
+fn prop_percentile_within_minmax_and_monotone() {
+    check(
+        cfg(64, 10),
+        |rng| gen_vec_f64(rng, 1, 100, -1000.0, 1000.0),
+        |v| {
+            let p50 = percentile(v, 50.0);
+            let p95 = percentile(v, 95.0);
+            let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            p50 >= lo && p95 <= hi && p50 <= p95
+        },
+    );
+}
+
+// ----------------------------------------------------------- estimator --
+
+#[test]
+fn prop_estimator_q_at_least_mu() {
+    // Eq. 3: q = μ + zσ with z > 0 and σ ≥ 0 ⇒ q ≥ μ, for any window.
+    check_with(
+        cfg(64, 11),
+        |rng| gen_vec_f64(rng, 10, 64, 0.0, 1.0e5),
+        |v| shrink_vec_f64(v),
+        |v| {
+            use streamflow::estimator::MomentsBackend;
+            let mut b = NativeBackend::new();
+            match b.moments(v, 1.64485) {
+                Ok((mu, sigma, q)) => sigma >= 0.0 && q >= mu - 1e-9,
+                Err(_) => v.len() < 6, // only tiny windows may error
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_estimator_deterministic_replay() {
+    // Same sample stream ⇒ identical outcomes (the estimator is pure).
+    check(
+        cfg(24, 12),
+        |rng| gen_vec_f64(rng, 100, 400, 1.0, 100.0),
+        |v| {
+            let run = |xs: &[f64]| {
+                let cfg =
+                    EstimatorConfig { rel_tol: Some(1e-3), min_q_updates: 8, ..Default::default() };
+                let mut e = ServiceRateEstimator::new(cfg, NativeBackend::new()).unwrap();
+                let mut log = Vec::new();
+                for (i, &x) in xs.iter().enumerate() {
+                    match e.feed(x, 1000, 8, i as u64).unwrap() {
+                        FeedOutcome::Converged(r) => log.push((i, r.q_bar)),
+                        FeedOutcome::Updated { .. } | FeedOutcome::Accumulating => {}
+                    }
+                }
+                log
+            };
+            run(v) == run(v)
+        },
+    );
+}
+
+#[test]
+fn prop_constant_stream_estimate_scales_linearly() {
+    // Feeding c·x converges to c·(estimate of x) — rate math is linear.
+    check(
+        cfg(16, 13),
+        |rng| (rng.uniform(1.0, 100.0), rng.uniform(1.5, 4.0)),
+        |&(base, scale)| {
+            let converge = |c: f64| -> f64 {
+                let cfg =
+                    EstimatorConfig { rel_tol: Some(1e-3), min_q_updates: 8, ..Default::default() };
+                let mut e = ServiceRateEstimator::new(cfg, NativeBackend::new()).unwrap();
+                for i in 0..100_000u64 {
+                    if let FeedOutcome::Converged(r) = e.feed(c, 1000, 8, i).unwrap() {
+                        return r.q_bar;
+                    }
+                }
+                f64::NAN
+            };
+            let a = converge(base);
+            let b = converge(base * scale);
+            (b / a - scale).abs() < 1e-6
+        },
+    );
+}
+
+// ---------------------------------------------------------------- json --
+
+#[test]
+fn prop_json_roundtrip() {
+    use streamflow::config::json::Json;
+    fn gen_json(rng: &mut Xoshiro256pp, depth: u32) -> Json {
+        match rng.next_bounded(if depth > 2 { 4 } else { 6 }) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}~\"\\{}", rng.next_bounded(100), rng.next_bounded(10))),
+            4 => Json::Arr((0..rng.next_bounded(4)).map(|_| gen_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_bounded(4))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        cfg(128, 14),
+        |rng| gen_json(rng, 0),
+        |j| match Json::parse(&j.to_string()) {
+            Ok(back) => back == *j,
+            Err(_) => false,
+        },
+    );
+}
+
+// ------------------------------------------------------------ queueing --
+
+#[test]
+fn prop_mm1_probabilities_in_unit_interval() {
+    use streamflow::queueing::mm1;
+    check(
+        cfg(128, 15),
+        |rng| {
+            (
+                rng.uniform(1e-7, 1e-2),       // T seconds
+                rng.uniform(0.0, 1.0),         // rho
+                rng.uniform(1.0e3, 1.0e7),     // mu items/s
+                rng.next_bounded(100_000) as u64 + 1, // C
+            )
+        },
+        |&(t, rho, mu, c)| {
+            let pr = mm1::pr_nonblocking_read(t, rho, mu);
+            let pw = mm1::pr_nonblocking_write(t, c, rho, mu);
+            (0.0..=1.0).contains(&pr) && (0.0..=1.0).contains(&pw)
+        },
+    );
+}
+
+#[test]
+fn prop_blocking_probability_monotone_in_capacity() {
+    use streamflow::queueing::mm1;
+    check(
+        cfg(64, 16),
+        |rng| (rng.uniform(0.05, 0.999), rng.next_bounded(60) as u64 + 1),
+        |&(rho, c)| {
+            mm1::blocking_probability(rho, c) >= mm1::blocking_probability(rho, c + 1) - 1e-12
+        },
+    );
+}

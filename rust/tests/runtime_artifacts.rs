@@ -1,0 +1,146 @@
+//! Integration: the AOT artifact pipeline end to end, through the same
+//! `xla`-crate path the monitor uses.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise — the Makefile
+//! test target guarantees they exist in CI).
+
+use std::path::PathBuf;
+
+use streamflow::estimator::{MomentsBackend, NativeBackend};
+use streamflow::runtime::Engine;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let dir = require_artifacts!();
+    let eng = Engine::load_dir(&dir).expect("engine");
+    let names = eng.manifest().names();
+    for expect in ["estimator_b1_w64", "estimator_b8_w64", "convergence_b1_w16"] {
+        assert!(names.contains(&expect), "missing artifact {expect}: {names:?}");
+    }
+}
+
+#[test]
+fn every_artifact_compiles_and_executes() {
+    let dir = require_artifacts!();
+    let eng = Engine::load_dir(&dir).expect("engine");
+    for name in eng.manifest().names() {
+        let exec = eng.load_artifact(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let specs = exec.spec().inputs.clone();
+        let bufs: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.25f32; s.elements()]).collect();
+        let dims: Vec<Vec<i64>> =
+            specs.iter().map(|s| s.shape.iter().map(|&d| d as i64).collect()).collect();
+        let inputs: Vec<(&[f32], &[i64])> =
+            bufs.iter().zip(&dims).map(|(b, d)| (b.as_slice(), d.as_slice())).collect();
+        let outs = exec.run_f32(&inputs).unwrap_or_else(|e| panic!("{name} exec: {e}"));
+        assert_eq!(outs.len(), exec.spec().outputs.len(), "{name} output arity");
+        for (o, spec) in outs.iter().zip(&exec.spec().outputs) {
+            assert_eq!(o.len(), spec.elements(), "{name} output size");
+            assert!(o.iter().all(|v| v.is_finite()), "{name} produced non-finite values");
+        }
+    }
+}
+
+#[test]
+fn xla_estimator_matches_native_backend() {
+    // The cross-layer parity check: Pallas moments kernel (via PJRT) vs
+    // the Rust hot path, across several window shapes.
+    let dir = require_artifacts!();
+    let mut xla = streamflow::estimator::backend::XlaBackend::from_dir(&dir, 64)
+        .expect("xla backend");
+    let mut native = NativeBackend::new();
+    let mut rng = streamflow::rng::Xoshiro256pp::new(0x77);
+    for case in 0..25 {
+        let base = rng.uniform(1.0, 5000.0);
+        let spread = rng.uniform(0.0, base / 4.0);
+        let window: Vec<f64> =
+            (0..64).map(|_| base + rng.uniform(-spread, spread)).collect();
+        let (n_mu, n_sigma, n_q) = native.moments(&window, 1.64485).unwrap();
+        let (x_mu, x_sigma, x_q) = xla.moments(&window, 1.64485).unwrap();
+        let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-9);
+        assert!(rel(n_mu, x_mu) < 2e-3, "case {case}: mu {n_mu} vs {x_mu}");
+        assert!(
+            (n_sigma - x_sigma).abs() / n_sigma.max(1e-3) < 2e-2,
+            "case {case}: sigma {n_sigma} vs {x_sigma}"
+        );
+        assert!(rel(n_q, x_q) < 5e-3, "case {case}: q {n_q} vs {x_q}");
+    }
+}
+
+#[test]
+fn xla_convergence_filter_matches_native() {
+    let dir = require_artifacts!();
+    let eng = Engine::load_dir(&dir).expect("engine");
+    let exec = eng.load_artifact("convergence_b1_w16").expect("artifact");
+    let mut rng = streamflow::rng::Xoshiro256pp::new(0x78);
+    for _ in 0..10 {
+        let v: Vec<f64> = (0..16).map(|_| rng.uniform(0.0, 1e-3)).collect();
+        let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        let outs = exec.run_f32(&[(&v32, &[1, 16])]).expect("exec");
+        // outs = [filtered (14), min (1), max (1)]
+        let native = streamflow::estimator::filters::log_filter(&v);
+        assert_eq!(outs[0].len(), 14);
+        for (g, w) in outs[0].iter().zip(&native) {
+            assert!((*g as f64 - w).abs() < 1e-5, "filtered {g} vs {w}");
+        }
+        let (lo, hi) = (outs[1][0] as f64, outs[2][0] as f64);
+        let n_lo = native.iter().cloned().fold(f64::INFINITY, f64::min);
+        let n_hi = native.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!((lo - n_lo).abs() < 1e-5);
+        assert!((hi - n_hi).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn dot_artifact_matches_native_matmul() {
+    let dir = require_artifacts!();
+    let eng = Engine::load_dir(&dir).expect("engine");
+    let name = "dot_m16_k256_n256";
+    if eng.manifest().get(name).is_none() {
+        eprintln!("SKIP: {name} not in manifest");
+        return;
+    }
+    let exec = eng.load_artifact(name).expect("artifact");
+    let mut rng = streamflow::rng::Xoshiro256pp::new(0x79);
+    let a: Vec<f32> = (0..16 * 256).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..256 * 256).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let outs = exec.run_f32(&[(&a, &[16, 256]), (&b, &[256, 256])]).expect("exec");
+    let c = &outs[0];
+    // Spot-check a handful of entries against a native dot product.
+    for &(i, j) in &[(0usize, 0usize), (3, 17), (15, 255), (7, 128)] {
+        let mut want = 0.0f32;
+        for k in 0..256 {
+            want += a[i * 256 + k] * b[k * 256 + j];
+        }
+        let got = c[i * 256 + j];
+        assert!((got - want).abs() < 1e-2, "C[{i},{j}] = {got} vs {want}");
+    }
+}
+
+#[test]
+fn shape_validation_rejects_mismatches() {
+    let dir = require_artifacts!();
+    let eng = Engine::load_dir(&dir).expect("engine");
+    let exec = eng.load_artifact("estimator_b1_w64").expect("artifact");
+    let bad = vec![0.0f32; 32];
+    assert!(exec.run_f32(&[(&bad, &[1, 32])]).is_err(), "wrong shape must be rejected");
+    let good_shape_wrong_len = vec![0.0f32; 10];
+    assert!(exec.run_f32(&[(&good_shape_wrong_len, &[1, 64])]).is_err());
+    assert!(exec.run_f32(&[]).is_err(), "wrong arity must be rejected");
+}
