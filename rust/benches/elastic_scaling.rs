@@ -1,0 +1,214 @@
+//! Elastic vs static throughput under a mid-run **4× service-rate drop**
+//! (the acceptance experiment for the elastic control plane).
+//!
+//! Topology: paced producer (2k items/s) → replicable stage → counting
+//! sink. The stage's per-replica service time shifts from 250 µs to 1 ms
+//! (4k/s → 1k/s) a third of the way through the run. The *static* case
+//! pins the stage at one replica; the *elastic* case lets the controller
+//! replicate toward its target ρ.
+//!
+//! Emits the items/sec + replica-count trajectory as CSV
+//! (`target/figures/elastic_scaling.csv`) and as a JSON record
+//! (`target/figures/elastic_scaling.json`) for the BENCH_* perf ledger,
+//! and prints the post-shift throughput ratio against the ≥ 1.5×
+//! acceptance bar.
+//!
+//! `SF_SECS` scales the run length (default 6 s per case).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use streamflow::config::{env_f64, Json};
+use streamflow::elastic::{ElasticConfig, ElasticStageConfig};
+use streamflow::kernel::ClosureSink;
+use streamflow::prelude::*;
+use streamflow::report::{figures_dir, Table};
+use streamflow::timing::TimeRef;
+use streamflow::workload::{Item, PacedProducer, PhasedServiceWorker};
+
+/// One sampled point of a run.
+struct Sample {
+    t_s: f64,
+    delivered: u64,
+    replicas: u64,
+}
+
+struct CaseResult {
+    label: &'static str,
+    samples: Vec<Sample>,
+    switch_t_s: f64,
+    scale_actions: usize,
+    resize_actions: usize,
+    events: Vec<String>,
+}
+
+fn run_case(elastic: bool, secs: f64) -> CaseResult {
+    let rate = 2_000.0; // offered items/sec
+    let items = (rate * secs) as u64;
+    let time = TimeRef::new();
+    let t0 = time.now_ns();
+    let switch_at = t0 + ((secs / 3.0) * 1.0e9) as u64;
+
+    let mut topo = Topology::new(if elastic { "elastic" } else { "static" });
+    let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
+        "prod", rate, items,
+    )));
+    let policy = if elastic {
+        ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: 8,
+            cooldown_ticks: 8,
+        }
+    } else {
+        ElasticPolicy::pinned(1)
+    };
+    let stage_cfg =
+        ElasticStageConfig { policy, initial_replicas: 1, lane_capacity: 256 };
+    // 250 µs → 1 ms per item: the 4× non-blocking service-rate drop.
+    let (split, merge) = topo
+        .add_elastic_stage("work", stage_cfg, move |_| {
+            PhasedServiceWorker::new(250_000, 1_000_000, switch_at)
+        })
+        .expect("stage");
+    let delivered = Arc::new(AtomicU64::new(0));
+    let d2 = delivered.clone();
+    let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |_: Item| {
+        d2.fetch_add(1, Ordering::Relaxed);
+    })));
+    topo.connect::<Item>(p, 0, split, 0, StreamConfig::default().with_capacity(2048))
+        .expect("wire producer");
+    topo.connect::<Item>(merge, 0, snk, 0, StreamConfig::default().with_capacity(2048))
+        .expect("wire sink");
+
+    // Observe the stage from outside while the scheduler owns the topology.
+    let stage = topo.elastic_stages()[0].stage.clone();
+    let sampling = Arc::new(AtomicBool::new(true));
+    let sampler = {
+        let sampling = sampling.clone();
+        let delivered = delivered.clone();
+        std::thread::spawn(move || {
+            let time = TimeRef::new();
+            let mut out = Vec::new();
+            while sampling.load(Ordering::Relaxed) {
+                out.push(Sample {
+                    t_s: (time.now_ns() - t0) as f64 / 1.0e9,
+                    delivered: delivered.load(Ordering::Relaxed),
+                    replicas: stage.replicas() as u64,
+                });
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            out
+        })
+    };
+
+    let report = Scheduler::new(topo)
+        .with_monitoring(MonitorConfig::practical())
+        .with_elastic(ElasticConfig { tick: Duration::from_millis(10), ..Default::default() })
+        .run()
+        .expect("run");
+    sampling.store(false, Ordering::Relaxed);
+    let samples = sampler.join().expect("sampler");
+
+    CaseResult {
+        label: if elastic { "elastic" } else { "static" },
+        samples,
+        switch_t_s: (switch_at - t0) as f64 / 1.0e9,
+        scale_actions: report.scale_actions(),
+        resize_actions: report.elastic_events.len() - report.scale_actions(),
+        events: report.elastic_events.iter().map(|e| e.to_string()).collect(),
+    }
+}
+
+/// Mean items/sec over the samples inside `[from_s, to_s)`.
+fn window_rate(samples: &[Sample], from_s: f64, to_s: f64) -> f64 {
+    let win: Vec<&Sample> =
+        samples.iter().filter(|s| s.t_s >= from_s && s.t_s < to_s).collect();
+    if win.len() < 2 {
+        return 0.0;
+    }
+    let (a, b) = (win.first().unwrap(), win.last().unwrap());
+    if b.t_s <= a.t_s {
+        return 0.0;
+    }
+    (b.delivered - a.delivered) as f64 / (b.t_s - a.t_s)
+}
+
+fn case_json(c: &CaseResult, pre: f64, post: f64) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("pre_shift_items_per_sec".to_string(), Json::Num(pre));
+    obj.insert("post_shift_items_per_sec".to_string(), Json::Num(post));
+    obj.insert("scale_actions".to_string(), Json::Num(c.scale_actions as f64));
+    obj.insert("resize_actions".to_string(), Json::Num(c.resize_actions as f64));
+    obj.insert(
+        "trajectory_t_s".to_string(),
+        Json::Arr(c.samples.iter().map(|s| Json::Num(s.t_s)).collect()),
+    );
+    obj.insert(
+        "trajectory_delivered".to_string(),
+        Json::Arr(c.samples.iter().map(|s| Json::Num(s.delivered as f64)).collect()),
+    );
+    obj.insert(
+        "trajectory_replicas".to_string(),
+        Json::Arr(c.samples.iter().map(|s| Json::Num(s.replicas as f64)).collect()),
+    );
+    obj.insert(
+        "events".to_string(),
+        Json::Arr(c.events.iter().map(|e| Json::Str(e.clone())).collect()),
+    );
+    Json::Obj(obj)
+}
+
+fn main() {
+    let secs = env_f64("SF_SECS", 6.0);
+    let settle = 0.75; // seconds of post-shift settling excluded from rates
+
+    let mut table = Table::new(
+        "elastic_scaling",
+        &["mode", "t_s", "delivered", "replicas"],
+    );
+    let mut root = BTreeMap::new();
+    let mut post_rates = Vec::new();
+    for elastic in [false, true] {
+        let case = run_case(elastic, secs);
+        let end = case.samples.last().map(|s| s.t_s).unwrap_or(secs);
+        let pre = window_rate(&case.samples, 0.5, case.switch_t_s);
+        let post = window_rate(&case.samples, case.switch_t_s + settle, end);
+        for s in &case.samples {
+            table.row(&[
+                case.label.to_string(),
+                format!("{:.3}", s.t_s),
+                s.delivered.to_string(),
+                s.replicas.to_string(),
+            ]);
+        }
+        println!(
+            "# {}: pre-shift {pre:.0} items/s, post-shift {post:.0} items/s, \
+             {} scale actions, {} resizes",
+            case.label, case.scale_actions, case.resize_actions
+        );
+        for ev in &case.events {
+            println!("#   {ev}");
+        }
+        root.insert(case.label.to_string(), case_json(&case, pre, post));
+        post_rates.push(post);
+    }
+    table.emit().expect("emit csv");
+
+    let ratio = if post_rates[0] > 0.0 { post_rates[1] / post_rates[0] } else { f64::NAN };
+    root.insert("post_shift_ratio".to_string(), Json::Num(ratio));
+    root.insert("acceptance_min_ratio".to_string(), Json::Num(1.5));
+    let json_path = figures_dir().join("elastic_scaling.json");
+    std::fs::create_dir_all(figures_dir()).expect("figures dir");
+    std::fs::write(&json_path, Json::Obj(root).to_string()).expect("write json");
+
+    println!(
+        "# post-shift throughput ratio (elastic / static): {ratio:.2} \
+         [acceptance: >= 1.50 — {}]",
+        if ratio >= 1.5 { "PASS" } else { "MISS (host likely core-starved)" }
+    );
+    println!("# JSON trajectory: {}", json_path.display());
+}

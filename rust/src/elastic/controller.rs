@@ -1,0 +1,558 @@
+//! The control-plane thread: telemetry in, scaling/resizing actions out.
+//!
+//! The controller owns the monitor-event channel for the duration of a
+//! run. Every event is absorbed (converged [`RateEstimate`]s feed the
+//! [`RateRegistry`]; §VII classifications feed the model selector) and
+//! then forwarded unchanged, so the scheduler's final [`RunReport`]
+//! aggregation sees exactly what it always saw.
+//!
+//! [`RateEstimate`]: crate::estimator::RateEstimate
+//! [`RunReport`]: crate::scheduler::RunReport
+//!
+//! Telemetry is deliberately two-tier:
+//!
+//! * **Monitor estimates** (Algorithm 1, converged) — authoritative but
+//!   slow-moving; they drive analytic buffer sizing
+//!   ([`BufferAdvisor::advise`] applied through the queue's atomic
+//!   capacity — the §III resize mechanism).
+//! * **Per-lane counter probes** — each control tick copy-and-zeros every
+//!   replica lane's `tc`/blocked instrumentation (§III) and keeps only
+//!   §IV-valid (non-read-blocked) windows as non-blocking service-rate
+//!   observations. This is the same validity rule as the paper's
+//!   estimator, applied at control-loop granularity, and it reacts within
+//!   a few ticks when a phase shift moves the true service rate.
+//!
+//! Replication decisions go through [`ElasticPolicy::decide`]
+//! (band + cooldown + scale-to-advice — see `policy.rs` for why this
+//! cannot oscillate on constant rates); every action lands in the
+//! [`ElasticEvent`] audit trail returned to the scheduler.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::classify::DistributionClass;
+use crate::control::{BufferAdvisor, RateRegistry};
+use crate::monitor::{MonitorEvent, QueueEnd};
+use crate::queue::MonitorHandle;
+use crate::timing::TimeRef;
+use crate::topology::StreamId;
+
+use super::policy::{ElasticPolicy, ScaleDecision};
+use super::stage::ElasticStage;
+
+/// What the control plane did, for the audit trail.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ElasticAction {
+    /// Replicas added to a stage.
+    ScaleUp { from: usize, to: usize },
+    /// Replicas retired from a stage.
+    ScaleDown { from: usize, to: usize },
+    /// A stream's capacity changed via the §III atomic-resize mechanism.
+    Resize { from: usize, to: usize, model: &'static str },
+}
+
+/// One audited control action.
+#[derive(Debug, Clone)]
+pub struct ElasticEvent {
+    /// [`TimeRef`] timestamp of the action.
+    pub at_ns: u64,
+    /// Stage name (scaling) or stream label (resizing).
+    pub target: String,
+    /// What was done.
+    pub action: ElasticAction,
+    /// Per-replica utilization **measured** when deciding (not the
+    /// pressure-clamped evaluation value).
+    pub rho: f64,
+    /// Arrival rate (items/sec) used for the decision.
+    pub lambda_items: f64,
+    /// Per-replica service rate (items/sec) used for the decision.
+    pub mu_items: f64,
+    /// The upstream queue was ≥ 3/4 full, so the decision was forced
+    /// out-of-band regardless of the measured ρ.
+    pub pressure: bool,
+}
+
+impl ElasticEvent {
+    /// True for replication (not buffer) actions.
+    pub fn is_scale(&self) -> bool {
+        matches!(
+            self.action,
+            ElasticAction::ScaleUp { .. } | ElasticAction::ScaleDown { .. }
+        )
+    }
+}
+
+impl fmt::Display for ElasticEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let forced = if self.pressure { " [pressure]" } else { "" };
+        match &self.action {
+            ElasticAction::ScaleUp { from, to } => write!(
+                f,
+                "[{:>9} ns] {} scale-up {from} -> {to} (rho={:.2}, lambda={:.0}/s, \
+                 mu={:.0}/s){forced}",
+                self.at_ns, self.target, self.rho, self.lambda_items, self.mu_items
+            ),
+            ElasticAction::ScaleDown { from, to } => write!(
+                f,
+                "[{:>9} ns] {} scale-down {from} -> {to} (rho={:.2}, lambda={:.0}/s, \
+                 mu={:.0}/s){forced}",
+                self.at_ns, self.target, self.rho, self.lambda_items, self.mu_items
+            ),
+            ElasticAction::Resize { from, to, model } => write!(
+                f,
+                "[{:>9} ns] {} resize {from} -> {to} items ({model}, rho={:.2})",
+                self.at_ns, self.target, self.rho
+            ),
+        }
+    }
+}
+
+/// Global control-plane knobs (per-stage knobs live in [`ElasticPolicy`]).
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Control-loop period.
+    pub tick: Duration,
+    /// EWMA smoothing for the counter-probe rates (1.0 = no smoothing).
+    pub ewma_alpha: f64,
+    /// Apply [`BufferAdvisor`] capacities to monitored streams.
+    pub buffer_advice: bool,
+    /// The analytic sizing model knobs.
+    pub advisor: BufferAdvisor,
+    /// Ticks between capacity changes on one stream.
+    pub resize_cooldown_ticks: u32,
+    /// Minimum relative capacity change worth applying (anti-thrash).
+    pub resize_min_rel_change: f64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            tick: Duration::from_millis(10),
+            ewma_alpha: 0.4,
+            buffer_advice: true,
+            advisor: BufferAdvisor::default(),
+            resize_cooldown_ticks: 20,
+            resize_min_rel_change: 0.25,
+        }
+    }
+}
+
+/// A replicable stage plus the stream feeding it (λ source).
+pub struct StageBinding {
+    pub stage: Arc<dyn ElasticStage>,
+    pub upstream: Option<StreamBinding>,
+}
+
+/// A monitored stream the controller may observe and resize.
+#[derive(Clone)]
+pub struct StreamBinding {
+    pub id: StreamId,
+    pub label: String,
+    pub handle: Arc<dyn MonitorHandle>,
+}
+
+#[derive(Debug, Default)]
+struct StageState {
+    mu_ewma: Option<f64>,
+    lambda_ewma: Option<f64>,
+    last_pushes: u64,
+    cooldown: u32,
+}
+
+#[derive(Debug, Default)]
+struct StreamState {
+    cooldown: u32,
+}
+
+/// The control-plane thread body.
+pub struct ElasticController {
+    cfg: ElasticConfig,
+    stages: Vec<StageBinding>,
+    streams: Vec<StreamBinding>,
+    registry: RateRegistry,
+    classes: HashMap<StreamId, DistributionClass>,
+    forward: Sender<MonitorEvent>,
+    stop: Arc<AtomicBool>,
+    time: TimeRef,
+    events: Vec<ElasticEvent>,
+    stage_states: Vec<StageState>,
+    stream_states: Vec<StreamState>,
+}
+
+impl ElasticController {
+    pub fn new(
+        cfg: ElasticConfig,
+        stages: Vec<StageBinding>,
+        streams: Vec<StreamBinding>,
+        forward: Sender<MonitorEvent>,
+        stop: Arc<AtomicBool>,
+    ) -> Self {
+        let stage_states = stages.iter().map(|_| StageState::default()).collect();
+        let stream_states = streams.iter().map(|_| StreamState::default()).collect();
+        ElasticController {
+            cfg,
+            stages,
+            streams,
+            registry: RateRegistry::new(),
+            classes: HashMap::new(),
+            forward,
+            stop,
+            time: TimeRef::new(),
+            events: Vec::new(),
+            stage_states,
+            stream_states,
+        }
+    }
+
+    /// Main loop: pump monitor events between ticks until `stop` is set
+    /// (after the monitors have been joined), then return the audit trail.
+    pub fn run(mut self, rx: Receiver<MonitorEvent>) -> Vec<ElasticEvent> {
+        // Baseline the cumulative counters so the first tick sees a clean
+        // delta instead of the pre-run total.
+        for (i, sb) in self.stages.iter().enumerate() {
+            if let Some(up) = &sb.upstream {
+                self.stage_states[i].last_pushes = up.handle.counters().total_pushes();
+            }
+        }
+        let tick = self.cfg.tick.max(Duration::from_millis(1));
+        let mut last_tick = Instant::now();
+        let mut next_tick = last_tick + tick;
+        let mut disconnected = false;
+        loop {
+            let now = Instant::now();
+            if now >= next_tick {
+                let dt = now.duration_since(last_tick).as_secs_f64();
+                last_tick = now;
+                next_tick = now + tick;
+                if dt > 0.0 {
+                    self.tick(dt);
+                }
+            }
+            let wait = next_tick.saturating_duration_since(Instant::now());
+            if disconnected {
+                // No monitors (or all exited): plain fixed-rate ticking.
+                if self.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(wait.max(Duration::from_micros(100)));
+            } else {
+                match rx.recv_timeout(wait) {
+                    Ok(ev) => self.absorb_and_forward(ev),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                }
+            }
+            if self.stop.load(Ordering::Relaxed) {
+                while let Ok(ev) = rx.try_recv() {
+                    self.absorb_and_forward(ev);
+                }
+                break;
+            }
+        }
+        self.events
+    }
+
+    /// Fold one monitor event into the registries, then pass it through.
+    fn absorb_and_forward(&mut self, ev: MonitorEvent) {
+        match &ev {
+            MonitorEvent::Converged { stream, end, estimate } => {
+                self.registry.update(*stream, *end, estimate);
+            }
+            MonitorEvent::Classified { stream, end, class, .. } => {
+                if *end == QueueEnd::Head {
+                    self.classes.insert(*stream, *class);
+                }
+            }
+            _ => {}
+        }
+        let _ = self.forward.send(ev);
+    }
+
+    /// One control-loop step. `dt` = realized seconds since the last tick.
+    fn tick(&mut self, dt: f64) {
+        let at_ns = self.time.now_ns();
+        for i in 0..self.stages.len() {
+            self.tick_stage(i, dt, at_ns);
+        }
+        if self.cfg.buffer_advice {
+            self.tick_buffers(at_ns);
+        }
+    }
+
+    fn tick_stage(&mut self, i: usize, dt: f64, at_ns: u64) {
+        let stage = self.stages[i].stage.clone();
+        let policy: ElasticPolicy = stage.policy().clone();
+        let alpha = self.cfg.ewma_alpha.clamp(0.01, 1.0);
+
+        // μ (items/sec per replica): §IV-valid lane windows only — a lane
+        // that read-blocked was starved, not slow.
+        let samples = stage.lane_probe();
+        let (mut sum, mut k) = (0.0f64, 0u32);
+        for s in &samples {
+            if s.head_valid() && s.tc_head > 0 {
+                sum += s.tc_head as f64 / dt;
+                k += 1;
+            }
+        }
+        {
+            let st = &mut self.stage_states[i];
+            if k > 0 {
+                let obs = sum / k as f64;
+                st.mu_ewma = Some(match st.mu_ewma {
+                    Some(prev) => alpha * obs + (1.0 - alpha) * prev,
+                    None => obs,
+                });
+            }
+        }
+
+        // λ (items/sec into the stage): admitted-arrival delta from the
+        // upstream stream's lifetime counters. Deliberately *not* lifted
+        // by the monitor's converged tail estimate: that estimate can be
+        // epochs stale, and pinning λ to it (e.g. via max()) would hold
+        // replicas up long after a load drop. The case where admitted λ
+        // understates offered load — a full upstream queue throttling the
+        // producer — is what the occupancy `pressure` override below is
+        // for.
+        let mut pressure = false;
+        if let Some(up) = &self.stages[i].upstream {
+            let total = up.handle.counters().total_pushes();
+            let cap = up.handle.capacity();
+            pressure = cap > 0 && up.handle.len() * 4 >= cap * 3;
+            let st = &mut self.stage_states[i];
+            let delta = total.saturating_sub(st.last_pushes);
+            st.last_pushes = total;
+            let obs = delta as f64 / dt;
+            st.lambda_ewma = Some(match st.lambda_ewma {
+                Some(prev) => alpha * obs + (1.0 - alpha) * prev,
+                None => obs,
+            });
+        }
+
+        if stage.input_closed() {
+            return; // nothing left to scale
+        }
+        let st = &mut self.stage_states[i];
+        if st.cooldown > 0 {
+            st.cooldown -= 1;
+            return;
+        }
+        let (Some(lam), Some(mu)) = (st.lambda_ewma, st.mu_ewma) else {
+            return;
+        };
+        if mu <= 0.0 {
+            return;
+        }
+        let replicas = stage.replicas();
+        if replicas == 0 {
+            return;
+        }
+        let rho = lam / (replicas as f64 * mu);
+        // A backlogged upstream queue means the admitted λ understates
+        // offered load; evaluate out-of-band while auditing the measured ρ.
+        let eval_rho = if pressure {
+            rho.max(policy.target_rho + policy.band + 0.05)
+        } else {
+            rho
+        };
+        match policy.decide(eval_rho, replicas, lam, mu) {
+            ScaleDecision::Hold => {}
+            ScaleDecision::ScaleTo(n) => {
+                let got = stage.scale_to(n);
+                if got != replicas {
+                    let action = if got > replicas {
+                        ElasticAction::ScaleUp { from: replicas, to: got }
+                    } else {
+                        ElasticAction::ScaleDown { from: replicas, to: got }
+                    };
+                    self.events.push(ElasticEvent {
+                        at_ns,
+                        target: stage.stage_name().to_string(),
+                        action,
+                        rho,
+                        lambda_items: lam,
+                        mu_items: mu,
+                        pressure,
+                    });
+                    self.stage_states[i].cooldown = policy.cooldown_ticks;
+                }
+            }
+        }
+    }
+
+    /// Apply analytic buffer sizing to streams whose both-end rates have
+    /// converged (the control consumer of [`BufferAdvisor`]).
+    fn tick_buffers(&mut self, at_ns: u64) {
+        for (i, sb) in self.streams.iter().enumerate() {
+            let stt = &mut self.stream_states[i];
+            if stt.cooldown > 0 {
+                stt.cooldown -= 1;
+                continue;
+            }
+            let Some(rates) = self.registry.get(sb.id) else { continue };
+            if rates.lambda_items.is_none() || rates.mu_items.is_none() {
+                continue;
+            }
+            let class =
+                self.classes.get(&sb.id).copied().unwrap_or(DistributionClass::Unknown);
+            let Some(advice) = self.cfg.advisor.advise(sb.id, rates, class) else {
+                continue;
+            };
+            let cur = sb.handle.capacity();
+            if cur == 0 {
+                continue;
+            }
+            let rel = advice.capacity.abs_diff(cur) as f64 / cur as f64;
+            if rel >= self.cfg.resize_min_rel_change {
+                sb.handle.set_capacity(advice.capacity);
+                self.events.push(ElasticEvent {
+                    at_ns,
+                    target: sb.label.clone(),
+                    action: ElasticAction::Resize {
+                        from: cur,
+                        to: advice.capacity,
+                        model: advice.model,
+                    },
+                    rho: advice.rho,
+                    lambda_items: rates.lambda_items.unwrap_or(0.0),
+                    mu_items: rates.mu_items.unwrap_or(0.0),
+                    pressure: false,
+                });
+                stt.cooldown = self.cfg.resize_cooldown_ticks;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::{instrumented, MonitorSample, StreamConfig};
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Mutex;
+
+    /// A scriptable stage: fixed per-lane tc per probe, no real threads.
+    struct FakeStage {
+        replicas: Mutex<usize>,
+        policy: ElasticPolicy,
+        tc_per_lane: AtomicU64,
+    }
+
+    impl ElasticStage for FakeStage {
+        fn stage_name(&self) -> &str {
+            "fake"
+        }
+        fn replicas(&self) -> usize {
+            *self.replicas.lock().unwrap()
+        }
+        fn scale_to(&self, n: usize) -> usize {
+            let n = self.policy.clamp(n);
+            *self.replicas.lock().unwrap() = n;
+            n
+        }
+        fn lane_probe(&self) -> Vec<MonitorSample> {
+            let tc = self.tc_per_lane.load(Ordering::Relaxed);
+            (0..self.replicas())
+                .map(|_| MonitorSample {
+                    tc_head: tc,
+                    tc_tail: tc,
+                    read_blocked: false,
+                    write_blocked: false,
+                })
+                .collect()
+        }
+        fn backlog(&self) -> usize {
+            0
+        }
+        fn policy(&self) -> &ElasticPolicy {
+            &self.policy
+        }
+        fn input_closed(&self) -> bool {
+            false
+        }
+        fn join_workers(&self) {}
+    }
+
+    #[test]
+    fn controller_scales_once_and_settles_on_constant_load() {
+        let policy = ElasticPolicy {
+            max_replicas: 8,
+            cooldown_ticks: 2,
+            ..Default::default()
+        };
+        let stage = Arc::new(FakeStage {
+            replicas: Mutex::new(1),
+            policy,
+            tc_per_lane: AtomicU64::new(20),
+        });
+        let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(4096));
+        let (fwd_tx, _fwd_rx) = std::sync::mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut ctl = ElasticController::new(
+            ElasticConfig { buffer_advice: false, ewma_alpha: 1.0, ..Default::default() },
+            vec![StageBinding {
+                stage: stage.clone(),
+                upstream: Some(StreamBinding {
+                    id: StreamId(0),
+                    label: "src -> fake".into(),
+                    handle,
+                }),
+            }],
+            vec![],
+            fwd_tx,
+            stop,
+        );
+        // 8 ticks of dt = 10 ms: 100 arrivals/tick = 10k/s; 20 served per
+        // lane per tick = 2k/s per replica.
+        for _ in 0..8 {
+            for i in 0..100u64 {
+                let _ = upq.try_push(i);
+            }
+            ctl.tick(0.010);
+        }
+        let scale_events: Vec<_> = ctl.events.iter().filter(|e| e.is_scale()).collect();
+        assert_eq!(
+            scale_events.len(),
+            1,
+            "constant load must produce exactly one scale action: {:?}",
+            ctl.events
+        );
+        // advice = ceil(10000 / (0.7 · 2000)) = ceil(7.14) = 8
+        assert_eq!(stage.replicas(), 8);
+        match scale_events[0].action {
+            ElasticAction::ScaleUp { from, to } => {
+                assert_eq!((from, to), (1, 8));
+            }
+            ref other => panic!("expected ScaleUp, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn event_display_is_readable() {
+        let e = ElasticEvent {
+            at_ns: 42,
+            target: "stage".into(),
+            action: ElasticAction::ScaleUp { from: 1, to: 3 },
+            rho: 1.5,
+            lambda_items: 100.0,
+            mu_items: 30.0,
+            pressure: true,
+        };
+        let s = e.to_string();
+        assert!(s.contains("scale-up 1 -> 3"), "{s}");
+        assert!(s.contains("[pressure]"), "{s}");
+        let r = ElasticEvent {
+            at_ns: 43,
+            target: "a -> b".into(),
+            action: ElasticAction::Resize { from: 64, to: 256, model: "mm1c" },
+            rho: 0.8,
+            lambda_items: 0.0,
+            mu_items: 0.0,
+            pressure: false,
+        };
+        assert!(r.to_string().contains("resize 64 -> 256"), "{r}");
+    }
+}

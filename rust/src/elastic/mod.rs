@@ -1,0 +1,70 @@
+//! # The elastic control plane — closing the loop the paper opens.
+//!
+//! The paper's thesis is that non-blocking service rates can be
+//! approximated *while the application runs* precisely so the runtime can
+//! **act** on them: "knowing the downstream kernel's non-blocking service
+//! rate is exactly what we need to know to make an informed
+//! parallelization decision" (§I). This subsystem is that action layer:
+//!
+//! * [`stage`] — data-parallel **replication**: a sequence-tagging
+//!   [`SplitKernel`], a reordering [`MergeKernel`], and a [`ReplicaSet`]
+//!   that spawns/retires worker replicas at run time while preserving
+//!   exact item order and SPSC queue discipline.
+//! * [`policy`] — the **stability** layer: target-ρ band (hysteresis),
+//!   cooldown, min/max bounds, and scale-to-advice semantics that make
+//!   the loop provably non-oscillating on constant rates.
+//! * [`controller`] — the **control-plane thread**: subscribes to the
+//!   monitors' converged [`RateEstimate`]s (maintaining a
+//!   [`RateRegistry`]), probes per-lane `tc` counters with the paper's
+//!   §IV validity rule, executes replication decisions, and applies
+//!   [`BufferAdvisor`] capacities through the queue's atomic capacity
+//!   (the §III resize mechanism). Every action is audited in
+//!   [`RunReport::elastic_events`].
+//!
+//! [`RateEstimate`]: crate::estimator::RateEstimate
+//! [`RateRegistry`]: crate::control::RateRegistry
+//! [`BufferAdvisor`]: crate::control::BufferAdvisor
+//! [`RunReport::elastic_events`]: crate::scheduler::RunReport::elastic_events
+//!
+//! ## Declaring a replicable stage
+//!
+//! ```no_run
+//! use streamflow::elastic::{ElasticStageConfig, Replicable};
+//! use streamflow::prelude::*;
+//!
+//! struct Stemmer;
+//! impl Replicable for Stemmer {
+//!     type In = String;
+//!     type Out = String;
+//!     fn process(&mut self, s: String) -> String {
+//!         s.to_lowercase()
+//!     }
+//! }
+//!
+//! let mut topo = Topology::new("app");
+//! # let src = topo.add_kernel(Box::new(streamflow::kernel::ClosureSource::new(
+//! #     "src", || None::<String>)));
+//! # let snk = topo.add_kernel(Box::new(streamflow::kernel::ClosureSink::new(
+//! #     "snk", |_: String| ())));
+//! let (split, merge) = topo
+//!     .add_elastic_stage("stem", ElasticStageConfig::default(), |_replica| Stemmer)
+//!     .unwrap();
+//! topo.connect::<String>(src, 0, split, 0, StreamConfig::default()).unwrap();
+//! topo.connect::<String>(merge, 0, snk, 0, StreamConfig::default()).unwrap();
+//! let report = Scheduler::new(topo).run().unwrap();
+//! for ev in &report.elastic_events {
+//!     println!("{ev}");
+//! }
+//! ```
+
+pub mod controller;
+pub mod policy;
+pub mod stage;
+
+pub use controller::{
+    ElasticAction, ElasticConfig, ElasticController, ElasticEvent, StageBinding, StreamBinding,
+};
+pub use policy::{ElasticPolicy, ScaleDecision};
+pub use stage::{
+    ElasticStage, ElasticStageConfig, MergeKernel, Replicable, ReplicaSet, SplitKernel,
+};

@@ -1,0 +1,182 @@
+//! The elasticity policy: when to replicate, when to retire.
+//!
+//! The paper's point (§I–II) is that the **non-blocking** service rate is
+//! the number you need for an informed parallelization decision; this
+//! module turns that number into a *stable* decision rule. Stability comes
+//! from three ingredients borrowed from production autoscalers (Najdataei
+//! et al.; Röger & Mayer's elasticity survey):
+//!
+//! * a **target band** around the per-replica utilization ρ — no action
+//!   while `target − band ≤ ρ ≤ target + band` (hysteresis);
+//! * scaling **directly to the advised replica count**
+//!   ([`crate::control::parallelism_advice`]) rather than stepping ±1 —
+//!   with constant rates the advice is a fixed point, so the loop cannot
+//!   oscillate (proved by `prop_policy_never_oscillates_on_constant_trace`);
+//! * a **cooldown** between actions so in-flight effects (replica warmup,
+//!   queue drain) are observed before the next decision.
+
+use crate::control::parallelism_advice;
+use crate::{Result, SfError};
+
+/// Per-stage elasticity knobs.
+#[derive(Debug, Clone)]
+pub struct ElasticPolicy {
+    /// Per-replica utilization the controller steers toward (0 < ρ* ≤ 1).
+    pub target_rho: f64,
+    /// Hysteresis half-width: act only when ρ leaves `target ± band`.
+    pub band: f64,
+    /// Never fewer than this many replicas.
+    pub min_replicas: usize,
+    /// Never more than this many replicas.
+    pub max_replicas: usize,
+    /// Control ticks to wait after an action before acting again.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for ElasticPolicy {
+    fn default() -> Self {
+        ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: 8,
+            cooldown_ticks: 8,
+        }
+    }
+}
+
+/// What the policy wants done to a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Stay at the current replica count.
+    Hold,
+    /// Move to exactly this many replicas.
+    ScaleTo(usize),
+}
+
+impl ElasticPolicy {
+    /// A fixed (non-elastic) policy pinned at `n` replicas — the static
+    /// baseline configuration for A/B throughput comparisons.
+    pub fn pinned(n: usize) -> Self {
+        ElasticPolicy {
+            min_replicas: n.max(1),
+            max_replicas: n.max(1),
+            ..Default::default()
+        }
+    }
+
+    /// Check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.target_rho > 0.0 && self.target_rho <= 1.0) {
+            return Err(SfError::Config(format!(
+                "target_rho must be in (0, 1], got {}",
+                self.target_rho
+            )));
+        }
+        if !(self.band >= 0.0 && self.band < self.target_rho) {
+            return Err(SfError::Config(format!(
+                "band must be in [0, target_rho), got {}",
+                self.band
+            )));
+        }
+        if self.min_replicas == 0 || self.max_replicas < self.min_replicas {
+            return Err(SfError::Config(format!(
+                "replica bounds invalid: min {} max {}",
+                self.min_replicas, self.max_replicas
+            )));
+        }
+        Ok(())
+    }
+
+    /// Clamp a replica count into the policy's bounds.
+    pub fn clamp(&self, n: usize) -> usize {
+        n.clamp(self.min_replicas.max(1), self.max_replicas.max(self.min_replicas).max(1))
+    }
+
+    /// The pure decision rule. `rho` is the measured per-replica
+    /// utilization `λ / (R·μ)`; `lambda`/`mu` are items/sec (arrivals to
+    /// the stage; non-blocking service rate of one replica).
+    ///
+    /// Returns [`ScaleDecision::ScaleTo`] only when ρ is outside the band
+    /// *and* the advised count actually differs in the breach direction —
+    /// so a constant-rate trace produces at most one action, ever.
+    pub fn decide(&self, rho: f64, current: usize, lambda: f64, mu: f64) -> ScaleDecision {
+        if !rho.is_finite() || !lambda.is_finite() || !mu.is_finite() || mu <= 0.0 || lambda < 0.0
+        {
+            return ScaleDecision::Hold;
+        }
+        let advised = self.clamp(parallelism_advice(lambda, mu, self.target_rho));
+        if rho > self.target_rho + self.band && advised > current {
+            ScaleDecision::ScaleTo(advised)
+        } else if rho < self.target_rho - self.band && advised < current {
+            ScaleDecision::ScaleTo(advised)
+        } else {
+            ScaleDecision::Hold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_valid() {
+        ElasticPolicy::default().validate().unwrap();
+        ElasticPolicy::pinned(1).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(ElasticPolicy { target_rho: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ElasticPolicy { target_rho: 1.5, ..Default::default() }.validate().is_err());
+        assert!(ElasticPolicy { band: 0.9, ..Default::default() }.validate().is_err());
+        assert!(ElasticPolicy { min_replicas: 0, ..Default::default() }.validate().is_err());
+        assert!(
+            ElasticPolicy { min_replicas: 5, max_replicas: 2, ..Default::default() }
+                .validate()
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn scales_up_when_overloaded() {
+        let p = ElasticPolicy::default();
+        // λ = 10k, μ = 3k per replica, 1 replica ⇒ ρ = 3.33: way over band.
+        let d = p.decide(10_000.0 / 3_000.0, 1, 10_000.0, 3_000.0);
+        // advice = ceil(10000 / (3000·0.7)) = ceil(4.76) = 5
+        assert_eq!(d, ScaleDecision::ScaleTo(5));
+    }
+
+    #[test]
+    fn scales_down_when_idle() {
+        let p = ElasticPolicy::default();
+        // λ = 1k, μ = 3k per replica, 5 replicas ⇒ ρ = 0.067.
+        let d = p.decide(1_000.0 / (5.0 * 3_000.0), 5, 1_000.0, 3_000.0);
+        assert_eq!(d, ScaleDecision::ScaleTo(1));
+    }
+
+    #[test]
+    fn holds_inside_band() {
+        let p = ElasticPolicy::default();
+        // ρ = 0.71 with target 0.7 ± 0.15: hold.
+        assert_eq!(p.decide(0.71, 2, 0.71 * 2.0 * 3_000.0, 3_000.0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn respects_max_replicas() {
+        let p = ElasticPolicy { max_replicas: 3, ..Default::default() };
+        match p.decide(4.0, 1, 100_000.0, 3_000.0) {
+            ScaleDecision::ScaleTo(n) => assert_eq!(n, 3),
+            other => panic!("expected ScaleTo(3), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_rates_hold() {
+        let p = ElasticPolicy::default();
+        assert_eq!(p.decide(f64::NAN, 1, 1.0, 1.0), ScaleDecision::Hold);
+        assert_eq!(p.decide(2.0, 1, 1.0, 0.0), ScaleDecision::Hold);
+        assert_eq!(p.decide(2.0, 1, -1.0, 1.0), ScaleDecision::Hold);
+    }
+}

@@ -1,48 +1,76 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no derive-macro dependency — the
+//! offline build keeps external crates to the bare minimum).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All the ways streamflow operations can fail.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum SfError {
     /// Topology construction errors (dangling ports, duplicate edges, ...).
-    #[error("topology error: {0}")]
     Topology(String),
 
     /// A port index or type did not match the kernel's declaration.
-    #[error("port error: {0}")]
     Port(String),
 
     /// Scheduler lifecycle errors (double start, failed join, ...).
-    #[error("scheduler error: {0}")]
     Scheduler(String),
 
     /// The sampling-period controller failed to find a stable period
     /// (the paper's explicit "our approach will not work here" outcome).
-    #[error("no stable sampling period: {0}")]
     NoStablePeriod(String),
 
     /// Artifact manifest / HLO loading problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Errors bubbled up from the XLA/PJRT runtime.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Configuration parse/validation errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON syntax errors from the built-in parser.
-    #[error("json error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for SfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SfError::Topology(m) => write!(f, "topology error: {m}"),
+            SfError::Port(m) => write!(f, "port error: {m}"),
+            SfError::Scheduler(m) => write!(f, "scheduler error: {m}"),
+            SfError::NoStablePeriod(m) => write!(f, "no stable sampling period: {m}"),
+            SfError::Artifact(m) => write!(f, "artifact error: {m}"),
+            SfError::Xla(m) => write!(f, "xla error: {m}"),
+            SfError::Config(m) => write!(f, "config error: {m}"),
+            SfError::Json { offset, message } => {
+                write!(f, "json error at byte {offset}: {message}")
+            }
+            SfError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SfError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SfError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SfError {
+    fn from(e: std::io::Error) -> Self {
+        SfError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for SfError {
     fn from(e: xla::Error) -> Self {
         SfError::Xla(e.to_string())
@@ -51,3 +79,23 @@ impl From<xla::Error> for SfError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, SfError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert!(SfError::Topology("x".into()).to_string().starts_with("topology error"));
+        assert!(SfError::Json { offset: 3, message: "bad".into() }
+            .to_string()
+            .contains("byte 3"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        use std::error::Error as _;
+        let e: SfError = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(e.source().is_some());
+    }
+}

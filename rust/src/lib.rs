@@ -18,6 +18,16 @@
 //!   `q̄`, and Laplacian-of-Gaussian convergence detection (Eq. 4) — with a
 //!   pure-Rust backend and an XLA/PJRT backend built from the Pallas
 //!   kernels under `python/`.
+//! * [`control`] — what the rates are *for*: the per-stream
+//!   [`control::RateRegistry`], analytic buffer sizing
+//!   ([`control::BufferAdvisor`]) and replica-count advice.
+//! * [`elastic`] — the **closed-loop control plane**: declared replicable
+//!   stages (`Split → {replica…} → Merge` with order-preserving sequence
+//!   tags), a control thread that consumes converged rate estimates plus
+//!   per-lane non-blocking counter probes, and executes the §I
+//!   parallelization decision (spawning/retiring replicas) and the §III
+//!   buffer-resize decision at run time — audited in
+//!   [`scheduler::RunReport::elastic_events`].
 //! * [`queueing`] — the M/M/1 analytics of Eq. 1 (non-blocking observation
 //!   probabilities) and analytic buffer sizing.
 //! * [`stats`] — Welford/Chan streaming moments, Pébay higher moments,
@@ -34,6 +44,7 @@ pub mod campaign;
 pub mod cli;
 pub mod config;
 pub mod control;
+pub mod elastic;
 pub mod error;
 pub mod estimator;
 pub mod kernel;
@@ -58,6 +69,7 @@ pub use error::{Result, SfError};
 
 /// Convenience re-exports for application authors.
 pub mod prelude {
+    pub use crate::elastic::{ElasticPolicy, ElasticStageConfig, Replicable};
     pub use crate::error::{Result, SfError};
     pub use crate::estimator::{EstimatorConfig, RateEstimate};
     pub use crate::kernel::{Kernel, KernelContext, KernelStatus};

@@ -2,131 +2,219 @@
 //!
 //! The build-time Python stack (`python/compile/`) lowers the L2 JAX graphs
 //! (which call the L1 Pallas kernels) to **HLO text** under `artifacts/`,
-//! described by `manifest.json`. This module wraps the `xla` crate:
-//! text → `HloModuleProto` → compile once on the CPU PJRT client → execute
-//! from the Rust hot path. Python never runs at request time.
+//! described by `manifest.json`. With the `pjrt` cargo feature enabled this
+//! module wraps the `xla` crate: text → `HloModuleProto` → compile once on
+//! the CPU PJRT client → execute from the Rust hot path. Python never runs
+//! at request time.
+//!
+//! **Feature gating:** the default build carries no accelerator toolchain —
+//! [`Engine::load_dir`] then returns a readable [`SfError::Artifact`] and
+//! every consumer (the monitor's XLA backend, the matmul XLA dot kernel,
+//! the ablation bench) falls back to the native path. Manifest parsing,
+//! [`ThreadBound`], and [`default_artifact_dir`] are always available.
 
 pub mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::path::PathBuf;
 
-use crate::{Result, SfError};
+use crate::Result;
 
-/// A PJRT client plus the artifact manifest of a directory.
-pub struct Engine {
-    client: Rc<xla::PjRtClient>,
-    manifest: Manifest,
-    dir: PathBuf,
-}
+#[cfg(feature = "pjrt")]
+mod engine {
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
 
-impl Engine {
-    /// Load `manifest.json` from `dir` and bring up the CPU PJRT client.
-    pub fn load_dir(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client: Rc::new(client), manifest, dir: dir.to_path_buf() })
+    use super::manifest::{ArtifactSpec, Manifest};
+    use crate::{Result, SfError};
+
+    /// A PJRT client plus the artifact manifest of a directory.
+    pub struct Engine {
+        client: Rc<xla::PjRtClient>,
+        manifest: Manifest,
+        dir: PathBuf,
     }
 
-    /// Platform string (e.g. "cpu") for reports.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// The manifest read at load time.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile one artifact by manifest name.
-    pub fn load_artifact(&self, name: &str) -> Result<ArtifactExec> {
-        let spec = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| SfError::Artifact(format!("artifact '{name}' not in manifest")))?
-            .clone();
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(ArtifactExec { exe, spec, _client: self.client.clone() })
-    }
-}
-
-/// A compiled artifact ready to execute.
-pub struct ArtifactExec {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ArtifactSpec,
-    /// Keep the client alive as long as the executable.
-    _client: Rc<xla::PjRtClient>,
-}
-
-impl ArtifactExec {
-    /// The manifest entry this was compiled from.
-    pub fn spec(&self) -> &ArtifactSpec {
-        &self.spec
-    }
-
-    /// Execute with f32 inputs `(data, dims)`; returns flattened f32
-    /// outputs in manifest order.
-    ///
-    /// Validates shapes against the manifest before touching PJRT so a
-    /// mismatched artifact fails with a readable error instead of an XLA
-    /// abort.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(SfError::Artifact(format!(
-                "artifact '{}' expects {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            )));
+    impl Engine {
+        /// Load `manifest.json` from `dir` and bring up the CPU PJRT client.
+        pub fn load_dir(dir: &Path) -> Result<Engine> {
+            let manifest = Manifest::load(&dir.join("manifest.json"))?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Engine { client: Rc::new(client), manifest, dir: dir.to_path_buf() })
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (idx, ((data, dims), spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
-            let want: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            if *dims != want.as_slice() {
+
+        /// Platform string (e.g. "cpu") for reports.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// The manifest read at load time.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Compile one artifact by manifest name.
+        pub fn load_artifact(&self, name: &str) -> Result<ArtifactExec> {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| SfError::Artifact(format!("artifact '{name}' not in manifest")))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(ArtifactExec { exe, spec, _client: self.client.clone() })
+        }
+    }
+
+    /// A compiled artifact ready to execute.
+    pub struct ArtifactExec {
+        exe: xla::PjRtLoadedExecutable,
+        spec: ArtifactSpec,
+        /// Keep the client alive as long as the executable.
+        _client: Rc<xla::PjRtClient>,
+    }
+
+    impl ArtifactExec {
+        /// The manifest entry this was compiled from.
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
+
+        /// Execute with f32 inputs `(data, dims)`; returns flattened f32
+        /// outputs in manifest order.
+        ///
+        /// Validates shapes against the manifest before touching PJRT so a
+        /// mismatched artifact fails with a readable error instead of an
+        /// XLA abort.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            if inputs.len() != self.spec.inputs.len() {
                 return Err(SfError::Artifact(format!(
-                    "artifact '{}' input {idx}: shape {:?} != manifest {:?}",
-                    self.spec.name, dims, want
-                )));
-            }
-            let expect_len: i64 = dims.iter().product();
-            if data.len() as i64 != expect_len {
-                return Err(SfError::Artifact(format!(
-                    "artifact '{}' input {idx}: {} elements for shape {:?}",
+                    "artifact '{}' expects {} inputs, got {}",
                     self.spec.name,
-                    data.len(),
-                    dims
+                    self.spec.inputs.len(),
+                    inputs.len()
                 )));
             }
-            literals.push(xla::Literal::vec1(data).reshape(dims)?);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (idx, ((data, dims), spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+                let want: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                if *dims != want.as_slice() {
+                    return Err(SfError::Artifact(format!(
+                        "artifact '{}' input {idx}: shape {:?} != manifest {:?}",
+                        self.spec.name, dims, want
+                    )));
+                }
+                let expect_len: i64 = dims.iter().product();
+                if data.len() as i64 != expect_len {
+                    return Err(SfError::Artifact(format!(
+                        "artifact '{}' input {idx}: {} elements for shape {:?}",
+                        self.spec.name,
+                        data.len(),
+                        dims
+                    )));
+                }
+                literals.push(xla::Literal::vec1(data).reshape(dims)?);
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let first = result
+                .first()
+                .and_then(|r| r.first())
+                .ok_or_else(|| SfError::Artifact("empty execution result".into()))?;
+            let lit = first.to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: the result is a tuple.
+            let parts = lit.to_tuple()?;
+            let mut outs = Vec::with_capacity(parts.len());
+            for p in parts {
+                outs.push(p.to_vec::<f32>()?);
+            }
+            if outs.len() != self.spec.outputs.len() {
+                return Err(SfError::Artifact(format!(
+                    "artifact '{}' returned {} outputs, manifest says {}",
+                    self.spec.name,
+                    outs.len(),
+                    self.spec.outputs.len()
+                )));
+            }
+            Ok(outs)
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let first = result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| SfError::Artifact("empty execution result".into()))?;
-        let lit = first.to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: the result is always a tuple.
-        let parts = lit.to_tuple()?;
-        let mut outs = Vec::with_capacity(parts.len());
-        for p in parts {
-            outs.push(p.to_vec::<f32>()?);
-        }
-        if outs.len() != self.spec.outputs.len() {
-            return Err(SfError::Artifact(format!(
-                "artifact '{}' returned {} outputs, manifest says {}",
-                self.spec.name,
-                outs.len(),
-                self.spec.outputs.len()
-            )));
-        }
-        Ok(outs)
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod engine {
+    use std::path::{Path, PathBuf};
+
+    use super::manifest::{ArtifactSpec, Manifest};
+    use crate::{Result, SfError};
+
+    /// Stub engine for builds without the `pjrt` feature. Loading always
+    /// fails with a readable error so callers take their native fallback.
+    pub struct Engine {
+        manifest: Manifest,
+        dir: PathBuf,
+    }
+
+    impl Engine {
+        /// Parse the manifest (so missing-directory errors look identical
+        /// to the real engine's), then report the runtime as unavailable.
+        pub fn load_dir(dir: &Path) -> Result<Engine> {
+            let probe = Engine {
+                manifest: Manifest::load(&dir.join("manifest.json"))?,
+                dir: dir.to_path_buf(),
+            };
+            Err(SfError::Artifact(format!(
+                "artifact directory '{}' is readable ({} artifacts), but this build \
+                 has no PJRT runtime — add an `xla` bindings dependency (see the \
+                 comment in rust/Cargo.toml) and rebuild with `--features pjrt`",
+                probe.dir.display(),
+                probe.manifest().names().len()
+            )))
+        }
+
+        /// Platform string (e.g. "cpu") for reports.
+        pub fn platform(&self) -> String {
+            "unavailable (pjrt feature disabled)".to_string()
+        }
+
+        /// The manifest read at load time.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Compile one artifact by manifest name.
+        pub fn load_artifact(&self, name: &str) -> Result<ArtifactExec> {
+            Err(SfError::Artifact(format!(
+                "cannot compile artifact '{name}': built without the `pjrt` feature \
+                 (requires a vendored `xla` crate — see rust/Cargo.toml)"
+            )))
+        }
+    }
+
+    /// Stub compiled artifact; never constructed without `pjrt`.
+    pub struct ArtifactExec {
+        spec: ArtifactSpec,
+    }
+
+    impl ArtifactExec {
+        /// The manifest entry this was compiled from.
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
+
+        /// Execute with f32 inputs `(data, dims)`.
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            Err(SfError::Artifact(format!(
+                "cannot execute artifact '{}': built without the `pjrt` feature",
+                self.spec.name
+            )))
+        }
+    }
+}
+
+pub use engine::{ArtifactExec, Engine};
 
 /// A cell for PJRT objects that must live entirely on one thread.
 ///
@@ -215,6 +303,7 @@ pub fn default_artifact_dir() -> PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     /// Integration coverage lives in `rust/tests/runtime_artifacts.rs`
     /// (needs `make artifacts` to have run). Here: pure failure paths.
@@ -225,7 +314,7 @@ mod tests {
             Ok(_) => panic!("expected error for missing dir"),
         };
         match e {
-            SfError::Artifact(_) | SfError::Io(_) => {}
+            crate::SfError::Artifact(_) | crate::SfError::Io(_) => {}
             other => panic!("unexpected error: {other:?}"),
         }
     }

@@ -5,12 +5,24 @@
 //! runtime and the OS scheduler. `run()` drives the whole application to
 //! completion and returns a [`RunReport`] with the converged service-rate
 //! estimates per stream.
+//!
+//! When the topology declares replicable stages
+//! ([`crate::topology::Topology::add_elastic_stage`]) the scheduler also
+//! spawns the [`ElasticController`] control-plane thread: it takes over
+//! the monitor-event channel (absorbing and forwarding every event), and
+//! its audited actions land in [`RunReport::elastic_events`]. Replica
+//! worker threads are managed by their stages and joined here after the
+//! graph's own kernels finish — thread lifecycle is dynamic, not the old
+//! fixed spawn-all.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
+use crate::elastic::{
+    ElasticConfig, ElasticController, ElasticEvent, StageBinding, StreamBinding,
+};
 use crate::estimator::RateEstimate;
 use crate::kernel::{KernelContext, KernelStatus};
 use crate::monitor::{MonitorConfig, MonitorEvent, QueueEnd, QueueMonitor};
@@ -38,6 +50,8 @@ pub struct RunReport {
     pub classifications: Vec<(StreamId, QueueEnd, crate::classify::DistributionClass)>,
     /// Lifetime totals per stream label: (pushes, pops).
     pub stream_totals: HashMap<String, (u64, u64)>,
+    /// Audit trail of every control-plane action (replication + resizes).
+    pub elastic_events: Vec<ElasticEvent>,
 }
 
 impl RunReport {
@@ -68,17 +82,32 @@ impl RunReport {
     pub fn wall_secs(&self) -> f64 {
         self.wall_ns as f64 / 1.0e9
     }
+
+    /// Replication actions (scale-up/down) in the audit trail.
+    pub fn scale_actions(&self) -> usize {
+        self.elastic_events.iter().filter(|e| e.is_scale()).count()
+    }
 }
 
-/// The scheduler: owns a validated topology and an optional monitor config.
+/// The scheduler: owns a validated topology, an optional monitor config,
+/// and the elastic control-plane configuration.
 pub struct Scheduler {
     topo: Topology,
     monitor_cfg: MonitorConfig,
+    elastic_cfg: ElasticConfig,
+    /// Run the controller even without replicable stages (buffer advice
+    /// on plain streams).
+    elastic_forced: bool,
 }
 
 impl Scheduler {
     pub fn new(topo: Topology) -> Self {
-        Scheduler { topo, monitor_cfg: MonitorConfig::disabled() }
+        Scheduler {
+            topo,
+            monitor_cfg: MonitorConfig::disabled(),
+            elastic_cfg: ElasticConfig::default(),
+            elastic_forced: false,
+        }
     }
 
     /// Enable per-queue monitoring with the given configuration.
@@ -87,10 +116,51 @@ impl Scheduler {
         self
     }
 
-    /// Run to completion: spawn kernels + monitors, join, aggregate.
+    /// Override the control-plane configuration, and run the controller
+    /// even if the topology declares no replicable stage (it then only
+    /// applies analytic buffer sizing to monitored streams).
+    pub fn with_elastic(mut self, cfg: ElasticConfig) -> Self {
+        self.elastic_cfg = cfg;
+        self.elastic_forced = true;
+        self
+    }
+
+    /// Run to completion: spawn kernels + monitors (+ the elastic
+    /// controller when stages are declared), join, aggregate.
     pub fn run(&mut self) -> Result<RunReport> {
         self.topo.validate()?;
         let time = TimeRef::new();
+
+        // ---- elastic control-plane bindings (resolved before the kernel
+        // table is consumed) -----------------------------------------------
+        let mut stage_bindings: Vec<StageBinding> = Vec::new();
+        for decl in &self.topo.elastic {
+            let upstream = self
+                .topo
+                .streams
+                .iter()
+                .find(|e| e.dst == decl.split)
+                .map(|e| StreamBinding {
+                    id: e.id,
+                    label: e.label.clone(),
+                    handle: e.monitor.clone(),
+                });
+            stage_bindings.push(StageBinding { stage: decl.stage.clone(), upstream });
+        }
+        let use_controller = !stage_bindings.is_empty() || self.elastic_forced;
+        let stream_bindings: Vec<StreamBinding> = if use_controller {
+            self.topo
+                .streams
+                .iter()
+                .map(|e| StreamBinding {
+                    id: e.id,
+                    label: e.label.clone(),
+                    handle: e.monitor.clone(),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
 
         // ---- assemble per-kernel contexts --------------------------------
         let mut kernel_threads = Vec::new();
@@ -139,6 +209,30 @@ impl Scheduler {
         }
         drop(tx);
 
+        // ---- elastic controller ------------------------------------------
+        // It owns `rx` for the run, forwarding every event into `fwd` so
+        // the end-of-run aggregation below is unchanged. A dedicated stop
+        // flag is set only after the monitors have been joined, so the
+        // controller always sees (and forwards) their final events.
+        let ctl_stop = Arc::new(AtomicBool::new(false));
+        let (ctl_thread, drain_rx) = if use_controller {
+            let (fwd_tx, fwd_rx) = channel::<MonitorEvent>();
+            let ctl = ElasticController::new(
+                self.elastic_cfg.clone(),
+                stage_bindings,
+                stream_bindings,
+                fwd_tx,
+                ctl_stop.clone(),
+            );
+            let t = std::thread::Builder::new()
+                .name("sf-elastic".into())
+                .spawn(move || ctl.run(rx))
+                .map_err(|e| SfError::Scheduler(e.to_string()))?;
+            (Some(t), fwd_rx)
+        } else {
+            (None, rx)
+        };
+
         // ---- kernels ------------------------------------------------------
         let t0 = time.now_ns();
         for ((mut kernel, mut ctx), kernel_closers) in
@@ -170,16 +264,28 @@ impl Scheduler {
         for t in kernel_threads {
             t.join().map_err(|_| SfError::Scheduler("kernel thread panicked".into()))?;
         }
+        // Replica workers exit once their stage's splitter closed; join
+        // them before declaring the compute phase over.
+        for decl in &self.topo.elastic {
+            decl.stage.join_workers();
+        }
         let wall_ns = time.now_ns() - t0;
 
-        // ---- stop monitors, drain events ---------------------------------
+        // ---- stop monitors, then the controller, drain events ------------
         stop.store(true, Ordering::Relaxed);
         for t in monitor_threads {
             t.join().map_err(|_| SfError::Scheduler("monitor thread panicked".into()))?;
         }
+        ctl_stop.store(true, Ordering::Relaxed);
+        let elastic_events = match ctl_thread {
+            Some(t) => t
+                .join()
+                .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?,
+            None => Vec::new(),
+        };
 
-        let mut report = RunReport { wall_ns, ..Default::default() };
-        while let Ok(ev) = rx.try_recv() {
+        let mut report = RunReport { wall_ns, elastic_events, ..Default::default() };
+        while let Ok(ev) = drain_rx.try_recv() {
             match ev {
                 MonitorEvent::Converged { stream, end, estimate } => {
                     report.estimates.push((stream, end, estimate));

@@ -3,13 +3,18 @@
 //! The builder wires typed SPSC streams between kernel ports, validates
 //! the graph (contiguous port indices, single producer/consumer per
 //! stream), and hands everything to the [`crate::scheduler`]. Kernel
-//! duplication (the parallelization the paper's §I motivates) is provided
-//! by [`Topology::connect_fanout`]-style wiring in the apps layer.
+//! duplication (the parallelization the paper's §I motivates) comes in two
+//! forms: static fan-out wiring in the apps layer, and **declared
+//! replicable stages** ([`Topology::add_elastic_stage`]) whose replica
+//! count the [`crate::elastic`] control plane adjusts at run time.
 
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::elastic::{
+    ElasticStage, ElasticStageConfig, MergeKernel, Replicable, ReplicaSet, SplitKernel,
+};
 use crate::kernel::Kernel;
 use crate::port::{InputPort, OutputPort, PortCloser};
 use crate::queue::{instrumented, MonitorHandle, StreamConfig};
@@ -45,11 +50,24 @@ pub struct StreamEdge {
     pub label: String,
 }
 
+/// A replicable stage registered with [`Topology::add_elastic_stage`]:
+/// the type-erased replica manager plus its boundary kernels, for the
+/// scheduler to hand to the elastic controller.
+pub struct ElasticStageDecl {
+    /// The run-time replica manager (shared with split/merge kernels).
+    pub stage: Arc<dyn ElasticStage>,
+    /// The stage's ingress kernel (its input stream carries λ).
+    pub split: KernelId,
+    /// The stage's egress kernel.
+    pub merge: KernelId,
+}
+
 /// The application graph under construction.
 pub struct Topology {
     name: String,
     pub(crate) kernels: Vec<KernelNode>,
     pub(crate) streams: Vec<StreamEdge>,
+    pub(crate) elastic: Vec<ElasticStageDecl>,
     kernel_names: Vec<String>,
     /// (kernel, port) -> stream, for duplicate-wiring detection.
     used_out: HashMap<(usize, usize), StreamId>,
@@ -62,6 +80,7 @@ impl Topology {
             name: name.into(),
             kernels: Vec::new(),
             streams: Vec::new(),
+            elastic: Vec::new(),
             kernel_names: Vec::new(),
             used_out: HashMap::new(),
             used_in: HashMap::new(),
@@ -94,6 +113,38 @@ impl Topology {
     /// Stream metadata.
     pub fn streams(&self) -> &[StreamEdge] {
         &self.streams
+    }
+
+    /// Registered replicable stages.
+    pub fn elastic_stages(&self) -> &[ElasticStageDecl] {
+        &self.elastic
+    }
+
+    /// Declare a **replicable stage**: a `Split → {replica…} → Merge`
+    /// block whose worker count the elastic control plane may change at
+    /// run time (see [`crate::elastic`]).
+    ///
+    /// `factory` builds one replica body per worker (`replica_index` is
+    /// handed in for seeding). Returns the `(split, merge)` kernel ids:
+    /// wire the upstream stream into `split` port 0 and the downstream
+    /// stream out of `merge` port 0.
+    pub fn add_elastic_stage<R, F>(
+        &mut self,
+        name: impl Into<String>,
+        cfg: ElasticStageConfig,
+        factory: F,
+    ) -> Result<(KernelId, KernelId)>
+    where
+        R: Replicable,
+        F: Fn(usize) -> R + Send + Sync + 'static,
+    {
+        let set: Arc<ReplicaSet<R::In, R::Out>> = ReplicaSet::new(name, cfg, move |i| {
+            Box::new(factory(i)) as Box<dyn Replicable<In = R::In, Out = R::Out>>
+        })?;
+        let split = self.add_kernel(Box::new(SplitKernel::new(set.clone())));
+        let merge = self.add_kernel(Box::new(MergeKernel::new(set.clone())));
+        self.elastic.push(ElasticStageDecl { stage: set, split, merge });
+        Ok((split, merge))
     }
 
     /// Wire `src.src_port -> dst.dst_port` with an item type `T`.
@@ -226,6 +277,33 @@ mod tests {
         let c = t.add_kernel(snk());
         t.connect::<u64>(a, 0, b, 0, StreamConfig::default()).unwrap();
         assert!(t.connect::<u64>(a, 0, c, 0, StreamConfig::default()).is_err());
+    }
+
+    #[test]
+    fn elastic_stage_registers_split_and_merge() {
+        use crate::elastic::{ElasticStageConfig, Replicable};
+        struct Id;
+        impl Replicable for Id {
+            type In = u64;
+            type Out = u64;
+            fn process(&mut self, v: u64) -> u64 {
+                v
+            }
+        }
+        let mut t = Topology::new("e");
+        let a = t.add_kernel(src());
+        let (split, merge) =
+            t.add_elastic_stage("st", ElasticStageConfig::default(), |_| Id).unwrap();
+        let b = t.add_kernel(snk());
+        t.connect::<u64>(a, 0, split, 0, StreamConfig::default()).unwrap();
+        t.connect::<u64>(merge, 0, b, 0, StreamConfig::default()).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.elastic_stages().len(), 1);
+        assert_eq!(t.kernel_name(split), "st-split");
+        assert_eq!(t.kernel_name(merge), "st-merge");
+        assert_eq!(t.elastic_stages()[0].stage.replicas(), 1);
+        // Dropping the (never-run) topology must join the replica workers
+        // — covered by ReplicaSet's Drop.
     }
 
     #[test]

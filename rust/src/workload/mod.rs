@@ -226,6 +226,131 @@ impl Kernel for RateControlledRelay {
     }
 }
 
+/// A producer paced by **hybrid sleep** instead of a pure spin: frees the
+/// core between items so the elastic workloads (which run many threads on
+/// few cores) measure stage behavior, not pacing-thread contention. The
+/// long-run rate stays exact via the same no-catch-up deadline pacing as
+/// [`RateControlledProducer`].
+pub struct PacedProducer {
+    name: String,
+    interval_ns: u64,
+    total_items: u64,
+    sent: u64,
+    time: TimeRef,
+    next_deadline_ns: Option<u64>,
+}
+
+impl PacedProducer {
+    /// Emit `total_items` at `rate` items/sec.
+    pub fn from_rate_items_per_sec(
+        name: impl Into<String>,
+        rate: f64,
+        total_items: u64,
+    ) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        PacedProducer {
+            name: name.into(),
+            interval_ns: (1.0e9 / rate).round().max(1.0) as u64,
+            total_items,
+            sent: 0,
+            time: TimeRef::new(),
+            next_deadline_ns: None,
+        }
+    }
+
+    /// Items pushed so far.
+    pub fn sent(&self) -> u64 {
+        self.sent
+    }
+}
+
+impl Kernel for PacedProducer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.sent >= self.total_items {
+            return KernelStatus::Done;
+        }
+        let now = self.time.now_ns();
+        let deadline = match self.next_deadline_ns {
+            Some(d) => d.max(now) + self.interval_ns,
+            None => now + self.interval_ns,
+        };
+        self.next_deadline_ns = Some(deadline);
+        self.time.wait_until_with_tail(deadline, 20_000);
+        let out = ctx.output::<Item>(0).expect("producer needs output port 0");
+        if out.push(self.sent).is_err() {
+            return KernelStatus::Done;
+        }
+        self.sent += 1;
+        KernelStatus::Continue
+    }
+}
+
+/// The **parallelizable dual-phase** service stage for the elastic
+/// experiments: burns a deterministic service time per item, shifting
+/// from `fast` to `slow` at a wall-clock deadline.
+///
+/// Unlike [`WorkloadSpec::dual_phase`] (which switches after a
+/// per-process item count), the phase here is keyed to the shared
+/// [`TimeRef`] clock: replicas spawned by the control plane *after* the
+/// shift must come up already in the slow phase, and replicas splitting
+/// the item stream must not each wait for a private item count.
+pub struct PhasedServiceWorker {
+    fast_service_ns: u64,
+    slow_service_ns: u64,
+    switch_at_ns: u64,
+    time: TimeRef,
+}
+
+impl PhasedServiceWorker {
+    /// Service times in nanoseconds; `switch_at_ns` is an absolute
+    /// [`TimeRef`] timestamp (e.g. `TimeRef::new().now_ns() + 2e9 as u64`).
+    pub fn new(fast_service_ns: u64, slow_service_ns: u64, switch_at_ns: u64) -> Self {
+        PhasedServiceWorker {
+            fast_service_ns,
+            slow_service_ns,
+            switch_at_ns,
+            time: TimeRef::new(),
+        }
+    }
+
+    /// Paper-style parameterization: rates in MB/s over 8-byte items.
+    pub fn from_rates_mbps(fast_mbps: f64, slow_mbps: f64, switch_at_ns: u64) -> Self {
+        let ns = |mbps: f64| ((ITEM_BYTES as f64 / (mbps * 1.0e6)) * 1.0e9).round() as u64;
+        PhasedServiceWorker::new(ns(fast_mbps), ns(slow_mbps), switch_at_ns)
+    }
+
+    /// The service time (ns) an item started *now* would cost.
+    pub fn current_service_ns(&self) -> u64 {
+        if self.time.now_ns() < self.switch_at_ns {
+            self.fast_service_ns
+        } else {
+            self.slow_service_ns
+        }
+    }
+}
+
+impl crate::elastic::Replicable for PhasedServiceWorker {
+    type In = Item;
+    type Out = Item;
+
+    fn process(&mut self, item: Item) -> Item {
+        let service = self.current_service_ns();
+        let t = self.time.now_ns();
+        if service > 150_000 {
+            // Long services sleep the bulk — replicas then overlap their
+            // service times without needing a core each.
+            self.time.wait_until_with_tail(t + service, 30_000);
+        } else {
+            self.time.spin_until(t + service);
+        }
+        item
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,5 +401,60 @@ mod tests {
             assert!((spec.process.next_service_ns() - 1000.0).abs() < 1e-9);
         }
         assert!((spec.process.next_service_ns() - 8000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phased_worker_switches_on_the_shared_clock() {
+        use crate::elastic::Replicable as _;
+        let time = TimeRef::new();
+        // Switch already in the past: the worker starts slow.
+        let past = PhasedServiceWorker::new(1_000, 2_000, 0);
+        assert_eq!(past.current_service_ns(), 2_000);
+        // Switch far in the future: fast phase.
+        let mut fut = PhasedServiceWorker::new(1_000, 2_000, time.now_ns() + 60_000_000_000);
+        assert_eq!(fut.current_service_ns(), 1_000);
+        assert_eq!(fut.process(7), 7);
+        // MB/s parameterization: 8 MB/s over 8-byte items = 1 µs/item.
+        let w = PhasedServiceWorker::from_rates_mbps(8.0, 2.0, 0);
+        assert_eq!(w.fast_service_ns, 1_000);
+        assert_eq!(w.slow_service_ns, 4_000);
+    }
+
+    #[test]
+    fn paced_producer_realizes_rate_without_spinning() {
+        let rate = 20_000.0; // items/sec → 50 µs interval
+        let items = 2_000u64;
+        let mut topo = Topology::new("paced");
+        let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
+            "paced", rate, items,
+        )));
+        let c = topo.add_kernel(Box::new(ClosureSinkCounter::default()));
+        topo.connect::<Item>(p, 0, c, 0, StreamConfig::default().with_capacity(4096)).unwrap();
+        let t0 = TimeRef::new().now_ns();
+        Scheduler::new(topo).run().unwrap();
+        let dt = (TimeRef::new().now_ns() - t0) as f64 / 1.0e9;
+        let expect = items as f64 / rate;
+        assert!(dt > 0.9 * expect, "{dt}s impossibly fast (expected ≥ {expect}s)");
+        assert!(dt < 6.0 * expect, "{dt}s vs expected {expect}s");
+    }
+
+    /// Minimal counting sink for the pacing test.
+    #[derive(Default)]
+    struct ClosureSinkCounter {
+        n: u64,
+    }
+    impl Kernel for ClosureSinkCounter {
+        fn name(&self) -> &str {
+            "count"
+        }
+        fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+            match ctx.input::<Item>(0).unwrap().pop() {
+                Some(_) => {
+                    self.n += 1;
+                    KernelStatus::Continue
+                }
+                None => KernelStatus::Done,
+            }
+        }
     }
 }

@@ -1,0 +1,266 @@
+//! The elastic control plane, outside-in: advice-function properties
+//! (monotonicity, bounds), policy stability (no oscillation on constant
+//! rates), and the closed loop end to end through the real scheduler —
+//! replication under overload with an audited action trail and exact
+//! order preservation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use streamflow::classify::DistributionClass;
+use streamflow::control::{parallelism_advice, BufferAdvisor, StreamRates};
+use streamflow::elastic::{
+    ElasticAction, ElasticConfig, ElasticStageConfig, ScaleDecision,
+};
+use streamflow::kernel::{ClosureSink, ClosureSource};
+use streamflow::prelude::*;
+use streamflow::testutil::{check, PropConfig};
+use streamflow::workload::{Item, PacedProducer, PhasedServiceWorker};
+
+fn cfg(cases: u32, seed: u64) -> PropConfig {
+    PropConfig { cases, seed, max_shrink: 0 }
+}
+
+// ------------------------------------------------------------- advice --
+
+#[test]
+fn prop_buffer_advice_monotone_in_rho() {
+    // For the closed-form M/M/1/C sizing, more utilization never means a
+    // smaller recommended buffer.
+    check(
+        cfg(64, 21),
+        |rng| {
+            let mu = rng.uniform(500.0, 50_000.0);
+            let a = rng.uniform(0.05, 0.98);
+            let b = rng.uniform(0.05, 0.98);
+            (mu, a.min(b), a.max(b))
+        },
+        |&(mu, lo, hi)| {
+            let adv = BufferAdvisor::default();
+            let cap = |rho: f64| {
+                adv.advise(
+                    StreamId(0),
+                    StreamRates { lambda_items: Some(rho * mu), mu_items: Some(mu) },
+                    DistributionClass::Exponential,
+                )
+                .unwrap()
+                .capacity
+            };
+            cap(lo) <= cap(hi)
+        },
+    );
+}
+
+#[test]
+fn prop_buffer_advice_respects_bounds() {
+    // Every class (including the saturated λ ≥ μ path) stays within
+    // [1, max_capacity].
+    let classes = [
+        DistributionClass::Exponential,
+        DistributionClass::Deterministic,
+        DistributionClass::Uniform,
+        DistributionClass::Normal,
+        DistributionClass::Unknown,
+    ];
+    check(
+        cfg(96, 22),
+        |rng| {
+            (
+                rng.uniform(10.0, 1.0e6),          // lambda
+                rng.uniform(10.0, 1.0e6),          // mu
+                rng.next_bounded(5) as usize,      // class index
+            )
+        },
+        move |&(lambda, mu, ci)| {
+            let adv = BufferAdvisor { max_capacity: 4096, ..Default::default() };
+            let a = adv
+                .advise(
+                    StreamId(1),
+                    StreamRates { lambda_items: Some(lambda), mu_items: Some(mu) },
+                    classes[ci],
+                )
+                .unwrap();
+            a.capacity >= 1 && a.capacity <= 4096
+        },
+    );
+}
+
+#[test]
+fn prop_parallelism_advice_monotone_and_covering() {
+    check(
+        cfg(128, 23),
+        |rng| {
+            let a = rng.uniform(1.0, 1.0e6);
+            let b = rng.uniform(1.0, 1.0e6);
+            (
+                a.min(b),
+                a.max(b),
+                rng.uniform(10.0, 1.0e5),  // mu per replica
+                rng.uniform(0.3, 1.0),     // target rho
+            )
+        },
+        |&(lo, hi, mu, t)| {
+            let a_lo = parallelism_advice(lo, mu, t);
+            let a_hi = parallelism_advice(hi, mu, t);
+            // ≥ 1, monotone in λ, and the advised fleet covers the load
+            // at the target utilization.
+            a_lo >= 1 && a_lo <= a_hi && (a_hi as f64) * mu * t >= hi - 1e-6
+        },
+    );
+}
+
+// -------------------------------------------------------------- policy --
+
+#[test]
+fn prop_policy_never_oscillates_on_constant_trace() {
+    // With constant λ and μ, the advice is a fixed point of the decision
+    // rule: a 200-tick trace performs at most one scale action, from any
+    // starting replica count — the hysteresis guarantee.
+    check(
+        cfg(128, 24),
+        |rng| {
+            (
+                rng.uniform(50.0, 50_000.0),          // lambda
+                rng.uniform(100.0, 10_000.0),         // mu
+                1 + rng.next_bounded(8) as usize,     // starting replicas
+                1 + rng.next_bounded(16) as usize,    // max replicas
+            )
+        },
+        |&(lambda, mu, start, max)| {
+            let p = ElasticPolicy {
+                target_rho: 0.7,
+                band: 0.15,
+                min_replicas: 1,
+                max_replicas: max,
+                cooldown_ticks: 0,
+            };
+            let mut replicas = p.clamp(start);
+            let mut actions = 0u32;
+            for _ in 0..200 {
+                let rho = lambda / (replicas as f64 * mu);
+                match p.decide(rho, replicas, lambda, mu) {
+                    ScaleDecision::Hold => {}
+                    ScaleDecision::ScaleTo(n) => {
+                        actions += 1;
+                        replicas = n;
+                    }
+                }
+            }
+            actions <= 1
+        },
+    );
+}
+
+// ---------------------------------------------------- scheduler closed loop
+
+#[test]
+fn elastic_stage_preserves_order_under_scheduler() {
+    // A pinned 3-replica stage inside a real scheduled run: every item
+    // arrives exactly once, in order, and the replica workers are joined.
+    let items = 20_000u64;
+    let mut topo = Topology::new("elastic-e2e");
+    let mut i = 0u64;
+    let src = topo.add_kernel(Box::new(ClosureSource::new("src", move || {
+        i += 1;
+        (i <= items).then_some(i)
+    })));
+
+    struct AddOne;
+    impl Replicable for AddOne {
+        type In = u64;
+        type Out = u64;
+        fn process(&mut self, v: u64) -> u64 {
+            v + 1
+        }
+    }
+    let stage_cfg = ElasticStageConfig {
+        policy: ElasticPolicy::pinned(3),
+        initial_replicas: 3,
+        lane_capacity: 64,
+    };
+    let (split, merge) = topo.add_elastic_stage("add", stage_cfg, |_| AddOne).unwrap();
+
+    let out = Arc::new(Mutex::new(Vec::new()));
+    let o2 = out.clone();
+    let snk = topo
+        .add_kernel(Box::new(ClosureSink::new("snk", move |v: u64| o2.lock().unwrap().push(v))));
+    topo.connect::<u64>(src, 0, split, 0, StreamConfig::default().with_capacity(1024)).unwrap();
+    topo.connect::<u64>(merge, 0, snk, 0, StreamConfig::default().with_capacity(1024)).unwrap();
+
+    let report = Scheduler::new(topo).run().unwrap();
+    let v = out.lock().unwrap();
+    assert_eq!(v.len(), items as usize, "item loss or duplication");
+    for (idx, &x) in v.iter().enumerate() {
+        assert_eq!(x, idx as u64 + 2, "out of order at {idx}");
+    }
+    let (pushes, pops) = report.stream_totals["add-merge.0 -> snk.0"];
+    assert_eq!((pushes, pops), (items, items));
+    // Pinned policy ⇒ the control plane had nothing to do.
+    assert_eq!(report.scale_actions(), 0, "{:?}", report.elastic_events);
+}
+
+#[test]
+fn controller_scales_up_under_overload_and_audits_actions() {
+    // Offered 2k items/s into a 0.5k items/s replica: the control plane
+    // must replicate (audited), order must survive, and the loop must not
+    // flap.
+    let rate = 2_000.0;
+    let items = 2_500u64;
+    let mut topo = Topology::new("elastic-scale");
+    let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
+        "prod", rate, items,
+    )));
+    let stage_cfg = ElasticStageConfig {
+        policy: ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown_ticks: 4,
+        },
+        initial_replicas: 1,
+        lane_capacity: 128,
+    };
+    // Constant 2 ms (sleep-based) service — μ ≈ 500 items/s per replica.
+    let (split, merge) = topo
+        .add_elastic_stage("work", stage_cfg, |_| {
+            PhasedServiceWorker::new(2_000_000, 2_000_000, 0)
+        })
+        .unwrap();
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let mut expect = 0u64;
+    let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |v: Item| {
+        assert_eq!(v, expect, "reordered delivery");
+        expect += 1;
+        c2.fetch_add(1, Ordering::Relaxed);
+    })));
+    topo.connect::<Item>(p, 0, split, 0, StreamConfig::default().with_capacity(1024)).unwrap();
+    topo.connect::<Item>(merge, 0, snk, 0, StreamConfig::default().with_capacity(1024)).unwrap();
+
+    let ecfg = ElasticConfig {
+        tick: Duration::from_millis(5),
+        buffer_advice: false,
+        ..Default::default()
+    };
+    let report = Scheduler::new(topo).with_elastic(ecfg).run().unwrap();
+
+    assert_eq!(count.load(Ordering::Relaxed), items);
+    let ups = report
+        .elastic_events
+        .iter()
+        .filter(|e| matches!(e.action, ElasticAction::ScaleUp { .. }))
+        .count();
+    assert!(ups >= 1, "overload produced no scale-up: {:?}", report.elastic_events);
+    assert!(
+        report.scale_actions() <= 5,
+        "control loop flapped ({} actions): {:?}",
+        report.scale_actions(),
+        report.elastic_events
+    );
+    // The audit trail carries the telemetry each decision was made on.
+    for ev in report.elastic_events.iter().filter(|e| e.is_scale()) {
+        assert!(ev.mu_items > 0.0 && ev.lambda_items > 0.0, "{ev}");
+    }
+}
