@@ -1,21 +1,161 @@
 //! Queue hot-path micro-benchmarks — the §Perf substrate numbers behind
-//! the paper's "low overhead" claim:
+//! the paper's "low overhead" claim, now with a before/after ledger:
 //!
-//! * uncontended push/pop latency,
-//! * SPSC streaming throughput,
-//! * throughput **while a monitor thread samples at 2 µs** (the
-//!   interference case the copy-and-zero protocol is designed to keep
-//!   negligible),
+//! * uncontended push/pop latency (per-item and batched),
+//! * SPSC streaming throughput: **legacy baseline** (the pre-change
+//!   shared-`len` + counter-RMW protocol, preserved in-bench below) vs
+//!   the monotonic-index protocol, per-item and batched,
+//! * throughput **while a monitor thread samples** at the production
+//!   400 µs cadence and at a pathological 2 µs spin cadence, with the
+//!   counter-conservation invariant (sum of samples + residue ==
+//!   monotonic totals) asserted under that concurrency,
 //! * the counter sample itself.
+//!
+//! Emits `target/figures/BENCH_queue_hotpath.json` (acceptance: ≥ 2×
+//! two-thread throughput vs the legacy baseline) plus the usual CSV.
+//! `SF_SCALE`/`SF_BENCH_SECS` shrink everything for CI smoke runs.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crossbeam_utils::CachePadded;
 use streamflow::bench::{black_box, Runner};
+use streamflow::config::Json;
 use streamflow::queue::{PopResult, SpscQueue};
-use streamflow::report::{Cell, Table};
+use streamflow::report::{figures_dir, Cell, Table};
 
-fn spsc_throughput(n: u64, monitor_period_ns: Option<u64>) -> f64 {
+// ---------------------------------------------------------------------------
+// Legacy baseline: the pre-change protocol, kept here verbatim-in-spirit so
+// the before/after speedup is measured, not remembered. Every push paid a
+// shared `len.fetch_add` (the producer↔consumer ping-pong line) plus two
+// instrumentation RMWs (`tc` + lifetime total); every pop the mirror image
+// — 3 atomic RMWs per item per side.
+// ---------------------------------------------------------------------------
+
+struct LegacyQueue {
+    slots: Vec<UnsafeCell<u64>>,
+    cap: usize,
+    len: CachePadded<AtomicUsize>,
+    tc_tail: CachePadded<AtomicU64>,
+    tc_head: CachePadded<AtomicU64>,
+    total_pushes: CachePadded<AtomicU64>,
+    total_pops: CachePadded<AtomicU64>,
+    tail: CachePadded<UnsafeCell<usize>>,
+    head: CachePadded<UnsafeCell<usize>>,
+}
+
+// SAFETY: SPSC contract — one pusher, one popper; cursors are end-private.
+unsafe impl Send for LegacyQueue {}
+unsafe impl Sync for LegacyQueue {}
+
+impl LegacyQueue {
+    fn new(cap: usize) -> Self {
+        LegacyQueue {
+            slots: (0..cap).map(|_| UnsafeCell::new(0)).collect(),
+            cap,
+            len: CachePadded::new(AtomicUsize::new(0)),
+            tc_tail: CachePadded::new(AtomicU64::new(0)),
+            tc_head: CachePadded::new(AtomicU64::new(0)),
+            total_pushes: CachePadded::new(AtomicU64::new(0)),
+            total_pops: CachePadded::new(AtomicU64::new(0)),
+            tail: CachePadded::new(UnsafeCell::new(0)),
+            head: CachePadded::new(UnsafeCell::new(0)),
+        }
+    }
+
+    #[inline]
+    fn try_push(&self, v: u64) -> bool {
+        // Acquire: slot reuse after ring wrap must happen-after the
+        // consumer's read of that slot (its len.fetch_sub Release). The
+        // pre-change segmented queue never reused slots, so its Relaxed
+        // load was fine; this ring port needs the stronger order.
+        if self.len.load(Ordering::Acquire) >= self.cap {
+            return false;
+        }
+        // SAFETY: single producer.
+        let t = unsafe { &mut *self.tail.get() };
+        unsafe { *self.slots[*t].get() = v };
+        *t = (*t + 1) % self.cap;
+        self.len.fetch_add(1, Ordering::Release);
+        self.tc_tail.fetch_add(1, Ordering::Relaxed);
+        self.total_pushes.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    #[inline]
+    fn try_pop(&self) -> Option<u64> {
+        if self.len.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        // SAFETY: single consumer.
+        let h = unsafe { &mut *self.head.get() };
+        let v = unsafe { *self.slots[*h].get() };
+        *h = (*h + 1) % self.cap;
+        self.len.fetch_sub(1, Ordering::Release);
+        self.tc_head.fetch_add(1, Ordering::Relaxed);
+        self.total_pops.fetch_add(1, Ordering::Relaxed);
+        Some(v)
+    }
+}
+
+/// Legacy two-thread run with the old spin-128-then-yield blocking loops.
+fn legacy_throughput(n: u64) -> f64 {
+    let q = Arc::new(LegacyQueue::new(4096));
+    let qp = q.clone();
+    let t0 = std::time::Instant::now();
+    let prod = std::thread::spawn(move || {
+        for i in 0..n {
+            let mut spins = 0u32;
+            while !qp.try_push(i) {
+                spins += 1;
+                if spins > 128 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    });
+    let mut sum = 0u64;
+    let mut popped = 0u64;
+    let mut spins = 0u32;
+    while popped < n {
+        match q.try_pop() {
+            Some(v) => {
+                sum = sum.wrapping_add(v);
+                popped += 1;
+                spins = 0;
+            }
+            None => {
+                spins += 1;
+                if spins > 128 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+    prod.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    black_box(sum);
+    assert_eq!(q.total_pushes.load(Ordering::Relaxed), n);
+    n as f64 / secs
+}
+
+// ---------------------------------------------------------------------------
+// New-protocol runs
+// ---------------------------------------------------------------------------
+
+/// Two-thread streaming throughput on the monotonic-index queue.
+/// `batched` moves items with `push_iter`/`pop_batch` (one publish per
+/// run of 256); otherwise the adaptive-backoff `push`/`pop` per item.
+/// With a monitor period set, also verifies counter conservation: the
+/// sum of sampled deltas plus the final residue must equal `n` on both
+/// ends, sampled concurrently with the stream.
+fn spsc_throughput(n: u64, monitor_period_ns: Option<u64>, batched: bool) -> (f64, bool) {
     let q = Arc::new(SpscQueue::<u64>::new(4096, 8));
     let stop = Arc::new(AtomicBool::new(false));
     let monitor = monitor_period_ns.map(|period| {
@@ -23,46 +163,83 @@ fn spsc_throughput(n: u64, monitor_period_ns: Option<u64>) -> f64 {
         let stop = stop.clone();
         std::thread::spawn(move || {
             let time = streamflow::timing::TimeRef::new();
-            let mut acc = 0u64;
-            let tail = (period / 16).clamp(1_000, 60_000);
+            let (mut heads, mut tails) = (0u64, 0u64);
+            let tail_ns = (period / 16).clamp(1_000, 60_000);
             let mut next = time.now_ns() + period;
             while !stop.load(Ordering::Relaxed) {
                 let s = q.counters().sample();
-                acc = acc.wrapping_add(s.tc_head + s.tc_tail);
-                time.wait_until_with_tail(next, tail);
+                heads += s.tc_head;
+                tails += s.tc_tail;
+                time.wait_until_with_tail(next, tail_ns);
                 next = time.now_ns() + period;
             }
-            acc
+            (heads, tails)
         })
     });
     let qp = q.clone();
     let t0 = std::time::Instant::now();
     let prod = std::thread::spawn(move || {
-        for i in 0..n {
-            qp.push(i).unwrap();
+        if batched {
+            let mut i = 0u64;
+            while i < n {
+                let hi = (i + 256).min(n);
+                qp.push_iter(i..hi).unwrap();
+                i = hi;
+            }
+        } else {
+            for i in 0..n {
+                qp.push(i).unwrap();
+            }
         }
         qp.close();
     });
-    let mut count = 0u64;
-    while let Some(v) = q.pop() {
-        count = count.wrapping_add(v);
+    let mut sum = 0u64;
+    if batched {
+        let mut buf = Vec::with_capacity(256);
+        loop {
+            if q.pop_batch(&mut buf, 256) == 0 {
+                match q.pop() {
+                    Some(v) => buf.push(v),
+                    None => break,
+                }
+            }
+            for v in buf.drain(..) {
+                sum = sum.wrapping_add(v);
+            }
+        }
+    } else {
+        while let Some(v) = q.pop() {
+            sum = sum.wrapping_add(v);
+        }
     }
     prod.join().unwrap();
     let secs = t0.elapsed().as_secs_f64();
     stop.store(true, Ordering::Relaxed);
+    let mut conserved = true;
     if let Some(m) = monitor {
-        black_box(m.join().unwrap());
+        let (heads, tails) = m.join().unwrap();
+        let res = q.counters().sample();
+        conserved = heads + res.tc_head == n && tails + res.tc_tail == n;
+        assert!(
+            conserved,
+            "conservation violated: heads {}+{} tails {}+{} != {n}",
+            heads, res.tc_head, tails, res.tc_tail
+        );
     }
-    black_box(count);
-    n as f64 / secs
+    black_box(sum);
+    assert_eq!(q.counters().total_pushes(), n);
+    assert_eq!(q.counters().total_pops(), n);
+    (n as f64 / secs, conserved)
 }
 
 fn main() {
     let mut runner = Runner::new();
     let mut table = Table::new("queue_hotpath", &["case", "value", "unit"]);
+    let mut json: BTreeMap<String, Json> = BTreeMap::new();
 
+    // ---- 1-thread configs --------------------------------------------------
     // Uncontended push+pop pair, batched ×128 per timed iteration so the
-    // ~40 ns timer cost does not dominate a ~20 ns operation.
+    // ~40 ns timer cost does not dominate a ~10 ns operation.
     const BATCH: u64 = 128;
     let q = SpscQueue::<u64>::new(1024, 8);
     let r = runner.bench("queue/push_pop_uncontended_x128", Some(BATCH as f64), || {
@@ -73,57 +250,100 @@ fn main() {
             }
         }
     });
+    let pair_ns = r.ns.mean / BATCH as f64;
+    table.row_mixed(&[Cell::S("push_pop_pair".into()), Cell::F(pair_ns), Cell::S("ns".into())]);
+    json.insert("one_thread_push_pop_pair_ns".into(), Json::Num(pair_ns));
+    json.insert(
+        "one_thread_items_per_sec".into(),
+        Json::Num(if pair_ns > 0.0 { 1.0e9 / pair_ns } else { 0.0 }),
+    );
+
+    // Single-thread batched transfer (one publish per 128-run).
+    let mut buf = Vec::with_capacity(BATCH as usize);
+    let r = runner.bench("queue/batched_transfer_x128", Some(BATCH as f64), || {
+        let n = q.try_push_iter(&mut (0..BATCH).map(black_box));
+        q.pop_batch(&mut buf, BATCH as usize);
+        black_box(n);
+        buf.clear();
+    });
+    let batch_pair_ns = r.ns.mean / BATCH as f64;
     table.row_mixed(&[
-        Cell::S("push_pop_pair".into()),
-        Cell::F(r.ns.mean / BATCH as f64),
+        Cell::S("batched_pair".into()),
+        Cell::F(batch_pair_ns),
         Cell::S("ns".into()),
     ]);
+    json.insert("one_thread_batched_pair_ns".into(), Json::Num(batch_pair_ns));
 
-    // Counter sample (the monitor's copy-and-zero), batched likewise.
+    // Counter sample (the monitor's delta read), batched likewise.
     let r = runner.bench("queue/monitor_sample_x128", Some(BATCH as f64), || {
         for _ in 0..BATCH {
             black_box(q.counters().sample());
         }
     });
+    let sample_ns = r.ns.mean / BATCH as f64;
     table.row_mixed(&[
         Cell::S("monitor_sample".into()),
-        Cell::F(r.ns.mean / BATCH as f64),
+        Cell::F(sample_ns),
         Cell::S("ns".into()),
     ]);
+    json.insert("monitor_sample_ns".into(), Json::Num(sample_ns));
 
-    // Cross-thread streaming throughput: bare, with the production monitor
-    // cadence (400 µs), and with a pathological 2 µs spin-sampler.
+    // ---- 2-thread configs --------------------------------------------------
     let n = (2_000_000.0 * Runner::scale()) as u64;
-    let bare = spsc_throughput(n, None);
-    let monitored = spsc_throughput(n, Some(400_000));
-    let stress = spsc_throughput(n, Some(2_000));
+    let legacy = legacy_throughput(n);
+    let (bare, _) = spsc_throughput(n, None, false);
+    let (batched, _) = spsc_throughput(n, None, true);
+    let (monitored, cons_mon) = spsc_throughput(n, Some(400_000), false);
+    let (stress, cons_stress) = spsc_throughput(n, Some(2_000), false);
     let degradation = (bare - monitored) / bare * 100.0;
     let stress_deg = (bare - stress) / bare * 100.0;
-    table.row_mixed(&[
-        Cell::S("spsc_throughput_bare".into()),
-        Cell::F(bare / 1.0e6),
-        Cell::S("M items/s".into()),
-    ]);
-    table.row_mixed(&[
-        Cell::S("spsc_throughput_monitored_400us".into()),
-        Cell::F(monitored / 1.0e6),
-        Cell::S("M items/s".into()),
-    ]);
-    table.row_mixed(&[
-        Cell::S("monitor_degradation_400us".into()),
-        Cell::F(degradation),
-        Cell::S("%".into()),
-    ]);
-    table.row_mixed(&[
-        Cell::S("monitor_degradation_2us_stress".into()),
-        Cell::F(stress_deg),
-        Cell::S("%".into()),
-    ]);
-    table.emit().expect("emit");
-    println!(
-        "# bare {:.1} M items/s, monitored {:.1} M items/s; production 400µs monitor → \
-         {degradation:+.1}% (paper's low-overhead claim); 2µs stress sampler → {stress_deg:+.1}%",
-        bare / 1e6,
-        monitored / 1e6
+    let speedup = bare / legacy;
+    let speedup_batched = batched / legacy;
+
+    for (label, v, unit) in [
+        ("spsc_throughput_legacy_len_protocol", legacy / 1.0e6, "M items/s"),
+        ("spsc_throughput_bare", bare / 1.0e6, "M items/s"),
+        ("spsc_throughput_batched", batched / 1.0e6, "M items/s"),
+        ("spsc_throughput_monitored_400us", monitored / 1.0e6, "M items/s"),
+        ("spsc_throughput_stress_2us", stress / 1.0e6, "M items/s"),
+        ("speedup_vs_legacy", speedup, "x"),
+        ("speedup_batched_vs_legacy", speedup_batched, "x"),
+        ("monitor_degradation_400us", degradation, "%"),
+        ("monitor_degradation_2us_stress", stress_deg, "%"),
+    ] {
+        table.row_mixed(&[Cell::S(label.into()), Cell::F(v), Cell::S(unit.into())]);
+    }
+
+    let mut two = BTreeMap::new();
+    two.insert("legacy_len_protocol_items_per_sec".to_string(), Json::Num(legacy));
+    two.insert("monotonic_items_per_sec".to_string(), Json::Num(bare));
+    two.insert("batched_items_per_sec".to_string(), Json::Num(batched));
+    two.insert("monitored_400us_items_per_sec".to_string(), Json::Num(monitored));
+    two.insert("stress_2us_items_per_sec".to_string(), Json::Num(stress));
+    json.insert("two_thread".into(), Json::Obj(two));
+    json.insert("items_streamed".into(), Json::Num(n as f64));
+    json.insert("speedup_vs_legacy".into(), Json::Num(speedup));
+    json.insert("speedup_batched_vs_legacy".into(), Json::Num(speedup_batched));
+    json.insert("acceptance_min_speedup".into(), Json::Num(2.0));
+    json.insert("monitor_degradation_400us_pct".into(), Json::Num(degradation));
+    json.insert("monitor_degradation_2us_stress_pct".into(), Json::Num(stress_deg));
+    json.insert(
+        "counter_conservation".into(),
+        Json::Bool(cons_mon && cons_stress),
     );
+
+    table.emit().expect("emit");
+    let json_path = figures_dir().join("BENCH_queue_hotpath.json");
+    std::fs::create_dir_all(figures_dir()).expect("figures dir");
+    std::fs::write(&json_path, Json::Obj(json).to_string()).expect("write json");
+    println!(
+        "# legacy {:.1} M/s -> bare {:.1} M/s ({speedup:.2}x), batched {:.1} M/s \
+         ({speedup_batched:.2}x); 400µs monitor -> {degradation:+.1}% (paper's low-overhead \
+         claim); 2µs stress sampler -> {stress_deg:+.1}%; conservation {}",
+        legacy / 1e6,
+        bare / 1e6,
+        batched / 1e6,
+        if cons_mon && cons_stress { "OK" } else { "VIOLATED" }
+    );
+    println!("# JSON ledger: {}", json_path.display());
 }

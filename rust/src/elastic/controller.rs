@@ -459,8 +459,8 @@ mod tests {
                 .map(|_| MonitorSample {
                     tc_head: tc,
                     tc_tail: tc,
-                    read_blocked: false,
-                    write_blocked: false,
+                    read_blocked_ns: 0,
+                    write_blocked_ns: 0,
                 })
                 .collect()
         }

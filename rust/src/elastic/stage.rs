@@ -23,13 +23,19 @@
 //! capacities, counters) — the same non-locking contract the paper's
 //! monitor uses (§III).
 //!
-//! **Retiring** a lane closes its `inq`: the worker drains the backlog,
-//! closes its `outq`, and exits; the splitter re-routes any in-flight item
-//! the closed queue hands back, so no item is ever dropped. Each lane's
+//! **Retiring** a lane is two-phase: the control plane marks the lane and
+//! removes it from the splitter's routing set; the **splitter itself**
+//! closes the lane's `inq` on its next lane-set reload (it is the lane's
+//! unique producer, so the close serializes with its own pushes and the
+//! worker's "closed && drained" verdict is final). The worker drains the
+//! backlog, closes its `outq`, and exits; the merger drains retired
+//! lanes' out-queues like any other, so no item is ever dropped. Each lane's
 //! `inq` carries the standard [`crate::queue::QueueCounters`]
-//! instrumentation, and the per-lane copy-and-zero samples (`tc` counts +
-//! blocked booleans) are the controller's valid-observation feed — the
-//! §IV validity rule applied at stage granularity.
+//! instrumentation — with the monotonic-index protocol the lane's data
+//! movement *is* the instrumentation — and the per-lane delta samples
+//! (`tc` index deltas + blocked durations) are the controller's
+//! valid-observation feed — the §IV validity rule applied at stage
+//! granularity.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashSet};
@@ -89,6 +95,14 @@ struct LaneCore<T: Send + 'static, U: Send + 'static> {
     id: usize,
     inq: Arc<SpscQueue<Tagged<T>>>,
     outq: Arc<SpscQueue<Tagged<U>>>,
+    /// Two-phase retirement: the control plane only *marks* the lane
+    /// (and removes it from the active set); the actual `inq.close()`
+    /// is performed by the splitter — the lane's unique producer — so
+    /// the close serializes with its own pushes. A third-party close
+    /// could race a splitter publish (closed-check passes, close lands,
+    /// worker renders its final Closed verdict, publish strands the
+    /// item) and wedge the merge on the missing sequence number.
+    retiring: AtomicBool,
 }
 
 /// The lane registry, mutated only under the stage mutex.
@@ -224,40 +238,32 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
             self.lane_capacity,
             std::mem::size_of::<U>().max(1),
         ));
-        let lane = Arc::new(LaneCore { id, inq: inq.clone(), outq: outq.clone() });
+        let lane = Arc::new(LaneCore {
+            id,
+            inq: inq.clone(),
+            outq: outq.clone(),
+            retiring: AtomicBool::new(false),
+        });
         let mut worker = (self.factory)(id);
         let spawned = std::thread::Builder::new()
             .name(format!("sf-rep-{}-{id}", self.name))
             .spawn(move || {
-                // Hand-rolled drain loop (not the queue's blocking pop):
-                // a starved replica escalates spin → yield → sleep so an
-                // idle lane costs ~nothing — replicas exist from topology
-                // construction and through low-load phases. Every empty
-                // poll sets the read_blocked flag, so any controller
-                // probe window overlapping starvation is rejected by the
-                // §IV validity rule.
-                let mut idle = 0u32;
-                loop {
-                    match inq.try_pop() {
-                        PopResult::Item(tagged) => {
-                            idle = 0;
-                            let out = worker.process(tagged.item);
-                            if outq.push(Tagged { seq: tagged.seq, item: out }).is_err() {
-                                break;
-                            }
-                        }
-                        PopResult::Closed => break,
-                        PopResult::Empty => {
-                            inq.counters().on_read_block();
-                            idle = idle.saturating_add(1);
-                            if idle < 64 {
-                                std::hint::spin_loop();
-                            } else if idle < 256 {
-                                std::thread::yield_now();
-                            } else {
-                                std::thread::sleep(std::time::Duration::from_micros(200));
-                            }
-                        }
+                // Per-item pop/process/push — deliberately NOT pop_batch:
+                // the controller derives each replica's service rate μ
+                // from the inq head-index deltas, so items must leave the
+                // queue at service cadence; batch-grabbing the backlog
+                // would count a whole run as served inside one probe
+                // window and inflate μ. (Batched transfer lives in the
+                // Split/Merge data movers, which nothing measures.) The
+                // blocking calls still ride the zero-contention fast path
+                // and escalate spin → yield → park when starved, so an
+                // idle lane costs ~nothing and is woken by the splitter's
+                // next publish; starved time lands in read_blocked_ns for
+                // the §IV validity gate on controller probes.
+                while let Some(tagged) = inq.pop() {
+                    let out = worker.process(tagged.item);
+                    if outq.push(Tagged { seq: tagged.seq, item: out }).is_err() {
+                        break;
                     }
                 }
                 outq.close();
@@ -276,22 +282,24 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
     }
 
     /// Retire the most recently added active lane. Caller holds the lock.
+    /// Phase one of two-phase retirement: mark + deactivate only. The
+    /// splitter closes the lane's `inq` on its next lane-set reload (see
+    /// `LaneCore::retiring`); until then the worker just idles parked.
     fn retire_lane(&self, t: &mut LaneTable<T, U>) {
         if let Some(lane) = t.active.pop() {
-            // Closing from the control plane is safe: the splitter handles
-            // the PushError::Closed hand-back by re-routing, and the
-            // worker drains everything already queued before exiting.
-            lane.inq.close();
+            lane.retiring.store(true, Ordering::Release);
             self.gen.fetch_add(1, Ordering::Release);
         }
     }
 
-    /// Splitter-side: last item delivered — close every lane and freeze
-    /// the lane set.
+    /// Splitter-side: last item delivered — close every lane (including
+    /// retiring ones whose close the splitter still owes) and freeze the
+    /// lane set. Runs on the splitter thread, so it cannot race its own
+    /// pushes.
     fn close_input(&self) {
         let mut t = self.lock();
         t.closed = true;
-        for lane in &t.active {
+        for lane in &t.all {
             lane.inq.close();
         }
         self.splitter_done.store(true, Ordering::Release);
@@ -331,14 +339,16 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
 
 impl<T: Send + 'static, U: Send + 'static> Drop for ReplicaSet<T, U> {
     /// Close every lane and join the workers, so a stage abandoned before
-    /// (or after) a run never leaks spinning replica threads. On the
-    /// normal scheduler path the lanes are already closed and the workers
-    /// already exited — this is then a fast no-op join.
+    /// (or after) a run never leaks parked replica threads. Safe despite
+    /// the producer-closes rule: when the last `Arc<ReplicaSet>` drops,
+    /// the split kernel (which holds one) is already gone, so no producer
+    /// can race these closes. On the normal scheduler path the lanes are
+    /// already closed and the workers already exited — a fast no-op join.
     fn drop(&mut self) {
         {
             let mut t = self.lock();
             t.closed = true;
-            for lane in &t.active {
+            for lane in &t.all {
                 lane.inq.close();
             }
         }
@@ -402,7 +412,12 @@ pub struct SplitKernel<T: Send + 'static, U: Send + 'static> {
     seen_gen: u64,
     rr: usize,
     next_seq: u64,
+    /// Batched-ingest scratch (reused across `run()` calls).
+    scratch: Vec<T>,
 }
+
+/// Items the splitter drains from upstream per `run()` quantum.
+const SPLIT_BATCH: usize = 32;
 
 impl<T: Send + 'static, U: Send + 'static> SplitKernel<T, U> {
     pub(crate) fn new(set: Arc<ReplicaSet<T, U>>) -> Self {
@@ -413,6 +428,7 @@ impl<T: Send + 'static, U: Send + 'static> SplitKernel<T, U> {
             seen_gen: u64::MAX,
             rr: 0,
             next_seq: 0,
+            scratch: Vec::with_capacity(SPLIT_BATCH),
         }
     }
 
@@ -420,6 +436,19 @@ impl<T: Send + 'static, U: Send + 'static> SplitKernel<T, U> {
         let gen = self.set.generation();
         if gen != self.seen_gen {
             let t = self.set.lock();
+            // Phase two of two-phase retirement: we are the unique
+            // producer of every lane inq, so closing marked lanes *here*
+            // (on the splitter thread) serializes the close with our own
+            // pushes — the worker's "closed && drained" verdict is then
+            // final and no routed item can be stranded behind it. Scan
+            // the full table, not our stale snapshot: a lane spawned and
+            // retired between two of our reloads was never in the
+            // snapshot but still owes its close.
+            for lane in &t.all {
+                if lane.retiring.load(Ordering::Acquire) {
+                    lane.inq.close();
+                }
+            }
             self.lanes.clear();
             self.lanes.extend(t.active.iter().cloned());
             self.seen_gen = self.set.generation();
@@ -464,18 +493,33 @@ impl<T: Send + 'static, U: Send + 'static> Kernel for SplitKernel<T, U> {
     }
 
     fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
-        match ctx.input::<T>(0).expect("split needs input port 0").pop() {
-            Some(item) => {
-                let tagged = Tagged { seq: self.next_seq, item };
-                self.next_seq += 1;
-                self.route(tagged);
-                KernelStatus::Continue
-            }
-            None => {
-                self.set.close_input();
-                KernelStatus::Done
-            }
+        let inp = ctx.input::<T>(0).expect("split needs input port 0");
+        // Batched ingest: drain a run from upstream in one publish, then
+        // tag and route item by item (round-robin balancing stays
+        // per-item). Falls back to a blocking pop when nothing is queued.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        if inp.pop_batch(&mut scratch, SPLIT_BATCH) == 0 {
+            self.scratch = scratch;
+            return match inp.pop() {
+                Some(item) => {
+                    let tagged = Tagged { seq: self.next_seq, item };
+                    self.next_seq += 1;
+                    self.route(tagged);
+                    KernelStatus::Continue
+                }
+                None => {
+                    self.set.close_input();
+                    KernelStatus::Done
+                }
+            };
         }
+        for item in scratch.drain(..) {
+            let tagged = Tagged { seq: self.next_seq, item };
+            self.next_seq += 1;
+            self.route(tagged);
+        }
+        self.scratch = scratch;
+        KernelStatus::Continue
     }
 }
 
@@ -490,7 +534,14 @@ pub struct MergeKernel<T: Send + 'static, U: Send + 'static> {
     heap: BinaryHeap<Reverse<SeqEntry<U>>>,
     next_seq: u64,
     seen_gen: u64,
+    /// Lane-sweep scratch (reused across `run()` calls).
+    scratch: Vec<Tagged<U>>,
+    /// In-order emission scratch.
+    emit: Vec<U>,
 }
+
+/// Items the merger drains per lane per sweep iteration.
+const MERGE_BATCH: usize = 32;
 
 impl<T: Send + 'static, U: Send + 'static> MergeKernel<T, U> {
     pub(crate) fn new(set: Arc<ReplicaSet<T, U>>) -> Self {
@@ -502,6 +553,8 @@ impl<T: Send + 'static, U: Send + 'static> MergeKernel<T, U> {
             heap: BinaryHeap::new(),
             next_seq: 0,
             seen_gen: u64::MAX,
+            scratch: Vec::with_capacity(MERGE_BATCH),
+            emit: Vec::new(),
         }
     }
 
@@ -531,21 +584,26 @@ impl<T: Send + 'static, U: Send + 'static> Kernel for MergeKernel<T, U> {
         self.adopt_lanes(false);
         let mut progressed = false;
 
-        // Sweep every live lane into the reorder buffer.
+        // Sweep every live lane into the reorder buffer, batch-draining
+        // each lane's out-queue (one head publish per batch).
+        let mut scratch = std::mem::take(&mut self.scratch);
         let mut i = 0;
         while i < self.lanes.len() {
             let mut finished = false;
             loop {
-                match self.lanes[i].outq.try_pop() {
-                    PopResult::Item(t) => {
-                        self.heap.push(Reverse(SeqEntry { seq: t.seq, item: t.item }));
-                        progressed = true;
+                if self.lanes[i].outq.pop_batch(&mut scratch, MERGE_BATCH) == 0 {
+                    match self.lanes[i].outq.try_pop() {
+                        PopResult::Item(t) => scratch.push(t),
+                        PopResult::Empty => break,
+                        PopResult::Closed => {
+                            finished = true;
+                            break;
+                        }
                     }
-                    PopResult::Empty => break,
-                    PopResult::Closed => {
-                        finished = true;
-                        break;
-                    }
+                }
+                for t in scratch.drain(..) {
+                    self.heap.push(Reverse(SeqEntry { seq: t.seq, item: t.item }));
+                    progressed = true;
                 }
             }
             if finished {
@@ -554,17 +612,26 @@ impl<T: Send + 'static, U: Send + 'static> Kernel for MergeKernel<T, U> {
                 i += 1;
             }
         }
+        self.scratch = scratch;
 
-        // Emit the in-order prefix.
+        // Emit the in-order prefix downstream as one batched push.
         let out = ctx.output::<U>(0).expect("merge needs output port 0");
-        while self.heap.peek().map(|Reverse(e)| e.seq) == Some(self.next_seq) {
+        let mut emit = std::mem::take(&mut self.emit);
+        while self.heap.peek().map(|Reverse(e)| e.seq)
+            == Some(self.next_seq + emit.len() as u64)
+        {
             let Reverse(e) = self.heap.pop().expect("peeked entry");
-            if out.push(e.item).is_err() {
+            emit.push(e.item);
+        }
+        if !emit.is_empty() {
+            let n = emit.len() as u64;
+            if out.push_iter(emit.drain(..)).is_err() {
                 return KernelStatus::Done;
             }
-            self.next_seq += 1;
+            self.next_seq += n;
             progressed = true;
         }
+        self.emit = emit;
 
         if self.set.input_closed() && self.lanes.is_empty() && self.heap.is_empty() {
             // Final sweep under the table lock: a lane added just before
@@ -645,17 +712,19 @@ mod tests {
         let mut merge_ctx =
             KernelContext::new(vec![], vec![Box::new(OutputPort::new(downq.clone()))]);
 
-        // Drive split and merge on two threads, scaling mid-flight.
+        // Drive split and merge on two threads, scaling mid-flight. One
+        // `run()` may route up to SPLIT_BATCH items, so the scale points
+        // are in run-quanta (~5000/32 ≈ 156 Continue returns total).
         let split_thread = std::thread::spawn(move || {
             let mut fed = 0u64;
             loop {
                 match split.run(&mut split_ctx) {
                     KernelStatus::Continue => {
                         fed += 1;
-                        if fed == n_items / 3 {
+                        if fed == 50 {
                             set.scale_to(3);
                         }
-                        if fed == 2 * n_items / 3 {
+                        if fed == 100 {
                             set.scale_to(2);
                         }
                     }
@@ -702,8 +771,9 @@ mod tests {
             KernelContext::new(vec![Box::new(InputPort::new(upq.clone()))], vec![]);
         let mut merge_ctx =
             KernelContext::new(vec![], vec![Box::new(OutputPort::new(downq.clone()))]);
-        // Feed ~half, then retire two lanes (their queues hold backlog).
-        for _ in 0..150 {
+        // Feed ~half (batched: each run routes up to SPLIT_BATCH items),
+        // then retire two lanes (their queues hold backlog).
+        for _ in 0..(150 / SPLIT_BATCH).max(1) {
             assert_eq!(split.run(&mut split_ctx), KernelStatus::Continue);
         }
         set.scale_to(1);

@@ -140,6 +140,55 @@ where
     }
 }
 
+/// A batched source kernel: drains an iterator into the output stream in
+/// `batch`-sized runs, each delivered with a single publish
+/// ([`OutputPort::push_iter`]) instead of one cross-core store per item.
+/// Use for replay/bulk-ingest workloads where pacing doesn't matter.
+pub struct IterSource<I>
+where
+    I: Iterator + Send,
+    I::Item: Send + 'static,
+{
+    name: String,
+    iter: I,
+    batch: usize,
+}
+
+impl<I> IterSource<I>
+where
+    I: Iterator + Send,
+    I::Item: Send + 'static,
+{
+    /// Default batch of 64 items per `run()` quantum.
+    pub fn new(name: impl Into<String>, iter: I) -> Self {
+        Self::with_batch(name, iter, 64)
+    }
+
+    pub fn with_batch(name: impl Into<String>, iter: I, batch: usize) -> Self {
+        IterSource { name: name.into(), iter, batch: batch.max(1) }
+    }
+}
+
+impl<I> Kernel for IterSource<I>
+where
+    I: Iterator + Send,
+    I::Item: Send + 'static,
+{
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let out = ctx.output::<I::Item>(0).expect("IterSource needs output port 0");
+        let batch = self.batch;
+        match out.push_iter((&mut self.iter).take(batch)) {
+            Ok(0) => KernelStatus::Done, // iterator exhausted
+            Ok(_) => KernelStatus::Continue,
+            Err(_) => KernelStatus::Done, // downstream closed
+        }
+    }
+}
+
 /// A trivial sink kernel folding items into a closure.
 pub struct ClosureSink<T, F>
 where
@@ -206,6 +255,22 @@ mod tests {
         assert!(ctx.input::<u32>(0).is_err());
         assert!(ctx.input::<u64>(1).is_err());
         assert!(ctx.output::<u64>(0).is_err());
+    }
+
+    #[test]
+    fn iter_source_batches_until_exhausted() {
+        let mut src = IterSource::with_batch("src", 0..100u64, 16);
+        let (q, _h) = crate::queue::instrumented::<u64>(&StreamConfig::default());
+        let mut ctx = KernelContext::new(vec![], vec![Box::new(OutputPort::new(q.clone()))]);
+        let mut runs = 0;
+        while src.run(&mut ctx) == KernelStatus::Continue {
+            runs += 1;
+        }
+        assert!(runs <= 7, "expected ≤ 7 batched quanta, got {runs}");
+        // Whole range delivered in order.
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch(&mut out, usize::MAX), 100);
+        assert_eq!(out, (0..100u64).collect::<Vec<_>>());
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! Each instrumented stream gets an independent monitor thread that:
 //!
 //! 1. determines a stable sampling period `T` ([`period`], §IV-A);
-//! 2. every `T`, performs the non-locking copy-and-zero sample of the
-//!    queue's `tc` counters and blocked booleans;
+//! 2. every `T`, performs the non-locking sample of the queue's `tc`
+//!    counters — a delta read of the monotonic head/tail indices (which
+//!    the data path maintains for free) plus blocked durations;
 //! 3. feeds *valid* (non-blocked) samples into the Algorithm-1 estimator
 //!    for the head (departures = the consumer's service rate) and, when
 //!    configured, the tail (arrivals = the producer's rate);
@@ -104,6 +105,12 @@ pub struct MonitorConfig {
     pub resize_factor: f64,
     /// Consecutive write-blocked periods before the resize trick fires.
     pub resize_after_blocked: u32,
+    /// Fraction of the sampling period a queue end may have spent blocked
+    /// while its count still passes the §IV validity gate. The queue now
+    /// records blocked *duration* (ns), so a sub-period micro-block (a
+    /// single park/yield blip in a 400 µs period) need not poison the
+    /// whole observation. 0.0 reproduces the paper's strict boolean rule.
+    pub block_tolerance: f64,
 }
 
 impl Default for MonitorConfig {
@@ -119,6 +126,7 @@ impl Default for MonitorConfig {
             classify: true,
             resize_factor: 2.0,
             resize_after_blocked: 64,
+            block_tolerance: 0.0,
         }
     }
 }
@@ -131,9 +139,13 @@ impl MonitorConfig {
 
     /// Paper-faithful defaults but with a relative convergence tolerance —
     /// practical for the fast synthetic streams used in tests/benches.
+    /// Also tolerates micro-blocks up to 2% of the period, which the
+    /// duration-based blocked accounting makes distinguishable from a
+    /// genuinely blocked period.
     pub fn practical() -> Self {
         let mut c = MonitorConfig::default();
         c.estimator.rel_tol = Some(1e-4);
+        c.block_tolerance = 0.02;
         c
     }
 }
@@ -240,14 +252,20 @@ impl QueueMonitor {
             let realized = now.saturating_sub(next_tick) + t_ns;
             next_tick = now + t_ns;
 
+            // §IV validity with the duration-based blocked accounting: a
+            // period is a non-blocking observation when its blocked time
+            // stays within the configured tolerance.
+            let tol_ns = (t_ns as f64 * self.cfg.block_tolerance.max(0.0)) as u64;
+            let head_ok = sample.head_valid_within(tol_ns);
+            let tail_ok = sample.tail_valid_within(tol_ns);
+
             // ---- §IV-A: period adaptation -------------------------------
             // Growth is gated on blockage "with respect to a kernel": for
             // departure (head) estimation only read-blocking matters; the
             // producer's write-blocking matters only when we also estimate
             // the arrival (tail) rate. A saturated upstream must not pin T
             // at its base forever.
-            let blocked = sample.read_blocked
-                || (self.cfg.instrument_tail && sample.write_blocked);
+            let blocked = !head_ok || (self.cfg.instrument_tail && !tail_ok);
             match ctl.observe(realized, blocked) {
                 Ok(PeriodDecision::Hold) => {}
                 Ok(decision) => {
@@ -274,7 +292,7 @@ impl QueueMonitor {
             }
 
             // ---- §III resize trick for chronically full queues ----------
-            if sample.write_blocked {
+            if !tail_ok {
                 write_blocked_run += 1;
                 if self.cfg.resize_factor > 1.0
                     && write_blocked_run >= self.cfg.resize_after_blocked
@@ -316,7 +334,7 @@ impl QueueMonitor {
             };
             let mut q_dbg = None;
             let mut sig_dbg = None;
-            if sample.head_valid() {
+            if head_ok {
                 if self.cfg.classify {
                     tc_moments.update(sample.tc_head as f64 * norm);
                 }
@@ -355,7 +373,7 @@ impl QueueMonitor {
                 }
             }
             if let Some(t_est) = tail_est.as_mut() {
-                if sample.tail_valid() {
+                if tail_ok {
                     if let Ok(FeedOutcome::Converged(est)) =
                         t_est.feed(sample.tc_tail as f64 * norm, t_ns, d, now)
                     {
@@ -375,8 +393,8 @@ impl QueueMonitor {
                     at_ns: now,
                     tc_head: sample.tc_head,
                     tc_tail: sample.tc_tail,
-                    valid_head: sample.head_valid(),
-                    valid_tail: sample.tail_valid(),
+                    valid_head: head_ok,
+                    valid_tail: tail_ok,
                     q: q_dbg,
                     sigma_q_bar: sig_dbg,
                 });

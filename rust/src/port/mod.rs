@@ -31,6 +31,14 @@ impl<T: Send> InputPort<T> {
         self.q.pop()
     }
 
+    /// Non-blocking bulk pop: appends up to `max` waiting items to `out`
+    /// with a single index publish. Returns the count (0 ⇒ momentarily
+    /// empty or finished — check [`InputPort::is_finished`]).
+    #[inline]
+    pub fn pop_batch(&self, out: &mut Vec<T>, max: usize) -> usize {
+        self.q.pop_batch(out, max)
+    }
+
     /// Items currently waiting.
     pub fn len(&self) -> usize {
         self.q.len()
@@ -48,7 +56,7 @@ impl<T: Send> InputPort<T> {
 
     /// Closed *and* drained — nothing will ever arrive again.
     pub fn is_finished(&self) -> bool {
-        self.q.is_closed() && self.q.is_empty()
+        self.q.is_finished()
     }
 }
 
@@ -68,10 +76,26 @@ impl<T: Send> OutputPort<T> {
         self.q.try_push(v)
     }
 
-    /// Blocking push (flags `write_blocked` while waiting).
+    /// Blocking push (accumulates `write_blocked_ns` while waiting).
     #[inline]
     pub fn push(&self, v: T) -> Result<(), PushError<T>> {
         self.q.push(v)
+    }
+
+    /// Non-blocking bulk push: moves items out of `iter` while space
+    /// remains, publishing once. Returns the number pushed; unpushed
+    /// items stay in the iterator.
+    #[inline]
+    pub fn try_push_iter<I: Iterator<Item = T>>(&self, iter: &mut I) -> usize {
+        self.q.try_push_iter(iter)
+    }
+
+    /// Blocking bulk push: delivers every item (batched publishes,
+    /// adaptive backoff when full). `Err(Closed(v))` hands back the first
+    /// undelivered item.
+    #[inline]
+    pub fn push_iter<I: IntoIterator<Item = T>>(&self, iter: I) -> Result<usize, PushError<T>> {
+        self.q.push_iter(iter)
     }
 
     /// Close the stream — called by the scheduler when the kernel is done,
@@ -124,6 +148,23 @@ mod tests {
         op.close();
         assert!(ip.is_finished());
         assert_eq!(ip.pop(), None);
+    }
+
+    #[test]
+    fn batched_port_roundtrip() {
+        let (q, _h) = crate::queue::instrumented::<u32>(&StreamConfig::default());
+        let ip = InputPort::new(q.clone());
+        let op = OutputPort::new(q);
+        assert_eq!(op.push_iter(0..100u32).unwrap(), 100);
+        let mut extra = 100..103u32;
+        assert_eq!(op.try_push_iter(&mut extra), 3);
+        let mut out = Vec::new();
+        assert_eq!(ip.pop_batch(&mut out, 50), 50);
+        assert_eq!(ip.pop_batch(&mut out, usize::MAX), 53);
+        assert_eq!(out, (0..103u32).collect::<Vec<_>>());
+        op.close();
+        assert_eq!(ip.pop_batch(&mut out, 8), 0);
+        assert!(ip.is_finished());
     }
 
     #[test]

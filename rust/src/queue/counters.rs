@@ -1,5 +1,4 @@
-//! The queue's instrumentation block and the monitor's copy-and-zero
-//! sampling protocol (paper §III).
+//! The queue's instrumentation block — now *free* instrumentation.
 //!
 //! "The only logic to consider within the queue itself is that necessary to
 //! tell the monitor thread if it has blocked and that necessary to
@@ -7,123 +6,275 @@
 //! queue. … In a non-locking operation, the monitor thread copies and
 //! zeros tc."
 //!
-//! Layout note: the head counter (consumer side) and tail counter
-//! (producer side) live on separate cache lines (`CachePadded`) so the
-//! producer and consumer never false-share — measured in
-//! `benches/queue_hotpath.rs`.
+//! Since the SPSC protocol moved to monotonic head/tail indices
+//! ([`crate::queue::spsc`]), the counters the paper requires cost the data
+//! path **nothing extra**: the producer's `tail` index *is* `total_pushes`
+//! and the consumer's `head` index *is* `total_pops` — the very stores that
+//! publish items double as the `tc` counters. The monitor's copy-and-zero
+//! `sample()` became a **delta read**: the sampler remembers the index
+//! values it last saw (monitor-private cache line) and reports the
+//! difference. Same one-period-shift race the paper accepts ("the counter
+//! maintaining tc is non-locking because locking it introduces delay"),
+//! but with zero producer/consumer cost and no count ever lost — the
+//! indices are monotonic, so sums of deltas are exact by construction.
+//!
+//! Blocking is likewise recorded as a monotonic quantity: the blocking
+//! paths accumulate blocked **duration** (ns) instead of a boolean, so
+//! [`MonitorSample::head_valid_within`] can distinguish a sub-period
+//! micro-block from a period genuinely spent waiting (§IV validity).
+//!
+//! Layout note: the head index + read-blocked accumulator (consumer side)
+//! and the tail index + write-blocked accumulator (producer side) live on
+//! separate cache lines (`CachePadded`), as does the sampler's snapshot
+//! state, so the producer, consumer, and monitor never false-share —
+//! measured in `benches/queue_hotpath.rs`.
 
 use crossbeam_utils::CachePadded;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Consumer-side cache line: the head (pop) index and the consumer's
+/// blocked-duration accumulator.
+#[derive(Debug)]
+struct ConsumerLine {
+    /// Monotonic pop index == lifetime pops. Written only by the consumer
+    /// (Release); this is the consumer's publish point in the SPSC
+    /// protocol.
+    head: AtomicU64,
+    /// Total ns the consumer has spent blocked on empty (monotonic,
+    /// flushed at wait checkpoints).
+    read_blocked_ns: AtomicU64,
+    /// Timestamp (TimeRef ns) when the consumer's *current* unflushed
+    /// wait slice began; 0 = not waiting. Lets [`QueueCounters::sample`]
+    /// see a wait that is still in progress (e.g. a parked thread that
+    /// has not woken to flush) instead of reporting the period valid.
+    read_wait_since: AtomicU64,
+}
+
+/// Producer-side cache line: the tail (push) index and the producer's
+/// blocked-duration accumulator.
+#[derive(Debug)]
+struct ProducerLine {
+    /// Monotonic push index == lifetime pushes. Written only by the
+    /// producer (Release); this is the producer's publish point.
+    tail: AtomicU64,
+    /// Total ns the producer has spent blocked on full (monotonic,
+    /// flushed at wait checkpoints).
+    write_blocked_ns: AtomicU64,
+    /// Start of the producer's current unflushed wait slice; 0 = not
+    /// waiting. See `ConsumerLine::read_wait_since`.
+    write_wait_since: AtomicU64,
+}
+
+/// Monitor-private snapshot state: the index/accumulator values already
+/// attributed to past samples. `fetch_max` (not `swap`) keeps concurrent
+/// or out-of-order samplers from double-counting a delta.
+#[derive(Debug)]
+struct SamplerLine {
+    head: AtomicU64,
+    tail: AtomicU64,
+    read_blocked_ns: AtomicU64,
+    write_blocked_ns: AtomicU64,
+}
 
 /// Shared instrumentation state between a queue's two ends and its monitor.
 #[derive(Debug)]
 pub struct QueueCounters {
-    /// Non-blocking read transactions since last sample (head/departures).
-    tc_head: CachePadded<AtomicU64>,
-    /// Non-blocking write transactions since last sample (tail/arrivals).
-    tc_tail: CachePadded<AtomicU64>,
-    /// Consumer blocked on empty at least once during the period.
-    read_blocked: AtomicBool,
-    /// Producer blocked on full at least once during the period.
-    write_blocked: AtomicBool,
-    /// Lifetime totals (never zeroed; used by reports/tests).
-    total_pushes: CachePadded<AtomicU64>,
-    total_pops: CachePadded<AtomicU64>,
+    cons: CachePadded<ConsumerLine>,
+    prod: CachePadded<ProducerLine>,
+    sampler: CachePadded<SamplerLine>,
     /// Bytes per item `d̄`.
     item_bytes: usize,
 }
 
-/// One monitor observation: the zeroed-out counts plus blocked flags.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One monitor observation: index deltas since the previous sample, plus
+/// blocked durations over the same span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct MonitorSample {
-    /// Items read from the queue during the period.
+    /// Items read from the queue during the period (head-index delta).
     pub tc_head: u64,
-    /// Items written to the queue during the period.
+    /// Items written to the queue during the period (tail-index delta).
     pub tc_tail: u64,
-    /// Consumer hit an empty queue during the period.
-    pub read_blocked: bool,
-    /// Producer hit a full queue during the period.
-    pub write_blocked: bool,
+    /// Nanoseconds the consumer spent blocked on empty during the period.
+    pub read_blocked_ns: u64,
+    /// Nanoseconds the producer spent blocked on full during the period.
+    pub write_blocked_ns: u64,
 }
 
 impl MonitorSample {
+    /// Consumer hit an empty queue during the period (any duration).
+    pub fn read_blocked(&self) -> bool {
+        self.read_blocked_ns > 0
+    }
+
+    /// Producer hit a full queue during the period (any duration).
+    pub fn write_blocked(&self) -> bool {
+        self.write_blocked_ns > 0
+    }
+
     /// Is the head (departure) count a valid non-blocking observation?
     /// §IV: "The most obvious states to ignore are those where the
     /// in-bound or out-bound queue is blocked."
     pub fn head_valid(&self) -> bool {
-        !self.read_blocked
+        self.read_blocked_ns == 0
     }
 
     /// Is the tail (arrival) count a valid non-blocking observation?
     pub fn tail_valid(&self) -> bool {
-        !self.write_blocked
+        self.write_blocked_ns == 0
+    }
+
+    /// Validity with a tolerance: a period whose blocked time is at most
+    /// `tol_ns` still counts as a non-blocking observation. With durations
+    /// (rather than the old boolean) a one-microsecond stall no longer
+    /// poisons a 400 µs period.
+    pub fn head_valid_within(&self, tol_ns: u64) -> bool {
+        self.read_blocked_ns <= tol_ns
+    }
+
+    /// Tail-side counterpart of [`MonitorSample::head_valid_within`].
+    pub fn tail_valid_within(&self, tol_ns: u64) -> bool {
+        self.write_blocked_ns <= tol_ns
     }
 }
 
 impl QueueCounters {
     pub fn new(item_bytes: usize) -> Self {
         QueueCounters {
-            tc_head: CachePadded::new(AtomicU64::new(0)),
-            tc_tail: CachePadded::new(AtomicU64::new(0)),
-            read_blocked: AtomicBool::new(false),
-            write_blocked: AtomicBool::new(false),
-            total_pushes: CachePadded::new(AtomicU64::new(0)),
-            total_pops: CachePadded::new(AtomicU64::new(0)),
+            cons: CachePadded::new(ConsumerLine {
+                head: AtomicU64::new(0),
+                read_blocked_ns: AtomicU64::new(0),
+                read_wait_since: AtomicU64::new(0),
+            }),
+            prod: CachePadded::new(ProducerLine {
+                tail: AtomicU64::new(0),
+                write_blocked_ns: AtomicU64::new(0),
+                write_wait_since: AtomicU64::new(0),
+            }),
+            sampler: CachePadded::new(SamplerLine {
+                head: AtomicU64::new(0),
+                tail: AtomicU64::new(0),
+                read_blocked_ns: AtomicU64::new(0),
+                write_blocked_ns: AtomicU64::new(0),
+            }),
             item_bytes,
         }
     }
 
-    /// Producer-side hook: a successful push.
+    /// The consumer-owned head (pop) index. ⚠ stores: consumer thread only.
     #[inline]
-    pub fn on_push(&self) {
-        self.tc_tail.fetch_add(1, Ordering::Relaxed);
-        self.total_pushes.fetch_add(1, Ordering::Relaxed);
+    pub(crate) fn head_index(&self) -> &AtomicU64 {
+        &self.cons.head
     }
 
-    /// Consumer-side hook: a successful pop.
+    /// The producer-owned tail (push) index. ⚠ stores: producer thread only.
     #[inline]
-    pub fn on_pop(&self) {
-        self.tc_head.fetch_add(1, Ordering::Relaxed);
-        self.total_pops.fetch_add(1, Ordering::Relaxed);
+    pub(crate) fn tail_index(&self) -> &AtomicU64 {
+        &self.prod.tail
     }
 
-    /// Producer-side hook: blocked on a full queue.
+    /// Consumer-side hook: add blocked-on-empty time. Called from the
+    /// blocking pop's wait loop (never on the non-blocking fast path) and
+    /// from external poll loops that starve outside the queue.
     #[inline]
-    pub fn on_write_block(&self) {
-        // Plain store — one writer per flag; monitor swaps it back to false.
-        self.write_blocked.store(true, Ordering::Relaxed);
-    }
-
-    /// Consumer-side hook: blocked on an empty queue.
-    #[inline]
-    pub fn on_read_block(&self) {
-        self.read_blocked.store(true, Ordering::Relaxed);
-    }
-
-    /// The monitor's non-locking copy-and-zero sample.
-    ///
-    /// Note the documented race the paper accepts: a counter increment
-    /// that lands between the copy and the zero is attributed to the next
-    /// period ("the counter maintaining tc is non-locking because locking
-    /// it introduces delay") — `swap` makes the copy-and-zero a single
-    /// atomic RMW, so counts are never *lost*, only shifted one period.
-    pub fn sample(&self) -> MonitorSample {
-        MonitorSample {
-            tc_head: self.tc_head.swap(0, Ordering::Relaxed),
-            tc_tail: self.tc_tail.swap(0, Ordering::Relaxed),
-            read_blocked: self.read_blocked.swap(false, Ordering::Relaxed),
-            write_blocked: self.write_blocked.swap(false, Ordering::Relaxed),
+    pub fn note_read_blocked(&self, ns: u64) {
+        if ns > 0 {
+            self.cons.read_blocked_ns.fetch_add(ns, Ordering::Relaxed);
         }
     }
 
-    /// Lifetime pushes (not zeroed by sampling).
-    pub fn total_pushes(&self) -> u64 {
-        self.total_pushes.load(Ordering::Relaxed)
+    /// Producer-side hook: add blocked-on-full time.
+    #[inline]
+    pub fn note_write_blocked(&self, ns: u64) {
+        if ns > 0 {
+            self.prod.write_blocked_ns.fetch_add(ns, Ordering::Relaxed);
+        }
     }
 
-    /// Lifetime pops (not zeroed by sampling).
+    /// Consumer-side: mark the start (TimeRef ns, nonzero) of the current
+    /// unflushed wait slice, or 0 when the wait ends. Call *after* the
+    /// matching `note_read_blocked` flush so a racing sample at worst
+    /// double-counts a just-flushed slice (conservatively marking the
+    /// period blocked), never misses an in-progress one.
+    #[inline]
+    pub fn mark_read_waiting(&self, since_ns: u64) {
+        self.cons.read_wait_since.store(since_ns, Ordering::Relaxed);
+    }
+
+    /// Producer-side counterpart of [`QueueCounters::mark_read_waiting`].
+    #[inline]
+    pub fn mark_write_waiting(&self, since_ns: u64) {
+        self.prod.write_wait_since.store(since_ns, Ordering::Relaxed);
+    }
+
+    /// The monitor's non-locking sample: deltas of the monotonic indices
+    /// and blocked accumulators since the previous sample.
+    ///
+    /// An increment that lands between the index load and the snapshot
+    /// update is attributed to the next period — the same documented race
+    /// the paper accepts for copy-and-zero, but here no count can ever be
+    /// *lost*: the indices only grow, so the sum of all deltas plus the
+    /// final residue equals the totals exactly. `fetch_max` (not `swap`)
+    /// makes even racing samplers partition the counts instead of
+    /// double-attributing them.
+    pub fn sample(&self) -> MonitorSample {
+        let head = self.cons.head.load(Ordering::Relaxed);
+        let tail = self.prod.tail.load(Ordering::Relaxed);
+        let rb_acc = self.cons.read_blocked_ns.load(Ordering::Relaxed);
+        let wb_acc = self.prod.write_blocked_ns.load(Ordering::Relaxed);
+        let prev_head = self.sampler.head.fetch_max(head, Ordering::AcqRel);
+        let prev_tail = self.sampler.tail.fetch_max(tail, Ordering::AcqRel);
+        // The snapshot only ever holds *flushed* accumulator values, so an
+        // estimation overshoot below can never advance it past reality and
+        // swallow future genuine blocked time.
+        let prev_rb = self.sampler.read_blocked_ns.fetch_max(rb_acc, Ordering::AcqRel);
+        let prev_wb = self.sampler.write_blocked_ns.fetch_max(wb_acc, Ordering::AcqRel);
+        let mut rb = rb_acc.saturating_sub(prev_rb);
+        let mut wb = wb_acc.saturating_sub(prev_wb);
+        // Fold waits still in progress into the *returned* deltas only: a
+        // parked end flushes its blocked time only when it wakes, so
+        // without the wait-since markers every sample window inside a
+        // long park would read as a *valid* zero-rate observation.
+        // Consecutive samples during one wait each see the wait-so-far —
+        // deliberate over-attribution (every such window really is
+        // blocked); the validity gates only ask "blocked beyond the
+        // tolerance", never sum these across windows.
+        let rws = self.cons.read_wait_since.load(Ordering::Relaxed);
+        let wws = self.prod.write_wait_since.load(Ordering::Relaxed);
+        if rws != 0 || wws != 0 {
+            let now = crate::timing::TimeRef::new().now_ns();
+            if rws != 0 {
+                rb = rb.saturating_add(now.saturating_sub(rws));
+            }
+            if wws != 0 {
+                wb = wb.saturating_add(now.saturating_sub(wws));
+            }
+        }
+        MonitorSample {
+            tc_head: head.saturating_sub(prev_head),
+            tc_tail: tail.saturating_sub(prev_tail),
+            read_blocked_ns: rb,
+            write_blocked_ns: wb,
+        }
+    }
+
+    /// Lifetime pushes — the tail index itself (no separate counter).
+    pub fn total_pushes(&self) -> u64 {
+        self.prod.tail.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime pops — the head index itself.
     pub fn total_pops(&self) -> u64 {
-        self.total_pops.load(Ordering::Relaxed)
+        self.cons.head.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime ns the consumer has spent blocked on empty.
+    pub fn total_read_blocked_ns(&self) -> u64 {
+        self.cons.read_blocked_ns.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime ns the producer has spent blocked on full.
+    pub fn total_write_blocked_ns(&self) -> u64 {
+        self.prod.write_blocked_ns.load(Ordering::Relaxed)
     }
 
     /// Bytes per item `d̄`.
@@ -137,52 +288,62 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    /// Stand-in for the producer/consumer publish stores.
+    fn advance(c: &QueueCounters, pushes: u64, pops: u64) {
+        let t = c.tail_index().load(Ordering::Relaxed);
+        c.tail_index().store(t + pushes, Ordering::Release);
+        let h = c.head_index().load(Ordering::Relaxed);
+        c.head_index().store(h + pops, Ordering::Release);
+    }
+
     #[test]
-    fn sample_copies_and_zeros() {
+    fn sample_reports_deltas_and_resets() {
         let c = QueueCounters::new(8);
-        for _ in 0..5 {
-            c.on_push();
-        }
-        for _ in 0..3 {
-            c.on_pop();
-        }
-        c.on_read_block();
+        advance(&c, 5, 3);
+        c.note_read_blocked(40);
         let s = c.sample();
         assert_eq!(s.tc_tail, 5);
         assert_eq!(s.tc_head, 3);
-        assert!(s.read_blocked);
-        assert!(!s.write_blocked);
-        // Zeroed:
+        assert_eq!(s.read_blocked_ns, 40);
+        assert!(s.read_blocked());
+        assert!(!s.write_blocked());
+        // Next sample sees only what happened since:
         let s2 = c.sample();
         assert_eq!(s2.tc_tail, 0);
         assert_eq!(s2.tc_head, 0);
-        assert!(!s2.read_blocked);
-        // Totals survive:
+        assert!(!s2.read_blocked());
+        // Totals are the indices themselves and survive sampling:
         assert_eq!(c.total_pushes(), 5);
         assert_eq!(c.total_pops(), 3);
+        assert_eq!(c.total_read_blocked_ns(), 40);
     }
 
     #[test]
     fn validity_gates() {
-        let mut s = MonitorSample { tc_head: 1, tc_tail: 1, read_blocked: false, write_blocked: false };
+        let mut s = MonitorSample { tc_head: 1, tc_tail: 1, ..Default::default() };
         assert!(s.head_valid() && s.tail_valid());
-        s.read_blocked = true;
+        s.read_blocked_ns = 1;
         assert!(!s.head_valid() && s.tail_valid());
-        s.write_blocked = true;
+        s.write_blocked_ns = 1;
         assert!(!s.tail_valid());
+        // Duration tolerance: micro-blocks under the threshold stay valid.
+        assert!(s.head_valid_within(1) && !s.head_valid_within(0));
+        s.read_blocked_ns = 5_000;
+        assert!(!s.head_valid_within(4_000));
+        assert!(s.tail_valid_within(1_000));
     }
 
     #[test]
     fn concurrent_sampling_loses_nothing() {
-        // Producer hammers on_push while the monitor samples; the sum of
-        // all samples plus the residue must equal the total pushes.
+        // Producer hammers the tail index while the monitor samples; the
+        // sum of all sampled deltas plus the residue must equal the total.
         let c = Arc::new(QueueCounters::new(8));
         let n = 200_000u64;
         let prod = {
             let c = c.clone();
             std::thread::spawn(move || {
-                for _ in 0..n {
-                    c.on_push();
+                for i in 1..=n {
+                    c.tail_index().store(i, Ordering::Release);
                 }
             })
         };
@@ -202,5 +363,18 @@ mod tests {
         let residue = c.sample().tc_tail;
         assert_eq!(sampled + residue, n);
         assert_eq!(c.total_pushes(), n);
+    }
+
+    #[test]
+    fn blocked_durations_accumulate_monotonically() {
+        let c = QueueCounters::new(8);
+        c.note_write_blocked(100);
+        c.note_write_blocked(250);
+        c.note_write_blocked(0); // no-op
+        let s = c.sample();
+        assert_eq!(s.write_blocked_ns, 350);
+        c.note_write_blocked(50);
+        assert_eq!(c.sample().write_blocked_ns, 50);
+        assert_eq!(c.total_write_blocked_ns(), 400);
     }
 }

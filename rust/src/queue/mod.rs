@@ -3,16 +3,23 @@
 //! Each stream between two kernels is a bounded single-producer /
 //! single-consumer queue carrying:
 //!
-//! * the data itself (segmented ring, allocation amortized per block);
-//! * **instrumentation** the monitor thread samples without locking:
-//!   non-blocking transaction counters `tc` at the head (departures) and
-//!   tail (arrivals), plus "blocked" booleans set when either end had to
-//!   wait ("the only logic … within the queue itself is that necessary to
-//!   tell the monitor thread if it has blocked and that necessary to
-//!   increment an item counter");
+//! * the data itself (segmented ring, allocation amortized per block),
+//!   moved by a **zero-contention protocol**: each end owns a monotonic
+//!   index and caches the peer's, touching the peer's cache line only on
+//!   apparent full/empty (see [`spsc`] for the memory-ordering details);
+//! * **instrumentation** the monitor thread samples without locking — and
+//!   that the data path pays *nothing* for: the producer's `tail` index
+//!   doubles as the paper's tail `tc`/total counter and the consumer's
+//!   `head` index as the head counter, while blocked time is accumulated
+//!   as a duration (ns) only on the already-slow blocking paths ("the
+//!   only logic … within the queue itself is that necessary to tell the
+//!   monitor thread if it has blocked and that necessary to increment an
+//!   item counter");
 //! * a **dynamically adjustable capacity** — the §III resize trick: growing
 //!   a full outbound queue opens a brief window of guaranteed non-blocking
-//!   writes for the monitor to observe.
+//!   writes for the monitor to observe;
+//! * **batched transfer** ([`SpscQueue::try_push_iter`] /
+//!   [`SpscQueue::pop_batch`]) publishing one Release store per batch.
 
 pub mod counters;
 pub mod spsc;

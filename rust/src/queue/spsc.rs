@@ -1,4 +1,5 @@
-//! Bounded, closable, *resizable* lock-free SPSC queue.
+//! Bounded, closable, *resizable* lock-free SPSC queue — zero-contention
+//! hot path.
 //!
 //! Implementation: a segmented linked list of fixed-size blocks (producer
 //! appends, consumer frees), bounded by an **atomic capacity** rather than
@@ -7,20 +8,63 @@
 //! which to observe fully non-blocking behavior" — a single atomic store,
 //! with no data movement and no locking of either end.
 //!
-//! Synchronization protocol (exactly one producer thread, one consumer
-//! thread, any number of monitor threads touching only counters/capacity):
+//! # Synchronization protocol
 //!
-//! * producer: writes the slot, links new blocks with `Release`, then
-//!   publishes with `len.fetch_add(1, Release)`;
-//! * consumer: observes items via `len.load(Acquire)` — which makes the
-//!   slot contents and any `next` pointers visible — reads the slot, then
-//!   retires with `len.fetch_sub(1, Release)`;
-//! * close: producer sets `closed` (Release) after its final publish;
-//!   consumer treats `len == 0 && closed` as end-of-stream.
+//! Exactly one producer thread, one consumer thread, any number of monitor
+//! threads touching only counters/capacity. Each end owns a **monotonic
+//! index** (living in [`QueueCounters`], so the index doubles as the
+//! paper's `tc`/total instrumentation at zero extra cost) and keeps a
+//! *cached snapshot* of the peer's index, touching the peer's cache line
+//! only when the cache says full/empty:
+//!
+//! * **producer** owns `tail`: checks `tail − head_cache < capacity`
+//!   (reloading `head_cache` only on apparent full), writes the slot,
+//!   links new blocks, then publishes with a single
+//!   `tail.store(tail + 1, Release)` — a plain store, **no RMW and no
+//!   peer-line read** in the common case;
+//! * **consumer** owns `head`: on `head == tail_cache` reloads the tail
+//!   with `Acquire` (which makes the slot contents and `next` pointers
+//!   visible), reads the slot, then retires with
+//!   `head.store(head + 1, Release)`;
+//! * **occupancy** is never stored anywhere: `len() = tail − head`,
+//!   computed on demand (head loaded first, so the difference can't go
+//!   negative);
+//! * **close**: the closer sets `closed` (Release) after the final
+//!   publish; the consumer treats `closed && head == tail` as
+//!   end-of-stream, re-reading `tail` *after* observing `closed` so the
+//!   verdict is final. (A third party — e.g. the elastic control plane —
+//!   may also close; the producer then gets the item back via
+//!   `PushError::Closed`.)
+//!
+//! # Blocking & backoff
+//!
+//! The blocking `push`/`pop` escalate **spin → yield → park**: a bounded
+//! spin for sub-microsecond waits, a bounded yield phase, then the thread
+//! parks and is woken by the peer's next publish (the peer checks a
+//! `parked` flag — one Relaxed load of a normally-cold line — and only
+//! then takes the wake slow path). Parking uses `park_timeout` with an
+//! escalating bound as a safety net: the parked flag is raised *before*
+//! the final state re-check, which with the SeqCst flag operations makes
+//! a lost wakeup vanishingly rare, and the timeout bounds the stall if it
+//! ever happens. A parked kernel burns **zero** CPU, so the monitor no
+//! longer misreads a blocked kernel as busy. Blocked time is accumulated
+//! as a **duration** (ns) into [`QueueCounters`] while the wait is in
+//! progress, so a concurrent monitor sample observes the block as it
+//! happens (§IV validity), with sub-period micro-blocks distinguishable
+//! from fully-blocked periods.
+//!
+//! # Batched transfer
+//!
+//! [`SpscQueue::try_push_iter`] / [`SpscQueue::push_iter`] /
+//! [`SpscQueue::pop_batch`] move runs of items with **one Release publish
+//! per batch** instead of per item, amortizing the only cross-core store
+//! on the path.
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
 
 use crossbeam_utils::CachePadded;
 
@@ -29,8 +73,14 @@ use super::counters::QueueCounters;
 /// Items per block. Amortizes allocation; keeps resize latency at zero.
 const BLOCK: usize = 256;
 
-/// Spins before falling back to `yield_now` while blocked.
-const SPINS_BEFORE_YIELD: u32 = 128;
+/// Pure-spin passes before a blocked end starts yielding.
+const SPIN_PASSES: u32 = 64;
+/// Yield passes before a blocked end parks.
+const YIELD_PASSES: u32 = 64;
+/// First park timeout (safety net against a lost wakeup), ns.
+const PARK_MIN_NS: u64 = 100_000;
+/// Park timeout ceiling, ns.
+const PARK_MAX_NS: u64 = 2_000_000;
 
 struct Block<T> {
     slots: [UnsafeCell<MaybeUninit<T>>; BLOCK],
@@ -49,24 +99,143 @@ impl<T> Block<T> {
     }
 }
 
-struct EndState<T> {
+/// Producer-private state: write cursor + the local/cached indices.
+struct ProdState<T> {
     block: *mut Block<T>,
     idx: usize,
+    /// Local mirror of the published tail index (we are its only writer).
+    tail: u64,
+    /// Last observed consumer head; reloaded only on apparent full.
+    head_cache: u64,
+}
+
+/// Consumer-private state: read cursor + the local/cached indices.
+struct ConsState<T> {
+    block: *mut Block<T>,
+    idx: usize,
+    /// Local mirror of the published head index (we are its only writer).
+    head: u64,
+    /// Last observed producer tail; reloaded only on apparent empty.
+    tail_cache: u64,
+}
+
+/// One end's park/wake handshake. The `parked` flag lives on its own
+/// cache line (via the queue's `CachePadded` wrapper) and is almost
+/// always `false`, so the peer's per-publish check is a cheap
+/// read-mostly load.
+struct Waiter {
+    parked: AtomicBool,
+    thread: Mutex<Option<std::thread::Thread>>,
+}
+
+impl Waiter {
+    fn new() -> Self {
+        Waiter { parked: AtomicBool::new(false), thread: Mutex::new(None) }
+    }
+
+    /// Publish intent to park. Call *before* the final state re-check so
+    /// the peer's publish→flag-check cannot slip between check and park
+    /// unnoticed (SeqCst on the flag narrows the classic store-buffer
+    /// race; the park timeout bounds whatever remains).
+    fn prepare(&self) {
+        *self.thread.lock().unwrap() = Some(std::thread::current());
+        self.parked.store(true, Ordering::SeqCst);
+    }
+
+    /// Withdraw the intent (after waking or on exit paths).
+    fn cancel(&self) {
+        self.parked.store(false, Ordering::SeqCst);
+    }
+
+    /// Peer-side wake. The fast path is a single Relaxed load.
+    #[inline]
+    fn wake(&self) {
+        if self.parked.load(Ordering::Relaxed) {
+            self.wake_slow();
+        }
+    }
+
+    #[cold]
+    fn wake_slow(&self) {
+        if self.parked.swap(false, Ordering::SeqCst) {
+            if let Some(t) = self.thread.lock().unwrap().take() {
+                t.unpark();
+            }
+        }
+    }
+}
+
+/// Blocked-time bookkeeping for one blocking wait: flushes the elapsed
+/// slice into the counters and clears the in-progress wait marker on
+/// *every* exit path — normal returns and unwinds alike — via `Drop`,
+/// with [`WaitGuard::flush`] as the mid-wait checkpoint. One mechanism
+/// instead of a hand-copied epilogue per exit arm.
+struct WaitGuard<'a> {
+    counters: &'a QueueCounters,
+    time: crate::timing::TimeRef,
+    last_flush: u64,
+    write_side: bool,
+}
+
+impl<'a> WaitGuard<'a> {
+    fn new(counters: &'a QueueCounters, write_side: bool) -> Self {
+        let time = crate::timing::TimeRef::new();
+        let now = time.now_ns();
+        // Mark the wait in progress so samples taken while this end is
+        // parked (unable to flush) still see the blocked time.
+        if write_side {
+            counters.mark_write_waiting(now.max(1));
+        } else {
+            counters.mark_read_waiting(now.max(1));
+        }
+        WaitGuard { counters, time, last_flush: now, write_side }
+    }
+
+    /// Mid-wait checkpoint: flush the elapsed slice, advance the marker.
+    /// Flush first, then marker — a racing sample at worst double-counts
+    /// the just-flushed slice (conservatively blocked), never misses one.
+    fn flush(&mut self) {
+        let now = self.time.now_ns();
+        let span = now.saturating_sub(self.last_flush);
+        self.last_flush = now;
+        if self.write_side {
+            self.counters.note_write_blocked(span);
+            self.counters.mark_write_waiting(now.max(1));
+        } else {
+            self.counters.note_read_blocked(span);
+            self.counters.mark_read_waiting(now.max(1));
+        }
+    }
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let span = self.time.now_ns().saturating_sub(self.last_flush);
+        if self.write_side {
+            self.counters.note_write_blocked(span);
+            self.counters.mark_write_waiting(0);
+        } else {
+            self.counters.note_read_blocked(span);
+            self.counters.mark_read_waiting(0);
+        }
+    }
 }
 
 /// The queue. See module docs for the protocol.
 pub struct SpscQueue<T> {
-    /// Producer-private cursor (current block + write offset).
-    prod: CachePadded<UnsafeCell<EndState<T>>>,
-    /// Consumer-private cursor (current block + read offset).
-    cons: CachePadded<UnsafeCell<EndState<T>>>,
-    /// Items in flight. The producer↔consumer synchronization point.
-    len: CachePadded<AtomicUsize>,
+    /// Producer-private cursor and index cache.
+    prod: CachePadded<UnsafeCell<ProdState<T>>>,
+    /// Consumer-private cursor and index cache.
+    cons: CachePadded<UnsafeCell<ConsState<T>>>,
     /// Admission bound — atomically adjustable (§III resize).
     capacity: AtomicUsize,
-    /// Producer has closed the stream.
+    /// Stream closed (producer- or control-plane-set).
     closed: AtomicBool,
-    /// Instrumentation block (tc counters + blocked flags).
+    /// Producer's park state (woken by consumer pops).
+    prod_waiter: CachePadded<Waiter>,
+    /// Consumer's park state (woken by producer pushes and by close).
+    cons_waiter: CachePadded<Waiter>,
+    /// Instrumentation block; owns the published head/tail indices.
     counters: QueueCounters,
 }
 
@@ -92,7 +261,7 @@ pub enum PopResult<T> {
 pub enum PushError<T> {
     /// At capacity.
     Full(T),
-    /// Stream already closed (programming error on the producer side).
+    /// Stream already closed (or closed by the control plane).
     Closed(T),
 }
 
@@ -102,11 +271,22 @@ impl<T: Send> SpscQueue<T> {
         let capacity = capacity.max(1);
         let first = Block::alloc();
         SpscQueue {
-            prod: CachePadded::new(UnsafeCell::new(EndState { block: first, idx: 0 })),
-            cons: CachePadded::new(UnsafeCell::new(EndState { block: first, idx: 0 })),
-            len: CachePadded::new(AtomicUsize::new(0)),
+            prod: CachePadded::new(UnsafeCell::new(ProdState {
+                block: first,
+                idx: 0,
+                tail: 0,
+                head_cache: 0,
+            })),
+            cons: CachePadded::new(UnsafeCell::new(ConsState {
+                block: first,
+                idx: 0,
+                head: 0,
+                tail_cache: 0,
+            })),
             capacity: AtomicUsize::new(capacity),
             closed: AtomicBool::new(false),
+            prod_waiter: CachePadded::new(Waiter::new()),
+            cons_waiter: CachePadded::new(Waiter::new()),
             counters: QueueCounters::new(item_bytes),
         }
     }
@@ -116,10 +296,14 @@ impl<T: Send> SpscQueue<T> {
         &self.counters
     }
 
-    /// Current item count.
+    /// Current item count: `tail − head`, computed on demand. Head is
+    /// loaded first — it can only trail the tail, so the difference is
+    /// non-negative under any interleaving.
     #[inline]
     pub fn len(&self) -> usize {
-        self.len.load(Ordering::Acquire)
+        let head = self.counters.head_index().load(Ordering::Relaxed);
+        let tail = self.counters.tail_index().load(Ordering::Acquire);
+        tail.saturating_sub(head) as usize
     }
 
     /// True when no items are in flight.
@@ -134,36 +318,44 @@ impl<T: Send> SpscQueue<T> {
         self.capacity.load(Ordering::Relaxed)
     }
 
-    /// Atomically change the admission capacity (monitor-callable).
+    /// Atomically change the admission capacity (monitor-callable). A
+    /// single Relaxed store: the producer re-reads capacity on every
+    /// admission check, so growth opens the §III non-blocking window on
+    /// its very next attempt — including a parked one, which is woken
+    /// here rather than left to sleep out its park timeout.
     pub fn set_capacity(&self, cap: usize) {
         self.capacity.store(cap.max(1), Ordering::Relaxed);
+        self.prod_waiter.wake();
     }
 
-    /// Has the producer closed the stream?
+    /// Has the stream been closed?
     #[inline]
     pub fn is_closed(&self) -> bool {
         self.closed.load(Ordering::Acquire)
     }
 
-    /// Close the stream (producer side). Idempotent.
-    pub fn close(&self) {
-        self.closed.store(true, Ordering::Release);
+    /// Closed *and* drained — nothing will ever arrive again.
+    #[inline]
+    pub fn is_finished(&self) -> bool {
+        self.is_closed() && self.is_empty()
     }
 
-    /// Non-blocking push. ⚠ producer thread only.
+    /// Close the stream (producer side, or control plane). Idempotent.
+    /// Wakes both ends so no thread stays parked on a dead stream.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.prod_waiter.wake();
+        self.cons_waiter.wake();
+    }
+
+    /// Write `v` into the next unpublished slot, growing the segment
+    /// chain as needed. Does not publish.
     #[inline]
-    pub fn try_push(&self, v: T) -> Result<(), PushError<T>> {
-        if self.is_closed() {
-            return Err(PushError::Closed(v));
-        }
-        if self.len.load(Ordering::Relaxed) >= self.capacity.load(Ordering::Relaxed) {
-            return Err(PushError::Full(v));
-        }
-        // SAFETY: single producer — we are the only toucher of `prod`.
-        let st = unsafe { &mut *self.prod.get() };
+    fn write_slot(&self, st: &mut ProdState<T>, v: T) {
         if st.idx == BLOCK {
             let nb = Block::alloc();
-            // Link before publish; consumer sees it via the Acquire on len.
+            // Link before publish; the consumer discovers `next` only via
+            // an Acquire tail load that postdates this store.
             unsafe { (*st.block).next.store(nb, Ordering::Release) };
             st.block = nb;
             st.idx = 0;
@@ -173,90 +365,311 @@ impl<T: Send> SpscQueue<T> {
             (*(*st.block).slots[st.idx].get()).write(v);
         }
         st.idx += 1;
-        self.len.fetch_add(1, Ordering::Release);
-        self.counters.on_push();
+    }
+
+    /// Read the next published slot, retiring exhausted blocks. The
+    /// caller must have established `head < tail` (an item exists), which
+    /// also guarantees the `next` link of an exhausted block is set.
+    #[inline]
+    fn read_slot(&self, st: &mut ConsState<T>) -> T {
+        if st.idx == BLOCK {
+            let next = unsafe { (*st.block).next.load(Ordering::Acquire) };
+            debug_assert!(!next.is_null(), "published item but next block missing");
+            // SAFETY: we are past every slot of the old block, and the
+            // producer moved on when it linked `next`.
+            unsafe { drop(Box::from_raw(st.block)) };
+            st.block = next;
+            st.idx = 0;
+        }
+        // SAFETY: the Acquire that refreshed tail_cache made this slot's
+        // write visible; it is published and not yet consumed.
+        let v = unsafe { (*(*st.block).slots[st.idx].get()).assume_init_read() };
+        st.idx += 1;
+        v
+    }
+
+    /// Publish `pushed` freshly written items with one Release store and
+    /// wake a parked consumer.
+    #[inline]
+    fn publish(&self, st: &mut ProdState<T>, pushed: u64) {
+        st.tail = st.tail.wrapping_add(pushed);
+        self.counters.tail_index().store(st.tail, Ordering::Release);
+        self.cons_waiter.wake();
+    }
+
+    /// Non-blocking push. ⚠ producer thread only.
+    ///
+    /// Fast path: zero peer-cache-line reads — the capacity check runs
+    /// against the producer's cached head snapshot, refreshed only on
+    /// apparent full.
+    #[inline]
+    pub fn try_push(&self, v: T) -> Result<(), PushError<T>> {
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(PushError::Closed(v));
+        }
+        // SAFETY: single producer — we are the only toucher of `prod`.
+        let st = unsafe { &mut *self.prod.get() };
+        let cap = self.capacity.load(Ordering::Relaxed) as u64;
+        if st.tail.wrapping_sub(st.head_cache) >= cap {
+            // Apparent full: only now touch the consumer's cache line.
+            st.head_cache = self.counters.head_index().load(Ordering::Relaxed);
+            if st.tail.wrapping_sub(st.head_cache) >= cap {
+                return Err(PushError::Full(v));
+            }
+        }
+        self.write_slot(st, v);
+        self.publish(st, 1);
         Ok(())
     }
 
-    /// Blocking push: spins/yields while full, flags `write_blocked` once
-    /// per blocking episode. Returns the item if the queue is closed.
-    pub fn push(&self, mut v: T) -> Result<(), PushError<T>> {
-        let mut spins = 0u32;
-        let mut flagged = false;
+    /// Non-blocking bulk push: moves items out of `iter` while admission
+    /// space remains, then publishes **once**. Returns the number pushed;
+    /// items still in the iterator were not consumed. Returns 0 without
+    /// touching the iterator when the stream is closed.
+    ///
+    /// Panic-safe: if `iter.next()` unwinds mid-batch, the items already
+    /// written are published on the way out (drop guard), so the producer
+    /// cursor and the published tail never desynchronize.
+    pub fn try_push_iter<I>(&self, iter: &mut I) -> usize
+    where
+        I: Iterator<Item = T>,
+    {
+        if self.closed.load(Ordering::Relaxed) {
+            return 0;
+        }
+        /// Publishes the written-but-unpublished run on drop — the
+        /// normal exit path and the `iter.next()` unwind path alike.
+        struct BatchGuard<'a, T: Send> {
+            q: &'a SpscQueue<T>,
+            st: &'a mut ProdState<T>,
+            pushed: u64,
+        }
+        impl<T: Send> Drop for BatchGuard<'_, T> {
+            fn drop(&mut self) {
+                if self.pushed > 0 {
+                    self.q.publish(self.st, self.pushed);
+                }
+            }
+        }
+        // SAFETY: single producer.
+        let st = unsafe { &mut *self.prod.get() };
+        let cap = self.capacity.load(Ordering::Relaxed) as u64;
+        let mut g = BatchGuard { q: self, st, pushed: 0 };
+        loop {
+            let used = g.st.tail.wrapping_add(g.pushed).wrapping_sub(g.st.head_cache);
+            let mut free = cap.saturating_sub(used);
+            if free == 0 {
+                let head = self.counters.head_index().load(Ordering::Relaxed);
+                if head == g.st.head_cache {
+                    break; // genuinely full
+                }
+                g.st.head_cache = head;
+                continue;
+            }
+            while free > 0 {
+                match iter.next() {
+                    Some(v) => {
+                        self.write_slot(g.st, v);
+                        g.pushed += 1;
+                        free -= 1;
+                    }
+                    None => return g.pushed as usize, // guard publishes
+                }
+            }
+        }
+        g.pushed as usize // guard publishes on drop
+    }
+
+    /// Blocking bulk push: delivers **every** item of `iter`, batching
+    /// publishes while space is available and falling back to the
+    /// adaptive-backoff [`SpscQueue::push`] when full. On
+    /// `Err(PushError::Closed(v))`, `v` is the first undelivered item;
+    /// the iterator's remaining items are dropped with it.
+    pub fn push_iter<I>(&self, iter: I) -> Result<usize, PushError<T>>
+    where
+        I: IntoIterator<Item = T>,
+    {
+        let mut it = iter.into_iter();
+        let mut n = self.try_push_iter(&mut it);
+        loop {
+            match it.next() {
+                None => return Ok(n),
+                Some(v) => match self.push(v) {
+                    Ok(()) => n += 1,
+                    Err(e) => return Err(e),
+                },
+            }
+            n += self.try_push_iter(&mut it);
+        }
+    }
+
+    /// Blocking push: adaptive spin → yield → park while full, recording
+    /// blocked *duration* into the counters as the wait progresses.
+    /// Returns the item if the queue is closed.
+    pub fn push(&self, v: T) -> Result<(), PushError<T>> {
+        match self.try_push(v) {
+            Ok(()) => Ok(()),
+            Err(PushError::Closed(x)) => Err(PushError::Closed(x)),
+            Err(PushError::Full(x)) => self.push_slow(x),
+        }
+    }
+
+    #[cold]
+    fn push_slow(&self, mut v: T) -> Result<(), PushError<T>> {
+        // The guard flushes blocked time and clears the wait marker on
+        // every return path (and on unwind).
+        let mut wait = WaitGuard::new(&self.counters, true);
+        let mut pass: u32 = 0;
+        let mut park_ns = PARK_MIN_NS;
         loop {
             match self.try_push(v) {
                 Ok(()) => return Ok(()),
                 Err(PushError::Closed(x)) => return Err(PushError::Closed(x)),
+                Err(PushError::Full(x)) => v = x,
+            }
+            pass = pass.saturating_add(1);
+            if pass <= SPIN_PASSES {
+                std::hint::spin_loop();
+                continue;
+            }
+            // Checkpoint so a concurrent monitor sample sees the block
+            // while it is happening, not only after it resolves.
+            wait.flush();
+            if pass <= SPIN_PASSES + YIELD_PASSES {
+                std::thread::yield_now();
+                continue;
+            }
+            // Park until the consumer's next publish (or the safety-net
+            // timeout). Raise the flag, then re-check, then park.
+            self.prod_waiter.prepare();
+            match self.try_push(v) {
+                Ok(()) => {
+                    self.prod_waiter.cancel();
+                    return Ok(());
+                }
+                Err(PushError::Closed(x)) => {
+                    self.prod_waiter.cancel();
+                    return Err(PushError::Closed(x));
+                }
                 Err(PushError::Full(x)) => {
                     v = x;
-                    if !flagged {
-                        self.counters.on_write_block();
-                        flagged = true;
-                    }
-                    spins += 1;
-                    if spins > SPINS_BEFORE_YIELD {
-                        std::thread::yield_now();
-                    } else {
-                        std::hint::spin_loop();
-                    }
+                    std::thread::park_timeout(Duration::from_nanos(park_ns));
+                    self.prod_waiter.cancel();
+                    park_ns = (park_ns * 2).min(PARK_MAX_NS);
                 }
             }
         }
     }
 
     /// Non-blocking pop. ⚠ consumer thread only.
+    ///
+    /// Fast path: zero peer-cache-line reads while the cached tail says
+    /// items remain.
     #[inline]
     pub fn try_pop(&self) -> PopResult<T> {
-        if self.len.load(Ordering::Acquire) == 0 {
-            // Re-check after observing closed: the producer closes only
-            // after its final publish, so closed && len == 0 is final.
-            if self.closed.load(Ordering::Acquire) && self.len.load(Ordering::Acquire) == 0 {
-                return PopResult::Closed;
-            }
-            return PopResult::Empty;
-        }
         // SAFETY: single consumer — we are the only toucher of `cons`.
         let st = unsafe { &mut *self.cons.get() };
-        if st.idx == BLOCK {
-            // The block is exhausted; the next one must exist because
-            // len > 0 and the producer links before publishing.
-            let next = unsafe { (*st.block).next.load(Ordering::Acquire) };
-            debug_assert!(!next.is_null(), "len > 0 but next block missing");
-            // SAFETY: consumer is past every slot in the old block and the
-            // producer moved on when it linked `next`.
-            unsafe { drop(Box::from_raw(st.block)) };
-            st.block = next;
-            st.idx = 0;
+        if st.head == st.tail_cache {
+            // Apparent empty: refresh the cached tail. The Acquire pairs
+            // with the producer's Release publish, making slot writes and
+            // block links visible.
+            st.tail_cache = self.counters.tail_index().load(Ordering::Acquire);
+            if st.head == st.tail_cache {
+                if self.closed.load(Ordering::Acquire) {
+                    // close() follows the final publish: re-read tail
+                    // after observing `closed` so this verdict is final.
+                    st.tail_cache = self.counters.tail_index().load(Ordering::Acquire);
+                    if st.head == st.tail_cache {
+                        return PopResult::Closed;
+                    }
+                } else {
+                    return PopResult::Empty;
+                }
+            }
         }
-        // SAFETY: the Acquire on len made this slot's write visible; it is
-        // published and not yet consumed.
-        let v = unsafe { (*(*st.block).slots[st.idx].get()).assume_init_read() };
-        st.idx += 1;
-        self.len.fetch_sub(1, Ordering::Release);
-        self.counters.on_pop();
+        let v = self.read_slot(st);
+        st.head = st.head.wrapping_add(1);
+        self.counters.head_index().store(st.head, Ordering::Release);
+        self.prod_waiter.wake();
         PopResult::Item(v)
     }
 
-    /// Blocking pop: spins/yields while empty, flags `read_blocked` once
-    /// per blocking episode. `None` ⇒ closed and drained.
+    /// Non-blocking bulk pop: appends up to `max` items to `out`, then
+    /// publishes the head **once**. Returns the count (0 ⇒ momentarily
+    /// empty *or* closed-and-drained — use [`SpscQueue::try_pop`] or
+    /// [`SpscQueue::is_finished`] to distinguish).
+    pub fn pop_batch(&self, out: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        // SAFETY: single consumer.
+        let st = unsafe { &mut *self.cons.get() };
+        let mut avail = st.tail_cache.wrapping_sub(st.head);
+        if avail == 0 {
+            st.tail_cache = self.counters.tail_index().load(Ordering::Acquire);
+            avail = st.tail_cache.wrapping_sub(st.head);
+            if avail == 0 {
+                return 0;
+            }
+        }
+        let take = (avail.min(max as u64)) as usize;
+        out.reserve(take);
+        for _ in 0..take {
+            out.push(self.read_slot(st));
+        }
+        st.head = st.head.wrapping_add(take as u64);
+        self.counters.head_index().store(st.head, Ordering::Release);
+        self.prod_waiter.wake();
+        take
+    }
+
+    /// Blocking pop: adaptive spin → yield → park while empty, recording
+    /// blocked duration. `None` ⇒ closed and drained.
     pub fn pop(&self) -> Option<T> {
-        let mut spins = 0u32;
-        let mut flagged = false;
+        match self.try_pop() {
+            PopResult::Item(v) => Some(v),
+            PopResult::Closed => None,
+            PopResult::Empty => self.pop_slow(),
+        }
+    }
+
+    #[cold]
+    fn pop_slow(&self) -> Option<T> {
+        // See push_slow: the guard keeps the in-progress wait visible to
+        // samplers and settles the accounting on every exit path.
+        let mut wait = WaitGuard::new(&self.counters, false);
+        let mut pass: u32 = 0;
+        let mut park_ns = PARK_MIN_NS;
         loop {
             match self.try_pop() {
                 PopResult::Item(v) => return Some(v),
                 PopResult::Closed => return None,
+                PopResult::Empty => {}
+            }
+            pass = pass.saturating_add(1);
+            if pass <= SPIN_PASSES {
+                std::hint::spin_loop();
+                continue;
+            }
+            wait.flush();
+            if pass <= SPIN_PASSES + YIELD_PASSES {
+                std::thread::yield_now();
+                continue;
+            }
+            self.cons_waiter.prepare();
+            match self.try_pop() {
+                PopResult::Item(v) => {
+                    self.cons_waiter.cancel();
+                    return Some(v);
+                }
+                PopResult::Closed => {
+                    self.cons_waiter.cancel();
+                    return None;
+                }
                 PopResult::Empty => {
-                    if !flagged {
-                        self.counters.on_read_block();
-                        flagged = true;
-                    }
-                    spins += 1;
-                    if spins > SPINS_BEFORE_YIELD {
-                        std::thread::yield_now();
-                    } else {
-                        std::hint::spin_loop();
-                    }
+                    std::thread::park_timeout(Duration::from_nanos(park_ns));
+                    self.cons_waiter.cancel();
+                    park_ns = (park_ns * 2).min(PARK_MAX_NS);
                 }
             }
         }
@@ -267,11 +680,11 @@ impl<T> Drop for SpscQueue<T> {
     fn drop(&mut self) {
         // SAFETY: &mut self — no concurrent access remains.
         let cons = unsafe { &mut *self.cons.get() };
-        let prod = unsafe { &*self.prod.get() };
+        let tail = self.counters.total_pushes();
+        let mut remaining = tail.saturating_sub(cons.head);
         let mut block = cons.block;
         let mut idx = cons.idx;
         // Drop all published-but-unconsumed items.
-        let mut remaining = *self.len.get_mut();
         while remaining > 0 {
             if idx == BLOCK {
                 let next = unsafe { (*block).next.load(Ordering::Relaxed) };
@@ -292,7 +705,6 @@ impl<T> Drop for SpscQueue<T> {
             unsafe { drop(Box::from_raw(block)) };
             block = next;
         }
-        let _ = prod;
     }
 }
 
@@ -351,6 +763,7 @@ mod tests {
         assert_eq!(q.try_pop(), PopResult::Item(1));
         assert_eq!(q.try_pop(), PopResult::Closed);
         assert_eq!(q.pop(), None);
+        assert!(q.is_finished());
     }
 
     #[test]
@@ -366,7 +779,7 @@ mod tests {
     }
 
     #[test]
-    fn counters_track_transactions() {
+    fn indices_are_the_counters() {
         let q = SpscQueue::new(8, 16);
         q.try_push(1u64).unwrap();
         q.try_push(2).unwrap();
@@ -374,11 +787,74 @@ mod tests {
         let s = q.counters().sample();
         assert_eq!(s.tc_tail, 2);
         assert_eq!(s.tc_head, 1);
+        assert_eq!(q.counters().total_pushes(), 2);
+        assert_eq!(q.counters().total_pops(), 1);
         assert_eq!(q.counters().item_bytes(), 16);
+        // The totals are literally the indices: len agrees.
+        assert_eq!(q.len(), 1);
     }
 
     #[test]
-    fn blocked_flags_set_by_blocking_paths() {
+    fn batched_roundtrip_across_blocks() {
+        let n = BLOCK as u64 * 2 + 100;
+        let q = SpscQueue::new(n as usize, 8);
+        let mut it = 0..n;
+        assert_eq!(q.try_push_iter(&mut it), n as usize);
+        assert!(it.next().is_none());
+        // Full queue admits nothing more.
+        let mut more = 0..5u64;
+        assert_eq!(q.try_push_iter(&mut more), 0);
+        assert_eq!(more.next(), Some(0), "iterator must not lose items");
+        // One publish covered the whole batch:
+        let s = q.counters().sample();
+        assert_eq!(s.tc_tail, n);
+        // Batched drain, bounded by `max`.
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch(&mut out, 64), 64);
+        assert_eq!(q.pop_batch(&mut out, usize::MAX), n as usize - 64);
+        assert_eq!(q.pop_batch(&mut out, 8), 0);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+        assert_eq!(q.counters().total_pops(), n);
+    }
+
+    #[test]
+    fn push_iter_blocks_until_delivered() {
+        let q = Arc::new(SpscQueue::new(8, 8));
+        let n = 50_000u64;
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || {
+            let pushed = qp.push_iter(0..n).unwrap();
+            qp.close();
+            pushed
+        });
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            let mut expect = 0u64;
+            loop {
+                let got = qc.pop_batch(&mut out, 32);
+                if got == 0 {
+                    match qc.try_pop() {
+                        PopResult::Item(v) => out.push(v),
+                        PopResult::Closed => break,
+                        PopResult::Empty => std::thread::yield_now(),
+                    }
+                }
+                for v in out.drain(..) {
+                    assert_eq!(v, expect);
+                    expect += 1;
+                }
+            }
+            expect
+        });
+        assert_eq!(prod.join().unwrap(), n as usize);
+        assert_eq!(cons.join().unwrap(), n);
+    }
+
+    #[test]
+    fn blocked_duration_recorded_by_blocking_paths() {
         let q = Arc::new(SpscQueue::new(1, 8));
         // Fill, then have a producer thread block on a full queue.
         q.try_push(0u64).unwrap();
@@ -386,13 +862,70 @@ mod tests {
         let t = std::thread::spawn(move || {
             qp.push(1).unwrap();
         });
-        // Give the producer time to block, then drain.
+        // Give the producer time to block (and park), then drain.
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert_eq!(q.try_pop(), PopResult::Item(0));
         t.join().unwrap();
         let s = q.counters().sample();
-        assert!(s.write_blocked, "producer block not recorded");
+        assert!(s.write_blocked(), "producer block not recorded");
+        assert!(
+            s.write_blocked_ns >= 5_000_000,
+            "expected ≥5 ms of recorded block, got {} ns",
+            s.write_blocked_ns
+        );
         assert_eq!(s.tc_tail, 2);
+        assert!(s.tail_valid_within(100_000_000));
+        assert!(!s.tail_valid());
+    }
+
+    #[test]
+    fn in_progress_park_is_visible_to_sampler() {
+        // A sample taken while an end is parked (unable to flush its
+        // blocked time) must still see the wait — otherwise every
+        // monitor window inside a long park reads as a valid zero-rate
+        // observation (§IV regression).
+        let q = Arc::new(SpscQueue::<u64>::new(8, 8));
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || qc.pop());
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // Consumer is mid-wait (parked or yielding) right now.
+        let s = q.counters().sample();
+        assert!(
+            s.read_blocked_ns > 0,
+            "in-progress wait invisible to a concurrent sample"
+        );
+        assert!(!s.head_valid(), "starved window must not read as valid");
+        q.try_push(9).unwrap();
+        assert_eq!(cons.join().unwrap(), Some(9));
+    }
+
+    #[test]
+    fn parked_consumer_wakes_on_publish() {
+        let q = Arc::new(SpscQueue::new(8, 8));
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || qc.pop());
+        // Let the consumer walk the full backoff ladder into park.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.try_push(7u64).unwrap();
+        assert_eq!(cons.join().unwrap(), Some(7));
+        let s = q.counters().sample();
+        assert!(s.read_blocked(), "consumer block not recorded");
+    }
+
+    #[test]
+    fn parked_ends_wake_on_close() {
+        let q = Arc::new(SpscQueue::<u64>::new(1, 8));
+        q.try_push(0).unwrap();
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || qp.push(1));
+        let q2 = Arc::new(SpscQueue::<u64>::new(1, 8));
+        let qc = q2.clone();
+        let cons = std::thread::spawn(move || qc.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        q2.close();
+        assert!(matches!(prod.join().unwrap(), Err(PushError::Closed(1))));
+        assert_eq!(cons.join().unwrap(), None);
     }
 
     #[test]
@@ -421,6 +954,44 @@ mod tests {
         let (count, sum) = cons.join().unwrap();
         assert_eq!(count, n);
         assert_eq!(sum, n * (n - 1) / 2);
+        assert_eq!(q.counters().total_pushes(), n);
+        assert_eq!(q.counters().total_pops(), n);
+    }
+
+    #[test]
+    fn spsc_stress_batched_no_loss_no_dup() {
+        let q = Arc::new(SpscQueue::new(256, 8));
+        let n = 1_000_000u64;
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || {
+            let mut i = 0u64;
+            while i < n {
+                let hi = (i + 128).min(n);
+                qp.push_iter(i..hi).unwrap();
+                i = hi;
+            }
+            qp.close();
+        });
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || {
+            let mut out = Vec::with_capacity(128);
+            let mut expect = 0u64;
+            loop {
+                if qc.pop_batch(&mut out, 128) == 0 {
+                    match qc.pop() {
+                        Some(v) => out.push(v),
+                        None => break,
+                    }
+                }
+                for v in out.drain(..) {
+                    assert_eq!(v, expect, "out of order");
+                    expect += 1;
+                }
+            }
+            expect
+        });
+        prod.join().unwrap();
+        assert_eq!(cons.join().unwrap(), n);
         assert_eq!(q.counters().total_pushes(), n);
         assert_eq!(q.counters().total_pops(), n);
     }
@@ -473,5 +1044,119 @@ mod tests {
         prod.join().unwrap();
         monitor.join().unwrap();
         assert_eq!(cons.join().unwrap(), n);
+    }
+
+    #[test]
+    fn concurrent_sampling_conserves_counts_end_to_end() {
+        // Acceptance: sum of monitor samples + residue == monotonic
+        // totals while a stream runs and a sampler races both ends.
+        let q = Arc::new(SpscQueue::new(128, 8));
+        let n = 400_000u64;
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || {
+            for i in 0..n {
+                qp.push(i).unwrap();
+            }
+            qp.close();
+        });
+        let qm = q.clone();
+        let stop_m = stop.clone();
+        let mon = std::thread::spawn(move || {
+            let (mut heads, mut tails) = (0u64, 0u64);
+            while !stop_m.load(Ordering::Relaxed) {
+                let s = qm.counters().sample();
+                heads += s.tc_head;
+                tails += s.tc_tail;
+                std::thread::yield_now();
+            }
+            (heads, tails)
+        });
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || {
+            let mut count = 0u64;
+            while qc.pop().is_some() {
+                count += 1;
+            }
+            count
+        });
+        prod.join().unwrap();
+        assert_eq!(cons.join().unwrap(), n);
+        stop.store(true, Ordering::Relaxed);
+        let (heads, tails) = mon.join().unwrap();
+        let residue = q.counters().sample();
+        assert_eq!(heads + residue.tc_head, n, "head samples + residue != total");
+        assert_eq!(tails + residue.tc_tail, n, "tail samples + residue != total");
+        assert_eq!(q.counters().total_pushes(), n);
+        assert_eq!(q.counters().total_pops(), n);
+    }
+}
+
+/// Model-checks the head/tail/close publication protocol (not the full
+/// segmented queue): the producer Release-publishes `tail` after a plain
+/// slot write and Release-sets `closed` after the final publish; the
+/// consumer Acquire-loads `tail`, must then observe the slot write, and
+/// may conclude end-of-stream only after re-reading `tail` subsequent to
+/// observing `closed`.
+///
+/// Off by default. The `loom` crate is deliberately **not** declared in
+/// the manifest (the default dependency graph must resolve offline); to
+/// run, add `loom = "0.7"` under `[dev-dependencies]` and use
+/// `RUSTFLAGS="--cfg loom" cargo test --features loom --release`.
+#[cfg(all(test, feature = "loom", loom))]
+mod loom_model {
+    use loom::cell::UnsafeCell;
+    use loom::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use loom::sync::Arc;
+
+    struct Proto {
+        tail: AtomicU64,
+        head: AtomicU64,
+        closed: AtomicBool,
+        slots: [UnsafeCell<u64>; 2],
+    }
+
+    #[test]
+    fn head_tail_close_ordering() {
+        loom::model(|| {
+            let p = Arc::new(Proto {
+                tail: AtomicU64::new(0),
+                head: AtomicU64::new(0),
+                closed: AtomicBool::new(false),
+                slots: [UnsafeCell::new(0), UnsafeCell::new(0)],
+            });
+            let q = p.clone();
+            let prod = loom::thread::spawn(move || {
+                for i in 0..2u64 {
+                    q.slots[i as usize].with_mut(|s| unsafe { *s = i + 1 });
+                    q.tail.store(i + 1, Ordering::Release);
+                }
+                q.closed.store(true, Ordering::Release);
+            });
+            let mut head = 0u64;
+            let mut got = Vec::new();
+            loop {
+                let tail = p.tail.load(Ordering::Acquire);
+                if head == tail {
+                    if p.closed.load(Ordering::Acquire) {
+                        // The close-is-final rule under test: re-read the
+                        // tail after observing `closed`.
+                        if head == p.tail.load(Ordering::Acquire) {
+                            break;
+                        }
+                        continue;
+                    }
+                    loom::thread::yield_now();
+                    continue;
+                }
+                let v = p.slots[head as usize].with(|s| unsafe { *s });
+                assert_eq!(v, head + 1, "read an unpublished slot");
+                got.push(v);
+                head += 1;
+                p.head.store(head, Ordering::Release);
+            }
+            prod.join().unwrap();
+            assert_eq!(got, vec![1, 2], "lost or reordered items");
+        });
     }
 }

@@ -235,6 +235,8 @@ pub struct PacedProducer {
     name: String,
     interval_ns: u64,
     total_items: u64,
+    /// Items emitted per wakeup (batched publish; 1 = item-at-a-time).
+    burst: u64,
     sent: u64,
     time: TimeRef,
     next_deadline_ns: Option<u64>,
@@ -252,10 +254,19 @@ impl PacedProducer {
             name: name.into(),
             interval_ns: (1.0e9 / rate).round().max(1.0) as u64,
             total_items,
+            burst: 1,
             sent: 0,
             time: TimeRef::new(),
             next_deadline_ns: None,
         }
+    }
+
+    /// Emit in bursts of `n` items every `n` intervals: the long-run rate
+    /// is unchanged, but each wakeup moves the whole burst with a single
+    /// batched publish (`push_iter`) — one cross-core store per burst.
+    pub fn with_burst(mut self, n: u64) -> Self {
+        self.burst = n.max(1);
+        self
     }
 
     /// Items pushed so far.
@@ -273,19 +284,23 @@ impl Kernel for PacedProducer {
         if self.sent >= self.total_items {
             return KernelStatus::Done;
         }
+        let step = self.interval_ns.saturating_mul(self.burst);
         let now = self.time.now_ns();
         let deadline = match self.next_deadline_ns {
-            Some(d) => d.max(now) + self.interval_ns,
-            None => now + self.interval_ns,
+            Some(d) => d.max(now) + step,
+            None => now + step,
         };
         self.next_deadline_ns = Some(deadline);
         self.time.wait_until_with_tail(deadline, 20_000);
         let out = ctx.output::<Item>(0).expect("producer needs output port 0");
-        if out.push(self.sent).is_err() {
-            return KernelStatus::Done;
+        let hi = (self.sent + self.burst).min(self.total_items);
+        match out.push_iter(self.sent..hi) {
+            Ok(n) => {
+                self.sent += n as u64;
+                KernelStatus::Continue
+            }
+            Err(_) => KernelStatus::Done,
         }
-        self.sent += 1;
-        KernelStatus::Continue
     }
 }
 
@@ -436,6 +451,29 @@ mod tests {
         let expect = items as f64 / rate;
         assert!(dt > 0.9 * expect, "{dt}s impossibly fast (expected ≥ {expect}s)");
         assert!(dt < 6.0 * expect, "{dt}s vs expected {expect}s");
+    }
+
+    #[test]
+    fn paced_producer_burst_delivers_everything_batched() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let rate = 500_000.0; // 2 µs interval → 128 µs per 64-item burst
+        let items = 20_000u64;
+        let delivered = Arc::new(AtomicU64::new(0));
+        let d2 = delivered.clone();
+        let mut topo = Topology::new("burst");
+        let p = topo.add_kernel(Box::new(
+            PacedProducer::from_rate_items_per_sec("burst", rate, items).with_burst(64),
+        ));
+        let c = topo.add_kernel(Box::new(crate::kernel::ClosureSink::new(
+            "cnt",
+            move |_: Item| {
+                d2.fetch_add(1, Ordering::Relaxed);
+            },
+        )));
+        topo.connect::<Item>(p, 0, c, 0, StreamConfig::default().with_capacity(4096)).unwrap();
+        Scheduler::new(topo).with_monitoring(MonitorConfig::disabled()).run().unwrap();
+        assert_eq!(delivered.load(Ordering::Relaxed), items, "burst lost items");
     }
 
     /// Minimal counting sink for the pacing test.
