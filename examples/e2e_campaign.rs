@@ -136,7 +136,8 @@ fn dual_phase(runs: usize, secs: f64) -> streamflow::Result<()> {
 fn applications() -> streamflow::Result<()> {
     println!("\n--- part 3: full applications (paper Figs. 16–17) ---");
 
-    // Matrix multiply with 5 dot kernels (paper's setup), reduce instrumented.
+    // Matrix multiply on the elastic control plane (up to 5 dot replicas),
+    // reduce side instrumented.
     let mm = MatmulConfig::default();
     let run = matmul::run_matmul(&mm, streamflow::campaign::campaign_monitor())?;
     let ests: Vec<f64> = run

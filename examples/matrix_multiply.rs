@@ -22,12 +22,19 @@ fn main() -> streamflow::Result<()> {
     cfg.n = args.get_or("n", cfg.n)?;
     cfg.dot_kernels = args.get_or("dots", cfg.dot_kernels)?;
     cfg.use_xla = args.has_flag("xla");
+    // This example reproduces the paper's Fig. 11/16 fixed fan-out; pass
+    // `--elastic` to run the dot stage on the control plane instead (see
+    // the README "Elastic applications" section).
+    if !args.has_flag("elastic") {
+        cfg.static_degree = Some(cfg.dot_kernels);
+    }
 
     println!(
-        "matmul: {}×{} f32, {} dot kernels, block {} rows, backend {}",
+        "matmul: {}×{} f32, {} dot kernels ({}), block {} rows, backend {}",
         cfg.n,
         cfg.n,
         cfg.dot_kernels,
+        if cfg.static_degree.is_some() { "static" } else { "elastic" },
         cfg.block_rows,
         if cfg.use_xla { "xla artifact" } else { "native" }
     );
@@ -58,6 +65,10 @@ fn main() -> streamflow::Result<()> {
             );
         }
     }
+    // Elastic runs: show what the control plane did.
+    for line in run.report.scaling_timeline() {
+        println!("  {line}");
+    }
 
     if args.has_flag("sweep") {
         fig2_buffer_sweep(&cfg)?;
@@ -72,6 +83,10 @@ fn fig2_buffer_sweep(base: &MatmulConfig) -> streamflow::Result<()> {
     for cap in [1usize, 2, 4, 8, 16, 64, 256, 1024] {
         let mut cfg = base.clone();
         cfg.capacity = cap;
+        // Always the fixed fan-out: the elastic wiring clamps tiny lane
+        // capacities (and resizes buffers), which would falsify the
+        // sweep's independent variable.
+        cfg.static_degree = Some(cfg.dot_kernels);
         let mut times = Vec::new();
         for _ in 0..5 {
             let run = run_matmul(&cfg, MonitorConfig::disabled())?;

@@ -17,13 +17,20 @@ fn main() -> streamflow::Result<()> {
     cfg.hash_kernels = args.get_or("hash", cfg.hash_kernels)?;
     cfg.verify_kernels = args.get_or("verify", cfg.verify_kernels)?;
     cfg.pattern = args.get_or("pattern", cfg.pattern.clone())?;
+    // This example reproduces the paper's Fig. 12/17 fixed mesh; pass
+    // `--elastic` to run the coupled hash/verify stages on the control
+    // plane instead.
+    if !args.has_flag("elastic") {
+        cfg.static_degree = Some(cfg.hash_kernels);
+    }
 
     println!(
-        "rabin-karp: {} MiB corpus, pattern '{}', n = {} hash kernels, j = {} verify kernels",
+        "rabin-karp: {} MiB corpus, pattern '{}', n = {} hash kernels, j = {} verify kernels ({})",
         cfg.corpus_bytes >> 20,
         cfg.pattern,
         cfg.hash_kernels,
-        cfg.verify_kernels
+        cfg.verify_kernels,
+        if cfg.static_degree.is_some() { "static" } else { "elastic" }
     );
 
     let run = run_rabin_karp(&cfg, campaign_monitor())?;
@@ -60,5 +67,9 @@ fn main() -> streamflow::Result<()> {
         .count();
     println!("converged estimates: {converged}; best-effort fallbacks: {unconverged}");
     println!("(low-ρ queues rarely converge — the paper's §VI observation)");
+    // Elastic runs: show what the control plane did.
+    for line in run.report.scaling_timeline() {
+        println!("  {line}");
+    }
     Ok(())
 }

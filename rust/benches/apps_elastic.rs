@@ -1,0 +1,145 @@
+//! Static vs elastic A/B for the two full applications (the migration
+//! acceptance ledger): wall-clock throughput of the paper's fixed fan-out
+//! against the control-plane wiring, plus each elastic stage's replica
+//! trajectory, written to `target/figures/BENCH_apps_elastic.json`.
+//!
+//! Outputs are cross-checked (matmul C vs its static run bit-for-bit;
+//! Rabin–Karp matches vs the naive oracle) — a throughput number from a
+//! wrong answer is worthless.
+//!
+//! `SF_SCALE` shrinks the problem sizes for smoke/CI runs (e.g. 0.25);
+//! `SF_MM_N` / `SF_RK_BYTES` override them outright.
+
+use std::collections::BTreeMap;
+
+use streamflow::apps::matmul::run_matmul;
+use streamflow::apps::rabin_karp::{foobar_corpus, naive_matches, run_rabin_karp};
+use streamflow::config::{env_f64, env_usize, Json, MatmulConfig, RabinKarpConfig};
+use streamflow::monitor::MonitorConfig;
+use streamflow::report::figures_dir;
+use streamflow::scheduler::RunReport;
+
+fn trajectories_json(report: &RunReport) -> Json {
+    let mut obj = BTreeMap::new();
+    for tr in &report.replica_trajectories {
+        obj.insert(
+            tr.stage.clone(),
+            Json::Arr(
+                tr.points
+                    .iter()
+                    .map(|&(t_ns, r)| {
+                        Json::Arr(vec![
+                            Json::Num(t_ns as f64 / 1.0e9),
+                            Json::Num(r as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    Json::Obj(obj)
+}
+
+fn case_json(
+    static_secs: f64,
+    elastic_secs: f64,
+    scale_actions: usize,
+    outputs_match: bool,
+    trajectories: Json,
+    extra: &[(&str, f64)],
+) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("static_secs".to_string(), Json::Num(static_secs));
+    obj.insert("elastic_secs".to_string(), Json::Num(elastic_secs));
+    obj.insert(
+        "static_over_elastic".to_string(),
+        Json::Num(if elastic_secs > 0.0 { static_secs / elastic_secs } else { f64::NAN }),
+    );
+    obj.insert("scale_actions".to_string(), Json::Num(scale_actions as f64));
+    obj.insert("outputs_match".to_string(), Json::Bool(outputs_match));
+    obj.insert("replica_trajectories".to_string(), trajectories);
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), Json::Num(*v));
+    }
+    Json::Obj(obj)
+}
+
+fn bench_matmul(scale: f64) -> Json {
+    let n = env_usize("SF_MM_N", ((512.0 * scale) as usize).max(64));
+    let base = MatmulConfig {
+        n,
+        dot_kernels: 4,
+        block_rows: 8,
+        capacity: 64,
+        ..Default::default()
+    };
+    let mut static_cfg = base.clone();
+    static_cfg.static_degree = Some(base.dot_kernels);
+    let fixed = run_matmul(&static_cfg, MonitorConfig::disabled()).expect("static matmul");
+    let elastic = run_matmul(&base, MonitorConfig::disabled()).expect("elastic matmul");
+    let outputs_match = fixed.c == elastic.c;
+    assert!(outputs_match, "matmul: elastic C differs from static C");
+    let (ss, es) = (fixed.report.wall_secs(), elastic.report.wall_secs());
+    println!(
+        "# matmul {n}x{n}: static {ss:.3}s, elastic {es:.3}s ({} scale actions)",
+        elastic.report.scale_actions()
+    );
+    for line in elastic.report.scaling_timeline() {
+        println!("#   {line}");
+    }
+    case_json(
+        ss,
+        es,
+        elastic.report.scale_actions(),
+        outputs_match,
+        trajectories_json(&elastic.report),
+        &[("n", n as f64)],
+    )
+}
+
+fn bench_rabin_karp(scale: f64) -> Json {
+    let bytes = env_usize("SF_RK_BYTES", ((32.0 * scale) as usize).max(2) << 20);
+    let base = RabinKarpConfig {
+        corpus_bytes: bytes,
+        hash_kernels: 4,
+        verify_kernels: 2,
+        ..Default::default()
+    };
+    let mut static_cfg = base.clone();
+    static_cfg.static_degree = Some(base.hash_kernels);
+    let fixed = run_rabin_karp(&static_cfg, MonitorConfig::disabled()).expect("static rk");
+    let elastic = run_rabin_karp(&base, MonitorConfig::disabled()).expect("elastic rk");
+    let corpus = foobar_corpus(bytes);
+    let oracle = naive_matches(&corpus, base.pattern.as_bytes());
+    let outputs_match = fixed.matches == oracle && elastic.matches == oracle;
+    assert!(outputs_match, "rabin-karp: matches diverge from the oracle");
+    let (ss, es) = (fixed.report.wall_secs(), elastic.report.wall_secs());
+    println!(
+        "# rabin-karp {} MiB: static {ss:.3}s, elastic {es:.3}s ({} scale actions)",
+        bytes >> 20,
+        elastic.report.scale_actions()
+    );
+    for line in elastic.report.scaling_timeline() {
+        println!("#   {line}");
+    }
+    case_json(
+        ss,
+        es,
+        elastic.report.scale_actions(),
+        outputs_match,
+        trajectories_json(&elastic.report),
+        &[("corpus_bytes", bytes as f64), ("matches", elastic.matches.len() as f64)],
+    )
+}
+
+fn main() {
+    let scale = env_f64("SF_SCALE", 1.0);
+    let mut root = BTreeMap::new();
+    root.insert("matmul".to_string(), bench_matmul(scale));
+    root.insert("rabin_karp".to_string(), bench_rabin_karp(scale));
+
+    let path = figures_dir().join("BENCH_apps_elastic.json");
+    std::fs::create_dir_all(figures_dir()).expect("figures dir");
+    std::fs::write(&path, Json::Obj(root).to_string()).expect("write json");
+    println!("# ledger: {}", path.display());
+}

@@ -19,7 +19,9 @@ fn main() {
         &["capacity_items", "mean_ms", "p5_ms", "p95_ms", "n"],
     );
     for cap in [1usize, 2, 4, 8, 16, 32, 128, 512, 2048] {
-        let cfg = MatmulConfig { n, capacity: cap, ..Default::default() };
+        // Fixed fan-out: the figure is about raw queue capacity, without
+        // the control plane resizing buffers mid-run.
+        let cfg = MatmulConfig { n, capacity: cap, static_degree: Some(5), ..Default::default() };
         let mut times = Vec::new();
         for _ in 0..reps {
             let run = run_matmul(&cfg, MonitorConfig::disabled()).expect("matmul run");

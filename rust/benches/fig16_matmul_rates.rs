@@ -15,7 +15,9 @@ use streamflow::report::{Cell, Table};
 fn main() {
     let n = env_usize("SF_MM_N", 384);
     let reps = env_usize("SF_REPS", 3);
-    let cfg = MatmulConfig { n, dot_kernels: 5, ..Default::default() };
+    // Paper-faithful fixed fan-out (five dot kernels, five reduce queues);
+    // the elastic wiring is A/B-benched in `benches/apps_elastic.rs`.
+    let cfg = MatmulConfig { n, dot_kernels: 5, static_degree: Some(5), ..Default::default() };
 
     // Manual ground-truth band: per-queue byte rate with monitoring off.
     let mut manual = Vec::new();

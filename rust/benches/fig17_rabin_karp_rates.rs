@@ -15,7 +15,10 @@ use streamflow::report::{Cell, Table};
 fn main() {
     let bytes = env_usize("SF_RK_BYTES", 24 << 20);
     let reps = env_usize("SF_REPS", 3);
-    let cfg = RabinKarpConfig { corpus_bytes: bytes, ..Default::default() };
+    // Paper-faithful fixed mesh (4 hash × 2 verify kernels); the elastic
+    // wiring is A/B-benched in `benches/apps_elastic.rs`.
+    let cfg =
+        RabinKarpConfig { corpus_bytes: bytes, static_degree: Some(4), ..Default::default() };
 
     // Manual band: candidate-rate into verify kernels with monitoring off.
     let mut manual = Vec::new();

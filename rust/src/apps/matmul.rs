@@ -1,20 +1,31 @@
 //! Dense matrix multiply as a streaming application (paper §V-B1, Fig. 11).
 //!
-//! `C = A·B` decomposed into streamed row-block dot products:
+//! `C = A·B` decomposed into streamed row-block dot products. Two wirings
+//! share the same kernels:
 //!
 //! ```text
-//! MatrixSource ──►(round robin)──► DotKernel ×n ──► Reducer → C
+//! elastic (default):
+//!   MatrixSource ──► dot-split ─►{DotWorker ×r}─► dot-merge ──► Reducer → C
+//!                     (replica count r driven by the control plane)
+//! static (cfg.static_degree = Some(k)):
+//!   MatrixSource ──►(round robin)──► DotKernel ×k ──► Reducer → C
 //! ```
 //!
 //! The source streams row blocks of `A` (with `B` shared read-only, as the
-//! paper's dot kernels receive the full column set); each dot kernel
+//! paper's dot kernels receive the full column set); each dot worker
 //! multiplies its block against `B` — natively or through the AOT Pallas
-//! `dot_block` artifact — and the reducer reassembles `C`. The reduce
-//! kernel's input queues are the instrumented streams of Fig. 16.
+//! `dot_block` artifact — and the reducer reassembles `C`. The reduce-side
+//! queues are the instrumented streams of Fig. 16; in the elastic wiring
+//! the controller also probes the per-replica lanes and replicates the dot
+//! stage toward its target utilization under `cfg.dot_kernels` as the
+//! worker budget. Outputs are exact in both modes: blocks land in `C` by
+//! row index, so replica routing and merge order cannot change the result.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::MatmulConfig;
+use crate::elastic::{ElasticConfig, ElasticPolicy, ElasticStageConfig, Replicable};
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
 use crate::monitor::MonitorConfig;
 use crate::queue::StreamConfig;
@@ -61,43 +72,16 @@ pub fn matmul_ref(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
     c
 }
 
-/// Source kernel: streams row blocks of `A`, round-robin over `n_out` ports.
-struct MatrixSource {
-    a: Arc<Vec<f32>>,
-    n: usize,
-    block_rows: usize,
-    next_row: usize,
-    next_port: usize,
-    n_out: usize,
-}
+/// Row blocks emitted per source `run()` quantum (one batched publish).
+const SOURCE_BURST: usize = 8;
+/// Result blocks drained per reducer sweep.
+const REDUCE_BATCH: usize = 32;
 
-impl Kernel for MatrixSource {
-    fn name(&self) -> &str {
-        "matrix_source"
-    }
-
-    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
-        if self.next_row >= self.n {
-            return KernelStatus::Done;
-        }
-        let rows = self.block_rows.min(self.n - self.next_row);
-        let start = self.next_row;
-        let data = self.a[start * self.n..(start + rows) * self.n].to_vec();
-        let block = RowBlock { start, rows, data };
-        let port = ctx.output::<RowBlock>(self.next_port).expect("source port");
-        if port.push(block).is_err() {
-            return KernelStatus::Done;
-        }
-        self.next_row += rows;
-        self.next_port = (self.next_port + 1) % self.n_out;
-        KernelStatus::Continue
-    }
-}
-
-/// The dot-product compute backend.
+/// The dot-product compute backend, shared by the static kernel and the
+/// elastic replica worker.
 enum DotBackend {
     Native,
-    /// AOT Pallas artifact (fixed M×K×N); compiled lazily on the kernel's
+    /// AOT Pallas artifact (fixed M×K×N); compiled lazily on the worker's
     /// own thread (PJRT objects are !Send); falls back to native for
     /// ragged tail blocks or load failures.
     Xla {
@@ -108,48 +92,23 @@ enum DotBackend {
     },
 }
 
-/// Dot kernel: multiplies row blocks against the shared `B`.
-struct DotKernel {
-    name: String,
-    b: Arc<Vec<f32>>,
-    n: usize,
-    backend: DotBackend,
-}
-
-impl DotKernel {
-    fn compute_native(&self, blk: &RowBlock) -> Vec<f32> {
-        let n = self.n;
-        let mut out = vec![0.0f32; blk.rows * n];
-        for i in 0..blk.rows {
-            for k in 0..n {
-                let aik = blk.data[i * n + k];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &self.b[k * n..(k + 1) * n];
-                let crow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += aik * brow[j];
-                }
+impl DotBackend {
+    fn for_config(cfg: &MatmulConfig) -> Self {
+        if cfg.use_xla {
+            DotBackend::Xla {
+                dir: crate::runtime::default_artifact_dir(),
+                artifact: format!("dot_m{}_k{}_n{}", cfg.block_rows, cfg.n, cfg.n),
+                m: cfg.block_rows,
+                exec: crate::runtime::ThreadBound::empty(),
             }
+        } else {
+            DotBackend::Native
         }
-        out
-    }
-}
-
-impl Kernel for DotKernel {
-    fn name(&self) -> &str {
-        &self.name
     }
 
-    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
-        let blk = match ctx.input::<RowBlock>(0).expect("dot input").pop() {
-            Some(b) => b,
-            None => return KernelStatus::Done,
-        };
-        let n = self.n;
-        let b = self.b.clone();
-        let data = match &mut self.backend {
+    /// Multiply one row block against `b`.
+    fn compute(&mut self, blk: &RowBlock, b: &Arc<Vec<f32>>, n: usize) -> Vec<f32> {
+        let accelerated = match self {
             DotBackend::Native => None,
             DotBackend::Xla { dir, artifact, m, exec } => {
                 if blk.rows == *m {
@@ -171,7 +130,111 @@ impl Kernel for DotKernel {
                 }
             }
         };
-        let data = data.unwrap_or_else(|| self.compute_native(&blk));
+        accelerated.unwrap_or_else(|| dot_native(blk, b, n))
+    }
+}
+
+/// The native row-block × B product (the paper's dot kernel body).
+fn dot_native(blk: &RowBlock, b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; blk.rows * n];
+    for i in 0..blk.rows {
+        for k in 0..n {
+            let aik = blk.data[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Source kernel: streams row blocks of `A`. With `n_out > 1` (static
+/// wiring) blocks round-robin across the ports one at a time, exactly the
+/// paper's distribution; with a single port (elastic wiring) they go out
+/// in `SOURCE_BURST`-block batched publishes and the elastic split does
+/// the balancing.
+struct MatrixSource {
+    a: Arc<Vec<f32>>,
+    n: usize,
+    block_rows: usize,
+    next_row: usize,
+    next_port: usize,
+    n_out: usize,
+}
+
+impl MatrixSource {
+    fn next_block(&mut self) -> Option<RowBlock> {
+        if self.next_row >= self.n {
+            return None;
+        }
+        let rows = self.block_rows.min(self.n - self.next_row);
+        let start = self.next_row;
+        let data = self.a[start * self.n..(start + rows) * self.n].to_vec();
+        self.next_row += rows;
+        Some(RowBlock { start, rows, data })
+    }
+}
+
+impl Kernel for MatrixSource {
+    fn name(&self) -> &str {
+        "matrix_source"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.n_out == 1 {
+            // Batched emission: one publish per burst.
+            let mut burst = Vec::with_capacity(SOURCE_BURST);
+            while burst.len() < SOURCE_BURST {
+                match self.next_block() {
+                    Some(b) => burst.push(b),
+                    None => break,
+                }
+            }
+            if burst.is_empty() {
+                return KernelStatus::Done;
+            }
+            let port = ctx.output::<RowBlock>(0).expect("source port");
+            if port.push_iter(burst).is_err() {
+                return KernelStatus::Done;
+            }
+            return KernelStatus::Continue;
+        }
+        let Some(block) = self.next_block() else {
+            return KernelStatus::Done;
+        };
+        let port = ctx.output::<RowBlock>(self.next_port).expect("source port");
+        if port.push(block).is_err() {
+            return KernelStatus::Done;
+        }
+        self.next_port = (self.next_port + 1) % self.n_out;
+        KernelStatus::Continue
+    }
+}
+
+/// Static-wiring dot kernel: multiplies row blocks against the shared `B`.
+struct DotKernel {
+    name: String,
+    b: Arc<Vec<f32>>,
+    n: usize,
+    backend: DotBackend,
+}
+
+impl Kernel for DotKernel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let blk = match ctx.input::<RowBlock>(0).expect("dot input").pop() {
+            Some(b) => b,
+            None => return KernelStatus::Done,
+        };
+        let data = self.backend.compute(&blk, &self.b, self.n);
         let res = ResultBlock { start: blk.start, rows: blk.rows, data };
         if ctx.output::<ResultBlock>(0).expect("dot output").push(res).is_err() {
             return KernelStatus::Done;
@@ -180,11 +243,33 @@ impl Kernel for DotKernel {
     }
 }
 
-/// Reducer: reassembles `C` from result blocks across `n_in` ports.
+/// Elastic replica body: the same dot computation as [`DotKernel`], one
+/// instance per replica (fresh backend each — PJRT state is per-thread).
+struct DotWorker {
+    b: Arc<Vec<f32>>,
+    n: usize,
+    backend: DotBackend,
+}
+
+impl Replicable for DotWorker {
+    type In = RowBlock;
+    type Out = ResultBlock;
+
+    fn process(&mut self, blk: RowBlock) -> ResultBlock {
+        let data = self.backend.compute(&blk, &self.b, self.n);
+        ResultBlock { start: blk.start, rows: blk.rows, data }
+    }
+}
+
+/// Reducer: reassembles `C` from result blocks, draining every input port
+/// in batches (one index publish per batch). Works for both wirings: the
+/// static mesh gives it one port per dot kernel, the elastic one a single
+/// port fed by the stage's merge.
 struct Reducer {
     n: usize,
     c: Option<Vec<f32>>,
     out: Arc<std::sync::Mutex<Option<Vec<f32>>>>,
+    scratch: Vec<ResultBlock>,
 }
 
 impl Kernel for Reducer {
@@ -193,22 +278,25 @@ impl Kernel for Reducer {
     }
 
     fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
-        let c = self.c.get_or_insert_with(|| vec![0.0f32; self.n * self.n]);
+        let n = self.n;
+        let c = self.c.get_or_insert_with(|| vec![0.0f32; n * n]);
         let mut any = false;
         let mut all_finished = true;
+        // One batch per port per quantum: batched transfer without letting
+        // a hot upstream monopolize the sweep (round-robin fairness).
         for i in 0..ctx.num_inputs() {
             let port = ctx.input::<ResultBlock>(i).expect("reduce input");
-            match port.try_pop() {
-                crate::queue::PopResult::Item(blk) => {
-                    let dst = &mut c[blk.start * self.n..(blk.start + blk.rows) * self.n];
-                    dst.copy_from_slice(&blk.data);
-                    any = true;
+            if port.pop_batch(&mut self.scratch, REDUCE_BATCH) == 0 {
+                if !port.is_finished() {
                     all_finished = false;
                 }
-                crate::queue::PopResult::Empty => {
-                    all_finished = false;
-                }
-                crate::queue::PopResult::Closed => {}
+                continue;
+            }
+            all_finished = false;
+            any = true;
+            for blk in self.scratch.drain(..) {
+                let dst = &mut c[blk.start * n..(blk.start + blk.rows) * n];
+                dst.copy_from_slice(&blk.data);
             }
         }
         if all_finished {
@@ -230,54 +318,143 @@ impl Kernel for Reducer {
 pub struct MatmulRun {
     /// The computed product.
     pub c: Vec<f32>,
-    /// Scheduler report (estimates for the instrumented streams).
+    /// Scheduler report (estimates for the instrumented streams, and — in
+    /// elastic mode — the scaling timeline in `elastic_events` /
+    /// `replica_trajectories`).
     pub report: RunReport,
-    /// Stream ids feeding the reducer (the Fig. 16 instrumented queues).
+    /// Stream ids feeding the reducer (the Fig. 16 instrumented queues;
+    /// one per dot kernel in static mode, the single merge stream in
+    /// elastic mode).
     pub reduce_streams: Vec<StreamId>,
-    /// Stream ids source → dot kernels.
+    /// Stream ids source → dot side (per dot kernel / the split stream).
     pub dot_streams: Vec<StreamId>,
 }
 
-/// Build and run the matrix-multiply application.
+/// Build and run the matrix-multiply application, elastic by default
+/// (`cfg.static_degree = Some(k)` reproduces the fixed fan-out).
 pub fn run_matmul(cfg: &MatmulConfig, monitor: MonitorConfig) -> Result<MatmulRun> {
-    let n = cfg.n;
-    if n == 0 || cfg.dot_kernels == 0 || cfg.block_rows == 0 {
+    if cfg.n == 0 || cfg.dot_kernels == 0 || cfg.block_rows == 0 {
         return Err(SfError::Config("matmul: n, dot_kernels, block_rows must be > 0".into()));
     }
-    let a = Arc::new(random_matrix(n, cfg.seed));
-    let b = Arc::new(random_matrix(n, cfg.seed ^ 0xFEED));
-    let block_bytes = cfg.block_rows * n * 4;
+    if cfg.static_degree == Some(0) {
+        return Err(SfError::Config("matmul: static_degree must be > 0".into()));
+    }
+    let a = Arc::new(random_matrix(cfg.n, cfg.seed));
+    let b = Arc::new(random_matrix(cfg.n, cfg.seed ^ 0xFEED));
+    match cfg.static_degree {
+        Some(k) => run_matmul_static(cfg, k, monitor, a, b),
+        None => run_matmul_elastic(cfg, monitor, a, b),
+    }
+}
 
+/// The elastic wiring: one replicable dot stage under the control plane.
+fn run_matmul_elastic(
+    cfg: &MatmulConfig,
+    monitor: MonitorConfig,
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+) -> Result<MatmulRun> {
+    let n = cfg.n;
+    let block_bytes = cfg.block_rows * n * 4;
     let mut topo = Topology::new("matmul");
     let src = topo.add_kernel(Box::new(MatrixSource {
-        a: a.clone(),
+        a,
         n,
         block_rows: cfg.block_rows,
         next_row: 0,
         next_port: 0,
-        n_out: cfg.dot_kernels,
+        n_out: 1,
+    }));
+    let stage_cfg = ElasticStageConfig {
+        policy: ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: cfg.dot_kernels,
+            cooldown_ticks: 4,
+        },
+        initial_replicas: 1,
+        lane_capacity: cfg.capacity.max(4),
+    };
+    let worker_cfg = cfg.clone();
+    let (split, merge) = topo.add_elastic_stage("dot", stage_cfg, move |_replica| DotWorker {
+        b: b.clone(),
+        n: worker_cfg.n,
+        backend: DotBackend::for_config(&worker_cfg),
+    })?;
+    let out_cell = Arc::new(std::sync::Mutex::new(None));
+    let red = topo.add_kernel(Box::new(Reducer {
+        n,
+        c: None,
+        out: out_cell.clone(),
+        scratch: Vec::new(),
+    }));
+    // Source → split (uninstrumented, like the static source → dot edges);
+    // the controller still reads its counters for λ and backpressure.
+    let s1 = topo.connect::<RowBlock>(
+        src,
+        0,
+        split,
+        0,
+        StreamConfig::default()
+            .with_capacity(cfg.capacity)
+            .with_item_bytes(block_bytes)
+            .uninstrumented(),
+    )?;
+    // Merge → reduce (instrumented: the Fig. 16 measurement point).
+    let s2 = topo.connect::<ResultBlock>(
+        merge,
+        0,
+        red,
+        0,
+        StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes),
+    )?;
+    // Single stage: the policy's max_replicas already is the worker cap,
+    // so no global budget is set (it would never bind).
+    let report = Scheduler::new(topo)
+        .with_monitoring(monitor)
+        .with_elastic(ElasticConfig { tick: Duration::from_millis(5), ..Default::default() })
+        .run()?;
+    let c = take_output(&out_cell)?;
+    Ok(MatmulRun { c, report, reduce_streams: vec![s2], dot_streams: vec![s1] })
+}
+
+/// The original fixed fan-out (paper Fig. 11/16 topology) with `k` dot
+/// kernels — kept wiring-identical for A/B runs against the elastic mode.
+fn run_matmul_static(
+    cfg: &MatmulConfig,
+    k: usize,
+    monitor: MonitorConfig,
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+) -> Result<MatmulRun> {
+    let n = cfg.n;
+    let block_bytes = cfg.block_rows * n * 4;
+    let mut topo = Topology::new("matmul");
+    let src = topo.add_kernel(Box::new(MatrixSource {
+        a,
+        n,
+        block_rows: cfg.block_rows,
+        next_row: 0,
+        next_port: 0,
+        n_out: k,
     }));
     let out_cell = Arc::new(std::sync::Mutex::new(None));
-    let red = topo.add_kernel(Box::new(Reducer { n, c: None, out: out_cell.clone() }));
+    let red = topo.add_kernel(Box::new(Reducer {
+        n,
+        c: None,
+        out: out_cell.clone(),
+        scratch: Vec::new(),
+    }));
 
     let mut dot_streams = Vec::new();
     let mut reduce_streams = Vec::new();
-    for i in 0..cfg.dot_kernels {
-        let backend = if cfg.use_xla {
-            DotBackend::Xla {
-                dir: crate::runtime::default_artifact_dir(),
-                artifact: format!("dot_m{}_k{n}_n{n}", cfg.block_rows),
-                m: cfg.block_rows,
-                exec: crate::runtime::ThreadBound::empty(),
-            }
-        } else {
-            DotBackend::Native
-        };
+    for i in 0..k {
         let dot = topo.add_kernel(Box::new(DotKernel {
             name: format!("dot{i}"),
             b: b.clone(),
             n,
-            backend,
+            backend: DotBackend::for_config(cfg),
         }));
         // Source → dot (uninstrumented: "the dot-products would be rather
         // easy given the high data rates"; we monitor the reduce side).
@@ -304,12 +481,15 @@ pub fn run_matmul(cfg: &MatmulConfig, monitor: MonitorConfig) -> Result<MatmulRu
     }
 
     let report = Scheduler::new(topo).with_monitoring(monitor).run()?;
-    let c = out_cell
-        .lock()
+    let c = take_output(&out_cell)?;
+    Ok(MatmulRun { c, report, reduce_streams, dot_streams })
+}
+
+fn take_output(cell: &Arc<std::sync::Mutex<Option<Vec<f32>>>>) -> Result<Vec<f32>> {
+    cell.lock()
         .unwrap()
         .take()
-        .ok_or_else(|| SfError::Scheduler("reducer produced no output".into()))?;
-    Ok(MatmulRun { c, report, reduce_streams, dot_streams })
+        .ok_or_else(|| SfError::Scheduler("reducer produced no output".into()))
 }
 
 #[cfg(test)]
@@ -318,6 +498,7 @@ mod tests {
 
     #[test]
     fn small_matmul_is_correct() {
+        // Default (elastic) wiring.
         let cfg = MatmulConfig { n: 64, dot_kernels: 3, block_rows: 8, ..Default::default() };
         let run = run_matmul(&cfg, MonitorConfig::disabled()).unwrap();
         let a = random_matrix(64, cfg.seed);
@@ -327,24 +508,56 @@ mod tests {
         for (i, (&got, &want)) in run.c.iter().zip(&expect).enumerate() {
             assert!((got - want).abs() < 1e-3, "C[{i}] = {got} vs {want}");
         }
+        assert_eq!(run.reduce_streams.len(), 1, "elastic mode has one merge stream");
+        assert!(!run.report.replica_trajectories.is_empty(), "controller ran");
+    }
+
+    #[test]
+    fn static_degree_reproduces_fixed_fan_out() {
+        let cfg = MatmulConfig {
+            n: 64,
+            dot_kernels: 3,
+            block_rows: 8,
+            static_degree: Some(3),
+            ..Default::default()
+        };
+        let run = run_matmul(&cfg, MonitorConfig::disabled()).unwrap();
+        let a = random_matrix(64, cfg.seed);
+        let b = random_matrix(64, cfg.seed ^ 0xFEED);
+        let expect = matmul_ref(&a, &b, 64);
+        for (got, want) in run.c.iter().zip(&expect) {
+            assert!((got - want).abs() < 1e-3);
+        }
+        assert_eq!(run.reduce_streams.len(), 3, "one instrumented queue per dot kernel");
+        assert!(run.report.replica_trajectories.is_empty(), "no control plane");
     }
 
     #[test]
     fn ragged_tail_block_handled() {
-        // 50 rows with block 16 → blocks of 16,16,16,2.
-        let cfg = MatmulConfig { n: 50, dot_kernels: 2, block_rows: 16, ..Default::default() };
-        let run = run_matmul(&cfg, MonitorConfig::disabled()).unwrap();
-        let a = random_matrix(50, cfg.seed);
-        let b = random_matrix(50, cfg.seed ^ 0xFEED);
-        let expect = matmul_ref(&a, &b, 50);
-        for (got, want) in run.c.iter().zip(&expect) {
-            assert!((got - want).abs() < 1e-3);
+        // 50 rows with block 16 → blocks of 16,16,16,2, both wirings.
+        for static_degree in [None, Some(2)] {
+            let cfg = MatmulConfig {
+                n: 50,
+                dot_kernels: 2,
+                block_rows: 16,
+                static_degree,
+                ..Default::default()
+            };
+            let run = run_matmul(&cfg, MonitorConfig::disabled()).unwrap();
+            let a = random_matrix(50, cfg.seed);
+            let b = random_matrix(50, cfg.seed ^ 0xFEED);
+            let expect = matmul_ref(&a, &b, 50);
+            for (got, want) in run.c.iter().zip(&expect) {
+                assert!((got - want).abs() < 1e-3);
+            }
         }
     }
 
     #[test]
     fn rejects_degenerate_config() {
         let cfg = MatmulConfig { n: 0, ..Default::default() };
+        assert!(run_matmul(&cfg, MonitorConfig::disabled()).is_err());
+        let cfg = MatmulConfig { static_degree: Some(0), ..Default::default() };
         assert!(run_matmul(&cfg, MonitorConfig::disabled()).is_err());
     }
 

@@ -1,31 +1,49 @@
 //! Rabin–Karp string search as a streaming application (paper §V-B2,
 //! Fig. 12).
 //!
+//! Two wirings share the same kernel bodies:
+//!
 //! ```text
-//! Segmenter ──►(round robin)──► RollingHash ×n ──►(mod j)──► Verify ×j ──► Reducer
+//! elastic (default — two coupled stages under one controller):
+//!   Segmenter ─► hash-split ─►{HashWorker ×n}─► hash-merge ─►
+//!                verify-split ─►{VerifyWorker ×j}─► verify-merge ─► Reducer
+//! static (cfg.static_degree = Some(n)):
+//!   Segmenter ──►(round robin)──► RollingHash ×n ──►(rr)──► Verify ×j ──► Reducer
 //! ```
 //!
 //! The corpus is divided into segments with an `m−1` overlap (pattern
 //! length `m`) "so that a match at the end of one pattern will not result
-//! in a duplicate match on the next segment". Rolling-hash kernels emit
-//! candidate byte positions; verify kernels re-check the actual bytes to
+//! in a duplicate match on the next segment". Rolling-hash workers emit
+//! candidate byte positions; verify workers re-check the actual bytes to
 //! guard against hash collisions; the reducer consolidates sorted match
-//! positions. The hash→verify queues are the instrumented streams of
-//! Fig. 17 (utilization < 0.1 — deliberately hard for the monitor).
+//! positions. The hash→verify queue is the instrumented stream of Fig. 17
+//! (utilization < 0.1 — deliberately hard for the monitor). In the
+//! elastic wiring both stages are observed **jointly**: the verify stage
+//! is candidate-starved by construction, so the coordinated policy must
+//! route the shared worker budget to the hash stage — exactly the
+//! bottleneck-aware joint-scaling problem the static mesh hand-wires away.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::RabinKarpConfig;
+use crate::elastic::{ElasticConfig, ElasticPolicy, ElasticStageConfig, Replicable};
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
 use crate::monitor::MonitorConfig;
 use crate::queue::StreamConfig;
 use crate::scheduler::{RunReport, Scheduler};
-use crate::topology::{StreamId, Topology};
+use crate::topology::{KernelId, StreamId, Topology};
 use crate::{Result, SfError};
 
 /// Rabin–Karp parameters: base-256 rolling hash modulo a large prime.
 const HASH_BASE: u64 = 256;
 const HASH_MOD: u64 = 1_000_000_007;
+
+/// Segments emitted per segmenter `run()` quantum in the elastic wiring
+/// (one batched publish).
+const SEGMENT_BURST: usize = 4;
+/// Candidate batches drained per reducer sweep.
+const REDUCE_BATCH: usize = 32;
 
 /// A corpus segment streamed to a hash kernel.
 pub struct Segment {
@@ -58,8 +76,44 @@ pub fn naive_matches(corpus: &[u8], pattern: &[u8]) -> Vec<usize> {
         .collect()
 }
 
-/// Segmenter kernel: slices the corpus with m−1 overlap, round-robins
-/// segments across `n_out` hash kernels.
+/// The rolling-hash scan shared by the static kernel and the elastic
+/// worker: every position in `seg` whose window hash equals
+/// `pattern_hash`. `pow` is `base^(m−1) mod p` for removing the leading
+/// byte.
+fn candidate_positions(seg: &Segment, m: usize, pattern_hash: u64, pow: u64) -> Vec<usize> {
+    let mut out = Vec::new();
+    if seg.data.len() < m {
+        return out;
+    }
+    let mut h = hash_of(&seg.data[..m]);
+    if h == pattern_hash {
+        out.push(seg.offset);
+    }
+    for i in 1..=seg.data.len() - m {
+        // Roll: drop data[i-1], add data[i+m-1].
+        let out_b = seg.data[i - 1] as u64;
+        let in_b = seg.data[i + m - 1] as u64;
+        h = (h + HASH_MOD - (out_b * pow) % HASH_MOD) % HASH_MOD;
+        h = (h * HASH_BASE + in_b) % HASH_MOD;
+        if h == pattern_hash {
+            out.push(seg.offset + i);
+        }
+    }
+    out
+}
+
+fn leading_pow(m: usize) -> u64 {
+    let mut pow = 1u64;
+    for _ in 1..m {
+        pow = (pow * HASH_BASE) % HASH_MOD;
+    }
+    pow
+}
+
+/// Segmenter kernel: slices the corpus with m−1 overlap. With `n_out > 1`
+/// (static wiring) segments round-robin one at a time across the hash
+/// kernels; with a single port (elastic wiring) they leave in
+/// `SEGMENT_BURST` batched publishes and the split does the balancing.
 struct Segmenter {
     corpus: Arc<Vec<u8>>,
     segment_bytes: usize,
@@ -69,31 +123,56 @@ struct Segmenter {
     n_out: usize,
 }
 
+impl Segmenter {
+    fn next_segment(&mut self) -> Option<Segment> {
+        if self.next_off >= self.corpus.len() {
+            return None;
+        }
+        let start = self.next_off.saturating_sub(self.overlap);
+        let end = (self.next_off + self.segment_bytes).min(self.corpus.len());
+        self.next_off = end;
+        Some(Segment { offset: start, data: self.corpus[start..end].to_vec() })
+    }
+}
+
 impl Kernel for Segmenter {
     fn name(&self) -> &str {
         "segmenter"
     }
 
     fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
-        if self.next_off >= self.corpus.len() {
-            return KernelStatus::Done;
+        if self.n_out == 1 {
+            let mut burst = Vec::with_capacity(SEGMENT_BURST);
+            while burst.len() < SEGMENT_BURST {
+                match self.next_segment() {
+                    Some(s) => burst.push(s),
+                    None => break,
+                }
+            }
+            if burst.is_empty() {
+                return KernelStatus::Done;
+            }
+            let port = ctx.output::<Segment>(0).expect("segmenter port");
+            if port.push_iter(burst).is_err() {
+                return KernelStatus::Done;
+            }
+            return KernelStatus::Continue;
         }
-        let start = self.next_off.saturating_sub(self.overlap);
-        let end = (self.next_off + self.segment_bytes).min(self.corpus.len());
-        let seg = Segment { offset: start, data: self.corpus[start..end].to_vec() };
+        let Some(seg) = self.next_segment() else {
+            return KernelStatus::Done;
+        };
         let port = ctx.output::<Segment>(self.next_port).expect("segmenter port");
         if port.push(seg).is_err() {
             return KernelStatus::Done;
         }
-        self.next_off = end;
         self.next_port = (self.next_port + 1) % self.n_out;
         KernelStatus::Continue
     }
 }
 
-/// Rolling-hash kernel: emits candidate positions whose window hash equals
-/// the pattern hash. Routes candidate `pos` to verify kernel `pos % j`
-/// — wait, no: round-robins across its `n_out` verify ports.
+/// Static-wiring rolling-hash kernel: emits candidate positions whose
+/// window hash equals the pattern hash, round-robining across its `n_out`
+/// verify ports.
 struct RollingHash {
     name: String,
     pattern_len: usize,
@@ -106,16 +185,11 @@ struct RollingHash {
 
 impl RollingHash {
     fn new(name: String, pattern: &[u8], n_out: usize) -> Self {
-        let m = pattern.len();
-        let mut pow = 1u64;
-        for _ in 1..m {
-            pow = (pow * HASH_BASE) % HASH_MOD;
-        }
         RollingHash {
             name,
-            pattern_len: m,
+            pattern_len: pattern.len(),
             pattern_hash: hash_of(pattern),
-            pow,
+            pow: leading_pow(pattern.len()),
             next_port: 0,
             n_out,
         }
@@ -132,44 +206,42 @@ impl Kernel for RollingHash {
             Some(s) => s,
             None => return KernelStatus::Done,
         };
-        let m = self.pattern_len;
-        if seg.data.len() < m {
-            return KernelStatus::Continue;
-        }
-        let n_out = self.n_out;
-        let mut port_idx = self.next_port;
-        let mut h = hash_of(&seg.data[..m]);
-        if h == self.pattern_hash {
-            let port = ctx.output::<Candidate>(port_idx).expect("hash output");
-            port_idx = (port_idx + 1) % n_out;
-            if port.push(Candidate(seg.offset)).is_err() {
+        for pos in candidate_positions(&seg, self.pattern_len, self.pattern_hash, self.pow) {
+            let port = ctx.output::<Candidate>(self.next_port).expect("hash output");
+            self.next_port = (self.next_port + 1) % self.n_out;
+            if port.push(Candidate(pos)).is_err() {
                 return KernelStatus::Done;
             }
         }
-        for i in 1..=seg.data.len() - m {
-            // Roll: drop data[i-1], add data[i+m-1].
-            let out_b = seg.data[i - 1] as u64;
-            let in_b = seg.data[i + m - 1] as u64;
-            h = (h + HASH_MOD - (out_b * self.pow) % HASH_MOD) % HASH_MOD;
-            h = (h * HASH_BASE + in_b) % HASH_MOD;
-            if h == self.pattern_hash {
-                let port = ctx.output::<Candidate>(port_idx).expect("hash output");
-                port_idx = (port_idx + 1) % n_out;
-                if port.push(Candidate(seg.offset + i)).is_err() {
-                    return KernelStatus::Done;
-                }
-            }
-        }
-        self.next_port = port_idx;
         KernelStatus::Continue
     }
 }
 
-/// Verify kernel: re-checks the corpus bytes at each candidate position.
+/// Elastic replica body for the hash stage: one segment in, that
+/// segment's candidate batch out (the split/merge lanes carry whole
+/// batches, keeping the per-item tagging overhead off the hot loop).
+struct HashWorker {
+    pattern_len: usize,
+    pattern_hash: u64,
+    pow: u64,
+}
+
+impl Replicable for HashWorker {
+    type In = Segment;
+    type Out = Vec<usize>;
+
+    fn process(&mut self, seg: Segment) -> Vec<usize> {
+        candidate_positions(&seg, self.pattern_len, self.pattern_hash, self.pow)
+    }
+}
+
+/// Static-wiring verify kernel: re-checks the corpus bytes at each
+/// candidate position, draining all inputs in batches.
 struct Verify {
     name: String,
     corpus: Arc<Vec<u8>>,
     pattern: Vec<u8>,
+    scratch: Vec<Candidate>,
 }
 
 impl Kernel for Verify {
@@ -178,30 +250,32 @@ impl Kernel for Verify {
     }
 
     fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
-        // Drain all inputs (one per upstream hash kernel).
+        // One batch per input port per quantum (one port per upstream hash
+        // kernel): batched transfer with round-robin fairness — a
+        // candidate-dense upstream must not monopolize the drain.
         let mut all_finished = true;
         let mut any = false;
         for i in 0..ctx.num_inputs() {
             let port = ctx.input::<Candidate>(i).expect("verify input");
-            match port.try_pop() {
-                crate::queue::PopResult::Item(Candidate(pos)) => {
-                    any = true;
+            if port.pop_batch(&mut self.scratch, REDUCE_BATCH) == 0 {
+                if !port.is_finished() {
                     all_finished = false;
-                    let m = self.pattern.len();
-                    if pos + m <= self.corpus.len() && &self.corpus[pos..pos + m] == &self.pattern[..]
+                }
+                continue;
+            }
+            all_finished = false;
+            any = true;
+            for Candidate(pos) in self.scratch.drain(..) {
+                if verify_at(&self.corpus, &self.pattern, pos) {
+                    if ctx
+                        .output::<Candidate>(0)
+                        .expect("verify output")
+                        .push(Candidate(pos))
+                        .is_err()
                     {
-                        if ctx
-                            .output::<Candidate>(0)
-                            .expect("verify output")
-                            .push(Candidate(pos))
-                            .is_err()
-                        {
-                            return KernelStatus::Done;
-                        }
+                        return KernelStatus::Done;
                     }
                 }
-                crate::queue::PopResult::Empty => all_finished = false,
-                crate::queue::PopResult::Closed => {}
             }
         }
         if all_finished {
@@ -215,9 +289,35 @@ impl Kernel for Verify {
     }
 }
 
-/// Reducer: consolidates verified matches (deduplicating the overlap).
+/// The byte-level re-check shared by both wirings.
+fn verify_at(corpus: &[u8], pattern: &[u8], pos: usize) -> bool {
+    pos + pattern.len() <= corpus.len() && &corpus[pos..pos + pattern.len()] == pattern
+}
+
+/// Elastic replica body for the verify stage: a candidate batch in, the
+/// verified subset out.
+struct VerifyWorker {
+    corpus: Arc<Vec<u8>>,
+    pattern: Vec<u8>,
+}
+
+impl Replicable for VerifyWorker {
+    type In = Vec<usize>;
+    type Out = Vec<usize>;
+
+    fn process(&mut self, candidates: Vec<usize>) -> Vec<usize> {
+        candidates
+            .into_iter()
+            .filter(|&pos| verify_at(&self.corpus, &self.pattern, pos))
+            .collect()
+    }
+}
+
+/// Static-wiring reducer: consolidates verified matches, batch-draining
+/// every verify kernel's stream.
 struct MatchReducer {
     out: Arc<std::sync::Mutex<Vec<usize>>>,
+    scratch: Vec<Candidate>,
 }
 
 impl Kernel for MatchReducer {
@@ -230,14 +330,18 @@ impl Kernel for MatchReducer {
         let mut any = false;
         for i in 0..ctx.num_inputs() {
             let port = ctx.input::<Candidate>(i).expect("reduce input");
-            match port.try_pop() {
-                crate::queue::PopResult::Item(Candidate(pos)) => {
-                    self.out.lock().unwrap().push(pos);
-                    any = true;
+            // One batch per port per quantum (fairness; see Verify).
+            if port.pop_batch(&mut self.scratch, REDUCE_BATCH) == 0 {
+                if !port.is_finished() {
                     all_finished = false;
                 }
-                crate::queue::PopResult::Empty => all_finished = false,
-                crate::queue::PopResult::Closed => {}
+                continue;
+            }
+            all_finished = false;
+            any = true;
+            let mut out = self.out.lock().unwrap();
+            for Candidate(pos) in self.scratch.drain(..) {
+                out.push(pos);
             }
         }
         if all_finished {
@@ -250,16 +354,47 @@ impl Kernel for MatchReducer {
     }
 }
 
+/// Elastic-wiring reducer: drains verified-candidate batches from the
+/// verify stage's merge (single port, blocking pop when idle).
+struct BatchMatchReducer {
+    out: Arc<std::sync::Mutex<Vec<usize>>>,
+    scratch: Vec<Vec<usize>>,
+}
+
+impl Kernel for BatchMatchReducer {
+    fn name(&self) -> &str {
+        "reduce"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let port = ctx.input::<Vec<usize>>(0).expect("reduce input");
+        if port.pop_batch(&mut self.scratch, REDUCE_BATCH) == 0 {
+            match port.pop() {
+                Some(batch) => self.scratch.push(batch),
+                None => return KernelStatus::Done,
+            }
+        }
+        let mut out = self.out.lock().unwrap();
+        for batch in self.scratch.drain(..) {
+            out.extend(batch);
+        }
+        KernelStatus::Continue
+    }
+}
+
 /// Everything a Rabin–Karp run produced.
 pub struct RabinKarpRun {
     /// Sorted, deduplicated match positions.
     pub matches: Vec<usize>,
     pub report: RunReport,
-    /// Instrumented hash→verify streams (Fig. 17's queues).
+    /// Instrumented hash→verify streams (Fig. 17's queues; one per
+    /// hash×verify pair in static mode, the single inter-stage stream in
+    /// elastic mode).
     pub verify_streams: Vec<StreamId>,
 }
 
-/// Build and run the Rabin–Karp application.
+/// Build and run the Rabin–Karp application, elastic by default
+/// (`cfg.static_degree = Some(n)` reproduces the fixed mesh).
 pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<RabinKarpRun> {
     let pattern = cfg.pattern.as_bytes().to_vec();
     if pattern.is_empty() {
@@ -268,11 +403,25 @@ pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<R
     if cfg.hash_kernels == 0 || cfg.verify_kernels == 0 {
         return Err(SfError::Config("rabin-karp: kernel counts must be > 0".into()));
     }
-    if cfg.verify_kernels > cfg.hash_kernels {
+    if cfg.verify_kernels > cfg.static_degree.unwrap_or(cfg.hash_kernels) {
         return Err(SfError::Config("rabin-karp: j must be ≤ n (paper: j ≤ n)".into()));
     }
     let corpus = Arc::new(foobar_corpus(cfg.corpus_bytes));
+    // Note `static_degree = Some(0)` is already rejected above: j ≥ 1 > 0.
+    match cfg.static_degree {
+        Some(n) => run_rabin_karp_static(cfg, n, monitor, corpus, pattern),
+        None => run_rabin_karp_elastic(cfg, monitor, corpus, pattern),
+    }
+}
 
+/// The elastic wiring: hash and verify as two coupled replicable stages
+/// under one coordinated controller sharing a `n + j` worker budget.
+fn run_rabin_karp_elastic(
+    cfg: &RabinKarpConfig,
+    monitor: MonitorConfig,
+    corpus: Arc<Vec<u8>>,
+    pattern: Vec<u8>,
+) -> Result<RabinKarpRun> {
     let mut topo = Topology::new("rabin_karp");
     let seg = topo.add_kernel(Box::new(Segmenter {
         corpus: corpus.clone(),
@@ -280,15 +429,128 @@ pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<R
         overlap: pattern.len() - 1,
         next_off: 0,
         next_port: 0,
-        n_out: cfg.hash_kernels,
+        n_out: 1,
+    }));
+
+    // One shared worker pool of n + j threads (what the static mesh would
+    // pin): either stage may claim up to the whole pool, and the global
+    // `worker_budget` below is the binding constraint — the coordinated
+    // policy routes pool capacity to whichever stage is the bottleneck
+    // (in practice the hash stage; verify is candidate-starved).
+    let pool = cfg.hash_kernels + cfg.verify_kernels;
+    let stage_cfg = ElasticStageConfig {
+        policy: ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: pool,
+            cooldown_ticks: 4,
+        },
+        initial_replicas: 1,
+        lane_capacity: cfg.capacity.max(4),
+    };
+    let m = pattern.len();
+    let (pattern_hash, pow) = (hash_of(&pattern), leading_pow(m));
+    let (hash_split, hash_merge) =
+        topo.add_elastic_stage("hash", stage_cfg.clone(), move |_replica| HashWorker {
+            pattern_len: m,
+            pattern_hash,
+            pow,
+        })?;
+    let (vcorpus, vpattern) = (corpus.clone(), pattern.clone());
+    let (verify_split, verify_merge) =
+        topo.add_elastic_stage("verify", stage_cfg, move |_replica| VerifyWorker {
+            corpus: vcorpus.clone(),
+            pattern: vpattern.clone(),
+        })?;
+
+    let matches_cell = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let red = topo.add_kernel(Box::new(BatchMatchReducer {
+        out: matches_cell.clone(),
+        scratch: Vec::new(),
+    }));
+
+    // Segmenter → hash stage (uninstrumented, like the static seg→hash
+    // edges; the controller reads its counters for λ and backpressure).
+    topo.connect::<Segment>(
+        seg,
+        0,
+        hash_split,
+        0,
+        StreamConfig::default()
+            .with_capacity(cfg.capacity)
+            .with_item_bytes(cfg.segment_bytes)
+            .uninstrumented(),
+    )?;
+    // Hash stage → verify stage: the Fig. 17 instrumented stream, and the
+    // coupling the coordinated controller reasons about. One stream item
+    // is a whole segment's candidate batch, so d̄ is the *expected batch
+    // payload* — for the canonical every-`m`-bytes corpus that is
+    // ≈ segment_bytes / m candidates of usize each. (The paper's static
+    // mesh streams single candidates; the batch nominal keeps the
+    // byte-rate estimates on this queue comparable.)
+    let batch_bytes =
+        (cfg.segment_bytes / m).max(1) * std::mem::size_of::<usize>();
+    let s_hv = topo.connect::<Vec<usize>>(
+        hash_merge,
+        0,
+        verify_split,
+        0,
+        StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(batch_bytes),
+    )?;
+    // Verify stage → reducer.
+    topo.connect::<Vec<usize>>(
+        verify_merge,
+        0,
+        red,
+        0,
+        StreamConfig::default()
+            .with_capacity(cfg.capacity)
+            .with_item_bytes(std::mem::size_of::<usize>())
+            .uninstrumented(),
+    )?;
+
+    let report = Scheduler::new(topo)
+        .with_monitoring(monitor)
+        .with_elastic(ElasticConfig {
+            tick: Duration::from_millis(5),
+            worker_budget: Some(pool),
+            ..Default::default()
+        })
+        .run()?;
+    let matches = finish_matches(&matches_cell);
+    Ok(RabinKarpRun { matches, report, verify_streams: vec![s_hv] })
+}
+
+/// The original fixed mesh (paper Fig. 12/17 topology) with `n` hash and
+/// `cfg.verify_kernels` verify kernels — kept wiring-identical for A/B
+/// runs against the elastic mode.
+fn run_rabin_karp_static(
+    cfg: &RabinKarpConfig,
+    n: usize,
+    monitor: MonitorConfig,
+    corpus: Arc<Vec<u8>>,
+    pattern: Vec<u8>,
+) -> Result<RabinKarpRun> {
+    let mut topo = Topology::new("rabin_karp");
+    let seg = topo.add_kernel(Box::new(Segmenter {
+        corpus: corpus.clone(),
+        segment_bytes: cfg.segment_bytes,
+        overlap: pattern.len() - 1,
+        next_off: 0,
+        next_port: 0,
+        n_out: n,
     }));
 
     let matches_cell = Arc::new(std::sync::Mutex::new(Vec::new()));
-    let red = topo.add_kernel(Box::new(MatchReducer { out: matches_cell.clone() }));
+    let red = topo.add_kernel(Box::new(MatchReducer {
+        out: matches_cell.clone(),
+        scratch: Vec::new(),
+    }));
 
     // Hash kernels.
-    let mut hash_ids = Vec::new();
-    for i in 0..cfg.hash_kernels {
+    let mut hash_ids: Vec<KernelId> = Vec::new();
+    for i in 0..n {
         let h = topo.add_kernel(Box::new(RollingHash::new(
             format!("hash{i}"),
             &pattern,
@@ -314,6 +576,7 @@ pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<R
             name: format!("verify{j}"),
             corpus: corpus.clone(),
             pattern: pattern.clone(),
+            scratch: Vec::new(),
         }));
         for (i, &h) in hash_ids.iter().enumerate() {
             // Hash i's output port j feeds verify j's input port i.
@@ -342,10 +605,17 @@ pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<R
     }
 
     let report = Scheduler::new(topo).with_monitoring(monitor).run()?;
-    let mut matches = std::mem::take(&mut *matches_cell.lock().unwrap());
+    let matches = finish_matches(&matches_cell);
+    Ok(RabinKarpRun { matches, report, verify_streams })
+}
+
+/// Order-normalize the consolidated matches (replica routing and the
+/// segment overlap both permit duplicates/reordering before this point).
+fn finish_matches(cell: &Arc<std::sync::Mutex<Vec<usize>>>) -> Vec<usize> {
+    let mut matches = std::mem::take(&mut *cell.lock().unwrap());
     matches.sort_unstable();
     matches.dedup();
-    Ok(RabinKarpRun { matches, report, verify_streams })
+    matches
 }
 
 #[cfg(test)]
@@ -367,7 +637,16 @@ mod tests {
     }
 
     #[test]
+    fn candidate_scan_matches_oracle() {
+        let corpus = foobar_corpus(256);
+        let seg = Segment { offset: 0, data: corpus.clone() };
+        let cands = candidate_positions(&seg, 6, hash_of(b"foobar"), leading_pow(6));
+        assert_eq!(cands, naive_matches(&corpus, b"foobar"));
+    }
+
+    #[test]
     fn finds_all_foobar_matches() {
+        // Default (elastic) wiring.
         let cfg = RabinKarpConfig {
             corpus_bytes: 4096,
             hash_kernels: 3,
@@ -381,21 +660,44 @@ mod tests {
         assert_eq!(run.matches, expect, "matches differ from oracle");
         // "foobar" every 6 bytes: 4096/6 starts minus tail.
         assert_eq!(run.matches.len(), (4096 - 6) / 6 + 1);
+        assert_eq!(run.verify_streams.len(), 1, "elastic mode: one hash→verify stream");
+        assert_eq!(run.report.replica_trajectories.len(), 2, "hash + verify stages");
     }
 
     #[test]
-    fn overlap_catches_straddling_matches() {
-        // Segment boundary inside a match: overlap m-1 must recover it.
+    fn static_degree_reproduces_fixed_mesh() {
         let cfg = RabinKarpConfig {
-            corpus_bytes: 600,
-            hash_kernels: 2,
-            verify_kernels: 1,
-            segment_bytes: 7, // pathological: barely longer than pattern
+            corpus_bytes: 4096,
+            hash_kernels: 3,
+            verify_kernels: 2,
+            segment_bytes: 512,
+            static_degree: Some(3),
             ..Default::default()
         };
         let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
         let corpus = foobar_corpus(cfg.corpus_bytes);
         assert_eq!(run.matches, naive_matches(&corpus, b"foobar"));
+        assert_eq!(run.verify_streams.len(), 6, "n × j instrumented queues");
+        assert!(run.report.replica_trajectories.is_empty(), "no control plane");
+    }
+
+    #[test]
+    fn overlap_catches_straddling_matches() {
+        // Segment boundary inside a match: overlap m-1 must recover it,
+        // in both wirings.
+        for static_degree in [None, Some(2)] {
+            let cfg = RabinKarpConfig {
+                corpus_bytes: 600,
+                hash_kernels: 2,
+                verify_kernels: 1,
+                segment_bytes: 7, // pathological: barely longer than pattern
+                static_degree,
+                ..Default::default()
+            };
+            let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+            let corpus = foobar_corpus(cfg.corpus_bytes);
+            assert_eq!(run.matches, naive_matches(&corpus, b"foobar"));
+        }
     }
 
     #[test]
@@ -420,6 +722,11 @@ mod tests {
         assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
         let mut cfg = RabinKarpConfig::default();
         cfg.verify_kernels = cfg.hash_kernels + 1;
+        assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
+        // Static mode: j is checked against the static hash degree.
+        let mut cfg = RabinKarpConfig::default();
+        cfg.static_degree = Some(1);
+        cfg.verify_kernels = 2;
         assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
     }
 }

@@ -53,7 +53,8 @@ impl Default for MicrobenchConfig {
 pub struct MatmulConfig {
     /// Square matrix dimension (paper: 10_000; default scaled down).
     pub n: usize,
-    /// Parallel dot-product kernels (paper Fig. 16: five).
+    /// Dot-product parallelism: the replica *ceiling* of the elastic dot
+    /// stage (paper Fig. 16 ran five fixed kernels).
     pub dot_kernels: usize,
     /// Rows per streamed block.
     pub block_rows: usize,
@@ -63,6 +64,11 @@ pub struct MatmulConfig {
     pub use_xla: bool,
     /// RNG seed for matrix contents.
     pub seed: u64,
+    /// `Some(k)`: reproduce the original fixed fan-out (round-robin
+    /// source → k dot kernels → reduce, no control plane) — the paper's
+    /// Fig. 16 topology and the A/B baseline for elastic runs. `None`
+    /// (default): run the dot stage on the elastic control plane.
+    pub static_degree: Option<usize>,
 }
 
 impl Default for MatmulConfig {
@@ -74,6 +80,7 @@ impl Default for MatmulConfig {
             capacity: 64,
             use_xla: false,
             seed: 0xA11CE,
+            static_degree: None,
         }
     }
 }
@@ -85,14 +92,21 @@ pub struct RabinKarpConfig {
     pub corpus_bytes: usize,
     /// Pattern to search.
     pub pattern: String,
-    /// Rolling-hash kernels `n` (paper Fig. 17: four).
+    /// Rolling-hash parallelism `n`: the replica ceiling of the elastic
+    /// hash stage (paper Fig. 17 ran four fixed kernels).
     pub hash_kernels: usize,
-    /// Verification kernels `j ≤ n` (paper: two).
+    /// Verification parallelism `j ≤ n`: the replica ceiling of the
+    /// elastic verify stage (paper: two).
     pub verify_kernels: usize,
     /// Segment size streamed to each hash kernel.
     pub segment_bytes: usize,
     /// Queue capacity (segments / candidates).
     pub capacity: usize,
+    /// `Some(n)`: reproduce the original fixed mesh (segmenter → n hash
+    /// kernels → `verify_kernels` verify kernels → reduce, no control
+    /// plane) — the paper's Fig. 17 topology and the A/B baseline.
+    /// `None` (default): run hash and verify as coupled elastic stages.
+    pub static_degree: Option<usize>,
 }
 
 impl Default for RabinKarpConfig {
@@ -104,6 +118,7 @@ impl Default for RabinKarpConfig {
             verify_kernels: 2,
             segment_bytes: 64 << 10,
             capacity: 64,
+            static_degree: None,
         }
     }
 }

@@ -22,10 +22,18 @@
 //!   estimator, applied at control-loop granularity, and it reacts within
 //!   a few ticks when a phase shift moves the true service rate.
 //!
-//! Replication decisions go through [`ElasticPolicy::decide`]
-//! (band + cooldown + scale-to-advice — see `policy.rs` for why this
-//! cannot oscillate on constant rates); every action lands in the
-//! [`ElasticEvent`] audit trail returned to the scheduler.
+//! Replication decisions are **coordinated across stages**: each tick the
+//! controller snapshots every registered stage ([`StageSignals`] — rates
+//! plus the blocked-duration fractions that tell upstream starvation from
+//! downstream blocking) and hands the whole vector to
+//! [`coordinate`](super::policy::coordinate), which applies the per-stage
+//! band rule, refuses to replicate starvation- or sink-bound stages, and
+//! fits the result under the global [`ElasticConfig::worker_budget`].
+//! Every action lands in the [`ElasticEvent`] audit trail, and the
+//! per-stage replica counts over time are returned as
+//! [`StageTrajectory`] records for [`RunReport::replica_trajectories`].
+//!
+//! [`RunReport::replica_trajectories`]: crate::scheduler::RunReport::replica_trajectories
 
 use std::collections::HashMap;
 use std::fmt;
@@ -41,7 +49,7 @@ use crate::queue::MonitorHandle;
 use crate::timing::TimeRef;
 use crate::topology::StreamId;
 
-use super::policy::{ElasticPolicy, ScaleDecision};
+use super::policy::{coordinate, ElasticPolicy, StageSignals};
 use super::stage::ElasticStage;
 
 /// What the control plane did, for the audit trail.
@@ -74,6 +82,12 @@ pub struct ElasticEvent {
     /// The upstream queue was ≥ 3/4 full, so the decision was forced
     /// out-of-band regardless of the measured ρ.
     pub pressure: bool,
+    /// Mean fraction of the decision tick the stage's workers spent
+    /// read-blocked (the starvation signal the coordinated rule gates on).
+    pub starved_frac: f64,
+    /// Fraction of the tick the upstream producer spent write-blocked
+    /// pushing into the stage (backpressure attributable to the stage).
+    pub backpressure_frac: f64,
 }
 
 impl ElasticEvent {
@@ -93,14 +107,16 @@ impl fmt::Display for ElasticEvent {
             ElasticAction::ScaleUp { from, to } => write!(
                 f,
                 "[{:>9} ns] {} scale-up {from} -> {to} (rho={:.2}, lambda={:.0}/s, \
-                 mu={:.0}/s){forced}",
-                self.at_ns, self.target, self.rho, self.lambda_items, self.mu_items
+                 mu={:.0}/s, starved={:.2}){forced}",
+                self.at_ns, self.target, self.rho, self.lambda_items, self.mu_items,
+                self.starved_frac
             ),
             ElasticAction::ScaleDown { from, to } => write!(
                 f,
                 "[{:>9} ns] {} scale-down {from} -> {to} (rho={:.2}, lambda={:.0}/s, \
-                 mu={:.0}/s){forced}",
-                self.at_ns, self.target, self.rho, self.lambda_items, self.mu_items
+                 mu={:.0}/s, starved={:.2}){forced}",
+                self.at_ns, self.target, self.rho, self.lambda_items, self.mu_items,
+                self.starved_frac
             ),
             ElasticAction::Resize { from, to, model } => write!(
                 f,
@@ -109,6 +125,26 @@ impl fmt::Display for ElasticEvent {
             ),
         }
     }
+}
+
+/// One stage's replica count over a run: the initial point plus one point
+/// per applied scaling action (timestamps are [`TimeRef`] ns).
+#[derive(Debug, Clone)]
+pub struct StageTrajectory {
+    /// Stage name.
+    pub stage: String,
+    /// `(at_ns, replicas)` — first entry is the pre-run count.
+    pub points: Vec<(u64, usize)>,
+}
+
+/// Everything the control-plane thread hands back to the scheduler.
+#[derive(Debug, Default)]
+pub struct ControlPlaneReport {
+    /// Audit trail of every action (replication + resizes).
+    pub events: Vec<ElasticEvent>,
+    /// Per-stage replica trajectories (non-empty whenever the controller
+    /// ran with at least one registered stage).
+    pub trajectories: Vec<StageTrajectory>,
 }
 
 /// Global control-plane knobs (per-stage knobs live in [`ElasticPolicy`]).
@@ -126,6 +162,14 @@ pub struct ElasticConfig {
     pub resize_cooldown_ticks: u32,
     /// Minimum relative capacity change worth applying (anti-thrash).
     pub resize_min_rel_change: f64,
+    /// Global cap on the summed replica count across every stage of the
+    /// topology (`None` = uncapped). The coordinated rule fits all stage
+    /// targets under it, trimming the least-loaded claimant first.
+    pub worker_budget: Option<usize>,
+    /// Mean worker read-blocked fraction of a tick at/above which a stage
+    /// counts as starvation-bound (input-limited) and is refused
+    /// scale-ups; also gates on the egress write-blocked fraction.
+    pub starve_threshold: f64,
 }
 
 impl Default for ElasticConfig {
@@ -137,14 +181,21 @@ impl Default for ElasticConfig {
             advisor: BufferAdvisor::default(),
             resize_cooldown_ticks: 20,
             resize_min_rel_change: 0.25,
+            worker_budget: None,
+            starve_threshold: 0.5,
         }
     }
 }
 
-/// A replicable stage plus the stream feeding it (λ source).
+/// A replicable stage plus the streams around it: the ingress stream
+/// carries λ and the backpressure signal, the egress stream the
+/// downstream-blocking signal.
 pub struct StageBinding {
     pub stage: Arc<dyn ElasticStage>,
+    /// The stream feeding the stage's split kernel.
     pub upstream: Option<StreamBinding>,
+    /// The stream leaving the stage's merge kernel.
+    pub downstream: Option<StreamBinding>,
 }
 
 /// A monitored stream the controller may observe and resize.
@@ -159,7 +210,14 @@ pub struct StreamBinding {
 struct StageState {
     mu_ewma: Option<f64>,
     lambda_ewma: Option<f64>,
+    starved_ewma: f64,
+    backpressure_ewma: f64,
+    sink_block_ewma: f64,
     last_pushes: u64,
+    /// Lifetime write-blocked ns of the upstream stream at the last tick.
+    last_up_wb: u64,
+    /// Lifetime write-blocked ns of the downstream stream at the last tick.
+    last_down_wb: u64,
     cooldown: u32,
 }
 
@@ -179,6 +237,7 @@ pub struct ElasticController {
     stop: Arc<AtomicBool>,
     time: TimeRef,
     events: Vec<ElasticEvent>,
+    trajectories: Vec<StageTrajectory>,
     stage_states: Vec<StageState>,
     stream_states: Vec<StreamState>,
 }
@@ -191,7 +250,16 @@ impl ElasticController {
         forward: Sender<MonitorEvent>,
         stop: Arc<AtomicBool>,
     ) -> Self {
+        let time = TimeRef::new();
+        let t0 = time.now_ns();
         let stage_states = stages.iter().map(|_| StageState::default()).collect();
+        let trajectories = stages
+            .iter()
+            .map(|sb| StageTrajectory {
+                stage: sb.stage.stage_name().to_string(),
+                points: vec![(t0, sb.stage.replicas())],
+            })
+            .collect();
         let stream_states = streams.iter().map(|_| StreamState::default()).collect();
         ElasticController {
             cfg,
@@ -201,21 +269,28 @@ impl ElasticController {
             classes: HashMap::new(),
             forward,
             stop,
-            time: TimeRef::new(),
+            time,
             events: Vec::new(),
+            trajectories,
             stage_states,
             stream_states,
         }
     }
 
     /// Main loop: pump monitor events between ticks until `stop` is set
-    /// (after the monitors have been joined), then return the audit trail.
-    pub fn run(mut self, rx: Receiver<MonitorEvent>) -> Vec<ElasticEvent> {
+    /// (after the monitors have been joined), then return the audit trail
+    /// and the replica trajectories.
+    pub fn run(mut self, rx: Receiver<MonitorEvent>) -> ControlPlaneReport {
         // Baseline the cumulative counters so the first tick sees a clean
         // delta instead of the pre-run total.
         for (i, sb) in self.stages.iter().enumerate() {
+            let st = &mut self.stage_states[i];
             if let Some(up) = &sb.upstream {
-                self.stage_states[i].last_pushes = up.handle.counters().total_pushes();
+                st.last_pushes = up.handle.counters().total_pushes();
+                st.last_up_wb = up.handle.counters().total_write_blocked_ns();
+            }
+            if let Some(down) = &sb.downstream {
+                st.last_down_wb = down.handle.counters().total_write_blocked_ns();
             }
         }
         let tick = self.cfg.tick.max(Duration::from_millis(1));
@@ -253,7 +328,7 @@ impl ElasticController {
                 break;
             }
         }
-        self.events
+        ControlPlaneReport { events: self.events, trajectories: self.trajectories }
     }
 
     /// Fold one monitor event into the registries, then pass it through.
@@ -273,41 +348,64 @@ impl ElasticController {
     }
 
     /// One control-loop step. `dt` = realized seconds since the last tick.
+    ///
+    /// All stages are observed first, then scaled **jointly** through
+    /// [`coordinate`] — the per-stage greedy path is gone, so a
+    /// starvation-bound stage can never grab replicas its upstream
+    /// bottleneck should get.
     fn tick(&mut self, dt: f64) {
         let at_ns = self.time.now_ns();
+        let mut inputs: Vec<(ElasticPolicy, StageSignals)> =
+            Vec::with_capacity(self.stages.len());
         for i in 0..self.stages.len() {
-            self.tick_stage(i, dt, at_ns);
+            let policy = self.stages[i].stage.policy().clone();
+            let sig = self.observe_stage(i, dt);
+            inputs.push((policy, sig));
+        }
+        if !inputs.is_empty() {
+            let targets =
+                coordinate(&inputs, self.cfg.worker_budget, self.cfg.starve_threshold);
+            for (i, (&target, (policy, sig))) in
+                targets.iter().zip(&inputs).enumerate()
+            {
+                self.apply_stage_target(i, target, policy, sig, at_ns);
+            }
         }
         if self.cfg.buffer_advice {
             self.tick_buffers(at_ns);
         }
     }
 
-    fn tick_stage(&mut self, i: usize, dt: f64, at_ns: u64) {
-        let stage = self.stages[i].stage.clone();
-        let policy: ElasticPolicy = stage.policy().clone();
+    /// Snapshot one stage's telemetry and fold it into the EWMAs.
+    fn observe_stage(&mut self, i: usize, dt: f64) -> StageSignals {
         let alpha = self.cfg.ewma_alpha.clamp(0.01, 1.0);
+        let ewma = |prev: f64, obs: f64| alpha * obs + (1.0 - alpha) * prev;
+        let dt_ns = (dt * 1.0e9).max(1.0);
+
+        let probe = self.stages[i].stage.probe();
 
         // μ (items/sec per replica): §IV-valid lane windows only — a lane
-        // that read-blocked was starved, not slow.
-        let samples = stage.lane_probe();
+        // that read-blocked was starved, not slow. The same per-lane
+        // blocked durations, averaged over *all* active lanes, are the
+        // starvation fraction the coordinated gate runs on.
         let (mut sum, mut k) = (0.0f64, 0u32);
-        for s in &samples {
+        let mut starved_sum = 0.0f64;
+        for s in &probe.samples {
             if s.head_valid() && s.tc_head > 0 {
                 sum += s.tc_head as f64 / dt;
                 k += 1;
             }
+            starved_sum += (s.read_blocked_ns as f64 / dt_ns).min(1.0);
         }
-        {
-            let st = &mut self.stage_states[i];
-            if k > 0 {
-                let obs = sum / k as f64;
-                st.mu_ewma = Some(match st.mu_ewma {
-                    Some(prev) => alpha * obs + (1.0 - alpha) * prev,
-                    None => obs,
-                });
-            }
-        }
+        // An instantaneous in-stage backlog (beyond one queued item per
+        // worker) proves there is work waiting *right now*: the blocked
+        // durations describe the past tick and must not mark the stage
+        // starvation-bound when its lanes are already backed up again.
+        let starved_obs = if probe.samples.is_empty() || probe.backlog > probe.replicas {
+            0.0
+        } else {
+            starved_sum / probe.samples.len() as f64
+        };
 
         // λ (items/sec into the stage): admitted-arrival delta from the
         // upstream stream's lifetime counters. Deliberately *not* lifted
@@ -315,76 +413,124 @@ impl ElasticController {
         // epochs stale, and pinning λ to it (e.g. via max()) would hold
         // replicas up long after a load drop. The case where admitted λ
         // understates offered load — a full upstream queue throttling the
-        // producer — is what the occupancy `pressure` override below is
-        // for.
+        // producer — is what the occupancy `pressure` override is for.
+        // The same stream's write-blocked delta is the backpressure this
+        // stage exerts on its producer.
         let mut pressure = false;
+        let mut lambda_obs = None;
+        let mut backpressure_obs = 0.0;
         if let Some(up) = &self.stages[i].upstream {
-            let total = up.handle.counters().total_pushes();
+            let c = up.handle.counters();
+            let total = c.total_pushes();
+            let wb = c.total_write_blocked_ns();
             let cap = up.handle.capacity();
             pressure = cap > 0 && up.handle.len() * 4 >= cap * 3;
             let st = &mut self.stage_states[i];
-            let delta = total.saturating_sub(st.last_pushes);
+            lambda_obs = Some(total.saturating_sub(st.last_pushes) as f64 / dt);
+            backpressure_obs =
+                (wb.saturating_sub(st.last_up_wb) as f64 / dt_ns).min(1.0);
             st.last_pushes = total;
-            let obs = delta as f64 / dt;
-            st.lambda_ewma = Some(match st.lambda_ewma {
-                Some(prev) => alpha * obs + (1.0 - alpha) * prev,
+            st.last_up_wb = wb;
+        }
+        let mut sink_obs = 0.0;
+        if let Some(down) = &self.stages[i].downstream {
+            let wb = down.handle.counters().total_write_blocked_ns();
+            let st = &mut self.stage_states[i];
+            sink_obs = (wb.saturating_sub(st.last_down_wb) as f64 / dt_ns).min(1.0);
+            st.last_down_wb = wb;
+        }
+
+        let st = &mut self.stage_states[i];
+        if k > 0 {
+            let obs = sum / k as f64;
+            st.mu_ewma = Some(match st.mu_ewma {
+                Some(prev) => ewma(prev, obs),
                 None => obs,
             });
         }
-
-        if stage.input_closed() {
-            return; // nothing left to scale
+        if let Some(obs) = lambda_obs {
+            st.lambda_ewma = Some(match st.lambda_ewma {
+                Some(prev) => ewma(prev, obs),
+                None => obs,
+            });
         }
-        let st = &mut self.stage_states[i];
+        st.starved_ewma = ewma(st.starved_ewma, starved_obs);
+        st.backpressure_ewma = ewma(st.backpressure_ewma, backpressure_obs);
+        st.sink_block_ewma = ewma(st.sink_block_ewma, sink_obs);
+
+        // Frozen: cooldown still draining, input closed, or not enough
+        // telemetry yet for a defensible decision.
+        let mut frozen = self.stages[i].stage.input_closed();
         if st.cooldown > 0 {
             st.cooldown -= 1;
-            return;
+            frozen = true;
         }
-        let (Some(lam), Some(mu)) = (st.lambda_ewma, st.mu_ewma) else {
-            return;
-        };
-        if mu <= 0.0 {
-            return;
-        }
-        let replicas = stage.replicas();
-        if replicas == 0 {
-            return;
-        }
-        let rho = lam / (replicas as f64 * mu);
-        // A backlogged upstream queue means the admitted λ understates
-        // offered load; evaluate out-of-band while auditing the measured ρ.
-        let eval_rho = if pressure {
-            rho.max(policy.target_rho + policy.band + 0.05)
-        } else {
-            rho
-        };
-        match policy.decide(eval_rho, replicas, lam, mu) {
-            ScaleDecision::Hold => {}
-            ScaleDecision::ScaleTo(n) => {
-                let got = stage.scale_to(n);
-                if got != replicas {
-                    let action = if got > replicas {
-                        ElasticAction::ScaleUp { from: replicas, to: got }
-                    } else {
-                        ElasticAction::ScaleDown { from: replicas, to: got }
-                    };
-                    self.events.push(ElasticEvent {
-                        at_ns,
-                        target: stage.stage_name().to_string(),
-                        action,
-                        rho,
-                        lambda_items: lam,
-                        mu_items: mu,
-                        pressure,
-                    });
-                    self.stage_states[i].cooldown = policy.cooldown_ticks;
-                }
+        let (lambda, mu) = match (st.lambda_ewma, st.mu_ewma) {
+            (Some(l), Some(m)) => (l, m),
+            _ => {
+                frozen = true;
+                (0.0, 0.0)
             }
+        };
+        StageSignals {
+            replicas: probe.replicas,
+            lambda,
+            mu,
+            starved_frac: st.starved_ewma,
+            backpressure_frac: st.backpressure_ewma,
+            sink_block_frac: st.sink_block_ewma,
+            pressure,
+            frozen,
         }
     }
 
+    /// Execute one stage's coordinated target, auditing any change.
+    fn apply_stage_target(
+        &mut self,
+        i: usize,
+        target: usize,
+        policy: &ElasticPolicy,
+        sig: &StageSignals,
+        at_ns: u64,
+    ) {
+        if sig.frozen || target == sig.replicas || sig.replicas == 0 {
+            return;
+        }
+        let stage = &self.stages[i].stage;
+        let got = stage.scale_to(target);
+        if got == sig.replicas {
+            return;
+        }
+        let action = if got > sig.replicas {
+            ElasticAction::ScaleUp { from: sig.replicas, to: got }
+        } else {
+            ElasticAction::ScaleDown { from: sig.replicas, to: got }
+        };
+        let rho = if sig.mu > 0.0 {
+            sig.lambda / (sig.replicas as f64 * sig.mu)
+        } else {
+            0.0
+        };
+        self.events.push(ElasticEvent {
+            at_ns,
+            target: stage.stage_name().to_string(),
+            action,
+            rho,
+            lambda_items: sig.lambda,
+            mu_items: sig.mu,
+            pressure: sig.pressure,
+            starved_frac: sig.starved_frac,
+            backpressure_frac: sig.backpressure_frac,
+        });
+        self.trajectories[i].points.push((at_ns, got));
+        self.stage_states[i].cooldown = policy.cooldown_ticks;
+    }
+
     /// Apply analytic buffer sizing to streams whose both-end rates have
-    /// converged (the control consumer of [`BufferAdvisor`]).
+    /// converged (the control consumer of [`BufferAdvisor`]). When the
+    /// controller runs with `buffer_advice`, the scheduler retires the
+    /// monitors' own resize trick on these streams, so this loop is the
+    /// **single owner** of every monitored stream's capacity.
     fn tick_buffers(&mut self, at_ns: u64) {
         for (i, sb) in self.streams.iter().enumerate() {
             let stt = &mut self.stream_states[i];
@@ -420,6 +566,8 @@ impl ElasticController {
                     lambda_items: rates.lambda_items.unwrap_or(0.0),
                     mu_items: rates.mu_items.unwrap_or(0.0),
                     pressure: false,
+                    starved_frac: 0.0,
+                    backpressure_frac: 0.0,
                 });
                 stt.cooldown = self.cfg.resize_cooldown_ticks;
             }
@@ -435,10 +583,25 @@ mod tests {
     use std::sync::Mutex;
 
     /// A scriptable stage: fixed per-lane tc per probe, no real threads.
+    /// Lane 0 always reports `tc_per_lane` served and no blocking; the
+    /// remaining lanes report `starved_ns_per_lane` read-blocked (0 ⇒ they
+    /// too serve `tc_per_lane`).
     struct FakeStage {
         replicas: Mutex<usize>,
         policy: ElasticPolicy,
         tc_per_lane: AtomicU64,
+        starved_ns_per_lane: AtomicU64,
+    }
+
+    impl FakeStage {
+        fn busy(replicas: usize, policy: ElasticPolicy, tc: u64) -> Arc<Self> {
+            Arc::new(FakeStage {
+                replicas: Mutex::new(replicas),
+                policy,
+                tc_per_lane: AtomicU64::new(tc),
+                starved_ns_per_lane: AtomicU64::new(0),
+            })
+        }
     }
 
     impl ElasticStage for FakeStage {
@@ -455,12 +618,24 @@ mod tests {
         }
         fn lane_probe(&self) -> Vec<MonitorSample> {
             let tc = self.tc_per_lane.load(Ordering::Relaxed);
+            let starved = self.starved_ns_per_lane.load(Ordering::Relaxed);
             (0..self.replicas())
-                .map(|_| MonitorSample {
-                    tc_head: tc,
-                    tc_tail: tc,
-                    read_blocked_ns: 0,
-                    write_blocked_ns: 0,
+                .map(|lane| {
+                    if lane > 0 && starved > 0 {
+                        MonitorSample {
+                            tc_head: 0,
+                            tc_tail: 0,
+                            read_blocked_ns: starved,
+                            write_blocked_ns: 0,
+                        }
+                    } else {
+                        MonitorSample {
+                            tc_head: tc,
+                            tc_tail: tc,
+                            read_blocked_ns: 0,
+                            write_blocked_ns: 0,
+                        }
+                    }
                 })
                 .collect()
         }
@@ -476,6 +651,16 @@ mod tests {
         fn join_workers(&self) {}
     }
 
+    fn controller_for(
+        stages: Vec<StageBinding>,
+        cfg: ElasticConfig,
+    ) -> ElasticController {
+        // Tick-driven tests never forward monitor events, so the receiver
+        // half can drop immediately.
+        let (fwd_tx, _fwd_rx) = std::sync::mpsc::channel();
+        ElasticController::new(cfg, stages, vec![], fwd_tx, Arc::new(AtomicBool::new(false)))
+    }
+
     #[test]
     fn controller_scales_once_and_settles_on_constant_load() {
         let policy = ElasticPolicy {
@@ -483,16 +668,9 @@ mod tests {
             cooldown_ticks: 2,
             ..Default::default()
         };
-        let stage = Arc::new(FakeStage {
-            replicas: Mutex::new(1),
-            policy,
-            tc_per_lane: AtomicU64::new(20),
-        });
+        let stage = FakeStage::busy(1, policy, 20);
         let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(4096));
-        let (fwd_tx, _fwd_rx) = std::sync::mpsc::channel();
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut ctl = ElasticController::new(
-            ElasticConfig { buffer_advice: false, ewma_alpha: 1.0, ..Default::default() },
+        let mut ctl = controller_for(
             vec![StageBinding {
                 stage: stage.clone(),
                 upstream: Some(StreamBinding {
@@ -500,10 +678,9 @@ mod tests {
                     label: "src -> fake".into(),
                     handle,
                 }),
+                downstream: None,
             }],
-            vec![],
-            fwd_tx,
-            stop,
+            ElasticConfig { buffer_advice: false, ewma_alpha: 1.0, ..Default::default() },
         );
         // 8 ticks of dt = 10 ms: 100 arrivals/tick = 10k/s; 20 served per
         // lane per tick = 2k/s per replica.
@@ -528,6 +705,108 @@ mod tests {
             }
             ref other => panic!("expected ScaleUp, got {other:?}"),
         }
+        // The trajectory carries the initial point plus the one action.
+        assert_eq!(ctl.trajectories.len(), 1);
+        let pts = &ctl.trajectories[0].points;
+        assert_eq!(pts.len(), 2, "{pts:?}");
+        assert_eq!(pts[0].1, 1);
+        assert_eq!(pts[1].1, 8);
+    }
+
+    #[test]
+    fn controller_refuses_scale_up_while_stage_is_starved() {
+        // 3 replicas: lane 0 serves a trickle (μ looks tiny ⇒ ρ looks
+        // huge), lanes 1–2 sit read-blocked 95% of every tick. The
+        // coordinated gate must hold the stage; once the starvation
+        // clears, the same telemetry scales it.
+        let policy = ElasticPolicy {
+            max_replicas: 8,
+            cooldown_ticks: 0,
+            ..Default::default()
+        };
+        let stage = FakeStage::busy(3, policy, 5); // μ = 500/s per lane
+        stage.starved_ns_per_lane.store(9_500_000, Ordering::Relaxed);
+        let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+        let mut ctl = controller_for(
+            vec![StageBinding {
+                stage: stage.clone(),
+                upstream: Some(StreamBinding {
+                    id: StreamId(0),
+                    label: "src -> fake".into(),
+                    handle,
+                }),
+                downstream: None,
+            }],
+            ElasticConfig { buffer_advice: false, ewma_alpha: 1.0, ..Default::default() },
+        );
+        // λ = 30k/s against μ = 500/s per replica: ρ = 20 — but starved.
+        for _ in 0..6 {
+            for i in 0..300u64 {
+                let _ = upq.try_push(i);
+            }
+            ctl.tick(0.010);
+        }
+        assert_eq!(
+            ctl.events.iter().filter(|e| e.is_scale()).count(),
+            0,
+            "starvation-bound stage was scaled: {:?}",
+            ctl.events
+        );
+        assert_eq!(stage.replicas(), 3);
+
+        // Starvation clears (backlog arrived): now the scale-up happens.
+        stage.starved_ns_per_lane.store(0, Ordering::Relaxed);
+        for _ in 0..4 {
+            for i in 0..300u64 {
+                let _ = upq.try_push(i);
+            }
+            ctl.tick(0.010);
+        }
+        assert!(
+            ctl.events.iter().any(|e| matches!(e.action, ElasticAction::ScaleUp { .. })),
+            "cleared starvation must unlock the scale-up: {:?}",
+            ctl.events
+        );
+        assert_eq!(stage.replicas(), 8);
+    }
+
+    #[test]
+    fn controller_caps_total_replicas_at_worker_budget() {
+        // Two overloaded stages, budget 6: the sum of realized replicas
+        // must stay ≤ 6 even though each alone would claim 8.
+        let policy = ElasticPolicy {
+            max_replicas: 8,
+            cooldown_ticks: 0,
+            ..Default::default()
+        };
+        let a = FakeStage::busy(1, policy.clone(), 10); // μ = 1k/s
+        let b = FakeStage::busy(1, policy, 10);
+        let (qa, ha) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+        let (qb, hb) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+        let bind = |stage: Arc<FakeStage>, h, label: &str| StageBinding {
+            stage,
+            upstream: Some(StreamBinding { id: StreamId(0), label: label.into(), handle: h }),
+            downstream: None,
+        };
+        let mut ctl = controller_for(
+            vec![bind(a.clone(), ha, "a"), bind(b.clone(), hb, "b")],
+            ElasticConfig {
+                buffer_advice: false,
+                ewma_alpha: 1.0,
+                worker_budget: Some(6),
+                ..Default::default()
+            },
+        );
+        for _ in 0..6 {
+            for i in 0..50u64 {
+                let _ = qa.try_push(i); // 5k/s
+                let _ = qb.try_push(i);
+            }
+            ctl.tick(0.010);
+        }
+        let total = a.replicas() + b.replicas();
+        assert!(total <= 6, "budget exceeded: a={} b={}", a.replicas(), b.replicas());
+        assert!(a.replicas() > 1 && b.replicas() > 1, "budget starved a stage entirely");
     }
 
     #[test]
@@ -540,10 +819,13 @@ mod tests {
             lambda_items: 100.0,
             mu_items: 30.0,
             pressure: true,
+            starved_frac: 0.25,
+            backpressure_frac: 0.5,
         };
         let s = e.to_string();
         assert!(s.contains("scale-up 1 -> 3"), "{s}");
         assert!(s.contains("[pressure]"), "{s}");
+        assert!(s.contains("starved=0.25"), "{s}");
         let r = ElasticEvent {
             at_ns: 43,
             target: "a -> b".into(),
@@ -552,6 +834,8 @@ mod tests {
             lambda_items: 0.0,
             mu_items: 0.0,
             pressure: false,
+            starved_frac: 0.0,
+            backpressure_frac: 0.0,
         };
         assert!(r.to_string().contains("resize 64 -> 256"), "{r}");
     }

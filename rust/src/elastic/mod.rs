@@ -18,8 +18,11 @@
 //!   [`RateRegistry`]), probes per-lane `tc` counters with the paper's
 //!   §IV validity rule, executes replication decisions, and applies
 //!   [`BufferAdvisor`] capacities through the queue's atomic capacity
-//!   (the §III resize mechanism). Every action is audited in
-//!   [`RunReport::elastic_events`].
+//!   (the §III resize mechanism). Replication is decided **jointly**
+//!   across all registered stages ([`policy::coordinate`]): blocked-
+//!   duration fractions tell an overloaded stage from a starvation-bound
+//!   one, and a global worker budget caps the summed replica count.
+//!   Every action is audited in [`RunReport::elastic_events`].
 //!
 //! [`RateEstimate`]: crate::estimator::RateEstimate
 //! [`RateRegistry`]: crate::control::RateRegistry
@@ -62,9 +65,11 @@ pub mod policy;
 pub mod stage;
 
 pub use controller::{
-    ElasticAction, ElasticConfig, ElasticController, ElasticEvent, StageBinding, StreamBinding,
+    ControlPlaneReport, ElasticAction, ElasticConfig, ElasticController, ElasticEvent,
+    StageBinding, StageTrajectory, StreamBinding,
 };
-pub use policy::{ElasticPolicy, ScaleDecision};
+pub use policy::{coordinate, ElasticPolicy, ScaleDecision, StageSignals};
 pub use stage::{
     ElasticStage, ElasticStageConfig, MergeKernel, Replicable, ReplicaSet, SplitKernel,
+    StageProbe,
 };

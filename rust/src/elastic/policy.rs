@@ -14,6 +14,16 @@
 //!   oscillate (proved by `prop_policy_never_oscillates_on_constant_trace`);
 //! * a **cooldown** between actions so in-flight effects (replica warmup,
 //!   queue drain) are observed before the next decision.
+//!
+//! On top of the per-stage rule sits [`coordinate`], the **multi-stage**
+//! decision: all replicable stages of one topology are evaluated jointly,
+//! under a global worker budget, with each stage's blocked-duration
+//! fractions (ingress starvation vs upstream backpressure vs downstream
+//! blocking) gating the per-stage advice. The coupled hash→verify
+//! pipeline of the Rabin–Karp app is the motivating case: a greedy
+//! per-stage loop happily replicates a verify stage whose measured ρ is
+//! noisy while its workers actually sit starved — the joint rule refuses,
+//! because the bottleneck is upstream.
 
 use crate::control::parallelism_advice;
 use crate::{Result, SfError};
@@ -116,6 +126,135 @@ impl ElasticPolicy {
     }
 }
 
+/// One stage's telemetry snapshot for a joint scaling decision, as
+/// gathered by the controller each tick. Rates are EWMA-smoothed
+/// items/sec; fractions are of the control tick, clamped to `[0, 1]`.
+#[derive(Debug, Clone, Copy)]
+pub struct StageSignals {
+    /// Active replicas right now.
+    pub replicas: usize,
+    /// Arrival rate into the stage (admitted pushes on its ingress stream).
+    pub lambda: f64,
+    /// Per-replica non-blocking service rate (§IV-valid lane windows).
+    pub mu: f64,
+    /// Mean fraction of the tick the stage's *workers* spent read-blocked
+    /// (waiting for items): the stage's starvation signal. High ⇒ the
+    /// bottleneck is upstream, not here.
+    pub starved_frac: f64,
+    /// Fraction of the tick the *upstream producer* spent write-blocked
+    /// pushing into this stage: backpressure attributable to this stage.
+    pub backpressure_frac: f64,
+    /// Fraction of the tick the stage's *egress* spent write-blocked
+    /// pushing downstream: the bottleneck is below, more replicas here
+    /// only relocate the queueing.
+    pub sink_block_frac: f64,
+    /// Ingress queue ≥ 3/4 full: admitted λ understates offered load, so
+    /// the band check is evaluated out-of-band (and starvation cannot be
+    /// claimed).
+    pub pressure: bool,
+    /// Hold at `replicas` regardless of the signals: cooldown active, or
+    /// the stage input already closed. Frozen stages still occupy budget
+    /// but are never trimmed or grown.
+    pub frozen: bool,
+}
+
+/// The joint scaling rule: per-stage banded advice, gated by the
+/// blocked-duration fractions, then fit under a global `budget` of worker
+/// threads (`None` = uncapped).
+///
+/// Invariants (tested below):
+/// * a stage with `starved_frac ≥ starve_threshold` (and no pressure) is
+///   **never scaled up** — its bottleneck is upstream;
+/// * a stage with `sink_block_frac ≥ starve_threshold` is never scaled up
+///   — its bottleneck is downstream;
+/// * per-stage min/max bounds always hold;
+/// * when a budget is given, `Σ targets ≤ max(budget, Σ pinned floors)` —
+///   trimming takes from the lowest-ρ (least loaded) unfrozen stage
+///   first, and reverts planned increases before forcing decreases.
+pub fn coordinate(
+    stages: &[(ElasticPolicy, StageSignals)],
+    budget: Option<usize>,
+    starve_threshold: f64,
+) -> Vec<usize> {
+    let mut targets: Vec<usize> = stages
+        .iter()
+        .map(|(p, s)| {
+            if s.frozen || s.replicas == 0 || s.mu <= 0.0 {
+                return s.replicas;
+            }
+            let rho = s.lambda / (s.replicas as f64 * s.mu);
+            // Backlogged ingress: evaluate out-of-band (the measured ρ is
+            // admission-throttled), same override as the greedy loop had.
+            let eval_rho = if s.pressure {
+                rho.max(p.target_rho + p.band + 0.05)
+            } else {
+                rho
+            };
+            let mut t = match p.decide(eval_rho, s.replicas, s.lambda, s.mu) {
+                ScaleDecision::Hold => s.replicas,
+                ScaleDecision::ScaleTo(n) => n,
+            };
+            if t > s.replicas
+                && !s.pressure
+                && s.starved_frac >= starve_threshold
+            {
+                // Starvation-bound: workers idle waiting for input. A
+                // high measured ρ here is a telemetry artifact (stale or
+                // noisy μ); replicating an input-limited stage cannot
+                // raise throughput.
+                t = s.replicas;
+            }
+            if t > s.replicas && s.sink_block_frac >= starve_threshold {
+                t = s.replicas;
+            }
+            t
+        })
+        .collect();
+
+    let Some(budget) = budget else { return targets };
+    // Fit under the budget: first revert planned *increases* (lowest ρ
+    // first — the least-loaded claimant yields), then, still over, force
+    // decreases toward each policy's floor. Frozen stages are untouchable.
+    let need = |i: usize, targets: &[usize]| -> f64 {
+        let (_, s) = &stages[i];
+        if s.pressure {
+            return f64::INFINITY;
+        }
+        if s.mu <= 0.0 || targets[i] == 0 {
+            return 0.0;
+        }
+        s.lambda / (targets[i] as f64 * s.mu)
+    };
+    for floor_is_current in [true, false] {
+        loop {
+            let total: usize = targets.iter().sum();
+            if total <= budget {
+                return targets;
+            }
+            let victim = (0..targets.len())
+                .filter(|&i| !stages[i].1.frozen)
+                .filter(|&i| {
+                    let floor = if floor_is_current {
+                        stages[i].0.clamp(stages[i].1.replicas)
+                    } else {
+                        stages[i].0.min_replicas.max(1)
+                    };
+                    targets[i] > floor
+                })
+                .min_by(|&a, &b| {
+                    need(a, &targets)
+                        .partial_cmp(&need(b, &targets))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+            match victim {
+                Some(i) => targets[i] -= 1,
+                None => break, // nothing left to trim at this floor
+            }
+        }
+    }
+    targets
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +317,120 @@ mod tests {
         assert_eq!(p.decide(f64::NAN, 1, 1.0, 1.0), ScaleDecision::Hold);
         assert_eq!(p.decide(2.0, 1, 1.0, 0.0), ScaleDecision::Hold);
         assert_eq!(p.decide(2.0, 1, -1.0, 1.0), ScaleDecision::Hold);
+    }
+
+    // ---------------------------------------------- coordinated decision --
+
+    fn sig(replicas: usize, lambda: f64, mu: f64) -> StageSignals {
+        StageSignals {
+            replicas,
+            lambda,
+            mu,
+            starved_frac: 0.0,
+            backpressure_frac: 0.0,
+            sink_block_frac: 0.0,
+            pressure: false,
+            frozen: false,
+        }
+    }
+
+    #[test]
+    fn coordinate_refuses_to_scale_a_starvation_bound_stage() {
+        // Stage looks wildly overloaded by ρ (λ=10k, μ=100, one replica)
+        // but its workers sat read-blocked 90% of the tick: the measured μ
+        // is a starvation artifact and the bottleneck is upstream.
+        let p = ElasticPolicy { max_replicas: 16, ..Default::default() };
+        let mut s = sig(1, 10_000.0, 100.0);
+        s.starved_frac = 0.9;
+        let t = coordinate(&[(p.clone(), s)], None, 0.5);
+        assert_eq!(t, vec![1], "starved stage must not scale up");
+        // Same signals with the starvation cleared: the advice applies.
+        let t = coordinate(&[(p, sig(1, 10_000.0, 100.0))], None, 0.5);
+        assert!(t[0] > 1, "un-starved overload must scale up, got {t:?}");
+    }
+
+    #[test]
+    fn coordinate_starved_stage_may_still_scale_down() {
+        // Starved AND genuinely idle (ρ = 0.05 with 4 replicas): the gate
+        // only blocks scale-ups, retirement proceeds.
+        let p = ElasticPolicy { max_replicas: 8, ..Default::default() };
+        let mut s = sig(4, 100.0, 500.0);
+        s.starved_frac = 0.95;
+        let t = coordinate(&[(p, s)], None, 0.5);
+        assert!(t[0] < 4, "idle starved stage should retire replicas, got {t:?}");
+    }
+
+    #[test]
+    fn coordinate_downstream_blocked_stage_holds() {
+        let p = ElasticPolicy { max_replicas: 8, ..Default::default() };
+        let mut s = sig(1, 5_000.0, 1_000.0); // ρ = 5: wants replicas
+        s.sink_block_frac = 0.8; // but its egress is write-blocked
+        let t = coordinate(&[(p, s)], None, 0.5);
+        assert_eq!(t, vec![1], "downstream-bound stage must not scale up");
+    }
+
+    #[test]
+    fn coordinate_pressure_overrides_starvation() {
+        // A ≥ 3/4-full ingress queue proves items are waiting, so the
+        // starvation reading (e.g. a just-spawned lane's first window)
+        // cannot veto the scale-up.
+        let p = ElasticPolicy { max_replicas: 8, ..Default::default() };
+        let mut s = sig(1, 5_000.0, 1_000.0);
+        s.starved_frac = 0.9;
+        s.pressure = true;
+        let t = coordinate(&[(p, s)], None, 0.5);
+        assert!(t[0] > 1, "pressure must override the starvation gate, got {t:?}");
+    }
+
+    #[test]
+    fn coordinate_respects_worker_budget() {
+        // Two overloaded stages each advised to 5 (λ=3.5k, μ=1k, ρ=3.5 →
+        // ceil(3500/700)=5) under a budget of 6: the total is capped and
+        // the hotter stage keeps more.
+        let p = ElasticPolicy { max_replicas: 8, ..Default::default() };
+        let hot = sig(1, 4_900.0, 1_000.0);
+        let cool = sig(1, 3_500.0, 1_000.0);
+        let t = coordinate(&[(p.clone(), hot), (p, cool)], Some(6), 0.5);
+        assert!(t.iter().sum::<usize>() <= 6, "budget exceeded: {t:?}");
+        assert!(t[0] >= t[1], "hotter stage should keep more replicas: {t:?}");
+        assert!(t.iter().all(|&n| n >= 1));
+    }
+
+    #[test]
+    fn coordinate_budget_reverts_increases_before_forcing_decreases() {
+        // Stage A holds at 3 (in band); stage B wants 6. Budget 7: B's
+        // increase is trimmed to 4; A is not pushed below its current 3.
+        let p = ElasticPolicy { max_replicas: 8, ..Default::default() };
+        let a = sig(3, 2_100.0, 1_000.0); // ρ = 0.7: hold
+        let b = sig(1, 4_000.0, 1_000.0); // advised to 6
+        let t = coordinate(&[(p.clone(), a), (p, b)], Some(7), 0.5);
+        assert_eq!(t[0], 3, "in-band stage must keep its replicas: {t:?}");
+        assert_eq!(t[1], 4, "increase trimmed to fit the budget: {t:?}");
+    }
+
+    #[test]
+    fn coordinate_frozen_stage_is_untouchable_under_budget() {
+        // Over budget with one frozen stage: the frozen count survives
+        // intact and the hard cap is met by shrinking the other stage
+        // (second trim pass — the budget is a cap, not a suggestion).
+        let p = ElasticPolicy { max_replicas: 8, ..Default::default() };
+        let mut frozen = sig(2, 9_000.0, 1_000.0);
+        frozen.frozen = true;
+        let no_mu = sig(3, 9_000.0, 0.0); // unmeasured: holds, but trimmable
+        let t = coordinate(&[(p.clone(), frozen), (p, no_mu)], Some(4), 0.5);
+        assert_eq!(t[0], 2, "frozen stage must be untouched: {t:?}");
+        assert_eq!(t.iter().sum::<usize>(), 4, "hard cap: {t:?}");
+    }
+
+    #[test]
+    fn coordinate_without_budget_matches_greedy_per_stage() {
+        // No budget and no blocked signals: coordinate() degenerates to
+        // the per-stage banded rule.
+        let p = ElasticPolicy { max_replicas: 8, ..Default::default() };
+        let over = sig(1, 10_000.0, 3_000.0); // advice: ceil(10000/2100)=5
+        let idle = sig(5, 1_000.0, 3_000.0); // advice: 1
+        let hold = sig(2, 0.71 * 2.0 * 3_000.0, 3_000.0); // in band
+        let t = coordinate(&[(p.clone(), over), (p.clone(), idle), (p, hold)], None, 0.5);
+        assert_eq!(t, vec![5, 1, 2]);
     }
 }

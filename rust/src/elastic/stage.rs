@@ -356,6 +356,21 @@ impl<T: Send + 'static, U: Send + 'static> Drop for ReplicaSet<T, U> {
     }
 }
 
+/// A consistent snapshot of a stage's run-time state for one control
+/// tick: the per-lane counter deltas (service + starvation telemetry),
+/// the in-stage backlog, and the replica count they were taken at.
+#[derive(Debug, Default)]
+pub struct StageProbe {
+    /// Per-active-lane copy-and-zero counter samples (in-queue side):
+    /// `tc_head` is that replica's service transactions this tick,
+    /// `read_blocked_ns` its starved time.
+    pub samples: Vec<MonitorSample>,
+    /// Items buffered inside the stage (sum of active lane in-queues).
+    pub backlog: usize,
+    /// Active replica count at snapshot time.
+    pub replicas: usize,
+}
+
 /// Type-erased stage view for the controller (which must not know `T`/`U`).
 pub trait ElasticStage: Send + Sync {
     /// Stage name for the audit trail.
@@ -374,6 +389,18 @@ pub trait ElasticStage: Send + Sync {
     fn input_closed(&self) -> bool;
     /// Join worker threads (shutdown).
     fn join_workers(&self);
+    /// One control tick's consistent snapshot. The provided body composes
+    /// the individual accessors (three lock acquisitions); [`ReplicaSet`]
+    /// overrides it with a single-lock version so the samples, backlog,
+    /// and replica count describe the same instant even while the lane
+    /// set is mutating.
+    fn probe(&self) -> StageProbe {
+        StageProbe {
+            samples: self.lane_probe(),
+            backlog: self.backlog(),
+            replicas: self.replicas(),
+        }
+    }
 }
 
 impl<T: Send + 'static, U: Send + 'static> ElasticStage for ReplicaSet<T, U> {
@@ -400,6 +427,14 @@ impl<T: Send + 'static, U: Send + 'static> ElasticStage for ReplicaSet<T, U> {
     }
     fn join_workers(&self) {
         ReplicaSet::join_workers(self)
+    }
+    fn probe(&self) -> StageProbe {
+        let t = self.lock();
+        StageProbe {
+            samples: t.active.iter().map(|l| l.inq.counters().sample()).collect(),
+            backlog: t.active.iter().map(|l| l.inq.len()).sum(),
+            replicas: t.active.len(),
+        }
     }
 }
 

@@ -175,19 +175,48 @@ fn cmd_dualphase(args: &Args) -> i32 {
     }
 }
 
+fn report_scaling(report: &RunReport) {
+    let lines = report.scaling_timeline();
+    if !lines.is_empty() {
+        println!("scaling timeline:");
+        for line in lines {
+            println!("  {line}");
+        }
+    }
+    for b in &report.stream_blocked {
+        if b.read_frac > 0.01 || b.write_frac > 0.01 {
+            println!(
+                "  {}: starved {:.0}% / backpressured {:.0}% of the run",
+                b.label,
+                b.read_frac * 100.0,
+                b.write_frac * 100.0
+            );
+        }
+    }
+}
+
 fn cmd_matmul(args: &Args) -> i32 {
     let mut cfg = MatmulConfig::default();
     cfg.n = args.get_or("n", cfg.n).unwrap_or(cfg.n);
     cfg.dot_kernels = args.get_or("dots", cfg.dot_kernels).unwrap_or(cfg.dot_kernels);
     cfg.use_xla = args.has_flag("xla");
+    // Elastic by default; `--static` reproduces the paper's fixed fan-out.
+    if args.has_flag("static") {
+        cfg.static_degree = Some(cfg.dot_kernels);
+    }
     match matmul::run_matmul(&cfg, MonitorConfig::practical()) {
         Ok(run) => {
             let checksum: f64 = run.c.iter().map(|&x| x as f64).sum();
             println!(
-                "matmul {}×{} with {} dot kernels (xla={}), checksum {checksum:.3}",
-                cfg.n, cfg.n, cfg.dot_kernels, cfg.use_xla
+                "matmul {}×{} with {} dot kernels ({}, xla={}), checksum {checksum:.3}",
+                cfg.n,
+                cfg.n,
+                cfg.dot_kernels,
+                if cfg.static_degree.is_some() { "static" } else { "elastic" },
+                cfg.use_xla
             );
             report_rates(&run.report, "matmul");
+            report_scaling(&run.report);
             0
         }
         Err(e) => {
@@ -202,15 +231,21 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
     cfg.corpus_bytes = args.get_or("bytes", cfg.corpus_bytes).unwrap_or(cfg.corpus_bytes);
     cfg.hash_kernels = args.get_or("hash", cfg.hash_kernels).unwrap_or(cfg.hash_kernels);
     cfg.verify_kernels = args.get_or("verify", cfg.verify_kernels).unwrap_or(cfg.verify_kernels);
+    // Elastic by default; `--static` reproduces the paper's fixed mesh.
+    if args.has_flag("static") {
+        cfg.static_degree = Some(cfg.hash_kernels);
+    }
     match rabin_karp::run_rabin_karp(&cfg, MonitorConfig::practical()) {
         Ok(run) => {
             println!(
-                "rabin-karp over {} bytes: {} matches of '{}'",
+                "rabin-karp over {} bytes ({}): {} matches of '{}'",
                 cfg.corpus_bytes,
+                if cfg.static_degree.is_some() { "static" } else { "elastic" },
                 run.matches.len(),
                 cfg.pattern
             );
             report_rates(&run.report, "rabinkarp");
+            report_scaling(&run.report);
             0
         }
         Err(e) => {

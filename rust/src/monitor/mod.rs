@@ -101,7 +101,9 @@ pub struct MonitorConfig {
     /// distribution classification alongside each converged estimate.
     pub classify: bool,
     /// §III resize trick: grow a persistently-full queue by this factor to
-    /// open a non-blocking write window (1.0 disables).
+    /// open a non-blocking write window (1.0 disables — the scheduler
+    /// forces 1.0 when an elastic controller manages the stream's
+    /// capacity, so only one control loop ever resizes a queue).
     pub resize_factor: f64,
     /// Consecutive write-blocked periods before the resize trick fires.
     pub resize_after_blocked: u32,
@@ -306,8 +308,12 @@ impl QueueMonitor {
                 write_blocked_run = 0;
                 // Decay capacity back toward the configured size once the
                 // pressure is gone (one step per period to avoid thrash).
+                // Gated with the growth path on `resize_factor > 1.0`: when
+                // an elastic controller owns the stream's capacity the
+                // scheduler hands monitors `resize_factor = 1.0` and this
+                // loop must not touch capacity at all (single-owner rule).
                 let cap = self.handle.capacity();
-                if cap > base_capacity {
+                if self.cfg.resize_factor > 1.0 && cap > base_capacity {
                     let shrunk =
                         ((cap as f64) / self.cfg.resize_factor).ceil() as usize;
                     self.handle.set_capacity(shrunk.max(base_capacity));

@@ -21,7 +21,8 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use crate::elastic::{
-    ElasticConfig, ElasticController, ElasticEvent, StageBinding, StreamBinding,
+    ElasticConfig, ElasticController, ElasticEvent, StageBinding, StageTrajectory,
+    StreamBinding,
 };
 use crate::estimator::RateEstimate;
 use crate::kernel::{KernelContext, KernelStatus};
@@ -52,6 +53,25 @@ pub struct RunReport {
     pub stream_totals: HashMap<String, (u64, u64)>,
     /// Audit trail of every control-plane action (replication + resizes).
     pub elastic_events: Vec<ElasticEvent>,
+    /// Per-stream blocked-duration fractions of the kernel-phase wall
+    /// clock: how much of the run each stream's consumer lost to
+    /// starvation (`read_frac`) and its producer to backpressure
+    /// (`write_frac`).
+    pub stream_blocked: Vec<StreamBlocked>,
+    /// Per-stage replica counts over the run (initial point + one point
+    /// per scaling action) — the scaling timeline of an elastic run.
+    pub replica_trajectories: Vec<StageTrajectory>,
+}
+
+/// Fraction of a run one stream spent blocked, per end.
+#[derive(Debug, Clone)]
+pub struct StreamBlocked {
+    /// Stream label ("kernelA.port -> kernelB.port").
+    pub label: String,
+    /// Consumer blocked-on-empty time / wall time (starvation).
+    pub read_frac: f64,
+    /// Producer blocked-on-full time / wall time (backpressure).
+    pub write_frac: f64,
 }
 
 impl RunReport {
@@ -86,6 +106,31 @@ impl RunReport {
     /// Replication actions (scale-up/down) in the audit trail.
     pub fn scale_actions(&self) -> usize {
         self.elastic_events.iter().filter(|e| e.is_scale()).count()
+    }
+
+    /// Blocked fractions for one stream by label, if recorded.
+    pub fn blocked_for(&self, label: &str) -> Option<&StreamBlocked> {
+        self.stream_blocked.iter().find(|b| b.label == label)
+    }
+
+    /// Human-readable scaling timeline: one line per stage trajectory,
+    /// then the audited control actions in order — what an app run prints
+    /// to show how the control plane behaved.
+    pub fn scaling_timeline(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        for tr in &self.replica_trajectories {
+            let path = tr
+                .points
+                .iter()
+                .map(|(t, r)| format!("{r}@{:.3}s", *t as f64 / 1.0e9))
+                .collect::<Vec<_>>()
+                .join(" -> ");
+            lines.push(format!("stage {}: replicas {path}", tr.stage));
+        }
+        for ev in &self.elastic_events {
+            lines.push(ev.to_string());
+        }
+        lines
     }
 }
 
@@ -135,17 +180,14 @@ impl Scheduler {
         // table is consumed) -----------------------------------------------
         let mut stage_bindings: Vec<StageBinding> = Vec::new();
         for decl in &self.topo.elastic {
-            let upstream = self
-                .topo
-                .streams
-                .iter()
-                .find(|e| e.dst == decl.split)
-                .map(|e| StreamBinding {
-                    id: e.id,
-                    label: e.label.clone(),
-                    handle: e.monitor.clone(),
-                });
-            stage_bindings.push(StageBinding { stage: decl.stage.clone(), upstream });
+            let bind = |e: &crate::topology::StreamEdge| StreamBinding {
+                id: e.id,
+                label: e.label.clone(),
+                handle: e.monitor.clone(),
+            };
+            let upstream = self.topo.streams.iter().find(|e| e.dst == decl.split).map(bind);
+            let downstream = self.topo.streams.iter().find(|e| e.src == decl.merge).map(bind);
+            stage_bindings.push(StageBinding { stage: decl.stage.clone(), upstream, downstream });
         }
         let use_controller = !stage_bindings.is_empty() || self.elastic_forced;
         let stream_bindings: Vec<StreamBinding> = if use_controller {
@@ -190,12 +232,20 @@ impl Scheduler {
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel::<MonitorEvent>();
         let mut monitor_threads = Vec::new();
+        // Single-owner capacity rule: when the elastic controller manages
+        // the monitored streams (buffer advice on), the monitors' own §III
+        // resize trick is retired so exactly one loop touches capacity —
+        // previously both mutated it independently.
+        let mut per_stream_cfg = self.monitor_cfg.clone();
+        if use_controller && self.elastic_cfg.buffer_advice {
+            per_stream_cfg.resize_factor = 1.0;
+        }
         if self.monitor_cfg.enabled {
             for edge in self.topo.streams.iter().filter(|e| e.config.instrument) {
                 let m = QueueMonitor::new(
                     edge.id,
                     edge.monitor.clone(),
-                    self.monitor_cfg.clone(),
+                    per_stream_cfg.clone(),
                     tx.clone(),
                     stop.clone(),
                 );
@@ -277,14 +327,23 @@ impl Scheduler {
             t.join().map_err(|_| SfError::Scheduler("monitor thread panicked".into()))?;
         }
         ctl_stop.store(true, Ordering::Relaxed);
-        let elastic_events = match ctl_thread {
-            Some(t) => t
-                .join()
-                .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?,
-            None => Vec::new(),
-        };
+        let (elastic_events, replica_trajectories): (Vec<ElasticEvent>, Vec<StageTrajectory>) =
+            match ctl_thread {
+                Some(t) => {
+                    let outcome = t
+                        .join()
+                        .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?;
+                    (outcome.events, outcome.trajectories)
+                }
+                None => (Vec::new(), Vec::new()),
+            };
 
-        let mut report = RunReport { wall_ns, elastic_events, ..Default::default() };
+        let mut report = RunReport {
+            wall_ns,
+            elastic_events,
+            replica_trajectories,
+            ..Default::default()
+        };
         while let Ok(ev) = drain_rx.try_recv() {
             match ev {
                 MonitorEvent::Converged { stream, end, estimate } => {
@@ -310,6 +369,15 @@ impl Scheduler {
             report
                 .stream_totals
                 .insert(edge.label.clone(), (c.total_pushes(), c.total_pops()));
+            // Blocked-duration fractions of the kernel-phase wall clock:
+            // which streams lost time to backpressure vs starvation. The
+            // accumulators are monotonic, so this is a free end-of-run read.
+            let wall = wall_ns.max(1) as f64;
+            report.stream_blocked.push(StreamBlocked {
+                label: edge.label.clone(),
+                read_frac: (c.total_read_blocked_ns() as f64 / wall).min(1.0),
+                write_frac: (c.total_write_blocked_ns() as f64 / wall).min(1.0),
+            });
         }
         Ok(report)
     }

@@ -1,0 +1,200 @@
+//! The elastic applications end to end: the migrated matmul and
+//! Rabin–Karp apps must produce outputs identical to their static
+//! baselines across seeds/configs, and the coordinated control plane must
+//! replicate the loaded stage of a coupled pipeline while refusing the
+//! starvation-bound one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use streamflow::apps::matmul::{matmul_ref, random_matrix, run_matmul};
+use streamflow::apps::rabin_karp::{foobar_corpus, naive_matches, run_rabin_karp};
+use streamflow::config::{MatmulConfig, RabinKarpConfig};
+use streamflow::elastic::{ElasticAction, ElasticConfig, ElasticStageConfig};
+use streamflow::kernel::ClosureSink;
+use streamflow::prelude::*;
+use streamflow::workload::{Item, PacedProducer, PhasedServiceWorker};
+
+#[test]
+fn elastic_matmul_is_bit_identical_to_static_across_seeds() {
+    for seed in [0xA11CE, 7, 0xDEAD_BEEF] {
+        let base = MatmulConfig {
+            n: 96,
+            dot_kernels: 3,
+            block_rows: 8,
+            seed,
+            ..Default::default()
+        };
+        let elastic = run_matmul(&base, MonitorConfig::disabled()).unwrap();
+        let mut fixed_cfg = base.clone();
+        fixed_cfg.static_degree = Some(3);
+        let fixed = run_matmul(&fixed_cfg, MonitorConfig::disabled()).unwrap();
+        // Per-block compute is byte-for-byte the same code in both
+        // wirings and blocks land in C by row index, so the products are
+        // bit-identical — not merely close.
+        assert_eq!(elastic.c, fixed.c, "seed {seed:#x}: elastic vs static C differ");
+        let a = random_matrix(base.n, seed);
+        let b = random_matrix(base.n, seed ^ 0xFEED);
+        let expect = matmul_ref(&a, &b, base.n);
+        for (i, (&got, &want)) in elastic.c.iter().zip(&expect).enumerate() {
+            assert!((got - want).abs() < 1e-3, "seed {seed:#x} C[{i}]: {got} vs {want}");
+        }
+        // The control plane ran and recorded the dot stage's trajectory.
+        assert_eq!(elastic.report.replica_trajectories.len(), 1);
+        assert!(!elastic.report.replica_trajectories[0].points.is_empty());
+        assert!(fixed.report.replica_trajectories.is_empty(), "static run has no controller");
+    }
+}
+
+#[test]
+fn elastic_rabin_karp_matches_static_across_configs() {
+    let configs: [(usize, &str, usize, usize, usize); 3] = [
+        (4096, "foobar", 3, 2, 512),
+        (6000, "barfoo", 2, 2, 777),
+        (600, "foobar", 2, 1, 7), // pathological segments straddling matches
+    ];
+    for (corpus_bytes, pattern, n, j, segment_bytes) in configs {
+        let base = RabinKarpConfig {
+            corpus_bytes,
+            pattern: pattern.to_string(),
+            hash_kernels: n,
+            verify_kernels: j,
+            segment_bytes,
+            ..Default::default()
+        };
+        let elastic = run_rabin_karp(&base, MonitorConfig::disabled()).unwrap();
+        let mut fixed_cfg = base.clone();
+        fixed_cfg.static_degree = Some(n);
+        let fixed = run_rabin_karp(&fixed_cfg, MonitorConfig::disabled()).unwrap();
+        // Both sides are order-normalized (sorted, deduplicated), so
+        // equality is exact.
+        assert_eq!(
+            elastic.matches, fixed.matches,
+            "cfg ({corpus_bytes}, {pattern}, {n}, {j}, {segment_bytes}): elastic vs static"
+        );
+        let corpus = foobar_corpus(corpus_bytes);
+        assert_eq!(elastic.matches, naive_matches(&corpus, pattern.as_bytes()));
+        assert_eq!(
+            elastic.report.replica_trajectories.len(),
+            2,
+            "hash + verify stages under one controller"
+        );
+    }
+}
+
+/// A replica body with no work: its stage is starvation-bound whenever it
+/// has fewer arrivals than it can swallow (always, here).
+struct Ident;
+impl Replicable for Ident {
+    type In = Item;
+    type Out = Item;
+    fn process(&mut self, v: Item) -> Item {
+        v
+    }
+}
+
+#[test]
+fn coordinated_controller_scales_loaded_stage_and_refuses_starved_one() {
+    // prod (2k items/s) → work (2 ms/item: overloaded) → relay (instant:
+    // starved) → sink. The joint policy must replicate `work` and must
+    // never scale up `relay` — the acceptance property of the coordinated
+    // control plane, on a real scheduled pipeline.
+    let rate = 2_000.0;
+    let items = 2_500u64;
+    let mut topo = Topology::new("coupled");
+    let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
+        "prod", rate, items,
+    )));
+    let stage_cfg = |max: usize| ElasticStageConfig {
+        policy: ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: max,
+            cooldown_ticks: 4,
+        },
+        initial_replicas: 1,
+        lane_capacity: 128,
+    };
+    let (work_split, work_merge) = topo
+        .add_elastic_stage("work", stage_cfg(4), |_| {
+            PhasedServiceWorker::new(2_000_000, 2_000_000, 0)
+        })
+        .unwrap();
+    let (relay_split, relay_merge) =
+        topo.add_elastic_stage("relay", stage_cfg(4), |_| Ident).unwrap();
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let mut expect = 0u64;
+    let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |v: Item| {
+        assert_eq!(v, expect, "reordered delivery");
+        expect += 1;
+        c2.fetch_add(1, Ordering::Relaxed);
+    })));
+    topo.connect::<Item>(p, 0, work_split, 0, StreamConfig::default().with_capacity(1024))
+        .unwrap();
+    topo.connect::<Item>(
+        work_merge,
+        0,
+        relay_split,
+        0,
+        StreamConfig::default().with_capacity(1024),
+    )
+    .unwrap();
+    topo.connect::<Item>(relay_merge, 0, snk, 0, StreamConfig::default().with_capacity(1024))
+        .unwrap();
+
+    let report = Scheduler::new(topo)
+        .with_elastic(ElasticConfig {
+            tick: Duration::from_millis(5),
+            buffer_advice: false,
+            worker_budget: Some(6),
+            ..Default::default()
+        })
+        .run()
+        .unwrap();
+
+    assert_eq!(count.load(Ordering::Relaxed), items, "item loss through the coupled stages");
+    let ups_work = report
+        .elastic_events
+        .iter()
+        .filter(|e| e.target == "work" && matches!(e.action, ElasticAction::ScaleUp { .. }))
+        .count();
+    assert!(
+        ups_work >= 1,
+        "overloaded stage never replicated: {:?}",
+        report.elastic_events
+    );
+    let ups_relay = report
+        .elastic_events
+        .iter()
+        .filter(|e| e.target == "relay" && matches!(e.action, ElasticAction::ScaleUp { .. }))
+        .count();
+    assert_eq!(
+        ups_relay, 0,
+        "starvation-bound stage was scaled up: {:?}",
+        report.elastic_events
+    );
+    // Every audited scale-up carries its telemetry, and none fired on a
+    // starvation-bound reading (the coordinated gate's invariant).
+    for ev in report.elastic_events.iter() {
+        if matches!(ev.action, ElasticAction::ScaleUp { .. }) {
+            assert!(ev.mu_items > 0.0 && ev.lambda_items > 0.0, "{ev}");
+            assert!(
+                ev.pressure || ev.starved_frac < 0.5,
+                "scale-up on a starved reading: {ev}"
+            );
+        }
+    }
+    // Both stages' trajectories are recorded; `work`'s is non-trivial.
+    assert_eq!(report.replica_trajectories.len(), 2);
+    let work_tr = report
+        .replica_trajectories
+        .iter()
+        .find(|t| t.stage == "work")
+        .expect("work trajectory");
+    assert!(work_tr.points.len() >= 2, "no replication recorded: {work_tr:?}");
+    // Blocked fractions were threaded through to the report.
+    assert_eq!(report.stream_blocked.len(), 3, "one entry per stream");
+}
