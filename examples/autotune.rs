@@ -14,7 +14,7 @@ use streamflow::control::{parallelism_advice, BufferAdvisor, RateRegistry};
 use streamflow::monitor::QueueEnd;
 use streamflow::prelude::*;
 use streamflow::rng::dist::DistKind;
-use streamflow::workload::{RateControlledConsumer, RateControlledProducer, WorkloadSpec, ITEM_BYTES};
+use streamflow::workload::{tandem, WorkloadSpec, ITEM_BYTES};
 
 fn run_once(
     rate: f64,
@@ -24,27 +24,17 @@ fn run_once(
     monitor_tail: bool,
 ) -> streamflow::Result<(RunReport, StreamId)> {
     let items = (arrival.min(rate) * 1.0e6 / ITEM_BYTES as f64 * secs) as u64;
-    let mut topo = Topology::new("autotune");
-    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "producer",
+    let t = tandem(
+        "autotune",
         WorkloadSpec::single(DistKind::Exponential, arrival, 11),
-        items,
-    )));
-    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "consumer",
         WorkloadSpec::single(DistKind::Exponential, rate, 13),
-    )));
-    let sid = topo.connect::<u64>(
-        p,
-        0,
-        c,
-        0,
+        items,
         StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
     )?;
     let mut mcfg = streamflow::campaign::campaign_monitor();
     mcfg.instrument_tail = monitor_tail;
-    let report = Scheduler::new(topo).with_monitoring(mcfg).run()?;
-    Ok((report, sid))
+    let report = Session::run(t.topology, RunOptions::monitored(mcfg))?;
+    Ok((report, t.stream))
 }
 
 fn main() -> streamflow::Result<()> {

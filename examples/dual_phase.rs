@@ -37,5 +37,10 @@ fn main() -> streamflow::Result<()> {
         "classification (20% criterion): {:?}   [paper Fig. 15 categories]",
         classify_dual(&run.estimates, rate_a, rate_b, 20.0)
     );
+    // Campaign runs now carry the control-plane timeline; the plain
+    // tandem has no elastic stages, so this is empty unless one is added.
+    for line in &run.scaling {
+        println!("  {line}");
+    }
     Ok(())
 }

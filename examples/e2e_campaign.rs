@@ -20,6 +20,7 @@ use streamflow::campaign::{
     run_dual, single_phase_campaign, tally, PhaseClass,
 };
 use streamflow::config::{env_f64, env_usize, MatmulConfig, MicrobenchConfig, RabinKarpConfig};
+use streamflow::flow::{RunOptions, Session};
 use streamflow::monitor::MonitorConfig;
 use streamflow::rng::dist::DistKind;
 use streamflow::rng::Xoshiro256pp;
@@ -139,7 +140,10 @@ fn applications() -> streamflow::Result<()> {
     // Matrix multiply on the elastic control plane (up to 5 dot replicas),
     // reduce side instrumented.
     let mm = MatmulConfig::default();
-    let run = matmul::run_matmul(&mm, streamflow::campaign::campaign_monitor())?;
+    let run = matmul::run_matmul(
+        &mm,
+        RunOptions::monitored(streamflow::campaign::campaign_monitor()),
+    )?;
     let ests: Vec<f64> = run
         .reduce_streams
         .iter()
@@ -159,10 +163,16 @@ fn applications() -> streamflow::Result<()> {
         let hi = ests.iter().cloned().fold(0.0, f64::max);
         println!("    estimate range: {lo:.4} – {hi:.4} MB/s per queue");
     }
+    for line in run.report.scaling_timeline() {
+        println!("    {line}");
+    }
 
     // Rabin–Karp: verify queues at very low ρ.
     let rk = RabinKarpConfig::default();
-    let run = rabin_karp::run_rabin_karp(&rk, streamflow::campaign::campaign_monitor())?;
+    let run = rabin_karp::run_rabin_karp(
+        &rk,
+        RunOptions::monitored(streamflow::campaign::campaign_monitor()),
+    )?;
     let n_conv: usize = run.verify_streams.iter().map(|s| run.report.rates_for(*s).len()).sum();
     println!(
         "  rabin-karp {} MiB: wall {:.2} s, {} matches, {} converged verify-queue estimates \
@@ -172,6 +182,9 @@ fn applications() -> streamflow::Result<()> {
         run.matches.len(),
         n_conv
     );
+    for line in run.report.scaling_timeline() {
+        println!("    {line}");
+    }
     Ok(())
 }
 
@@ -183,25 +196,11 @@ fn overhead(secs: f64) -> streamflow::Result<()> {
     let mut off = Vec::new();
     for monitored in [true, false] {
         for i in 0..reps {
-            let mut topo = streamflow::topology::Topology::new("ovh");
-            let p = topo.add_kernel(Box::new(
-                streamflow::workload::RateControlledProducer::new(
-                    "p",
-                    streamflow::workload::WorkloadSpec::fixed_rate_mbps(8.0),
-                    (secs * 1.0e6) as u64, // 8 MB/s → 1e6 items/s
-                ),
-            ));
-            let c = topo.add_kernel(Box::new(
-                streamflow::workload::RateControlledConsumer::new(
-                    "c",
-                    streamflow::workload::WorkloadSpec::fixed_rate_mbps(4.0),
-                ),
-            ));
-            topo.connect::<u64>(
-                p,
-                0,
-                c,
-                0,
+            let t = streamflow::workload::tandem(
+                "ovh",
+                streamflow::workload::WorkloadSpec::fixed_rate_mbps(8.0),
+                streamflow::workload::WorkloadSpec::fixed_rate_mbps(4.0),
+                (secs * 1.0e6) as u64, // 8 MB/s → 1e6 items/s
                 streamflow::queue::StreamConfig::default().with_capacity(1024).with_item_bytes(8),
             )?;
             let mcfg = if monitored {
@@ -209,7 +208,7 @@ fn overhead(secs: f64) -> streamflow::Result<()> {
             } else {
                 MonitorConfig::disabled()
             };
-            let rep = streamflow::scheduler::Scheduler::new(topo).with_monitoring(mcfg).run()?;
+            let rep = Session::run(t.topology, RunOptions::monitored(mcfg))?;
             if monitored {
                 on.push(rep.wall_ns as f64);
             } else {

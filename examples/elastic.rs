@@ -27,36 +27,37 @@ fn main() -> streamflow::Result<()> {
     let time = TimeRef::new();
     let switch_at = time.now_ns() + ((secs / 3.0) * 1.0e9) as u64;
 
-    let mut topo = Topology::new("elastic-demo");
-    let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
-        "prod", rate, items,
-    )));
     let stage_cfg = ElasticStageConfig {
         policy: ElasticPolicy { max_replicas, ..Default::default() },
         initial_replicas: 1,
         lane_capacity: 256,
     };
-    // 250 µs → 1 ms service per item: 4k/s → 1k/s per replica.
-    let (split, merge) = topo.add_elastic_stage("work", stage_cfg, move |_| {
-        PhasedServiceWorker::new(250_000, 1_000_000, switch_at)
-    })?;
     let delivered = Arc::new(AtomicU64::new(0));
     let d2 = delivered.clone();
-    let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |_: Item| {
-        d2.fetch_add(1, Ordering::Relaxed);
-    })));
-    topo.connect::<Item>(p, 0, split, 0, StreamConfig::default().with_capacity(2048))?;
-    topo.connect::<Item>(merge, 0, snk, 0, StreamConfig::default().with_capacity(2048))?;
+
+    // The whole pipeline is one typed chain: producer → replicable stage
+    // → sink, no port indices, the Item type checked at compile time.
+    // 250 µs → 1 ms service per item: 4k/s → 1k/s per replica.
+    let flow = Flow::new("elastic-demo")
+        .stream_defaults(StreamConfig::default().with_capacity(2048))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec("prod", rate, items)))
+        .elastic("work", stage_cfg, move |_| {
+            PhasedServiceWorker::new(250_000, 1_000_000, switch_at)
+        })?
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            d2.fetch_add(1, Ordering::Relaxed);
+        })))?;
 
     println!(
         "offered {rate:.0} items/s for {secs}s; per-replica service rate drops \
          4x at t = {:.1}s; target rho 0.7, max {max_replicas} replicas",
         secs / 3.0
     );
-    let report = Scheduler::new(topo)
-        .with_monitoring(MonitorConfig::practical())
-        .with_elastic(ElasticConfig { tick: Duration::from_millis(10), ..Default::default() })
-        .run()?;
+    let report = Session::run(
+        flow.finish(),
+        RunOptions::monitored(MonitorConfig::practical())
+            .with_elastic(ElasticConfig { tick: Duration::from_millis(10), ..Default::default() }),
+    )?;
 
     println!(
         "delivered {} / {items} items in {:.2}s",

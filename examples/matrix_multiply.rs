@@ -13,7 +13,7 @@ use streamflow::apps::matmul::{matmul_ref, random_matrix, run_matmul};
 use streamflow::campaign::campaign_monitor;
 use streamflow::cli::Args;
 use streamflow::config::MatmulConfig;
-use streamflow::monitor::MonitorConfig;
+use streamflow::flow::RunOptions;
 use streamflow::report::Summary;
 
 fn main() -> streamflow::Result<()> {
@@ -39,7 +39,7 @@ fn main() -> streamflow::Result<()> {
         if cfg.use_xla { "xla artifact" } else { "native" }
     );
 
-    let run = run_matmul(&cfg, campaign_monitor())?;
+    let run = run_matmul(&cfg, RunOptions::monitored(campaign_monitor()))?;
     println!("wall time: {:.3} s", run.report.wall_secs());
 
     // Verify against the reference product.
@@ -89,7 +89,7 @@ fn fig2_buffer_sweep(base: &MatmulConfig) -> streamflow::Result<()> {
         cfg.static_degree = Some(cfg.dot_kernels);
         let mut times = Vec::new();
         for _ in 0..5 {
-            let run = run_matmul(&cfg, MonitorConfig::disabled())?;
+            let run = run_matmul(&cfg, RunOptions::default())?;
             times.push(run.report.wall_ns as f64 / 1.0e6);
         }
         let s = Summary::of(&times);

@@ -1,5 +1,5 @@
 //! Quickstart: the paper's Fig.-1 system — two kernels, one stream, one
-//! monitor — in ~40 lines.
+//! monitor — in ~40 lines of the typed `flow` API.
 //!
 //! A producer generates 8-byte items at ~6 MB/s; a consumer processes them
 //! at a *set* rate of 2.5 MB/s (exponential service times). The monitor
@@ -11,32 +11,31 @@
 use streamflow::campaign::campaign_monitor;
 use streamflow::prelude::*;
 use streamflow::rng::dist::DistKind;
-use streamflow::workload::{RateControlledConsumer, RateControlledProducer, WorkloadSpec, ITEM_BYTES};
+use streamflow::workload::{
+    RateControlledConsumer, RateControlledProducer, WorkloadSpec, ITEM_BYTES,
+};
 
 fn main() -> Result<()> {
     let set_rate_mbps = 2.5;
     let items = 600_000; // ≈ 2 s at the bottleneck rate
 
-    let mut topo = Topology::new("quickstart");
-    let producer = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "producer",
-        WorkloadSpec::single(DistKind::Exponential, 6.0, 1),
-        items,
-    )));
-    let consumer = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "consumer",
-        WorkloadSpec::single(DistKind::Exponential, set_rate_mbps, 2),
-    )));
-    let stream = topo.connect::<u64>(
-        producer,
-        0,
-        consumer,
-        0,
-        StreamConfig::default().with_capacity(1024).with_item_bytes(ITEM_BYTES),
-    )?;
+    // The fluent builder: source → sink, ports auto-assigned, the stream
+    // type (u64) checked end to end at compile time.
+    let flow = Flow::new("quickstart")
+        .stream_defaults(StreamConfig::default().with_capacity(1024).with_item_bytes(ITEM_BYTES))
+        .source::<u64>(Box::new(RateControlledProducer::new(
+            "producer",
+            WorkloadSpec::single(DistKind::Exponential, 6.0, 1),
+            items,
+        )))
+        .sink(Box::new(RateControlledConsumer::new(
+            "consumer",
+            WorkloadSpec::single(DistKind::Exponential, set_rate_mbps, 2),
+        )))?;
+    let stream = flow.last_stream().expect("one stream");
 
     println!("running: producer 6 MB/s → [queue] → consumer {set_rate_mbps} MB/s (set)");
-    let report = Scheduler::new(topo).with_monitoring(campaign_monitor()).run()?;
+    let report = Session::run(flow.finish(), RunOptions::monitored(campaign_monitor()))?;
 
     println!("wall time: {:.2} s", report.wall_secs());
     let rates = report.rates_for(stream);

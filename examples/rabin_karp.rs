@@ -9,6 +9,7 @@ use streamflow::apps::rabin_karp::{foobar_corpus, naive_matches, run_rabin_karp}
 use streamflow::campaign::campaign_monitor;
 use streamflow::cli::Args;
 use streamflow::config::RabinKarpConfig;
+use streamflow::flow::RunOptions;
 
 fn main() -> streamflow::Result<()> {
     let args = Args::from_env()?;
@@ -33,7 +34,7 @@ fn main() -> streamflow::Result<()> {
         if cfg.static_degree.is_some() { "static" } else { "elastic" }
     );
 
-    let run = run_rabin_karp(&cfg, campaign_monitor())?;
+    let run = run_rabin_karp(&cfg, RunOptions::monitored(campaign_monitor()))?;
     println!(
         "wall time {:.3} s, throughput {:.1} MB/s, {} matches",
         run.report.wall_secs(),

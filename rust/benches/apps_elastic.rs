@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use streamflow::apps::matmul::run_matmul;
 use streamflow::apps::rabin_karp::{foobar_corpus, naive_matches, run_rabin_karp};
 use streamflow::config::{env_f64, env_usize, Json, MatmulConfig, RabinKarpConfig};
-use streamflow::monitor::MonitorConfig;
+use streamflow::flow::RunOptions;
 use streamflow::report::figures_dir;
 use streamflow::scheduler::RunReport;
 
@@ -75,8 +75,8 @@ fn bench_matmul(scale: f64) -> Json {
     };
     let mut static_cfg = base.clone();
     static_cfg.static_degree = Some(base.dot_kernels);
-    let fixed = run_matmul(&static_cfg, MonitorConfig::disabled()).expect("static matmul");
-    let elastic = run_matmul(&base, MonitorConfig::disabled()).expect("elastic matmul");
+    let fixed = run_matmul(&static_cfg, RunOptions::default()).expect("static matmul");
+    let elastic = run_matmul(&base, RunOptions::default()).expect("elastic matmul");
     let outputs_match = fixed.c == elastic.c;
     assert!(outputs_match, "matmul: elastic C differs from static C");
     let (ss, es) = (fixed.report.wall_secs(), elastic.report.wall_secs());
@@ -107,8 +107,8 @@ fn bench_rabin_karp(scale: f64) -> Json {
     };
     let mut static_cfg = base.clone();
     static_cfg.static_degree = Some(base.hash_kernels);
-    let fixed = run_rabin_karp(&static_cfg, MonitorConfig::disabled()).expect("static rk");
-    let elastic = run_rabin_karp(&base, MonitorConfig::disabled()).expect("elastic rk");
+    let fixed = run_rabin_karp(&static_cfg, RunOptions::default()).expect("static rk");
+    let elastic = run_rabin_karp(&base, RunOptions::default()).expect("elastic rk");
     let corpus = foobar_corpus(bytes);
     let oracle = naive_matches(&corpus, base.pattern.as_bytes());
     let outputs_match = fixed.matches == oracle && elastic.matches == oracle;

@@ -51,10 +51,6 @@ fn run_case(elastic: bool, secs: f64) -> CaseResult {
     let t0 = time.now_ns();
     let switch_at = t0 + ((secs / 3.0) * 1.0e9) as u64;
 
-    let mut topo = Topology::new(if elastic { "elastic" } else { "static" });
-    let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
-        "prod", rate, items,
-    )));
     let policy = if elastic {
         ElasticPolicy {
             target_rho: 0.7,
@@ -68,21 +64,21 @@ fn run_case(elastic: bool, secs: f64) -> CaseResult {
     };
     let stage_cfg =
         ElasticStageConfig { policy, initial_replicas: 1, lane_capacity: 256 };
-    // 250 µs → 1 ms per item: the 4× non-blocking service-rate drop.
-    let (split, merge) = topo
-        .add_elastic_stage("work", stage_cfg, move |_| {
-            PhasedServiceWorker::new(250_000, 1_000_000, switch_at)
-        })
-        .expect("stage");
     let delivered = Arc::new(AtomicU64::new(0));
     let d2 = delivered.clone();
-    let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |_: Item| {
-        d2.fetch_add(1, Ordering::Relaxed);
-    })));
-    topo.connect::<Item>(p, 0, split, 0, StreamConfig::default().with_capacity(2048))
-        .expect("wire producer");
-    topo.connect::<Item>(merge, 0, snk, 0, StreamConfig::default().with_capacity(2048))
+    // 250 µs → 1 ms per item: the 4× non-blocking service-rate drop.
+    let flow = Flow::new(if elastic { "elastic" } else { "static" })
+        .stream_defaults(StreamConfig::default().with_capacity(2048))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec("prod", rate, items)))
+        .elastic("work", stage_cfg, move |_| {
+            PhasedServiceWorker::new(250_000, 1_000_000, switch_at)
+        })
+        .expect("stage")
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            d2.fetch_add(1, Ordering::Relaxed);
+        })))
         .expect("wire sink");
+    let topo = flow.finish();
 
     // Observe the stage from outside while the scheduler owns the topology.
     let stage = topo.elastic_stages()[0].stage.clone();
@@ -105,11 +101,12 @@ fn run_case(elastic: bool, secs: f64) -> CaseResult {
         })
     };
 
-    let report = Scheduler::new(topo)
-        .with_monitoring(MonitorConfig::practical())
-        .with_elastic(ElasticConfig { tick: Duration::from_millis(10), ..Default::default() })
-        .run()
-        .expect("run");
+    let report = Session::run(
+        topo,
+        RunOptions::monitored(MonitorConfig::practical())
+            .with_elastic(ElasticConfig { tick: Duration::from_millis(10), ..Default::default() }),
+    )
+    .expect("run");
     sampling.store(false, Ordering::Relaxed);
     let samples = sampler.join().expect("sampler");
 

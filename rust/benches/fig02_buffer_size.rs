@@ -8,7 +8,7 @@
 
 use streamflow::apps::matmul::run_matmul;
 use streamflow::config::{env_usize, MatmulConfig};
-use streamflow::monitor::MonitorConfig;
+use streamflow::flow::RunOptions;
 use streamflow::report::{Summary, Table};
 
 fn main() {
@@ -24,7 +24,7 @@ fn main() {
         let cfg = MatmulConfig { n, capacity: cap, static_degree: Some(5), ..Default::default() };
         let mut times = Vec::new();
         for _ in 0..reps {
-            let run = run_matmul(&cfg, MonitorConfig::disabled()).expect("matmul run");
+            let run = run_matmul(&cfg, RunOptions::default()).expect("matmul run");
             times.push(run.report.wall_ns as f64 / 1.0e6);
         }
         let s = Summary::of(&times);

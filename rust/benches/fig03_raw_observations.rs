@@ -12,28 +12,24 @@ use streamflow::prelude::*;
 use streamflow::queue::StreamConfig;
 use streamflow::report::{Cell, Table};
 use streamflow::rng::dist::DistKind;
-use streamflow::workload::{RateControlledConsumer, RateControlledProducer, WorkloadSpec};
+use streamflow::workload::{tandem, WorkloadSpec};
 
 fn main() {
     let samples = env_usize("SF_SAMPLES", 2000);
     let set_mbps = 2.0;
 
-    let mut topo = Topology::new("fig03");
-    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "producer",
+    let t = tandem(
+        "fig03",
         WorkloadSpec::single(DistKind::Deterministic, 6.0, 3),
-        3_000_000,
-    )));
-    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "consumer",
         WorkloadSpec::single(DistKind::Deterministic, set_mbps, 4),
-    )));
-    topo.connect::<u64>(p, 0, c, 0, StreamConfig::default().with_capacity(2048).with_item_bytes(8))
-        .expect("connect");
+        3_000_000,
+        StreamConfig::default().with_capacity(2048).with_item_bytes(8),
+    )
+    .expect("tandem");
 
     let mut mcfg = streamflow::campaign::campaign_monitor();
     mcfg.raw_tap = Some(samples);
-    let report = Scheduler::new(topo).with_monitoring(mcfg).run().expect("run");
+    let report = Session::run(t.topology, RunOptions::monitored(mcfg)).expect("run");
 
     let mut table = Table::new(
         "fig03_raw_observations",

@@ -9,7 +9,7 @@
 use streamflow::apps::matmul::run_matmul;
 use streamflow::campaign::campaign_monitor;
 use streamflow::config::{env_usize, MatmulConfig};
-use streamflow::monitor::MonitorConfig;
+use streamflow::flow::RunOptions;
 use streamflow::report::{Cell, Table};
 
 fn main() {
@@ -22,7 +22,7 @@ fn main() {
     // Manual ground-truth band: per-queue byte rate with monitoring off.
     let mut manual = Vec::new();
     for _ in 0..reps {
-        let run = run_matmul(&cfg, MonitorConfig::disabled()).expect("bare run");
+        let run = run_matmul(&cfg, RunOptions::default()).expect("bare run");
         let secs = run.report.wall_secs();
         for (_, (pushes, _)) in
             run.report.stream_totals.iter().filter(|(l, _)| l.contains("-> reduce"))
@@ -41,7 +41,7 @@ fn main() {
     let mut total = 0usize;
     let mut in_range = 0usize;
     for rep in 0..reps {
-        let run = run_matmul(&cfg, campaign_monitor()).expect("monitored run");
+        let run = run_matmul(&cfg, RunOptions::monitored(campaign_monitor())).expect("monitored run");
         let mut idx = 0u64;
         for sid in &run.reduce_streams {
             for est in run.report.rates_for(*sid) {

@@ -9,7 +9,7 @@
 use streamflow::apps::rabin_karp::run_rabin_karp;
 use streamflow::campaign::campaign_monitor;
 use streamflow::config::{env_usize, RabinKarpConfig};
-use streamflow::monitor::MonitorConfig;
+use streamflow::flow::RunOptions;
 use streamflow::report::{Cell, Table};
 
 fn main() {
@@ -23,7 +23,7 @@ fn main() {
     // Manual band: candidate-rate into verify kernels with monitoring off.
     let mut manual = Vec::new();
     for _ in 0..reps.min(2) {
-        let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).expect("bare run");
+        let run = run_rabin_karp(&cfg, RunOptions::default()).expect("bare run");
         let secs = run.report.wall_secs();
         for (_, (pushes, _)) in
             run.report.stream_totals.iter().filter(|(l, _)| l.contains("-> verify"))
@@ -42,7 +42,7 @@ fn main() {
     let mut in_range = 0usize;
     let mut best_effort = 0usize;
     for rep in 0..reps {
-        let run = run_rabin_karp(&cfg, campaign_monitor()).expect("monitored run");
+        let run = run_rabin_karp(&cfg, RunOptions::monitored(campaign_monitor())).expect("monitored run");
         let mut idx = 0u64;
         for sid in &run.verify_streams {
             for est in run.report.rates_for(*sid) {

@@ -10,7 +10,7 @@ use streamflow::monitor::MonitorConfig;
 use streamflow::prelude::*;
 use streamflow::queue::StreamConfig;
 use streamflow::report::{Summary, Table};
-use streamflow::workload::{RateControlledConsumer, RateControlledProducer, WorkloadSpec};
+use streamflow::workload::{tandem, WorkloadSpec};
 
 fn rusage_cpu_secs() -> f64 {
     // SAFETY: plain libc call with a valid out-pointer.
@@ -21,18 +21,14 @@ fn rusage_cpu_secs() -> f64 {
 }
 
 fn one_run(monitored: Option<u64>, items: u64) -> (f64, f64) {
-    let mut topo = Topology::new("overhead");
-    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "p",
+    let t = tandem(
+        "overhead",
         WorkloadSpec::fixed_rate_mbps(8.0),
-        items,
-    )));
-    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "c",
         WorkloadSpec::fixed_rate_mbps(4.0),
-    )));
-    topo.connect::<u64>(p, 0, c, 0, StreamConfig::default().with_capacity(1024).with_item_bytes(8))
-        .expect("connect");
+        items,
+        StreamConfig::default().with_capacity(1024).with_item_bytes(8),
+    )
+    .expect("tandem");
     let mcfg = match monitored {
         Some(max_t) => {
             let mut m = streamflow::campaign::campaign_monitor();
@@ -42,7 +38,7 @@ fn one_run(monitored: Option<u64>, items: u64) -> (f64, f64) {
         None => MonitorConfig::disabled(),
     };
     let cpu0 = rusage_cpu_secs();
-    let report = Scheduler::new(topo).with_monitoring(mcfg).run().expect("run");
+    let report = Session::run(t.topology, RunOptions::monitored(mcfg)).expect("run");
     (report.wall_ns as f64 / 1.0e9, rusage_cpu_secs() - cpu0)
 }
 

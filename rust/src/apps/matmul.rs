@@ -25,13 +25,13 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::MatmulConfig;
-use crate::elastic::{ElasticConfig, ElasticPolicy, ElasticStageConfig, Replicable};
+use crate::elastic::{ElasticConfig, Replicable};
+use crate::flow::{Flow, RunOptions, Session};
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
-use crate::monitor::MonitorConfig;
 use crate::queue::StreamConfig;
 use crate::rng::Xoshiro256pp;
-use crate::scheduler::{RunReport, Scheduler};
-use crate::topology::{StreamId, Topology};
+use crate::scheduler::RunReport;
+use crate::topology::StreamId;
 use crate::{Result, SfError};
 
 /// One streamed unit: `rows` consecutive rows of `A` starting at `start`.
@@ -332,7 +332,11 @@ pub struct MatmulRun {
 
 /// Build and run the matrix-multiply application, elastic by default
 /// (`cfg.static_degree = Some(k)` reproduces the fixed fan-out).
-pub fn run_matmul(cfg: &MatmulConfig, monitor: MonitorConfig) -> Result<MatmulRun> {
+///
+/// `opts.monitor` configures the per-queue monitors; `opts.elastic`
+/// overrides the control plane of the elastic wiring (default: 5 ms tick;
+/// the stage's band/cooldown come from `cfg.dot_tuning`).
+pub fn run_matmul(cfg: &MatmulConfig, opts: RunOptions) -> Result<MatmulRun> {
     if cfg.n == 0 || cfg.dot_kernels == 0 || cfg.block_rows == 0 {
         return Err(SfError::Config("matmul: n, dot_kernels, block_rows must be > 0".into()));
     }
@@ -342,145 +346,116 @@ pub fn run_matmul(cfg: &MatmulConfig, monitor: MonitorConfig) -> Result<MatmulRu
     let a = Arc::new(random_matrix(cfg.n, cfg.seed));
     let b = Arc::new(random_matrix(cfg.n, cfg.seed ^ 0xFEED));
     match cfg.static_degree {
-        Some(k) => run_matmul_static(cfg, k, monitor, a, b),
-        None => run_matmul_elastic(cfg, monitor, a, b),
+        Some(k) => run_matmul_static(cfg, k, opts, a, b),
+        None => run_matmul_elastic(cfg, opts, a, b),
     }
 }
 
-/// The elastic wiring: one replicable dot stage under the control plane.
+/// The elastic wiring: one replicable dot stage under the control plane,
+/// assembled as a linear [`Flow`] chain (no port indices anywhere).
 fn run_matmul_elastic(
     cfg: &MatmulConfig,
-    monitor: MonitorConfig,
+    mut opts: RunOptions,
     a: Arc<Vec<f32>>,
     b: Arc<Vec<f32>>,
 ) -> Result<MatmulRun> {
     let n = cfg.n;
     let block_bytes = cfg.block_rows * n * 4;
-    let mut topo = Topology::new("matmul");
-    let src = topo.add_kernel(Box::new(MatrixSource {
-        a,
-        n,
-        block_rows: cfg.block_rows,
-        next_row: 0,
-        next_port: 0,
-        n_out: 1,
-    }));
-    let stage_cfg = ElasticStageConfig {
-        policy: ElasticPolicy {
-            target_rho: 0.7,
-            band: 0.15,
-            min_replicas: 1,
-            max_replicas: cfg.dot_kernels,
-            cooldown_ticks: 4,
-        },
-        initial_replicas: 1,
-        lane_capacity: cfg.capacity.max(4),
-    };
+    let edge_cfg = StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes);
+    let stage_cfg = cfg.dot_tuning.stage_config(cfg.dot_kernels, cfg.capacity);
     let worker_cfg = cfg.clone();
-    let (split, merge) = topo.add_elastic_stage("dot", stage_cfg, move |_replica| DotWorker {
-        b: b.clone(),
-        n: worker_cfg.n,
-        backend: DotBackend::for_config(&worker_cfg),
-    })?;
     let out_cell = Arc::new(std::sync::Mutex::new(None));
-    let red = topo.add_kernel(Box::new(Reducer {
+
+    let chain = Flow::new("matmul")
+        .stream_defaults(edge_cfg.clone())
+        .source::<RowBlock>(Box::new(MatrixSource {
+            a,
+            n,
+            block_rows: cfg.block_rows,
+            next_row: 0,
+            next_port: 0,
+            n_out: 1,
+        }))
+        // Source → split (uninstrumented, like the static source → dot
+        // edges); the controller still reads its counters for λ and
+        // backpressure.
+        .elastic_with(
+            "dot",
+            stage_cfg,
+            move |_replica| DotWorker {
+                b: b.clone(),
+                n: worker_cfg.n,
+                backend: DotBackend::for_config(&worker_cfg),
+            },
+            edge_cfg.uninstrumented(),
+        )?;
+    let s1 = chain.last_stream().expect("source → dot edge");
+    // Merge → reduce (instrumented: the Fig. 16 measurement point).
+    let flow = chain.sink(Box::new(Reducer {
         n,
         c: None,
         out: out_cell.clone(),
         scratch: Vec::new(),
-    }));
-    // Source → split (uninstrumented, like the static source → dot edges);
-    // the controller still reads its counters for λ and backpressure.
-    let s1 = topo.connect::<RowBlock>(
-        src,
-        0,
-        split,
-        0,
-        StreamConfig::default()
-            .with_capacity(cfg.capacity)
-            .with_item_bytes(block_bytes)
-            .uninstrumented(),
-    )?;
-    // Merge → reduce (instrumented: the Fig. 16 measurement point).
-    let s2 = topo.connect::<ResultBlock>(
-        merge,
-        0,
-        red,
-        0,
-        StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes),
-    )?;
+    }))?;
+    let s2 = flow.last_stream().expect("dot → reduce edge");
+
     // Single stage: the policy's max_replicas already is the worker cap,
     // so no global budget is set (it would never bind).
-    let report = Scheduler::new(topo)
-        .with_monitoring(monitor)
-        .with_elastic(ElasticConfig { tick: Duration::from_millis(5), ..Default::default() })
-        .run()?;
+    if opts.elastic.is_none() {
+        opts.elastic = Some(ElasticConfig { tick: Duration::from_millis(5), ..Default::default() });
+    }
+    let report = Session::run(flow.finish(), opts)?;
     let c = take_output(&out_cell)?;
     Ok(MatmulRun { c, report, reduce_streams: vec![s2], dot_streams: vec![s1] })
 }
 
 /// The original fixed fan-out (paper Fig. 11/16 topology) with `k` dot
-/// kernels — kept wiring-identical for A/B runs against the elastic mode.
+/// kernels — kept wiring-identical for A/B runs against the elastic mode,
+/// expressed as a [`Flow`] fan: `tee(k) → then_each → merge_sink`.
 fn run_matmul_static(
     cfg: &MatmulConfig,
     k: usize,
-    monitor: MonitorConfig,
+    opts: RunOptions,
     a: Arc<Vec<f32>>,
     b: Arc<Vec<f32>>,
 ) -> Result<MatmulRun> {
     let n = cfg.n;
     let block_bytes = cfg.block_rows * n * 4;
-    let mut topo = Topology::new("matmul");
-    let src = topo.add_kernel(Box::new(MatrixSource {
-        a,
-        n,
-        block_rows: cfg.block_rows,
-        next_row: 0,
-        next_port: 0,
-        n_out: k,
-    }));
+    let edge_cfg = StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes);
     let out_cell = Arc::new(std::sync::Mutex::new(None));
-    let red = topo.add_kernel(Box::new(Reducer {
-        n,
-        c: None,
-        out: out_cell.clone(),
-        scratch: Vec::new(),
-    }));
 
-    let mut dot_streams = Vec::new();
-    let mut reduce_streams = Vec::new();
-    for i in 0..k {
-        let dot = topo.add_kernel(Box::new(DotKernel {
-            name: format!("dot{i}"),
-            b: b.clone(),
+    // Source → dot (uninstrumented: "the dot-products would be rather
+    // easy given the high data rates"; we monitor the reduce side).
+    let fan = Flow::new("matmul")
+        .source::<RowBlock>(Box::new(MatrixSource {
+            a,
             n,
-            backend: DotBackend::for_config(cfg),
-        }));
-        // Source → dot (uninstrumented: "the dot-products would be rather
-        // easy given the high data rates"; we monitor the reduce side).
-        let s1 = topo.connect::<RowBlock>(
-            src,
-            i,
-            dot,
-            0,
-            StreamConfig::default()
-                .with_capacity(cfg.capacity)
-                .with_item_bytes(block_bytes)
-                .uninstrumented(),
+            block_rows: cfg.block_rows,
+            next_row: 0,
+            next_port: 0,
+            n_out: k,
+        }))
+        .tee(k)
+        .then_each_with::<ResultBlock, _>(
+            |i| {
+                Box::new(DotKernel {
+                    name: format!("dot{i}"),
+                    b: b.clone(),
+                    n,
+                    backend: DotBackend::for_config(cfg),
+                })
+            },
+            edge_cfg.clone().uninstrumented(),
         )?;
-        // Dot → reduce (instrumented: Fig. 16's queues).
-        let s2 = topo.connect::<ResultBlock>(
-            dot,
-            0,
-            red,
-            i,
-            StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes),
-        )?;
-        dot_streams.push(s1);
-        reduce_streams.push(s2);
-    }
+    let dot_streams = fan.last_streams().to_vec();
+    // Dot → reduce (instrumented: Fig. 16's queues).
+    let flow = fan.merge_sink_with(
+        Box::new(Reducer { n, c: None, out: out_cell.clone(), scratch: Vec::new() }),
+        edge_cfg,
+    )?;
+    let reduce_streams = flow.last_streams().to_vec();
 
-    let report = Scheduler::new(topo).with_monitoring(monitor).run()?;
+    let report = Session::run(flow.finish(), opts)?;
     let c = take_output(&out_cell)?;
     Ok(MatmulRun { c, report, reduce_streams, dot_streams })
 }
@@ -500,7 +475,7 @@ mod tests {
     fn small_matmul_is_correct() {
         // Default (elastic) wiring.
         let cfg = MatmulConfig { n: 64, dot_kernels: 3, block_rows: 8, ..Default::default() };
-        let run = run_matmul(&cfg, MonitorConfig::disabled()).unwrap();
+        let run = run_matmul(&cfg, RunOptions::default()).unwrap();
         let a = random_matrix(64, cfg.seed);
         let b = random_matrix(64, cfg.seed ^ 0xFEED);
         let expect = matmul_ref(&a, &b, 64);
@@ -521,7 +496,7 @@ mod tests {
             static_degree: Some(3),
             ..Default::default()
         };
-        let run = run_matmul(&cfg, MonitorConfig::disabled()).unwrap();
+        let run = run_matmul(&cfg, RunOptions::default()).unwrap();
         let a = random_matrix(64, cfg.seed);
         let b = random_matrix(64, cfg.seed ^ 0xFEED);
         let expect = matmul_ref(&a, &b, 64);
@@ -543,7 +518,7 @@ mod tests {
                 static_degree,
                 ..Default::default()
             };
-            let run = run_matmul(&cfg, MonitorConfig::disabled()).unwrap();
+            let run = run_matmul(&cfg, RunOptions::default()).unwrap();
             let a = random_matrix(50, cfg.seed);
             let b = random_matrix(50, cfg.seed ^ 0xFEED);
             let expect = matmul_ref(&a, &b, 50);
@@ -556,9 +531,9 @@ mod tests {
     #[test]
     fn rejects_degenerate_config() {
         let cfg = MatmulConfig { n: 0, ..Default::default() };
-        assert!(run_matmul(&cfg, MonitorConfig::disabled()).is_err());
+        assert!(run_matmul(&cfg, RunOptions::default()).is_err());
         let cfg = MatmulConfig { static_degree: Some(0), ..Default::default() };
-        assert!(run_matmul(&cfg, MonitorConfig::disabled()).is_err());
+        assert!(run_matmul(&cfg, RunOptions::default()).is_err());
     }
 
     #[test]

@@ -27,12 +27,14 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::RabinKarpConfig;
-use crate::elastic::{ElasticConfig, ElasticPolicy, ElasticStageConfig, Replicable};
+use crate::elastic::{ElasticConfig, Replicable};
+use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session};
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
-use crate::monitor::MonitorConfig;
 use crate::queue::StreamConfig;
-use crate::scheduler::{RunReport, Scheduler};
+use crate::scheduler::RunReport;
+use crate::timing::TimeRef;
 use crate::topology::{KernelId, StreamId, Topology};
+use crate::workload::Pacer;
 use crate::{Result, SfError};
 
 /// Rabin–Karp parameters: base-256 rolling hash modulo a large prime.
@@ -395,7 +397,12 @@ pub struct RabinKarpRun {
 
 /// Build and run the Rabin–Karp application, elastic by default
 /// (`cfg.static_degree = Some(n)` reproduces the fixed mesh).
-pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<RabinKarpRun> {
+///
+/// `opts.monitor` configures the per-queue monitors; `opts.elastic`
+/// overrides the control plane of the elastic wiring (default: 5 ms tick
+/// with the shared `n + j` worker budget; the stages' band/cooldown come
+/// from `cfg.hash_tuning` / `cfg.verify_tuning`).
+pub fn run_rabin_karp(cfg: &RabinKarpConfig, opts: RunOptions) -> Result<RabinKarpRun> {
     let pattern = cfg.pattern.as_bytes().to_vec();
     if pattern.is_empty() {
         return Err(SfError::Config("rabin-karp: empty pattern".into()));
@@ -409,79 +416,34 @@ pub fn run_rabin_karp(cfg: &RabinKarpConfig, monitor: MonitorConfig) -> Result<R
     let corpus = Arc::new(foobar_corpus(cfg.corpus_bytes));
     // Note `static_degree = Some(0)` is already rejected above: j ≥ 1 > 0.
     match cfg.static_degree {
-        Some(n) => run_rabin_karp_static(cfg, n, monitor, corpus, pattern),
-        None => run_rabin_karp_elastic(cfg, monitor, corpus, pattern),
+        Some(n) => run_rabin_karp_static(cfg, n, opts, corpus, pattern),
+        None => run_rabin_karp_elastic(cfg, opts, corpus, pattern),
     }
 }
 
 /// The elastic wiring: hash and verify as two coupled replicable stages
-/// under one coordinated controller sharing a `n + j` worker budget.
+/// under one coordinated controller sharing a `n + j` worker budget —
+/// a linear [`Flow`] chain whose stage item types (`Segment` →
+/// `Vec<usize>` → `Vec<usize>`) are checked end to end at compile time.
 fn run_rabin_karp_elastic(
     cfg: &RabinKarpConfig,
-    monitor: MonitorConfig,
+    mut opts: RunOptions,
     corpus: Arc<Vec<u8>>,
     pattern: Vec<u8>,
 ) -> Result<RabinKarpRun> {
-    let mut topo = Topology::new("rabin_karp");
-    let seg = topo.add_kernel(Box::new(Segmenter {
-        corpus: corpus.clone(),
-        segment_bytes: cfg.segment_bytes,
-        overlap: pattern.len() - 1,
-        next_off: 0,
-        next_port: 0,
-        n_out: 1,
-    }));
-
     // One shared worker pool of n + j threads (what the static mesh would
     // pin): either stage may claim up to the whole pool, and the global
     // `worker_budget` below is the binding constraint — the coordinated
     // policy routes pool capacity to whichever stage is the bottleneck
     // (in practice the hash stage; verify is candidate-starved).
     let pool = cfg.hash_kernels + cfg.verify_kernels;
-    let stage_cfg = ElasticStageConfig {
-        policy: ElasticPolicy {
-            target_rho: 0.7,
-            band: 0.15,
-            min_replicas: 1,
-            max_replicas: pool,
-            cooldown_ticks: 4,
-        },
-        initial_replicas: 1,
-        lane_capacity: cfg.capacity.max(4),
-    };
+    let hash_cfg = cfg.hash_tuning.stage_config(pool, cfg.capacity);
+    let verify_cfg = cfg.verify_tuning.stage_config(pool, cfg.capacity);
     let m = pattern.len();
     let (pattern_hash, pow) = (hash_of(&pattern), leading_pow(m));
-    let (hash_split, hash_merge) =
-        topo.add_elastic_stage("hash", stage_cfg.clone(), move |_replica| HashWorker {
-            pattern_len: m,
-            pattern_hash,
-            pow,
-        })?;
     let (vcorpus, vpattern) = (corpus.clone(), pattern.clone());
-    let (verify_split, verify_merge) =
-        topo.add_elastic_stage("verify", stage_cfg, move |_replica| VerifyWorker {
-            corpus: vcorpus.clone(),
-            pattern: vpattern.clone(),
-        })?;
-
     let matches_cell = Arc::new(std::sync::Mutex::new(Vec::new()));
-    let red = topo.add_kernel(Box::new(BatchMatchReducer {
-        out: matches_cell.clone(),
-        scratch: Vec::new(),
-    }));
 
-    // Segmenter → hash stage (uninstrumented, like the static seg→hash
-    // edges; the controller reads its counters for λ and backpressure).
-    topo.connect::<Segment>(
-        seg,
-        0,
-        hash_split,
-        0,
-        StreamConfig::default()
-            .with_capacity(cfg.capacity)
-            .with_item_bytes(cfg.segment_bytes)
-            .uninstrumented(),
-    )?;
     // Hash stage → verify stage: the Fig. 17 instrumented stream, and the
     // coupling the coordinated controller reasons about. One stream item
     // is a whole segment's candidate batch, so d̄ is the *expected batch
@@ -489,46 +451,67 @@ fn run_rabin_karp_elastic(
     // ≈ segment_bytes / m candidates of usize each. (The paper's static
     // mesh streams single candidates; the batch nominal keeps the
     // byte-rate estimates on this queue comparable.)
-    let batch_bytes =
-        (cfg.segment_bytes / m).max(1) * std::mem::size_of::<usize>();
-    let s_hv = topo.connect::<Vec<usize>>(
-        hash_merge,
-        0,
-        verify_split,
-        0,
-        StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(batch_bytes),
-    )?;
+    let batch_bytes = (cfg.segment_bytes / m).max(1) * std::mem::size_of::<usize>();
+
+    let chain = Flow::new("rabin_karp")
+        .source::<Segment>(Box::new(Segmenter {
+            corpus: corpus.clone(),
+            segment_bytes: cfg.segment_bytes,
+            overlap: pattern.len() - 1,
+            next_off: 0,
+            next_port: 0,
+            n_out: 1,
+        }))
+        // Segmenter → hash stage (uninstrumented, like the static
+        // seg→hash edges; the controller reads its counters for λ and
+        // backpressure).
+        .elastic_with(
+            "hash",
+            hash_cfg,
+            move |_replica| HashWorker { pattern_len: m, pattern_hash, pow },
+            StreamConfig::default()
+                .with_capacity(cfg.capacity)
+                .with_item_bytes(cfg.segment_bytes)
+                .uninstrumented(),
+        )?
+        .elastic_with(
+            "verify",
+            verify_cfg,
+            move |_replica| VerifyWorker { corpus: vcorpus.clone(), pattern: vpattern.clone() },
+            StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(batch_bytes),
+        )?;
+    let s_hv = chain.last_stream().expect("hash → verify edge");
     // Verify stage → reducer.
-    topo.connect::<Vec<usize>>(
-        verify_merge,
-        0,
-        red,
-        0,
+    let flow = chain.sink_with(
+        Box::new(BatchMatchReducer { out: matches_cell.clone(), scratch: Vec::new() }),
         StreamConfig::default()
             .with_capacity(cfg.capacity)
             .with_item_bytes(std::mem::size_of::<usize>())
             .uninstrumented(),
     )?;
 
-    let report = Scheduler::new(topo)
-        .with_monitoring(monitor)
-        .with_elastic(ElasticConfig {
+    if opts.elastic.is_none() {
+        opts.elastic = Some(ElasticConfig {
             tick: Duration::from_millis(5),
             worker_budget: Some(pool),
             ..Default::default()
-        })
-        .run()?;
+        });
+    }
+    let report = Session::run(flow.finish(), opts)?;
     let matches = finish_matches(&matches_cell);
     Ok(RabinKarpRun { matches, report, verify_streams: vec![s_hv] })
 }
 
 /// The original fixed mesh (paper Fig. 12/17 topology) with `n` hash and
 /// `cfg.verify_kernels` verify kernels — kept wiring-identical for A/B
-/// runs against the elastic mode.
+/// runs against the elastic mode. The `n × j` candidate cross-mesh is
+/// wired with explicit typed [`Outlet`]/[`Inlet`] handles (the linear
+/// combinators don't cover it); the item types are still compile-checked
+/// edge by edge.
 fn run_rabin_karp_static(
     cfg: &RabinKarpConfig,
     n: usize,
-    monitor: MonitorConfig,
+    opts: RunOptions,
     corpus: Arc<Vec<u8>>,
     pattern: Vec<u8>,
 ) -> Result<RabinKarpRun> {
@@ -548,6 +531,14 @@ fn run_rabin_karp_static(
         scratch: Vec::new(),
     }));
 
+    let seg_cfg = StreamConfig::default()
+        .with_capacity(cfg.capacity)
+        .with_item_bytes(cfg.segment_bytes)
+        .uninstrumented();
+    let cand_cfg = StreamConfig::default()
+        .with_capacity(cfg.capacity)
+        .with_item_bytes(std::mem::size_of::<Candidate>());
+
     // Hash kernels.
     let mut hash_ids: Vec<KernelId> = Vec::new();
     for i in 0..n {
@@ -556,16 +547,7 @@ fn run_rabin_karp_static(
             &pattern,
             cfg.verify_kernels,
         )));
-        topo.connect::<Segment>(
-            seg,
-            i,
-            h,
-            0,
-            StreamConfig::default()
-                .with_capacity(cfg.capacity)
-                .with_item_bytes(cfg.segment_bytes)
-                .uninstrumented(),
-        )?;
+        topo.connect(Outlet::<Segment>::new(seg, i), Inlet::new(h, 0), seg_cfg.clone())?;
         hash_ids.push(h);
     }
 
@@ -580,33 +562,239 @@ fn run_rabin_karp_static(
         }));
         for (i, &h) in hash_ids.iter().enumerate() {
             // Hash i's output port j feeds verify j's input port i.
-            let s = topo.connect::<Candidate>(
-                h,
-                j,
-                v,
-                i,
-                StreamConfig::default()
-                    .with_capacity(cfg.capacity)
-                    .with_item_bytes(std::mem::size_of::<Candidate>()),
+            let s = topo.connect(
+                Outlet::<Candidate>::new(h, j),
+                Inlet::new(v, i),
+                cand_cfg.clone(),
             )?;
             verify_streams.push(s);
         }
         // Verify j → reducer input j.
-        topo.connect::<Candidate>(
-            v,
-            0,
-            red,
-            j,
-            StreamConfig::default()
-                .with_capacity(cfg.capacity)
-                .with_item_bytes(std::mem::size_of::<Candidate>())
-                .uninstrumented(),
+        topo.connect(
+            Outlet::<Candidate>::new(v, 0),
+            Inlet::new(red, j),
+            cand_cfg.clone().uninstrumented(),
         )?;
     }
 
-    let report = Scheduler::new(topo).with_monitoring(monitor).run()?;
+    let report = Session::run(topo, opts)?;
     let matches = finish_matches(&matches_cell);
     Ok(RabinKarpRun { matches, report, verify_streams })
+}
+
+// ------------------------------------------------------------------------
+// Phase-shifting workload (ROADMAP follow-up): the pattern *mix* changes
+// mid-run, so the per-segment hash cost jumps and the controller must
+// rescale the real hash→verify stages — not just synthetic stages.
+// ------------------------------------------------------------------------
+
+/// One precompiled pattern for the multi-pattern rolling scan: bytes,
+/// polynomial hash, and the leading-byte power.
+#[derive(Debug, Clone)]
+pub struct CompiledPattern {
+    bytes: Vec<u8>,
+    hash: u64,
+    pow: u64,
+}
+
+impl CompiledPattern {
+    pub fn new(pattern: &str) -> Self {
+        let bytes = pattern.as_bytes().to_vec();
+        let hash = hash_of(&bytes);
+        let pow = leading_pow(bytes.len());
+        CompiledPattern { bytes, hash, pow }
+    }
+
+    /// Pattern length in bytes.
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// The pattern bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// One rolling scan per pattern over the segment, candidates concatenated
+/// — the per-segment service time scales with the number of patterns,
+/// which is exactly the knob the phase shift turns.
+pub fn scan_patterns(seg: &Segment, set: &[CompiledPattern]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for p in set {
+        out.extend(candidate_positions(seg, p.bytes.len(), p.hash, p.pow));
+    }
+    out
+}
+
+/// A **paced** corpus source for the phase-shifting experiments: emits
+/// one segment (with the usual `overlap` bytes of look-back) per deadline
+/// at a fixed rate, cycling the corpus until `total_segments` have been
+/// sent. Pacing is the shared no-catch-up [`Pacer`] rule, so the offered
+/// segment rate stays constant across the service-cost shift — the
+/// arrival process is the control, the service process the treatment.
+pub struct PacedSegmenter {
+    corpus: Arc<Vec<u8>>,
+    segment_bytes: usize,
+    overlap: usize,
+    interval_ns: u64,
+    total_segments: u64,
+    sent: u64,
+    next_off: usize,
+    time: TimeRef,
+    pacer: Pacer,
+}
+
+impl PacedSegmenter {
+    pub fn new(
+        corpus: Arc<Vec<u8>>,
+        segment_bytes: usize,
+        overlap: usize,
+        rate_per_sec: f64,
+        total_segments: u64,
+    ) -> Self {
+        assert!(rate_per_sec > 0.0, "segment rate must be positive");
+        assert!(segment_bytes > 0, "segment_bytes must be positive");
+        PacedSegmenter {
+            corpus,
+            segment_bytes,
+            overlap,
+            interval_ns: (1.0e9 / rate_per_sec).round().max(1.0) as u64,
+            total_segments,
+            sent: 0,
+            next_off: 0,
+            time: TimeRef::new(),
+            pacer: Pacer::default(),
+        }
+    }
+
+    fn next_segment(&mut self) -> Segment {
+        if self.next_off >= self.corpus.len() {
+            self.next_off = 0; // cycle the corpus
+        }
+        let start = self.next_off.saturating_sub(self.overlap);
+        let end = (self.next_off + self.segment_bytes).min(self.corpus.len());
+        self.next_off = end;
+        Segment { offset: start, data: self.corpus[start..end].to_vec() }
+    }
+}
+
+impl Kernel for PacedSegmenter {
+    fn name(&self) -> &str {
+        "paced_segmenter"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.sent >= self.total_segments {
+            return KernelStatus::Done;
+        }
+        let deadline = self.pacer.next_deadline(self.time.now_ns(), self.interval_ns);
+        self.time.wait_until_with_tail(deadline, 20_000);
+        let seg = self.next_segment();
+        if ctx.output::<Segment>(0).expect("segmenter port").push(seg).is_err() {
+            return KernelStatus::Done;
+        }
+        self.sent += 1;
+        KernelStatus::Continue
+    }
+}
+
+/// The **mixed-pattern-length phase shift**: a hash replica body whose
+/// active pattern set switches from `initial` to `shifted` at an absolute
+/// [`TimeRef`] timestamp. Keyed to the shared clock (like
+/// [`crate::workload::PhasedServiceWorker`]) so replicas the control
+/// plane spawns *after* the shift come up already scanning the new mix.
+pub struct PhasedPatternHashWorker {
+    initial: Arc<Vec<CompiledPattern>>,
+    shifted: Arc<Vec<CompiledPattern>>,
+    switch_at_ns: u64,
+    time: TimeRef,
+}
+
+impl PhasedPatternHashWorker {
+    pub fn new(initial: &[&str], shifted: &[&str], switch_at_ns: u64) -> Self {
+        let compile = |set: &[&str]| {
+            Arc::new(set.iter().map(|p| CompiledPattern::new(p)).collect::<Vec<_>>())
+        };
+        PhasedPatternHashWorker {
+            initial: compile(initial),
+            shifted: compile(shifted),
+            switch_at_ns,
+            time: TimeRef::new(),
+        }
+    }
+
+    /// Share the compiled sets with another replica (factory clones).
+    pub fn replica(&self) -> Self {
+        PhasedPatternHashWorker {
+            initial: self.initial.clone(),
+            shifted: self.shifted.clone(),
+            switch_at_ns: self.switch_at_ns,
+            time: TimeRef::new(),
+        }
+    }
+
+    /// The pattern set a segment scanned *now* would use.
+    pub fn active_patterns(&self) -> &[CompiledPattern] {
+        if self.time.now_ns() < self.switch_at_ns {
+            &self.initial
+        } else {
+            &self.shifted
+        }
+    }
+}
+
+impl Replicable for PhasedPatternHashWorker {
+    type In = Segment;
+    type Out = Vec<usize>;
+
+    fn process(&mut self, seg: Segment) -> Vec<usize> {
+        let set = if self.time.now_ns() < self.switch_at_ns {
+            self.initial.clone()
+        } else {
+            self.shifted.clone()
+        };
+        scan_patterns(&seg, &set)
+    }
+}
+
+/// Verify body for the multi-pattern runs: a candidate position passes
+/// when the corpus bytes there match **any** of the given patterns (the
+/// union of both phases' sets, so candidates verified after the shift
+/// are not dropped).
+pub struct MultiPatternVerifyWorker {
+    corpus: Arc<Vec<u8>>,
+    patterns: Arc<Vec<Vec<u8>>>,
+}
+
+impl MultiPatternVerifyWorker {
+    pub fn new(corpus: Arc<Vec<u8>>, patterns: &[&str]) -> Self {
+        MultiPatternVerifyWorker {
+            corpus,
+            patterns: Arc::new(patterns.iter().map(|p| p.as_bytes().to_vec()).collect()),
+        }
+    }
+
+    /// Share the pattern table with another replica.
+    pub fn replica(&self) -> Self {
+        MultiPatternVerifyWorker { corpus: self.corpus.clone(), patterns: self.patterns.clone() }
+    }
+}
+
+impl Replicable for MultiPatternVerifyWorker {
+    type In = Vec<usize>;
+    type Out = Vec<usize>;
+
+    fn process(&mut self, candidates: Vec<usize>) -> Vec<usize> {
+        candidates
+            .into_iter()
+            .filter(|&pos| self.patterns.iter().any(|p| verify_at(&self.corpus, p, pos)))
+            .collect()
+    }
 }
 
 /// Order-normalize the consolidated matches (replica routing and the
@@ -654,7 +842,7 @@ mod tests {
             segment_bytes: 512,
             ..Default::default()
         };
-        let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+        let run = run_rabin_karp(&cfg, RunOptions::default()).unwrap();
         let corpus = foobar_corpus(cfg.corpus_bytes);
         let expect = naive_matches(&corpus, b"foobar");
         assert_eq!(run.matches, expect, "matches differ from oracle");
@@ -674,7 +862,7 @@ mod tests {
             static_degree: Some(3),
             ..Default::default()
         };
-        let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+        let run = run_rabin_karp(&cfg, RunOptions::default()).unwrap();
         let corpus = foobar_corpus(cfg.corpus_bytes);
         assert_eq!(run.matches, naive_matches(&corpus, b"foobar"));
         assert_eq!(run.verify_streams.len(), 6, "n × j instrumented queues");
@@ -694,7 +882,7 @@ mod tests {
                 static_degree,
                 ..Default::default()
             };
-            let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+            let run = run_rabin_karp(&cfg, RunOptions::default()).unwrap();
             let corpus = foobar_corpus(cfg.corpus_bytes);
             assert_eq!(run.matches, naive_matches(&corpus, b"foobar"));
         }
@@ -710,23 +898,92 @@ mod tests {
             segment_bytes: 777,
             ..Default::default()
         };
-        let run = run_rabin_karp(&cfg, MonitorConfig::disabled()).unwrap();
+        let run = run_rabin_karp(&cfg, RunOptions::default()).unwrap();
         let corpus = foobar_corpus(cfg.corpus_bytes);
         assert_eq!(run.matches, naive_matches(&corpus, b"barfoo"));
+    }
+
+    #[test]
+    fn multi_pattern_scan_matches_union_oracle() {
+        let corpus = foobar_corpus(512);
+        let seg = Segment { offset: 0, data: corpus.clone() };
+        let set: Vec<CompiledPattern> =
+            ["foobar", "barfoo", "oba"].iter().map(|p| CompiledPattern::new(p)).collect();
+        let mut got = scan_patterns(&seg, &set);
+        got.sort_unstable();
+        got.dedup();
+        let mut expect: Vec<usize> = ["foobar", "barfoo", "oba"]
+            .iter()
+            .flat_map(|p| naive_matches(&corpus, p.as_bytes()))
+            .collect();
+        expect.sort_unstable();
+        expect.dedup();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn phased_pattern_worker_switches_on_the_shared_clock() {
+        let time = TimeRef::new();
+        // Switch in the past: the shifted (3-pattern) set is active.
+        let past = PhasedPatternHashWorker::new(&["foobar"], &["foobar", "oba", "rfo"], 0);
+        assert_eq!(past.active_patterns().len(), 3);
+        // Switch far in the future: the initial set is active, and a
+        // replica clone shares the compiled sets + switch point.
+        let mut fut = PhasedPatternHashWorker::new(
+            &["foobar"],
+            &["foobar", "oba", "rfo"],
+            time.now_ns() + 60_000_000_000,
+        );
+        assert_eq!(fut.active_patterns().len(), 1);
+        assert_eq!(fut.replica().active_patterns().len(), 1);
+        let corpus = foobar_corpus(128);
+        let cands = fut.process(Segment { offset: 0, data: corpus.clone() });
+        assert_eq!(cands, naive_matches(&corpus, b"foobar"));
+        // The union verifier accepts matches of any pattern.
+        let mut v = MultiPatternVerifyWorker::new(Arc::new(corpus.clone()), &["foobar", "oba"]);
+        let oba = naive_matches(&corpus, b"oba");
+        assert_eq!(v.process(oba.clone()), oba);
+        assert_eq!(v.replica().process(vec![1]), Vec::<usize>::new(), "non-match rejected");
+    }
+
+    #[test]
+    fn paced_segmenter_cycles_and_paces() {
+        use crate::flow::{Flow, RunOptions, Session};
+        use std::sync::Mutex;
+        let corpus = Arc::new(foobar_corpus(60));
+        let segs = 12u64; // 60 B corpus, 24 B segments → cycles ~4×
+        let rate = 2_000.0;
+        let got = Arc::new(Mutex::new(Vec::new()));
+        let g2 = got.clone();
+        let flow = Flow::new("paced-seg")
+            .source::<Segment>(Box::new(PacedSegmenter::new(corpus.clone(), 24, 5, rate, segs)))
+            .sink(Box::new(crate::kernel::ClosureSink::new("snk", move |s: Segment| {
+                g2.lock().unwrap().push((s.offset, s.data.len()));
+            })))
+            .unwrap();
+        let t0 = TimeRef::new().now_ns();
+        Session::run_flow(flow, RunOptions::default()).unwrap();
+        let dt = (TimeRef::new().now_ns() - t0) as f64 / 1.0e9;
+        let v = got.lock().unwrap();
+        assert_eq!(v.len(), segs as usize, "every paced segment delivered");
+        // Offsets restart after each corpus pass (cycling), and every
+        // segment's data lies within the corpus.
+        assert!(v.iter().filter(|(off, _)| *off == 0).count() >= 2, "corpus cycled: {v:?}");
+        assert!(dt > 0.8 * segs as f64 / rate, "pacing too fast: {dt}s");
     }
 
     #[test]
     fn rejects_bad_configs() {
         let mut cfg = RabinKarpConfig::default();
         cfg.pattern = String::new();
-        assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
+        assert!(run_rabin_karp(&cfg, RunOptions::default()).is_err());
         let mut cfg = RabinKarpConfig::default();
         cfg.verify_kernels = cfg.hash_kernels + 1;
-        assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
+        assert!(run_rabin_karp(&cfg, RunOptions::default()).is_err());
         // Static mode: j is checked against the static hash degree.
         let mut cfg = RabinKarpConfig::default();
         cfg.static_degree = Some(1);
         cfg.verify_kernels = 2;
-        assert!(run_rabin_karp(&cfg, MonitorConfig::disabled()).is_err());
+        assert!(run_rabin_karp(&cfg, RunOptions::default()).is_err());
     }
 }

@@ -6,13 +6,12 @@
 //! against the known ground truth — exactly the paper's evaluation.
 
 use crate::config::MicrobenchConfig;
+use crate::flow::{RunOptions, Session};
 use crate::monitor::MonitorConfig;
 use crate::queue::StreamConfig;
 use crate::rng::dist::DistKind;
 use crate::rng::Xoshiro256pp;
-use crate::scheduler::Scheduler;
-use crate::topology::Topology;
-use crate::workload::{RateControlledConsumer, RateControlledProducer, WorkloadSpec, ITEM_BYTES};
+use crate::workload::{tandem, WorkloadSpec, ITEM_BYTES};
 use crate::Result;
 
 /// One single-phase execution's outcome.
@@ -32,6 +31,11 @@ pub struct SingleRun {
     pub convergences: usize,
     /// Percent difference (observed − set)/set × 100 (None ⇒ no estimate).
     pub pct_err: Option<f64>,
+    /// The run's control-plane scaling timeline
+    /// ([`RunReport::scaling_timeline`](crate::scheduler::RunReport::scaling_timeline)) —
+    /// empty for the plain tandem, populated when a campaign runs with an
+    /// elastic controller attached.
+    pub scaling: Vec<String>,
 }
 
 /// Monitoring configuration used by all campaigns: paper-faithful
@@ -63,24 +67,15 @@ pub fn run_single(
     let items_per_sec = bottleneck * 1.0e6 / ITEM_BYTES as f64;
     let items = (items_per_sec * target_secs) as u64;
 
-    let mut topo = Topology::new("microbench");
-    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "producer",
+    let t = tandem(
+        "microbench",
         WorkloadSpec::single(dist, arrival_mbps, seed),
-        items,
-    )));
-    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "consumer",
         WorkloadSpec::single(dist, rate_mbps, seed ^ 0x5A5A),
-    )));
-    let sid = topo.connect::<u64>(
-        p,
-        0,
-        c,
-        0,
+        items,
         StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
     )?;
-    let report = Scheduler::new(topo).with_monitoring(campaign_monitor()).run()?;
+    let sid = t.stream;
+    let report = Session::run(t.topology, RunOptions::monitored(campaign_monitor()))?;
 
     let rates = report.rates_for(sid);
     let est = rates.last().map(|r| r.rate_mbps());
@@ -92,6 +87,7 @@ pub fn run_single(
         est_mbps: est,
         convergences: rates.len(),
         pct_err: est.map(|e| (e - rate_mbps) / rate_mbps * 100.0),
+        scaling: report.scaling_timeline(),
     })
 }
 
@@ -136,6 +132,8 @@ pub struct DualRun {
     /// Converged estimates in time order (MB/s).
     pub estimates: Vec<f64>,
     pub class: PhaseClass,
+    /// The run's control-plane scaling timeline (see [`SingleRun::scaling`]).
+    pub scaling: Vec<String>,
 }
 
 /// Classify estimates against the two nominal rates with the paper's 20%
@@ -176,24 +174,15 @@ pub fn run_dual(
     // throughout; clamp to the practical generator ceiling.
     let arrival = (rho_target * rate_a.max(rate_b)).clamp(0.2, 8.5);
 
-    let mut topo = Topology::new("dualphase");
-    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "producer",
+    let t = tandem(
+        "dualphase",
         WorkloadSpec::single(dist, arrival, seed ^ 0xD00D),
-        items,
-    )));
-    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "consumer",
         WorkloadSpec::dual_phase(dist, rate_a, rate_b, items_a, seed),
-    )));
-    let sid = topo.connect::<u64>(
-        p,
-        0,
-        c,
-        0,
+        items,
         StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
     )?;
-    let report = Scheduler::new(topo).with_monitoring(campaign_monitor()).run()?;
+    let sid = t.stream;
+    let report = Session::run(t.topology, RunOptions::monitored(campaign_monitor()))?;
     let estimates: Vec<f64> = report.rates_for(sid).iter().map(|r| r.rate_mbps()).collect();
     let class = classify_dual(&estimates, rate_a, rate_b, 20.0);
     Ok(DualRun {
@@ -203,6 +192,7 @@ pub fn run_dual(
         dist,
         estimates,
         class,
+        scaling: report.scaling_timeline(),
     })
 }
 
@@ -233,6 +223,8 @@ mod tests {
         // One fast run: 4 MB/s consumer, saturating producer.
         let run = run_single(4.0, 8.0, DistKind::Deterministic, 2048, 1.0, 7).unwrap();
         assert!(run.rho >= 0.99);
+        // The plain tandem has no elastic stages: timeline present, empty.
+        assert!(run.scaling.is_empty());
         let est = run.est_mbps.expect("no convergence in campaign single run");
         let err = run.pct_err.unwrap();
         assert!(est > 0.0);
@@ -263,6 +255,7 @@ mod tests {
                 dist: DistKind::Deterministic,
                 estimates: vec![],
                 class: PhaseClass::Both,
+                scaling: vec![],
             },
             DualRun {
                 rate_a_mbps: 1.0,
@@ -271,6 +264,7 @@ mod tests {
                 dist: DistKind::Deterministic,
                 estimates: vec![],
                 class: PhaseClass::Both,
+                scaling: vec![],
             },
         ];
         assert_eq!(tally(&runs)[&PhaseClass::Both], 2);

@@ -9,8 +9,54 @@ pub mod json;
 
 pub use json::Json;
 
+use crate::elastic::{ElasticPolicy, ElasticStageConfig};
 use crate::rng::dist::DistKind;
 use crate::{Result, SfError};
+
+/// Per-stage elastic tuning knobs surfaced on the application configs
+/// (previously hard-coded inside the apps: target ρ 0.7, band 0.15,
+/// cooldown 4). The replica *bounds* stay derived from the app's own
+/// parallelism fields (`dot_kernels`, `hash_kernels`, …); these knobs
+/// shape how the controller steers within them.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTuning {
+    /// Per-replica utilization the controller steers toward.
+    pub target_rho: f64,
+    /// Hysteresis half-width around the target.
+    pub band: f64,
+    /// Control ticks to wait after an action before acting again.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for StageTuning {
+    fn default() -> Self {
+        StageTuning { target_rho: 0.7, band: 0.15, cooldown_ticks: 4 }
+    }
+}
+
+impl StageTuning {
+    /// Expand into a full [`ElasticPolicy`] with the given replica bounds.
+    pub fn policy(&self, min_replicas: usize, max_replicas: usize) -> ElasticPolicy {
+        ElasticPolicy {
+            target_rho: self.target_rho,
+            band: self.band,
+            min_replicas: min_replicas.max(1),
+            max_replicas: max_replicas.max(min_replicas.max(1)),
+            cooldown_ticks: self.cooldown_ticks,
+        }
+    }
+
+    /// Expand into the stage config the apps hand to
+    /// [`Topology::add_elastic_stage`](crate::topology::Topology::add_elastic_stage)
+    /// (one initial replica; `lane_capacity` from the app's queue knob).
+    pub fn stage_config(&self, max_replicas: usize, lane_capacity: usize) -> ElasticStageConfig {
+        ElasticStageConfig {
+            policy: self.policy(1, max_replicas),
+            initial_replicas: 1,
+            lane_capacity: lane_capacity.max(4),
+        }
+    }
+}
 
 /// Micro-benchmark campaign configuration (paper §V-A / §VI).
 #[derive(Debug, Clone)]
@@ -69,6 +115,8 @@ pub struct MatmulConfig {
     /// Fig. 16 topology and the A/B baseline for elastic runs. `None`
     /// (default): run the dot stage on the elastic control plane.
     pub static_degree: Option<usize>,
+    /// Elastic tuning of the dot stage (ignored in static mode).
+    pub dot_tuning: StageTuning,
 }
 
 impl Default for MatmulConfig {
@@ -81,6 +129,7 @@ impl Default for MatmulConfig {
             use_xla: false,
             seed: 0xA11CE,
             static_degree: None,
+            dot_tuning: StageTuning::default(),
         }
     }
 }
@@ -107,6 +156,10 @@ pub struct RabinKarpConfig {
     /// plane) — the paper's Fig. 17 topology and the A/B baseline.
     /// `None` (default): run hash and verify as coupled elastic stages.
     pub static_degree: Option<usize>,
+    /// Elastic tuning of the hash stage (ignored in static mode).
+    pub hash_tuning: StageTuning,
+    /// Elastic tuning of the verify stage (ignored in static mode).
+    pub verify_tuning: StageTuning,
 }
 
 impl Default for RabinKarpConfig {
@@ -119,6 +172,8 @@ impl Default for RabinKarpConfig {
             segment_bytes: 64 << 10,
             capacity: 64,
             static_degree: None,
+            hash_tuning: StageTuning::default(),
+            verify_tuning: StageTuning::default(),
         }
     }
 }
@@ -208,5 +263,19 @@ mod tests {
     fn env_helpers_default() {
         assert_eq!(env_usize("SF_DOES_NOT_EXIST_XYZ", 7), 7);
         assert_eq!(env_f64("SF_DOES_NOT_EXIST_XYZ", 1.5), 1.5);
+    }
+
+    #[test]
+    fn stage_tuning_expands_to_policy_and_stage_config() {
+        let t = StageTuning { target_rho: 0.6, band: 0.1, cooldown_ticks: 7 };
+        let p = t.policy(1, 5);
+        assert_eq!((p.min_replicas, p.max_replicas, p.cooldown_ticks), (1, 5, 7));
+        assert!((p.target_rho - 0.6).abs() < 1e-12);
+        assert!((p.band - 0.1).abs() < 1e-12);
+        p.validate().unwrap();
+        let sc = t.stage_config(3, 2);
+        assert_eq!(sc.policy.max_replicas, 3);
+        assert_eq!(sc.lane_capacity, 4, "lane capacity clamped to >= 4");
+        assert_eq!(sc.initial_replicas, 1);
     }
 }

@@ -31,6 +31,10 @@
 //!
 //! ## Declaring a replicable stage
 //!
+//! A stage slots straight into a [`crate::flow::Flow`] chain — its
+//! `Replicable::{In, Out}` types are checked against the chain at
+//! compile time, and no port index is ever mentioned:
+//!
 //! ```no_run
 //! use streamflow::elastic::{ElasticStageConfig, Replicable};
 //! use streamflow::prelude::*;
@@ -44,17 +48,15 @@
 //!     }
 //! }
 //!
-//! let mut topo = Topology::new("app");
-//! # let src = topo.add_kernel(Box::new(streamflow::kernel::ClosureSource::new(
-//! #     "src", || None::<String>)));
-//! # let snk = topo.add_kernel(Box::new(streamflow::kernel::ClosureSink::new(
-//! #     "snk", |_: String| ())));
-//! let (split, merge) = topo
-//!     .add_elastic_stage("stem", ElasticStageConfig::default(), |_replica| Stemmer)
+//! let flow = Flow::new("app")
+//!     .source::<String>(Box::new(streamflow::kernel::ClosureSource::new(
+//!         "src", || None::<String>)))
+//!     .elastic("stem", ElasticStageConfig::default(), |_replica| Stemmer)
+//!     .unwrap()
+//!     .sink(Box::new(streamflow::kernel::ClosureSink::new(
+//!         "snk", |_: String| ())))
 //!     .unwrap();
-//! topo.connect::<String>(src, 0, split, 0, StreamConfig::default()).unwrap();
-//! topo.connect::<String>(merge, 0, snk, 0, StreamConfig::default()).unwrap();
-//! let report = Scheduler::new(topo).run().unwrap();
+//! let report = Session::run(flow.finish(), RunOptions::default()).unwrap();
 //! for ev in &report.elastic_events {
 //!     println!("{ev}");
 //! }

@@ -1,0 +1,805 @@
+//! # The typed graph API: `Flow` builder, checked ports, `Session` runs.
+//!
+//! The paper wires kernels into a graph whose links are then monitored
+//! and re-tuned online; RaftLib exposes that wiring as a typed `a >> b`
+//! DSL. This module is our equivalent: the **public way to assemble and
+//! run** streamflow graphs, with [`crate::topology::Topology`] kept as
+//! the compiled low-level form underneath.
+//!
+//! Three layers:
+//!
+//! * **Typed port handles** — [`Outlet<T>`] / [`Inlet<T>`] carry
+//!   `(KernelId, port)` plus the item type as a phantom parameter, and
+//!   [`Topology::connect`](crate::topology::Topology::connect) only
+//!   accepts an outlet/inlet pair of the *same* `T`. A type-mismatched
+//!   wiring is a **compile error**, not a runtime `Any`-downcast panic
+//!   at spawn time (see the `compile_fail` examples below).
+//! * **The [`Flow`] builder** — a chainable front end
+//!   (`Flow::new(..).source(..).then(..).elastic(..).sink(..)`) that
+//!   auto-assigns contiguous port indices, so linear pipelines never
+//!   mention a port number; [`FlowChain::tee`] / [`FlowFan::merge_sink`]
+//!   cover the static fan-out/fan-in meshes.
+//! * **[`Session`] + [`RunOptions`]** — one run entry point
+//!   (`Session::run(topology, opts)`) replacing the scattered
+//!   `Scheduler::with_monitoring(..).with_elastic(..)` configuration
+//!   (those remain as thin deprecated shims for one release).
+//!
+//! ## A two-kernel pipeline, start to finish
+//!
+//! ```
+//! use streamflow::flow::{Flow, RunOptions, Session};
+//! use streamflow::kernel::{ClosureSink, ClosureSource};
+//!
+//! let mut n = 0u64;
+//! let flow = Flow::new("doc")
+//!     .source::<u64>(Box::new(ClosureSource::new("src", move || {
+//!         n += 1;
+//!         (n <= 100).then_some(n)
+//!     })))
+//!     .sink(Box::new(ClosureSink::new("snk", |_: u64| ())))
+//!     .unwrap();
+//! let report = Session::run(flow.finish(), RunOptions::default()).unwrap();
+//! assert_eq!(report.stream_totals["src.0 -> snk.0"], (100, 100));
+//! ```
+//!
+//! ## Type mismatches do not compile
+//!
+//! A `u64` outlet cannot wire into a `String` inlet — the `T` parameters
+//! of [`Outlet`] and [`Inlet`] must unify at the `connect` call:
+//!
+//! ```compile_fail
+//! use streamflow::flow::{Inlet, Outlet};
+//! use streamflow::kernel::{ClosureSink, ClosureSource};
+//! use streamflow::queue::StreamConfig;
+//! use streamflow::topology::Topology;
+//!
+//! let mut topo = Topology::new("t");
+//! let src = topo.add_kernel(Box::new(ClosureSource::new("src", || None::<u64>)));
+//! let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", |_: String| ())));
+//! let out: Outlet<u64> = Outlet::new(src, 0);
+//! let inp: Inlet<String> = Inlet::new(snk, 0);
+//! topo.connect(out, inp, StreamConfig::default()).unwrap(); // ERROR: u64 != String
+//! ```
+//!
+//! Likewise a chain carrying `u64` cannot feed an elastic stage whose
+//! replica body consumes `String` — [`FlowChain::elastic`] requires
+//! `R::In` to equal the chain's item type:
+//!
+//! ```compile_fail
+//! use streamflow::elastic::{ElasticStageConfig, Replicable};
+//! use streamflow::flow::Flow;
+//! use streamflow::kernel::ClosureSource;
+//!
+//! struct Upper;
+//! impl Replicable for Upper {
+//!     type In = String;
+//!     type Out = String;
+//!     fn process(&mut self, s: String) -> String { s }
+//! }
+//!
+//! let _ = Flow::new("t")
+//!     .source::<u64>(Box::new(ClosureSource::new("src", || None::<u64>)))
+//!     .elastic("up", ElasticStageConfig::default(), |_| Upper); // ERROR: In = String, chain = u64
+//! ```
+
+use std::marker::PhantomData;
+
+use crate::elastic::{ElasticConfig, ElasticStageConfig, Replicable};
+use crate::kernel::Kernel;
+use crate::monitor::MonitorConfig;
+use crate::queue::StreamConfig;
+use crate::scheduler::{self, RunReport};
+use crate::topology::{KernelId, StreamId, Topology};
+use crate::Result;
+
+// ---------------------------------------------------------------- ports --
+
+/// A typed handle to one **output** port: `(kernel, port)` plus the item
+/// type the producer claims to push. The claim is made once, at handle
+/// construction; [`Topology::connect`](crate::topology::Topology::connect)
+/// then forces both endpoints of every stream to agree at compile time.
+pub struct Outlet<T> {
+    kernel: KernelId,
+    port: usize,
+    _t: PhantomData<fn() -> T>,
+}
+
+/// A typed handle to one **input** port: the consumer-side twin of
+/// [`Outlet`].
+pub struct Inlet<T> {
+    kernel: KernelId,
+    port: usize,
+    _t: PhantomData<fn(T)>,
+}
+
+// Manual impls: `derive` would needlessly bound `T` (the handles only
+// hold a phantom).
+impl<T> Clone for Outlet<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for Outlet<T> {}
+impl<T> std::fmt::Debug for Outlet<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Outlet<{}>({:?}.{})", std::any::type_name::<T>(), self.kernel, self.port)
+    }
+}
+impl<T> Clone for Inlet<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for Inlet<T> {}
+impl<T> std::fmt::Debug for Inlet<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Inlet<{}>({:?}.{})", std::any::type_name::<T>(), self.kernel, self.port)
+    }
+}
+
+impl<T> Outlet<T> {
+    /// Claim output `port` of `kernel` as carrying `T`.
+    pub fn new(kernel: KernelId, port: usize) -> Self {
+        Outlet { kernel, port, _t: PhantomData }
+    }
+
+    /// The kernel this outlet belongs to.
+    pub fn kernel(&self) -> KernelId {
+        self.kernel
+    }
+
+    /// The port index.
+    pub fn port(&self) -> usize {
+        self.port
+    }
+}
+
+impl<T> Inlet<T> {
+    /// Claim input `port` of `kernel` as carrying `T`.
+    pub fn new(kernel: KernelId, port: usize) -> Self {
+        Inlet { kernel, port, _t: PhantomData }
+    }
+
+    /// The kernel this inlet belongs to.
+    pub fn kernel(&self) -> KernelId {
+        self.kernel
+    }
+
+    /// The port index.
+    pub fn port(&self) -> usize {
+        self.port
+    }
+}
+
+/// The typed boundary of a replicable stage, returned by
+/// [`Topology::add_elastic_stage`](crate::topology::Topology::add_elastic_stage):
+/// the split/merge kernel ids plus typed handles derived from the
+/// replica body's `Replicable::{In, Out}` associated types — the stage's
+/// item types flow into the wiring without being restated.
+pub struct StageIo<In, Out> {
+    /// The stage's ingress (split) kernel.
+    pub split: KernelId,
+    /// The stage's egress (merge) kernel.
+    pub merge: KernelId,
+    _in: PhantomData<fn(In)>,
+    _out: PhantomData<fn() -> Out>,
+}
+
+impl<In, Out> Clone for StageIo<In, Out> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<In, Out> Copy for StageIo<In, Out> {}
+impl<In, Out> std::fmt::Debug for StageIo<In, Out> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "StageIo(split {:?}, merge {:?})", self.split, self.merge)
+    }
+}
+
+impl<In, Out> StageIo<In, Out> {
+    /// Built by `Topology::add_elastic_stage` (crate-internal).
+    pub(crate) fn new(split: KernelId, merge: KernelId) -> Self {
+        StageIo { split, merge, _in: PhantomData, _out: PhantomData }
+    }
+
+    /// The stage's input: the split kernel's port 0.
+    pub fn inlet(&self) -> Inlet<In> {
+        Inlet::new(self.split, 0)
+    }
+
+    /// The stage's output: the merge kernel's port 0.
+    pub fn outlet(&self) -> Outlet<Out> {
+        Outlet::new(self.merge, 0)
+    }
+}
+
+// ------------------------------------------------------------- builder --
+
+/// The fluent graph builder. Owns a [`Topology`] under construction plus
+/// the default per-edge [`StreamConfig`]; [`Flow::source`] opens a typed
+/// chain, and every chain operation auto-assigns contiguous port indices.
+///
+/// A closed flow (after `sink`) can open further chains with another
+/// `source` call — disjoint pipelines share one topology and one run.
+pub struct Flow {
+    topo: Topology,
+    defaults: StreamConfig,
+    /// Stream ids created by the most recent wiring operation (one for
+    /// linear edges, `n` for fan edges) — how call sites recover the ids
+    /// of the edges they care about (e.g. the instrumented queues).
+    last: Vec<StreamId>,
+}
+
+impl Flow {
+    /// Start building a graph.
+    pub fn new(name: impl Into<String>) -> Self {
+        Flow { topo: Topology::new(name), defaults: StreamConfig::default(), last: Vec::new() }
+    }
+
+    /// Set the default per-edge stream configuration; edges wired without
+    /// an explicit `_with` override use this.
+    pub fn stream_defaults(mut self, cfg: StreamConfig) -> Self {
+        self.defaults = cfg;
+        self
+    }
+
+    /// Register a source kernel and open a typed chain at its output
+    /// port 0. `T` is the claim of what the kernel pushes.
+    pub fn source<T: Send + 'static>(mut self, kernel: Box<dyn Kernel>) -> FlowChain<T> {
+        let id = self.topo.add_kernel(kernel);
+        FlowChain { open: Outlet::new(id, 0), flow: self }
+    }
+
+    /// Register a kernel without wiring it (escape hatch for meshes built
+    /// with explicit [`Outlet`]/[`Inlet`] handles).
+    pub fn add_kernel(&mut self, kernel: Box<dyn Kernel>) -> KernelId {
+        self.topo.add_kernel(kernel)
+    }
+
+    /// Wire an explicit typed edge (for meshes the linear combinators
+    /// don't cover); records the id in [`Flow::last_streams`].
+    pub fn connect<T: Send + 'static>(
+        &mut self,
+        from: Outlet<T>,
+        to: Inlet<T>,
+        cfg: StreamConfig,
+    ) -> Result<StreamId> {
+        let id = self.topo.connect(from, to, cfg)?;
+        self.last = vec![id];
+        Ok(id)
+    }
+
+    /// The stream id(s) created by the most recent wiring operation.
+    pub fn last_streams(&self) -> &[StreamId] {
+        &self.last
+    }
+
+    /// The single stream created by the most recent wiring operation.
+    pub fn last_stream(&self) -> Option<StreamId> {
+        match self.last.as_slice() {
+            [id] => Some(*id),
+            _ => None,
+        }
+    }
+
+    /// Read access to the topology under construction.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Finish building: hand back the compiled [`Topology`].
+    pub fn finish(self) -> Topology {
+        self.topo
+    }
+
+    fn default_cfg(&self) -> StreamConfig {
+        self.defaults.clone()
+    }
+}
+
+/// An open typed chain: the builder plus the dangling [`Outlet<T>`] the
+/// next stage will consume.
+pub struct FlowChain<T> {
+    flow: Flow,
+    open: Outlet<T>,
+}
+
+impl<T: Send + 'static> FlowChain<T> {
+    /// Append a 1-in/1-out kernel (ports auto-assigned 0 → 0) using the
+    /// flow's default stream config. `U` is the claim of what the kernel
+    /// pushes downstream.
+    pub fn then<U: Send + 'static>(self, kernel: Box<dyn Kernel>) -> Result<FlowChain<U>> {
+        let cfg = self.flow.default_cfg();
+        self.then_with(kernel, cfg)
+    }
+
+    /// [`FlowChain::then`] with a per-edge [`StreamConfig`] override for
+    /// the incoming edge.
+    pub fn then_with<U: Send + 'static>(
+        mut self,
+        kernel: Box<dyn Kernel>,
+        cfg: StreamConfig,
+    ) -> Result<FlowChain<U>> {
+        let id = self.flow.topo.add_kernel(kernel);
+        let sid = self.flow.topo.connect(self.open, Inlet::<T>::new(id, 0), cfg)?;
+        self.flow.last = vec![sid];
+        Ok(FlowChain { open: Outlet::new(id, 0), flow: self.flow })
+    }
+
+    /// Append a **replicable stage**
+    /// ([`Topology::add_elastic_stage`](crate::topology::Topology::add_elastic_stage)):
+    /// the chain's item type must equal the replica body's `In`, and the
+    /// chain continues with its `Out` — the stage's types are checked and
+    /// propagated at compile time.
+    pub fn elastic<R, F>(
+        self,
+        name: impl Into<String>,
+        cfg: ElasticStageConfig,
+        factory: F,
+    ) -> Result<FlowChain<R::Out>>
+    where
+        R: Replicable<In = T>,
+        F: Fn(usize) -> R + Send + Sync + 'static,
+    {
+        let edge = self.flow.default_cfg();
+        self.elastic_with(name, cfg, factory, edge)
+    }
+
+    /// [`FlowChain::elastic`] with a per-edge override for the edge into
+    /// the stage's split kernel.
+    pub fn elastic_with<R, F>(
+        mut self,
+        name: impl Into<String>,
+        cfg: ElasticStageConfig,
+        factory: F,
+        edge: StreamConfig,
+    ) -> Result<FlowChain<R::Out>>
+    where
+        R: Replicable<In = T>,
+        F: Fn(usize) -> R + Send + Sync + 'static,
+    {
+        let stage = self.flow.topo.add_elastic_stage(name, cfg, factory)?;
+        let sid = self.flow.topo.connect(self.open, stage.inlet(), edge)?;
+        self.flow.last = vec![sid];
+        Ok(FlowChain { open: stage.outlet(), flow: self.flow })
+    }
+
+    /// Terminate the chain into a sink kernel (input port 0) using the
+    /// default stream config; returns the closed [`Flow`].
+    pub fn sink(self, kernel: Box<dyn Kernel>) -> Result<Flow> {
+        let cfg = self.flow.default_cfg();
+        self.sink_with(kernel, cfg)
+    }
+
+    /// [`FlowChain::sink`] with a per-edge override.
+    pub fn sink_with(mut self, kernel: Box<dyn Kernel>, cfg: StreamConfig) -> Result<Flow> {
+        let id = self.flow.topo.add_kernel(kernel);
+        let sid = self.flow.topo.connect(self.open, Inlet::<T>::new(id, 0), cfg)?;
+        self.flow.last = vec![sid];
+        Ok(self.flow)
+    }
+
+    /// Fan **out**: reinterpret the last kernel as exposing `n` output
+    /// ports (0‥`n`) all carrying `T` — e.g. a round-robin source feeding
+    /// `n` parallel workers. The chain becomes a [`FlowFan`].
+    pub fn tee(self, n: usize) -> FlowFan<T> {
+        let k = self.open.kernel();
+        FlowFan { open: (0..n.max(1)).map(|p| Outlet::new(k, p)).collect(), flow: self.flow }
+    }
+
+    /// The dangling outlet (to leave the builder and wire manually).
+    pub fn outlet(&self) -> Outlet<T> {
+        self.open
+    }
+
+    /// The kernel the chain currently ends at.
+    pub fn kernel(&self) -> KernelId {
+        self.open.kernel()
+    }
+
+    /// The stream created by the most recent wiring operation.
+    pub fn last_stream(&self) -> Option<StreamId> {
+        self.flow.last_stream()
+    }
+
+    /// Split into the builder and the dangling outlet (escape hatch).
+    pub fn into_parts(self) -> (Flow, Outlet<T>) {
+        (self.flow, self.open)
+    }
+}
+
+/// A fanned-out chain: `n` parallel dangling outlets of the same item
+/// type (one per lane).
+pub struct FlowFan<T> {
+    flow: Flow,
+    open: Vec<Outlet<T>>,
+}
+
+impl<T: Send + 'static> FlowFan<T> {
+    /// One kernel per lane: lane `i` gets `mk(i)` wired outlet`i` → its
+    /// input port 0, and the fan continues at each kernel's output
+    /// port 0 carrying `U`. Uses the flow's default stream config.
+    pub fn then_each<U, F>(self, mk: F) -> Result<FlowFan<U>>
+    where
+        U: Send + 'static,
+        F: FnMut(usize) -> Box<dyn Kernel>,
+    {
+        let cfg = self.flow.default_cfg();
+        self.then_each_with(mk, cfg)
+    }
+
+    /// [`FlowFan::then_each`] with a per-edge override (applied to every
+    /// lane's incoming edge).
+    pub fn then_each_with<U, F>(mut self, mut mk: F, cfg: StreamConfig) -> Result<FlowFan<U>>
+    where
+        U: Send + 'static,
+        F: FnMut(usize) -> Box<dyn Kernel>,
+    {
+        let mut next = Vec::with_capacity(self.open.len());
+        let mut streams = Vec::with_capacity(self.open.len());
+        for (i, out) in self.open.iter().enumerate() {
+            let id = self.flow.topo.add_kernel(mk(i));
+            streams.push(self.flow.topo.connect(*out, Inlet::<T>::new(id, 0), cfg.clone())?);
+            next.push(Outlet::new(id, 0));
+        }
+        self.flow.last = streams;
+        Ok(FlowFan { open: next, flow: self.flow })
+    }
+
+    /// Fan **in** through a kernel with one input port per lane (0‥`n`,
+    /// auto-assigned in lane order) and a single output port 0 carrying
+    /// `U`; the fan collapses back to a linear chain.
+    pub fn merge<U: Send + 'static>(self, kernel: Box<dyn Kernel>) -> Result<FlowChain<U>> {
+        let cfg = self.flow.default_cfg();
+        self.merge_with(kernel, cfg)
+    }
+
+    /// [`FlowFan::merge`] with a per-edge override.
+    pub fn merge_with<U: Send + 'static>(
+        mut self,
+        kernel: Box<dyn Kernel>,
+        cfg: StreamConfig,
+    ) -> Result<FlowChain<U>> {
+        let id = self.fan_in(kernel, cfg)?;
+        Ok(FlowChain { open: Outlet::new(id, 0), flow: self.flow })
+    }
+
+    /// Terminal fan-in: a sink kernel with one input port per lane and no
+    /// outputs (e.g. a reducer); returns the closed [`Flow`].
+    pub fn merge_sink(self, kernel: Box<dyn Kernel>) -> Result<Flow> {
+        let cfg = self.flow.default_cfg();
+        self.merge_sink_with(kernel, cfg)
+    }
+
+    /// [`FlowFan::merge_sink`] with a per-edge override.
+    pub fn merge_sink_with(mut self, kernel: Box<dyn Kernel>, cfg: StreamConfig) -> Result<Flow> {
+        self.fan_in(kernel, cfg)?;
+        Ok(self.flow)
+    }
+
+    /// The shared fan-in wiring: register `kernel`, connect every lane to
+    /// its input ports 0‥`n` in lane order, record the edges in
+    /// `flow.last`.
+    fn fan_in(&mut self, kernel: Box<dyn Kernel>, cfg: StreamConfig) -> Result<KernelId> {
+        let id = self.flow.topo.add_kernel(kernel);
+        let mut streams = Vec::with_capacity(self.open.len());
+        for (i, out) in self.open.iter().enumerate() {
+            streams.push(self.flow.topo.connect(*out, Inlet::<T>::new(id, i), cfg.clone())?);
+        }
+        self.flow.last = streams;
+        Ok(id)
+    }
+
+    /// The dangling lane outlets.
+    pub fn outlets(&self) -> &[Outlet<T>] {
+        &self.open
+    }
+
+    /// The stream ids created by the most recent wiring operation.
+    pub fn last_streams(&self) -> &[StreamId] {
+        self.flow.last_streams()
+    }
+
+    /// Split into the builder and the dangling outlets (escape hatch).
+    pub fn into_parts(self) -> (Flow, Vec<Outlet<T>>) {
+        (self.flow, self.open)
+    }
+}
+
+// ------------------------------------------------------------- session --
+
+/// Unified run configuration, consumed by [`Session::run`]. Replaces the
+/// `Scheduler::with_monitoring(..).with_elastic(..)` chain.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Per-queue monitoring (the paper's §IV sampling + Algorithm 1).
+    /// Default: disabled.
+    pub monitor: MonitorConfig,
+    /// Elastic control plane. `None` (default): the controller runs with
+    /// [`ElasticConfig::default`] iff the topology declares replicable
+    /// stages. `Some(cfg)`: the controller always runs with `cfg` (it
+    /// then also applies analytic buffer sizing to plain monitored
+    /// streams).
+    pub elastic: Option<ElasticConfig>,
+    /// Re-base streams left at the built-in default capacity: any edge
+    /// whose capacity was not set with [`StreamConfig::with_capacity`] at
+    /// wiring time (tracked by `capacity_overridden`, so a deliberate
+    /// `with_capacity(1024)` is respected) is live-resized, through the
+    /// queue's atomic capacity, to this config's capacity before the run
+    /// starts. Only the **capacity** participates — `item_bytes` and
+    /// `instrument` are frozen when the queue is built and are ignored
+    /// here. `None` leaves edges as built.
+    pub stream_defaults: Option<StreamConfig>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { monitor: MonitorConfig::disabled(), elastic: None, stream_defaults: None }
+    }
+}
+
+impl RunOptions {
+    /// Options with monitoring on.
+    pub fn monitored(monitor: MonitorConfig) -> Self {
+        RunOptions { monitor, ..Default::default() }
+    }
+
+    /// Force the elastic controller with the given configuration.
+    pub fn with_elastic(mut self, cfg: ElasticConfig) -> Self {
+        self.elastic = Some(cfg);
+        self
+    }
+
+    /// Set the default-capacity re-base (see [`RunOptions::stream_defaults`]).
+    pub fn with_stream_defaults(mut self, cfg: StreamConfig) -> Self {
+        self.stream_defaults = Some(cfg);
+        self
+    }
+}
+
+/// The unified run entry point: validates, spawns kernels + monitors
+/// (+ the elastic controller), joins, aggregates — one call from a built
+/// graph to its [`RunReport`].
+pub struct Session;
+
+impl Session {
+    /// Run `topo` to completion under `opts`.
+    pub fn run(mut topo: Topology, opts: RunOptions) -> Result<RunReport> {
+        if let Some(d) = &opts.stream_defaults {
+            for edge in topo.streams_mut() {
+                if !edge.config.capacity_overridden && d.capacity != edge.config.capacity {
+                    edge.monitor.set_capacity(d.capacity);
+                    edge.config.capacity = d.capacity;
+                }
+            }
+        }
+        let forced = opts.elastic.is_some();
+        let elastic_cfg = opts.elastic.unwrap_or_default();
+        scheduler::execute(&mut topo, &opts.monitor, &elastic_cfg, forced)
+    }
+
+    /// Convenience: finish a [`Flow`] and run it.
+    pub fn run_flow(flow: Flow, opts: RunOptions) -> Result<RunReport> {
+        Self::run(flow.finish(), opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{ClosureSink, ClosureSource, Kernel, KernelContext, KernelStatus};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    fn counting_source(n: u64) -> Box<dyn Kernel> {
+        let mut i = 0u64;
+        Box::new(ClosureSource::new("src", move || {
+            i += 1;
+            (i <= n).then_some(i)
+        }))
+    }
+
+    /// 1-in/1-out pass-through used by the chain tests.
+    struct AddOne;
+    impl Kernel for AddOne {
+        fn name(&self) -> &str {
+            "add1"
+        }
+        fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+            match ctx.input::<u64>(0).unwrap().pop() {
+                Some(v) => {
+                    if ctx.output::<u64>(0).unwrap().push(v + 1).is_err() {
+                        return KernelStatus::Done;
+                    }
+                    KernelStatus::Continue
+                }
+                None => KernelStatus::Done,
+            }
+        }
+    }
+
+    #[test]
+    fn linear_chain_auto_assigns_port_zero_everywhere() {
+        let flow = Flow::new("lin")
+            .source::<u64>(counting_source(10))
+            .then::<u64>(Box::new(AddOne))
+            .unwrap()
+            .then::<u64>(Box::new(AddOne))
+            .unwrap()
+            .sink(Box::new(ClosureSink::new("snk", |_: u64| ())))
+            .unwrap();
+        let topo = flow.finish();
+        assert_eq!(topo.num_kernels(), 4);
+        assert_eq!(topo.streams().len(), 3);
+        for e in topo.streams() {
+            assert_eq!((e.src_port, e.dst_port), (0, 0), "{}", e.label);
+        }
+        topo.validate().unwrap();
+    }
+
+    #[test]
+    fn then_with_overrides_edge_config_and_records_stream() {
+        let chain = Flow::new("cfg")
+            .source::<u64>(counting_source(1))
+            .then_with::<u64>(
+                Box::new(AddOne),
+                StreamConfig::default().with_capacity(7).uninstrumented(),
+            )
+            .unwrap();
+        let sid = chain.last_stream().unwrap();
+        let (flow, _out) = chain.into_parts();
+        let topo = flow.finish();
+        let edge = &topo.streams()[sid.0];
+        assert_eq!(edge.config.capacity, 7);
+        assert!(!edge.config.instrument);
+    }
+
+    #[test]
+    fn tee_and_merge_sink_assign_contiguous_ports() {
+        /// Round-robin 3-way splitter source.
+        struct Rr {
+            n: u64,
+            next: usize,
+        }
+        impl Kernel for Rr {
+            fn name(&self) -> &str {
+                "rr"
+            }
+            fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+                if self.n == 0 {
+                    return KernelStatus::Done;
+                }
+                self.n -= 1;
+                let p = self.next;
+                self.next = (self.next + 1) % 3;
+                if ctx.output::<u64>(p).unwrap().push(self.n).is_err() {
+                    return KernelStatus::Done;
+                }
+                KernelStatus::Continue
+            }
+        }
+        /// 3-input counting sink.
+        struct Gather(Arc<AtomicU64>);
+        impl Kernel for Gather {
+            fn name(&self) -> &str {
+                "gather"
+            }
+            fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+                let mut all_done = true;
+                let mut any = false;
+                for i in 0..ctx.num_inputs() {
+                    match ctx.input::<u64>(i).unwrap().try_pop() {
+                        crate::queue::PopResult::Item(_) => {
+                            self.0.fetch_add(1, Ordering::Relaxed);
+                            any = true;
+                            all_done = false;
+                        }
+                        crate::queue::PopResult::Empty => all_done = false,
+                        crate::queue::PopResult::Closed => {}
+                    }
+                }
+                if all_done {
+                    KernelStatus::Done
+                } else if any {
+                    KernelStatus::Continue
+                } else {
+                    KernelStatus::Stall
+                }
+            }
+        }
+
+        let seen = Arc::new(AtomicU64::new(0));
+        let fan = Flow::new("fan")
+            .source::<u64>(Box::new(Rr { n: 99, next: 0 }))
+            .tee(3)
+            .then_each::<u64, _>(|_| Box::new(AddOne))
+            .unwrap();
+        assert_eq!(fan.last_streams().len(), 3);
+        let flow = fan.merge_sink(Box::new(Gather(seen.clone()))).unwrap();
+        assert_eq!(flow.last_streams().len(), 3);
+
+        let topo = flow.topology();
+        // Fan-out ports 0..3 on the source, fan-in ports 0..3 on the sink.
+        let mut src_ports: Vec<usize> =
+            topo.streams().iter().filter(|e| e.src.0 == 0).map(|e| e.src_port).collect();
+        src_ports.sort_unstable();
+        assert_eq!(src_ports, vec![0, 1, 2]);
+        let sink_id = topo.num_kernels() - 1;
+        let mut dst_ports: Vec<usize> =
+            topo.streams().iter().filter(|e| e.dst.0 == sink_id).map(|e| e.dst_port).collect();
+        dst_ports.sort_unstable();
+        assert_eq!(dst_ports, vec![0, 1, 2]);
+        topo.validate().unwrap();
+
+        let report = Session::run(flow.finish(), RunOptions::default()).unwrap();
+        assert_eq!(seen.load(Ordering::Relaxed), 99);
+        assert!(report.wall_ns > 0);
+    }
+
+    #[test]
+    fn session_runs_flow_end_to_end() {
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let o2 = out.clone();
+        let flow = Flow::new("e2e")
+            .source::<u64>(counting_source(50))
+            .then::<u64>(Box::new(AddOne))
+            .unwrap()
+            .sink(Box::new(ClosureSink::new("snk", move |v: u64| o2.lock().unwrap().push(v))))
+            .unwrap();
+        Session::run_flow(flow, RunOptions::default()).unwrap();
+        let v = out.lock().unwrap();
+        assert_eq!(v.len(), 50);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u64 + 2));
+    }
+
+    #[test]
+    fn stream_defaults_rebase_only_untouched_edges() {
+        let flow = Flow::new("defaults")
+            .source::<u64>(counting_source(1))
+            .then::<u64>(Box::new(AddOne)) // default capacity: eligible
+            .unwrap()
+            .sink_with(
+                Box::new(ClosureSink::new("snk", |_: u64| ())),
+                StreamConfig::default().with_capacity(8), // explicit: kept
+            )
+            .unwrap();
+        let topo = flow.finish();
+        let handles: Vec<_> = topo.streams().iter().map(|e| e.monitor.clone()).collect();
+        Session::run(
+            topo,
+            RunOptions::default()
+                .with_stream_defaults(StreamConfig::default().with_capacity(64)),
+        )
+        .unwrap();
+        assert_eq!(handles[0].capacity(), 64, "default-capacity edge re-based");
+        assert_eq!(handles[1].capacity(), 8, "explicit edge untouched");
+    }
+
+    #[test]
+    fn elastic_chain_propagates_stage_types() {
+        struct Double;
+        impl Replicable for Double {
+            type In = u64;
+            type Out = u64;
+            fn process(&mut self, v: u64) -> u64 {
+                v * 2
+            }
+        }
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let o2 = out.clone();
+        let flow = Flow::new("estage")
+            .source::<u64>(counting_source(1000))
+            .elastic("dbl", ElasticStageConfig::default(), |_| Double)
+            .unwrap()
+            .sink(Box::new(ClosureSink::new("snk", move |v: u64| o2.lock().unwrap().push(v))))
+            .unwrap();
+        let topo = flow.topology();
+        assert_eq!(topo.elastic_stages().len(), 1);
+        assert_eq!(topo.kernel_name(topo.elastic_stages()[0].split), "dbl-split");
+        Session::run_flow(flow, RunOptions::default()).unwrap();
+        let v = out.lock().unwrap();
+        assert_eq!(v.len(), 1000);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == 2 * (i as u64 + 1)), "order preserved");
+    }
+}

@@ -11,6 +11,10 @@
 //!   copy-and-zero monitor protocol, and dynamic resize).
 //! * [`kernel`] / [`port`] / [`topology`] / [`scheduler`] — compute kernels
 //!   on independent threads wired into an application graph.
+//! * [`flow`] — the **typed public assembly/run API**: `Outlet<T>`/`Inlet<T>`
+//!   port handles (type-mismatched wiring is a compile error), the fluent
+//!   `Flow` builder with auto-assigned ports, and the unified
+//!   `Session::run(topology, RunOptions)` entry point.
 //! * [`monitor`] — the per-queue monitor thread: sampling-period
 //!   determination (§IV-A) and the service-rate heuristic driver.
 //! * [`estimator`] — Algorithm 1: radius-2 Gaussian filter (Eq. 2), the
@@ -47,6 +51,7 @@ pub mod control;
 pub mod elastic;
 pub mod error;
 pub mod estimator;
+pub mod flow;
 pub mod kernel;
 pub mod monitor;
 pub mod port;
@@ -72,6 +77,7 @@ pub mod prelude {
     pub use crate::elastic::{ElasticPolicy, ElasticStageConfig, Replicable};
     pub use crate::error::{Result, SfError};
     pub use crate::estimator::{EstimatorConfig, RateEstimate};
+    pub use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session, StageIo};
     pub use crate::kernel::{Kernel, KernelContext, KernelStatus};
     pub use crate::monitor::MonitorConfig;
     pub use crate::queue::StreamConfig;

@@ -16,9 +16,7 @@ use streamflow::monitor::{MonitorConfig, QueueEnd};
 use streamflow::prelude::*;
 use streamflow::rng::dist::DistKind;
 use streamflow::timing::TimeRef;
-use streamflow::workload::{
-    RateControlledConsumer, RateControlledProducer, WorkloadSpec, ITEM_BYTES,
-};
+use streamflow::workload::{tandem, WorkloadSpec, ITEM_BYTES};
 
 fn main() {
     let args = match Args::from_env() {
@@ -95,26 +93,16 @@ fn run_microbench_once(
     capacity: usize,
     seed: u64,
 ) -> streamflow::Result<RunReport> {
-    let mut topo = Topology::new("microbench");
     // Producer faster than the consumer keeps ρ high (observable reads).
     let prod_rate = (rate_mbps * 1.6).min(9.0);
-    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "producer",
+    let t = tandem(
+        "microbench",
         WorkloadSpec::single(dist, prod_rate, seed),
-        items,
-    )));
-    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "consumer",
         WorkloadSpec::single(dist, rate_mbps, seed ^ 0xABCD),
-    )));
-    topo.connect::<u64>(
-        p,
-        0,
-        c,
-        0,
+        items,
         StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
     )?;
-    Scheduler::new(topo).with_monitoring(MonitorConfig::practical()).run()
+    Session::run(t.topology, RunOptions::monitored(MonitorConfig::practical()))
 }
 
 fn cmd_microbench(args: &Args) -> i32 {
@@ -146,23 +134,17 @@ fn cmd_dualphase(args: &Args) -> i32 {
     let rate_a = args.get_or("rate-a", 2.66).unwrap_or(2.66);
     let rate_b = args.get_or("rate-b", 1.0).unwrap_or(1.0);
     let items = args.get_or("items", 800_000u64).unwrap_or(800_000);
-    let mut topo = Topology::new("dualphase");
-    let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-        "producer",
+    let t = match tandem(
+        "dualphase",
         WorkloadSpec::fixed_rate_mbps(8.0),
-        items,
-    )));
-    let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-        "consumer",
         WorkloadSpec::dual_phase(DistKind::Exponential, rate_a, rate_b, items / 2, 42),
-    )));
-    if topo
-        .connect::<u64>(p, 0, c, 0, StreamConfig::default().with_capacity(1024).with_item_bytes(8))
-        .is_err()
-    {
-        return 1;
-    }
-    match Scheduler::new(topo).with_monitoring(MonitorConfig::practical()).run() {
+        items,
+        StreamConfig::default().with_capacity(1024).with_item_bytes(8),
+    ) {
+        Ok(t) => t,
+        Err(_) => return 1,
+    };
+    match Session::run(t.topology, RunOptions::monitored(MonitorConfig::practical())) {
         Ok(report) => {
             println!("phases: {rate_a} MB/s → {rate_b} MB/s at item {}", items / 2);
             report_rates(&report, "dualphase");
@@ -204,7 +186,7 @@ fn cmd_matmul(args: &Args) -> i32 {
     if args.has_flag("static") {
         cfg.static_degree = Some(cfg.dot_kernels);
     }
-    match matmul::run_matmul(&cfg, MonitorConfig::practical()) {
+    match matmul::run_matmul(&cfg, RunOptions::monitored(MonitorConfig::practical())) {
         Ok(run) => {
             let checksum: f64 = run.c.iter().map(|&x| x as f64).sum();
             println!(
@@ -235,7 +217,7 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
     if args.has_flag("static") {
         cfg.static_degree = Some(cfg.hash_kernels);
     }
-    match rabin_karp::run_rabin_karp(&cfg, MonitorConfig::practical()) {
+    match rabin_karp::run_rabin_karp(&cfg, RunOptions::monitored(MonitorConfig::practical())) {
         Ok(run) => {
             println!(
                 "rabin-karp over {} bytes ({}): {} matches of '{}'",

@@ -38,17 +38,28 @@ pub struct StreamConfig {
     pub item_bytes: Option<usize>,
     /// Attach a monitor thread to this stream.
     pub instrument: bool,
+    /// True once [`StreamConfig::with_capacity`] set an explicit capacity.
+    /// `RunOptions::stream_defaults` re-bases only edges genuinely left at
+    /// the default — value equality alone cannot tell a deliberate
+    /// `with_capacity(1024)` from an untouched config.
+    pub capacity_overridden: bool,
 }
 
 impl Default for StreamConfig {
     fn default() -> Self {
-        StreamConfig { capacity: 1024, item_bytes: None, instrument: true }
+        StreamConfig {
+            capacity: 1024,
+            item_bytes: None,
+            instrument: true,
+            capacity_overridden: false,
+        }
     }
 }
 
 impl StreamConfig {
     pub fn with_capacity(mut self, cap: usize) -> Self {
         self.capacity = cap;
+        self.capacity_overridden = true;
         self
     }
 
@@ -120,6 +131,8 @@ mod tests {
         assert_eq!(c.capacity, 64);
         assert_eq!(c.item_bytes, Some(8));
         assert!(!c.instrument);
+        assert!(c.capacity_overridden, "with_capacity marks the capacity explicit");
+        assert!(!StreamConfig::default().capacity_overridden);
     }
 
     #[test]

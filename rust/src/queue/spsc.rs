@@ -1099,10 +1099,10 @@ mod tests {
 /// may conclude end-of-stream only after re-reading `tail` subsequent to
 /// observing `closed`.
 ///
-/// Off by default. The `loom` crate is deliberately **not** declared in
-/// the manifest (the default dependency graph must resolve offline); to
-/// run, add `loom = "0.7"` under `[dev-dependencies]` and use
-/// `RUSTFLAGS="--cfg loom" cargo test --features loom --release`.
+/// Off by default. The `loom` dev-dependency is declared under
+/// `[target.'cfg(loom)']` in the manifest (loom's documented pattern), so
+/// the default build never compiles it; the dedicated CI `loom` lane runs
+/// `RUSTFLAGS="--cfg loom" cargo test --features loom --release --lib queue`.
 #[cfg(all(test, feature = "loom", loom))]
 mod loom_model {
     use loom::cell::UnsafeCell;

@@ -136,6 +136,10 @@ impl RunReport {
 
 /// The scheduler: owns a validated topology, an optional monitor config,
 /// and the elastic control-plane configuration.
+///
+/// **Deprecated surface.** Run configuration has unified into
+/// [`crate::flow::RunOptions`] consumed by [`crate::flow::Session::run`];
+/// the `with_*` builders below are thin shims kept for one release.
 pub struct Scheduler {
     topo: Topology,
     monitor_cfg: MonitorConfig,
@@ -156,6 +160,10 @@ impl Scheduler {
     }
 
     /// Enable per-queue monitoring with the given configuration.
+    #[deprecated(
+        since = "0.3.0",
+        note = "set `RunOptions::monitor` and call `flow::Session::run(topology, opts)`"
+    )]
     pub fn with_monitoring(mut self, cfg: MonitorConfig) -> Self {
         self.monitor_cfg = cfg;
         self
@@ -164,6 +172,10 @@ impl Scheduler {
     /// Override the control-plane configuration, and run the controller
     /// even if the topology declares no replicable stage (it then only
     /// applies analytic buffer sizing to monitored streams).
+    #[deprecated(
+        since = "0.3.0",
+        note = "set `RunOptions::elastic` and call `flow::Session::run(topology, opts)`"
+    )]
     pub fn with_elastic(mut self, cfg: ElasticConfig) -> Self {
         self.elastic_cfg = cfg;
         self.elastic_forced = true;
@@ -173,213 +185,7 @@ impl Scheduler {
     /// Run to completion: spawn kernels + monitors (+ the elastic
     /// controller when stages are declared), join, aggregate.
     pub fn run(&mut self) -> Result<RunReport> {
-        self.topo.validate()?;
-        let time = TimeRef::new();
-
-        // ---- elastic control-plane bindings (resolved before the kernel
-        // table is consumed) -----------------------------------------------
-        let mut stage_bindings: Vec<StageBinding> = Vec::new();
-        for decl in &self.topo.elastic {
-            let bind = |e: &crate::topology::StreamEdge| StreamBinding {
-                id: e.id,
-                label: e.label.clone(),
-                handle: e.monitor.clone(),
-            };
-            let upstream = self.topo.streams.iter().find(|e| e.dst == decl.split).map(bind);
-            let downstream = self.topo.streams.iter().find(|e| e.src == decl.merge).map(bind);
-            stage_bindings.push(StageBinding { stage: decl.stage.clone(), upstream, downstream });
-        }
-        let use_controller = !stage_bindings.is_empty() || self.elastic_forced;
-        let stream_bindings: Vec<StreamBinding> = if use_controller {
-            self.topo
-                .streams
-                .iter()
-                .map(|e| StreamBinding {
-                    id: e.id,
-                    label: e.label.clone(),
-                    handle: e.monitor.clone(),
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-
-        // ---- assemble per-kernel contexts --------------------------------
-        let mut kernel_threads = Vec::new();
-        let mut closers: Vec<Vec<Box<dyn crate::port::PortCloser>>> = Vec::new();
-        let mut contexts: Vec<KernelContext> = Vec::new();
-        let mut kernels = Vec::new();
-        for node in self.topo.kernels.drain(..) {
-            let mut inputs = node.inputs;
-            inputs.sort_by_key(|(i, _)| *i);
-            let mut outputs = node.outputs;
-            outputs.sort_by_key(|(i, _, _)| *i);
-            let mut kernel_closers = Vec::new();
-            let mut outs = Vec::new();
-            for (_, port, closer) in outputs {
-                outs.push(port);
-                kernel_closers.push(closer);
-            }
-            contexts.push(KernelContext::new(
-                inputs.into_iter().map(|(_, p)| p).collect(),
-                outs,
-            ));
-            closers.push(kernel_closers);
-            kernels.push(node.kernel);
-        }
-
-        // ---- monitors -----------------------------------------------------
-        let stop = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = channel::<MonitorEvent>();
-        let mut monitor_threads = Vec::new();
-        // Single-owner capacity rule: when the elastic controller manages
-        // the monitored streams (buffer advice on), the monitors' own §III
-        // resize trick is retired so exactly one loop touches capacity —
-        // previously both mutated it independently.
-        let mut per_stream_cfg = self.monitor_cfg.clone();
-        if use_controller && self.elastic_cfg.buffer_advice {
-            per_stream_cfg.resize_factor = 1.0;
-        }
-        if self.monitor_cfg.enabled {
-            for edge in self.topo.streams.iter().filter(|e| e.config.instrument) {
-                let m = QueueMonitor::new(
-                    edge.id,
-                    edge.monitor.clone(),
-                    per_stream_cfg.clone(),
-                    tx.clone(),
-                    stop.clone(),
-                );
-                monitor_threads.push(
-                    std::thread::Builder::new()
-                        .name(format!("sf-mon-{}", edge.id.0))
-                        .spawn(move || m.run())
-                        .map_err(|e| SfError::Scheduler(e.to_string()))?,
-                );
-            }
-        }
-        drop(tx);
-
-        // ---- elastic controller ------------------------------------------
-        // It owns `rx` for the run, forwarding every event into `fwd` so
-        // the end-of-run aggregation below is unchanged. A dedicated stop
-        // flag is set only after the monitors have been joined, so the
-        // controller always sees (and forwards) their final events.
-        let ctl_stop = Arc::new(AtomicBool::new(false));
-        let (ctl_thread, drain_rx) = if use_controller {
-            let (fwd_tx, fwd_rx) = channel::<MonitorEvent>();
-            let ctl = ElasticController::new(
-                self.elastic_cfg.clone(),
-                stage_bindings,
-                stream_bindings,
-                fwd_tx,
-                ctl_stop.clone(),
-            );
-            let t = std::thread::Builder::new()
-                .name("sf-elastic".into())
-                .spawn(move || ctl.run(rx))
-                .map_err(|e| SfError::Scheduler(e.to_string()))?;
-            (Some(t), fwd_rx)
-        } else {
-            (None, rx)
-        };
-
-        // ---- kernels ------------------------------------------------------
-        let t0 = time.now_ns();
-        for ((mut kernel, mut ctx), kernel_closers) in
-            kernels.into_iter().zip(contexts).zip(closers)
-        {
-            let name = kernel.name().to_string();
-            kernel_threads.push(
-                std::thread::Builder::new()
-                    .name(format!("sf-k-{name}"))
-                    .spawn(move || {
-                        kernel.on_start(&mut ctx);
-                        loop {
-                            match kernel.run(&mut ctx) {
-                                KernelStatus::Continue => {}
-                                KernelStatus::Stall => std::thread::yield_now(),
-                                KernelStatus::Done => break,
-                            }
-                        }
-                        kernel.on_stop(&mut ctx);
-                        // Close downstream streams so consumers terminate.
-                        for c in &kernel_closers {
-                            c.close_port();
-                        }
-                    })
-                    .map_err(|e| SfError::Scheduler(e.to_string()))?,
-            );
-        }
-
-        for t in kernel_threads {
-            t.join().map_err(|_| SfError::Scheduler("kernel thread panicked".into()))?;
-        }
-        // Replica workers exit once their stage's splitter closed; join
-        // them before declaring the compute phase over.
-        for decl in &self.topo.elastic {
-            decl.stage.join_workers();
-        }
-        let wall_ns = time.now_ns() - t0;
-
-        // ---- stop monitors, then the controller, drain events ------------
-        stop.store(true, Ordering::Relaxed);
-        for t in monitor_threads {
-            t.join().map_err(|_| SfError::Scheduler("monitor thread panicked".into()))?;
-        }
-        ctl_stop.store(true, Ordering::Relaxed);
-        let (elastic_events, replica_trajectories): (Vec<ElasticEvent>, Vec<StageTrajectory>) =
-            match ctl_thread {
-                Some(t) => {
-                    let outcome = t
-                        .join()
-                        .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?;
-                    (outcome.events, outcome.trajectories)
-                }
-                None => (Vec::new(), Vec::new()),
-            };
-
-        let mut report = RunReport {
-            wall_ns,
-            elastic_events,
-            replica_trajectories,
-            ..Default::default()
-        };
-        while let Ok(ev) = drain_rx.try_recv() {
-            match ev {
-                MonitorEvent::Converged { stream, end, estimate } => {
-                    report.estimates.push((stream, end, estimate));
-                }
-                MonitorEvent::BestEffort { stream, end, estimate } => {
-                    report.best_effort.push((stream, end, estimate));
-                }
-                MonitorEvent::PeriodChanged { stream, period_ns, .. } => {
-                    report.period_events.push((stream, period_ns));
-                }
-                MonitorEvent::Failed { stream, reason } => {
-                    report.failures.push((stream, reason));
-                }
-                MonitorEvent::Classified { stream, end, class, .. } => {
-                    report.classifications.push((stream, end, class));
-                }
-                raw @ MonitorEvent::RawSample { .. } => report.raw_samples.push(raw),
-            }
-        }
-        for edge in self.topo.streams() {
-            let c = edge.monitor.counters();
-            report
-                .stream_totals
-                .insert(edge.label.clone(), (c.total_pushes(), c.total_pops()));
-            // Blocked-duration fractions of the kernel-phase wall clock:
-            // which streams lost time to backpressure vs starvation. The
-            // accumulators are monotonic, so this is a free end-of-run read.
-            let wall = wall_ns.max(1) as f64;
-            report.stream_blocked.push(StreamBlocked {
-                label: edge.label.clone(),
-                read_frac: (c.total_read_blocked_ns() as f64 / wall).min(1.0),
-                write_frac: (c.total_write_blocked_ns() as f64 / wall).min(1.0),
-            });
-        }
-        Ok(report)
+        execute(&mut self.topo, &self.monitor_cfg, &self.elastic_cfg, self.elastic_forced)
     }
 
     /// Access the (possibly consumed) topology's stream table.
@@ -388,30 +194,249 @@ impl Scheduler {
     }
 }
 
+/// The run engine shared by [`crate::flow::Session`] and the deprecated
+/// [`Scheduler`] shims: spawn kernels + monitors (+ the elastic
+/// controller), join, aggregate. Consumes the topology's kernel table;
+/// stream metadata survives for the report.
+pub(crate) fn execute(
+    topo: &mut Topology,
+    monitor_cfg: &MonitorConfig,
+    elastic_cfg: &ElasticConfig,
+    elastic_forced: bool,
+) -> Result<RunReport> {
+    topo.validate()?;
+    let time = TimeRef::new();
+
+    // ---- elastic control-plane bindings (resolved before the kernel
+    // table is consumed) -----------------------------------------------
+    let mut stage_bindings: Vec<StageBinding> = Vec::new();
+    for decl in &topo.elastic {
+        let bind = |e: &crate::topology::StreamEdge| StreamBinding {
+            id: e.id,
+            label: e.label.clone(),
+            handle: e.monitor.clone(),
+        };
+        let upstream = topo.streams.iter().find(|e| e.dst == decl.split).map(bind);
+        let downstream = topo.streams.iter().find(|e| e.src == decl.merge).map(bind);
+        stage_bindings.push(StageBinding { stage: decl.stage.clone(), upstream, downstream });
+    }
+    let use_controller = !stage_bindings.is_empty() || elastic_forced;
+    let stream_bindings: Vec<StreamBinding> = if use_controller {
+        topo.streams
+            .iter()
+            .map(|e| StreamBinding {
+                id: e.id,
+                label: e.label.clone(),
+                handle: e.monitor.clone(),
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    // ---- assemble per-kernel contexts --------------------------------
+    let mut kernel_threads = Vec::new();
+    let mut closers: Vec<Vec<Box<dyn crate::port::PortCloser>>> = Vec::new();
+    let mut contexts: Vec<KernelContext> = Vec::new();
+    let mut kernels = Vec::new();
+    for node in topo.kernels.drain(..) {
+        let mut inputs = node.inputs;
+        inputs.sort_by_key(|(i, _)| *i);
+        let mut outputs = node.outputs;
+        outputs.sort_by_key(|(i, _, _)| *i);
+        let mut kernel_closers = Vec::new();
+        let mut outs = Vec::new();
+        for (_, port, closer) in outputs {
+            outs.push(port);
+            kernel_closers.push(closer);
+        }
+        contexts.push(KernelContext::new(
+            inputs.into_iter().map(|(_, p)| p).collect(),
+            outs,
+        ));
+        closers.push(kernel_closers);
+        kernels.push(node.kernel);
+    }
+
+    // ---- monitors -----------------------------------------------------
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<MonitorEvent>();
+    let mut monitor_threads = Vec::new();
+    // Single-owner capacity rule: when the elastic controller manages
+    // the monitored streams (buffer advice on), the monitors' own §III
+    // resize trick is retired so exactly one loop touches capacity —
+    // previously both mutated it independently.
+    let mut per_stream_cfg = monitor_cfg.clone();
+    if use_controller && elastic_cfg.buffer_advice {
+        per_stream_cfg.resize_factor = 1.0;
+    }
+    if monitor_cfg.enabled {
+        for edge in topo.streams.iter().filter(|e| e.config.instrument) {
+            let m = QueueMonitor::new(
+                edge.id,
+                edge.monitor.clone(),
+                per_stream_cfg.clone(),
+                tx.clone(),
+                stop.clone(),
+            );
+            monitor_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("sf-mon-{}", edge.id.0))
+                    .spawn(move || m.run())
+                    .map_err(|e| SfError::Scheduler(e.to_string()))?,
+            );
+        }
+    }
+    drop(tx);
+
+    // ---- elastic controller ------------------------------------------
+    // It owns `rx` for the run, forwarding every event into `fwd` so
+    // the end-of-run aggregation below is unchanged. A dedicated stop
+    // flag is set only after the monitors have been joined, so the
+    // controller always sees (and forwards) their final events.
+    let ctl_stop = Arc::new(AtomicBool::new(false));
+    let (ctl_thread, drain_rx) = if use_controller {
+        let (fwd_tx, fwd_rx) = channel::<MonitorEvent>();
+        let ctl = ElasticController::new(
+            elastic_cfg.clone(),
+            stage_bindings,
+            stream_bindings,
+            fwd_tx,
+            ctl_stop.clone(),
+        );
+        let t = std::thread::Builder::new()
+            .name("sf-elastic".into())
+            .spawn(move || ctl.run(rx))
+            .map_err(|e| SfError::Scheduler(e.to_string()))?;
+        (Some(t), fwd_rx)
+    } else {
+        (None, rx)
+    };
+
+    // ---- kernels ------------------------------------------------------
+    let t0 = time.now_ns();
+    for ((mut kernel, mut ctx), kernel_closers) in
+        kernels.into_iter().zip(contexts).zip(closers)
+    {
+        let name = kernel.name().to_string();
+        kernel_threads.push(
+            std::thread::Builder::new()
+                .name(format!("sf-k-{name}"))
+                .spawn(move || {
+                    kernel.on_start(&mut ctx);
+                    loop {
+                        match kernel.run(&mut ctx) {
+                            KernelStatus::Continue => {}
+                            KernelStatus::Stall => std::thread::yield_now(),
+                            KernelStatus::Done => break,
+                        }
+                    }
+                    kernel.on_stop(&mut ctx);
+                    // Close downstream streams so consumers terminate.
+                    for c in &kernel_closers {
+                        c.close_port();
+                    }
+                })
+                .map_err(|e| SfError::Scheduler(e.to_string()))?,
+        );
+    }
+
+    for t in kernel_threads {
+        t.join().map_err(|_| SfError::Scheduler("kernel thread panicked".into()))?;
+    }
+    // Replica workers exit once their stage's splitter closed; join
+    // them before declaring the compute phase over.
+    for decl in &topo.elastic {
+        decl.stage.join_workers();
+    }
+    let wall_ns = time.now_ns() - t0;
+
+    // ---- stop monitors, then the controller, drain events ------------
+    stop.store(true, Ordering::Relaxed);
+    for t in monitor_threads {
+        t.join().map_err(|_| SfError::Scheduler("monitor thread panicked".into()))?;
+    }
+    ctl_stop.store(true, Ordering::Relaxed);
+    let (elastic_events, replica_trajectories): (Vec<ElasticEvent>, Vec<StageTrajectory>) =
+        match ctl_thread {
+            Some(t) => {
+                let outcome = t
+                    .join()
+                    .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?;
+                (outcome.events, outcome.trajectories)
+            }
+            None => (Vec::new(), Vec::new()),
+        };
+
+    let mut report = RunReport {
+        wall_ns,
+        elastic_events,
+        replica_trajectories,
+        ..Default::default()
+    };
+    while let Ok(ev) = drain_rx.try_recv() {
+        match ev {
+            MonitorEvent::Converged { stream, end, estimate } => {
+                report.estimates.push((stream, end, estimate));
+            }
+            MonitorEvent::BestEffort { stream, end, estimate } => {
+                report.best_effort.push((stream, end, estimate));
+            }
+            MonitorEvent::PeriodChanged { stream, period_ns, .. } => {
+                report.period_events.push((stream, period_ns));
+            }
+            MonitorEvent::Failed { stream, reason } => {
+                report.failures.push((stream, reason));
+            }
+            MonitorEvent::Classified { stream, end, class, .. } => {
+                report.classifications.push((stream, end, class));
+            }
+            raw @ MonitorEvent::RawSample { .. } => report.raw_samples.push(raw),
+        }
+    }
+    for edge in topo.streams() {
+        let c = edge.monitor.counters();
+        report
+            .stream_totals
+            .insert(edge.label.clone(), (c.total_pushes(), c.total_pops()));
+        // Blocked-duration fractions of the kernel-phase wall clock:
+        // which streams lost time to backpressure vs starvation. The
+        // accumulators are monotonic, so this is a free end-of-run read.
+        let wall = wall_ns.max(1) as f64;
+        report.stream_blocked.push(StreamBlocked {
+            label: edge.label.clone(),
+            read_frac: (c.total_read_blocked_ns() as f64 / wall).min(1.0),
+            write_frac: (c.total_write_blocked_ns() as f64 / wall).min(1.0),
+        });
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::flow::{Flow, RunOptions, Session};
     use crate::kernel::{ClosureSink, ClosureSource};
     use crate::queue::StreamConfig;
     use std::sync::{Arc as StdArc, Mutex};
 
     #[test]
     fn runs_two_kernel_pipeline_to_completion() {
-        let mut topo = Topology::new("t");
         let n_items = 50_000u64;
         let mut i = 0u64;
-        let src = topo.add_kernel(Box::new(ClosureSource::new("src", move || {
-            i += 1;
-            (i <= n_items).then_some(i)
-        })));
         let seen = StdArc::new(Mutex::new(0u64));
         let seen2 = seen.clone();
-        let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |_: u64| {
-            *seen2.lock().unwrap() += 1;
-        })));
-        topo.connect::<u64>(src, 0, snk, 0, StreamConfig::default().with_capacity(128))
+        let flow = Flow::new("t")
+            .stream_defaults(StreamConfig::default().with_capacity(128))
+            .source::<u64>(Box::new(ClosureSource::new("src", move || {
+                i += 1;
+                (i <= n_items).then_some(i)
+            })))
+            .sink(Box::new(ClosureSink::new("snk", move |_: u64| {
+                *seen2.lock().unwrap() += 1;
+            })))
             .unwrap();
-        let report = Scheduler::new(topo).run().unwrap();
+        let report = Session::run_flow(flow, RunOptions::default()).unwrap();
         assert_eq!(*seen.lock().unwrap(), n_items);
         assert!(report.wall_ns > 0);
         let (pushes, pops) = report.stream_totals["src.0 -> snk.0"];
@@ -436,21 +461,21 @@ mod tests {
                 }
             }
         }
-        let mut topo = Topology::new("chain");
         let mut i = 0u64;
-        let src = topo.add_kernel(Box::new(ClosureSource::new("src", move || {
-            i += 1;
-            (i <= 1000).then_some(i)
-        })));
-        let mid = topo.add_kernel(Box::new(Doubler));
         let out = StdArc::new(Mutex::new(Vec::new()));
         let out2 = out.clone();
-        let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |v: u64| {
-            out2.lock().unwrap().push(v)
-        })));
-        topo.connect::<u64>(src, 0, mid, 0, StreamConfig::default()).unwrap();
-        topo.connect::<u64>(mid, 0, snk, 0, StreamConfig::default()).unwrap();
-        Scheduler::new(topo).run().unwrap();
+        let flow = Flow::new("chain")
+            .source::<u64>(Box::new(ClosureSource::new("src", move || {
+                i += 1;
+                (i <= 1000).then_some(i)
+            })))
+            .then::<u64>(Box::new(Doubler))
+            .unwrap()
+            .sink(Box::new(ClosureSink::new("snk", move |v: u64| {
+                out2.lock().unwrap().push(v)
+            })))
+            .unwrap();
+        Session::run_flow(flow, RunOptions::default()).unwrap();
         let v = out.lock().unwrap();
         assert_eq!(v.len(), 1000);
         assert!(v.iter().enumerate().all(|(i, &x)| x == 2 * (i as u64 + 1)));
@@ -458,23 +483,41 @@ mod tests {
 
     #[test]
     fn monitored_run_produces_report_without_hanging() {
-        let mut topo = Topology::new("mon");
         let mut i = 0u64;
-        let src = topo.add_kernel(Box::new(ClosureSource::new("src", move || {
-            i += 1;
-            (i <= 200_000).then_some(i)
-        })));
-        let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", |_: u64| {})));
-        topo.connect::<u64>(src, 0, snk, 0, StreamConfig::default().with_capacity(256))
+        let flow = Flow::new("mon")
+            .stream_defaults(StreamConfig::default().with_capacity(256))
+            .source::<u64>(Box::new(ClosureSource::new("src", move || {
+                i += 1;
+                (i <= 200_000).then_some(i)
+            })))
+            .sink(Box::new(ClosureSink::new("snk", |_: u64| {})))
             .unwrap();
-        let report = Scheduler::new(topo)
-            .with_monitoring(MonitorConfig::practical())
-            .run()
-            .unwrap();
+        let report =
+            Session::run_flow(flow, RunOptions::monitored(MonitorConfig::practical())).unwrap();
         // The run is too fast for guaranteed convergence; what matters is
         // clean shutdown and total accounting.
         let (pushes, pops) = report.stream_totals["src.0 -> snk.0"];
         assert_eq!(pushes, 200_000);
         assert_eq!(pops, 200_000);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_scheduler_shims_still_run() {
+        // The one-release back-compat path: `Scheduler::with_*` must keep
+        // behaving exactly like `Session::run` with the same options.
+        let mut i = 0u64;
+        let flow = Flow::new("shim")
+            .source::<u64>(Box::new(ClosureSource::new("src", move || {
+                i += 1;
+                (i <= 1_000).then_some(i)
+            })))
+            .sink(Box::new(ClosureSink::new("snk", |_: u64| {})))
+            .unwrap();
+        let report = Scheduler::new(flow.finish())
+            .with_monitoring(MonitorConfig::disabled())
+            .run()
+            .unwrap();
+        assert_eq!(report.stream_totals["src.0 -> snk.0"], (1_000, 1_000));
     }
 }

@@ -1,8 +1,12 @@
-//! Application graphs: kernels + streams.
+//! Application graphs: kernels + streams — the **compiled low-level
+//! form** underneath the [`crate::flow`] builder.
 //!
 //! The builder wires typed SPSC streams between kernel ports, validates
 //! the graph (contiguous port indices, single producer/consumer per
-//! stream), and hands everything to the [`crate::scheduler`]. Kernel
+//! stream), and hands everything to the [`crate::scheduler`]. Wiring is
+//! **type-checked at compile time**: [`Topology::connect`] takes an
+//! [`Outlet<T>`]/[`Inlet<T>`] pair whose item types must unify, so a
+//! mismatched edge never reaches the runtime's `Any` downcasts. Kernel
 //! duplication (the parallelization the paper's §I motivates) comes in two
 //! forms: static fan-out wiring in the apps layer, and **declared
 //! replicable stages** ([`Topology::add_elastic_stage`]) whose replica
@@ -15,6 +19,7 @@ use std::sync::Arc;
 use crate::elastic::{
     ElasticStage, ElasticStageConfig, MergeKernel, Replicable, ReplicaSet, SplitKernel,
 };
+use crate::flow::{Inlet, Outlet, StageIo};
 use crate::kernel::Kernel;
 use crate::port::{InputPort, OutputPort, PortCloser};
 use crate::queue::{instrumented, MonitorHandle, StreamConfig};
@@ -115,6 +120,24 @@ impl Topology {
         &self.streams
     }
 
+    /// Mutable stream metadata ([`crate::flow::Session`] re-bases
+    /// default-capacity edges through this before spawning).
+    pub(crate) fn streams_mut(&mut self) -> &mut [StreamEdge] {
+        &mut self.streams
+    }
+
+    /// Typed handle to output `port` of `k` (the type-claim site for
+    /// mesh wiring; linear pipelines get handles from the
+    /// [`crate::flow::Flow`] builder instead).
+    pub fn outlet<T: Send + 'static>(&self, k: KernelId, port: usize) -> Outlet<T> {
+        Outlet::new(k, port)
+    }
+
+    /// Typed handle to input `port` of `k`.
+    pub fn inlet<T: Send + 'static>(&self, k: KernelId, port: usize) -> Inlet<T> {
+        Inlet::new(k, port)
+    }
+
     /// Registered replicable stages.
     pub fn elastic_stages(&self) -> &[ElasticStageDecl] {
         &self.elastic
@@ -125,15 +148,17 @@ impl Topology {
     /// run time (see [`crate::elastic`]).
     ///
     /// `factory` builds one replica body per worker (`replica_index` is
-    /// handed in for seeding). Returns the `(split, merge)` kernel ids:
-    /// wire the upstream stream into `split` port 0 and the downstream
-    /// stream out of `merge` port 0.
+    /// handed in for seeding). Returns the stage's typed boundary
+    /// ([`StageIo`]): wire the upstream stream into `io.inlet()` and the
+    /// downstream stream out of `io.outlet()` — the handles carry the
+    /// replica body's `In`/`Out` types, so the surrounding wiring is
+    /// checked against the stage at compile time.
     pub fn add_elastic_stage<R, F>(
         &mut self,
         name: impl Into<String>,
         cfg: ElasticStageConfig,
         factory: F,
-    ) -> Result<(KernelId, KernelId)>
+    ) -> Result<StageIo<R::In, R::Out>>
     where
         R: Replicable,
         F: Fn(usize) -> R + Send + Sync + 'static,
@@ -144,11 +169,26 @@ impl Topology {
         let split = self.add_kernel(Box::new(SplitKernel::new(set.clone())));
         let merge = self.add_kernel(Box::new(MergeKernel::new(set.clone())));
         self.elastic.push(ElasticStageDecl { stage: set, split, merge });
-        Ok((split, merge))
+        Ok(StageIo::new(split, merge))
     }
 
-    /// Wire `src.src_port -> dst.dst_port` with an item type `T`.
+    /// Wire a typed edge: both handles must carry the **same** item type
+    /// `T`, so a producer/consumer type mismatch is a compile error (see
+    /// the `compile_fail` examples in [`crate::flow`]).
     pub fn connect<T: Send + 'static>(
+        &mut self,
+        from: Outlet<T>,
+        to: Inlet<T>,
+        cfg: StreamConfig,
+    ) -> Result<StreamId> {
+        self.connect_indexed::<T>(from.kernel(), from.port(), to.kernel(), to.port(), cfg)
+    }
+
+    /// Raw index-pair wiring: `src.src_port -> dst.dst_port` with item
+    /// type `T`. Low-level — the typed [`Topology::connect`] and the
+    /// [`crate::flow`] builder are the public surfaces; this survives
+    /// for their internals.
+    pub fn connect_indexed<T: Send + 'static>(
         &mut self,
         src: KernelId,
         src_port: usize,
@@ -248,12 +288,16 @@ mod tests {
         Box::new(ClosureSink::new("snk", |_: u64| {}))
     }
 
+    fn wire_u64(t: &mut Topology, a: KernelId, ap: usize, b: KernelId, bp: usize) -> Result<StreamId> {
+        t.connect(Outlet::<u64>::new(a, ap), Inlet::<u64>::new(b, bp), StreamConfig::default())
+    }
+
     #[test]
     fn builds_and_validates() {
         let mut t = Topology::new("t");
         let a = t.add_kernel(src());
         let b = t.add_kernel(snk());
-        let s = t.connect::<u64>(a, 0, b, 0, StreamConfig::default()).unwrap();
+        let s = wire_u64(&mut t, a, 0, b, 0).unwrap();
         assert_eq!(s, StreamId(0));
         assert_eq!(t.num_kernels(), 2);
         assert_eq!(t.streams().len(), 1);
@@ -265,8 +309,8 @@ mod tests {
     fn rejects_unknown_kernels() {
         let mut t = Topology::new("t");
         let a = t.add_kernel(src());
-        assert!(t.connect::<u64>(a, 0, KernelId(5), 0, StreamConfig::default()).is_err());
-        assert!(t.connect::<u64>(KernelId(5), 0, a, 0, StreamConfig::default()).is_err());
+        assert!(wire_u64(&mut t, a, 0, KernelId(5), 0).is_err());
+        assert!(wire_u64(&mut t, KernelId(5), 0, a, 0).is_err());
     }
 
     #[test]
@@ -275,8 +319,8 @@ mod tests {
         let a = t.add_kernel(src());
         let b = t.add_kernel(snk());
         let c = t.add_kernel(snk());
-        t.connect::<u64>(a, 0, b, 0, StreamConfig::default()).unwrap();
-        assert!(t.connect::<u64>(a, 0, c, 0, StreamConfig::default()).is_err());
+        wire_u64(&mut t, a, 0, b, 0).unwrap();
+        assert!(wire_u64(&mut t, a, 0, c, 0).is_err());
     }
 
     #[test]
@@ -292,15 +336,16 @@ mod tests {
         }
         let mut t = Topology::new("e");
         let a = t.add_kernel(src());
-        let (split, merge) =
-            t.add_elastic_stage("st", ElasticStageConfig::default(), |_| Id).unwrap();
+        let stage = t.add_elastic_stage("st", ElasticStageConfig::default(), |_| Id).unwrap();
         let b = t.add_kernel(snk());
-        t.connect::<u64>(a, 0, split, 0, StreamConfig::default()).unwrap();
-        t.connect::<u64>(merge, 0, b, 0, StreamConfig::default()).unwrap();
+        // The stage's typed handles wire directly — no port indices, and
+        // the u64 item type is inferred from `Replicable::{In, Out}`.
+        t.connect(Outlet::new(a, 0), stage.inlet(), StreamConfig::default()).unwrap();
+        t.connect(stage.outlet(), Inlet::new(b, 0), StreamConfig::default()).unwrap();
         t.validate().unwrap();
         assert_eq!(t.elastic_stages().len(), 1);
-        assert_eq!(t.kernel_name(split), "st-split");
-        assert_eq!(t.kernel_name(merge), "st-merge");
+        assert_eq!(t.kernel_name(stage.split), "st-split");
+        assert_eq!(t.kernel_name(stage.merge), "st-merge");
         assert_eq!(t.elastic_stages()[0].stage.replicas(), 1);
         // Dropping the (never-run) topology must join the replica workers
         // — covered by ReplicaSet's Drop.
@@ -312,7 +357,7 @@ mod tests {
         let a = t.add_kernel(src());
         let b = t.add_kernel(snk());
         // Wire output port 1 with port 0 missing.
-        t.connect::<u64>(a, 1, b, 0, StreamConfig::default()).unwrap();
+        wire_u64(&mut t, a, 1, b, 0).unwrap();
         assert!(t.validate().is_err());
     }
 }

@@ -10,10 +10,13 @@
 //! own service time. Dual-phase variants shift the distribution mean
 //! halfway through (by items sent) for the Fig. 10/14/15 experiments.
 
+use crate::flow::Flow;
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
+use crate::queue::StreamConfig;
 use crate::rng::dist::{DistKind, Distribution};
 use crate::rng::ServiceProcess;
 use crate::timing::TimeRef;
+use crate::topology::{StreamId, Topology};
 
 /// The micro-benchmark item: 8 bytes, exactly as the paper's setup.
 pub type Item = u64;
@@ -88,6 +91,62 @@ impl WorkloadSpec {
     }
 }
 
+/// The paper's Fig.-1 tandem topology, compiled: rate-controlled
+/// producer → one stream → rate-controlled consumer. Built here **once**
+/// (through the typed [`Flow`] builder) instead of being hand-wired by
+/// every campaign, bench, example, and CLI path.
+pub struct Tandem {
+    /// The two-kernel graph, ready for
+    /// [`Session::run`](crate::flow::Session::run).
+    pub topology: Topology,
+    /// The single producer→consumer stream (the monitored queue).
+    pub stream: StreamId,
+}
+
+/// Build the Fig.-1 tandem: `producer` pushes `items` 8-byte items under
+/// its service process, `consumer` pops under its own, across one stream
+/// configured by `stream`.
+pub fn tandem(
+    name: impl Into<String>,
+    producer: WorkloadSpec,
+    consumer: WorkloadSpec,
+    items: u64,
+    stream: StreamConfig,
+) -> crate::Result<Tandem> {
+    let flow = Flow::new(name)
+        .source::<Item>(Box::new(RateControlledProducer::new("producer", producer, items)))
+        .sink_with(Box::new(RateControlledConsumer::new("consumer", consumer)), stream)?;
+    let stream = flow.last_stream().expect("tandem wires exactly one stream");
+    Ok(Tandem { topology: flow.finish(), stream })
+}
+
+/// The **no-catch-up deadline rule** shared by every paced kernel
+/// ([`RateControlledProducer`], [`PacedProducer`], the Rabin–Karp
+/// `PacedSegmenter`): the next deadline steps from the later of the
+/// previous deadline and *now*. A while-loop server that was preempted
+/// (or blocked) did not do work in the meantime, so the next item still
+/// costs a full step from now — catch-up pacing would emit bursts after
+/// a descheduling stall, precisely the "faster than the true service
+/// rate" artifact Fig. 3 warns about, but as a systematic bias rather
+/// than occasional noise.
+#[derive(Debug, Default)]
+pub struct Pacer {
+    next_deadline_ns: Option<u64>,
+}
+
+impl Pacer {
+    /// Advance the pacing state by `step_ns` and return the absolute
+    /// deadline to wait for.
+    pub fn next_deadline(&mut self, now_ns: u64, step_ns: u64) -> u64 {
+        let d = match self.next_deadline_ns {
+            Some(d) => d.max(now_ns) + step_ns,
+            None => now_ns + step_ns,
+        };
+        self.next_deadline_ns = Some(d);
+        d
+    }
+}
+
 /// Producer kernel: burns service time, pushes `total_items`, then Done.
 pub struct RateControlledProducer {
     name: String,
@@ -97,7 +156,7 @@ pub struct RateControlledProducer {
     time: TimeRef,
     /// Deadline-based pacing keeps the long-run rate exact even when
     /// individual sleeps overshoot.
-    next_deadline_ns: Option<u64>,
+    pacer: Pacer,
 }
 
 impl RateControlledProducer {
@@ -108,7 +167,7 @@ impl RateControlledProducer {
             total_items,
             sent: 0,
             time: TimeRef::new(),
-            next_deadline_ns: None,
+            pacer: Pacer::default(),
         }
     }
 
@@ -128,18 +187,7 @@ impl Kernel for RateControlledProducer {
             return KernelStatus::Done;
         }
         let service_ns = self.spec.process.next_service_ns();
-        let now = self.time.now_ns();
-        // No catch-up: a while-loop server that was preempted (or blocked)
-        // did not do work in the meantime, so the next item still costs a
-        // full service time from *now*. (Catch-up pacing would emit bursts
-        // after a descheduling stall — precisely the "faster than the true
-        // service rate" artifact Fig. 3 warns about, but as a systematic
-        // bias rather than occasional noise.)
-        let deadline = match self.next_deadline_ns {
-            Some(d) => d.max(now) + service_ns as u64,
-            None => now + service_ns as u64,
-        };
-        self.next_deadline_ns = Some(deadline);
+        let deadline = self.pacer.next_deadline(self.time.now_ns(), service_ns as u64);
         self.time.spin_until(deadline);
         let out = ctx.output::<Item>(0).expect("producer needs output port 0");
         if out.push(self.sent).is_err() {
@@ -239,7 +287,7 @@ pub struct PacedProducer {
     burst: u64,
     sent: u64,
     time: TimeRef,
-    next_deadline_ns: Option<u64>,
+    pacer: Pacer,
 }
 
 impl PacedProducer {
@@ -257,7 +305,7 @@ impl PacedProducer {
             burst: 1,
             sent: 0,
             time: TimeRef::new(),
-            next_deadline_ns: None,
+            pacer: Pacer::default(),
         }
     }
 
@@ -285,12 +333,7 @@ impl Kernel for PacedProducer {
             return KernelStatus::Done;
         }
         let step = self.interval_ns.saturating_mul(self.burst);
-        let now = self.time.now_ns();
-        let deadline = match self.next_deadline_ns {
-            Some(d) => d.max(now) + step,
-            None => now + step,
-        };
-        self.next_deadline_ns = Some(deadline);
+        let deadline = self.pacer.next_deadline(self.time.now_ns(), step);
         self.time.wait_until_with_tail(deadline, 20_000);
         let out = ctx.output::<Item>(0).expect("producer needs output port 0");
         let hi = (self.sent + self.burst).min(self.total_items);
@@ -369,10 +412,17 @@ impl crate::elastic::Replicable for PhasedServiceWorker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::monitor::MonitorConfig;
-    use crate::queue::StreamConfig;
-    use crate::scheduler::Scheduler;
-    use crate::topology::Topology;
+    use crate::flow::{RunOptions, Session};
+
+    #[test]
+    fn pacer_never_catches_up() {
+        let mut p = Pacer::default();
+        assert_eq!(p.next_deadline(100, 10), 110);
+        // On time: steps from the previous deadline (long-run rate exact).
+        assert_eq!(p.next_deadline(105, 10), 120);
+        // Stalled far past the deadline: steps from *now* — no burst.
+        assert_eq!(p.next_deadline(500, 10), 510);
+    }
 
     #[test]
     fn spec_rates() {
@@ -388,25 +438,25 @@ mod tests {
         // should match N · service_time within 30%.
         let rate = 8.0; // MB/s → 1 µs per 8-byte item
         let items = 50_000u64;
-        let mut topo = Topology::new("wl");
-        let p = topo.add_kernel(Box::new(RateControlledProducer::new(
-            "prod",
+        let t = tandem(
+            "wl",
             WorkloadSpec::fixed_rate_mbps(rate),
-            items,
-        )));
-        let c = topo.add_kernel(Box::new(RateControlledConsumer::new(
-            "cons",
             WorkloadSpec::fixed_rate_mbps(100.0), // effectively unconstrained
-        )));
-        topo.connect::<Item>(p, 0, c, 0, StreamConfig::default().with_capacity(4096))
-            .unwrap();
-        let report = Scheduler::new(topo).with_monitoring(MonitorConfig::disabled()).run().unwrap();
+            items,
+            StreamConfig::default().with_capacity(4096),
+        )
+        .unwrap();
+        let report = Session::run(t.topology, RunOptions::default()).unwrap();
         let expect_ns = items as f64 * 1000.0;
         let got = report.wall_ns as f64;
         // Loose bound: debug builds + parallel test load can stretch the
         // wall clock; the paced producer can never run *faster* though.
         assert!(got > 0.9 * expect_ns, "wall {got} ns impossibly fast (expected ≥ {expect_ns})");
         assert!(got < 3.0 * expect_ns, "wall {got} ns vs expected {expect_ns} ns");
+        // The tandem exposes its single stream for rate lookups.
+        let (pushes, pops) = report.stream_totals["producer.0 -> consumer.0"];
+        assert_eq!((pushes, pops), (items, items));
+        assert_eq!(t.stream.0, 0);
     }
 
     #[test]
@@ -439,14 +489,15 @@ mod tests {
     fn paced_producer_realizes_rate_without_spinning() {
         let rate = 20_000.0; // items/sec → 50 µs interval
         let items = 2_000u64;
-        let mut topo = Topology::new("paced");
-        let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
-            "paced", rate, items,
-        )));
-        let c = topo.add_kernel(Box::new(ClosureSinkCounter::default()));
-        topo.connect::<Item>(p, 0, c, 0, StreamConfig::default().with_capacity(4096)).unwrap();
+        let flow = Flow::new("paced")
+            .stream_defaults(StreamConfig::default().with_capacity(4096))
+            .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec(
+                "paced", rate, items,
+            )))
+            .sink(Box::new(ClosureSinkCounter::default()))
+            .unwrap();
         let t0 = TimeRef::new().now_ns();
-        Scheduler::new(topo).run().unwrap();
+        Session::run_flow(flow, RunOptions::default()).unwrap();
         let dt = (TimeRef::new().now_ns() - t0) as f64 / 1.0e9;
         let expect = items as f64 / rate;
         assert!(dt > 0.9 * expect, "{dt}s impossibly fast (expected ≥ {expect}s)");
@@ -461,18 +512,16 @@ mod tests {
         let items = 20_000u64;
         let delivered = Arc::new(AtomicU64::new(0));
         let d2 = delivered.clone();
-        let mut topo = Topology::new("burst");
-        let p = topo.add_kernel(Box::new(
-            PacedProducer::from_rate_items_per_sec("burst", rate, items).with_burst(64),
-        ));
-        let c = topo.add_kernel(Box::new(crate::kernel::ClosureSink::new(
-            "cnt",
-            move |_: Item| {
+        let flow = Flow::new("burst")
+            .stream_defaults(StreamConfig::default().with_capacity(4096))
+            .source::<Item>(Box::new(
+                PacedProducer::from_rate_items_per_sec("burst", rate, items).with_burst(64),
+            ))
+            .sink(Box::new(crate::kernel::ClosureSink::new("cnt", move |_: Item| {
                 d2.fetch_add(1, Ordering::Relaxed);
-            },
-        )));
-        topo.connect::<Item>(p, 0, c, 0, StreamConfig::default().with_capacity(4096)).unwrap();
-        Scheduler::new(topo).with_monitoring(MonitorConfig::disabled()).run().unwrap();
+            })))
+            .unwrap();
+        Session::run_flow(flow, RunOptions::default()).unwrap();
         assert_eq!(delivered.load(Ordering::Relaxed), items, "burst lost items");
     }
 

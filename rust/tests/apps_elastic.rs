@@ -26,10 +26,10 @@ fn elastic_matmul_is_bit_identical_to_static_across_seeds() {
             seed,
             ..Default::default()
         };
-        let elastic = run_matmul(&base, MonitorConfig::disabled()).unwrap();
+        let elastic = run_matmul(&base, RunOptions::default()).unwrap();
         let mut fixed_cfg = base.clone();
         fixed_cfg.static_degree = Some(3);
-        let fixed = run_matmul(&fixed_cfg, MonitorConfig::disabled()).unwrap();
+        let fixed = run_matmul(&fixed_cfg, RunOptions::default()).unwrap();
         // Per-block compute is byte-for-byte the same code in both
         // wirings and blocks land in C by row index, so the products are
         // bit-identical — not merely close.
@@ -63,10 +63,10 @@ fn elastic_rabin_karp_matches_static_across_configs() {
             segment_bytes,
             ..Default::default()
         };
-        let elastic = run_rabin_karp(&base, MonitorConfig::disabled()).unwrap();
+        let elastic = run_rabin_karp(&base, RunOptions::default()).unwrap();
         let mut fixed_cfg = base.clone();
         fixed_cfg.static_degree = Some(n);
-        let fixed = run_rabin_karp(&fixed_cfg, MonitorConfig::disabled()).unwrap();
+        let fixed = run_rabin_karp(&fixed_cfg, RunOptions::default()).unwrap();
         // Both sides are order-normalized (sorted, deduplicated), so
         // equality is exact.
         assert_eq!(
@@ -102,10 +102,6 @@ fn coordinated_controller_scales_loaded_stage_and_refuses_starved_one() {
     // control plane, on a real scheduled pipeline.
     let rate = 2_000.0;
     let items = 2_500u64;
-    let mut topo = Topology::new("coupled");
-    let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
-        "prod", rate, items,
-    )));
     let stage_cfg = |max: usize| ElasticStageConfig {
         policy: ElasticPolicy {
             target_rho: 0.7,
@@ -117,43 +113,34 @@ fn coordinated_controller_scales_loaded_stage_and_refuses_starved_one() {
         initial_replicas: 1,
         lane_capacity: 128,
     };
-    let (work_split, work_merge) = topo
-        .add_elastic_stage("work", stage_cfg(4), |_| {
-            PhasedServiceWorker::new(2_000_000, 2_000_000, 0)
-        })
-        .unwrap();
-    let (relay_split, relay_merge) =
-        topo.add_elastic_stage("relay", stage_cfg(4), |_| Ident).unwrap();
     let count = Arc::new(AtomicU64::new(0));
     let c2 = count.clone();
     let mut expect = 0u64;
-    let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |v: Item| {
-        assert_eq!(v, expect, "reordered delivery");
-        expect += 1;
-        c2.fetch_add(1, Ordering::Relaxed);
-    })));
-    topo.connect::<Item>(p, 0, work_split, 0, StreamConfig::default().with_capacity(1024))
-        .unwrap();
-    topo.connect::<Item>(
-        work_merge,
-        0,
-        relay_split,
-        0,
-        StreamConfig::default().with_capacity(1024),
-    )
-    .unwrap();
-    topo.connect::<Item>(relay_merge, 0, snk, 0, StreamConfig::default().with_capacity(1024))
+    // prod → work stage → relay stage → sink, one typed chain.
+    let flow = Flow::new("coupled")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec("prod", rate, items)))
+        .elastic("work", stage_cfg(4), |_| PhasedServiceWorker::new(2_000_000, 2_000_000, 0))
+        .unwrap()
+        .elastic("relay", stage_cfg(4), |_| Ident)
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: Item| {
+            assert_eq!(v, expect, "reordered delivery");
+            expect += 1;
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
         .unwrap();
 
-    let report = Scheduler::new(topo)
-        .with_elastic(ElasticConfig {
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_elastic(ElasticConfig {
             tick: Duration::from_millis(5),
             buffer_advice: false,
             worker_budget: Some(6),
             ..Default::default()
-        })
-        .run()
-        .unwrap();
+        }),
+    )
+    .unwrap();
 
     assert_eq!(count.load(Ordering::Relaxed), items, "item loss through the coupled stages");
     let ups_work = report
@@ -197,4 +184,133 @@ fn coordinated_controller_scales_loaded_stage_and_refuses_starved_one() {
     assert!(work_tr.points.len() >= 2, "no replication recorded: {work_tr:?}");
     // Blocked fractions were threaded through to the report.
     assert_eq!(report.stream_blocked.len(), 3, "one entry per stream");
+}
+
+#[test]
+fn phase_shifting_rabin_karp_rescales_hash_stage_after_shift() {
+    // The ROADMAP's phase-shifting **app** workload: a paced segment
+    // stream feeds the real Rabin–Karp hash/verify stages, and a third of
+    // the way through the run the pattern mix shifts from one pattern to
+    // four of mixed lengths — per-segment hash cost ≈ 4×. The controller
+    // must rescale the hash stage *after* the phase change (real rolling-
+    // hash work, not a synthetic service-time stage), while matches stay
+    // sound against the naive oracle.
+    use streamflow::apps::rabin_karp::{
+        MultiPatternVerifyWorker, PacedSegmenter, PhasedPatternHashWorker, Segment,
+    };
+    use streamflow::timing::TimeRef;
+
+    let corpus = Arc::new(foobar_corpus(64 << 10));
+    let segment_bytes = 8 << 10;
+    let base = "foobar";
+    let shifted = ["foobar", "foobarfoobarfoobar", "obarfooba", "arf"];
+
+    // Calibrate the paced segment rate to the *measured* single-pattern
+    // scan cost so the nominal utilization holds across debug/release
+    // builds and loaded hosts: pre-shift ρ ≈ 0.45 (inside the hold band
+    // at 1 replica), post-shift ρ ≈ 1.8 (well above it).
+    let time = TimeRef::new();
+    let mut probe = PhasedPatternHashWorker::new(&[base], &[base], u64::MAX);
+    let seg_data = corpus[..segment_bytes].to_vec();
+    let reps = 8u64;
+    let t0 = time.now_ns();
+    for _ in 0..reps {
+        let _ = probe.process(Segment { offset: 0, data: seg_data.clone() });
+    }
+    let per_seg_ns = ((time.now_ns() - t0) / reps).max(20_000);
+    let rate = 0.45 * 1.0e9 / per_seg_ns as f64; // segments/sec at ρ ≈ 0.45
+    let secs = 3.0;
+    let total_segments = ((rate * secs) as u64).max(60);
+    let switch_at = time.now_ns() + ((secs / 3.0) * 1.0e9) as u64;
+
+    let stage_cfg = |max: usize| ElasticStageConfig {
+        policy: ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: max,
+            cooldown_ticks: 4,
+        },
+        initial_replicas: 1,
+        lane_capacity: 64,
+    };
+
+    let found = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let f2 = found.clone();
+    let hash_proto = PhasedPatternHashWorker::new(&[base], &shifted, switch_at);
+    let verify_proto = MultiPatternVerifyWorker::new(corpus.clone(), &shifted);
+    let flow = Flow::new("rk-phase")
+        .stream_defaults(StreamConfig::default().with_capacity(256))
+        .source::<Segment>(Box::new(PacedSegmenter::new(
+            corpus.clone(),
+            segment_bytes,
+            base.len() - 1,
+            rate,
+            total_segments,
+        )))
+        .elastic("hash", stage_cfg(4), move |_| hash_proto.replica())
+        .unwrap()
+        .elastic("verify", stage_cfg(2), move |_| verify_proto.replica())
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |batch: Vec<usize>| {
+            f2.lock().unwrap().extend(batch);
+        })))
+        .unwrap();
+
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_elastic(ElasticConfig {
+            tick: Duration::from_millis(5),
+            buffer_advice: false,
+            worker_budget: Some(6),
+            ..Default::default()
+        }),
+    )
+    .unwrap();
+
+    // The hash stage replicated, and only once the shifted mix was live —
+    // the pre-shift load sits inside the hold band at one replica. 100 ms
+    // of slack absorbs tick quantization around the switch instant.
+    let hash_ups: Vec<_> = report
+        .elastic_events
+        .iter()
+        .filter(|e| e.target == "hash" && matches!(e.action, ElasticAction::ScaleUp { .. }))
+        .collect();
+    assert!(
+        !hash_ups.is_empty(),
+        "pattern-mix shift never replicated the hash stage: {:?}",
+        report.elastic_events
+    );
+    for ev in &hash_ups {
+        assert!(
+            ev.at_ns + 100_000_000 >= switch_at,
+            "hash scale-up before the phase change (at {} ns, switch {} ns): {ev}",
+            ev.at_ns,
+            switch_at
+        );
+    }
+    // Both app stages ran under one controller.
+    assert_eq!(report.replica_trajectories.len(), 2, "hash + verify trajectories");
+
+    // Matches stay sound: every reported position is a genuine match of
+    // some pattern in the mix (no hash-collision leakage), and the base
+    // pattern — active in both phases — is fully covered by the first
+    // corpus pass.
+    let mut got = std::mem::take(&mut *found.lock().unwrap());
+    got.sort_unstable();
+    got.dedup();
+    let mut union: Vec<usize> = shifted
+        .iter()
+        .flat_map(|p| naive_matches(&corpus, p.as_bytes()))
+        .collect();
+    union.sort_unstable();
+    union.dedup();
+    assert!(got.iter().all(|p| union.binary_search(p).is_ok()), "false positives in matches");
+    let base_expect = naive_matches(&corpus, base.as_bytes());
+    assert!(
+        base_expect.iter().all(|p| got.binary_search(p).is_ok()),
+        "base-pattern matches lost ({} expected, {} found)",
+        base_expect.len(),
+        got.len()
+    );
 }

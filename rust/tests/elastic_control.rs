@@ -159,12 +159,7 @@ fn elastic_stage_preserves_order_under_scheduler() {
     // A pinned 3-replica stage inside a real scheduled run: every item
     // arrives exactly once, in order, and the replica workers are joined.
     let items = 20_000u64;
-    let mut topo = Topology::new("elastic-e2e");
     let mut i = 0u64;
-    let src = topo.add_kernel(Box::new(ClosureSource::new("src", move || {
-        i += 1;
-        (i <= items).then_some(i)
-    })));
 
     struct AddOne;
     impl Replicable for AddOne {
@@ -179,16 +174,21 @@ fn elastic_stage_preserves_order_under_scheduler() {
         initial_replicas: 3,
         lane_capacity: 64,
     };
-    let (split, merge) = topo.add_elastic_stage("add", stage_cfg, |_| AddOne).unwrap();
 
     let out = Arc::new(Mutex::new(Vec::new()));
     let o2 = out.clone();
-    let snk = topo
-        .add_kernel(Box::new(ClosureSink::new("snk", move |v: u64| o2.lock().unwrap().push(v))));
-    topo.connect::<u64>(src, 0, split, 0, StreamConfig::default().with_capacity(1024)).unwrap();
-    topo.connect::<u64>(merge, 0, snk, 0, StreamConfig::default().with_capacity(1024)).unwrap();
+    let flow = Flow::new("elastic-e2e")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<u64>(Box::new(ClosureSource::new("src", move || {
+            i += 1;
+            (i <= items).then_some(i)
+        })))
+        .elastic("add", stage_cfg, |_| AddOne)
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: u64| o2.lock().unwrap().push(v))))
+        .unwrap();
 
-    let report = Scheduler::new(topo).run().unwrap();
+    let report = Session::run_flow(flow, RunOptions::default()).unwrap();
     let v = out.lock().unwrap();
     assert_eq!(v.len(), items as usize, "item loss or duplication");
     for (idx, &x) in v.iter().enumerate() {
@@ -207,10 +207,6 @@ fn controller_scales_up_under_overload_and_audits_actions() {
     // flap.
     let rate = 2_000.0;
     let items = 2_500u64;
-    let mut topo = Topology::new("elastic-scale");
-    let p = topo.add_kernel(Box::new(PacedProducer::from_rate_items_per_sec(
-        "prod", rate, items,
-    )));
     let stage_cfg = ElasticStageConfig {
         policy: ElasticPolicy {
             target_rho: 0.7,
@@ -222,29 +218,29 @@ fn controller_scales_up_under_overload_and_audits_actions() {
         initial_replicas: 1,
         lane_capacity: 128,
     };
-    // Constant 2 ms (sleep-based) service — μ ≈ 500 items/s per replica.
-    let (split, merge) = topo
-        .add_elastic_stage("work", stage_cfg, |_| {
-            PhasedServiceWorker::new(2_000_000, 2_000_000, 0)
-        })
-        .unwrap();
     let count = Arc::new(AtomicU64::new(0));
     let c2 = count.clone();
     let mut expect = 0u64;
-    let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |v: Item| {
-        assert_eq!(v, expect, "reordered delivery");
-        expect += 1;
-        c2.fetch_add(1, Ordering::Relaxed);
-    })));
-    topo.connect::<Item>(p, 0, split, 0, StreamConfig::default().with_capacity(1024)).unwrap();
-    topo.connect::<Item>(merge, 0, snk, 0, StreamConfig::default().with_capacity(1024)).unwrap();
+    // Constant 2 ms (sleep-based) service — μ ≈ 500 items/s per replica.
+    let flow = Flow::new("elastic-scale")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec("prod", rate, items)))
+        .elastic("work", stage_cfg, |_| PhasedServiceWorker::new(2_000_000, 2_000_000, 0))
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: Item| {
+            assert_eq!(v, expect, "reordered delivery");
+            expect += 1;
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
 
     let ecfg = ElasticConfig {
         tick: Duration::from_millis(5),
         buffer_advice: false,
         ..Default::default()
     };
-    let report = Scheduler::new(topo).with_elastic(ecfg).run().unwrap();
+    let report =
+        Session::run_flow(flow, RunOptions::default().with_elastic(ecfg)).unwrap();
 
     assert_eq!(count.load(Ordering::Relaxed), items);
     let ups = report

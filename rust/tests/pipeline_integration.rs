@@ -80,7 +80,8 @@ fn fanout_fanin_delivers_every_item_once() {
         (i <= items).then_some(i)
     })));
     let split = topo.add_kernel(Box::new(Splitter { n: n_workers, next: 0 }));
-    topo.connect::<u64>(src, 0, split, 0, StreamConfig::default()).unwrap();
+    topo.connect(Outlet::<u64>::new(src, 0), Inlet::new(split, 0), StreamConfig::default())
+        .unwrap();
 
     let sum = Arc::new(AtomicU64::new(0));
     let count = Arc::new(AtomicU64::new(0));
@@ -106,13 +107,21 @@ fn fanout_fanin_delivers_every_item_once() {
             }
         }
         let worker = topo.add_kernel(Box::new(Identity));
-        topo.connect::<u64>(split, w, worker, 0, StreamConfig::default().with_capacity(64))
-            .unwrap();
-        topo.connect::<u64>(worker, 0, merge, w, StreamConfig::default().with_capacity(64))
-            .unwrap();
+        topo.connect(
+            Outlet::<u64>::new(split, w),
+            Inlet::new(worker, 0),
+            StreamConfig::default().with_capacity(64),
+        )
+        .unwrap();
+        topo.connect(
+            Outlet::<u64>::new(worker, 0),
+            Inlet::new(merge, w),
+            StreamConfig::default().with_capacity(64),
+        )
+        .unwrap();
     }
 
-    let report = Scheduler::new(topo).run().unwrap();
+    let report = Session::run(topo, RunOptions::default()).unwrap();
     assert_eq!(count.load(Ordering::Relaxed), items);
     assert_eq!(sum.load(Ordering::Relaxed), items * (items + 1) / 2);
     assert!(report.wall_ns > 0);
@@ -148,16 +157,22 @@ fn deep_chain_preserves_order_and_count() {
     let mut prev = src;
     for _ in 0..depth {
         let k = topo.add_kernel(Box::new(Inc));
-        topo.connect::<u64>(prev, 0, k, 0, StreamConfig::default().with_capacity(32)).unwrap();
+        topo.connect(
+            Outlet::<u64>::new(prev, 0),
+            Inlet::new(k, 0),
+            StreamConfig::default().with_capacity(32),
+        )
+        .unwrap();
         prev = k;
     }
     let out = Arc::new(Mutex::new(Vec::new()));
     let out2 = out.clone();
     let snk = topo
         .add_kernel(Box::new(ClosureSink::new("snk", move |v: u64| out2.lock().unwrap().push(v))));
-    topo.connect::<u64>(prev, 0, snk, 0, StreamConfig::default().with_capacity(32)).unwrap();
+    topo.connect(Outlet::<u64>::new(prev, 0), Inlet::new(snk, 0), StreamConfig::default().with_capacity(32))
+        .unwrap();
 
-    Scheduler::new(topo).run().unwrap();
+    Session::run(topo, RunOptions::default()).unwrap();
     let v = out.lock().unwrap();
     assert_eq!(v.len(), items as usize);
     for (idx, &x) in v.iter().enumerate() {
@@ -181,8 +196,10 @@ fn tiny_capacity_one_queue_still_flows() {
     let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |_: u64| {
         n2.fetch_add(1, Ordering::Relaxed);
     })));
-    let sid = topo.connect::<u64>(src, 0, snk, 0, StreamConfig::default().with_capacity(1)).unwrap();
-    let report = Scheduler::new(topo).run().unwrap();
+    let sid = topo
+        .connect(Outlet::<u64>::new(src, 0), Inlet::new(snk, 0), StreamConfig::default().with_capacity(1))
+        .unwrap();
+    let report = Session::run(topo, RunOptions::default()).unwrap();
     assert_eq!(n.load(Ordering::Relaxed), items);
     let (pushes, pops) = report.stream_totals[&format!("src.0 -> snk.{}", 0)];
     assert_eq!(pushes, items);
@@ -199,11 +216,10 @@ fn monitored_app_shuts_down_cleanly_even_when_too_short_to_converge() {
         (i <= 100).then_some(i)
     })));
     let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", |_: u64| {})));
-    topo.connect::<u64>(src, 0, snk, 0, StreamConfig::default()).unwrap();
-    let report = Scheduler::new(topo)
-        .with_monitoring(MonitorConfig::practical())
-        .run()
+    topo.connect(Outlet::<u64>::new(src, 0), Inlet::new(snk, 0), StreamConfig::default())
         .unwrap();
+    let report =
+        Session::run(topo, RunOptions::monitored(MonitorConfig::practical())).unwrap();
     // 100 items flow in microseconds; the monitor must not hang the run.
     assert!(report.estimates.is_empty() || !report.estimates.is_empty()); // no panic/hang
     let (pushes, pops) = report.stream_totals["src.0 -> snk.0"];
@@ -219,8 +235,9 @@ fn empty_source_closes_immediately() {
     let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |_: u64| {
         n2.fetch_add(1, Ordering::Relaxed);
     })));
-    topo.connect::<u64>(src, 0, snk, 0, StreamConfig::default()).unwrap();
-    Scheduler::new(topo).run().unwrap();
+    topo.connect(Outlet::<u64>::new(src, 0), Inlet::new(snk, 0), StreamConfig::default())
+        .unwrap();
+    Session::run(topo, RunOptions::default()).unwrap();
     assert_eq!(n.load(Ordering::Relaxed), 0);
 }
 
@@ -230,8 +247,9 @@ fn invalid_topology_fails_before_spawning() {
     let src = topo.add_kernel(Box::new(ClosureSource::new("src", move || None::<u64>)));
     let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", |_: u64| {})));
     // Output port 2 with 0/1 missing → validation error at run().
-    topo.connect::<u64>(src, 2, snk, 0, StreamConfig::default()).unwrap();
-    assert!(Scheduler::new(topo).run().is_err());
+    topo.connect(Outlet::<u64>::new(src, 2), Inlet::new(snk, 0), StreamConfig::default())
+        .unwrap();
+    assert!(Session::run(topo, RunOptions::default()).is_err());
 }
 
 #[test]
@@ -266,8 +284,14 @@ fn heterogeneous_item_types_coexist() {
     let snk = topo.add_kernel(Box::new(ClosureSink::new("snk", move |s: String| {
         out2.lock().unwrap().push(s)
     })));
-    topo.connect::<u64>(src, 0, mid, 0, StreamConfig::default()).unwrap();
-    topo.connect::<String>(mid, 0, snk, 0, StreamConfig::default().with_item_bytes(16)).unwrap();
-    Scheduler::new(topo).run().unwrap();
+    topo.connect(Outlet::<u64>::new(src, 0), Inlet::new(mid, 0), StreamConfig::default())
+        .unwrap();
+    topo.connect(
+        Outlet::<String>::new(mid, 0),
+        Inlet::new(snk, 0),
+        StreamConfig::default().with_item_bytes(16),
+    )
+    .unwrap();
+    Session::run(topo, RunOptions::default()).unwrap();
     assert_eq!(*out.lock().unwrap(), vec!["#1", "#2", "#3", "#4", "#5"]);
 }
