@@ -1,0 +1,179 @@
+//! Placement & host-aware budget ledger → `BENCH_placement.json`.
+//!
+//! Two questions, answered with numbers:
+//!
+//! 1. **What does host awareness cost per control epoch?** One controller
+//!    tick with a `Fixed` budget vs a `HostAware` budget (which adds a
+//!    host-load sample + budget evaluation). The per-tick delta is the
+//!    entire run-time price of tracking the machine.
+//! 2. **What does `PlacementPolicy::Pack` do to a real elastic run?**
+//!    Identical paced workloads, pinned vs unpinned, wall-clock compared
+//!    — plus the pin accounting, so a denied-affinity host (containers)
+//!    shows up as the annotated no-op it is rather than a fake win.
+//!
+//! `SF_BENCH_SECS` / `SF_SCALE` shrink everything for CI smoke runs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use streamflow::bench::Runner;
+use streamflow::config::{env_budget, env_f64, Json};
+use streamflow::elastic::{
+    ElasticConfig, ElasticController, ElasticStageConfig, StageBinding, StreamBinding,
+};
+use streamflow::kernel::ClosureSink;
+use streamflow::placement::{BudgetPolicy, CpuTopology, SyntheticLoad};
+use streamflow::prelude::*;
+use streamflow::queue::{instrumented, StreamConfig};
+use streamflow::report::figures_dir;
+use streamflow::testutil::ScriptedStage;
+use streamflow::workload::{Item, PacedProducer, PhasedServiceWorker};
+
+fn controller_with(budget: BudgetPolicy) -> ElasticController {
+    let stage = ScriptedStage::new(
+        "bench",
+        2,
+        ElasticPolicy { max_replicas: 8, ..Default::default() },
+        20,
+    );
+    let (_upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(4096));
+    let (fwd_tx, _fwd_rx) = std::sync::mpsc::channel();
+    ElasticController::new(
+        ElasticConfig {
+            buffer_advice: false,
+            worker_budget: budget,
+            load_source: Some(SyntheticLoad::handle_of(&SyntheticLoad::new(0.3))),
+            host_cpus_override: Some(8),
+            ..Default::default()
+        },
+        vec![StageBinding {
+            stage,
+            upstream: Some(StreamBinding {
+                id: StreamId(0),
+                label: "bench-up".into(),
+                handle,
+            }),
+            downstream: None,
+        }],
+        vec![],
+        fwd_tx,
+        Arc::new(AtomicBool::new(false)),
+    )
+}
+
+/// One elastic run under a paced load whose per-replica service rate
+/// drops mid-run (forces real scaling work); returns (wall secs, report).
+fn elastic_run(placement: PlacementPolicy, secs: f64) -> (f64, RunReport) {
+    let rate = 2_000.0;
+    let items = (rate * secs) as u64;
+    let t0 = streamflow::timing::TimeRef::new();
+    let switch_at = t0.now_ns() + (secs * 0.4 * 1.0e9) as u64;
+    let flow = Flow::new("placement-bench")
+        .stream_defaults(StreamConfig::default().with_capacity(2048))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec(
+            "prod", rate, items,
+        )))
+        .elastic(
+            "work",
+            ElasticStageConfig {
+                policy: ElasticPolicy { max_replicas: 4, cooldown_ticks: 4, ..Default::default() },
+                initial_replicas: 1,
+                lane_capacity: 256,
+            },
+            move |_| PhasedServiceWorker::new(400_000, 1_600_000, switch_at),
+        )
+        .expect("elastic stage")
+        .sink(Box::new(ClosureSink::new("snk", |_: Item| {})))
+        .expect("sink");
+    let start = t0.now_ns();
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default()
+            .with_elastic(ElasticConfig {
+                tick: Duration::from_millis(5),
+                buffer_advice: false,
+                // SF_BUDGET overrides the bench's budget policy, so the
+                // ledger can be re-cut under e.g. `host:0.2` without a
+                // code change.
+                worker_budget: env_budget("SF_BUDGET", BudgetPolicy::Fixed(4)),
+                ..Default::default()
+            })
+            .with_placement(placement),
+    )
+    .expect("run");
+    (((t0.now_ns() - start) as f64) / 1.0e9, report)
+}
+
+fn main() {
+    let scale = env_f64("SF_SCALE", 1.0);
+    let mut runner = Runner::new();
+
+    // ---- 1. controller-tick cost: fixed vs host-aware budget ----------
+    let mut fixed = controller_with(BudgetPolicy::Fixed(6));
+    let r_fixed = runner
+        .bench("controller_tick/fixed_budget", None, || fixed.step(0.005))
+        .ns
+        .mean;
+    let mut host = controller_with(BudgetPolicy::HostAware {
+        headroom: 0.1,
+        floor: 1,
+        ceil: 8,
+    });
+    let r_host = runner
+        .bench("controller_tick/host_aware_budget", None, || host.step(0.005))
+        .ns
+        .mean;
+    let host_report = host.into_report();
+
+    // ---- 2. elastic run: unpinned vs packed placement -----------------
+    let secs = (1.5 * scale).max(0.3);
+    let (unpinned_secs, _) = elastic_run(PlacementPolicy::Disabled, secs);
+    let (pinned_secs, pinned_report) = elastic_run(PlacementPolicy::Pack, secs);
+    println!(
+        "# elastic run: unpinned {unpinned_secs:.3}s, packed {pinned_secs:.3}s"
+    );
+    for line in pinned_report.scaling_timeline() {
+        println!("#   {line}");
+    }
+
+    let topo = CpuTopology::discover();
+    let (pinned_threads, denied_threads, pin_note) = pinned_report
+        .placement
+        .assignments
+        .first()
+        .map(|a| (a.pinned_threads, a.denied_threads, a.note.clone()))
+        .unwrap_or((0, 0, None));
+
+    let mut root = BTreeMap::new();
+    root.insert("tick_ns_fixed_budget".to_string(), Json::Num(r_fixed));
+    root.insert("tick_ns_host_aware".to_string(), Json::Num(r_host));
+    root.insert(
+        "host_aware_tick_overhead".to_string(),
+        Json::Num(if r_fixed > 0.0 { r_host / r_fixed } else { f64::NAN }),
+    );
+    root.insert(
+        "host_aware_budget_points".to_string(),
+        Json::Num(host_report.budget_timeline.len() as f64),
+    );
+    root.insert("unpinned_secs".to_string(), Json::Num(unpinned_secs));
+    root.insert("pinned_secs".to_string(), Json::Num(pinned_secs));
+    root.insert(
+        "pinned_over_unpinned".to_string(),
+        Json::Num(if unpinned_secs > 0.0 { pinned_secs / unpinned_secs } else { f64::NAN }),
+    );
+    root.insert("pinned_threads".to_string(), Json::Num(pinned_threads as f64));
+    root.insert("denied_threads".to_string(), Json::Num(denied_threads as f64));
+    root.insert(
+        "affinity_note".to_string(),
+        Json::Str(pin_note.unwrap_or_default()),
+    );
+    root.insert("cpu_topology_discovered".to_string(), Json::Bool(topo.is_discovered()));
+    root.insert("host_cpus".to_string(), Json::Num(topo.num_cpus() as f64));
+
+    let path = figures_dir().join("BENCH_placement.json");
+    std::fs::create_dir_all(figures_dir()).expect("figures dir");
+    std::fs::write(&path, Json::Obj(root).to_string()).expect("write json");
+    println!("# ledger: {}", path.display());
+}

@@ -493,7 +493,7 @@ fn run_rabin_karp_elastic(
     if opts.elastic.is_none() {
         opts.elastic = Some(ElasticConfig {
             tick: Duration::from_millis(5),
-            worker_budget: Some(pool),
+            worker_budget: crate::placement::BudgetPolicy::Fixed(pool),
             ..Default::default()
         });
     }

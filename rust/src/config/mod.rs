@@ -230,6 +230,16 @@ pub fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Budget-policy env override (`SF_BUDGET=6`, `SF_BUDGET=host:0.2`, …):
+/// how CI lanes and campaign scripts pick a
+/// [`BudgetPolicy`](crate::placement::BudgetPolicy) without code changes.
+pub fn env_budget(
+    key: &str,
+    default: crate::placement::BudgetPolicy,
+) -> crate::placement::BudgetPolicy {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +273,10 @@ mod tests {
     fn env_helpers_default() {
         assert_eq!(env_usize("SF_DOES_NOT_EXIST_XYZ", 7), 7);
         assert_eq!(env_f64("SF_DOES_NOT_EXIST_XYZ", 1.5), 1.5);
+        assert_eq!(
+            env_budget("SF_DOES_NOT_EXIST_XYZ", crate::placement::BudgetPolicy::Fixed(3)),
+            crate::placement::BudgetPolicy::Fixed(3)
+        );
     }
 
     #[test]

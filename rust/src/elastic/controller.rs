@@ -45,6 +45,10 @@ use std::time::{Duration, Instant};
 use crate::classify::DistributionClass;
 use crate::control::{BufferAdvisor, RateRegistry};
 use crate::monitor::{MonitorEvent, QueueEnd};
+use crate::placement::{
+    BudgetPolicy, CpuTopology, HostLoadMonitor, LoadSource, LoadSourceHandle,
+    ProcStatSource,
+};
 use crate::queue::MonitorHandle;
 use crate::timing::TimeRef;
 use crate::topology::StreamId;
@@ -145,6 +149,13 @@ pub struct ControlPlaneReport {
     /// Per-stage replica trajectories (non-empty whenever the controller
     /// ran with at least one registered stage).
     pub trajectories: Vec<StageTrajectory>,
+    /// The effective worker budget over the run: one `(at_ns, budget)`
+    /// point per change. Empty when the budget policy is
+    /// [`BudgetPolicy::Unlimited`].
+    pub budget_timeline: Vec<(u64, usize)>,
+    /// Degradation annotations (e.g. host load unreadable): the control
+    /// plane says when it is flying blind instead of guessing silently.
+    pub notes: Vec<String>,
 }
 
 /// Global control-plane knobs (per-stage knobs live in [`ElasticPolicy`]).
@@ -162,14 +173,25 @@ pub struct ElasticConfig {
     pub resize_cooldown_ticks: u32,
     /// Minimum relative capacity change worth applying (anti-thrash).
     pub resize_min_rel_change: f64,
-    /// Global cap on the summed replica count across every stage of the
-    /// topology (`None` = uncapped). The coordinated rule fits all stage
-    /// targets under it, trimming the least-loaded claimant first.
-    pub worker_budget: Option<usize>,
+    /// Global budget for the summed replica count across every stage of
+    /// the topology. [`BudgetPolicy::Fixed`] is the pre-0.4 per-run cap;
+    /// [`BudgetPolicy::HostAware`] recomputes the cap each control epoch
+    /// from observed idle host capacity (see [`crate::placement`]). The
+    /// coordinated rule fits all stage targets under the epoch's budget,
+    /// trimming the least-loaded claimant first.
+    pub worker_budget: BudgetPolicy,
     /// Mean worker read-blocked fraction of a tick at/above which a stage
     /// counts as starvation-bound (input-limited) and is refused
     /// scale-ups; also gates on the egress write-blocked fraction.
     pub starve_threshold: f64,
+    /// Host-load telemetry override for [`BudgetPolicy::HostAware`]
+    /// (tests/benches inject [`crate::placement::SyntheticLoad`]).
+    /// `None` ⇒ read `/proc/stat`.
+    pub load_source: Option<LoadSourceHandle>,
+    /// Pretend the host has this many online cpus when evaluating a
+    /// host-aware budget (deterministic tests/benches). `None` ⇒
+    /// discover via [`CpuTopology`].
+    pub host_cpus_override: Option<usize>,
 }
 
 impl Default for ElasticConfig {
@@ -181,8 +203,10 @@ impl Default for ElasticConfig {
             advisor: BufferAdvisor::default(),
             resize_cooldown_ticks: 20,
             resize_min_rel_change: 0.25,
-            worker_budget: None,
+            worker_budget: BudgetPolicy::Unlimited,
             starve_threshold: 0.5,
+            load_source: None,
+            host_cpus_override: None,
         }
     }
 }
@@ -240,6 +264,15 @@ pub struct ElasticController {
     trajectories: Vec<StageTrajectory>,
     stage_states: Vec<StageState>,
     stream_states: Vec<StreamState>,
+    /// Host-load sampler, present iff the budget policy is host-aware.
+    host_load: Option<HostLoadMonitor>,
+    /// Online logical-cpu count the host-aware budget is computed over.
+    host_cpus: usize,
+    /// `(at_ns, budget)` points, one per effective-budget change.
+    budget_timeline: Vec<(u64, usize)>,
+    last_budget: Option<usize>,
+    notes: Vec<String>,
+    budget_note_emitted: bool,
 }
 
 impl ElasticController {
@@ -261,6 +294,38 @@ impl ElasticController {
             })
             .collect();
         let stream_states = streams.iter().map(|_| StreamState::default()).collect();
+        let host_load = match &cfg.worker_budget {
+            BudgetPolicy::HostAware { .. } => {
+                let source: Arc<dyn LoadSource> = match &cfg.load_source {
+                    Some(h) => h.0.clone(),
+                    None => Arc::new(ProcStatSource::new()),
+                };
+                let mut m = HostLoadMonitor::new(source, cfg.ewma_alpha.clamp(0.01, 1.0));
+                // Baseline now, so the first control epoch already sees a
+                // real delta instead of reading as "unavailable".
+                let _ = m.tick();
+                Some(m)
+            }
+            _ => None,
+        };
+        // Topology discovery (a sysfs walk) is only paid when a
+        // host-aware budget will actually consume the cpu count. The
+        // sysfs count is clamped to `available_parallelism`, which is
+        // cgroup/affinity-aware: inside a cpuset-limited container the
+        // budget must be computed over the cpus *this process* may use,
+        // not the whole machine's.
+        let host_cpus = match &cfg.worker_budget {
+            BudgetPolicy::HostAware { .. } => cfg
+                .host_cpus_override
+                .unwrap_or_else(|| {
+                    let avail = std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(usize::MAX);
+                    CpuTopology::discover().num_cpus().min(avail)
+                })
+                .max(1),
+            _ => cfg.host_cpus_override.unwrap_or(1).max(1),
+        };
         ElasticController {
             cfg,
             stages,
@@ -274,6 +339,12 @@ impl ElasticController {
             trajectories,
             stage_states,
             stream_states,
+            host_load,
+            host_cpus,
+            budget_timeline: Vec::new(),
+            last_budget: None,
+            notes: Vec::new(),
+            budget_note_emitted: false,
         }
     }
 
@@ -328,7 +399,28 @@ impl ElasticController {
                 break;
             }
         }
-        ControlPlaneReport { events: self.events, trajectories: self.trajectories }
+        self.into_report()
+    }
+
+    /// Drive exactly one control tick without the event-pump thread —
+    /// the deterministic harness for tests and benches (synthetic host
+    /// load, scripted stages, epoch-precise assertions). `dt_secs` is
+    /// the pretended realized tick length.
+    pub fn step(&mut self, dt_secs: f64) {
+        if dt_secs > 0.0 {
+            self.tick(dt_secs);
+        }
+    }
+
+    /// Consume the controller and assemble its report (threadless runs;
+    /// `run` uses the same path at shutdown).
+    pub fn into_report(self) -> ControlPlaneReport {
+        ControlPlaneReport {
+            events: self.events,
+            trajectories: self.trajectories,
+            budget_timeline: self.budget_timeline,
+            notes: self.notes,
+        }
     }
 
     /// Fold one monitor event into the registries, then pass it through.
@@ -355,6 +447,7 @@ impl ElasticController {
     /// bottleneck should get.
     fn tick(&mut self, dt: f64) {
         let at_ns = self.time.now_ns();
+        let budget = self.effective_budget(at_ns);
         let mut inputs: Vec<(ElasticPolicy, StageSignals)> =
             Vec::with_capacity(self.stages.len());
         for i in 0..self.stages.len() {
@@ -363,8 +456,7 @@ impl ElasticController {
             inputs.push((policy, sig));
         }
         if !inputs.is_empty() {
-            let targets =
-                coordinate(&inputs, self.cfg.worker_budget, self.cfg.starve_threshold);
+            let targets = coordinate(&inputs, budget, self.cfg.starve_threshold);
             for (i, (&target, (policy, sig))) in
                 targets.iter().zip(&inputs).enumerate()
             {
@@ -374,6 +466,27 @@ impl ElasticController {
         if self.cfg.buffer_advice {
             self.tick_buffers(at_ns);
         }
+    }
+
+    /// Evaluate the budget policy for this epoch: sample host load when
+    /// the policy is host-aware, audit budget changes into the timeline,
+    /// and surface degradation notes exactly once.
+    fn effective_budget(&mut self, at_ns: u64) -> Option<usize> {
+        let external = self.host_load.as_mut().and_then(|m| m.tick());
+        let decision = self.cfg.worker_budget.evaluate(self.host_cpus, external);
+        if let Some(note) = decision.note {
+            if !self.budget_note_emitted {
+                self.budget_note_emitted = true;
+                self.notes.push(note);
+            }
+        }
+        if let Some(b) = decision.budget {
+            if self.last_budget != Some(b) {
+                self.last_budget = Some(b);
+                self.budget_timeline.push((at_ns, b));
+            }
+        }
+        decision.budget
     }
 
     /// Snapshot one stage's telemetry and fold it into the EWMAs.
@@ -793,7 +906,7 @@ mod tests {
             ElasticConfig {
                 buffer_advice: false,
                 ewma_alpha: 1.0,
-                worker_budget: Some(6),
+                worker_budget: BudgetPolicy::Fixed(6),
                 ..Default::default()
             },
         );
@@ -807,6 +920,117 @@ mod tests {
         let total = a.replicas() + b.replicas();
         assert!(total <= 6, "budget exceeded: a={} b={}", a.replicas(), b.replicas());
         assert!(a.replicas() > 1 && b.replicas() > 1, "budget starved a stage entirely");
+    }
+
+    #[test]
+    fn host_aware_budget_shrinks_and_regrows_with_injected_load() {
+        use crate::placement::SyntheticLoad;
+        // One overloaded stage that would claim 8 replicas. The host
+        // starts idle, then an external tenant takes ~75% of the
+        // machine, then leaves. The budget must follow within one
+        // control epoch of the (unsmoothed) load signal and the replica
+        // count must be trimmed back under it, then re-grown.
+        let policy = ElasticPolicy {
+            max_replicas: 8,
+            cooldown_ticks: 0,
+            ..Default::default()
+        };
+        let stage = FakeStage::busy(1, policy, 10); // μ = 1k/s at 10ms ticks
+        let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+        let load = SyntheticLoad::new(0.0);
+        let mut ctl = controller_for(
+            vec![StageBinding {
+                stage: stage.clone(),
+                upstream: Some(StreamBinding {
+                    id: StreamId(0),
+                    label: "src -> fake".into(),
+                    handle,
+                }),
+                downstream: None,
+            }],
+            ElasticConfig {
+                buffer_advice: false,
+                ewma_alpha: 1.0,
+                worker_budget: BudgetPolicy::HostAware { headroom: 0.0, floor: 1, ceil: 8 },
+                load_source: Some(SyntheticLoad::handle_of(&load)),
+                // Pretend an 8-cpu host regardless of the CI machine.
+                host_cpus_override: Some(8),
+                ..Default::default()
+            },
+        );
+        let feed = |n: u64| {
+            for i in 0..n {
+                let _ = upq.try_push(i);
+            }
+        };
+        // Idle host: λ = 8k/s vs μ = 1k/s per replica → scales to 8.
+        for _ in 0..4 {
+            feed(80);
+            ctl.step(0.010);
+        }
+        assert_eq!(stage.replicas(), 8, "idle host must allow the full claim");
+        // External load arrives: budget 8 → 2 next epoch, replicas trimmed.
+        load.set_external(0.75);
+        for _ in 0..4 {
+            feed(80);
+            ctl.step(0.010);
+        }
+        assert_eq!(
+            stage.replicas(),
+            2,
+            "busy host must trim the fan-out: {:?}",
+            ctl.budget_timeline
+        );
+        // Load clears: the budget and the claim recover.
+        load.set_external(0.0);
+        for _ in 0..6 {
+            feed(80);
+            ctl.step(0.010);
+        }
+        assert_eq!(stage.replicas(), 8, "cleared host must restore the fan-out");
+        let budgets: Vec<usize> = ctl.budget_timeline.iter().map(|&(_, b)| b).collect();
+        assert_eq!(budgets, vec![8, 2, 8], "budget timeline: {:?}", ctl.budget_timeline);
+        assert!(ctl.notes.is_empty(), "healthy telemetry must not be annotated");
+    }
+
+    #[test]
+    fn host_aware_budget_without_telemetry_holds_ceiling_and_annotates() {
+        struct Dead;
+        impl crate::placement::LoadSource for Dead {
+            fn host_ticks(&self) -> Option<(u64, u64)> {
+                None
+            }
+        }
+        let policy = ElasticPolicy { max_replicas: 8, cooldown_ticks: 0, ..Default::default() };
+        let stage = FakeStage::busy(1, policy, 10);
+        let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+        let mut ctl = controller_for(
+            vec![StageBinding {
+                stage: stage.clone(),
+                upstream: Some(StreamBinding {
+                    id: StreamId(0),
+                    label: "src -> fake".into(),
+                    handle,
+                }),
+                downstream: None,
+            }],
+            ElasticConfig {
+                buffer_advice: false,
+                ewma_alpha: 1.0,
+                worker_budget: BudgetPolicy::HostAware { headroom: 0.0, floor: 1, ceil: 5 },
+                load_source: Some(crate::placement::LoadSourceHandle::new(Arc::new(Dead))),
+                ..Default::default()
+            },
+        );
+        for _ in 0..6 {
+            for i in 0..80u64 {
+                let _ = upq.try_push(i);
+            }
+            ctl.step(0.010);
+        }
+        assert_eq!(stage.replicas(), 5, "blind budget must hold at the ceiling");
+        assert_eq!(ctl.notes.len(), 1, "degradation must be annotated exactly once");
+        assert!(ctl.notes[0].contains("unavailable"), "{:?}", ctl.notes);
     }
 
     #[test]

@@ -39,10 +39,11 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashSet};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
+use crate::placement::ThreadPin;
 use crate::queue::{MonitorSample, PopResult, PushError, SpscQueue};
 
 use super::policy::ElasticPolicy;
@@ -103,6 +104,9 @@ struct LaneCore<T: Send + 'static, U: Send + 'static> {
     /// worker renders its final Closed verdict, publish strands the
     /// item) and wedge the merge on the missing sequence number.
     retiring: AtomicBool,
+    /// The worker thread's kernel tid (0 until it has started), so an
+    /// affinity pin installed after spawn can still reach the thread.
+    tid: AtomicI64,
 }
 
 /// The lane registry, mutated only under the stage mutex.
@@ -151,6 +155,11 @@ pub struct ReplicaSet<T: Send + 'static, U: Send + 'static> {
     gen: AtomicU64,
     /// The splitter has delivered its last item and closed all lanes.
     splitter_done: AtomicBool,
+    /// Core-affinity pin for this stage's worker threads, installed by
+    /// the scheduler's placement pass (see
+    /// [`ElasticStage::install_pin`]). Shared as its own `Arc` so worker
+    /// closures can consult it without holding the lane table.
+    pin_slot: Arc<Mutex<Option<Arc<ThreadPin>>>>,
     table: Mutex<LaneTable<T, U>>,
 }
 
@@ -172,6 +181,7 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
             lane_capacity: cfg.lane_capacity.max(1),
             gen: AtomicU64::new(0),
             splitter_done: AtomicBool::new(false),
+            pin_slot: Arc::new(Mutex::new(None)),
             table: Mutex::new(LaneTable {
                 closed: false,
                 next_id: 0,
@@ -243,11 +253,28 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
             inq: inq.clone(),
             outq: outq.clone(),
             retiring: AtomicBool::new(false),
+            tid: AtomicI64::new(0),
         });
         let mut worker = (self.factory)(id);
+        let pin_slot = self.pin_slot.clone();
+        let lane_for_worker = lane.clone();
         let spawned = std::thread::Builder::new()
             .name(format!("sf-rep-{}-{id}", self.name))
             .spawn(move || {
+                // Publish our tid and apply any installed affinity pin.
+                // Both happen under the pin-slot lock, so exactly one
+                // side — this thread or a later `install_pin` reading
+                // tids — performs the pin; neither can miss it.
+                {
+                    let slot = pin_slot.lock().unwrap();
+                    lane_for_worker
+                        .tid
+                        .store(crate::placement::current_tid(), Ordering::Release);
+                    if let Some(pin) = slot.as_ref() {
+                        pin.pin_self();
+                    }
+                }
+                drop(lane_for_worker);
                 // Per-item pop/process/push — deliberately NOT pop_batch:
                 // the controller derives each replica's service rate μ
                 // from the inq head-index deltas, so items must leave the
@@ -324,6 +351,23 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
         t.active.iter().map(|l| l.inq.len()).sum()
     }
 
+    /// Install a core-affinity pin for this stage's workers: running
+    /// lanes are pinned by tid, and every lane spawned later pins itself
+    /// at thread start — so replicas added by a scale-up land on the
+    /// stage's cpus too. Outcomes (applied/denied) accumulate in the
+    /// [`ThreadPin`] for the run report.
+    pub fn install_pin(&self, pin: Arc<ThreadPin>) {
+        let mut slot = self.pin_slot.lock().unwrap();
+        *slot = Some(pin.clone());
+        let t = self.lock();
+        for lane in &t.all {
+            let tid = lane.tid.load(Ordering::Acquire);
+            if tid > 0 {
+                pin.pin_tid(tid);
+            }
+        }
+    }
+
     /// Join every worker thread ever spawned. Call after the surrounding
     /// kernels have finished (all lanes closed).
     pub fn join_workers(&self) {
@@ -389,6 +433,10 @@ pub trait ElasticStage: Send + Sync {
     fn input_closed(&self) -> bool;
     /// Join worker threads (shutdown).
     fn join_workers(&self);
+    /// Install a core-affinity pin covering this stage's worker threads
+    /// (present and future). Default: no-op — a stage without threads of
+    /// its own has nothing to pin.
+    fn install_pin(&self, _pin: Arc<ThreadPin>) {}
     /// One control tick's consistent snapshot. The provided body composes
     /// the individual accessors (three lock acquisitions); [`ReplicaSet`]
     /// overrides it with a single-lock version so the samples, backlog,
@@ -427,6 +475,9 @@ impl<T: Send + 'static, U: Send + 'static> ElasticStage for ReplicaSet<T, U> {
     }
     fn join_workers(&self) {
         ReplicaSet::join_workers(self)
+    }
+    fn install_pin(&self, pin: Arc<ThreadPin>) {
+        ReplicaSet::install_pin(self, pin)
     }
     fn probe(&self) -> StageProbe {
         let t = self.lock();
@@ -490,9 +541,18 @@ impl<T: Send + 'static, U: Send + 'static> SplitKernel<T, U> {
         }
     }
 
-    /// Place one tagged item on some active lane; spins across lanes and
-    /// yields once per full no-vacancy cycle (backpressure propagates to
-    /// the upstream stream because we stop popping it).
+    /// Place one tagged item on some active lane. Spins across lanes
+    /// looking for vacancy; after one full no-vacancy cycle the stage is
+    /// genuinely backpressured, and the splitter falls into a **blocking
+    /// push** on the next lane in round-robin order — the queue's own
+    /// spin → yield → park ladder — so a fully backpressured stage burns
+    /// no CPU and is woken by that lane worker's next pop (or a close).
+    /// The old behavior (yield once per cycle, respin forever) kept a
+    /// core hot for the whole stall. Liveness holds because a *full*
+    /// lane always has a live worker draining it (workers exit only
+    /// after their inq is closed **and** drained); order is unaffected
+    /// (sequence tags). Backpressure still propagates upstream because
+    /// we stop popping the ingress stream while parked.
     fn route(&mut self, mut tagged: Tagged<T>) {
         let mut misses = 0usize;
         loop {
@@ -505,6 +565,21 @@ impl<T: Send + 'static, U: Send + 'static> SplitKernel<T, U> {
             }
             let idx = self.rr % n;
             self.rr = self.rr.wrapping_add(1);
+            if misses >= n {
+                // Every active lane refused this cycle: block here. A
+                // lane retired under us hands the item back via Closed —
+                // reload and re-route. (Blocking on a retiring-but-not-
+                // yet-closed lane is fine: its worker still drains, and
+                // the wait records write_blocked_ns like any producer.)
+                misses = 0;
+                match self.lanes[idx].inq.push(tagged) {
+                    Ok(()) => return,
+                    Err(PushError::Full(t)) | Err(PushError::Closed(t)) => {
+                        tagged = t;
+                        continue;
+                    }
+                }
+            }
             match self.lanes[idx].inq.try_push(tagged) {
                 Ok(()) => return,
                 // Full: try the next lane. Closed (retired under us): the
@@ -512,10 +587,6 @@ impl<T: Send + 'static, U: Send + 'static> SplitKernel<T, U> {
                 Err(PushError::Full(t)) | Err(PushError::Closed(t)) => {
                     tagged = t;
                     misses += 1;
-                    if misses >= n {
-                        misses = 0;
-                        std::thread::yield_now();
-                    }
                 }
             }
         }
@@ -786,6 +857,127 @@ mod tests {
         for (i, &v) in got.iter().enumerate() {
             assert_eq!(v, i as u64 * 3, "out of order at {i}");
         }
+    }
+
+    #[test]
+    fn backpressured_split_parks_and_wakes() {
+        // One gated replica behind tiny lane queues: once every lane is
+        // full the splitter must fall into the queue's blocking push —
+        // observable as write_blocked_ns accumulating on the lane inq
+        // (the old try_push spin left it at 0 while burning a core) —
+        // and wake when the worker drains. Then everything completes in
+        // order.
+        use std::sync::atomic::AtomicBool as StdAtomicBool;
+
+        struct Gated(Arc<StdAtomicBool>);
+        impl Replicable for Gated {
+            type In = u64;
+            type Out = u64;
+            fn process(&mut self, v: u64) -> u64 {
+                while !self.0.load(Ordering::Acquire) {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                v
+            }
+        }
+
+        let gate = Arc::new(StdAtomicBool::new(false));
+        let g2 = gate.clone();
+        let cfg = ElasticStageConfig {
+            policy: ElasticPolicy { min_replicas: 1, max_replicas: 1, ..Default::default() },
+            initial_replicas: 1,
+            lane_capacity: 4,
+        };
+        let set = ReplicaSet::new("gated", cfg, move |_| {
+            Box::new(Gated(g2.clone())) as Box<dyn Replicable<In = u64, Out = u64>>
+        })
+        .unwrap();
+        let mut split = SplitKernel::new(set.clone());
+        let mut merge = MergeKernel::new(set.clone());
+
+        let n_items = 64u64;
+        let (upq, _uh) = instrumented::<u64>(&StreamConfig::default().with_capacity(128));
+        let (downq, _dh) = instrumented::<u64>(&StreamConfig::default().with_capacity(128));
+        for i in 0..n_items {
+            upq.try_push(i).unwrap();
+        }
+        upq.close();
+        let mut split_ctx =
+            KernelContext::new(vec![Box::new(InputPort::new(upq.clone()))], vec![]);
+        let mut merge_ctx =
+            KernelContext::new(vec![], vec![Box::new(OutputPort::new(downq.clone()))]);
+
+        let split_done = Arc::new(StdAtomicBool::new(false));
+        let sd2 = split_done.clone();
+        let probe_set = set.clone();
+        let split_thread = std::thread::spawn(move || {
+            while split.run(&mut split_ctx) != KernelStatus::Done {}
+            sd2.store(true, Ordering::Release);
+        });
+        let merge_thread = std::thread::spawn(move || loop {
+            match merge.run(&mut merge_ctx) {
+                KernelStatus::Done => break,
+                _ => std::thread::yield_now(),
+            }
+        });
+
+        // Let the splitter hit the wall (gate closed, 4-slot lane).
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert!(!split_done.load(Ordering::Acquire), "splitter cannot finish while gated");
+        let samples = probe_set.lane_probe();
+        assert_eq!(samples.len(), 1);
+        assert!(
+            samples[0].write_blocked_ns >= 5_000_000,
+            "backpressured splitter must sit in the queue's blocking wait \
+             (park), got {} ns of recorded block",
+            samples[0].write_blocked_ns
+        );
+
+        // Open the gate: the parked splitter must wake and finish.
+        gate.store(true, Ordering::Release);
+        split_thread.join().unwrap();
+        merge_thread.join().unwrap();
+        set.join_workers();
+        let mut got = Vec::new();
+        while let PopResult::Item(v) = downq.try_pop() {
+            got.push(v);
+        }
+        assert_eq!(got.len(), n_items as usize, "item loss under backpressure");
+        assert!(got.iter().enumerate().all(|(i, &v)| v == i as u64), "order broken");
+    }
+
+    #[test]
+    fn install_pin_reaches_existing_and_future_workers() {
+        use crate::placement::ThreadPin;
+        let set = mul_set(2, 4, 16);
+        let all: Vec<usize> = (0..std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1))
+            .collect();
+        let pin = ThreadPin::new(all);
+        set.install_pin(pin.clone());
+        // Every worker gets exactly one pin attempt — by tid if it was
+        // already running, by self-pin at start otherwise. Outcome
+        // (applied vs denied) is host-dependent; the accounting is not.
+        let wait_for = |want: usize| {
+            for _ in 0..400 {
+                if pin.applied() + pin.denied() >= want {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            panic!(
+                "expected {want} pin attempts, saw {} applied + {} denied",
+                pin.applied(),
+                pin.denied()
+            );
+        };
+        wait_for(2);
+        set.scale_to(3); // the new lane must self-pin
+        wait_for(3);
+        set.close_input();
+        set.join_workers();
+        assert_eq!(pin.applied() + pin.denied(), 3);
     }
 
     #[test]

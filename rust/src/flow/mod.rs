@@ -20,9 +20,11 @@
 //!   mention a port number; [`FlowChain::tee`] / [`FlowFan::merge_sink`]
 //!   cover the static fan-out/fan-in meshes.
 //! * **[`Session`] + [`RunOptions`]** — one run entry point
-//!   (`Session::run(topology, opts)`) replacing the scattered
-//!   `Scheduler::with_monitoring(..).with_elastic(..)` configuration
-//!   (those remain as thin deprecated shims for one release).
+//!   (`Session::run(topology, opts)`). The pre-0.4 deprecated
+//!   `Scheduler::with_monitoring(..).with_elastic(..)` shims are gone;
+//!   `RunOptions` now also carries the
+//!   [`PlacementPolicy`](crate::placement::PlacementPolicy) for
+//!   host-aware core pinning.
 //!
 //! ## A two-kernel pipeline, start to finish
 //!
@@ -87,6 +89,7 @@ use std::marker::PhantomData;
 use crate::elastic::{ElasticConfig, ElasticStageConfig, Replicable};
 use crate::kernel::Kernel;
 use crate::monitor::MonitorConfig;
+use crate::placement::PlacementPolicy;
 use crate::queue::StreamConfig;
 use crate::scheduler::{self, RunReport};
 use crate::topology::{KernelId, StreamId, Topology};
@@ -509,8 +512,8 @@ impl<T: Send + 'static> FlowFan<T> {
 
 // ------------------------------------------------------------- session --
 
-/// Unified run configuration, consumed by [`Session::run`]. Replaces the
-/// `Scheduler::with_monitoring(..).with_elastic(..)` chain.
+/// Unified run configuration, consumed by [`Session::run`] — the single
+/// way to configure a run (the old `Scheduler::with_*` chain is gone).
 #[derive(Debug, Clone)]
 pub struct RunOptions {
     /// Per-queue monitoring (the paper's §IV sampling + Algorithm 1).
@@ -531,11 +534,23 @@ pub struct RunOptions {
     /// `instrument` are frozen when the queue is built and are ignored
     /// here. `None` leaves edges as built.
     pub stream_defaults: Option<StreamConfig>,
+    /// Core-affinity placement of replicable-stage threads (Split/Merge
+    /// kernels + lane workers). Default: [`PlacementPolicy::Disabled`].
+    /// [`PlacementPolicy::Pack`] pins each stage to co-located cores and
+    /// degrades to a recorded no-op wherever topology files or affinity
+    /// permissions are missing (see
+    /// [`RunReport::placement`](crate::scheduler::RunReport::placement)).
+    pub placement: PlacementPolicy,
 }
 
 impl Default for RunOptions {
     fn default() -> Self {
-        RunOptions { monitor: MonitorConfig::disabled(), elastic: None, stream_defaults: None }
+        RunOptions {
+            monitor: MonitorConfig::disabled(),
+            elastic: None,
+            stream_defaults: None,
+            placement: PlacementPolicy::Disabled,
+        }
     }
 }
 
@@ -554,6 +569,12 @@ impl RunOptions {
     /// Set the default-capacity re-base (see [`RunOptions::stream_defaults`]).
     pub fn with_stream_defaults(mut self, cfg: StreamConfig) -> Self {
         self.stream_defaults = Some(cfg);
+        self
+    }
+
+    /// Set the core-affinity placement policy.
+    pub fn with_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.placement = placement;
         self
     }
 }
@@ -576,7 +597,7 @@ impl Session {
         }
         let forced = opts.elastic.is_some();
         let elastic_cfg = opts.elastic.unwrap_or_default();
-        scheduler::execute(&mut topo, &opts.monitor, &elastic_cfg, forced)
+        scheduler::execute(&mut topo, &opts.monitor, &elastic_cfg, forced, opts.placement)
     }
 
     /// Convenience: finish a [`Flow`] and run it.

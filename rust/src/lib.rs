@@ -32,6 +32,10 @@
 //!   parallelization decision (spawning/retiring replicas) and the §III
 //!   buffer-resize decision at run time — audited in
 //!   [`scheduler::RunReport::elastic_events`].
+//! * [`placement`] — host awareness: CPU-topology discovery, per-epoch
+//!   host-load sampling, the [`placement::BudgetPolicy`] that turns idle
+//!   capacity into a dynamic worker budget, and core-affinity pinning of
+//!   stage threads (recorded no-op where denied).
 //! * [`queueing`] — the M/M/1 analytics of Eq. 1 (non-blocking observation
 //!   probabilities) and analytic buffer sizing.
 //! * [`stats`] — Welford/Chan streaming moments, Pébay higher moments,
@@ -54,6 +58,7 @@ pub mod estimator;
 pub mod flow;
 pub mod kernel;
 pub mod monitor;
+pub mod placement;
 pub mod port;
 pub mod queue;
 pub mod queueing;
@@ -80,8 +85,9 @@ pub mod prelude {
     pub use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session, StageIo};
     pub use crate::kernel::{Kernel, KernelContext, KernelStatus};
     pub use crate::monitor::MonitorConfig;
+    pub use crate::placement::{BudgetPolicy, PlacementPolicy};
     pub use crate::queue::StreamConfig;
-    pub use crate::scheduler::{RunReport, Scheduler};
+    pub use crate::scheduler::RunReport;
     pub use crate::topology::{KernelId, StreamId, Topology};
 }
 

@@ -9,9 +9,12 @@
 //! * `rabinkarp`    — the Rabin–Karp application (§V-B2)
 //! * `artifacts`    — validate the AOT artifact directory end to end
 
+use std::time::Duration;
+
 use streamflow::apps::{matmul, rabin_karp};
 use streamflow::cli::Args;
 use streamflow::config::{MatmulConfig, MicrobenchConfig, RabinKarpConfig};
+use streamflow::elastic::ElasticConfig;
 use streamflow::monitor::{MonitorConfig, QueueEnd};
 use streamflow::prelude::*;
 use streamflow::rng::dist::DistKind;
@@ -157,6 +160,49 @@ fn cmd_dualphase(args: &Args) -> i32 {
     }
 }
 
+/// The shared `--budget <n|host[:headroom[:floor:ceil]]|unlimited>` /
+/// `--pin` run-option plumbing of the two applications. Returns `None`
+/// (and prints the reason) on an unparsable budget.
+fn app_run_options(args: &Args, default_pool: usize) -> Option<RunOptions> {
+    let mut opts = RunOptions::monitored(MonitorConfig::practical());
+    if let Some(spec) = args.options.get("budget") {
+        match spec.parse::<BudgetPolicy>() {
+            Ok(budget) => {
+                opts.elastic = Some(ElasticConfig {
+                    tick: Duration::from_millis(5),
+                    worker_budget: budget,
+                    ..Default::default()
+                });
+            }
+            Err(e) => {
+                eprintln!("error: --budget: {e}");
+                return None;
+            }
+        }
+    } else if args.has_flag("host-aware") {
+        opts.elastic = Some(ElasticConfig {
+            tick: Duration::from_millis(5),
+            worker_budget: BudgetPolicy::host_aware(default_pool),
+            ..Default::default()
+        });
+    } else {
+        // No explicit flag: honor the SF_BUDGET env override (how CI
+        // lanes and campaign scripts pick a policy without flags).
+        let env = streamflow::config::env_budget("SF_BUDGET", BudgetPolicy::Unlimited);
+        if env != BudgetPolicy::Unlimited {
+            opts.elastic = Some(ElasticConfig {
+                tick: Duration::from_millis(5),
+                worker_budget: env,
+                ..Default::default()
+            });
+        }
+    }
+    if args.has_flag("pin") {
+        opts.placement = PlacementPolicy::Pack;
+    }
+    Some(opts)
+}
+
 fn report_scaling(report: &RunReport) {
     let lines = report.scaling_timeline();
     if !lines.is_empty() {
@@ -186,7 +232,10 @@ fn cmd_matmul(args: &Args) -> i32 {
     if args.has_flag("static") {
         cfg.static_degree = Some(cfg.dot_kernels);
     }
-    match matmul::run_matmul(&cfg, RunOptions::monitored(MonitorConfig::practical())) {
+    let Some(opts) = app_run_options(args, cfg.dot_kernels) else {
+        return 2;
+    };
+    match matmul::run_matmul(&cfg, opts) {
         Ok(run) => {
             let checksum: f64 = run.c.iter().map(|&x| x as f64).sum();
             println!(
@@ -217,7 +266,10 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
     if args.has_flag("static") {
         cfg.static_degree = Some(cfg.hash_kernels);
     }
-    match rabin_karp::run_rabin_karp(&cfg, RunOptions::monitored(MonitorConfig::practical())) {
+    let Some(opts) = app_run_options(args, cfg.hash_kernels + cfg.verify_kernels) else {
+        return 2;
+    };
+    match rabin_karp::run_rabin_karp(&cfg, opts) {
         Ok(run) => {
             println!(
                 "rabin-karp over {} bytes ({}): {} matches of '{}'",

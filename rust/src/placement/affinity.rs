@@ -1,0 +1,191 @@
+//! Core-affinity pinning — direct `sched_setaffinity` FFI on Linux, an
+//! explicit no-op everywhere else (and wherever the syscall is denied:
+//! containers routinely forbid it).
+//!
+//! Failure is **recorded, never fatal**: every pin attempt lands in a
+//! [`ThreadPin`]'s applied/denied counters and first-error note, which
+//! the scheduler surfaces in
+//! [`RunReport::placement`](crate::scheduler::RunReport::placement) so a
+//! run that silently couldn't pin says so. Setting `SF_NO_AFFINITY=1`
+//! forces the denied path (the CI fallback lane uses it to exercise
+//! exactly what a locked-down container would do).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// True when `SF_NO_AFFINITY` is set (to anything but `0`/empty):
+/// affinity calls are refused locally, simulating a host that denies
+/// `sched_setaffinity`.
+pub fn affinity_disabled_by_env() -> bool {
+    static DISABLED: OnceLock<bool> = OnceLock::new();
+    *DISABLED.get_or_init(|| {
+        std::env::var("SF_NO_AFFINITY").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}
+
+/// The calling thread's kernel tid (0 on platforms without one — which
+/// `sched_setaffinity` conveniently reads as "the calling thread").
+#[cfg(target_os = "linux")]
+pub fn current_tid() -> i64 {
+    // SAFETY: no arguments, returns the caller's tid.
+    unsafe { libc::syscall(libc::SYS_gettid) as i64 }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn current_tid() -> i64 {
+    0
+}
+
+/// Pin thread `tid` (0 = calling thread) to the given logical cpus.
+/// Returns a human-readable reason on failure; never panics.
+#[cfg(target_os = "linux")]
+pub fn pin_thread(tid: i64, cpus: &[usize]) -> Result<(), String> {
+    if affinity_disabled_by_env() {
+        return Err("affinity disabled (SF_NO_AFFINITY)".into());
+    }
+    if cpus.is_empty() {
+        return Err("empty cpu set".into());
+    }
+    // SAFETY: cpu_set_t is a plain bitmask struct; CPU_ZERO/CPU_SET only
+    // touch the local `set`; sched_setaffinity reads it.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        let mut any = false;
+        for &c in cpus {
+            if c < libc::CPU_SETSIZE as usize {
+                libc::CPU_SET(c, &mut set);
+                any = true;
+            }
+        }
+        if !any {
+            return Err("no representable cpu in set".into());
+        }
+        if libc::sched_setaffinity(
+            tid as libc::pid_t,
+            std::mem::size_of::<libc::cpu_set_t>(),
+            &set,
+        ) == 0
+        {
+            Ok(())
+        } else {
+            let errno = *libc::__errno_location();
+            Err(format!("sched_setaffinity(tid {tid}) failed: errno {errno}"))
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_thread(_tid: i64, _cpus: &[usize]) -> Result<(), String> {
+    Err("thread affinity unsupported on this platform".into())
+}
+
+/// One target's cpu set plus the audited outcome of every pin attempt
+/// made against it. Shared between the scheduler (split/merge kernel
+/// threads), the [`ReplicaSet`](crate::elastic::ReplicaSet) (lane
+/// workers, including ones spawned later by scale-ups), and the final
+/// report.
+pub struct ThreadPin {
+    cpus: Vec<usize>,
+    applied: AtomicUsize,
+    denied: AtomicUsize,
+    /// First failure reason (they are almost always all identical).
+    note: Mutex<Option<String>>,
+}
+
+impl ThreadPin {
+    pub fn new(cpus: Vec<usize>) -> Arc<Self> {
+        Arc::new(ThreadPin {
+            cpus,
+            applied: AtomicUsize::new(0),
+            denied: AtomicUsize::new(0),
+            note: Mutex::new(None),
+        })
+    }
+
+    /// The cpu set this pin targets.
+    pub fn cpus(&self) -> &[usize] {
+        &self.cpus
+    }
+
+    /// Pin the calling thread; returns whether it stuck.
+    pub fn pin_self(&self) -> bool {
+        self.record(pin_thread(0, &self.cpus))
+    }
+
+    /// Pin another thread by kernel tid.
+    pub fn pin_tid(&self, tid: i64) -> bool {
+        self.record(pin_thread(tid, &self.cpus))
+    }
+
+    fn record(&self, r: Result<(), String>) -> bool {
+        match r {
+            Ok(()) => {
+                self.applied.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(reason) => {
+                self.denied.fetch_add(1, Ordering::Relaxed);
+                let mut n = self.note.lock().unwrap();
+                if n.is_none() {
+                    *n = Some(reason);
+                }
+                false
+            }
+        }
+    }
+
+    /// Threads successfully pinned so far.
+    pub fn applied(&self) -> usize {
+        self.applied.load(Ordering::Relaxed)
+    }
+
+    /// Pin attempts that were refused.
+    pub fn denied(&self) -> usize {
+        self.denied.load(Ordering::Relaxed)
+    }
+
+    /// First failure reason, if any attempt failed.
+    pub fn note(&self) -> Option<String> {
+        self.note.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_cpu_set_is_refused() {
+        assert!(pin_thread(0, &[]).is_err());
+    }
+
+    #[test]
+    fn pin_outcome_is_recorded_either_way() {
+        // Pinning to every online cpu is a no-op affinity-wise, so when
+        // the syscall is permitted it must succeed; where it is denied
+        // (container, non-Linux, SF_NO_AFFINITY) the denial is recorded
+        // with a reason. Both are valid outcomes of the same code path.
+        let all: Vec<usize> = (0..std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1))
+            .collect();
+        let pin = ThreadPin::new(all);
+        let stuck = pin.pin_self();
+        assert_eq!(pin.applied() + pin.denied(), 1);
+        if stuck {
+            assert_eq!(pin.applied(), 1);
+            assert!(pin.note().is_none());
+        } else {
+            assert_eq!(pin.denied(), 1);
+            assert!(pin.note().is_some(), "denial must carry a reason");
+        }
+    }
+
+    #[test]
+    fn out_of_range_cpus_are_refused_not_ub() {
+        let pin = ThreadPin::new(vec![usize::MAX]);
+        assert!(!pin.pin_self());
+        assert_eq!(pin.denied(), 1);
+    }
+}

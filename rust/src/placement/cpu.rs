@@ -1,0 +1,232 @@
+//! CPU topology discovery from `/sys/devices/system/cpu` — pure std
+//! parsing, no new crates, and a graceful flat fallback when the sysfs
+//! tree is unreadable (containers, non-Linux hosts, stripped /sys).
+//!
+//! The control plane uses the result two ways: [`CpuTopology::num_cpus`]
+//! anchors the host-aware worker budget, and [`CpuTopology::pack_order`]
+//! gives the co-location order (same package, then same core) the
+//! placement policy walks when handing a stage its cpu set.
+
+use std::path::Path;
+
+/// One logical CPU and where it sits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuInfo {
+    /// Logical cpu id (the `cpuN` index, what `sched_setaffinity` takes).
+    pub cpu: usize,
+    /// Physical core id within the package (SMT siblings share it).
+    pub core: usize,
+    /// Physical package (socket) id.
+    pub package: usize,
+}
+
+/// Where a topology came from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopologySource {
+    /// Read from the sysfs tree.
+    Sysfs,
+    /// Sysfs unreadable — flat fallback (`available_parallelism` cpus,
+    /// one core each, one package) with the reason kept for the report.
+    Fallback(String),
+}
+
+/// The host's logical-CPU layout.
+#[derive(Debug, Clone)]
+pub struct CpuTopology {
+    cpus: Vec<CpuInfo>,
+    source: TopologySource,
+}
+
+impl CpuTopology {
+    /// Discover from the canonical sysfs root.
+    pub fn discover() -> CpuTopology {
+        Self::from_sysfs_root(Path::new("/sys/devices/system/cpu"))
+    }
+
+    /// Discover from an explicit root (tests point this at a synthetic
+    /// tree).
+    pub fn from_sysfs_root(root: &Path) -> CpuTopology {
+        match read_sysfs(root) {
+            Ok(cpus) if !cpus.is_empty() => {
+                CpuTopology { cpus, source: TopologySource::Sysfs }
+            }
+            Ok(_) => Self::fallback("sysfs listed no online cpus"),
+            Err(e) => Self::fallback(&e),
+        }
+    }
+
+    /// The flat fallback used when sysfs is unreadable.
+    pub fn fallback(reason: &str) -> CpuTopology {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        CpuTopology {
+            cpus: (0..n).map(|i| CpuInfo { cpu: i, core: i, package: 0 }).collect(),
+            source: TopologySource::Fallback(reason.to_string()),
+        }
+    }
+
+    /// Online logical-cpu count (≥ 1 even in fallback).
+    pub fn num_cpus(&self) -> usize {
+        self.cpus.len()
+    }
+
+    /// The per-cpu records.
+    pub fn cpus(&self) -> &[CpuInfo] {
+        &self.cpus
+    }
+
+    /// True when the layout was actually read from sysfs (false ⇒ flat
+    /// fallback; placement still works but co-location is a guess).
+    pub fn is_discovered(&self) -> bool {
+        matches!(self.source, TopologySource::Sysfs)
+    }
+
+    /// Why discovery fell back, if it did.
+    pub fn fallback_reason(&self) -> Option<&str> {
+        match &self.source {
+            TopologySource::Sysfs => None,
+            TopologySource::Fallback(r) => Some(r),
+        }
+    }
+
+    /// Logical cpu ids in co-location order: grouped by package, then by
+    /// physical core (SMT siblings adjacent), then by cpu id. Walking
+    /// this order front-to-back keeps one stage's threads on neighboring
+    /// cores.
+    pub fn pack_order(&self) -> Vec<usize> {
+        let mut order: Vec<&CpuInfo> = self.cpus.iter().collect();
+        order.sort_by_key(|c| (c.package, c.core, c.cpu));
+        order.iter().map(|c| c.cpu).collect()
+    }
+}
+
+fn read_sysfs(root: &Path) -> Result<Vec<CpuInfo>, String> {
+    let online_path = root.join("online");
+    let online = std::fs::read_to_string(&online_path)
+        .map_err(|e| format!("{}: {e}", online_path.display()))?;
+    let ids = parse_cpu_list(online.trim())?;
+    let mut cpus = Vec::with_capacity(ids.len());
+    for id in ids {
+        let tdir = root.join(format!("cpu{id}")).join("topology");
+        // Missing per-cpu files degrade per field, not per host: a cpu
+        // without topology data is its own core on package 0.
+        let core = read_id(&tdir.join("core_id")).unwrap_or(id);
+        let package = read_id(&tdir.join("physical_package_id")).unwrap_or(0);
+        cpus.push(CpuInfo { cpu: id, core, package });
+    }
+    Ok(cpus)
+}
+
+fn read_id(p: &Path) -> Option<usize> {
+    std::fs::read_to_string(p).ok()?.trim().parse().ok()
+}
+
+/// Parse the kernel's cpu-list format: `"0-3,5,7-8"` → `[0,1,2,3,5,7,8]`.
+pub fn parse_cpu_list(s: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match tok.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize =
+                    lo.trim().parse().map_err(|_| format!("bad cpu range start '{tok}'"))?;
+                let hi: usize =
+                    hi.trim().parse().map_err(|_| format!("bad cpu range end '{tok}'"))?;
+                if hi < lo {
+                    return Err(format!("inverted cpu range '{tok}'"));
+                }
+                out.extend(lo..=hi);
+            }
+            None => out.push(tok.parse().map_err(|_| format!("bad cpu id '{tok}'"))?),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("sf-placement-cpu-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write(root: &Path, rel: &str, content: &str) {
+        let p = root.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(p, content).unwrap();
+    }
+
+    #[test]
+    fn parses_cpu_lists() {
+        assert_eq!(parse_cpu_list("0-3,5,7-8").unwrap(), vec![0, 1, 2, 3, 5, 7, 8]);
+        assert_eq!(parse_cpu_list("0").unwrap(), vec![0]);
+        assert_eq!(parse_cpu_list("").unwrap(), Vec::<usize>::new());
+        assert!(parse_cpu_list("3-1").is_err());
+        assert!(parse_cpu_list("x").is_err());
+    }
+
+    #[test]
+    fn discovers_synthetic_sysfs_tree() {
+        let root = scratch_dir("ok");
+        write(&root, "online", "0-3\n");
+        for (cpu, core, pkg) in [(0, 0, 0), (1, 0, 0), (2, 1, 0), (3, 1, 0)] {
+            write(&root, &format!("cpu{cpu}/topology/core_id"), &format!("{core}\n"));
+            write(
+                &root,
+                &format!("cpu{cpu}/topology/physical_package_id"),
+                &format!("{pkg}\n"),
+            );
+        }
+        let t = CpuTopology::from_sysfs_root(&root);
+        assert!(t.is_discovered());
+        assert_eq!(t.num_cpus(), 4);
+        // SMT siblings (same core) are adjacent in pack order.
+        assert_eq!(t.pack_order(), vec![0, 1, 2, 3]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn pack_order_groups_by_package_then_core() {
+        let t = CpuTopology {
+            cpus: vec![
+                CpuInfo { cpu: 0, core: 0, package: 0 },
+                CpuInfo { cpu: 1, core: 0, package: 1 },
+                CpuInfo { cpu: 2, core: 1, package: 0 },
+                CpuInfo { cpu: 3, core: 0, package: 0 }, // SMT sibling of cpu 0
+            ],
+            source: TopologySource::Sysfs,
+        };
+        assert_eq!(t.pack_order(), vec![0, 3, 2, 1]);
+    }
+
+    #[test]
+    fn unreadable_root_falls_back_with_reason() {
+        let t = CpuTopology::from_sysfs_root(Path::new("/definitely/not/a/sysfs"));
+        assert!(!t.is_discovered());
+        assert!(t.num_cpus() >= 1);
+        assert!(t.fallback_reason().is_some());
+        assert_eq!(t.pack_order().len(), t.num_cpus());
+    }
+
+    #[test]
+    fn missing_topology_files_degrade_per_cpu() {
+        let root = scratch_dir("partial");
+        write(&root, "online", "0-1");
+        // cpu0 has data, cpu1 has none: cpu1 becomes its own core.
+        write(&root, "cpu0/topology/core_id", "0");
+        write(&root, "cpu0/topology/physical_package_id", "0");
+        let t = CpuTopology::from_sysfs_root(&root);
+        assert!(t.is_discovered());
+        assert_eq!(t.cpus()[1], CpuInfo { cpu: 1, core: 1, package: 0 });
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,325 @@
+//! Host-load telemetry for the host-aware worker budget.
+//!
+//! The paper's motivating deployment is a **shared, dynamic host**:
+//! other tenants come and go, so a replica budget fixed at process start
+//! is wrong in both directions. [`HostLoadMonitor`] samples the host's
+//! aggregate CPU counters once per control epoch, subtracts this
+//! process's own consumption (our replicas *are* the load we control),
+//! and keeps an EWMA of the **external** busy fraction — the signal
+//! [`BudgetPolicy::HostAware`](super::BudgetPolicy) turns into a worker
+//! budget each tick.
+//!
+//! The default source parses `/proc/stat` + `/proc/self/stat` (pure std,
+//! Linux). Everything degrades to `None` when the files are unreadable —
+//! the budget policy then holds at its ceiling and annotates the report,
+//! never guessing. Tests and benches inject [`SyntheticLoad`] instead of
+//! perturbing the real host.
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A source of cumulative CPU-time counters ("ticks" — any monotonic
+/// unit, as long as host and self use the same one).
+pub trait LoadSource: Send + Sync {
+    /// Cumulative host CPU ticks since boot: `(busy, total)` summed over
+    /// every cpu. `None` ⇒ unreadable this sample.
+    fn host_ticks(&self) -> Option<(u64, u64)>;
+
+    /// Cumulative busy ticks of *this process* (subtracted from the host
+    /// delta so our own replicas don't read as external load).
+    fn self_ticks(&self) -> u64 {
+        0
+    }
+}
+
+/// Cloneable, debuggable handle for carrying a [`LoadSource`] inside
+/// configuration structs (e.g.
+/// [`ElasticConfig`](crate::elastic::ElasticConfig)).
+#[derive(Clone)]
+pub struct LoadSourceHandle(pub Arc<dyn LoadSource>);
+
+impl LoadSourceHandle {
+    pub fn new(source: Arc<dyn LoadSource>) -> Self {
+        LoadSourceHandle(source)
+    }
+}
+
+impl fmt::Debug for LoadSourceHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "LoadSourceHandle(..)")
+    }
+}
+
+/// The procfs-backed default source.
+pub struct ProcStatSource {
+    stat: PathBuf,
+    self_stat: PathBuf,
+}
+
+impl ProcStatSource {
+    pub fn new() -> Self {
+        ProcStatSource {
+            stat: PathBuf::from("/proc/stat"),
+            self_stat: PathBuf::from("/proc/self/stat"),
+        }
+    }
+
+    /// Explicit file paths (tests point these at fixture files).
+    pub fn with_paths(stat: PathBuf, self_stat: PathBuf) -> Self {
+        ProcStatSource { stat, self_stat }
+    }
+}
+
+impl Default for ProcStatSource {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LoadSource for ProcStatSource {
+    fn host_ticks(&self) -> Option<(u64, u64)> {
+        let text = std::fs::read_to_string(&self.stat).ok()?;
+        parse_proc_stat_cpu_line(&text)
+    }
+
+    fn self_ticks(&self) -> u64 {
+        std::fs::read_to_string(&self.self_stat)
+            .ok()
+            .and_then(|t| parse_self_stat_busy(&t))
+            .unwrap_or(0)
+    }
+}
+
+/// Parse the aggregate `cpu ` line of `/proc/stat` into `(busy, total)`.
+///
+/// Fields (jiffies): user nice system idle iowait irq softirq steal
+/// guest guest_nice. Idle time is `idle + iowait`; everything else in
+/// the first eight fields counts as busy. The trailing `guest*` fields
+/// are **excluded** from the total — the kernel already folds guest time
+/// into `user`/`nice`, so summing them too would double-count
+/// virtualization load and underreport the busy fraction.
+pub fn parse_proc_stat_cpu_line(text: &str) -> Option<(u64, u64)> {
+    let line = text.lines().find(|l| {
+        l.starts_with("cpu") && l.as_bytes().get(3).is_some_and(|b| b.is_ascii_whitespace())
+    })?;
+    let fields: Vec<u64> =
+        line.split_ascii_whitespace().skip(1).filter_map(|f| f.parse().ok()).collect();
+    if fields.len() < 4 {
+        return None;
+    }
+    let idle = fields[3] + fields.get(4).copied().unwrap_or(0);
+    let total: u64 = fields.iter().take(8).sum();
+    if total == 0 {
+        // An all-zero stat line (some container runtimes stub /proc/stat)
+        // carries no information — treat as unreadable, not as idle.
+        return None;
+    }
+    Some((total - idle, total))
+}
+
+/// Parse `/proc/self/stat` into cumulative busy ticks (utime + stime,
+/// fields 14 and 15). The comm field may contain spaces — parse after
+/// the final `)`.
+pub fn parse_self_stat_busy(text: &str) -> Option<u64> {
+    let rest = &text[text.rfind(')')? + 1..];
+    let fields: Vec<&str> = rest.split_ascii_whitespace().collect();
+    // `rest` starts at field 3 (state), so utime/stime are at 11/12.
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some(utime + stime)
+}
+
+/// A scriptable source for tests and benches: fabricates cumulative
+/// counters such that each sample observes the configured external busy
+/// fraction. Thread-safe — the test flips the load while a controller
+/// thread samples.
+pub struct SyntheticLoad {
+    external_permille: AtomicU64,
+    busy: AtomicU64,
+    total: AtomicU64,
+}
+
+/// Fabricated total ticks per sample.
+const SYNTH_STEP: u64 = 1_000;
+
+impl SyntheticLoad {
+    /// Start with the given external busy fraction (clamped to [0, 1]).
+    pub fn new(external_frac: f64) -> Arc<Self> {
+        let s = Arc::new(SyntheticLoad {
+            external_permille: AtomicU64::new(0),
+            busy: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+        });
+        s.set_external(external_frac);
+        s
+    }
+
+    /// Change the external busy fraction seen by subsequent samples.
+    pub fn set_external(&self, frac: f64) {
+        let p = (frac.clamp(0.0, 1.0) * SYNTH_STEP as f64).round() as u64;
+        self.external_permille.store(p, Ordering::Relaxed);
+    }
+
+    /// Handle form for dropping into a config struct.
+    pub fn handle_of(this: &Arc<Self>) -> LoadSourceHandle {
+        LoadSourceHandle::new(this.clone())
+    }
+}
+
+impl LoadSource for SyntheticLoad {
+    fn host_ticks(&self) -> Option<(u64, u64)> {
+        let p = self.external_permille.load(Ordering::Relaxed).min(SYNTH_STEP);
+        let busy = self.busy.fetch_add(p, Ordering::Relaxed) + p;
+        let total = self.total.fetch_add(SYNTH_STEP, Ordering::Relaxed) + SYNTH_STEP;
+        Some((busy, total))
+    }
+}
+
+/// Per-epoch sampler: takes counter deltas from a [`LoadSource`], folds
+/// the external busy fraction into an EWMA.
+pub struct HostLoadMonitor {
+    source: Arc<dyn LoadSource>,
+    alpha: f64,
+    /// Last cumulative `(busy, total, self_busy)`.
+    last: Option<(u64, u64, u64)>,
+    ewma: Option<f64>,
+}
+
+impl HostLoadMonitor {
+    /// `alpha` ∈ (0, 1]: EWMA smoothing (1.0 = no smoothing).
+    pub fn new(source: Arc<dyn LoadSource>, alpha: f64) -> Self {
+        HostLoadMonitor { source, alpha: alpha.clamp(0.01, 1.0), last: None, ewma: None }
+    }
+
+    /// The procfs-backed default.
+    pub fn procfs(alpha: f64) -> Self {
+        Self::new(Arc::new(ProcStatSource::new()), alpha)
+    }
+
+    /// Sample once (call per control epoch); returns the smoothed
+    /// **external** busy fraction in [0, 1]. `None` until a baseline +
+    /// one delta exist, or while the source is unreadable.
+    pub fn tick(&mut self) -> Option<f64> {
+        let Some((busy, total)) = self.source.host_ticks() else {
+            // Source went dark (e.g. /proc stubbed after a migration):
+            // drop the baseline and report unknown, so the budget policy
+            // degrades to its annotated ceiling instead of steering on a
+            // stale load reading forever.
+            self.last = None;
+            self.ewma = None;
+            return None;
+        };
+        let own = self.source.self_ticks();
+        if let Some((b0, t0, o0)) = self.last {
+            let d_total = total.saturating_sub(t0);
+            if d_total > 0 {
+                let d_busy = busy.saturating_sub(b0);
+                let d_own = own.saturating_sub(o0);
+                let obs =
+                    (d_busy.saturating_sub(d_own) as f64 / d_total as f64).clamp(0.0, 1.0);
+                self.ewma = Some(match self.ewma {
+                    Some(prev) => self.alpha * obs + (1.0 - self.alpha) * prev,
+                    None => obs,
+                });
+            }
+        }
+        self.last = Some((busy, total, own));
+        self.ewma
+    }
+
+    /// The current EWMA without taking a new sample.
+    pub fn external_busy(&self) -> Option<f64> {
+        self.ewma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_proc_stat_aggregate_line() {
+        let text = "cpu  100 0 50 800 50 0 0 0 0 0\ncpu0 50 0 25 400 25 0 0 0 0 0\n";
+        let (busy, total) = parse_proc_stat_cpu_line(text).unwrap();
+        assert_eq!(total, 1000);
+        assert_eq!(busy, 150); // user + system; idle+iowait excluded
+    }
+
+    #[test]
+    fn guest_fields_are_not_double_counted() {
+        // user=500 (of which guest=400 — already folded in by the
+        // kernel), idle=500, guest field 400 trailing: total must be
+        // 1000, not 1400, so busy reads 50%.
+        let text = "cpu  500 0 0 500 0 0 0 0 400 0\n";
+        let (busy, total) = parse_proc_stat_cpu_line(text).unwrap();
+        assert_eq!((busy, total), (500, 1000));
+    }
+
+    #[test]
+    fn all_zero_stat_is_unreadable_not_idle() {
+        assert_eq!(parse_proc_stat_cpu_line("cpu  0 0 0 0 0 0 0 0 0 0\n"), None);
+        assert_eq!(parse_proc_stat_cpu_line("intr 0\n"), None);
+    }
+
+    #[test]
+    fn parses_self_stat_with_spaced_comm() {
+        // comm "(a b) c)" exercises the rfind(')') rule.
+        let text = "1234 (a b) c) S 1 1 1 0 -1 0 0 0 0 0 7 3 0 0 20 0 1 0 100 0 0";
+        assert_eq!(parse_self_stat_busy(text), Some(10));
+    }
+
+    #[test]
+    fn monitor_needs_a_baseline_then_tracks() {
+        let src = SyntheticLoad::new(0.5);
+        let mut m = HostLoadMonitor::new(src.clone(), 1.0);
+        assert_eq!(m.tick(), None, "first sample is the baseline");
+        let l = m.tick().unwrap();
+        assert!((l - 0.5).abs() < 0.01, "external busy {l}");
+        src.set_external(0.0);
+        let l = m.tick().unwrap();
+        assert!(l < 0.01, "load clear must be visible next epoch, got {l}");
+    }
+
+    #[test]
+    fn monitor_ewma_smooths() {
+        let src = SyntheticLoad::new(0.0);
+        let mut m = HostLoadMonitor::new(src.clone(), 0.5);
+        m.tick();
+        m.tick();
+        src.set_external(1.0);
+        let l1 = m.tick().unwrap();
+        assert!((l1 - 0.5).abs() < 0.01, "one step at alpha 0.5: {l1}");
+        let l2 = m.tick().unwrap();
+        assert!(l2 > l1, "EWMA must keep approaching the new level");
+    }
+
+    #[test]
+    fn unreadable_source_yields_none_then_recovers_nothing() {
+        struct Dead;
+        impl LoadSource for Dead {
+            fn host_ticks(&self) -> Option<(u64, u64)> {
+                None
+            }
+        }
+        let mut m = HostLoadMonitor::new(Arc::new(Dead), 1.0);
+        assert_eq!(m.tick(), None);
+        assert_eq!(m.external_busy(), None);
+    }
+
+    #[test]
+    fn procfs_source_never_panics() {
+        // On hosts with a stubbed /proc this returns None; on real Linux
+        // it returns counters. Either is acceptable — just no panic.
+        let s = ProcStatSource::new();
+        let _ = s.host_ticks();
+        let _ = s.self_ticks();
+        let missing = ProcStatSource::with_paths(
+            PathBuf::from("/nonexistent/stat"),
+            PathBuf::from("/nonexistent/self"),
+        );
+        assert_eq!(missing.host_ticks(), None);
+        assert_eq!(missing.self_ticks(), 0);
+    }
+}

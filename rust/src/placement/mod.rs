@@ -1,0 +1,383 @@
+//! # Host-aware placement: topology, load, affinity, worker budgets.
+//!
+//! The paper's premise (§I) is a **shared, dynamic execution
+//! environment** — multi-user hosts, migration, background load — where
+//! static tuning is wrong by construction. This subsystem makes the
+//! elastic control plane honest about the machine it runs on:
+//!
+//! * [`cpu`] — [`CpuTopology`] discovery from `/sys/devices/system/cpu`
+//!   (pure std parsing; graceful flat fallback when unreadable);
+//! * [`load`] — [`HostLoadMonitor`] samples `/proc/stat` per control
+//!   epoch, subtracts this process's own time, and EWMA-smooths the
+//!   **external** busy fraction (other tenants' load);
+//! * [`BudgetPolicy`] — the generalization of the old fixed
+//!   `worker_budget: Option<usize>`: [`BudgetPolicy::Fixed`] keeps the
+//!   per-run cap, [`BudgetPolicy::HostAware`] recomputes the budget each
+//!   epoch from observed idle capacity, so
+//!   [`coordinate`](crate::elastic::coordinate) trims fan-out when the
+//!   host gets busy and re-grows it when the host frees up;
+//! * [`affinity`] — [`ThreadPin`] core pinning (`sched_setaffinity` FFI
+//!   on Linux; explicit recorded no-op elsewhere or when denied) used by
+//!   [`PlacementPolicy::Pack`] to keep a stage's Split/Merge kernels and
+//!   its replica lanes on co-located cores.
+//!
+//! Everything here degrades to an **annotated no-op** — missing sysfs,
+//! stubbed `/proc/stat`, or a denied syscall shows up as notes in
+//! [`RunReport::placement`](crate::scheduler::RunReport::placement),
+//! never as an error or a silent lie.
+
+pub mod affinity;
+pub mod cpu;
+pub mod load;
+
+pub use affinity::{affinity_disabled_by_env, current_tid, pin_thread, ThreadPin};
+pub use cpu::{parse_cpu_list, CpuInfo, CpuTopology, TopologySource};
+pub use load::{
+    HostLoadMonitor, LoadSource, LoadSourceHandle, ProcStatSource, SyntheticLoad,
+};
+
+/// How the control plane bounds the summed replica count across every
+/// stage of a topology.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum BudgetPolicy {
+    /// No global cap — per-stage `max_replicas` bounds still hold.
+    #[default]
+    Unlimited,
+    /// A fixed per-run cap (the pre-0.4 `worker_budget: Some(n)`).
+    Fixed(usize),
+    /// Recompute the budget every control epoch from observed idle host
+    /// capacity: `budget = ⌊cpus · (1 − external_busy − headroom)⌋`
+    /// clamped into `[floor, ceil]`. When host telemetry is unavailable
+    /// the budget holds at `ceil` and the run report says so.
+    HostAware {
+        /// Fraction of the machine deliberately left unclaimed for other
+        /// tenants (0 ≤ headroom < 1).
+        headroom: f64,
+        /// Never budget below this many workers.
+        floor: usize,
+        /// Never budget above this many workers.
+        ceil: usize,
+    },
+}
+
+/// One epoch's budget evaluation: the cap to hand
+/// [`coordinate`](crate::elastic::coordinate) plus an optional
+/// degradation note for the report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BudgetDecision {
+    /// `None` ⇒ uncapped.
+    pub budget: Option<usize>,
+    /// Why the policy could not do better (e.g. host load unreadable).
+    pub note: Option<String>,
+}
+
+impl BudgetPolicy {
+    /// A host-aware policy with conventional knobs: 10% headroom, floor
+    /// 1, ceiling `ceil`.
+    pub fn host_aware(ceil: usize) -> Self {
+        BudgetPolicy::HostAware { headroom: 0.10, floor: 1, ceil: ceil.max(1) }
+    }
+
+    /// Check invariants.
+    pub fn validate(&self) -> crate::Result<()> {
+        if let BudgetPolicy::HostAware { headroom, floor, ceil } = self {
+            if !headroom.is_finite() || !(0.0..1.0).contains(headroom) {
+                return Err(crate::SfError::Config(format!(
+                    "host-aware headroom must be in [0, 1), got {headroom}"
+                )));
+            }
+            if *ceil == 0 || floor > ceil {
+                return Err(crate::SfError::Config(format!(
+                    "host-aware budget bounds invalid: floor {floor} ceil {ceil}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate for one control epoch. `cpus` is the host's logical cpu
+    /// count; `external_busy` the smoothed non-process busy fraction
+    /// ([`HostLoadMonitor::tick`]), `None` while unknown.
+    pub fn evaluate(&self, cpus: usize, external_busy: Option<f64>) -> BudgetDecision {
+        match *self {
+            BudgetPolicy::Unlimited => BudgetDecision { budget: None, note: None },
+            BudgetPolicy::Fixed(n) => BudgetDecision { budget: Some(n), note: None },
+            BudgetPolicy::HostAware { headroom, floor, ceil } => {
+                let floor = floor.min(ceil);
+                match external_busy {
+                    None => BudgetDecision {
+                        budget: Some(ceil),
+                        note: Some(
+                            "host-aware budget: host load unavailable; holding at the \
+                             ceiling (no-op degradation)"
+                                .into(),
+                        ),
+                    },
+                    Some(busy) => {
+                        let usable = (1.0 - busy.clamp(0.0, 1.0) - headroom).max(0.0);
+                        let raw = (cpus.max(1) as f64 * usable).floor() as usize;
+                        BudgetDecision { budget: Some(raw.clamp(floor, ceil)), note: None }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for BudgetPolicy {
+    type Err = String;
+
+    /// `"unlimited"` | `"none"`, an integer (fixed cap), `"host"`,
+    /// `"host:<headroom>"`, or `"host:<headroom>:<floor>:<ceil>"`. The
+    /// host forms default `ceil` to the online cpu count.
+    fn from_str(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s == "unlimited" || s == "none" {
+            return Ok(BudgetPolicy::Unlimited);
+        }
+        if let Ok(n) = s.parse::<usize>() {
+            return Ok(BudgetPolicy::Fixed(n));
+        }
+        let mut parts = s.split(':');
+        if parts.next() != Some("host") {
+            return Err(format!("unrecognized budget policy '{s}'"));
+        }
+        let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut policy = BudgetPolicy::host_aware(ncpus);
+        if let BudgetPolicy::HostAware { headroom, floor, ceil } = &mut policy {
+            if let Some(h) = parts.next() {
+                *headroom = h.parse().map_err(|_| format!("bad headroom '{h}'"))?;
+            }
+            if let Some(f) = parts.next() {
+                *floor = f.parse().map_err(|_| format!("bad floor '{f}'"))?;
+            }
+            if let Some(c) = parts.next() {
+                *ceil = c.parse().map_err(|_| format!("bad ceil '{c}'"))?;
+            }
+        }
+        policy.validate().map_err(|e| e.to_string())?;
+        Ok(policy)
+    }
+}
+
+/// Whether (and how) the scheduler pins stage threads to cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// No pinning — threads land wherever the OS drops them.
+    #[default]
+    Disabled,
+    /// Pack each replicable stage (its Split/Merge kernels and every
+    /// lane worker, present and future) onto one contiguous chunk of the
+    /// host's co-location order, sized proportionally to the stage's
+    /// replica ceiling. Degrades to a recorded no-op without topology
+    /// files or affinity permission.
+    Pack,
+}
+
+/// One stage's placement outcome for the run report.
+#[derive(Debug, Clone)]
+pub struct PlacementAssignment {
+    /// Stage name.
+    pub target: String,
+    /// The cpu set the stage's threads were pinned to.
+    pub cpus: Vec<usize>,
+    /// Threads whose pin stuck.
+    pub pinned_threads: usize,
+    /// Pin attempts that were refused (permission, platform, env).
+    pub denied_threads: usize,
+    /// First refusal reason, if any.
+    pub note: Option<String>,
+}
+
+/// Placement section of [`RunReport`](crate::scheduler::RunReport):
+/// per-stage assignments plus no-op/degradation annotations.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementReport {
+    pub assignments: Vec<PlacementAssignment>,
+    pub notes: Vec<String>,
+}
+
+impl PlacementReport {
+    /// True when placement was requested but not a single thread was
+    /// actually pinned (the explicit-no-op degradation path).
+    pub fn is_noop(&self) -> bool {
+        self.assignments.iter().all(|a| a.pinned_threads == 0)
+    }
+}
+
+/// Split `order` (a co-location-sorted cpu list, see
+/// [`CpuTopology::pack_order`]) into one **contiguous, non-empty** chunk
+/// per weight, sized by proportional apportionment. With fewer cpus than
+/// weights every target shares the full set — co-location degenerates
+/// gracefully instead of leaving a stage with nowhere to run.
+pub fn partition_cpus(order: &[usize], weights: &[usize]) -> Vec<Vec<usize>> {
+    let k = weights.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let n = order.len();
+    if n < k || n == 0 {
+        return (0..k).map(|_| order.to_vec()).collect();
+    }
+    // Only the weight *ratios* matter; clamping bounds `wi * n` (and the
+    // total) far away from overflow even for max_replicas = usize::MAX.
+    let w: Vec<usize> = weights.iter().map(|&x| x.clamp(1, 1 << 16)).collect();
+    let total_w: usize = w.iter().sum();
+    let mut shares: Vec<usize> = w.iter().map(|&wi| ((wi * n) / total_w).max(1)).collect();
+    let mut sum: usize = shares.iter().sum();
+    while sum < n {
+        // Give the next cpu to the most under-served weight.
+        let i = (0..k)
+            .max_by(|&a, &b| {
+                let da = w[a] as f64 / shares[a] as f64;
+                let db = w[b] as f64 / shares[b] as f64;
+                da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("k > 0");
+        shares[i] += 1;
+        sum += 1;
+    }
+    while sum > n {
+        // Take back from the most over-served weight that can spare one.
+        let i = (0..k)
+            .filter(|&i| shares[i] > 1)
+            .min_by(|&a, &b| {
+                let da = w[a] as f64 / shares[a] as f64;
+                let db = w[b] as f64 / shares[b] as f64;
+                da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("sum > n >= k implies a share > 1");
+        shares[i] -= 1;
+        sum -= 1;
+    }
+    let mut out = Vec::with_capacity(k);
+    let mut cursor = 0;
+    for s in shares {
+        out.push(order[cursor..cursor + s].to_vec());
+        cursor += s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_and_unlimited_evaluate_trivially() {
+        assert_eq!(
+            BudgetPolicy::Unlimited.evaluate(8, Some(0.5)),
+            BudgetDecision { budget: None, note: None }
+        );
+        assert_eq!(
+            BudgetPolicy::Fixed(6).evaluate(8, Some(0.9)).budget,
+            Some(6),
+            "fixed cap ignores host load"
+        );
+    }
+
+    #[test]
+    fn host_aware_tracks_external_load() {
+        let p = BudgetPolicy::HostAware { headroom: 0.0, floor: 1, ceil: 8 };
+        assert_eq!(p.evaluate(8, Some(0.0)).budget, Some(8));
+        assert_eq!(p.evaluate(8, Some(0.5)).budget, Some(4));
+        assert_eq!(p.evaluate(8, Some(1.0)).budget, Some(1), "floor holds");
+        // Headroom is capacity left for the neighbors.
+        let p = BudgetPolicy::HostAware { headroom: 0.25, floor: 1, ceil: 8 };
+        assert_eq!(p.evaluate(8, Some(0.0)).budget, Some(6));
+    }
+
+    #[test]
+    fn host_aware_without_telemetry_is_an_annotated_ceiling() {
+        let p = BudgetPolicy::host_aware(4);
+        let d = p.evaluate(8, None);
+        assert_eq!(d.budget, Some(4));
+        assert!(d.note.unwrap().contains("unavailable"));
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(BudgetPolicy::HostAware { headroom: 1.0, floor: 1, ceil: 4 }
+            .validate()
+            .is_err());
+        assert!(BudgetPolicy::HostAware { headroom: -0.1, floor: 1, ceil: 4 }
+            .validate()
+            .is_err());
+        assert!(BudgetPolicy::HostAware { headroom: 0.1, floor: 5, ceil: 4 }
+            .validate()
+            .is_err());
+        assert!(BudgetPolicy::HostAware { headroom: 0.1, floor: 0, ceil: 0 }
+            .validate()
+            .is_err());
+        BudgetPolicy::host_aware(4).validate().unwrap();
+    }
+
+    #[test]
+    fn parses_policy_strings() {
+        assert_eq!("unlimited".parse::<BudgetPolicy>().unwrap(), BudgetPolicy::Unlimited);
+        assert_eq!("6".parse::<BudgetPolicy>().unwrap(), BudgetPolicy::Fixed(6));
+        match "host:0.2:2:12".parse::<BudgetPolicy>().unwrap() {
+            BudgetPolicy::HostAware { headroom, floor, ceil } => {
+                assert!((headroom - 0.2).abs() < 1e-12);
+                assert_eq!((floor, ceil), (2, 12));
+            }
+            other => panic!("expected HostAware, got {other:?}"),
+        }
+        assert!(matches!(
+            "host".parse::<BudgetPolicy>().unwrap(),
+            BudgetPolicy::HostAware { .. }
+        ));
+        assert!("bogus".parse::<BudgetPolicy>().is_err());
+        assert!("host:2.0".parse::<BudgetPolicy>().is_err(), "headroom validated");
+    }
+
+    #[test]
+    fn partition_is_contiguous_exhaustive_and_proportional() {
+        let order: Vec<usize> = (0..8).collect();
+        let chunks = partition_cpus(&order, &[4, 2, 2]);
+        assert_eq!(chunks.len(), 3);
+        let flat: Vec<usize> = chunks.iter().flatten().copied().collect();
+        assert_eq!(flat, order, "chunks must tile the order exactly");
+        assert_eq!(chunks[0].len(), 4);
+        assert_eq!(chunks[1].len(), 2);
+        assert_eq!(chunks[2].len(), 2);
+    }
+
+    #[test]
+    fn partition_with_fewer_cpus_than_stages_shares_everything() {
+        let order = vec![0, 1];
+        let chunks = partition_cpus(&order, &[4, 4, 4]);
+        assert_eq!(chunks.len(), 3);
+        for c in &chunks {
+            assert_eq!(c, &order, "all stages share the whole set");
+        }
+    }
+
+    #[test]
+    fn partition_never_leaves_a_stage_empty() {
+        let order: Vec<usize> = (0..4).collect();
+        let chunks = partition_cpus(&order, &[100, 1, 1, 1]);
+        assert!(chunks.iter().all(|c| !c.is_empty()), "{chunks:?}");
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn partition_survives_unbounded_weights() {
+        // "Effectively unlimited" stage ceilings must not overflow the
+        // apportionment arithmetic.
+        let order: Vec<usize> = (0..8).collect();
+        let chunks = partition_cpus(&order, &[usize::MAX, 1]);
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 8);
+        assert!(chunks.iter().all(|c| !c.is_empty()));
+        assert!(chunks[0].len() > chunks[1].len());
+    }
+
+    #[test]
+    fn partition_degenerate_inputs() {
+        assert!(partition_cpus(&[], &[]).is_empty());
+        let chunks = partition_cpus(&[], &[1, 2]);
+        assert_eq!(chunks.len(), 2);
+        assert!(chunks.iter().all(|c| c.is_empty()));
+        assert_eq!(partition_cpus(&[7], &[3]), vec![vec![7]]);
+    }
+}

@@ -27,6 +27,10 @@ use crate::elastic::{
 use crate::estimator::RateEstimate;
 use crate::kernel::{KernelContext, KernelStatus};
 use crate::monitor::{MonitorConfig, MonitorEvent, QueueEnd, QueueMonitor};
+use crate::placement::{
+    partition_cpus, CpuTopology, PlacementAssignment, PlacementPolicy, PlacementReport,
+    ThreadPin,
+};
 use crate::timing::TimeRef;
 use crate::topology::{StreamId, Topology};
 use crate::{Result, SfError};
@@ -61,6 +65,17 @@ pub struct RunReport {
     /// Per-stage replica counts over the run (initial point + one point
     /// per scaling action) — the scaling timeline of an elastic run.
     pub replica_trajectories: Vec<StageTrajectory>,
+    /// The effective global worker budget over the run: one
+    /// `(at_ns, budget)` point per change. Non-empty only when the
+    /// controller ran with a capping
+    /// [`BudgetPolicy`](crate::placement::BudgetPolicy); a
+    /// host-aware run shows the budget following host load here.
+    pub budget_timeline: Vec<(u64, usize)>,
+    /// Core-affinity placement outcome: per-stage cpu assignments with
+    /// pinned/denied thread counts, plus explicit no-op/degradation
+    /// annotations (missing topology files, refused `sched_setaffinity`,
+    /// unreadable host load).
+    pub placement: PlacementReport,
 }
 
 /// Fraction of a run one stream spent blocked, per end.
@@ -127,6 +142,28 @@ impl RunReport {
                 .join(" -> ");
             lines.push(format!("stage {}: replicas {path}", tr.stage));
         }
+        if !self.budget_timeline.is_empty() {
+            let path = self
+                .budget_timeline
+                .iter()
+                .map(|(t, b)| format!("{b}@{:.3}s", *t as f64 / 1.0e9))
+                .collect::<Vec<_>>()
+                .join(" -> ");
+            lines.push(format!("worker budget: {path}"));
+        }
+        for a in &self.placement.assignments {
+            let note = match &a.note {
+                Some(n) => format!("; {n}"),
+                None => String::new(),
+            };
+            lines.push(format!(
+                "placement {}: cpus {:?} ({} pinned, {} denied{note})",
+                a.target, a.cpus, a.pinned_threads, a.denied_threads
+            ));
+        }
+        for n in &self.placement.notes {
+            lines.push(format!("placement note: {n}"));
+        }
         for ev in &self.elastic_events {
             lines.push(ev.to_string());
         }
@@ -134,75 +171,19 @@ impl RunReport {
     }
 }
 
-/// The scheduler: owns a validated topology, an optional monitor config,
-/// and the elastic control-plane configuration.
+/// The run engine behind [`crate::flow::Session::run`]: spawn kernels +
+/// monitors (+ the elastic controller), join, aggregate. Consumes the
+/// topology's kernel table; stream metadata survives for the report.
 ///
-/// **Deprecated surface.** Run configuration has unified into
-/// [`crate::flow::RunOptions`] consumed by [`crate::flow::Session::run`];
-/// the `with_*` builders below are thin shims kept for one release.
-pub struct Scheduler {
-    topo: Topology,
-    monitor_cfg: MonitorConfig,
-    elastic_cfg: ElasticConfig,
-    /// Run the controller even without replicable stages (buffer advice
-    /// on plain streams).
-    elastic_forced: bool,
-}
-
-impl Scheduler {
-    pub fn new(topo: Topology) -> Self {
-        Scheduler {
-            topo,
-            monitor_cfg: MonitorConfig::disabled(),
-            elastic_cfg: ElasticConfig::default(),
-            elastic_forced: false,
-        }
-    }
-
-    /// Enable per-queue monitoring with the given configuration.
-    #[deprecated(
-        since = "0.3.0",
-        note = "set `RunOptions::monitor` and call `flow::Session::run(topology, opts)`"
-    )]
-    pub fn with_monitoring(mut self, cfg: MonitorConfig) -> Self {
-        self.monitor_cfg = cfg;
-        self
-    }
-
-    /// Override the control-plane configuration, and run the controller
-    /// even if the topology declares no replicable stage (it then only
-    /// applies analytic buffer sizing to monitored streams).
-    #[deprecated(
-        since = "0.3.0",
-        note = "set `RunOptions::elastic` and call `flow::Session::run(topology, opts)`"
-    )]
-    pub fn with_elastic(mut self, cfg: ElasticConfig) -> Self {
-        self.elastic_cfg = cfg;
-        self.elastic_forced = true;
-        self
-    }
-
-    /// Run to completion: spawn kernels + monitors (+ the elastic
-    /// controller when stages are declared), join, aggregate.
-    pub fn run(&mut self) -> Result<RunReport> {
-        execute(&mut self.topo, &self.monitor_cfg, &self.elastic_cfg, self.elastic_forced)
-    }
-
-    /// Access the (possibly consumed) topology's stream table.
-    pub fn streams(&self) -> &[crate::topology::StreamEdge] {
-        self.topo.streams()
-    }
-}
-
-/// The run engine shared by [`crate::flow::Session`] and the deprecated
-/// [`Scheduler`] shims: spawn kernels + monitors (+ the elastic
-/// controller), join, aggregate. Consumes the topology's kernel table;
-/// stream metadata survives for the report.
+/// (The pre-0.4 `Scheduler::with_monitoring(..).with_elastic(..)` shim
+/// surface is gone — [`crate::flow::RunOptions`] is the one way to
+/// configure a run.)
 pub(crate) fn execute(
     topo: &mut Topology,
     monitor_cfg: &MonitorConfig,
     elastic_cfg: &ElasticConfig,
     elastic_forced: bool,
+    placement: PlacementPolicy,
 ) -> Result<RunReport> {
     topo.validate()?;
     let time = TimeRef::new();
@@ -220,6 +201,42 @@ pub(crate) fn execute(
         let downstream = topo.streams.iter().find(|e| e.src == decl.merge).map(bind);
         stage_bindings.push(StageBinding { stage: decl.stage.clone(), upstream, downstream });
     }
+    // ---- placement: pack each stage onto co-located cores ------------
+    // Pins are installed on the stages (covering lane workers present
+    // and future) and remembered per split/merge kernel id for the spawn
+    // loop below. Every failure mode — no stages, unreadable topology,
+    // denied syscalls — degrades to a recorded no-op in the report.
+    let mut stage_pins: Vec<(String, Arc<ThreadPin>)> = Vec::new();
+    let mut kernel_pins: HashMap<usize, Arc<ThreadPin>> = HashMap::new();
+    let mut placement_notes: Vec<String> = Vec::new();
+    if placement == PlacementPolicy::Pack {
+        if topo.elastic.is_empty() {
+            placement_notes
+                .push("placement: no replicable stages — nothing to pin (no-op)".into());
+        } else {
+            let host = CpuTopology::discover();
+            if let Some(reason) = host.fallback_reason() {
+                placement_notes.push(format!(
+                    "placement: cpu topology unreadable ({reason}); packing over a flat \
+                     cpu list"
+                ));
+            }
+            let order = host.pack_order();
+            let weights: Vec<usize> = topo
+                .elastic
+                .iter()
+                .map(|d| d.stage.policy().max_replicas.max(1))
+                .collect();
+            for (decl, cpus) in topo.elastic.iter().zip(partition_cpus(&order, &weights)) {
+                let pin = ThreadPin::new(cpus);
+                decl.stage.install_pin(pin.clone());
+                kernel_pins.insert(decl.split.0, pin.clone());
+                kernel_pins.insert(decl.merge.0, pin.clone());
+                stage_pins.push((decl.stage.stage_name().to_string(), pin));
+            }
+        }
+    }
+
     let use_controller = !stage_bindings.is_empty() || elastic_forced;
     let stream_bindings: Vec<StreamBinding> = if use_controller {
         topo.streams
@@ -315,14 +332,20 @@ pub(crate) fn execute(
 
     // ---- kernels ------------------------------------------------------
     let t0 = time.now_ns();
-    for ((mut kernel, mut ctx), kernel_closers) in
-        kernels.into_iter().zip(contexts).zip(closers)
+    for (idx, ((mut kernel, mut ctx), kernel_closers)) in
+        kernels.into_iter().zip(contexts).zip(closers).enumerate()
     {
         let name = kernel.name().to_string();
+        // A stage's Split/Merge kernels share their lanes' cpu set, so
+        // the whole stage stays co-located.
+        let pin = kernel_pins.get(&idx).cloned();
         kernel_threads.push(
             std::thread::Builder::new()
                 .name(format!("sf-k-{name}"))
                 .spawn(move || {
+                    if let Some(p) = &pin {
+                        p.pin_self();
+                    }
                     kernel.on_start(&mut ctx);
                     loop {
                         match kernel.run(&mut ctx) {
@@ -357,21 +380,45 @@ pub(crate) fn execute(
         t.join().map_err(|_| SfError::Scheduler("monitor thread panicked".into()))?;
     }
     ctl_stop.store(true, Ordering::Relaxed);
-    let (elastic_events, replica_trajectories): (Vec<ElasticEvent>, Vec<StageTrajectory>) =
-        match ctl_thread {
-            Some(t) => {
-                let outcome = t
-                    .join()
-                    .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?;
-                (outcome.events, outcome.trajectories)
-            }
-            None => (Vec::new(), Vec::new()),
-        };
+    #[allow(clippy::type_complexity)]
+    let (elastic_events, replica_trajectories, budget_timeline, ctl_notes): (
+        Vec<ElasticEvent>,
+        Vec<StageTrajectory>,
+        Vec<(u64, usize)>,
+        Vec<String>,
+    ) = match ctl_thread {
+        Some(t) => {
+            let outcome = t
+                .join()
+                .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?;
+            (outcome.events, outcome.trajectories, outcome.budget_timeline, outcome.notes)
+        }
+        None => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+    };
+
+    // Placement outcome: read the accumulated pin counters *after* the
+    // run so late-spawned replica workers are counted too.
+    placement_notes.extend(ctl_notes);
+    let placement_report = PlacementReport {
+        assignments: stage_pins
+            .into_iter()
+            .map(|(target, pin)| PlacementAssignment {
+                target,
+                cpus: pin.cpus().to_vec(),
+                pinned_threads: pin.applied(),
+                denied_threads: pin.denied(),
+                note: pin.note(),
+            })
+            .collect(),
+        notes: placement_notes,
+    };
 
     let mut report = RunReport {
         wall_ns,
         elastic_events,
         replica_trajectories,
+        budget_timeline,
+        placement: placement_report,
         ..Default::default()
     };
     while let Ok(ev) = drain_rx.try_recv() {
@@ -501,23 +548,4 @@ mod tests {
         assert_eq!(pops, 200_000);
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_scheduler_shims_still_run() {
-        // The one-release back-compat path: `Scheduler::with_*` must keep
-        // behaving exactly like `Session::run` with the same options.
-        let mut i = 0u64;
-        let flow = Flow::new("shim")
-            .source::<u64>(Box::new(ClosureSource::new("src", move || {
-                i += 1;
-                (i <= 1_000).then_some(i)
-            })))
-            .sink(Box::new(ClosureSink::new("snk", |_: u64| {})))
-            .unwrap();
-        let report = Scheduler::new(flow.finish())
-            .with_monitoring(MonitorConfig::disabled())
-            .run()
-            .unwrap();
-        assert_eq!(report.stream_totals["src.0 -> snk.0"], (1_000, 1_000));
-    }
 }

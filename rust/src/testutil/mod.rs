@@ -1,11 +1,79 @@
-//! Lightweight property-based testing harness (proptest is not vendored).
+//! Lightweight property-based testing harness (proptest is not vendored),
+//! plus shared test doubles.
 //!
 //! [`check`] runs a property over `cases` seeded random inputs; on the
 //! first failure it performs bounded greedy shrinking via a user-supplied
 //! shrinker and panics with the minimal counterexample. Deterministic:
 //! the failing seed is printed so the case can be replayed.
+//!
+//! [`ScriptedStage`] is the scriptable [`ElasticStage`] double used by
+//! controller-level integration tests and benches (threadless
+//! `ElasticController::step` driving).
+//!
+//! [`ElasticController::step`]: crate::elastic::ElasticController::step
 
+use std::sync::{Arc, Mutex};
+
+use crate::elastic::{ElasticPolicy, ElasticStage};
+use crate::queue::MonitorSample;
 use crate::rng::Xoshiro256pp;
+
+/// A scriptable [`ElasticStage`]: no threads, no queues — every active
+/// lane reports a fixed per-probe service count (`tc_per_lane`) with no
+/// blocked time, and `scale_to` applies the coordinated target verbatim
+/// (policy-clamped). Lets tests and benches drive the controller's
+/// decision loop deterministically.
+pub struct ScriptedStage {
+    name: &'static str,
+    replicas: Mutex<usize>,
+    policy: ElasticPolicy,
+    tc_per_lane: u64,
+}
+
+impl ScriptedStage {
+    pub fn new(
+        name: &'static str,
+        replicas: usize,
+        policy: ElasticPolicy,
+        tc_per_lane: u64,
+    ) -> Arc<Self> {
+        Arc::new(ScriptedStage { name, replicas: Mutex::new(replicas), policy, tc_per_lane })
+    }
+}
+
+impl ElasticStage for ScriptedStage {
+    fn stage_name(&self) -> &str {
+        self.name
+    }
+    fn replicas(&self) -> usize {
+        *self.replicas.lock().unwrap()
+    }
+    fn scale_to(&self, n: usize) -> usize {
+        let n = self.policy.clamp(n);
+        *self.replicas.lock().unwrap() = n;
+        n
+    }
+    fn lane_probe(&self) -> Vec<MonitorSample> {
+        (0..self.replicas())
+            .map(|_| MonitorSample {
+                tc_head: self.tc_per_lane,
+                tc_tail: self.tc_per_lane,
+                read_blocked_ns: 0,
+                write_blocked_ns: 0,
+            })
+            .collect()
+    }
+    fn backlog(&self) -> usize {
+        0
+    }
+    fn policy(&self) -> &ElasticPolicy {
+        &self.policy
+    }
+    fn input_closed(&self) -> bool {
+        false
+    }
+    fn join_workers(&self) {}
+}
 
 /// Property-check configuration.
 #[derive(Debug, Clone, Copy)]

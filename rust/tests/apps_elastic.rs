@@ -136,7 +136,7 @@ fn coordinated_controller_scales_loaded_stage_and_refuses_starved_one() {
         RunOptions::default().with_elastic(ElasticConfig {
             tick: Duration::from_millis(5),
             buffer_advice: false,
-            worker_budget: Some(6),
+            worker_budget: BudgetPolicy::Fixed(6),
             ..Default::default()
         }),
     )
@@ -262,7 +262,7 @@ fn phase_shifting_rabin_karp_rescales_hash_stage_after_shift() {
         RunOptions::default().with_elastic(ElasticConfig {
             tick: Duration::from_millis(5),
             buffer_advice: false,
-            worker_budget: Some(6),
+            worker_budget: BudgetPolicy::Fixed(6),
             ..Default::default()
         }),
     )

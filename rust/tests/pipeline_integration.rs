@@ -295,3 +295,184 @@ fn heterogeneous_item_types_coexist() {
     Session::run(topo, RunOptions::default()).unwrap();
     assert_eq!(*out.lock().unwrap(), vec!["#1", "#2", "#3", "#4", "#5"]);
 }
+
+// ------------------------------------------------- mid-graph fan-in --
+// The two previously untested fan-in shapes (ROADMAP PR-4 follow-up):
+// an elastic stage's Merge feeding a downstream *kernel* (not a sink),
+// and `FlowFan::merge` collapsing a static fan through a kernel that
+// itself has an output.
+
+#[test]
+fn elastic_merge_into_midgraph_kernel_preserves_order_and_totals() {
+    use streamflow::elastic::ElasticStageConfig;
+    use streamflow::flow::Flow;
+
+    struct AddOne;
+    impl streamflow::elastic::Replicable for AddOne {
+        type In = u64;
+        type Out = u64;
+        fn process(&mut self, v: u64) -> u64 {
+            v + 1
+        }
+    }
+    /// The mid-graph consumer of the stage's merge output.
+    struct Tenfold;
+    impl Kernel for Tenfold {
+        fn name(&self) -> &str {
+            "relay"
+        }
+        fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+            match ctx.input::<u64>(0).unwrap().pop() {
+                Some(v) => {
+                    if ctx.output::<u64>(0).unwrap().push(v * 10).is_err() {
+                        return KernelStatus::Done;
+                    }
+                    KernelStatus::Continue
+                }
+                None => KernelStatus::Done,
+            }
+        }
+    }
+
+    let items = 30_000u64;
+    let mut i = 0u64;
+    let out = Arc::new(Mutex::new(Vec::new()));
+    let o2 = out.clone();
+    let flow = Flow::new("merge-mid")
+        .stream_defaults(StreamConfig::default().with_capacity(256))
+        .source::<u64>(Box::new(ClosureSource::new("src", move || {
+            i += 1;
+            (i <= items).then_some(i)
+        })))
+        .elastic(
+            "work",
+            ElasticStageConfig {
+                policy: ElasticPolicy::pinned(3),
+                initial_replicas: 3,
+                lane_capacity: 64,
+            },
+            |_| AddOne,
+        )
+        .unwrap()
+        .then::<u64>(Box::new(Tenfold))
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: u64| o2.lock().unwrap().push(v))))
+        .unwrap();
+
+    let report =
+        Session::run_flow(flow, RunOptions::monitored(MonitorConfig::practical())).unwrap();
+    let v = out.lock().unwrap();
+    assert_eq!(v.len(), items as usize, "item loss through merge → kernel");
+    for (idx, &x) in v.iter().enumerate() {
+        assert_eq!(x, (idx as u64 + 2) * 10, "order broken at {idx}");
+    }
+    // The merge → relay edge is an ordinary instrumented stream with the
+    // merge kernel as its producer.
+    let (pushes, pops) = report.stream_totals["work-merge.0 -> relay.0"];
+    assert_eq!((pushes, pops), (items, items));
+}
+
+#[test]
+fn flowfan_merge_into_midgraph_kernel_delivers_everything() {
+    use streamflow::flow::Flow;
+
+    /// Round-robin 3-port source.
+    struct Rr {
+        left: u64,
+        next: usize,
+    }
+    impl Kernel for Rr {
+        fn name(&self) -> &str {
+            "rr"
+        }
+        fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+            if self.left == 0 {
+                return KernelStatus::Done;
+            }
+            self.left -= 1;
+            let p = self.next;
+            self.next = (self.next + 1) % 3;
+            if ctx.output::<u64>(p).unwrap().push(self.left).is_err() {
+                return KernelStatus::Done;
+            }
+            KernelStatus::Continue
+        }
+    }
+    /// 3-in/1-out fan-in kernel — the previously untested non-sink
+    /// `FlowFan::merge` shape.
+    struct Funnel;
+    impl Kernel for Funnel {
+        fn name(&self) -> &str {
+            "funnel"
+        }
+        fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+            let mut all_closed = true;
+            let mut any = false;
+            for p in 0..ctx.num_inputs() {
+                match ctx.input::<u64>(p).unwrap().try_pop() {
+                    PopResult::Item(v) => {
+                        if ctx.output::<u64>(0).unwrap().push(v).is_err() {
+                            return KernelStatus::Done;
+                        }
+                        any = true;
+                        all_closed = false;
+                    }
+                    PopResult::Empty => all_closed = false,
+                    PopResult::Closed => {}
+                }
+            }
+            if all_closed {
+                KernelStatus::Done
+            } else if any {
+                KernelStatus::Continue
+            } else {
+                KernelStatus::Stall
+            }
+        }
+    }
+
+    let items = 9_999u64;
+    let sum = Arc::new(AtomicU64::new(0));
+    let count = Arc::new(AtomicU64::new(0));
+    let (s2, c2) = (sum.clone(), count.clone());
+    let flow = Flow::new("fan-merge-mid")
+        .stream_defaults(StreamConfig::default().with_capacity(128))
+        .source::<u64>(Box::new(Rr { left: items, next: 0 }))
+        .tee(3)
+        .then_each::<u64, _>(|_| {
+            struct Inc;
+            impl Kernel for Inc {
+                fn name(&self) -> &str {
+                    "inc"
+                }
+                fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+                    match ctx.input::<u64>(0).unwrap().pop() {
+                        Some(v) => {
+                            if ctx.output::<u64>(0).unwrap().push(v + 1).is_err() {
+                                return KernelStatus::Done;
+                            }
+                            KernelStatus::Continue
+                        }
+                        None => KernelStatus::Done,
+                    }
+                }
+            }
+            Box::new(Inc)
+        })
+        .unwrap()
+        .merge::<u64>(Box::new(Funnel))
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: u64| {
+            s2.fetch_add(v, Ordering::Relaxed);
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+
+    let topo = flow.finish();
+    // The fan-in kernel's ports are contiguous: inputs 0..3, output 0.
+    topo.validate().unwrap();
+    Session::run(topo, RunOptions::default()).unwrap();
+    assert_eq!(count.load(Ordering::Relaxed), items);
+    // Items 0..items each incremented once.
+    assert_eq!(sum.load(Ordering::Relaxed), items * (items - 1) / 2 + items);
+}

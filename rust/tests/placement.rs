@@ -1,0 +1,342 @@
+//! Host-aware placement & dynamic worker budgets, outside-in: the
+//! controller must shrink the coordinated replica total **within one
+//! control epoch** of synthetic host load arriving and restore it after
+//! the load clears (budget timeline audited in the report); the
+//! host-aware path must degrade to an annotated ceiling without
+//! telemetry; and `PlacementPolicy::Pack` must never change results —
+//! only where threads run — including on hosts that refuse
+//! `sched_setaffinity` (the CI fallback lane runs this file with
+//! `SF_NO_AFFINITY=1`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// `ElasticStage` is needed in scope for `stage.replicas()` calls on the
+// shared ScriptedStage double.
+use streamflow::elastic::{
+    ElasticConfig, ElasticController, ElasticStage, ElasticStageConfig, StageBinding,
+    StreamBinding,
+};
+use streamflow::kernel::ClosureSink;
+use streamflow::placement::{affinity_disabled_by_env, BudgetPolicy, SyntheticLoad};
+use streamflow::prelude::*;
+use streamflow::queue::{instrumented, StreamConfig};
+use streamflow::testutil::ScriptedStage;
+use streamflow::workload::{Item, PacedProducer};
+
+/// The shared scriptable stage, parameterized for these tests: an
+/// overload-ready stage whose every lane serves `tc_per_lane` items per
+/// 10 ms probe, no cooldown.
+fn scripted(replicas: usize, max: usize, tc_per_lane: u64) -> Arc<ScriptedStage> {
+    ScriptedStage::new(
+        "scripted",
+        replicas,
+        ElasticPolicy { max_replicas: max, cooldown_ticks: 0, ..Default::default() },
+        tc_per_lane,
+    )
+}
+
+/// Overloaded stage + controller with a host-aware budget over a
+/// pretended 8-cpu host, fed by the given synthetic load source.
+fn host_aware_harness(
+    load: &Arc<SyntheticLoad>,
+) -> (Arc<ScriptedStage>, Arc<streamflow::queue::SpscQueue<u64>>, ElasticController) {
+    let stage = scripted(1, 8, 10); // μ = 1k/s at 10 ms ticks
+    let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+    let (fwd_tx, _fwd_rx) = std::sync::mpsc::channel();
+    let ctl = ElasticController::new(
+        ElasticConfig {
+            buffer_advice: false,
+            ewma_alpha: 1.0,
+            worker_budget: BudgetPolicy::HostAware { headroom: 0.0, floor: 1, ceil: 8 },
+            load_source: Some(SyntheticLoad::handle_of(&load)),
+            host_cpus_override: Some(8),
+            ..Default::default()
+        },
+        vec![StageBinding {
+            stage: stage.clone(),
+            upstream: Some(StreamBinding {
+                id: StreamId(0),
+                label: "src -> scripted".into(),
+                handle,
+            }),
+            downstream: None,
+        }],
+        vec![],
+        fwd_tx,
+        Arc::new(AtomicBool::new(false)),
+    );
+    (stage, upq, ctl)
+}
+
+#[test]
+fn synthetic_host_load_shrinks_budget_within_one_epoch_and_restores() {
+    let load = SyntheticLoad::new(0.0);
+    let (stage, upq, mut ctl) = host_aware_harness(&load);
+    let feed = |n: u64| {
+        for i in 0..n {
+            let _ = upq.try_push(i);
+        }
+    };
+    // Idle host, λ = 8k/s vs μ = 1k/s per replica: the stage claims all 8.
+    for _ in 0..4 {
+        feed(80);
+        ctl.step(0.010);
+    }
+    assert_eq!(stage.replicas(), 8, "idle host must allow the full claim");
+
+    // An external tenant takes 3/4 of the machine: the very next control
+    // epoch must see budget 8 → 2 and trim the coordinated total to it.
+    load.set_external(0.75);
+    feed(80);
+    ctl.step(0.010);
+    assert_eq!(
+        stage.replicas(),
+        2,
+        "replica total must shrink within ONE control epoch of host load"
+    );
+
+    // The tenant leaves: the budget and the claim recover.
+    load.set_external(0.0);
+    feed(80);
+    ctl.step(0.010);
+    assert_eq!(stage.replicas(), 8, "cleared host must restore the fan-out");
+
+    let report = ctl.into_report();
+    let budgets: Vec<usize> = report.budget_timeline.iter().map(|&(_, b)| b).collect();
+    assert_eq!(budgets, vec![8, 2, 8], "audited budget path: {:?}", report.budget_timeline);
+    assert!(report.notes.is_empty(), "healthy telemetry must not be annotated");
+    let downs = report
+        .events
+        .iter()
+        .filter(|e| matches!(e.action, streamflow::elastic::ElasticAction::ScaleDown { .. }))
+        .count();
+    assert!(downs >= 1, "the trim must be audited: {:?}", report.events);
+}
+
+#[test]
+fn budget_timeline_lands_in_the_run_report_end_to_end() {
+    // A real scheduled run under a host-aware budget with fixed 50%
+    // synthetic load over a pretended 8-cpu host: the effective budget
+    // (4) must be visible in RunReport::budget_timeline and the
+    // human-readable scaling timeline.
+    let load = SyntheticLoad::new(0.5);
+    struct NoopWorker;
+    impl Replicable for NoopWorker {
+        type In = Item;
+        type Out = Item;
+        fn process(&mut self, v: Item) -> Item {
+            v
+        }
+    }
+    let seen = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let s2 = seen.clone();
+    let items = 2_000u64;
+    let flow = Flow::new("budget-e2e")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec(
+            "prod", 20_000.0, items,
+        )))
+        .elastic(
+            "work",
+            ElasticStageConfig {
+                policy: ElasticPolicy { max_replicas: 4, ..Default::default() },
+                initial_replicas: 1,
+                lane_capacity: 256,
+            },
+            |_| NoopWorker,
+        )
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            s2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_elastic(ElasticConfig {
+            tick: Duration::from_millis(5),
+            buffer_advice: false,
+            worker_budget: BudgetPolicy::HostAware { headroom: 0.0, floor: 1, ceil: 8 },
+            load_source: Some(SyntheticLoad::handle_of(&load)),
+            host_cpus_override: Some(8),
+            ..Default::default()
+        }),
+    )
+    .unwrap();
+    assert_eq!(seen.load(Ordering::Relaxed), items, "item loss");
+    assert!(
+        !report.budget_timeline.is_empty(),
+        "host-aware run must audit its budget in the report"
+    );
+    assert!(
+        report.budget_timeline.iter().all(|&(_, b)| b == 4),
+        "constant 50% load over 8 cpus is a constant budget of 4: {:?}",
+        report.budget_timeline
+    );
+    assert!(
+        report.scaling_timeline().iter().any(|l| l.contains("worker budget")),
+        "budget must appear in the human-readable timeline: {:?}",
+        report.scaling_timeline()
+    );
+}
+
+#[test]
+fn host_aware_budget_degrades_to_annotated_ceiling_without_telemetry() {
+    struct Dead;
+    impl streamflow::placement::LoadSource for Dead {
+        fn host_ticks(&self) -> Option<(u64, u64)> {
+            None
+        }
+    }
+    let stage = scripted(1, 8, 10);
+    let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+    let (fwd_tx, _fwd_rx) = std::sync::mpsc::channel();
+    let mut ctl = ElasticController::new(
+        ElasticConfig {
+            buffer_advice: false,
+            ewma_alpha: 1.0,
+            worker_budget: BudgetPolicy::HostAware { headroom: 0.0, floor: 1, ceil: 6 },
+            load_source: Some(streamflow::placement::LoadSourceHandle::new(Arc::new(Dead))),
+            host_cpus_override: Some(8),
+            ..Default::default()
+        },
+        vec![StageBinding {
+            stage: stage.clone(),
+            upstream: Some(StreamBinding {
+                id: StreamId(0),
+                label: "src -> scripted".into(),
+                handle,
+            }),
+            downstream: None,
+        }],
+        vec![],
+        fwd_tx,
+        Arc::new(AtomicBool::new(false)),
+    );
+    for _ in 0..5 {
+        for i in 0..80u64 {
+            let _ = upq.try_push(i);
+        }
+        ctl.step(0.010);
+    }
+    assert_eq!(stage.replicas(), 6, "blind host-aware budget holds at the ceiling");
+    let report = ctl.into_report();
+    assert_eq!(report.notes.len(), 1, "degradation annotated exactly once: {:?}", report.notes);
+    assert!(report.notes[0].contains("unavailable"));
+}
+
+// ------------------------------------------------------------ pinning --
+
+/// Run a small elastic pipeline under `PlacementPolicy::Pack` and hand
+/// back (delivered count ok, report).
+fn run_pinned_pipeline() -> RunReport {
+    struct AddOne;
+    impl Replicable for AddOne {
+        type In = u64;
+        type Out = u64;
+        fn process(&mut self, v: u64) -> u64 {
+            v + 1
+        }
+    }
+    let out = Arc::new(Mutex::new(Vec::new()));
+    let o2 = out.clone();
+    let mut i = 0u64;
+    let items = 10_000u64;
+    let flow = Flow::new("pinned")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<u64>(Box::new(streamflow::kernel::ClosureSource::new("src", move || {
+            i += 1;
+            (i <= items).then_some(i)
+        })))
+        .elastic(
+            "work",
+            ElasticStageConfig {
+                policy: ElasticPolicy::pinned(2),
+                initial_replicas: 2,
+                lane_capacity: 128,
+            },
+            |_| AddOne,
+        )
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: u64| o2.lock().unwrap().push(v))))
+        .unwrap();
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_placement(PlacementPolicy::Pack),
+    )
+    .unwrap();
+    let v = out.lock().unwrap();
+    assert_eq!(v.len(), items as usize, "pinning must not lose items");
+    assert!(
+        v.iter().enumerate().all(|(idx, &x)| x == idx as u64 + 2),
+        "pinning must not reorder items"
+    );
+    report
+}
+
+#[test]
+fn pack_placement_pins_or_degrades_to_annotated_noop() {
+    let report = run_pinned_pipeline();
+    assert_eq!(report.placement.assignments.len(), 1, "one assignment per stage");
+    let a = &report.placement.assignments[0];
+    assert_eq!(a.target, "work");
+    assert!(!a.cpus.is_empty(), "a stage always gets a cpu set (shared if scarce)");
+    // Split + merge + 2 workers = at least 4 pin attempts, each either
+    // applied or refused-and-annotated — never silently dropped.
+    assert!(
+        a.pinned_threads + a.denied_threads >= 4,
+        "every stage thread gets a pin attempt: {a:?}"
+    );
+    if affinity_disabled_by_env() {
+        // The CI fallback lane (SF_NO_AFFINITY=1): affinity must be an
+        // explicit no-op with the reason recorded.
+        assert_eq!(a.pinned_threads, 0, "denied host must pin nothing: {a:?}");
+        assert!(report.placement.is_noop());
+        assert!(
+            a.note.as_deref().unwrap_or("").contains("SF_NO_AFFINITY"),
+            "refusal reason must be recorded: {a:?}"
+        );
+    } else if a.denied_threads > 0 {
+        assert!(a.note.is_some(), "denials must carry a reason: {a:?}");
+    }
+}
+
+#[test]
+fn pack_placement_without_stages_is_an_annotated_noop() {
+    let mut i = 0u64;
+    let flow = Flow::new("plain")
+        .source::<u64>(Box::new(streamflow::kernel::ClosureSource::new("src", move || {
+            i += 1;
+            (i <= 100).then_some(i)
+        })))
+        .sink(Box::new(ClosureSink::new("snk", |_: u64| {})))
+        .unwrap();
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_placement(PlacementPolicy::Pack),
+    )
+    .unwrap();
+    assert!(report.placement.assignments.is_empty());
+    assert!(
+        report.placement.notes.iter().any(|n| n.contains("no replicable stages")),
+        "the no-op must be annotated: {:?}",
+        report.placement.notes
+    );
+}
+
+#[test]
+fn disabled_placement_reports_nothing() {
+    let mut i = 0u64;
+    let flow = Flow::new("plain")
+        .source::<u64>(Box::new(streamflow::kernel::ClosureSource::new("src", move || {
+            i += 1;
+            (i <= 100).then_some(i)
+        })))
+        .sink(Box::new(ClosureSink::new("snk", |_: u64| {})))
+        .unwrap();
+    let report = Session::run_flow(flow, RunOptions::default()).unwrap();
+    assert!(report.placement.assignments.is_empty());
+    assert!(report.placement.notes.is_empty());
+    assert!(report.budget_timeline.is_empty());
+}

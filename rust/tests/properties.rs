@@ -414,3 +414,76 @@ fn prop_blocking_probability_monotone_in_capacity() {
         },
     );
 }
+
+// ---------------------------------------------------------------- pacer --
+
+#[test]
+fn prop_pacer_never_bursts_under_preemption_gaps() {
+    // The shared no-catch-up deadline rule: under any schedule of
+    // on-time waits and preemption stalls (including deadlines already
+    // far in the past after a long park), consecutive deadlines are
+    // never closer than one full step — a preempted server did no work,
+    // so no compensating burst is ever allowed — and no deadline is ever
+    // scheduled sooner than one step from now.
+    use streamflow::workload::Pacer;
+    check(
+        cfg(128, 9),
+        |rng| {
+            let step = 1 + rng.next_bounded(10_000) as u64;
+            let events: Vec<(bool, u64)> = (0..rng.next_bounded(200) + 20)
+                .map(|_| {
+                    (rng.next_f64() < 0.25, rng.next_bounded(50 * step as u32) as u64)
+                })
+                .collect();
+            (step, events)
+        },
+        |(step, events)| {
+            let step = *step;
+            let mut p = Pacer::default();
+            let mut now = 0u64;
+            let mut prev: Option<u64> = None;
+            for &(stall, jitter) in events {
+                let d = p.next_deadline(now, step);
+                if d < now + step {
+                    return false; // scheduled into the past: burst
+                }
+                if let Some(pd) = prev {
+                    if d < pd + step {
+                        return false; // deadlines closer than one step
+                    }
+                }
+                prev = Some(d);
+                // Advance the clock: an on-time wait lands exactly on the
+                // deadline; a preemption stall overshoots it arbitrarily.
+                now = if stall { d.saturating_add(step + jitter) } else { d };
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn pacer_long_run_rate_is_exact_then_resets_after_long_park() {
+    use streamflow::workload::Pacer;
+    let step = 1_000u64;
+    let mut p = Pacer::default();
+    // A server that keeps up (each next_deadline call lands before the
+    // previous deadline expires, with jittery call times): deadlines
+    // advance by exactly one step per item — the long-run rate is exact,
+    // uncorrupted by the jitter.
+    let mut now = 500u64;
+    let d0 = p.next_deadline(now, step);
+    for k in 1..100u64 {
+        now = d0 + (k - 1) * step - 137; // called 137 ns before the deadline
+        let d = p.next_deadline(now, step);
+        assert_eq!(d, d0 + k * step, "a keeping-up server steps from the prior deadline");
+    }
+    // A deadline already far in the past (long park / descheduling): the
+    // next deadline steps from *now* — the lost time is forfeited, not
+    // compensated with a burst.
+    let far = d0 + 1_000 * step;
+    let d = p.next_deadline(far, step);
+    assert_eq!(d, far + step, "no catch-up after a long stall");
+    // And the rule re-anchors: the following item is one step later.
+    assert_eq!(p.next_deadline(d, step), far + 2 * step);
+}
