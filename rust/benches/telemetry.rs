@@ -1,0 +1,161 @@
+//! Telemetry-plane overhead — the number behind the "zero new hot-path
+//! atomics" claim: two-thread SPSC streaming throughput with the live
+//! `/metrics` plane **off** vs **on** (registry + HTTP endpoint + a
+//! scraper hammering it every ~5 ms), plus the micro costs of one scrape
+//! render and one ring emit+sync.
+//!
+//! Because a scrape is a handful of Relaxed loads of counters the data
+//! path already maintains, telemetry-on must stay within a few percent
+//! of telemetry-off. Emits `target/figures/BENCH_telemetry.json`
+//! (acceptance: overhead ≤ 3%). `SF_SCALE`/`SF_BENCH_SECS` shrink
+//! everything for CI smoke runs.
+
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use streamflow::bench::{black_box, Runner};
+use streamflow::config::Json;
+use streamflow::queue::{instrumented, StreamConfig};
+use streamflow::report::{figures_dir, Cell, Table};
+use streamflow::telemetry::{ControlEvent, EventRing, MetricsRegistry, MetricsServer};
+use streamflow::topology::StreamId;
+
+fn http_get(addr: SocketAddr) -> Option<String> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n").ok()?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).ok()?;
+    Some(buf)
+}
+
+/// Two-thread streaming throughput over an instrumented stream. With
+/// `telemetry`, the full live plane runs alongside: a registry scraping
+/// this stream's counters, the blocking-HTTP server, and a scraper
+/// thread pulling `/metrics` every ~5 ms for the duration. Returns
+/// (items/sec, scrapes served).
+fn streamed_throughput(n: u64, telemetry: bool) -> (f64, u64) {
+    let (q, handle) =
+        instrumented::<u64>(&StreamConfig::default().with_capacity(4096).with_item_bytes(8));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let scrapes = Arc::new(AtomicU64::new(0));
+    let plane = telemetry.then(|| {
+        let mut reg = MetricsRegistry::standalone();
+        reg.add_stream(StreamId(0), "bench.0 -> sink.0", handle.clone());
+        reg.set_ring(Arc::new(EventRing::new(64)));
+        let srv = MetricsServer::spawn("127.0.0.1:0", Arc::new(reg))
+            .expect("bind metrics server");
+        let addr = srv.local_addr();
+        let stop = stop.clone();
+        let scrapes = scrapes.clone();
+        let scraper = std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if let Some(body) = http_get(addr) {
+                    black_box(body.len());
+                    scrapes.fetch_add(1, Ordering::Relaxed);
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        });
+        (srv, scraper)
+    });
+
+    let qp = q.clone();
+    let t0 = std::time::Instant::now();
+    let prod = std::thread::spawn(move || {
+        for i in 0..n {
+            qp.push(i).unwrap();
+        }
+        qp.close();
+    });
+    let mut sum = 0u64;
+    while let Some(v) = q.pop() {
+        sum = sum.wrapping_add(v);
+    }
+    prod.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    black_box(sum);
+
+    stop.store(true, Ordering::Relaxed);
+    if let Some((srv, scraper)) = plane {
+        scraper.join().unwrap();
+        srv.shutdown();
+    }
+    assert_eq!(q.counters().total_pushes(), n);
+    assert_eq!(q.counters().total_pops(), n);
+    (n as f64 / secs, scrapes.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let mut runner = Runner::new();
+    let mut table = Table::new("telemetry", &["case", "value", "unit"]);
+    let mut json: BTreeMap<String, Json> = BTreeMap::new();
+
+    // ---- micro: one scrape render ------------------------------------------
+    let (q, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1024));
+    for i in 0..64u64 {
+        q.try_push(i).ok();
+    }
+    let mut reg = MetricsRegistry::standalone();
+    reg.add_stream(StreamId(0), "bench.0 -> sink.0", handle);
+    reg.set_ring(Arc::new(EventRing::new(64)));
+    let r = runner.bench("telemetry/render", Some(1.0), || {
+        black_box(reg.render().len());
+    });
+    let render_ns = r.ns.mean;
+    table.row_mixed(&[Cell::S("render".into()), Cell::F(render_ns), Cell::S("ns".into())]);
+    json.insert("render_ns".into(), Json::Num(render_ns));
+
+    // ---- micro: one structured event through the ring ----------------------
+    let ring = EventRing::new(4096);
+    let mut k = 0u64;
+    let r = runner.bench("telemetry/ring_emit_sync", Some(1.0), || {
+        k += 1;
+        ring.emit(ControlEvent::Budget { at_ns: k, budget: 4 });
+        ring.sync();
+    });
+    let emit_ns = r.ns.mean;
+    assert_eq!(ring.dropped(), 0);
+    table.row_mixed(&[
+        Cell::S("ring_emit_sync".into()),
+        Cell::F(emit_ns),
+        Cell::S("ns".into()),
+    ]);
+    json.insert("ring_emit_sync_ns".into(), Json::Num(emit_ns));
+
+    // ---- macro: streaming with the plane off vs on -------------------------
+    let n = (2_000_000.0 * Runner::scale()) as u64;
+    let (off, _) = streamed_throughput(n, false);
+    let (on, scrapes) = streamed_throughput(n, true);
+    let overhead_pct = (off - on) / off * 100.0;
+
+    for (label, v, unit) in [
+        ("spsc_throughput_telemetry_off", off / 1.0e6, "M items/s"),
+        ("spsc_throughput_telemetry_on", on / 1.0e6, "M items/s"),
+        ("telemetry_overhead", overhead_pct, "%"),
+        ("scrapes_served", scrapes as f64, "scrapes"),
+    ] {
+        table.row_mixed(&[Cell::S(label.into()), Cell::F(v), Cell::S(unit.into())]);
+    }
+    json.insert("off_items_per_sec".into(), Json::Num(off));
+    json.insert("on_items_per_sec".into(), Json::Num(on));
+    json.insert("overhead_pct".into(), Json::Num(overhead_pct));
+    json.insert("acceptance_max_overhead_pct".into(), Json::Num(3.0));
+    json.insert("scrapes_served".into(), Json::Num(scrapes as f64));
+    json.insert("items_streamed".into(), Json::Num(n as f64));
+
+    table.emit().expect("emit");
+    let json_path = figures_dir().join("BENCH_telemetry.json");
+    std::fs::create_dir_all(figures_dir()).expect("figures dir");
+    std::fs::write(&json_path, Json::Obj(json).to_string()).expect("write json");
+    println!(
+        "# telemetry off {:.1} M/s -> on {:.1} M/s ({overhead_pct:+.2}% overhead, {scrapes} \
+         scrapes served); render {render_ns:.0} ns, ring emit+sync {emit_ns:.0} ns",
+        off / 1e6,
+        on / 1e6,
+    );
+    println!("# JSON ledger: {}", json_path.display());
+}

@@ -33,6 +33,16 @@
 //! per-stage replica counts over time are returned as
 //! [`StageTrajectory`] records for [`RunReport::replica_trajectories`].
 //!
+//! All audit state flows through one channel: the controller publishes
+//! structured [`ControlEvent`]s (actions, lane spawns/retires, gate
+//! reasons, budget changes, blocked spans, converged rates) into a
+//! bounded [`EventRing`] and drains it into the ring's journal at the
+//! end of every tick. Live exporters (the `/metrics` endpoint, the JSONL
+//! tail — see [`crate::telemetry`]) read the same ring concurrently;
+//! [`ControlPlaneReport`] timelines are reconstructed from it at
+//! shutdown, and ring overflow is audited in
+//! [`ControlPlaneReport::events_dropped`], never silent.
+//!
 //! [`RunReport::replica_trajectories`]: crate::scheduler::RunReport::replica_trajectories
 
 use std::collections::HashMap;
@@ -50,6 +60,9 @@ use crate::placement::{
     ProcStatSource,
 };
 use crate::queue::MonitorHandle;
+use crate::telemetry::{
+    BlockEnd, ControlEvent, EventRing, GateReason, MetricsShared, DEFAULT_RING_CAPACITY,
+};
 use crate::timing::TimeRef;
 use crate::topology::StreamId;
 
@@ -156,6 +169,12 @@ pub struct ControlPlaneReport {
     /// Degradation annotations (e.g. host load unreadable): the control
     /// plane says when it is flying blind instead of guessing silently.
     pub notes: Vec<String>,
+    /// The full structured event journal (superset of `events`): lane
+    /// spawns/retires, gate reasons, budget changes, blocked spans,
+    /// converged rates — everything the [`EventRing`] carried.
+    pub control_events: Vec<ControlEvent>,
+    /// Events lost to ring-transport overflow (audited, never silent).
+    pub events_dropped: u64,
 }
 
 /// Global control-plane knobs (per-stage knobs live in [`ElasticPolicy`]).
@@ -243,11 +262,18 @@ struct StageState {
     /// Lifetime write-blocked ns of the downstream stream at the last tick.
     last_down_wb: u64,
     cooldown: u32,
+    /// Last emitted `(wanted, reason)` gate, for change-triggered (not
+    /// per-tick) [`ControlEvent::ScaleGated`] emission.
+    last_gate: Option<(usize, GateReason)>,
 }
 
 #[derive(Debug, Default)]
 struct StreamState {
     cooldown: u32,
+    /// Lifetime read-blocked ns at the last tick (blocked-span deltas).
+    last_rb: u64,
+    /// Lifetime write-blocked ns at the last tick.
+    last_wb: u64,
 }
 
 /// The control-plane thread body.
@@ -260,18 +286,20 @@ pub struct ElasticController {
     forward: Sender<MonitorEvent>,
     stop: Arc<AtomicBool>,
     time: TimeRef,
-    events: Vec<ElasticEvent>,
-    trajectories: Vec<StageTrajectory>,
+    /// The single audit channel: bounded transport + growable journal.
+    /// Live exporters read it concurrently; the report is built from it.
+    ring: Arc<EventRing>,
+    /// Live gauge block for the Prometheus registry, when attached.
+    gauges: Option<Arc<MetricsShared>>,
+    /// `(stage name, t0, initial replicas)` — trajectory seed points.
+    baselines: Vec<(String, u64, usize)>,
     stage_states: Vec<StageState>,
     stream_states: Vec<StreamState>,
     /// Host-load sampler, present iff the budget policy is host-aware.
     host_load: Option<HostLoadMonitor>,
     /// Online logical-cpu count the host-aware budget is computed over.
     host_cpus: usize,
-    /// `(at_ns, budget)` points, one per effective-budget change.
-    budget_timeline: Vec<(u64, usize)>,
     last_budget: Option<usize>,
-    notes: Vec<String>,
     budget_note_emitted: bool,
 }
 
@@ -286,14 +314,20 @@ impl ElasticController {
         let time = TimeRef::new();
         let t0 = time.now_ns();
         let stage_states = stages.iter().map(|_| StageState::default()).collect();
-        let trajectories = stages
+        let baselines = stages
             .iter()
-            .map(|sb| StageTrajectory {
-                stage: sb.stage.stage_name().to_string(),
-                points: vec![(t0, sb.stage.replicas())],
+            .map(|sb| (sb.stage.stage_name().to_string(), t0, sb.stage.replicas()))
+            .collect();
+        // Baseline the stream blocked-ns counters so the first tick's
+        // blocked-span deltas exclude anything pre-run.
+        let stream_states = streams
+            .iter()
+            .map(|sb| StreamState {
+                cooldown: 0,
+                last_rb: sb.handle.counters().total_read_blocked_ns(),
+                last_wb: sb.handle.counters().total_write_blocked_ns(),
             })
             .collect();
-        let stream_states = streams.iter().map(|_| StreamState::default()).collect();
         let host_load = match &cfg.worker_budget {
             BudgetPolicy::HostAware { .. } => {
                 let source: Arc<dyn LoadSource> = match &cfg.load_source {
@@ -335,17 +369,26 @@ impl ElasticController {
             forward,
             stop,
             time,
-            events: Vec::new(),
-            trajectories,
+            ring: Arc::new(EventRing::new(DEFAULT_RING_CAPACITY)),
+            gauges: None,
+            baselines,
             stage_states,
             stream_states,
             host_load,
             host_cpus,
-            budget_timeline: Vec::new(),
             last_budget: None,
-            notes: Vec::new(),
             budget_note_emitted: false,
         }
+    }
+
+    /// Swap in the scheduler-owned telemetry plane: the shared
+    /// [`EventRing`] (read live by the JSONL tail and kept for the chrome
+    /// trace) and the gauge block the `/metrics` registry renders. Must be
+    /// called before the first tick, i.e. before the controller thread is
+    /// spawned.
+    pub fn attach_telemetry(&mut self, ring: Arc<EventRing>, gauges: Arc<MetricsShared>) {
+        self.ring = ring;
+        self.gauges = Some(gauges);
     }
 
     /// Main loop: pump monitor events between ticks until `stop` is set
@@ -415,11 +458,58 @@ impl ElasticController {
     /// Consume the controller and assemble its report (threadless runs;
     /// `run` uses the same path at shutdown).
     pub fn into_report(self) -> ControlPlaneReport {
+        self.snapshot_report()
+    }
+
+    /// Assemble the control-plane report from the structured event
+    /// journal. The legacy timeline views (`events`, `trajectories`,
+    /// `budget_timeline`, `notes`) are *reconstructed* from the ring —
+    /// there is no second bookkeeping path to drift from it.
+    pub fn snapshot_report(&self) -> ControlPlaneReport {
+        self.ring.sync();
+        let journal = self.ring.snapshot();
+        let mut trajectories: Vec<StageTrajectory> = self
+            .baselines
+            .iter()
+            .map(|(stage, t0, r0)| StageTrajectory {
+                stage: stage.clone(),
+                points: vec![(*t0, *r0)],
+            })
+            .collect();
+        let mut events = Vec::new();
+        let mut budget_timeline = Vec::new();
+        let mut notes = Vec::new();
+        for ev in &journal {
+            match ev {
+                ControlEvent::Action(e) => {
+                    let to = match e.action {
+                        ElasticAction::ScaleUp { to, .. }
+                        | ElasticAction::ScaleDown { to, .. } => Some(to),
+                        ElasticAction::Resize { .. } => None,
+                    };
+                    if let Some(to) = to {
+                        if let Some(tr) =
+                            trajectories.iter_mut().find(|t| t.stage == e.target)
+                        {
+                            tr.points.push((e.at_ns, to));
+                        }
+                    }
+                    events.push(e.clone());
+                }
+                ControlEvent::Budget { at_ns, budget } => {
+                    budget_timeline.push((*at_ns, *budget));
+                }
+                ControlEvent::Note { note, .. } => notes.push(note.clone()),
+                _ => {}
+            }
+        }
         ControlPlaneReport {
-            events: self.events,
-            trajectories: self.trajectories,
-            budget_timeline: self.budget_timeline,
-            notes: self.notes,
+            events,
+            trajectories,
+            budget_timeline,
+            notes,
+            control_events: journal,
+            events_dropped: self.ring.dropped(),
         }
     }
 
@@ -428,6 +518,16 @@ impl ElasticController {
         match &ev {
             MonitorEvent::Converged { stream, end, estimate } => {
                 self.registry.update(*stream, *end, estimate);
+                let mbps = estimate.rate_mbps();
+                if let Some(g) = &self.gauges {
+                    g.set_rate(*stream, *end, mbps);
+                }
+                self.ring.emit(ControlEvent::RateConverged {
+                    at_ns: self.time.now_ns(),
+                    stream: *stream,
+                    end: *end,
+                    mbps,
+                });
             }
             MonitorEvent::Classified { stream, end, class, .. } => {
                 if *end == QueueEnd::Head {
@@ -457,14 +557,107 @@ impl ElasticController {
         }
         if !inputs.is_empty() {
             let targets = coordinate(&inputs, budget, self.cfg.starve_threshold);
-            for (i, (&target, (policy, sig))) in
-                targets.iter().zip(&inputs).enumerate()
-            {
+            for (i, (&target, input)) in targets.iter().zip(&inputs).enumerate() {
+                let (policy, sig) = input;
                 self.apply_stage_target(i, target, policy, sig, at_ns);
+                self.audit_gate(i, target, input, at_ns);
+            }
+        }
+        if let Some(g) = &self.gauges {
+            for (i, (_, sig)) in inputs.iter().enumerate() {
+                let rho = if sig.replicas > 0 && sig.mu > 0.0 {
+                    sig.lambda / (sig.replicas as f64 * sig.mu)
+                } else {
+                    f64::NAN
+                };
+                g.set_stage(i, rho, sig.lambda, sig.mu);
             }
         }
         if self.cfg.buffer_advice {
             self.tick_buffers(at_ns);
+        }
+        self.audit_blocked_spans(at_ns, dt);
+        // Publish this tick's events to the journal (and so to the live
+        // exporters): the bounded transport only has to absorb one tick's
+        // burst, not the whole run.
+        self.ring.sync();
+    }
+
+    /// Audit a withheld scale-up: when the coordinated target is below
+    /// what the stage's own band rule would grant *ungated*, emit a
+    /// [`ControlEvent::ScaleGated`] naming the gate. Emission is
+    /// change-triggered — one event per distinct `(wanted, reason)`, not
+    /// one per tick.
+    fn audit_gate(
+        &mut self,
+        i: usize,
+        granted: usize,
+        input: &(ElasticPolicy, StageSignals),
+        at_ns: u64,
+    ) {
+        let sig = &input.1;
+        if sig.frozen || sig.replicas == 0 {
+            self.stage_states[i].last_gate = None;
+            return;
+        }
+        // Re-run the same advice for this stage alone with every gate
+        // disabled: no budget, starve/sink thresholds unreachable.
+        let ungated =
+            coordinate(std::slice::from_ref(input), None, f64::INFINITY)[0];
+        if ungated <= granted {
+            self.stage_states[i].last_gate = None;
+            return;
+        }
+        let reason = if sig.starved_frac >= self.cfg.starve_threshold && !sig.pressure {
+            GateReason::Starved
+        } else if sig.sink_block_frac >= self.cfg.starve_threshold {
+            GateReason::DownstreamBlocked
+        } else {
+            GateReason::Budget
+        };
+        if self.stage_states[i].last_gate == Some((ungated, reason)) {
+            return;
+        }
+        self.stage_states[i].last_gate = Some((ungated, reason));
+        self.ring.emit(ControlEvent::ScaleGated {
+            at_ns,
+            stage: self.stages[i].stage.stage_name().to_string(),
+            replicas: sig.replicas,
+            wanted: ungated,
+            reason,
+        });
+    }
+
+    /// Turn each monitored stream's blocked-ns counter deltas into
+    /// [`ControlEvent::BlockedSpan`]s (span *end* = this tick). Deltas
+    /// under 1% of the tick are noise, not spans.
+    fn audit_blocked_spans(&mut self, at_ns: u64, dt: f64) {
+        let floor_ns = ((dt * 1.0e9) / 100.0) as u64;
+        for (i, sb) in self.streams.iter().enumerate() {
+            let c = sb.handle.counters();
+            let rb = c.total_read_blocked_ns();
+            let wb = c.total_write_blocked_ns();
+            let stt = &mut self.stream_states[i];
+            let d_rb = rb.saturating_sub(stt.last_rb);
+            let d_wb = wb.saturating_sub(stt.last_wb);
+            stt.last_rb = rb;
+            stt.last_wb = wb;
+            if d_rb > floor_ns {
+                self.ring.emit(ControlEvent::BlockedSpan {
+                    at_ns,
+                    label: sb.label.clone(),
+                    end: BlockEnd::Read,
+                    dur_ns: d_rb,
+                });
+            }
+            if d_wb > floor_ns {
+                self.ring.emit(ControlEvent::BlockedSpan {
+                    at_ns,
+                    label: sb.label.clone(),
+                    end: BlockEnd::Write,
+                    dur_ns: d_wb,
+                });
+            }
         }
     }
 
@@ -474,16 +667,19 @@ impl ElasticController {
     fn effective_budget(&mut self, at_ns: u64) -> Option<usize> {
         let external = self.host_load.as_mut().and_then(|m| m.tick());
         let decision = self.cfg.worker_budget.evaluate(self.host_cpus, external);
+        if let Some(g) = &self.gauges {
+            g.set_budget(decision.budget);
+        }
         if let Some(note) = decision.note {
             if !self.budget_note_emitted {
                 self.budget_note_emitted = true;
-                self.notes.push(note);
+                self.ring.emit(ControlEvent::Note { at_ns, note });
             }
         }
         if let Some(b) = decision.budget {
             if self.last_budget != Some(b) {
                 self.last_budget = Some(b);
-                self.budget_timeline.push((at_ns, b));
+                self.ring.emit(ControlEvent::Budget { at_ns, budget: b });
             }
         }
         decision.budget
@@ -624,9 +820,10 @@ impl ElasticController {
         } else {
             0.0
         };
-        self.events.push(ElasticEvent {
+        let stage_name = stage.stage_name().to_string();
+        self.ring.emit(ControlEvent::Action(ElasticEvent {
             at_ns,
-            target: stage.stage_name().to_string(),
+            target: stage_name.clone(),
             action,
             rho,
             lambda_items: sig.lambda,
@@ -634,8 +831,28 @@ impl ElasticController {
             pressure: sig.pressure,
             starved_frac: sig.starved_frac,
             backpressure_frac: sig.backpressure_frac,
-        });
-        self.trajectories[i].points.push((at_ns, got));
+        }));
+        // Per-lane lifecycle events: ReplicaSet spawns new lanes at the
+        // top of the index range and retires from the top down.
+        if got > sig.replicas {
+            for lane in sig.replicas..got {
+                self.ring.emit(ControlEvent::Lane {
+                    at_ns,
+                    stage: stage_name.clone(),
+                    lane,
+                    spawned: true,
+                });
+            }
+        } else {
+            for lane in got..sig.replicas {
+                self.ring.emit(ControlEvent::Lane {
+                    at_ns,
+                    stage: stage_name.clone(),
+                    lane,
+                    spawned: false,
+                });
+            }
+        }
         self.stage_states[i].cooldown = policy.cooldown_ticks;
     }
 
@@ -667,7 +884,7 @@ impl ElasticController {
             let rel = advice.capacity.abs_diff(cur) as f64 / cur as f64;
             if rel >= self.cfg.resize_min_rel_change {
                 sb.handle.set_capacity(advice.capacity);
-                self.events.push(ElasticEvent {
+                self.ring.emit(ControlEvent::Action(ElasticEvent {
                     at_ns,
                     target: sb.label.clone(),
                     action: ElasticAction::Resize {
@@ -681,7 +898,7 @@ impl ElasticController {
                     pressure: false,
                     starved_frac: 0.0,
                     backpressure_frac: 0.0,
-                });
+                }));
                 stt.cooldown = self.cfg.resize_cooldown_ticks;
             }
         }
@@ -803,12 +1020,13 @@ mod tests {
             }
             ctl.tick(0.010);
         }
-        let scale_events: Vec<_> = ctl.events.iter().filter(|e| e.is_scale()).collect();
+        let rep = ctl.snapshot_report();
+        let scale_events: Vec<_> = rep.events.iter().filter(|e| e.is_scale()).collect();
         assert_eq!(
             scale_events.len(),
             1,
             "constant load must produce exactly one scale action: {:?}",
-            ctl.events
+            rep.events
         );
         // advice = ceil(10000 / (0.7 · 2000)) = ceil(7.14) = 8
         assert_eq!(stage.replicas(), 8);
@@ -819,11 +1037,20 @@ mod tests {
             ref other => panic!("expected ScaleUp, got {other:?}"),
         }
         // The trajectory carries the initial point plus the one action.
-        assert_eq!(ctl.trajectories.len(), 1);
-        let pts = &ctl.trajectories[0].points;
+        assert_eq!(rep.trajectories.len(), 1);
+        let pts = &rep.trajectories[0].points;
         assert_eq!(pts.len(), 2, "{pts:?}");
         assert_eq!(pts[0].1, 1);
         assert_eq!(pts[1].1, 8);
+        // The structured journal audits the seven lane spawns alongside
+        // the action, and nothing overflowed the default transport.
+        let spawns = rep
+            .control_events
+            .iter()
+            .filter(|e| matches!(e, ControlEvent::Lane { spawned: true, .. }))
+            .count();
+        assert_eq!(spawns, 7, "{:?}", rep.control_events);
+        assert_eq!(rep.events_dropped, 0);
     }
 
     #[test]
@@ -859,13 +1086,23 @@ mod tests {
             }
             ctl.tick(0.010);
         }
+        let rep = ctl.snapshot_report();
         assert_eq!(
-            ctl.events.iter().filter(|e| e.is_scale()).count(),
+            rep.events.iter().filter(|e| e.is_scale()).count(),
             0,
             "starvation-bound stage was scaled: {:?}",
-            ctl.events
+            rep.events
         );
         assert_eq!(stage.replicas(), 3);
+        // The withheld scale-up is audited with its gate reason.
+        assert!(
+            rep.control_events.iter().any(|e| matches!(
+                e,
+                ControlEvent::ScaleGated { reason: GateReason::Starved, .. }
+            )),
+            "held scale-up must be audited: {:?}",
+            rep.control_events
+        );
 
         // Starvation clears (backlog arrived): now the scale-up happens.
         stage.starved_ns_per_lane.store(0, Ordering::Relaxed);
@@ -875,10 +1112,11 @@ mod tests {
             }
             ctl.tick(0.010);
         }
+        let rep = ctl.snapshot_report();
         assert!(
-            ctl.events.iter().any(|e| matches!(e.action, ElasticAction::ScaleUp { .. })),
+            rep.events.iter().any(|e| matches!(e.action, ElasticAction::ScaleUp { .. })),
             "cleared starvation must unlock the scale-up: {:?}",
-            ctl.events
+            rep.events
         );
         assert_eq!(stage.replicas(), 8);
     }
@@ -920,6 +1158,16 @@ mod tests {
         let total = a.replicas() + b.replicas();
         assert!(total <= 6, "budget exceeded: a={} b={}", a.replicas(), b.replicas());
         assert!(a.replicas() > 1 && b.replicas() > 1, "budget starved a stage entirely");
+        // The trim shows up in the journal as a budget-reason gate.
+        let rep = ctl.snapshot_report();
+        assert!(
+            rep.control_events.iter().any(|e| matches!(
+                e,
+                ControlEvent::ScaleGated { reason: GateReason::Budget, .. }
+            )),
+            "budget trim must be audited: {:?}",
+            rep.control_events
+        );
     }
 
     #[test]
@@ -979,7 +1227,7 @@ mod tests {
             stage.replicas(),
             2,
             "busy host must trim the fan-out: {:?}",
-            ctl.budget_timeline
+            ctl.snapshot_report().budget_timeline
         );
         // Load clears: the budget and the claim recover.
         load.set_external(0.0);
@@ -988,9 +1236,10 @@ mod tests {
             ctl.step(0.010);
         }
         assert_eq!(stage.replicas(), 8, "cleared host must restore the fan-out");
-        let budgets: Vec<usize> = ctl.budget_timeline.iter().map(|&(_, b)| b).collect();
-        assert_eq!(budgets, vec![8, 2, 8], "budget timeline: {:?}", ctl.budget_timeline);
-        assert!(ctl.notes.is_empty(), "healthy telemetry must not be annotated");
+        let rep = ctl.snapshot_report();
+        let budgets: Vec<usize> = rep.budget_timeline.iter().map(|&(_, b)| b).collect();
+        assert_eq!(budgets, vec![8, 2, 8], "budget timeline: {:?}", rep.budget_timeline);
+        assert!(rep.notes.is_empty(), "healthy telemetry must not be annotated");
     }
 
     #[test]
@@ -1029,8 +1278,53 @@ mod tests {
             ctl.step(0.010);
         }
         assert_eq!(stage.replicas(), 5, "blind budget must hold at the ceiling");
-        assert_eq!(ctl.notes.len(), 1, "degradation must be annotated exactly once");
-        assert!(ctl.notes[0].contains("unavailable"), "{:?}", ctl.notes);
+        let rep = ctl.snapshot_report();
+        assert_eq!(rep.notes.len(), 1, "degradation must be annotated exactly once");
+        assert!(rep.notes[0].contains("unavailable"), "{:?}", rep.notes);
+    }
+
+    #[test]
+    fn attached_ring_overflow_is_audited_not_silent() {
+        let policy = ElasticPolicy {
+            max_replicas: 8,
+            cooldown_ticks: 0,
+            ..Default::default()
+        };
+        let stage = FakeStage::busy(1, policy, 10);
+        let (upq, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+        let mut ctl = controller_for(
+            vec![StageBinding {
+                stage: stage.clone(),
+                upstream: Some(StreamBinding {
+                    id: StreamId(0),
+                    label: "src -> fake".into(),
+                    handle,
+                }),
+                downstream: None,
+            }],
+            ElasticConfig { buffer_advice: false, ewma_alpha: 1.0, ..Default::default() },
+        );
+        // A deliberately tiny transport: the 1 → 8 scale burst (one action
+        // plus seven lane spawns) cannot fit in four undrained slots.
+        let shared = MetricsShared::new(1);
+        ctl.attach_telemetry(Arc::new(EventRing::new(4)), shared.clone());
+        for _ in 0..4 {
+            for i in 0..80u64 {
+                let _ = upq.try_push(i);
+            }
+            ctl.step(0.010);
+        }
+        assert_eq!(stage.replicas(), 8);
+        let rep = ctl.snapshot_report();
+        assert!(rep.events_dropped > 0, "overflow must be audited, not silent");
+        // The action was emitted before the lane burst, so it survived and
+        // the trajectory view is still exact.
+        assert_eq!(rep.events.len(), 1, "{:?}", rep.control_events);
+        assert_eq!(rep.trajectories[0].points.last().unwrap().1, 8);
+        // The gauge block was refreshed from the same tick loop.
+        let (rho, lambda, mu) = shared.stage(0).expect("gauges refreshed");
+        assert!(lambda > 0.0 && mu > 0.0, "rho={rho} lambda={lambda} mu={mu}");
+        assert!(shared.budget().is_none(), "unlimited policy publishes no budget");
     }
 
     #[test]

@@ -63,6 +63,44 @@
 //! topo.connect(out, inp, StreamConfig::default()).unwrap(); // ERROR: u64 != String
 //! ```
 //!
+//! ## RaftLib-style `>>` sugar
+//!
+//! For same-typed linear links the builder also reads like RaftLib's
+//! stream operator: `>>` with a boxed kernel desugars to
+//! [`FlowChain::then`], and wrapping the terminal kernel in [`sink`]
+//! desugars to [`FlowChain::sink`] (operators cannot return `Result`, so
+//! wiring failures panic; fallible assembly keeps the method forms):
+//!
+//! ```
+//! use streamflow::flow::{sink, Flow, RunOptions, Session};
+//! use streamflow::kernel::{ClosureSink, ClosureSource, Kernel, KernelContext, KernelStatus};
+//!
+//! struct Relay;
+//! impl Kernel for Relay {
+//!     fn name(&self) -> &str { "relay" }
+//!     fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+//!         match ctx.input::<u64>(0).unwrap().pop() {
+//!             Some(v) => {
+//!                 ctx.output::<u64>(0).unwrap().push(v).ok();
+//!                 KernelStatus::Continue
+//!             }
+//!             None => KernelStatus::Done,
+//!         }
+//!     }
+//! }
+//!
+//! let mut n = 0u64;
+//! let flow = Flow::new("sugar")
+//!     .source::<u64>(Box::new(ClosureSource::new("src", move || {
+//!         n += 1;
+//!         (n <= 10).then_some(n)
+//!     })))
+//!     >> Box::new(Relay)
+//!     >> sink(Box::new(ClosureSink::new("snk", |_: u64| ())));
+//! let report = Session::run_flow(flow, RunOptions::default()).unwrap();
+//! assert_eq!(report.stream_totals["relay.0 -> snk.0"], (10, 10));
+//! ```
+//!
 //! Likewise a chain carrying `u64` cannot feed an elastic stage whose
 //! replica body consumes `String` — [`FlowChain::elastic`] requires
 //! `R::In` to equal the chain's item type:
@@ -92,6 +130,7 @@ use crate::monitor::MonitorConfig;
 use crate::placement::PlacementPolicy;
 use crate::queue::StreamConfig;
 use crate::scheduler::{self, RunReport};
+use crate::telemetry::TelemetryConfig;
 use crate::topology::{KernelId, StreamId, Topology};
 use crate::Result;
 
@@ -412,6 +451,39 @@ impl<T: Send + 'static> FlowChain<T> {
     }
 }
 
+// ------------------------------------------------------------ `>>` sugar --
+
+/// A kernel marked as a chain terminal for the `>>` operator:
+/// `chain >> sink(k)` desugars to `chain.sink(k)` and closes the flow.
+pub struct SinkMark(Box<dyn Kernel>);
+
+/// Wrap a sink kernel so `>>` terminates the chain with it.
+pub fn sink(kernel: Box<dyn Kernel>) -> SinkMark {
+    SinkMark(kernel)
+}
+
+impl<T: Send + 'static> std::ops::Shr<Box<dyn Kernel>> for FlowChain<T> {
+    type Output = FlowChain<T>;
+
+    /// RaftLib's `a >> b` for same-typed links: appends a 1-in/1-out
+    /// kernel carrying the chain's item type ([`FlowChain::then`]).
+    /// Type-changing links keep the method form. Panics on wiring errors
+    /// — operators cannot return `Result`.
+    fn shr(self, kernel: Box<dyn Kernel>) -> FlowChain<T> {
+        self.then::<T>(kernel).expect("`>>`: flow wiring failed")
+    }
+}
+
+impl<T: Send + 'static> std::ops::Shr<SinkMark> for FlowChain<T> {
+    type Output = Flow;
+
+    /// Terminal `>>`: `chain >> sink(k)` closes the flow
+    /// ([`FlowChain::sink`]). Panics on wiring errors.
+    fn shr(self, mark: SinkMark) -> Flow {
+        self.sink(mark.0).expect("`>>`: flow wiring failed")
+    }
+}
+
 /// A fanned-out chain: `n` parallel dangling outlets of the same item
 /// type (one per lane).
 pub struct FlowFan<T> {
@@ -541,6 +613,9 @@ pub struct RunOptions {
     /// permissions are missing (see
     /// [`RunReport::placement`](crate::scheduler::RunReport::placement)).
     pub placement: PlacementPolicy,
+    /// Live telemetry exporters (`/metrics` endpoint, JSONL event tail).
+    /// Default: all off — the run pays nothing.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for RunOptions {
@@ -550,6 +625,7 @@ impl Default for RunOptions {
             elastic: None,
             stream_defaults: None,
             placement: PlacementPolicy::Disabled,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -577,6 +653,12 @@ impl RunOptions {
         self.placement = placement;
         self
     }
+
+    /// Enable live telemetry exporters (see [`TelemetryConfig`]).
+    pub fn with_telemetry(mut self, telemetry: TelemetryConfig) -> Self {
+        self.telemetry = telemetry;
+        self
+    }
 }
 
 /// The unified run entry point: validates, spawns kernels + monitors
@@ -596,8 +678,15 @@ impl Session {
             }
         }
         let forced = opts.elastic.is_some();
-        let elastic_cfg = opts.elastic.unwrap_or_default();
-        scheduler::execute(&mut topo, &opts.monitor, &elastic_cfg, forced, opts.placement)
+        let elastic_cfg = opts.elastic.clone().unwrap_or_default();
+        scheduler::execute(
+            &mut topo,
+            &opts.monitor,
+            &elastic_cfg,
+            forced,
+            opts.placement,
+            &opts.telemetry,
+        )
     }
 
     /// Convenience: finish a [`Flow`] and run it.
@@ -756,6 +845,29 @@ mod tests {
         let report = Session::run(flow.finish(), RunOptions::default()).unwrap();
         assert_eq!(seen.load(Ordering::Relaxed), 99);
         assert!(report.wall_ns > 0);
+    }
+
+    #[test]
+    fn shr_operator_desugars_to_then_and_sink() {
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let o2 = out.clone();
+        let flow = Flow::new("shr").source::<u64>(counting_source(25))
+            >> Box::new(AddOne)
+            >> Box::new(AddOne)
+            >> sink(Box::new(ClosureSink::new("snk", move |v: u64| {
+                o2.lock().unwrap().push(v)
+            })));
+        {
+            let topo = flow.topology();
+            assert_eq!(topo.num_kernels(), 4);
+            assert_eq!(topo.streams().len(), 3);
+            topo.validate().unwrap();
+        }
+        let report = Session::run(flow.finish(), RunOptions::default()).unwrap();
+        assert_eq!(report.stream_totals["add1.0 -> snk.0"], (25, 25));
+        let v = out.lock().unwrap();
+        assert_eq!(v.len(), 25);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u64 + 3));
     }
 
     #[test]

@@ -38,6 +38,11 @@
 //!   stage threads (recorded no-op where denied).
 //! * [`queueing`] — the M/M/1 analytics of Eq. 1 (non-blocking observation
 //!   probabilities) and analytic buffer sizing.
+//! * [`telemetry`] — the **live observability plane**: a Prometheus
+//!   `/metrics` endpoint over the already-free queue counters, the
+//!   control plane's structured event ring with a JSONL tail, and
+//!   Perfetto/chrome-tracing timeline export
+//!   (`RunReport::write_chrome_trace`). Off by default.
 //! * [`stats`] — Welford/Chan streaming moments, Pébay higher moments,
 //!   quantiles and histograms.
 //! * [`timing`] — the calibrated monotonic time reference of [2].
@@ -67,6 +72,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scheduler;
 pub mod stats;
+pub mod telemetry;
 pub mod testutil;
 pub mod timing;
 pub mod topology;
@@ -88,6 +94,7 @@ pub mod prelude {
     pub use crate::placement::{BudgetPolicy, PlacementPolicy};
     pub use crate::queue::StreamConfig;
     pub use crate::scheduler::RunReport;
+    pub use crate::telemetry::TelemetryConfig;
     pub use crate::topology::{KernelId, StreamId, Topology};
 }
 

@@ -39,7 +39,9 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: streamflow <probe|microbench|dualphase|matmul|rabinkarp|artifacts> \
-                 [--key value]..."
+                 [--key value]...\n\
+                 telemetry: [--metrics-addr HOST:PORT] [--events-jsonl PATH] \
+                 [--trace-out PATH]"
             );
             2
         }
@@ -89,12 +91,36 @@ fn cmd_probe() -> i32 {
     0
 }
 
+/// The shared `--metrics-addr <host:port>` / `--events-jsonl <path>` live
+/// telemetry plumbing. Both exporters stay off when the flags are absent.
+fn telemetry_from_args(args: &Args) -> TelemetryConfig {
+    let mut tel = TelemetryConfig::default();
+    if let Some(addr) = args.options.get("metrics-addr") {
+        tel.metrics_addr = Some(addr.clone());
+    }
+    if let Some(path) = args.options.get("events-jsonl") {
+        tel.jsonl_path = Some(std::path::PathBuf::from(path));
+    }
+    tel
+}
+
+/// Write the Perfetto timeline when `--trace-out <path>` was given.
+fn trace_out(args: &Args, report: &RunReport) {
+    if let Some(path) = args.options.get("trace-out") {
+        match report.write_chrome_trace(path) {
+            Ok(()) => println!("chrome trace written to {path} (open in ui.perfetto.dev)"),
+            Err(e) => eprintln!("warning: --trace-out: {e}"),
+        }
+    }
+}
+
 fn run_microbench_once(
     rate_mbps: f64,
     dist: DistKind,
     items: u64,
     capacity: usize,
     seed: u64,
+    telemetry: TelemetryConfig,
 ) -> streamflow::Result<RunReport> {
     // Producer faster than the consumer keeps ρ high (observable reads).
     let prod_rate = (rate_mbps * 1.6).min(9.0);
@@ -105,7 +131,10 @@ fn run_microbench_once(
         items,
         StreamConfig::default().with_capacity(capacity).with_item_bytes(ITEM_BYTES),
     )?;
-    Session::run(t.topology, RunOptions::monitored(MonitorConfig::practical()))
+    Session::run(
+        t.topology,
+        RunOptions::monitored(MonitorConfig::practical()).with_telemetry(telemetry),
+    )
 }
 
 fn cmd_microbench(args: &Args) -> i32 {
@@ -120,10 +149,12 @@ fn cmd_microbench(args: &Args) -> i32 {
             return 2;
         }
     };
-    match run_microbench_once(rate, dist, items, cfg.capacity, cfg.seed) {
+    match run_microbench_once(rate, dist, items, cfg.capacity, cfg.seed, telemetry_from_args(args))
+    {
         Ok(report) => {
             println!("set consumer service rate: {rate} MB/s ({dist:?})");
             report_rates(&report, "microbench");
+            trace_out(args, &report);
             0
         }
         Err(e) => {
@@ -147,10 +178,13 @@ fn cmd_dualphase(args: &Args) -> i32 {
         Ok(t) => t,
         Err(_) => return 1,
     };
-    match Session::run(t.topology, RunOptions::monitored(MonitorConfig::practical())) {
+    let opts = RunOptions::monitored(MonitorConfig::practical())
+        .with_telemetry(telemetry_from_args(args));
+    match Session::run(t.topology, opts) {
         Ok(report) => {
             println!("phases: {rate_a} MB/s → {rate_b} MB/s at item {}", items / 2);
             report_rates(&report, "dualphase");
+            trace_out(args, &report);
             0
         }
         Err(e) => {
@@ -161,10 +195,11 @@ fn cmd_dualphase(args: &Args) -> i32 {
 }
 
 /// The shared `--budget <n|host[:headroom[:floor:ceil]]|unlimited>` /
-/// `--pin` run-option plumbing of the two applications. Returns `None`
-/// (and prints the reason) on an unparsable budget.
+/// `--pin` / telemetry run-option plumbing of the two applications.
+/// Returns `None` (and prints the reason) on an unparsable budget.
 fn app_run_options(args: &Args, default_pool: usize) -> Option<RunOptions> {
-    let mut opts = RunOptions::monitored(MonitorConfig::practical());
+    let mut opts = RunOptions::monitored(MonitorConfig::practical())
+        .with_telemetry(telemetry_from_args(args));
     if let Some(spec) = args.options.get("budget") {
         match spec.parse::<BudgetPolicy>() {
             Ok(budget) => {
@@ -248,6 +283,7 @@ fn cmd_matmul(args: &Args) -> i32 {
             );
             report_rates(&run.report, "matmul");
             report_scaling(&run.report);
+            trace_out(args, &run.report);
             0
         }
         Err(e) => {
@@ -280,6 +316,7 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
             );
             report_rates(&run.report, "rabinkarp");
             report_scaling(&run.report);
+            trace_out(args, &run.report);
             0
         }
         Err(e) => {

@@ -31,6 +31,10 @@ use crate::placement::{
     partition_cpus, CpuTopology, PlacementAssignment, PlacementPolicy, PlacementReport,
     ThreadPin,
 };
+use crate::telemetry::{
+    ControlEvent, EventRing, JsonlTail, MetricsRegistry, MetricsServer, MetricsShared,
+    TelemetryConfig,
+};
 use crate::timing::TimeRef;
 use crate::topology::{StreamId, Topology};
 use crate::{Result, SfError};
@@ -76,6 +80,16 @@ pub struct RunReport {
     /// annotations (missing topology files, refused `sched_setaffinity`,
     /// unreadable host load).
     pub placement: PlacementReport,
+    /// The full structured control-plane journal (superset of
+    /// `elastic_events`): lane spawns/retires, gate reasons, budget
+    /// changes, blocked spans, converged rates. Feeds
+    /// [`RunReport::write_chrome_trace`] and the JSONL tail.
+    pub control_events: Vec<ControlEvent>,
+    /// Control-plane events lost to event-ring overflow. Non-zero only
+    /// when one control tick emitted more events than the ring transport
+    /// holds — audited here and as `sf_events_dropped_total`, never
+    /// silently truncated.
+    pub events_dropped: u64,
 }
 
 /// Fraction of a run one stream spent blocked, per end.
@@ -169,6 +183,14 @@ impl RunReport {
         }
         lines
     }
+
+    /// Serialize the run's control-plane history — lane lifetimes,
+    /// replica/budget counters, blocked spans, scale/resize/gate
+    /// instants — as a Perfetto / `chrome://tracing` JSON file. Open it
+    /// at <https://ui.perfetto.dev>.
+    pub fn write_chrome_trace<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
+        crate::telemetry::chrome::write_trace(self, path.as_ref())
+    }
 }
 
 /// The run engine behind [`crate::flow::Session::run`]: spawn kernels +
@@ -184,6 +206,7 @@ pub(crate) fn execute(
     elastic_cfg: &ElasticConfig,
     elastic_forced: bool,
     placement: PlacementPolicy,
+    telemetry: &TelemetryConfig,
 ) -> Result<RunReport> {
     topo.validate()?;
     let time = TimeRef::new();
@@ -251,6 +274,43 @@ pub(crate) fn execute(
         Vec::new()
     };
 
+    // ---- telemetry plane (inert unless RunOptions opted in) ----------
+    // Ring + gauge block + registry over the streams/stages resolved
+    // above; the registry's scrape reads are the already-free lifetime
+    // counters, so the data path is untouched.
+    let tel_active = telemetry.is_active();
+    let tel_ring = tel_active
+        .then(|| Arc::new(EventRing::new(telemetry.effective_ring_capacity())));
+    let tel_shared = tel_active.then(|| MetricsShared::new(topo.elastic.len()));
+    let tel_registry = match (&tel_ring, &tel_shared) {
+        (Some(ring), Some(shared)) => {
+            let mut reg = MetricsRegistry::new(shared.clone());
+            for edge in topo.streams.iter() {
+                reg.add_stream(edge.id, edge.label.clone(), edge.monitor.clone());
+            }
+            for decl in &topo.elastic {
+                reg.add_stage(decl.stage.clone());
+            }
+            reg.set_ring(ring.clone());
+            Some(Arc::new(reg))
+        }
+        _ => None,
+    };
+    let metrics_server = match (&telemetry.metrics_addr, &tel_registry) {
+        (Some(addr), Some(reg)) => {
+            let srv = MetricsServer::spawn(addr, reg.clone())?;
+            if let Some(cell) = &telemetry.bound {
+                let _ = cell.set(srv.local_addr());
+            }
+            Some(srv)
+        }
+        _ => None,
+    };
+    let jsonl_tail = match (&telemetry.jsonl_path, &tel_ring) {
+        (Some(path), Some(ring)) => Some(JsonlTail::spawn(path, ring.clone())?),
+        _ => None,
+    };
+
     // ---- assemble per-kernel contexts --------------------------------
     let mut kernel_threads = Vec::new();
     let mut closers: Vec<Vec<Box<dyn crate::port::PortCloser>>> = Vec::new();
@@ -314,13 +374,16 @@ pub(crate) fn execute(
     let ctl_stop = Arc::new(AtomicBool::new(false));
     let (ctl_thread, drain_rx) = if use_controller {
         let (fwd_tx, fwd_rx) = channel::<MonitorEvent>();
-        let ctl = ElasticController::new(
+        let mut ctl = ElasticController::new(
             elastic_cfg.clone(),
             stage_bindings,
             stream_bindings,
             fwd_tx,
             ctl_stop.clone(),
         );
+        if let (Some(ring), Some(shared)) = (&tel_ring, &tel_shared) {
+            ctl.attach_telemetry(ring.clone(), shared.clone());
+        }
         let t = std::thread::Builder::new()
             .name("sf-elastic".into())
             .spawn(move || ctl.run(rx))
@@ -381,20 +444,47 @@ pub(crate) fn execute(
     }
     ctl_stop.store(true, Ordering::Relaxed);
     #[allow(clippy::type_complexity)]
-    let (elastic_events, replica_trajectories, budget_timeline, ctl_notes): (
+    let (
+        elastic_events,
+        replica_trajectories,
+        budget_timeline,
+        ctl_notes,
+        control_events,
+        events_dropped,
+    ): (
         Vec<ElasticEvent>,
         Vec<StageTrajectory>,
         Vec<(u64, usize)>,
         Vec<String>,
+        Vec<ControlEvent>,
+        u64,
     ) = match ctl_thread {
         Some(t) => {
             let outcome = t
                 .join()
                 .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?;
-            (outcome.events, outcome.trajectories, outcome.budget_timeline, outcome.notes)
+            (
+                outcome.events,
+                outcome.trajectories,
+                outcome.budget_timeline,
+                outcome.notes,
+                outcome.control_events,
+                outcome.events_dropped,
+            )
         }
-        None => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+        None => {
+            let dropped = tel_ring.as_ref().map(|r| r.dropped()).unwrap_or(0);
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), dropped)
+        }
     };
+    // Producer (the controller) has stopped: the tail's final drain is
+    // complete, and the last scrape window closes after it.
+    if let Some(tail) = jsonl_tail {
+        tail.shutdown();
+    }
+    if let Some(srv) = metrics_server {
+        srv.shutdown();
+    }
 
     // Placement outcome: read the accumulated pin counters *after* the
     // run so late-spawned replica workers are counted too.
@@ -419,6 +509,8 @@ pub(crate) fn execute(
         replica_trajectories,
         budget_timeline,
         placement: placement_report,
+        control_events,
+        events_dropped,
         ..Default::default()
     };
     while let Ok(ev) = drain_rx.try_recv() {

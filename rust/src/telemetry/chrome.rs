@@ -1,0 +1,342 @@
+//! Perfetto / `chrome://tracing` timeline export.
+//!
+//! [`crate::scheduler::RunReport::write_chrome_trace`] serializes the
+//! run's control-plane history into the Trace Event JSON format: open the
+//! file at <https://ui.perfetto.dev> (or `chrome://tracing`) to see
+//!
+//! * one **counter track per elastic stage** (replica count over time)
+//!   plus the coordinated worker-budget counter,
+//! * one **track per replica lane** with its lifetime as a duration span
+//!   (spawns and retirements are visible as the span edges),
+//! * one **track per stream** carrying read/write **blocked spans**, and
+//! * **instant events** on the control-plane track for every scale,
+//!   resize, gate, budget change, note, and converged rate estimate.
+//!
+//! Timestamps are re-based so the earliest control-plane event is t=0;
+//! microsecond floats as the format requires.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::Json;
+use crate::elastic::ElasticAction;
+use crate::error::Result;
+use crate::scheduler::RunReport;
+
+use super::ring::ControlEvent;
+
+const PID: f64 = 1.0;
+const TID_CONTROL: f64 = 1.0;
+const TID_STREAM_BASE: u64 = 200;
+const TID_LANE_BASE: u64 = 1000;
+/// Lane tids are `TID_LANE_BASE + stage_index * TID_LANE_STRIDE + lane`.
+const TID_LANE_STRIDE: u64 = 64;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn event(name: &str, ph: &str, ts_us: f64, tid: f64, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("ts", Json::Num(ts_us)),
+        ("pid", Json::Num(PID)),
+        ("tid", Json::Num(tid)),
+    ];
+    pairs.extend(extra);
+    obj(pairs)
+}
+
+fn thread_name(tid: f64, name: &str) -> Json {
+    event(
+        "thread_name",
+        "M",
+        0.0,
+        tid,
+        vec![("args", obj(vec![("name", Json::Str(name.to_string()))]))],
+    )
+}
+
+/// Build the full trace object for a report.
+pub fn trace_json(report: &RunReport) -> Json {
+    // Re-base: all at_ns values share the run's TimeRef clock; wall_ns is
+    // a duration. Find the earliest and latest control-plane timestamps.
+    let mut t_min = u64::MAX;
+    let mut t_max = 0u64;
+    let mut see = |t: u64| {
+        t_min = t_min.min(t);
+        t_max = t_max.max(t);
+    };
+    for tr in &report.replica_trajectories {
+        for &(t, _) in &tr.points {
+            see(t);
+        }
+    }
+    for &(t, _) in &report.budget_timeline {
+        see(t);
+    }
+    for e in &report.elastic_events {
+        see(e.at_ns);
+    }
+    for ev in &report.control_events {
+        see(ev.at_ns());
+    }
+    let t0 = if t_min == u64::MAX { 0 } else { t_min };
+    let t_end = t_max.max(t0.saturating_add(report.wall_ns));
+    let us = |t: u64| (t.saturating_sub(t0)) as f64 / 1000.0;
+
+    let mut events: Vec<Json> = Vec::new();
+    events.push(event(
+        "process_name",
+        "M",
+        0.0,
+        TID_CONTROL,
+        vec![("args", obj(vec![("name", Json::Str("streamflow".into()))]))],
+    ));
+    events.push(thread_name(TID_CONTROL, "control plane"));
+
+    // --- stage replica counters + lane lifetime tracks -----------------
+    for (si, tr) in report.replica_trajectories.iter().enumerate() {
+        for &(t, r) in &tr.points {
+            events.push(event(
+                &format!("{} replicas", tr.stage),
+                "C",
+                us(t),
+                TID_CONTROL,
+                vec![("args", obj(vec![("replicas", Json::Num(r as f64))]))],
+            ));
+        }
+        if let Some(&(_, r)) = tr.points.last() {
+            events.push(event(
+                &format!("{} replicas", tr.stage),
+                "C",
+                us(t_end),
+                TID_CONTROL,
+                vec![("args", obj(vec![("replicas", Json::Num(r as f64))]))],
+            ));
+        }
+
+        // Lane lifetimes: baseline lanes open at the trajectory origin;
+        // spawn/retire events from the ring open and close the rest.
+        let mut open: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut lanes_seen: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+        if let Some(&(t_base, r0)) = tr.points.first() {
+            for lane in 0..r0 {
+                open.insert(lane, t_base);
+                lanes_seen.insert(lane);
+            }
+        }
+        let lane_tid = |lane: usize| {
+            (TID_LANE_BASE + si as u64 * TID_LANE_STRIDE + (lane as u64 % TID_LANE_STRIDE))
+                as f64
+        };
+        let mut close_lane = |events: &mut Vec<Json>, lane: usize, from: u64, to: u64| {
+            events.push(event(
+                "lane",
+                "X",
+                us(from),
+                lane_tid(lane),
+                vec![
+                    ("dur", Json::Num((to.saturating_sub(from)) as f64 / 1000.0)),
+                    ("args", obj(vec![("lane", Json::Num(lane as f64))])),
+                ],
+            ));
+        };
+        for ev in &report.control_events {
+            if let ControlEvent::Lane { at_ns, stage, lane, spawned } = ev {
+                if stage != &tr.stage {
+                    continue;
+                }
+                lanes_seen.insert(*lane);
+                if *spawned {
+                    open.entry(*lane).or_insert(*at_ns);
+                } else if let Some(from) = open.remove(lane) {
+                    close_lane(&mut events, *lane, from, *at_ns);
+                }
+            }
+        }
+        let leftover: Vec<(usize, u64)> = open.into_iter().collect();
+        for (lane, from) in leftover {
+            close_lane(&mut events, lane, from, t_end);
+        }
+        for lane in lanes_seen {
+            events.push(thread_name(lane_tid(lane), &format!("{}/lane{}", tr.stage, lane)));
+        }
+    }
+
+    // --- worker budget counter -----------------------------------------
+    for &(t, b) in &report.budget_timeline {
+        events.push(event(
+            "worker budget",
+            "C",
+            us(t),
+            TID_CONTROL,
+            vec![("args", obj(vec![("budget", Json::Num(b as f64))]))],
+        ));
+    }
+    if let Some(&(_, b)) = report.budget_timeline.last() {
+        events.push(event(
+            "worker budget",
+            "C",
+            us(t_end),
+            TID_CONTROL,
+            vec![("args", obj(vec![("budget", Json::Num(b as f64))]))],
+        ));
+    }
+
+    // --- scale / resize instants ---------------------------------------
+    for e in &report.elastic_events {
+        let name = match e.action {
+            ElasticAction::ScaleUp { from, to } => {
+                format!("{} scale-up {from}->{to}", e.target)
+            }
+            ElasticAction::ScaleDown { from, to } => {
+                format!("{} scale-down {from}->{to}", e.target)
+            }
+            ElasticAction::Resize { from, to, .. } => {
+                format!("{} resize {from}->{to}", e.target)
+            }
+        };
+        events.push(event(
+            &name,
+            "i",
+            us(e.at_ns),
+            TID_CONTROL,
+            vec![
+                ("s", Json::Str("t".into())),
+                (
+                    "args",
+                    obj(vec![
+                        ("rho", Json::Num(e.rho)),
+                        ("lambda_items", Json::Num(e.lambda_items)),
+                        ("mu_items", Json::Num(e.mu_items)),
+                        ("pressure", Json::Bool(e.pressure)),
+                    ]),
+                ),
+            ],
+        ));
+    }
+
+    // --- stream tracks: blocked spans + structured instants ------------
+    let mut stream_tids: BTreeMap<String, u64> = BTreeMap::new();
+    {
+        let mut tid_for = |label: &str, events: &mut Vec<Json>| -> f64 {
+            if let Some(t) = stream_tids.get(label) {
+                return *t as f64;
+            }
+            let tid = TID_STREAM_BASE + stream_tids.len() as u64;
+            stream_tids.insert(label.to_string(), tid);
+            events.push(thread_name(tid as f64, label));
+            tid as f64
+        };
+        for ev in &report.control_events {
+            match ev {
+                ControlEvent::BlockedSpan { at_ns, label, end, dur_ns } => {
+                    let tid = tid_for(label, &mut events);
+                    let start = at_ns.saturating_sub(*dur_ns);
+                    events.push(event(
+                        match end {
+                            super::ring::BlockEnd::Read => "read-blocked",
+                            super::ring::BlockEnd::Write => "write-blocked",
+                        },
+                        "X",
+                        us(start),
+                        tid,
+                        vec![("dur", Json::Num(*dur_ns as f64 / 1000.0))],
+                    ));
+                }
+                ControlEvent::ScaleGated { at_ns, stage, replicas, wanted, reason } => {
+                    events.push(event(
+                        &format!("{stage} gated ({})", reason.as_str()),
+                        "i",
+                        us(*at_ns),
+                        TID_CONTROL,
+                        vec![
+                            ("s", Json::Str("t".into())),
+                            (
+                                "args",
+                                obj(vec![
+                                    ("replicas", Json::Num(*replicas as f64)),
+                                    ("wanted", Json::Num(*wanted as f64)),
+                                ]),
+                            ),
+                        ],
+                    ));
+                }
+                ControlEvent::RateConverged { at_ns, stream, end, mbps } => {
+                    events.push(event(
+                        "rate converged",
+                        "i",
+                        us(*at_ns),
+                        TID_CONTROL,
+                        vec![
+                            ("s", Json::Str("t".into())),
+                            (
+                                "args",
+                                obj(vec![
+                                    ("stream", Json::Num(stream.0 as f64)),
+                                    (
+                                        "end",
+                                        Json::Str(
+                                            match end {
+                                                crate::monitor::QueueEnd::Head => "head",
+                                                crate::monitor::QueueEnd::Tail => "tail",
+                                            }
+                                            .into(),
+                                        ),
+                                    ),
+                                    ("mbps", Json::Num(*mbps)),
+                                ]),
+                            ),
+                        ],
+                    ));
+                }
+                ControlEvent::Note { at_ns, note } => {
+                    events.push(event(
+                        "note",
+                        "i",
+                        us(*at_ns),
+                        TID_CONTROL,
+                        vec![
+                            ("s", Json::Str("t".into())),
+                            ("args", obj(vec![("note", Json::Str(note.clone()))])),
+                        ],
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // --- whole-run blocked fractions (non-elastic runs still get data) --
+    for sb in &report.stream_blocked {
+        if sb.read_frac <= 0.0 && sb.write_frac <= 0.0 {
+            continue;
+        }
+        events.push(event(
+            &format!("blocked% {}", sb.label),
+            "C",
+            0.0,
+            TID_CONTROL,
+            vec![(
+                "args",
+                obj(vec![
+                    ("read_pct", Json::Num(sb.read_frac * 100.0)),
+                    ("write_pct", Json::Num(sb.write_frac * 100.0)),
+                ]),
+            )],
+        ));
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Serialize [`trace_json`] to `path`.
+pub fn write_trace(report: &RunReport, path: &Path) -> Result<()> {
+    std::fs::write(path, trace_json(report).to_string())?;
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Std-only blocking HTTP exporter for the Prometheus scrape.
+//!
+//! One dedicated thread (`sf-metrics`) owns a non-blocking
+//! [`std::net::TcpListener`] and serves `GET /metrics` (and `GET /`) with
+//! the registry's current render — one connection at a time, HTTP/1.1
+//! with `Connection: close`. That is exactly enough for a scraper at
+//! human cadence and keeps the exporter dependency-free; anything
+//! heavier belongs behind a real server front door (ROADMAP item 5).
+//!
+//! Off by default: the thread only exists when
+//! [`crate::telemetry::TelemetryConfig::metrics_addr`] is set (CLI:
+//! `--metrics-addr 127.0.0.1:9898`; port 0 binds an ephemeral port, the
+//! realized address is readable via [`MetricsServer::local_addr`]).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+
+use super::registry::MetricsRegistry;
+
+/// Handle to the scrape endpoint thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for MetricsServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsServer").field("addr", &self.addr).finish()
+    }
+}
+
+impl MetricsServer {
+    /// Bind `addr` and start serving `registry.render()` until
+    /// [`MetricsServer::shutdown`].
+    pub fn spawn(addr: &str, registry: Arc<MetricsRegistry>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("sf-metrics".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((conn, _peer)) => serve_one(conn, &registry),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr, stop, thread: Some(thread) })
+    }
+
+    /// The realized bind address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the serving thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Handle one scrape connection; errors just drop the connection.
+fn serve_one(mut conn: TcpStream, registry: &MetricsRegistry) {
+    let _ = conn.set_nonblocking(false);
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = conn.set_write_timeout(Some(Duration::from_millis(500)));
+
+    // Read the request head (we only need the request line).
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match conn.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+
+    let (status, body) = if method == "GET" && (path == "/metrics" || path == "/") {
+        ("200 OK", registry.render())
+    } else {
+        ("404 Not Found", "not found; scrape /metrics\n".to_string())
+    };
+    let _ = write!(
+        conn,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = conn.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::{instrumented, StreamConfig};
+    use crate::topology::StreamId;
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let (q, h) = instrumented::<u64>(&StreamConfig::default());
+        q.try_push(7).unwrap();
+        let mut reg = MetricsRegistry::standalone();
+        reg.add_stream(StreamId(0), "src.0 -> snk.0", h);
+        let srv = MetricsServer::spawn("127.0.0.1:0", Arc::new(reg)).unwrap();
+        let addr = srv.local_addr();
+
+        let resp = http_get(addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        assert!(resp.contains("sf_stream_pushes_total{stream=\"src.0 -> snk.0\"} 1"), "{resp}");
+
+        let missing = http_get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+        // A second scrape still works (one-connection-at-a-time loop).
+        let resp2 = http_get(addr, "/");
+        assert!(resp2.starts_with("HTTP/1.1 200 OK"), "{resp2}");
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,132 @@
+//! JSONL event tail: every control-plane event as one JSON object per
+//! line, written live while the run executes.
+//!
+//! Enable with [`crate::telemetry::TelemetryConfig::with_jsonl`] (CLI:
+//! `--events-jsonl events.jsonl`). A dedicated thread (`sf-telemetry`)
+//! tails the [`super::ring::EventRing`] journal incrementally (~20 ms
+//! cadence) and performs a final drain at shutdown, so the file is
+//! complete even for events emitted in the run's last tick.
+//!
+//! # Line schema
+//!
+//! Every line is a JSON object with `"type"` and `"at_ns"` (u64
+//! nanoseconds on the run's monotonic clock; time zero is process-local).
+//! Per-type fields:
+//!
+//! | `type` | fields |
+//! |---|---|
+//! | `action` | `target`, `action` (`scale-up`\|`scale-down`\|`resize`), `from`, `to`, `rho`, `lambda_items`, `mu_items`, `pressure`, `starved_frac`, `backpressure_frac`; `model` on resizes |
+//! | `budget` | `budget` (coordinated replica budget now in force) |
+//! | `note` | `note` (free-form control-plane annotation) |
+//! | `scale-gated` | `stage`, `replicas`, `wanted`, `reason` (`starved`\|`downstream-blocked`\|`budget`) |
+//! | `lane` | `stage`, `lane` (index), `event` (`spawn`\|`retire`) |
+//! | `blocked-span` | `stream` (label), `end` (`read`\|`write`), `dur_ns`; `at_ns` is the span **end** |
+//! | `rate-converged` | `stream` (numeric id), `end` (`head`\|`tail`), `mbps` |
+//!
+//! The schema is additive: consumers must ignore unknown fields and
+//! unknown `type`s.
+
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+
+use super::ring::EventRing;
+
+/// Handle to the JSONL tail thread.
+pub struct JsonlTail {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for JsonlTail {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JsonlTail").finish()
+    }
+}
+
+impl JsonlTail {
+    /// Create (truncate) `path` and start tailing `ring` into it.
+    pub fn spawn(path: &Path, ring: Arc<EventRing>) -> Result<JsonlTail> {
+        let file = std::fs::File::create(path)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("sf-telemetry".into())
+            .spawn(move || {
+                let mut out = std::io::BufWriter::new(file);
+                let mut cursor = 0usize;
+                loop {
+                    let done = stop2.load(Ordering::Acquire);
+                    let (events, next) = ring.read_from(cursor);
+                    cursor = next;
+                    for ev in &events {
+                        let line = ev.to_json().to_string();
+                        let _ = writeln!(out, "{line}");
+                    }
+                    if !events.is_empty() {
+                        let _ = out.flush();
+                    }
+                    if done {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                let _ = out.flush();
+            })?;
+        Ok(JsonlTail { stop, thread: Some(thread) })
+    }
+
+    /// Final drain + flush + join. Call after the producer has stopped so
+    /// the last tick's events land in the file.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for JsonlTail {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Json;
+    use crate::telemetry::ControlEvent;
+
+    #[test]
+    fn tail_writes_every_event_once_in_order() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("sf_jsonl_test_{}.jsonl", std::process::id()));
+        let ring = Arc::new(EventRing::new(64));
+        for k in 0..5u64 {
+            ring.emit(ControlEvent::Note { at_ns: k, note: format!("n{k}") });
+        }
+        let tail = JsonlTail::spawn(&path, ring.clone()).unwrap();
+        // Emit more while the tailer runs, then stop.
+        for k in 5..9u64 {
+            ring.emit(ControlEvent::Note { at_ns: k, note: format!("n{k}") });
+        }
+        tail.shutdown();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 9, "{text}");
+        for (k, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).expect("line parses");
+            assert_eq!(j.get("type").and_then(Json::as_str), Some("note"));
+            assert_eq!(j.get("at_ns").and_then(Json::as_f64), Some(k as f64));
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Live observability plane: metrics registry, `/metrics` endpoint,
+//! structured event ring, JSONL event tail, and Perfetto trace export.
+//!
+//! The paper's premise is *online* service-rate approximation — yet until
+//! this module everything the runtime learned (rates, blocked durations,
+//! scaling and budget decisions) was only visible post-mortem in
+//! [`crate::scheduler::RunReport`]. The telemetry plane makes the same
+//! state observable while the run executes, without adding a single
+//! atomic to the data path:
+//!
+//! * [`registry::MetricsRegistry`] — pull-model Prometheus text built
+//!   from the **already-free** counter reads (the SPSC queue's monotonic
+//!   head/tail indices are the pop/push counters) plus a small
+//!   controller-refreshed gauge block ([`registry::MetricsShared`]);
+//! * [`ring::EventRing`] — a bounded lock-free ring the controller
+//!   publishes structured [`ControlEvent`]s into (scales with gate
+//!   reasons, budget recomputes, resizes, lane spawns/retires, blocked
+//!   spans, converged rates); it replaces the old ad-hoc `Vec`
+//!   accumulation as the single source for
+//!   [`crate::elastic::ControlPlaneReport`] timelines, and its overflow
+//!   is audited (`events_dropped`), never silent;
+//! * exporters — [`http::MetricsServer`] (std-only blocking HTTP
+//!   `GET /metrics`), [`jsonl::JsonlTail`] (line-per-event live log, see
+//!   [`jsonl`] for the schema), and [`chrome::write_trace`] /
+//!   `RunReport::write_chrome_trace` (Perfetto timeline).
+//!
+//! Everything is **off by default**; [`TelemetryConfig`] on
+//! [`crate::flow::RunOptions`] switches the exporters on (CLI:
+//! `--metrics-addr`, `--events-jsonl`, `--trace-out`).
+
+pub mod chrome;
+pub mod http;
+pub mod jsonl;
+pub mod registry;
+pub mod ring;
+
+pub use http::MetricsServer;
+pub use jsonl::JsonlTail;
+pub use registry::{MetricsRegistry, MetricsShared};
+pub use ring::{BlockEnd, ControlEvent, EventRing, GateReason};
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+/// Default bound on undrained control events between two ring drains.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Exporter configuration carried by [`crate::flow::RunOptions`]. All
+/// exporters default to off; constructing the config costs nothing.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryConfig {
+    /// Serve Prometheus text on this address (e.g. `"127.0.0.1:9898"`,
+    /// port 0 for ephemeral) for the duration of the run.
+    pub metrics_addr: Option<String>,
+    /// Tail every control-plane event into this file, one JSON object
+    /// per line (schema: [`jsonl`]).
+    pub jsonl_path: Option<PathBuf>,
+    /// Event-ring transport capacity override; 0 ⇒
+    /// [`DEFAULT_RING_CAPACITY`].
+    pub ring_capacity: usize,
+    /// Out-param: the scheduler publishes the realized metrics bind
+    /// address here (resolves port 0 for tests and harnesses).
+    pub bound: Option<Arc<OnceLock<SocketAddr>>>,
+}
+
+impl TelemetryConfig {
+    /// Telemetry with the `/metrics` endpoint on `addr`.
+    pub fn serve(addr: impl Into<String>) -> Self {
+        TelemetryConfig { metrics_addr: Some(addr.into()), ..Default::default() }
+    }
+
+    /// Add a JSONL event tail.
+    pub fn with_jsonl(mut self, path: impl Into<PathBuf>) -> Self {
+        self.jsonl_path = Some(path.into());
+        self
+    }
+
+    /// Override the event-ring transport capacity.
+    pub fn with_ring_capacity(mut self, cap: usize) -> Self {
+        self.ring_capacity = cap;
+        self
+    }
+
+    /// Register a cell to receive the realized metrics bind address.
+    pub fn with_bound_cell(mut self, cell: Arc<OnceLock<SocketAddr>>) -> Self {
+        self.bound = Some(cell);
+        self
+    }
+
+    /// True when any live exporter is enabled (the scheduler only builds
+    /// the registry/exporter threads in that case).
+    pub fn is_active(&self) -> bool {
+        self.metrics_addr.is_some() || self.jsonl_path.is_some()
+    }
+
+    /// Effective ring transport capacity.
+    pub fn effective_ring_capacity(&self) -> usize {
+        if self.ring_capacity == 0 {
+            DEFAULT_RING_CAPACITY
+        } else {
+            self.ring_capacity
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_inert() {
+        let cfg = TelemetryConfig::default();
+        assert!(!cfg.is_active());
+        assert_eq!(cfg.effective_ring_capacity(), DEFAULT_RING_CAPACITY);
+    }
+
+    #[test]
+    fn builders_activate_exporters() {
+        let cfg = TelemetryConfig::serve("127.0.0.1:0").with_jsonl("/tmp/x.jsonl");
+        assert!(cfg.is_active());
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:0"));
+        assert!(cfg.jsonl_path.is_some());
+        assert_eq!(
+            TelemetryConfig::default().with_ring_capacity(128).effective_ring_capacity(),
+            128
+        );
+    }
+}

@@ -1,0 +1,430 @@
+//! Pull-model metrics: free counter reads rendered as Prometheus text.
+//!
+//! The registry holds type-erased views of everything already
+//! instrumented — every monitored stream's [`crate::queue::QueueCounters`]
+//! (whose monotonic head/tail indices *are* the pop/push counters, so a
+//! scrape is a handful of Relaxed loads) and every elastic stage — plus a
+//! small [`MetricsShared`] block the controller refreshes once per
+//! control tick (ρ, λ, μ, budget, converged rates). **A scrape never
+//! copy-and-zeros anything**: the monitor's and controller's delta
+//! sampling is untouched, and the data path pays zero new atomics.
+//!
+//! Exposed metrics (all prefixed `sf_`):
+//!
+//! | metric | type | labels |
+//! |---|---|---|
+//! | `sf_stream_pushes_total` | counter | `stream` |
+//! | `sf_stream_pops_total` | counter | `stream` |
+//! | `sf_stream_read_blocked_ns_total` | counter | `stream` |
+//! | `sf_stream_write_blocked_ns_total` | counter | `stream` |
+//! | `sf_stream_occupancy` | gauge | `stream` |
+//! | `sf_stream_capacity` | gauge | `stream` |
+//! | `sf_stream_closed` | gauge | `stream` |
+//! | `sf_stream_rate_mbps` | gauge | `stream`, `end` |
+//! | `sf_stage_replicas` | gauge | `stage` |
+//! | `sf_stage_rho` | gauge | `stage` |
+//! | `sf_stage_lambda_items_per_sec` | gauge | `stage` |
+//! | `sf_stage_mu_items_per_sec` | gauge | `stage` |
+//! | `sf_worker_budget` | gauge | — |
+//! | `sf_events_dropped_total` | counter | — |
+//! | `sf_build_info` | gauge | `version` |
+//!
+//! Conservation invariant (tested in `tests/telemetry.rs`): for every
+//! stream, `pushes == pops + occupancy` holds *within a single scrape*
+//! whenever the stream is quiescent, and the final totals equal
+//! `RunReport::stream_totals` exactly.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::elastic::ElasticStage;
+use crate::monitor::QueueEnd;
+use crate::queue::MonitorHandle;
+use crate::topology::StreamId;
+
+use super::ring::EventRing;
+
+/// Per-stage gauge block (f64 bit-patterns; NaN = not yet observed).
+struct StageGauges {
+    rho: AtomicU64,
+    lambda: AtomicU64,
+    mu: AtomicU64,
+}
+
+impl StageGauges {
+    fn new() -> Self {
+        let nan = f64::NAN.to_bits();
+        StageGauges {
+            rho: AtomicU64::new(nan),
+            lambda: AtomicU64::new(nan),
+            mu: AtomicU64::new(nan),
+        }
+    }
+}
+
+/// The controller-refreshed half of the metrics plane: a fixed block of
+/// atomics the control thread stores into once per tick and scrapes read
+/// without coordination.
+pub struct MetricsShared {
+    /// Coordinated worker budget; -1 = unlimited / no controller.
+    budget: AtomicI64,
+    /// One gauge block per elastic stage, in topology declaration order.
+    stages: Vec<StageGauges>,
+    /// Latest converged rate per (stream, end), MB/s.
+    rates: Mutex<BTreeMap<(usize, &'static str), f64>>,
+}
+
+impl std::fmt::Debug for MetricsShared {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsShared")
+            .field("budget", &self.budget.load(Ordering::Relaxed))
+            .field("stages", &self.stages.len())
+            .finish()
+    }
+}
+
+impl MetricsShared {
+    pub fn new(num_stages: usize) -> Arc<Self> {
+        Arc::new(MetricsShared {
+            budget: AtomicI64::new(-1),
+            stages: (0..num_stages).map(|_| StageGauges::new()).collect(),
+            rates: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Controller-side: publish the coordinated budget (`None` ⇒ unlimited).
+    pub fn set_budget(&self, budget: Option<usize>) {
+        self.budget.store(budget.map(|b| b as i64).unwrap_or(-1), Ordering::Relaxed);
+    }
+
+    /// Current budget, if one is in force.
+    pub fn budget(&self) -> Option<usize> {
+        let b = self.budget.load(Ordering::Relaxed);
+        (b >= 0).then_some(b as usize)
+    }
+
+    /// Controller-side: publish one stage's per-tick observation.
+    pub fn set_stage(&self, i: usize, rho: f64, lambda: f64, mu: f64) {
+        if let Some(g) = self.stages.get(i) {
+            g.rho.store(rho.to_bits(), Ordering::Relaxed);
+            g.lambda.store(lambda.to_bits(), Ordering::Relaxed);
+            g.mu.store(mu.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// One stage's (ρ, λ, μ), if the controller has observed it.
+    pub fn stage(&self, i: usize) -> Option<(f64, f64, f64)> {
+        let g = self.stages.get(i)?;
+        let rho = f64::from_bits(g.rho.load(Ordering::Relaxed));
+        let lambda = f64::from_bits(g.lambda.load(Ordering::Relaxed));
+        let mu = f64::from_bits(g.mu.load(Ordering::Relaxed));
+        (!rho.is_nan() || !lambda.is_nan() || !mu.is_nan()).then_some((rho, lambda, mu))
+    }
+
+    /// Controller-side: publish a converged monitor estimate.
+    pub fn set_rate(&self, stream: StreamId, end: QueueEnd, mbps: f64) {
+        let key = (stream.0, match end {
+            QueueEnd::Head => "head",
+            QueueEnd::Tail => "tail",
+        });
+        self.rates.lock().unwrap().insert(key, mbps);
+    }
+
+    fn rates_snapshot(&self) -> BTreeMap<(usize, &'static str), f64> {
+        self.rates.lock().unwrap().clone()
+    }
+}
+
+struct StreamEntry {
+    id: StreamId,
+    label: String,
+    handle: Arc<dyn MonitorHandle>,
+}
+
+/// The scrape surface: enumerates streams and stages once at wiring time,
+/// renders Prometheus text on demand.
+pub struct MetricsRegistry {
+    streams: Vec<StreamEntry>,
+    stages: Vec<Arc<dyn ElasticStage>>,
+    shared: Arc<MetricsShared>,
+    ring: Option<Arc<EventRing>>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsRegistry")
+            .field("streams", &self.streams.len())
+            .field("stages", &self.stages.len())
+            .finish()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new(shared: Arc<MetricsShared>) -> Self {
+        MetricsRegistry { streams: Vec::new(), stages: Vec::new(), shared, ring: None }
+    }
+
+    /// A registry with no controller behind it (bench/test harnesses).
+    pub fn standalone() -> Self {
+        MetricsRegistry::new(MetricsShared::new(0))
+    }
+
+    /// The controller-refreshed gauge block.
+    pub fn shared(&self) -> &Arc<MetricsShared> {
+        &self.shared
+    }
+
+    /// Register one monitored stream (its counters are read live on every
+    /// scrape; never sampled-and-zeroed).
+    pub fn add_stream(&mut self, id: StreamId, label: impl Into<String>, handle: Arc<dyn MonitorHandle>) {
+        self.streams.push(StreamEntry { id, label: label.into(), handle });
+    }
+
+    /// Register one elastic stage (replica gauge).
+    pub fn add_stage(&mut self, stage: Arc<dyn ElasticStage>) {
+        self.stages.push(stage);
+    }
+
+    /// Attach the control-plane event ring (dropped-event audit metric).
+    pub fn set_ring(&mut self, ring: Arc<EventRing>) {
+        self.ring = Some(ring);
+    }
+
+    /// Render the full scrape in Prometheus text exposition format 0.0.4.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+
+        self.counter_section(&mut out, "sf_stream_pushes_total",
+            "Items pushed into the stream since start.",
+            |h| h.counters().total_pushes());
+        self.counter_section(&mut out, "sf_stream_pops_total",
+            "Items popped from the stream since start.",
+            |h| h.counters().total_pops());
+        self.counter_section(&mut out, "sf_stream_read_blocked_ns_total",
+            "Nanoseconds the consumer spent blocked on an empty stream.",
+            |h| h.counters().total_read_blocked_ns());
+        self.counter_section(&mut out, "sf_stream_write_blocked_ns_total",
+            "Nanoseconds the producer spent blocked on a full stream.",
+            |h| h.counters().total_write_blocked_ns());
+        self.gauge_section(&mut out, "sf_stream_occupancy",
+            "Items currently in flight in the stream.",
+            |h| h.len() as f64);
+        self.gauge_section(&mut out, "sf_stream_capacity",
+            "Current stream capacity in items.",
+            |h| h.capacity() as f64);
+        self.gauge_section(&mut out, "sf_stream_closed",
+            "1 once the producer has closed the stream.",
+            |h| if h.is_closed() { 1.0 } else { 0.0 });
+
+        // Converged monitor estimates, keyed back to stream labels.
+        let rates = self.shared.rates_snapshot();
+        if !rates.is_empty() {
+            header(&mut out, "sf_stream_rate_mbps",
+                "Latest converged non-blocking rate estimate (MB/s).", "gauge");
+            for ((sid, end), mbps) in &rates {
+                let label = self
+                    .streams
+                    .iter()
+                    .find(|s| s.id.0 == *sid)
+                    .map(|s| s.label.as_str())
+                    .unwrap_or("?");
+                let _ = writeln!(
+                    out,
+                    "sf_stream_rate_mbps{{stream=\"{}\",end=\"{}\"}} {}",
+                    escape_label(label),
+                    end,
+                    fmt_value(*mbps)
+                );
+            }
+        }
+
+        if !self.stages.is_empty() {
+            header(&mut out, "sf_stage_replicas", "Active replica lanes of the stage.", "gauge");
+            for st in &self.stages {
+                let _ = writeln!(
+                    out,
+                    "sf_stage_replicas{{stage=\"{}\"}} {}",
+                    escape_label(st.stage_name()),
+                    st.replicas()
+                );
+            }
+            self.stage_gauge_section(&mut out, "sf_stage_rho",
+                "Utilization estimate lambda / (replicas * mu).", |g| g.0);
+            self.stage_gauge_section(&mut out, "sf_stage_lambda_items_per_sec",
+                "Arrival rate into the stage (items/s, EWMA).", |g| g.1);
+            self.stage_gauge_section(&mut out, "sf_stage_mu_items_per_sec",
+                "Per-replica service rate (items/s, EWMA).", |g| g.2);
+        }
+
+        if let Some(b) = self.shared.budget() {
+            header(&mut out, "sf_worker_budget", "Coordinated replica budget in force.", "gauge");
+            let _ = writeln!(out, "sf_worker_budget {b}");
+        }
+        if let Some(ring) = &self.ring {
+            header(&mut out, "sf_events_dropped_total",
+                "Control-plane events lost to ring overflow (audited).", "counter");
+            let _ = writeln!(out, "sf_events_dropped_total {}", ring.dropped());
+        }
+
+        header(&mut out, "sf_build_info", "Build metadata (constant 1).", "gauge");
+        let _ = writeln!(out, "sf_build_info{{version=\"{}\"}} 1", crate::version());
+        out
+    }
+
+    fn counter_section(
+        &self,
+        out: &mut String,
+        name: &str,
+        help: &str,
+        read: impl Fn(&dyn MonitorHandle) -> u64,
+    ) {
+        if self.streams.is_empty() {
+            return;
+        }
+        header(out, name, help, "counter");
+        for s in &self.streams {
+            let _ = writeln!(
+                out,
+                "{name}{{stream=\"{}\"}} {}",
+                escape_label(&s.label),
+                read(s.handle.as_ref())
+            );
+        }
+    }
+
+    fn gauge_section(
+        &self,
+        out: &mut String,
+        name: &str,
+        help: &str,
+        read: impl Fn(&dyn MonitorHandle) -> f64,
+    ) {
+        if self.streams.is_empty() {
+            return;
+        }
+        header(out, name, help, "gauge");
+        for s in &self.streams {
+            let _ = writeln!(
+                out,
+                "{name}{{stream=\"{}\"}} {}",
+                escape_label(&s.label),
+                fmt_value(read(s.handle.as_ref()))
+            );
+        }
+    }
+
+    fn stage_gauge_section(
+        &self,
+        out: &mut String,
+        name: &str,
+        help: &str,
+        pick: impl Fn((f64, f64, f64)) -> f64,
+    ) {
+        let observed: Vec<(usize, (f64, f64, f64))> = (0..self.stages.len())
+            .filter_map(|i| self.shared.stage(i).map(|g| (i, g)))
+            .collect();
+        if observed.is_empty() {
+            return;
+        }
+        header(out, name, help, "gauge");
+        for (i, g) in observed {
+            let v = pick(g);
+            if v.is_nan() {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "{name}{{stage=\"{}\"}} {}",
+                escape_label(self.stages[i].stage_name()),
+                fmt_value(v)
+            );
+        }
+    }
+}
+
+fn header(out: &mut String, name: &str, help: &str, mtype: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {mtype}");
+}
+
+/// Prometheus label-value escaping: backslash, double-quote, newline.
+fn escape_label(s: &str) -> String {
+    let mut e = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => e.push_str("\\\\"),
+            '"' => e.push_str("\\\""),
+            '\n' => e.push_str("\\n"),
+            c => e.push(c),
+        }
+    }
+    e
+}
+
+/// Prometheus sample values: plain decimal, no exponent surprises for
+/// the common magnitudes; counters pass through as integers upstream.
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::{instrumented, StreamConfig};
+
+    #[test]
+    fn scrape_reads_counters_without_disturbing_them() {
+        let (q, h) = instrumented::<u64>(&StreamConfig::default());
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        let _ = q.pop();
+        let mut reg = MetricsRegistry::standalone();
+        reg.add_stream(StreamId(0), "a.0 -> b.0", h.clone());
+        let text = reg.render();
+        assert!(text.contains("sf_stream_pushes_total{stream=\"a.0 -> b.0\"} 2"), "{text}");
+        assert!(text.contains("sf_stream_pops_total{stream=\"a.0 -> b.0\"} 1"), "{text}");
+        assert!(text.contains("sf_stream_occupancy{stream=\"a.0 -> b.0\"} 1"), "{text}");
+        // Scraping twice must not zero anything (pull model, no deltas).
+        let again = reg.render();
+        assert!(again.contains("sf_stream_pushes_total{stream=\"a.0 -> b.0\"} 2"), "{again}");
+        assert_eq!(h.counters().total_pushes(), 2);
+    }
+
+    #[test]
+    fn shared_gauges_round_trip_and_gate_on_observation() {
+        let shared = MetricsShared::new(2);
+        assert!(shared.stage(0).is_none(), "unobserved stage renders nothing");
+        shared.set_stage(0, 0.8, 1000.0, 500.0);
+        assert_eq!(shared.stage(0), Some((0.8, 1000.0, 500.0)));
+        assert!(shared.stage(1).is_none());
+        assert_eq!(shared.budget(), None);
+        shared.set_budget(Some(6));
+        assert_eq!(shared.budget(), Some(6));
+        shared.set_budget(None);
+        assert_eq!(shared.budget(), None);
+    }
+
+    #[test]
+    fn label_escaping_is_prometheus_safe() {
+        assert_eq!(escape_label(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(escape_label("x\ny"), "x\\ny");
+    }
+
+    #[test]
+    fn dropped_counter_is_exposed_when_a_ring_is_attached() {
+        let ring = Arc::new(EventRing::new(2));
+        for k in 0..5 {
+            ring.emit(crate::telemetry::ControlEvent::Note { at_ns: k, note: "x".into() });
+        }
+        let mut reg = MetricsRegistry::standalone();
+        reg.set_ring(ring);
+        let text = reg.render();
+        assert!(text.contains("sf_events_dropped_total 3"), "{text}");
+    }
+}

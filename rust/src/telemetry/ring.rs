@@ -1,0 +1,453 @@
+//! Bounded lock-free structured event ring: the control plane's single
+//! audit channel.
+//!
+//! The elastic controller used to accumulate scaling history in ad-hoc
+//! `Vec`s that were only readable after the run. The ring splits that
+//! into two halves with different guarantees:
+//!
+//! * a **bounded SPSC transport** — the controller (the unique producer)
+//!   publishes [`ControlEvent`]s with one Release store each, and live
+//!   exporters (the JSONL tailer, a metrics scrape, `snapshot_report`)
+//!   drain it concurrently with the run;
+//! * an **unbounded journal** behind a mutex — every drained event is
+//!   appended here, so the end-of-run [`ControlPlaneReport`] timeline is
+//!   exactly as complete as the old `Vec` path was.
+//!
+//! Overflow is *audited, never silent*: when a burst outruns the
+//! transport between two drains, the event is counted in
+//! [`EventRing::dropped`] — surfaced in `RunReport::events_dropped` and
+//! as the `sf_events_dropped_total` metric. The controller drains its own
+//! ring at the end of every control tick, so drops only happen when a
+//! single tick emits more events than the ring holds.
+//!
+//! [`ControlPlaneReport`]: crate::elastic::ControlPlaneReport
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Json;
+use crate::elastic::{ElasticAction, ElasticEvent};
+use crate::monitor::QueueEnd;
+use crate::topology::StreamId;
+
+/// Why a wanted scale-up was withheld by [`crate::elastic::coordinate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateReason {
+    /// The stage's own lanes were starved past the threshold (§IV
+    /// validity: adding replicas to a starved stage is noise).
+    Starved,
+    /// The downstream edge was write-blocked past the threshold: more
+    /// replicas would only pile onto a saturated consumer.
+    DownstreamBlocked,
+    /// The coordinated worker budget trimmed the claim.
+    Budget,
+}
+
+impl GateReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GateReason::Starved => "starved",
+            GateReason::DownstreamBlocked => "downstream-blocked",
+            GateReason::Budget => "budget",
+        }
+    }
+}
+
+/// Which end of a stream a blocked span was recorded on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockEnd {
+    /// Consumer side (`read_blocked_ns`): the stream starved its reader.
+    Read,
+    /// Producer side (`write_blocked_ns`): the stream backpressured its
+    /// writer.
+    Write,
+}
+
+impl BlockEnd {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BlockEnd::Read => "read",
+            BlockEnd::Write => "write",
+        }
+    }
+}
+
+/// One structured control-plane event. See [`ControlEvent::to_json`] for
+/// the stable JSONL wire schema (documented in [`crate::telemetry::jsonl`]).
+#[derive(Debug, Clone)]
+pub enum ControlEvent {
+    /// A realized scaling or resize decision (the classic audit event).
+    Action(ElasticEvent),
+    /// The coordinated worker budget changed.
+    Budget { at_ns: u64, budget: usize },
+    /// A free-form control-plane annotation (e.g. degraded host
+    /// telemetry).
+    Note { at_ns: u64, note: String },
+    /// A wanted scale-up was withheld, with the reason. Emitted once per
+    /// (wanted, reason) change, not every tick.
+    ScaleGated { at_ns: u64, stage: String, replicas: usize, wanted: usize, reason: GateReason },
+    /// A replica lane was spawned (`spawned == true`) or retired.
+    Lane { at_ns: u64, stage: String, lane: usize, spawned: bool },
+    /// A stream spent `dur_ns` of the last control tick blocked on one
+    /// end. `at_ns` is the end of the span (the tick timestamp).
+    BlockedSpan { at_ns: u64, label: String, end: BlockEnd, dur_ns: u64 },
+    /// A monitor estimate converged for one stream end.
+    RateConverged { at_ns: u64, stream: StreamId, end: QueueEnd, mbps: f64 },
+}
+
+impl ControlEvent {
+    /// Timestamp of the event (ns on the run's [`crate::timing::TimeRef`]
+    /// clock).
+    pub fn at_ns(&self) -> u64 {
+        match self {
+            ControlEvent::Action(e) => e.at_ns,
+            ControlEvent::Budget { at_ns, .. }
+            | ControlEvent::Note { at_ns, .. }
+            | ControlEvent::ScaleGated { at_ns, .. }
+            | ControlEvent::Lane { at_ns, .. }
+            | ControlEvent::BlockedSpan { at_ns, .. }
+            | ControlEvent::RateConverged { at_ns, .. } => *at_ns,
+        }
+    }
+
+    /// One JSON object per event — the JSONL line schema. Every object
+    /// carries `"type"` and `"at_ns"`; the rest is per-variant (see the
+    /// [`crate::telemetry::jsonl`] module docs for the full schema).
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("at_ns".to_string(), Json::Num(self.at_ns() as f64));
+        match self {
+            ControlEvent::Action(e) => {
+                o.insert("type".into(), Json::Str("action".into()));
+                o.insert("target".into(), Json::Str(e.target.clone()));
+                let (kind, from, to) = match e.action {
+                    ElasticAction::ScaleUp { from, to } => ("scale-up", from, to),
+                    ElasticAction::ScaleDown { from, to } => ("scale-down", from, to),
+                    ElasticAction::Resize { from, to, model } => {
+                        o.insert("model".into(), Json::Str(model.to_string()));
+                        ("resize", from, to)
+                    }
+                };
+                o.insert("action".into(), Json::Str(kind.into()));
+                o.insert("from".into(), Json::Num(from as f64));
+                o.insert("to".into(), Json::Num(to as f64));
+                o.insert("rho".into(), Json::Num(e.rho));
+                o.insert("lambda_items".into(), Json::Num(e.lambda_items));
+                o.insert("mu_items".into(), Json::Num(e.mu_items));
+                o.insert("pressure".into(), Json::Bool(e.pressure));
+                o.insert("starved_frac".into(), Json::Num(e.starved_frac));
+                o.insert("backpressure_frac".into(), Json::Num(e.backpressure_frac));
+            }
+            ControlEvent::Budget { budget, .. } => {
+                o.insert("type".into(), Json::Str("budget".into()));
+                o.insert("budget".into(), Json::Num(*budget as f64));
+            }
+            ControlEvent::Note { note, .. } => {
+                o.insert("type".into(), Json::Str("note".into()));
+                o.insert("note".into(), Json::Str(note.clone()));
+            }
+            ControlEvent::ScaleGated { stage, replicas, wanted, reason, .. } => {
+                o.insert("type".into(), Json::Str("scale-gated".into()));
+                o.insert("stage".into(), Json::Str(stage.clone()));
+                o.insert("replicas".into(), Json::Num(*replicas as f64));
+                o.insert("wanted".into(), Json::Num(*wanted as f64));
+                o.insert("reason".into(), Json::Str(reason.as_str().into()));
+            }
+            ControlEvent::Lane { stage, lane, spawned, .. } => {
+                o.insert("type".into(), Json::Str("lane".into()));
+                o.insert("stage".into(), Json::Str(stage.clone()));
+                o.insert("lane".into(), Json::Num(*lane as f64));
+                o.insert(
+                    "event".into(),
+                    Json::Str(if *spawned { "spawn" } else { "retire" }.into()),
+                );
+            }
+            ControlEvent::BlockedSpan { label, end, dur_ns, .. } => {
+                o.insert("type".into(), Json::Str("blocked-span".into()));
+                o.insert("stream".into(), Json::Str(label.clone()));
+                o.insert("end".into(), Json::Str(end.as_str().into()));
+                o.insert("dur_ns".into(), Json::Num(*dur_ns as f64));
+            }
+            ControlEvent::RateConverged { stream, end, mbps, .. } => {
+                o.insert("type".into(), Json::Str("rate-converged".into()));
+                o.insert("stream".into(), Json::Num(stream.0 as f64));
+                o.insert(
+                    "end".into(),
+                    Json::Str(match end {
+                        QueueEnd::Head => "head",
+                        QueueEnd::Tail => "tail",
+                    }
+                    .into()),
+                );
+                o.insert("mbps".into(), Json::Num(*mbps));
+            }
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Bounded SPSC event transport + unbounded drained journal.
+///
+/// Concurrency contract (mirrors the data-plane queue's reasoning):
+///
+/// * **one producer** — only the control thread calls [`EventRing::emit`];
+/// * **serialized consumers** — every drain path ([`EventRing::sync`] and
+///   its callers) runs under the journal mutex, so at most one consumer
+///   touches `head`/slots at a time;
+/// * slot hand-off is published by the Release store of `tail` (producer)
+///   and re-owned by the Release store of `head` (consumer), each read
+///   with Acquire on the opposite side.
+pub struct EventRing {
+    slots: Box<[UnsafeCell<Option<ControlEvent>>]>,
+    /// Events published (monotonic; producer-owned).
+    tail: AtomicU64,
+    /// Events drained into the journal (monotonic; consumer-owned).
+    head: AtomicU64,
+    /// Events refused because the transport was full (audited overflow).
+    dropped: AtomicU64,
+    /// Everything ever drained, in publish order.
+    journal: Mutex<Vec<ControlEvent>>,
+}
+
+// SAFETY: slot access is disciplined as documented on the type — the
+// unique producer writes a slot only while it is outside [head, tail),
+// and consumers (serialized by the journal mutex) read it only once the
+// tail Release store has published it.
+unsafe impl Send for EventRing {}
+unsafe impl Sync for EventRing {}
+
+impl std::fmt::Debug for EventRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventRing")
+            .field("capacity", &self.slots.len())
+            .field("published", &self.tail.load(Ordering::Relaxed))
+            .field("drained", &self.head.load(Ordering::Relaxed))
+            .field("dropped", &self.dropped.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl EventRing {
+    /// A ring holding at most `capacity` undrained events (min 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2);
+        let slots: Vec<UnsafeCell<Option<ControlEvent>>> =
+            (0..cap).map(|_| UnsafeCell::new(None)).collect();
+        EventRing {
+            slots: slots.into_boxed_slice(),
+            tail: AtomicU64::new(0),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            journal: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Transport capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Publish one event. **Producer-only** (the control thread). Returns
+    /// `false` — and bumps the dropped counter — when the transport is
+    /// full; the event is discarded but never silently (see
+    /// [`EventRing::dropped`]).
+    pub fn emit(&self, ev: ControlEvent) -> bool {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) >= self.slots.len() as u64 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let idx = (tail % self.slots.len() as u64) as usize;
+        // SAFETY: slot `idx` is outside [head, tail) — the consumer has
+        // re-owned it to us via the head Release store read above.
+        unsafe { *self.slots[idx].get() = Some(ev) };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Events refused so far because the transport was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain every published event into the journal. Safe from any
+    /// thread; concurrent callers serialize on the journal mutex.
+    pub fn sync(&self) {
+        let mut journal = self.journal.lock().unwrap();
+        self.drain_into(&mut journal);
+    }
+
+    fn drain_into(&self, journal: &mut Vec<ControlEvent>) {
+        let tail = self.tail.load(Ordering::Acquire);
+        let mut head = self.head.load(Ordering::Relaxed);
+        while head != tail {
+            let idx = (head % self.slots.len() as u64) as usize;
+            // SAFETY: slot `idx` is inside [head, tail) — published by
+            // the tail Release store, and ours exclusively because every
+            // consumer holds the journal mutex.
+            if let Some(ev) = unsafe { (*self.slots[idx].get()).take() } {
+                journal.push(ev);
+            }
+            head = head.wrapping_add(1);
+            self.head.store(head, Ordering::Release);
+        }
+    }
+
+    /// Number of events in the journal right now (drains first).
+    pub fn journal_len(&self) -> usize {
+        let mut journal = self.journal.lock().unwrap();
+        self.drain_into(&mut journal);
+        journal.len()
+    }
+
+    /// Drain, then clone the journal suffix starting at `cursor`.
+    /// Returns the events and the new cursor — the JSONL tailer's
+    /// incremental read.
+    pub fn read_from(&self, cursor: usize) -> (Vec<ControlEvent>, usize) {
+        let mut journal = self.journal.lock().unwrap();
+        self.drain_into(&mut journal);
+        let start = cursor.min(journal.len());
+        (journal[start..].to_vec(), journal.len())
+    }
+
+    /// Drain, then clone the full journal (the report builder's read).
+    pub fn snapshot(&self) -> Vec<ControlEvent> {
+        let mut journal = self.journal.lock().unwrap();
+        self.drain_into(&mut journal);
+        journal.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn note(k: u64) -> ControlEvent {
+        ControlEvent::Note { at_ns: k, note: format!("n{k}") }
+    }
+
+    #[test]
+    fn ring_preserves_publish_order() {
+        let ring = EventRing::new(16);
+        for k in 0..10 {
+            assert!(ring.emit(note(k)));
+        }
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 10);
+        for (k, ev) in got.iter().enumerate() {
+            assert_eq!(ev.at_ns(), k as u64);
+        }
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_is_counted_not_silent() {
+        let ring = EventRing::new(8);
+        let mut accepted = 0;
+        for k in 0..20 {
+            if ring.emit(note(k)) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 8);
+        assert_eq!(ring.dropped(), 12);
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 8, "transport keeps the oldest burst");
+        assert_eq!(got[0].at_ns(), 0);
+        assert_eq!(got[7].at_ns(), 7);
+    }
+
+    #[test]
+    fn drain_between_bursts_prevents_drops() {
+        let ring = EventRing::new(4);
+        for round in 0..5u64 {
+            for k in 0..4 {
+                assert!(ring.emit(note(round * 4 + k)));
+            }
+            ring.sync();
+        }
+        assert_eq!(ring.dropped(), 0);
+        assert_eq!(ring.journal_len(), 20);
+    }
+
+    #[test]
+    fn incremental_reads_tile_the_journal() {
+        let ring = EventRing::new(32);
+        for k in 0..6 {
+            ring.emit(note(k));
+        }
+        let (a, cur) = ring.read_from(0);
+        assert_eq!(a.len(), 6);
+        for k in 6..9 {
+            ring.emit(note(k));
+        }
+        let (b, cur2) = ring.read_from(cur);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].at_ns(), 6);
+        assert_eq!(cur2, 9);
+        let (c, _) = ring.read_from(cur2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn every_variant_serializes_to_a_json_object() {
+        let evs = vec![
+            ControlEvent::Action(ElasticEvent {
+                at_ns: 1,
+                target: "work".into(),
+                action: ElasticAction::ScaleUp { from: 1, to: 3 },
+                rho: 2.5,
+                lambda_items: 1000.0,
+                mu_items: 400.0,
+                pressure: true,
+                starved_frac: 0.0,
+                backpressure_frac: 0.5,
+            }),
+            ControlEvent::Action(ElasticEvent {
+                at_ns: 2,
+                target: "work".into(),
+                action: ElasticAction::Resize { from: 256, to: 1024, model: "m/m/1" },
+                rho: 0.7,
+                lambda_items: 0.0,
+                mu_items: 0.0,
+                pressure: false,
+                starved_frac: 0.0,
+                backpressure_frac: 0.0,
+            }),
+            ControlEvent::Budget { at_ns: 3, budget: 6 },
+            ControlEvent::Note { at_ns: 4, note: "host \"load\"\nunavailable".into() },
+            ControlEvent::ScaleGated {
+                at_ns: 5,
+                stage: "work".into(),
+                replicas: 2,
+                wanted: 4,
+                reason: GateReason::Starved,
+            },
+            ControlEvent::Lane { at_ns: 6, stage: "work".into(), lane: 2, spawned: true },
+            ControlEvent::BlockedSpan {
+                at_ns: 7,
+                label: "a.0 -> b.0".into(),
+                end: BlockEnd::Write,
+                dur_ns: 12345,
+            },
+            ControlEvent::RateConverged {
+                at_ns: 8,
+                stream: StreamId(0),
+                end: QueueEnd::Head,
+                mbps: 321.5,
+            },
+        ];
+        for ev in evs {
+            let line = ev.to_json().to_string();
+            let back = Json::parse(&line).expect("round-trip");
+            assert!(back.get("type").and_then(Json::as_str).is_some(), "{line}");
+            assert_eq!(
+                back.get("at_ns").and_then(Json::as_f64),
+                Some(ev.at_ns() as f64),
+                "{line}"
+            );
+        }
+    }
+}
