@@ -63,7 +63,7 @@ fn run_case(elastic: bool, secs: f64) -> CaseResult {
         ElasticPolicy::pinned(1)
     };
     let stage_cfg =
-        ElasticStageConfig { policy, initial_replicas: 1, lane_capacity: 256 };
+        ElasticStageConfig { policy, initial_replicas: 1, lane_capacity: 256, ..Default::default() };
     let delivered = Arc::new(AtomicU64::new(0));
     let d2 = delivered.clone();
     // 250 µs → 1 ms per item: the 4× non-blocking service-rate drop.

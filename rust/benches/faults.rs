@@ -1,0 +1,232 @@
+//! Fault-tolerance overhead — what supervision costs when nothing goes
+//! wrong, and what recovery costs when something does.
+//!
+//! Micro: the `catch_unwind` wrap (the per-worker-loop isolation cost —
+//! effectively free) and one full panic → catch → downcast cycle (the
+//! fault path itself). Macro: a supervised single-lane run healthy vs
+//! with one injected panic+restart (`restart_overhead_pct`), the
+//! turnaround of a [`RunOptions::deadline`] force-close on a wedged
+//! topology, and a budget-pinned overload run under adaptive shedding.
+//! Every faulty run closes the conservation ledger exactly — that
+//! assertion *is* the acceptance. Emits
+//! `target/figures/BENCH_faults.json`; `SF_SCALE`/`SF_BENCH_SECS`
+//! shrink everything for CI smoke runs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use streamflow::bench::{black_box, Runner};
+use streamflow::config::Json;
+use streamflow::elastic::ElasticConfig;
+use streamflow::kernel::{ClosureSink, ClosureSource};
+use streamflow::placement::BudgetPolicy;
+use streamflow::prelude::*;
+use streamflow::report::{figures_dir, Cell, Table};
+use streamflow::scheduler::RunReport;
+use streamflow::workload::faults::SlowConsumer;
+use streamflow::workload::{Item, PacedProducer, PhasedServiceWorker};
+
+/// Pass-through (+1) lane worker with an optional injected panic.
+struct MaybePanic {
+    trip: Option<Item>,
+}
+
+impl Replicable for MaybePanic {
+    type In = Item;
+    type Out = Item;
+    fn process(&mut self, v: Item) -> Item {
+        if Some(v) == self.trip {
+            panic!("injected fault: bench panic at item {v}");
+        }
+        v + 1
+    }
+}
+
+/// One supervised pinned lane streaming `n` items; `trip` injects a
+/// single panic (one restart under the default backoff). Returns
+/// (items/s, report, delivered).
+fn lane_run(n: u64, trip: Option<Item>) -> (f64, RunReport, u64) {
+    let cfg = ElasticStageConfig {
+        policy: ElasticPolicy::pinned(1),
+        initial_replicas: 1,
+        lane_capacity: 256,
+        supervisor: SupervisorPolicy::with_restart_budget(3),
+    };
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let mut i = 0u64;
+    let flow = Flow::new("bench-faults")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(ClosureSource::new("src", move || {
+            i += 1;
+            (i <= n).then_some(i - 1)
+        })))
+        .elastic("work", cfg, move |_| MaybePanic { trip })
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+    let t0 = Instant::now();
+    let report = Session::run_flow(flow, RunOptions::default()).expect("run");
+    let secs = t0.elapsed().as_secs_f64();
+    (n as f64 / secs, report, count.load(Ordering::Relaxed))
+}
+
+/// A wedged topology (1 ms/item consumer, fast source) force-closed by
+/// `limit`. Returns (turnaround ms, deadline_hit).
+fn deadline_turnaround(limit: Duration) -> (f64, bool) {
+    let mut i = 0u64;
+    let flow = Flow::new("bench-deadline")
+        .stream_defaults(StreamConfig::default().with_capacity(32))
+        .source::<Item>(Box::new(ClosureSource::new("src", move || {
+            i += 1;
+            Some(i - 1)
+        })))
+        .sink(Box::new(SlowConsumer::new("snk", Duration::from_millis(1))))
+        .unwrap();
+    let t0 = Instant::now();
+    let report =
+        Session::run_flow(flow, RunOptions::default().with_deadline(limit)).expect("run");
+    (t0.elapsed().as_secs_f64() * 1e3, report.deadline_hit)
+}
+
+/// Budget-pinned overload under adaptive shedding. Returns
+/// (items offered, delivered, shed).
+fn shed_run(items: u64) -> (u64, u64, u64) {
+    let shed = ShedControl::new();
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let cfg = ElasticStageConfig {
+        policy: ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown_ticks: 0,
+        },
+        initial_replicas: 1,
+        lane_capacity: 128,
+        supervisor: SupervisorPolicy::default(),
+    };
+    let flow = Flow::new("bench-shed")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(
+            PacedProducer::from_rate_items_per_sec("prod", 20_000.0, items)
+                .with_burst(10)
+                .with_shedding(shed.clone()),
+        ))
+        .elastic("work", cfg, |_| PhasedServiceWorker::new(200_000, 200_000, 0))
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+    let ecfg = ElasticConfig {
+        tick: Duration::from_millis(2),
+        buffer_advice: false,
+        shed_after_ticks: 2,
+        worker_budget: BudgetPolicy::Fixed(1),
+        ..Default::default()
+    };
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_elastic(ecfg).with_shedder("prod", shed),
+    )
+    .expect("run");
+    (items, count.load(Ordering::Relaxed), report.items_shed)
+}
+
+fn main() {
+    // Injected panics are the whole point here — keep them off stderr.
+    std::panic::set_hook(Box::new(|_| {}));
+
+    let mut runner = Runner::new();
+    let mut table = Table::new("faults", &["case", "value", "unit"]);
+    let mut json: BTreeMap<String, Json> = BTreeMap::new();
+
+    // ---- micro: the isolation wrap, and one full panic cycle ---------------
+    let r = runner.bench("faults/catch_unwind", Some(0.5), || {
+        let v = std::panic::catch_unwind(|| black_box(42u64)).unwrap();
+        black_box(v);
+    });
+    let wrap_ns = r.ns.mean;
+    table.row_mixed(&[Cell::S("catch_unwind".into()), Cell::F(wrap_ns), Cell::S("ns".into())]);
+    json.insert("catch_unwind_ns".into(), Json::Num(wrap_ns));
+
+    let r = runner.bench("faults/panic_recover", Some(0.5), || {
+        let err = std::panic::catch_unwind(|| -> u64 { panic!("bench fault") })
+            .expect_err("must panic");
+        black_box(streamflow::error::panic_message(err.as_ref()).len());
+    });
+    let recover_ns = r.ns.mean;
+    table.row_mixed(&[
+        Cell::S("panic_recover".into()),
+        Cell::F(recover_ns),
+        Cell::S("ns".into()),
+    ]);
+    json.insert("panic_recover_ns".into(), Json::Num(recover_ns));
+
+    // ---- macro: supervised lane, healthy vs one panic+restart --------------
+    let n = ((300_000.0 * Runner::scale()) as u64).max(20_000);
+    let (healthy, hr, hd) = lane_run(n, None);
+    assert_eq!(hd, n, "healthy run must deliver everything");
+    assert!(hr.faults.is_empty() && hr.items_lost == 0);
+    let (faulty, fr, fd) = lane_run(n, Some(n / 2));
+    assert_eq!(fr.faults.len(), 1, "one injected panic, one fault record");
+    assert_eq!(
+        fd + fr.items_lost,
+        n,
+        "conservation: delivered + lost must equal offered"
+    );
+    let restart_pct = (healthy - faulty) / healthy * 100.0;
+    for (label, v, unit) in [
+        ("lane_throughput_healthy", healthy / 1e6, "M items/s"),
+        ("lane_throughput_one_restart", faulty / 1e6, "M items/s"),
+        ("restart_overhead", restart_pct, "%"),
+    ] {
+        table.row_mixed(&[Cell::S(label.into()), Cell::F(v), Cell::S(unit.into())]);
+    }
+    json.insert("healthy_items_per_sec".into(), Json::Num(healthy));
+    json.insert("one_restart_items_per_sec".into(), Json::Num(faulty));
+    json.insert("restart_overhead_pct".into(), Json::Num(restart_pct));
+    json.insert("items_streamed".into(), Json::Num(n as f64));
+    json.insert("faulty_items_lost".into(), Json::Num(fr.items_lost as f64));
+
+    // ---- macro: deadline force-close turnaround ----------------------------
+    let limit_ms = 50.0;
+    let (turnaround_ms, hit) = deadline_turnaround(Duration::from_millis(limit_ms as u64));
+    assert!(hit, "the wedged run must be cut by the deadline");
+    table.row_mixed(&[
+        Cell::S("deadline_turnaround".into()),
+        Cell::F(turnaround_ms),
+        Cell::S("ms".into()),
+    ]);
+    json.insert("deadline_limit_ms".into(), Json::Num(limit_ms));
+    json.insert("deadline_turnaround_ms".into(), Json::Num(turnaround_ms));
+
+    // ---- macro: adaptive shedding under a pinned budget --------------------
+    let offered = ((4_000.0 * Runner::scale()) as u64).max(1_000);
+    let (offered, delivered, shed) = shed_run(offered);
+    assert_eq!(delivered + shed, offered, "conservation: delivered + shed == offered");
+    let shed_pct = shed as f64 / offered as f64 * 100.0;
+    table.row_mixed(&[Cell::S("shed_fraction".into()), Cell::F(shed_pct), Cell::S("%".into())]);
+    json.insert("shed_offered_items".into(), Json::Num(offered as f64));
+    json.insert("shed_items".into(), Json::Num(shed as f64));
+    json.insert("shed_pct".into(), Json::Num(shed_pct));
+
+    table.emit().expect("emit");
+    let json_path = figures_dir().join("BENCH_faults.json");
+    std::fs::create_dir_all(figures_dir()).expect("figures dir");
+    std::fs::write(&json_path, Json::Obj(json).to_string()).expect("write json");
+    println!(
+        "# faults: wrap {wrap_ns:.1} ns, panic cycle {recover_ns:.0} ns; lane {:.2} M/s -> \
+         {:.2} M/s with one restart ({restart_pct:+.2}%); deadline {limit_ms:.0} ms closed in \
+         {turnaround_ms:.0} ms; shed {shed_pct:.1}% of offered load (ledger exact)",
+        healthy / 1e6,
+        faulty / 1e6,
+    );
+    println!("# JSON ledger: {}", json_path.display());
+}

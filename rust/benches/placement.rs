@@ -81,6 +81,7 @@ fn elastic_run(placement: PlacementPolicy, secs: f64) -> (f64, RunReport) {
                 policy: ElasticPolicy { max_replicas: 4, cooldown_ticks: 4, ..Default::default() },
                 initial_replicas: 1,
                 lane_capacity: 256,
+                ..Default::default()
             },
             move |_| PhasedServiceWorker::new(400_000, 1_600_000, switch_at),
         )

@@ -165,6 +165,11 @@ struct MatrixSource {
     next_row: usize,
     next_port: usize,
     n_out: usize,
+    /// Degradation knob (elastic wiring only): when the control plane
+    /// raises the level, a per-burst quota of row blocks is dropped
+    /// *before* the dot stage — their `C` rows stay zero, trading result
+    /// completeness for pipeline latency. Every drop is audited.
+    shed: Option<Arc<crate::elastic::ShedControl>>,
 }
 
 impl MatrixSource {
@@ -197,6 +202,14 @@ impl Kernel for MatrixSource {
             }
             if burst.is_empty() {
                 return KernelStatus::Done;
+            }
+            // quota(n) < n, so a burst always keeps at least one block.
+            if let Some(ctl) = &self.shed {
+                let drop = ctl.quota(burst.len() as u64) as usize;
+                if drop > 0 {
+                    burst.truncate(burst.len() - drop);
+                    ctl.record_shed(drop as u64);
+                }
             }
             let port = ctx.output::<RowBlock>(0).expect("source port");
             if port.push_iter(burst).is_err() {
@@ -310,7 +323,7 @@ impl Kernel for Reducer {
     }
 
     fn on_stop(&mut self, _ctx: &mut KernelContext) {
-        *self.out.lock().unwrap() = self.c.take();
+        *self.out.lock().unwrap_or_else(|e| e.into_inner()) = self.c.take();
     }
 }
 
@@ -375,6 +388,7 @@ fn run_matmul_elastic(
             next_row: 0,
             next_port: 0,
             n_out: 1,
+            shed: opts.shedders.first().map(|s| s.control.clone()),
         }))
         // Source → split (uninstrumented, like the static source → dot
         // edges); the controller still reads its counters for λ and
@@ -434,6 +448,7 @@ fn run_matmul_static(
             next_row: 0,
             next_port: 0,
             n_out: k,
+            shed: None,
         }))
         .tee(k)
         .then_each_with::<ResultBlock, _>(

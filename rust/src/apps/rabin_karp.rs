@@ -123,6 +123,10 @@ struct Segmenter {
     next_off: usize,
     next_port: usize,
     n_out: usize,
+    /// Degradation knob (elastic wiring only): under load shedding a
+    /// per-burst quota of segments is dropped before hashing — the
+    /// skipped corpus ranges simply go unsearched (audited recall loss).
+    shed: Option<Arc<crate::elastic::ShedControl>>,
 }
 
 impl Segmenter {
@@ -153,6 +157,14 @@ impl Kernel for Segmenter {
             }
             if burst.is_empty() {
                 return KernelStatus::Done;
+            }
+            // quota(n) < n, so a burst always keeps at least one segment.
+            if let Some(ctl) = &self.shed {
+                let drop = ctl.quota(burst.len() as u64) as usize;
+                if drop > 0 {
+                    burst.truncate(burst.len() - drop);
+                    ctl.record_shed(drop as u64);
+                }
             }
             let port = ctx.output::<Segment>(0).expect("segmenter port");
             if port.push_iter(burst).is_err() {
@@ -341,7 +353,7 @@ impl Kernel for MatchReducer {
             }
             all_finished = false;
             any = true;
-            let mut out = self.out.lock().unwrap();
+            let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
             for Candidate(pos) in self.scratch.drain(..) {
                 out.push(pos);
             }
@@ -376,7 +388,7 @@ impl Kernel for BatchMatchReducer {
                 None => return KernelStatus::Done,
             }
         }
-        let mut out = self.out.lock().unwrap();
+        let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
         for batch in self.scratch.drain(..) {
             out.extend(batch);
         }
@@ -461,6 +473,7 @@ fn run_rabin_karp_elastic(
             next_off: 0,
             next_port: 0,
             n_out: 1,
+            shed: opts.shedders.first().map(|s| s.control.clone()),
         }))
         // Segmenter → hash stage (uninstrumented, like the static
         // seg→hash edges; the controller reads its counters for λ and
@@ -523,6 +536,7 @@ fn run_rabin_karp_static(
         next_off: 0,
         next_port: 0,
         n_out: n,
+        shed: None,
     }));
 
     let matches_cell = Arc::new(std::sync::Mutex::new(Vec::new()));
@@ -800,7 +814,7 @@ impl Replicable for MultiPatternVerifyWorker {
 /// Order-normalize the consolidated matches (replica routing and the
 /// segment overlap both permit duplicates/reordering before this point).
 fn finish_matches(cell: &Arc<std::sync::Mutex<Vec<usize>>>) -> Vec<usize> {
-    let mut matches = std::mem::take(&mut *cell.lock().unwrap());
+    let mut matches = std::mem::take(&mut *cell.lock().unwrap_or_else(|e| e.into_inner()));
     matches.sort_unstable();
     matches.dedup();
     matches

@@ -9,7 +9,7 @@ pub mod json;
 
 pub use json::Json;
 
-use crate::elastic::{ElasticPolicy, ElasticStageConfig};
+use crate::elastic::{ElasticPolicy, ElasticStageConfig, SupervisorPolicy};
 use crate::rng::dist::DistKind;
 use crate::{Result, SfError};
 
@@ -26,11 +26,20 @@ pub struct StageTuning {
     pub band: f64,
     /// Control ticks to wait after an action before acting again.
     pub cooldown_ticks: u32,
+    /// `Some(n)`: override the lane supervisor's restart budget (respawns
+    /// allowed per panicked lane before escalation to stage failure; CLI
+    /// `--restart-budget`). `None`: [`SupervisorPolicy::default`].
+    pub restart_budget: Option<u32>,
 }
 
 impl Default for StageTuning {
     fn default() -> Self {
-        StageTuning { target_rho: 0.7, band: 0.15, cooldown_ticks: 4 }
+        StageTuning {
+            target_rho: 0.7,
+            band: 0.15,
+            cooldown_ticks: 4,
+            restart_budget: None,
+        }
     }
 }
 
@@ -54,6 +63,11 @@ impl StageTuning {
             policy: self.policy(1, max_replicas),
             initial_replicas: 1,
             lane_capacity: lane_capacity.max(4),
+            supervisor: match self.restart_budget {
+                Some(budget) => SupervisorPolicy::with_restart_budget(budget),
+                None => SupervisorPolicy::default(),
+            },
+            ..Default::default()
         }
     }
 }
@@ -281,7 +295,12 @@ mod tests {
 
     #[test]
     fn stage_tuning_expands_to_policy_and_stage_config() {
-        let t = StageTuning { target_rho: 0.6, band: 0.1, cooldown_ticks: 7 };
+        let t = StageTuning {
+            target_rho: 0.6,
+            band: 0.1,
+            cooldown_ticks: 7,
+            ..Default::default()
+        };
         let p = t.policy(1, 5);
         assert_eq!((p.min_replicas, p.max_replicas, p.cooldown_ticks), (1, 5, 7));
         assert!((p.target_rho - 0.6).abs() < 1e-12);

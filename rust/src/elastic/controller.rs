@@ -67,6 +67,7 @@ use crate::timing::TimeRef;
 use crate::topology::StreamId;
 
 use super::policy::{coordinate, ElasticPolicy, StageSignals};
+use super::shed::ShedControl;
 use super::stage::ElasticStage;
 
 /// What the control plane did, for the audit trail.
@@ -211,6 +212,14 @@ pub struct ElasticConfig {
     /// host-aware budget (deterministic tests/benches). `None` ⇒
     /// discover via [`CpuTopology`].
     pub host_cpus_override: Option<usize>,
+    /// Stall watchdog: consecutive control epochs of zero push/pop
+    /// progress (while the stage's input is still open) before a
+    /// [`ControlEvent::StallSuspected`] is emitted for the episode.
+    pub stall_epochs: u32,
+    /// Load shedding: consecutive budget-gated epochs before the
+    /// degradation level on attached shedders is raised — and,
+    /// symmetrically, consecutive clear epochs before it is lowered.
+    pub shed_after_ticks: u32,
 }
 
 impl Default for ElasticConfig {
@@ -226,8 +235,21 @@ impl Default for ElasticConfig {
             starve_threshold: 0.5,
             load_source: None,
             host_cpus_override: None,
+            stall_epochs: 8,
+            shed_after_ticks: 4,
         }
     }
+}
+
+/// A degradation knob the controller may turn when scale-up is vetoed:
+/// typically a [`Sheddable`](super::shed::Sheddable) source's
+/// [`ShedControl`].
+#[derive(Clone, Debug)]
+pub struct ShedBinding {
+    /// Source/kernel name for the audit trail.
+    pub label: String,
+    /// The shared sampling-rate knob.
+    pub control: Arc<ShedControl>,
 }
 
 /// A replicable stage plus the streams around it: the ingress stream
@@ -265,6 +287,13 @@ struct StageState {
     /// Last emitted `(wanted, reason)` gate, for change-triggered (not
     /// per-tick) [`ControlEvent::ScaleGated`] emission.
     last_gate: Option<(usize, GateReason)>,
+    /// Consecutive epochs with zero push/pop progress while the input
+    /// was open (stall-watchdog counter).
+    stall_epochs: u32,
+    /// A `StallSuspected` has been emitted for the current episode.
+    stall_flagged: bool,
+    /// Incremental-read cursor into the stage's supervision fault log.
+    fault_cursor: usize,
 }
 
 #[derive(Debug, Default)]
@@ -301,6 +330,12 @@ pub struct ElasticController {
     host_cpus: usize,
     last_budget: Option<usize>,
     budget_note_emitted: bool,
+    /// Degradation knobs the shedding loop may turn (sources).
+    shedders: Vec<ShedBinding>,
+    /// Consecutive budget-gated epochs (shedding pressure).
+    shed_hot: u32,
+    /// Consecutive clear epochs (shedding recovery).
+    shed_cool: u32,
 }
 
 impl ElasticController {
@@ -378,6 +413,9 @@ impl ElasticController {
             host_cpus,
             last_budget: None,
             budget_note_emitted: false,
+            shedders: Vec::new(),
+            shed_hot: 0,
+            shed_cool: 0,
         }
     }
 
@@ -389,6 +427,13 @@ impl ElasticController {
     pub fn attach_telemetry(&mut self, ring: Arc<EventRing>, gauges: Arc<MetricsShared>) {
         self.ring = ring;
         self.gauges = Some(gauges);
+    }
+
+    /// Register the degradation knobs the shedding loop may turn. Like
+    /// [`attach_telemetry`](Self::attach_telemetry), must be called
+    /// before the controller thread is spawned.
+    pub fn attach_shedders(&mut self, shedders: Vec<ShedBinding>) {
+        self.shedders = shedders;
     }
 
     /// Main loop: pump monitor events between ticks until `stop` is set
@@ -563,6 +608,9 @@ impl ElasticController {
                 self.audit_gate(i, target, input, at_ns);
             }
         }
+        self.tick_stalls(at_ns);
+        self.tick_faults();
+        self.tick_shedding(at_ns);
         if let Some(g) = &self.gauges {
             for (i, (_, sig)) in inputs.iter().enumerate() {
                 let rho = if sig.replicas > 0 && sig.mu > 0.0 {
@@ -581,6 +629,109 @@ impl ElasticController {
         // exporters): the bounded transport only has to absorb one tick's
         // burst, not the whole run.
         self.ring.sync();
+    }
+
+    /// Emit [`ControlEvent::StallSuspected`] once per stall episode:
+    /// [`ElasticConfig::stall_epochs`] consecutive control epochs of zero
+    /// push/pop progress while the stage's input is still open (the
+    /// counters are maintained by [`observe_stage`](Self::observe_stage)).
+    fn tick_stalls(&mut self, at_ns: u64) {
+        for i in 0..self.stages.len() {
+            let epochs = {
+                let st = &mut self.stage_states[i];
+                if st.stall_epochs >= self.cfg.stall_epochs && !st.stall_flagged {
+                    st.stall_flagged = true;
+                    Some(st.stall_epochs)
+                } else {
+                    None
+                }
+            };
+            if let Some(epochs) = epochs {
+                self.ring.emit(ControlEvent::StallSuspected {
+                    at_ns,
+                    stage: self.stages[i].stage.stage_name().to_string(),
+                    epochs,
+                });
+            }
+        }
+    }
+
+    /// Tail each supervised stage's fault log into the audit ring. The
+    /// log is written by the stage's own worker threads (panics,
+    /// escalations); the per-stage cursor makes this an incremental read.
+    /// Records carry their own capture timestamps.
+    fn tick_faults(&mut self) {
+        for i in 0..self.stages.len() {
+            let Some(log) = self.stages[i].stage.fault_log() else { continue };
+            let (recs, cursor) = log.records_from(self.stage_states[i].fault_cursor);
+            self.stage_states[i].fault_cursor = cursor;
+            for r in recs {
+                if let Some(g) = &self.gauges {
+                    g.inc_faults(1);
+                }
+                self.ring.emit(ControlEvent::Fault {
+                    at_ns: r.at_ns,
+                    target: r.target,
+                    lane: r.lane,
+                    restarts: r.restarts,
+                    escalated: r.escalated,
+                    message: r.message,
+                });
+            }
+        }
+    }
+
+    /// The adaptive-degradation loop (awstream-style): when the budget
+    /// gate keeps vetoing a wanted scale-up — the stage is overloaded and
+    /// the host has nothing left to give — raise the degradation level on
+    /// every attached shedder; once the gate clears and stays clear, walk
+    /// the level back down. Both directions are hysteresis-guarded by
+    /// [`ElasticConfig::shed_after_ticks`] and every level change is
+    /// audited as a [`ControlEvent::Shed`].
+    fn tick_shedding(&mut self, at_ns: u64) {
+        if self.shedders.is_empty() {
+            return;
+        }
+        let pinned = self
+            .stage_states
+            .iter()
+            .any(|st| matches!(st.last_gate, Some((_, GateReason::Budget))));
+        if pinned {
+            self.shed_hot += 1;
+            self.shed_cool = 0;
+        } else {
+            self.shed_cool += 1;
+            self.shed_hot = 0;
+        }
+        let raise = if self.shed_hot >= self.cfg.shed_after_ticks {
+            self.shed_hot = 0;
+            Some(true)
+        } else if self.shed_cool >= self.cfg.shed_after_ticks {
+            self.shed_cool = 0;
+            Some(false)
+        } else {
+            None
+        };
+        if let Some(raise) = raise {
+            for sb in &self.shedders {
+                let before = sb.control.level();
+                let after = if raise { sb.control.raise() } else { sb.control.lower() };
+                if after != before {
+                    self.ring.emit(ControlEvent::Shed {
+                        at_ns,
+                        target: sb.label.clone(),
+                        level: after,
+                        shed_total: sb.control.shed_total(),
+                    });
+                }
+            }
+        }
+        if let Some(g) = &self.gauges {
+            let level =
+                self.shedders.iter().map(|s| s.control.level()).max().unwrap_or(0);
+            let total: u64 = self.shedders.iter().map(|s| s.control.shed_total()).sum();
+            g.set_shed(level, total);
+        }
     }
 
     /// Audit a withheld scale-up: when the coordinated target is below
@@ -749,7 +900,21 @@ impl ElasticController {
             st.last_down_wb = wb;
         }
 
+        // Stall watchdog bookkeeping: zero admitted arrivals *and* zero
+        // served items across every lane, while the input is still open,
+        // is "no progress". Any movement (or the close) ends the episode
+        // and re-arms the one-shot emission in `tick_stalls`.
+        let moved = lambda_obs.unwrap_or(0.0) > 0.0
+            || probe.samples.iter().any(|s| s.tc_head > 0 || s.tc_tail > 0);
+        let input_open = !self.stages[i].stage.input_closed();
+
         let st = &mut self.stage_states[i];
+        if moved || !input_open {
+            st.stall_epochs = 0;
+            st.stall_flagged = false;
+        } else {
+            st.stall_epochs = st.stall_epochs.saturating_add(1);
+        }
         if k > 0 {
             let obs = sum / k as f64;
             st.mu_ewma = Some(match st.mu_ewma {
@@ -921,6 +1086,7 @@ mod tests {
         policy: ElasticPolicy,
         tc_per_lane: AtomicU64,
         starved_ns_per_lane: AtomicU64,
+        faults: Option<Arc<crate::elastic::stage::StageFaultLog>>,
     }
 
     impl FakeStage {
@@ -930,6 +1096,7 @@ mod tests {
                 policy,
                 tc_per_lane: AtomicU64::new(tc),
                 starved_ns_per_lane: AtomicU64::new(0),
+                faults: None,
             })
         }
     }
@@ -979,6 +1146,9 @@ mod tests {
             false
         }
         fn join_workers(&self) {}
+        fn fault_log(&self) -> Option<Arc<crate::elastic::stage::StageFaultLog>> {
+            self.faults.clone()
+        }
     }
 
     fn controller_for(
@@ -1325,6 +1495,149 @@ mod tests {
         let (rho, lambda, mu) = shared.stage(0).expect("gauges refreshed");
         assert!(lambda > 0.0 && mu > 0.0, "rho={rho} lambda={lambda} mu={mu}");
         assert!(shared.budget().is_none(), "unlimited policy publishes no budget");
+    }
+
+    #[test]
+    fn stall_watchdog_flags_once_per_episode() {
+        let policy =
+            ElasticPolicy { max_replicas: 2, cooldown_ticks: 0, ..Default::default() };
+        let stage = FakeStage::busy(1, policy, 0); // serves nothing
+        let (upq, handle) = instrumented::<u64>(&StreamConfig::default());
+        let mut ctl = controller_for(
+            vec![StageBinding {
+                stage: stage.clone(),
+                upstream: Some(StreamBinding {
+                    id: StreamId(0),
+                    label: "src -> fake".into(),
+                    handle,
+                }),
+                downstream: None,
+            }],
+            ElasticConfig {
+                buffer_advice: false,
+                ewma_alpha: 1.0,
+                stall_epochs: 3,
+                ..Default::default()
+            },
+        );
+        let stalls = |r: &ControlPlaneReport| {
+            r.control_events
+                .iter()
+                .filter(|e| matches!(e, ControlEvent::StallSuspected { .. }))
+                .count()
+        };
+        // No arrivals, no service, input open: one event at epoch 3, and
+        // only one no matter how long the episode drags on.
+        for _ in 0..6 {
+            ctl.step(0.010);
+        }
+        assert_eq!(stalls(&ctl.snapshot_report()), 1);
+        // Progress ends the episode and re-arms the watchdog...
+        stage.tc_per_lane.store(5, Ordering::Relaxed);
+        for i in 0..50u64 {
+            let _ = upq.try_push(i);
+        }
+        ctl.step(0.010);
+        // ...so a fresh stall is flagged a second time.
+        stage.tc_per_lane.store(0, Ordering::Relaxed);
+        for _ in 0..6 {
+            ctl.step(0.010);
+        }
+        let rep = ctl.snapshot_report();
+        assert_eq!(stalls(&rep), 2, "{:?}", rep.control_events);
+    }
+
+    #[test]
+    fn supervision_faults_are_tailed_into_the_journal_incrementally() {
+        use crate::elastic::stage::{FaultRecord, StageFaultLog};
+        let policy =
+            ElasticPolicy { max_replicas: 2, cooldown_ticks: 0, ..Default::default() };
+        let log = Arc::new(StageFaultLog::new());
+        let stage = Arc::new(FakeStage {
+            replicas: Mutex::new(1),
+            policy,
+            tc_per_lane: AtomicU64::new(0),
+            starved_ns_per_lane: AtomicU64::new(0),
+            faults: Some(log.clone()),
+        });
+        let mut ctl = controller_for(
+            vec![StageBinding { stage, upstream: None, downstream: None }],
+            ElasticConfig { buffer_advice: false, ..Default::default() },
+        );
+        let rec = |msg: &str| FaultRecord {
+            at_ns: 1,
+            target: "fake".into(),
+            lane: Some(0),
+            restarts: 0,
+            escalated: false,
+            message: msg.into(),
+        };
+        log.record(rec("boom 1"));
+        log.record(rec("boom 2"));
+        ctl.step(0.010);
+        log.record(rec("boom 3"));
+        ctl.step(0.010);
+        ctl.step(0.010); // cursor: already-tailed records must not repeat
+        let rep = ctl.snapshot_report();
+        let msgs: Vec<&str> = rep
+            .control_events
+            .iter()
+            .filter_map(|e| match e {
+                ControlEvent::Fault { message, .. } => Some(message.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(msgs, vec!["boom 1", "boom 2", "boom 3"]);
+    }
+
+    #[test]
+    fn persistent_budget_gate_engages_shedding_then_recovers() {
+        let policy =
+            ElasticPolicy { max_replicas: 8, cooldown_ticks: 0, ..Default::default() };
+        let stage = FakeStage::busy(1, policy, 10); // μ = 1k/s at 10 ms ticks
+        let (upq, handle) =
+            instrumented::<u64>(&StreamConfig::default().with_capacity(1 << 20));
+        let mut ctl = controller_for(
+            vec![StageBinding {
+                stage: stage.clone(),
+                upstream: Some(StreamBinding {
+                    id: StreamId(0),
+                    label: "src -> fake".into(),
+                    handle,
+                }),
+                downstream: None,
+            }],
+            ElasticConfig {
+                buffer_advice: false,
+                ewma_alpha: 1.0,
+                worker_budget: BudgetPolicy::Fixed(2),
+                shed_after_ticks: 2,
+                ..Default::default()
+            },
+        );
+        let shed = ShedControl::new();
+        ctl.attach_shedders(vec![ShedBinding { label: "src".into(), control: shed.clone() }]);
+        // Overload: the band rule wants 8 replicas, the budget grants 2,
+        // and ρ stays pinned above band → the gate never clears and the
+        // degradation level must climb.
+        for _ in 0..8 {
+            for i in 0..80u64 {
+                let _ = upq.try_push(i); // λ = 8k/s
+            }
+            ctl.step(0.010);
+        }
+        assert!(shed.level() > 0, "persistent budget veto must engage shedding");
+        let rep = ctl.snapshot_report();
+        assert!(
+            rep.control_events.iter().any(|e| matches!(e, ControlEvent::Shed { .. })),
+            "level changes must be audited: {:?}",
+            rep.control_events
+        );
+        // Load clears: the gate lifts and fidelity walks all the way back.
+        for _ in 0..32 {
+            ctl.step(0.010);
+        }
+        assert_eq!(shed.level(), 0, "cleared gate must recover full fidelity");
     }
 
     #[test]

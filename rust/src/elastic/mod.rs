@@ -64,14 +64,16 @@
 
 pub mod controller;
 pub mod policy;
+pub mod shed;
 pub mod stage;
 
 pub use controller::{
     ControlPlaneReport, ElasticAction, ElasticConfig, ElasticController, ElasticEvent,
-    StageBinding, StageTrajectory, StreamBinding,
+    ShedBinding, StageBinding, StageTrajectory, StreamBinding,
 };
 pub use policy::{coordinate, ElasticPolicy, ScaleDecision, StageSignals};
+pub use shed::{ShedControl, Sheddable, SHED_LEVEL_MAX};
 pub use stage::{
-    ElasticStage, ElasticStageConfig, MergeKernel, Replicable, ReplicaSet, SplitKernel,
-    StageProbe,
+    ElasticStage, ElasticStageConfig, FaultRecord, MergeKernel, Replicable, ReplicaSet,
+    SplitKernel, StageFaultLog, StageProbe, SupervisorPolicy,
 };

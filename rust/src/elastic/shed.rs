@@ -1,0 +1,128 @@
+//! Adaptive load shedding — degrade instead of stalling.
+//!
+//! When the coordinated scaling rule *wants* more replicas but the
+//! worker budget says no (the host is saturated, or the operator capped
+//! the run), the pipeline is overloaded with no capacity left to buy.
+//! The remaining lever is the one awstream-style systems pull: lower the
+//! **source sampling rate** — deliberately drop a known, audited
+//! fraction of the offered load so the surviving items keep flowing at
+//! bounded latency, rather than letting queues fill and the whole
+//! topology grind into backpressure.
+//!
+//! The knob is a [`ShedControl`]: a lock-free `(level, shed-count)` pair
+//! shared between the control plane (which moves the level, see
+//! `ElasticController::tick_shedding`) and the producing kernel (which
+//! honors it per burst and records every item it drops). Conservation is
+//! preserved end to end: `items delivered + items shed == items offered`,
+//! with the shed term reported in the run report and exported as
+//! Prometheus gauges — degradation is never silent.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+
+/// Highest degradation level: shed `SHED_LEVEL_MAX / (SHED_LEVEL_MAX+1)`
+/// of the offered load (level `l` sheds `l/(MAX+1)` — level 0 sheds
+/// nothing, the top level still lets 1/(MAX+1) through so the pipeline
+/// keeps producing evidence about its own health).
+pub const SHED_LEVEL_MAX: u8 = 4;
+
+/// The shared degradation knob between controller and source.
+///
+/// Both sides touch it with relaxed-ish atomics on their hot paths: the
+/// source reads `level` once per burst, the controller writes it a few
+/// times per run. `shed` is a lifetime count of deliberately dropped
+/// items (the audit half of the conservation equation).
+#[derive(Debug, Default)]
+pub struct ShedControl {
+    level: AtomicU8,
+    shed: AtomicU64,
+}
+
+impl ShedControl {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ShedControl::default())
+    }
+
+    /// Current degradation level (0 = full fidelity).
+    pub fn level(&self) -> u8 {
+        self.level.load(Ordering::Acquire)
+    }
+
+    /// Set the level, clamped to `0..=SHED_LEVEL_MAX`; returns the
+    /// level actually installed.
+    pub fn set_level(&self, level: u8) -> u8 {
+        let l = level.min(SHED_LEVEL_MAX);
+        self.level.store(l, Ordering::Release);
+        l
+    }
+
+    /// Raise one level (saturating at [`SHED_LEVEL_MAX`]).
+    pub fn raise(&self) -> u8 {
+        self.set_level(self.level().saturating_add(1))
+    }
+
+    /// Lower one level (saturating at 0).
+    pub fn lower(&self) -> u8 {
+        self.set_level(self.level().saturating_sub(1))
+    }
+
+    /// How many items of a burst of `n` the current level says to drop.
+    /// Level `l` sheds `floor(n · l / (SHED_LEVEL_MAX + 1))`.
+    pub fn quota(&self, n: u64) -> u64 {
+        n * self.level() as u64 / (SHED_LEVEL_MAX as u64 + 1)
+    }
+
+    /// Record `n` items deliberately dropped by the source.
+    pub fn record_shed(&self, n: u64) {
+        self.shed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lifetime count of items shed under this control.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+/// A kernel that exposes a degradation knob the control plane can bind
+/// (see `ElasticController::attach_shedders`).
+pub trait Sheddable {
+    /// The shared sampling-rate control for this kernel.
+    fn shed_control(&self) -> Arc<ShedControl>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_walks_and_saturates() {
+        let c = ShedControl::new();
+        assert_eq!(c.level(), 0);
+        assert_eq!(c.lower(), 0, "floor saturates");
+        for want in 1..=SHED_LEVEL_MAX {
+            assert_eq!(c.raise(), want);
+        }
+        assert_eq!(c.raise(), SHED_LEVEL_MAX, "ceiling saturates");
+        assert_eq!(c.set_level(200), SHED_LEVEL_MAX, "set clamps");
+        assert_eq!(c.lower(), SHED_LEVEL_MAX - 1);
+    }
+
+    #[test]
+    fn quota_is_a_level_proportional_fraction() {
+        let c = ShedControl::new();
+        assert_eq!(c.quota(100), 0, "level 0 sheds nothing");
+        c.set_level(1);
+        assert_eq!(c.quota(100), 20); // 1/5
+        c.set_level(SHED_LEVEL_MAX);
+        assert_eq!(c.quota(100), 80, "top level still passes 1/(MAX+1)");
+        assert_eq!(c.quota(0), 0);
+    }
+
+    #[test]
+    fn shed_accounting_accumulates() {
+        let c = ShedControl::new();
+        c.record_shed(3);
+        c.record_shed(4);
+        assert_eq!(c.shed_total(), 7);
+    }
+}

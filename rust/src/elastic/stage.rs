@@ -38,15 +38,145 @@
 //! granularity.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BTreeSet, BinaryHeap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
 use crate::placement::ThreadPin;
 use crate::queue::{MonitorSample, PopResult, PushError, SpscQueue};
 
 use super::policy::ElasticPolicy;
+
+/// Lane supervision knobs: how many times a panicked replica is
+/// respawned, and how the respawn delay escalates.
+///
+/// A lane panic is isolated by `catch_unwind` in the worker thread; the
+/// in-flight item is audited as lost (the merger skips its sequence
+/// number, so ordering and liveness survive), and the worker rebuilds a
+/// fresh replica from the stage factory after an exponential backoff.
+/// When `restart_budget` respawns have been consumed, the next panic
+/// **escalates**: the lane stops processing, drains (and audits as lost)
+/// everything routed to it so the splitter can never wedge on a dead
+/// lane, and retires permanently.
+#[derive(Debug, Clone)]
+pub struct SupervisorPolicy {
+    /// Respawns allowed per lane before escalation to stage failure.
+    pub restart_budget: u32,
+    /// Delay before the first respawn; doubles per consumed restart.
+    pub backoff_base: Duration,
+    /// Ceiling on the exponential backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            restart_budget: 2,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(200),
+        }
+    }
+}
+
+impl SupervisorPolicy {
+    /// Policy with a given restart budget and the default backoff curve.
+    pub fn with_restart_budget(budget: u32) -> Self {
+        SupervisorPolicy { restart_budget: budget, ..Default::default() }
+    }
+
+    /// Backoff before respawn number `restarts + 1` (exponential, capped).
+    pub fn backoff_for(&self, restarts: u32) -> Duration {
+        let factor = 1u32.checked_shl(restarts.min(16)).unwrap_or(u32::MAX);
+        self.backoff_base.saturating_mul(factor).min(self.backoff_cap)
+    }
+}
+
+/// One audited fault: a kernel or lane panic, an escalation, or a
+/// run-level event such as a deadline abort. Collected into
+/// [`RunReport::faults`](crate::scheduler::RunReport::faults) and
+/// mirrored as [`ControlEvent::Fault`](crate::telemetry::ControlEvent)
+/// telemetry.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    /// [`crate::timing::TimeRef`] timestamp of the fault.
+    pub at_ns: u64,
+    /// Stage or kernel name.
+    pub target: String,
+    /// Replica lane id for elastic-stage faults; `None` for plain
+    /// kernels and run-level faults.
+    pub lane: Option<usize>,
+    /// Supervised respawns this lane had consumed when the fault hit.
+    pub restarts: u32,
+    /// The fault exhausted the restart budget (or was a forced abort):
+    /// no further recovery was attempted.
+    pub escalated: bool,
+    /// Downcast panic payload (or a synthesized description).
+    pub message: String,
+}
+
+/// Shared fault/loss audit for one elastic stage: every panic record and
+/// every item consumed-but-never-produced (by sequence number), so the
+/// merger can skip lost seqs and the report can state conservation
+/// exactly: items produced == items delivered + items lost.
+///
+/// All mutexes here are poison-tolerant — this log is written from panic
+/// unwind paths, where a poisoned lock is the expected case, not the
+/// exceptional one.
+#[derive(Debug, Default)]
+pub struct StageFaultLog {
+    /// Sequence numbers consumed from a lane inq but never delivered to
+    /// its outq, in discovery order (the merger tails this).
+    lost_seqs: Mutex<Vec<u64>>,
+    /// Running count of lost items (cheap read for reports/metrics).
+    items_lost: AtomicU64,
+    /// Structured fault records, in discovery order.
+    records: Mutex<Vec<FaultRecord>>,
+}
+
+impl StageFaultLog {
+    pub fn new() -> Self {
+        StageFaultLog::default()
+    }
+
+    /// Audit one item (by lane sequence number) as lost.
+    pub fn lose_seq(&self, seq: u64) {
+        self.lost_seqs.lock().unwrap_or_else(|e| e.into_inner()).push(seq);
+        self.items_lost.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total items audited as lost so far.
+    pub fn items_lost(&self) -> u64 {
+        self.items_lost.load(Ordering::Relaxed)
+    }
+
+    /// Lost seqs discovered since `cursor`; returns them and the new
+    /// cursor (the merger's incremental read).
+    pub fn lost_from(&self, cursor: usize) -> (Vec<u64>, usize) {
+        let lost = self.lost_seqs.lock().unwrap_or_else(|e| e.into_inner());
+        let start = cursor.min(lost.len());
+        (lost[start..].to_vec(), lost.len())
+    }
+
+    /// Append one fault record.
+    pub fn record(&self, rec: FaultRecord) {
+        self.records.lock().unwrap_or_else(|e| e.into_inner()).push(rec);
+    }
+
+    /// Fault records appended since `cursor` (the controller's
+    /// incremental read for telemetry emission).
+    pub fn records_from(&self, cursor: usize) -> (Vec<FaultRecord>, usize) {
+        let recs = self.records.lock().unwrap_or_else(|e| e.into_inner());
+        let start = cursor.min(recs.len());
+        (recs[start..].to_vec(), recs.len())
+    }
+
+    /// Clone the full record list (the report builder's read).
+    pub fn snapshot(&self) -> Vec<FaultRecord> {
+        self.records.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
 
 /// A kernel body that can be replicated: a pure item transformer. State
 /// is per-replica (each replica gets its own instance from the factory),
@@ -131,6 +261,8 @@ pub struct ElasticStageConfig {
     pub initial_replicas: usize,
     /// Capacity (items) of each lane's in/out queue.
     pub lane_capacity: usize,
+    /// Panic supervision (restart budget + backoff) for the lanes.
+    pub supervisor: SupervisorPolicy,
 }
 
 impl Default for ElasticStageConfig {
@@ -139,6 +271,7 @@ impl Default for ElasticStageConfig {
             policy: ElasticPolicy::default(),
             initial_replicas: 1,
             lane_capacity: 256,
+            supervisor: SupervisorPolicy::default(),
         }
     }
 }
@@ -147,14 +280,24 @@ impl Default for ElasticStageConfig {
 /// kernel, and the elastic controller.
 pub struct ReplicaSet<T: Send + 'static, U: Send + 'static> {
     name: String,
+    /// `Arc`, not `Box`: supervised worker threads clone it to rebuild
+    /// their replica after a panic without touching the stage handle
+    /// (which would keep the `Drop` close-and-join from ever running).
     #[allow(clippy::type_complexity)]
-    factory: Box<dyn Fn(usize) -> Box<dyn Replicable<In = T, Out = U>> + Send + Sync>,
+    factory: Arc<dyn Fn(usize) -> Box<dyn Replicable<In = T, Out = U>> + Send + Sync>,
     policy: ElasticPolicy,
     lane_capacity: usize,
+    /// Lane panic supervision (restart budget + backoff).
+    supervisor: SupervisorPolicy,
+    /// Shared panic/loss audit (workers write, merge + reports read).
+    faults: Arc<StageFaultLog>,
     /// Bumped on every lane-set mutation; split/merge reload lazily.
     gen: AtomicU64,
     /// The splitter has delivered its last item and closed all lanes.
     splitter_done: AtomicBool,
+    /// Run force-terminated (deadline abort): split/merge bail out and
+    /// every lane queue is poisoned.
+    aborted: AtomicBool,
     /// Core-affinity pin for this stage's worker threads, installed by
     /// the scheduler's placement pass (see
     /// [`ElasticStage::install_pin`]). Shared as its own `Arc` so worker
@@ -176,11 +319,14 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
         cfg.policy.validate()?;
         let set = Arc::new(ReplicaSet {
             name: name.into(),
-            factory: Box::new(factory),
+            factory: Arc::new(factory),
             policy: cfg.policy.clone(),
             lane_capacity: cfg.lane_capacity.max(1),
+            supervisor: cfg.supervisor.clone(),
+            faults: Arc::new(StageFaultLog::new()),
             gen: AtomicU64::new(0),
             splitter_done: AtomicBool::new(false),
+            aborted: AtomicBool::new(false),
             pin_slot: Arc::new(Mutex::new(None)),
             table: Mutex::new(LaneTable {
                 closed: false,
@@ -206,7 +352,12 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
 
     /// Current active replica count.
     pub fn replicas(&self) -> usize {
-        self.table.lock().unwrap().active.len()
+        self.lock().active.len()
+    }
+
+    /// The stage's shared fault/loss audit.
+    pub fn faults(&self) -> &Arc<StageFaultLog> {
+        &self.faults
     }
 
     fn generation(&self) -> u64 {
@@ -214,7 +365,9 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
     }
 
     fn lock(&self) -> MutexGuard<'_, LaneTable<T, U>> {
-        self.table.lock().unwrap()
+        // Poison-tolerant: the table is consulted from fault paths (abort,
+        // teardown after a panic) where a poisoned mutex must not cascade.
+        self.table.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Grow or shrink to `n` active replicas (clamped to the policy
@@ -255,7 +408,10 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
             retiring: AtomicBool::new(false),
             tid: AtomicI64::new(0),
         });
-        let mut worker = (self.factory)(id);
+        let factory = self.factory.clone();
+        let supervisor = self.supervisor.clone();
+        let faults = self.faults.clone();
+        let stage_name = self.name.clone();
         let pin_slot = self.pin_slot.clone();
         let lane_for_worker = lane.clone();
         let spawned = std::thread::Builder::new()
@@ -266,7 +422,7 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
                 // side — this thread or a later `install_pin` reading
                 // tids — performs the pin; neither can miss it.
                 {
-                    let slot = pin_slot.lock().unwrap();
+                    let slot = pin_slot.lock().unwrap_or_else(|e| e.into_inner());
                     lane_for_worker
                         .tid
                         .store(crate::placement::current_tid(), Ordering::Release);
@@ -287,10 +443,61 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
                 // idle lane costs ~nothing and is woken by the splitter's
                 // next publish; starved time lands in read_blocked_ns for
                 // the §IV validity gate on controller probes.
-                while let Some(tagged) = inq.pop() {
-                    let out = worker.process(tagged.item);
-                    if outq.push(Tagged { seq: tagged.seq, item: out }).is_err() {
-                        break;
+                //
+                // The loop is supervised: a panic in `process` (or in the
+                // replica's own state) is caught, the in-flight item is
+                // audited as lost by sequence number — the merger skips
+                // it, so ordering and liveness survive — and a fresh
+                // replica is rebuilt from the factory under exponential
+                // backoff. Exhausting the restart budget escalates: the
+                // lane stops processing but keeps draining (and auditing
+                // as lost) whatever the splitter routes to it, so no
+                // producer can wedge on a dead lane.
+                let mut worker = factory(id);
+                let mut restarts: u32 = 0;
+                loop {
+                    let in_flight = std::cell::Cell::new(None::<u64>);
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        while let Some(tagged) = inq.pop() {
+                            in_flight.set(Some(tagged.seq));
+                            let out = worker.process(tagged.item);
+                            in_flight.set(None);
+                            if let Err(PushError::Closed(t) | PushError::Full(t)) =
+                                outq.push(Tagged { seq: tagged.seq, item: out })
+                            {
+                                // Force-closed under us (abort): the item
+                                // was consumed but will never be merged.
+                                faults.lose_seq(t.seq);
+                                break;
+                            }
+                        }
+                    }));
+                    match result {
+                        Ok(()) => break,
+                        Err(payload) => {
+                            if let Some(seq) = in_flight.get() {
+                                faults.lose_seq(seq);
+                            }
+                            let message = crate::error::panic_message(payload.as_ref());
+                            let escalated = restarts >= supervisor.restart_budget;
+                            faults.record(FaultRecord {
+                                at_ns: crate::timing::TimeRef::new().now_ns(),
+                                target: stage_name.clone(),
+                                lane: Some(id),
+                                restarts,
+                                escalated,
+                                message,
+                            });
+                            if escalated {
+                                while let Some(tagged) = inq.pop() {
+                                    faults.lose_seq(tagged.seq);
+                                }
+                                break;
+                            }
+                            std::thread::sleep(supervisor.backoff_for(restarts));
+                            restarts += 1;
+                            worker = factory(id);
+                        }
                     }
                 }
                 outq.close();
@@ -338,6 +545,31 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
         self.splitter_done.load(Ordering::Acquire)
     }
 
+    /// Force-terminate the stage (deadline abort). Poisons every lane
+    /// queue — workers drain and exit, a parked splitter or merger
+    /// unparks immediately — and flips the `aborted` flag that makes
+    /// [`SplitKernel`]/[`MergeKernel`] bail out instead of waiting for
+    /// orderly completion. Items stranded mid-stage are audited as lost
+    /// by whichever side discovers them. Idempotent; callable from any
+    /// thread (the third-party-close race the retirement protocol avoids
+    /// is acceptable here because the merger stops consuming entirely).
+    pub fn abort(&self) {
+        self.aborted.store(true, Ordering::Release);
+        let mut t = self.lock();
+        t.closed = true;
+        for lane in &t.all {
+            lane.inq.poison();
+            lane.outq.poison();
+        }
+        self.splitter_done.store(true, Ordering::Release);
+        self.gen.fetch_add(1, Ordering::Release);
+    }
+
+    /// True once [`ReplicaSet::abort`] has fired.
+    pub fn aborted(&self) -> bool {
+        self.aborted.load(Ordering::Acquire)
+    }
+
     /// Copy-and-zero samples of every active lane's in-queue counters
     /// (departures = that replica's service transactions).
     pub fn lane_probe(&self) -> Vec<MonitorSample> {
@@ -357,7 +589,7 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
     /// stage's cpus too. Outcomes (applied/denied) accumulate in the
     /// [`ThreadPin`] for the run report.
     pub fn install_pin(&self, pin: Arc<ThreadPin>) {
-        let mut slot = self.pin_slot.lock().unwrap();
+        let mut slot = self.pin_slot.lock().unwrap_or_else(|e| e.into_inner());
         *slot = Some(pin.clone());
         let t = self.lock();
         for lane in &t.all {
@@ -433,6 +665,16 @@ pub trait ElasticStage: Send + Sync {
     fn input_closed(&self) -> bool;
     /// Join worker threads (shutdown).
     fn join_workers(&self);
+    /// Force-terminate the stage (deadline abort): unpark everything,
+    /// stop orderly completion. Default: no-op — a stage without threads
+    /// of its own has nothing to abort.
+    fn abort(&self) {}
+    /// The stage's panic/loss audit, when it keeps one. The controller
+    /// tails it for [`ControlEvent::Fault`](crate::telemetry::ControlEvent)
+    /// emission and the scheduler folds it into the run report.
+    fn fault_log(&self) -> Option<Arc<StageFaultLog>> {
+        None
+    }
     /// Install a core-affinity pin covering this stage's worker threads
     /// (present and future). Default: no-op — a stage without threads of
     /// its own has nothing to pin.
@@ -475,6 +717,12 @@ impl<T: Send + 'static, U: Send + 'static> ElasticStage for ReplicaSet<T, U> {
     }
     fn join_workers(&self) {
         ReplicaSet::join_workers(self)
+    }
+    fn abort(&self) {
+        ReplicaSet::abort(self)
+    }
+    fn fault_log(&self) -> Option<Arc<StageFaultLog>> {
+        Some(self.faults.clone())
     }
     fn install_pin(&self, pin: Arc<ThreadPin>) {
         ReplicaSet::install_pin(self, pin)
@@ -556,6 +804,14 @@ impl<T: Send + 'static, U: Send + 'static> SplitKernel<T, U> {
     fn route(&mut self, mut tagged: Tagged<T>) {
         let mut misses = 0usize;
         loop {
+            if self.set.aborted() {
+                // Force-terminated run: every lane is poisoned, so there
+                // is nowhere left to deliver. The item was already
+                // consumed from upstream — audit it as lost instead of
+                // spinning on dead lanes forever.
+                self.set.faults().lose_seq(tagged.seq);
+                return;
+            }
             self.reload_if_stale();
             let n = self.lanes.len();
             if n == 0 {
@@ -644,6 +900,12 @@ pub struct MergeKernel<T: Send + 'static, U: Send + 'static> {
     scratch: Vec<Tagged<U>>,
     /// In-order emission scratch.
     emit: Vec<U>,
+    /// Sequence numbers audited as lost (panicked mid-process or dropped
+    /// by an escalated lane); the in-order emitter skips them so a fault
+    /// never wedges the reorder buffer.
+    lost: BTreeSet<u64>,
+    /// Incremental-read cursor into the stage fault log's lost-seq list.
+    lost_cursor: usize,
 }
 
 /// Items the merger drains per lane per sweep iteration.
@@ -661,6 +923,8 @@ impl<T: Send + 'static, U: Send + 'static> MergeKernel<T, U> {
             seen_gen: u64::MAX,
             scratch: Vec::with_capacity(MERGE_BATCH),
             emit: Vec::new(),
+            lost: BTreeSet::new(),
+            lost_cursor: 0,
         }
     }
 
@@ -687,8 +951,28 @@ impl<T: Send + 'static, U: Send + 'static> Kernel for MergeKernel<T, U> {
     }
 
     fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.set.aborted() {
+            // Force-terminated run: downstream is being torn down, so
+            // anything still buffered here is audited as lost rather than
+            // silently dropped.
+            for Reverse(e) in self.heap.drain() {
+                self.set.faults().lose_seq(e.seq);
+            }
+            return KernelStatus::Done;
+        }
         self.adopt_lanes(false);
         let mut progressed = false;
+
+        // Pick up sequence numbers the supervisor audited as lost (a lane
+        // panicked mid-item, or an escalated lane drained its backlog).
+        // Without this the reorder buffer would wait forever for a seq
+        // that can no longer arrive.
+        let (newly_lost, cursor) = self.set.faults().lost_from(self.lost_cursor);
+        self.lost_cursor = cursor;
+        if !newly_lost.is_empty() {
+            self.lost.extend(newly_lost);
+            progressed = true;
+        }
 
         // Sweep every live lane into the reorder buffer, batch-draining
         // each lane's out-queue (one head publish per batch).
@@ -720,21 +1004,33 @@ impl<T: Send + 'static, U: Send + 'static> Kernel for MergeKernel<T, U> {
         }
         self.scratch = scratch;
 
-        // Emit the in-order prefix downstream as one batched push.
+        // Emit the in-order prefix downstream as one batched push. Lost
+        // sequence numbers count as "arrived" (they never will), so one
+        // faulted item cannot dam the stream behind it.
         let out = ctx.output::<U>(0).expect("merge needs output port 0");
         let mut emit = std::mem::take(&mut self.emit);
-        while self.heap.peek().map(|Reverse(e)| e.seq)
-            == Some(self.next_seq + emit.len() as u64)
-        {
-            let Reverse(e) = self.heap.pop().expect("peeked entry");
-            emit.push(e.item);
+        let mut advanced = 0u64;
+        loop {
+            let expected = self.next_seq + advanced;
+            if self.lost.remove(&expected) {
+                advanced += 1;
+                continue;
+            }
+            if self.heap.peek().map(|Reverse(e)| e.seq) == Some(expected) {
+                let Reverse(e) = self.heap.pop().expect("peeked entry");
+                emit.push(e.item);
+                advanced += 1;
+                continue;
+            }
+            break;
         }
-        if !emit.is_empty() {
-            let n = emit.len() as u64;
-            if out.push_iter(emit.drain(..)).is_err() {
+        if advanced > 0 {
+            if !emit.is_empty() && out.push_iter(emit.drain(..)).is_err() {
+                emit.clear();
+                self.emit = emit;
                 return KernelStatus::Done;
             }
-            self.next_seq += n;
+            self.next_seq += advanced;
             progressed = true;
         }
         self.emit = emit;
@@ -779,6 +1075,7 @@ mod tests {
             policy: ElasticPolicy { min_replicas: 1, max_replicas: max, ..Default::default() },
             initial_replicas: initial,
             lane_capacity,
+            ..Default::default()
         };
         ReplicaSet::new("mul", cfg, |_i| Box::new(Mul(3)) as Box<dyn Replicable<In = u64, Out = u64>>)
             .unwrap()
@@ -887,6 +1184,7 @@ mod tests {
             policy: ElasticPolicy { min_replicas: 1, max_replicas: 1, ..Default::default() },
             initial_replicas: 1,
             lane_capacity: 4,
+            ..Default::default()
         };
         let set = ReplicaSet::new("gated", cfg, move |_| {
             Box::new(Gated(g2.clone())) as Box<dyn Replicable<In = u64, Out = u64>>
@@ -1019,5 +1317,138 @@ mod tests {
             count += 1;
         }
         assert_eq!(count, 300);
+    }
+
+    #[test]
+    fn backoff_is_exponential_with_cap() {
+        let p = SupervisorPolicy {
+            restart_budget: 3,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(40),
+        };
+        assert_eq!(p.backoff_for(0), Duration::from_millis(5));
+        assert_eq!(p.backoff_for(1), Duration::from_millis(10));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(20));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(40));
+        assert_eq!(p.backoff_for(30), Duration::from_millis(40), "capped");
+        assert_eq!(p.backoff_for(u32::MAX), Duration::from_millis(40), "no shift overflow");
+    }
+
+    /// Passes items through, panicking exactly when it sees `trip`.
+    /// A respawned worker never sees `trip` again (the item was consumed
+    /// by the dying incarnation), so one fault costs exactly one item.
+    struct PanicOn(u64);
+    impl Replicable for PanicOn {
+        type In = u64;
+        type Out = u64;
+        fn process(&mut self, item: u64) -> u64 {
+            if item == self.0 {
+                panic!("boom at {item}");
+            }
+            item
+        }
+    }
+
+    fn panicky_set(budget: u32, trip: u64) -> Arc<ReplicaSet<u64, u64>> {
+        let cfg = ElasticStageConfig {
+            policy: ElasticPolicy::pinned(1),
+            initial_replicas: 1,
+            lane_capacity: 256,
+            supervisor: SupervisorPolicy {
+                restart_budget: budget,
+                backoff_base: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(4),
+            },
+        };
+        ReplicaSet::new("panicky", cfg, move |_| {
+            Box::new(PanicOn(trip)) as Box<dyn Replicable<In = u64, Out = u64>>
+        })
+        .unwrap()
+    }
+
+    /// Drive a full split → lane → merge pass over `0..n` and return what
+    /// came out downstream (in order).
+    fn drive(set: &Arc<ReplicaSet<u64, u64>>, n: u64) -> Vec<u64> {
+        let mut split = SplitKernel::new(set.clone());
+        let mut merge = MergeKernel::new(set.clone());
+        let (upq, _uh) = instrumented::<u64>(&StreamConfig::default().with_capacity(1024));
+        let (downq, _dh) = instrumented::<u64>(&StreamConfig::default().with_capacity(1024));
+        for i in 0..n {
+            upq.try_push(i).unwrap();
+        }
+        upq.close();
+        let mut split_ctx =
+            KernelContext::new(vec![Box::new(InputPort::new(upq.clone()))], vec![]);
+        let mut merge_ctx =
+            KernelContext::new(vec![], vec![Box::new(OutputPort::new(downq.clone()))]);
+        while split.run(&mut split_ctx) != KernelStatus::Done {}
+        loop {
+            match merge.run(&mut merge_ctx) {
+                KernelStatus::Done => break,
+                KernelStatus::Stall => std::thread::yield_now(),
+                KernelStatus::Continue => {}
+            }
+        }
+        set.join_workers();
+        let mut got = Vec::new();
+        while let PopResult::Item(v) = downq.try_pop() {
+            got.push(v);
+        }
+        got
+    }
+
+    #[test]
+    fn panicked_lane_restarts_and_audits_the_lost_item() {
+        let n = 100u64;
+        let set = panicky_set(2, 13);
+        let got = drive(&set, n);
+
+        // Exactly the tripping item is missing; order is preserved and the
+        // merger did not wedge waiting for seq 13.
+        let want: Vec<u64> = (0..n).filter(|&v| v != 13).collect();
+        assert_eq!(got, want, "one lost item, everything else in order");
+
+        // Conservation is audited, not silent.
+        assert_eq!(set.faults().items_lost(), 1);
+        let (lost, _) = set.faults().lost_from(0);
+        assert_eq!(lost, vec![13]);
+        let recs = set.faults().snapshot();
+        assert_eq!(recs.len(), 1, "one panic, one record");
+        assert_eq!(recs[0].lane, Some(0));
+        assert_eq!(recs[0].restarts, 0);
+        assert!(!recs[0].escalated, "budget 2 means first panic restarts");
+        assert_eq!(recs[0].message, "boom at 13");
+        assert_eq!(got.len() as u64 + set.faults().items_lost(), n, "conservation");
+    }
+
+    #[test]
+    fn exhausted_budget_escalates_and_drains_backlog_as_audited_loss() {
+        let n = 64u64;
+        let set = panicky_set(0, 10); // first panic escalates immediately
+        let got = drive(&set, n);
+
+        // Items before the trip made it through; the trip and everything
+        // behind it were drained as audited loss (the splitter must never
+        // wedge feeding a dead lane).
+        assert_eq!(got, (0..10).collect::<Vec<u64>>());
+        assert_eq!(set.faults().items_lost(), n - 10);
+        let recs = set.faults().snapshot();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].escalated);
+        assert_eq!(got.len() as u64 + set.faults().items_lost(), n, "conservation");
+    }
+
+    #[test]
+    fn abort_releases_parked_workers_and_finishes_the_merge() {
+        let set = mul_set(2, 2, 16);
+        let mut merge = MergeKernel::new(set.clone());
+        let (downq, _dh) = instrumented::<u64>(&StreamConfig::default());
+        let mut merge_ctx =
+            KernelContext::new(vec![], vec![Box::new(OutputPort::new(downq))]);
+        set.abort();
+        assert!(set.aborted());
+        assert_eq!(merge.run(&mut merge_ctx), KernelStatus::Done);
+        // Must not hang: poisoned lane inqs unpark both workers.
+        set.join_workers();
     }
 }

@@ -80,6 +80,20 @@ impl From<xla::Error> for SfError {
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, SfError>;
 
+/// Extract a human-readable message from a panic payload.
+///
+/// `panic!("...")` carries `&'static str`, `panic!("{x}")` carries
+/// `String`; anything else (a custom `panic_any` value) is opaque.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +104,17 @@ mod tests {
         assert!(SfError::Json { offset: 3, message: "bad".into() }
             .to_string()
             .contains("byte 3"));
+    }
+
+    #[test]
+    fn panic_message_downcasts() {
+        let payload = std::panic::catch_unwind(|| panic!("static str")).unwrap_err();
+        assert_eq!(panic_message(payload.as_ref()), "static str");
+        let n = 7;
+        let payload = std::panic::catch_unwind(|| panic!("formatted {n}")).unwrap_err();
+        assert_eq!(panic_message(payload.as_ref()), "formatted 7");
+        let payload = std::panic::catch_unwind(|| std::panic::panic_any(42u32)).unwrap_err();
+        assert_eq!(panic_message(payload.as_ref()), "opaque panic payload");
     }
 
     #[test]

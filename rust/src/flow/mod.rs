@@ -124,7 +124,9 @@
 
 use std::marker::PhantomData;
 
-use crate::elastic::{ElasticConfig, ElasticStageConfig, Replicable};
+use crate::elastic::{
+    ElasticConfig, ElasticStageConfig, Replicable, ShedBinding, ShedControl,
+};
 use crate::kernel::Kernel;
 use crate::monitor::MonitorConfig;
 use crate::placement::PlacementPolicy;
@@ -616,6 +618,24 @@ pub struct RunOptions {
     /// Live telemetry exporters (`/metrics` endpoint, JSONL event tail).
     /// Default: all off — the run pays nothing.
     pub telemetry: TelemetryConfig,
+    /// Wall-clock bound on the whole run. On expiry every stream edge is
+    /// poisoned and replicable stages abort, so blocked threads unpark
+    /// into a terminal state and [`Session::run`] returns a *partial*
+    /// [`RunReport`] with
+    /// [`deadline_hit`](crate::scheduler::RunReport::deadline_hit) set
+    /// and the abort recorded in
+    /// [`faults`](crate::scheduler::RunReport::faults). `None` (default):
+    /// run to completion.
+    pub deadline: Option<std::time::Duration>,
+    /// Degradation knobs for adaptive load shedding: register the
+    /// [`ShedControl`](crate::elastic::ShedControl) of each sheddable
+    /// source (e.g. [`PacedProducer::with_shedding`]) and the elastic
+    /// controller will raise/lower their level when the worker-budget
+    /// gate pins an overloaded stage. Shed totals land in the report and
+    /// the Prometheus gauges. Default: empty (no shedding).
+    ///
+    /// [`PacedProducer::with_shedding`]: crate::workload::PacedProducer::with_shedding
+    pub shedders: Vec<ShedBinding>,
 }
 
 impl Default for RunOptions {
@@ -626,6 +646,8 @@ impl Default for RunOptions {
             stream_defaults: None,
             placement: PlacementPolicy::Disabled,
             telemetry: TelemetryConfig::default(),
+            deadline: None,
+            shedders: Vec::new(),
         }
     }
 }
@@ -659,6 +681,23 @@ impl RunOptions {
         self.telemetry = telemetry;
         self
     }
+
+    /// Bound the run's wall clock (see [`RunOptions::deadline`]).
+    pub fn with_deadline(mut self, deadline: std::time::Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Register a sheddable source's degradation knob with the control
+    /// plane (see [`RunOptions::shedders`]).
+    pub fn with_shedder(
+        mut self,
+        label: impl Into<String>,
+        control: std::sync::Arc<ShedControl>,
+    ) -> Self {
+        self.shedders.push(ShedBinding { label: label.into(), control });
+        self
+    }
 }
 
 /// The unified run entry point: validates, spawns kernels + monitors
@@ -686,6 +725,8 @@ impl Session {
             forced,
             opts.placement,
             &opts.telemetry,
+            opts.deadline,
+            opts.shedders.clone(),
         )
     }
 

@@ -85,7 +85,9 @@ pub use error::{Result, SfError};
 
 /// Convenience re-exports for application authors.
 pub mod prelude {
-    pub use crate::elastic::{ElasticPolicy, ElasticStageConfig, Replicable};
+    pub use crate::elastic::{
+        ElasticPolicy, ElasticStageConfig, Replicable, ShedControl, SupervisorPolicy,
+    };
     pub use crate::error::{Result, SfError};
     pub use crate::estimator::{EstimatorConfig, RateEstimate};
     pub use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session, StageIo};

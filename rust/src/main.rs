@@ -41,7 +41,9 @@ fn main() {
                 "usage: streamflow <probe|microbench|dualphase|matmul|rabinkarp|artifacts> \
                  [--key value]...\n\
                  telemetry: [--metrics-addr HOST:PORT] [--events-jsonl PATH] \
-                 [--trace-out PATH]"
+                 [--trace-out PATH]\n\
+                 fault tolerance (matmul/rabinkarp): [--deadline SECS] [--shed] \
+                 [--restart-budget N]"
             );
             2
         }
@@ -235,7 +237,47 @@ fn app_run_options(args: &Args, default_pool: usize) -> Option<RunOptions> {
     if args.has_flag("pin") {
         opts.placement = PlacementPolicy::Pack;
     }
+    // --deadline <secs>: force-terminate the run and return the partial
+    // report (see RunOptions::deadline).
+    if let Some(spec) = args.options.get("deadline") {
+        match spec.parse::<f64>() {
+            Ok(secs) if secs > 0.0 && secs.is_finite() => {
+                opts.deadline = Some(Duration::from_secs_f64(secs));
+            }
+            _ => {
+                eprintln!("error: --deadline: expected positive seconds, got '{spec}'");
+                return None;
+            }
+        }
+    }
+    // --shed: register a degradation knob on the app's source; the
+    // controller raises the level when the budget gate pins a stage.
+    if args.has_flag("shed") {
+        opts = opts.with_shedder("source", ShedControl::new());
+    }
     Some(opts)
+}
+
+fn report_faults(report: &RunReport) {
+    if report.deadline_hit {
+        println!("  DEADLINE HIT: topology force-closed; totals below are partial");
+    }
+    for f in &report.faults {
+        let lane = f.lane.map(|l| format!(" lane {l}")).unwrap_or_default();
+        println!(
+            "  fault: {}{lane} — {} (restarts {}, {})",
+            f.target,
+            f.message,
+            f.restarts,
+            if f.escalated { "escalated" } else { "recovered" }
+        );
+    }
+    if report.items_lost > 0 || report.items_shed > 0 {
+        println!(
+            "  items lost {} / shed {} (degradation level {})",
+            report.items_lost, report.items_shed, report.shed_level
+        );
+    }
 }
 
 fn report_scaling(report: &RunReport) {
@@ -263,6 +305,7 @@ fn cmd_matmul(args: &Args) -> i32 {
     cfg.n = args.get_or("n", cfg.n).unwrap_or(cfg.n);
     cfg.dot_kernels = args.get_or("dots", cfg.dot_kernels).unwrap_or(cfg.dot_kernels);
     cfg.use_xla = args.has_flag("xla");
+    cfg.dot_tuning.restart_budget = args.options.get("restart-budget").and_then(|s| s.parse().ok());
     // Elastic by default; `--static` reproduces the paper's fixed fan-out.
     if args.has_flag("static") {
         cfg.static_degree = Some(cfg.dot_kernels);
@@ -283,6 +326,7 @@ fn cmd_matmul(args: &Args) -> i32 {
             );
             report_rates(&run.report, "matmul");
             report_scaling(&run.report);
+            report_faults(&run.report);
             trace_out(args, &run.report);
             0
         }
@@ -298,6 +342,9 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
     cfg.corpus_bytes = args.get_or("bytes", cfg.corpus_bytes).unwrap_or(cfg.corpus_bytes);
     cfg.hash_kernels = args.get_or("hash", cfg.hash_kernels).unwrap_or(cfg.hash_kernels);
     cfg.verify_kernels = args.get_or("verify", cfg.verify_kernels).unwrap_or(cfg.verify_kernels);
+    let budget = args.options.get("restart-budget").and_then(|s| s.parse().ok());
+    cfg.hash_tuning.restart_budget = budget;
+    cfg.verify_tuning.restart_budget = budget;
     // Elastic by default; `--static` reproduces the paper's fixed mesh.
     if args.has_flag("static") {
         cfg.static_degree = Some(cfg.hash_kernels);
@@ -316,6 +363,7 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
             );
             report_rates(&run.report, "rabinkarp");
             report_scaling(&run.report);
+            report_faults(&run.report);
             trace_out(args, &run.report);
             0
         }

@@ -126,7 +126,7 @@ impl ThreadPin {
             }
             Err(reason) => {
                 self.denied.fetch_add(1, Ordering::Relaxed);
-                let mut n = self.note.lock().unwrap();
+                let mut n = self.note.lock().unwrap_or_else(|e| e.into_inner());
                 if n.is_none() {
                     *n = Some(reason);
                 }
@@ -147,7 +147,7 @@ impl ThreadPin {
 
     /// First failure reason, if any attempt failed.
     pub fn note(&self) -> Option<String> {
-        self.note.lock().unwrap().clone()
+        self.note.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 }
 

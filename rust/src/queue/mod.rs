@@ -91,6 +91,12 @@ pub trait MonitorHandle: Send + Sync {
     }
     /// Producer has closed the stream.
     fn is_closed(&self) -> bool;
+    /// Force-terminate the stream because a peer died: close + wake both
+    /// ends, with the terminal state recorded as poisoned (fault), not
+    /// finished. Used by panic isolation and the deadline watchdog.
+    fn poison(&self);
+    /// Stream was closed by a fault rather than by completion.
+    fn is_poisoned(&self) -> bool;
 }
 
 impl<T: Send> MonitorHandle for SpscQueue<T> {
@@ -108,6 +114,12 @@ impl<T: Send> MonitorHandle for SpscQueue<T> {
     }
     fn is_closed(&self) -> bool {
         SpscQueue::is_closed(self)
+    }
+    fn poison(&self) {
+        SpscQueue::poison(self)
+    }
+    fn is_poisoned(&self) -> bool {
+        SpscQueue::is_poisoned(self)
     }
 }
 

@@ -138,7 +138,8 @@ impl Waiter {
     /// unnoticed (SeqCst on the flag narrows the classic store-buffer
     /// race; the park timeout bounds whatever remains).
     fn prepare(&self) {
-        *self.thread.lock().unwrap() = Some(std::thread::current());
+        *self.thread.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(std::thread::current());
         self.parked.store(true, Ordering::SeqCst);
     }
 
@@ -158,7 +159,9 @@ impl Waiter {
     #[cold]
     fn wake_slow(&self) {
         if self.parked.swap(false, Ordering::SeqCst) {
-            if let Some(t) = self.thread.lock().unwrap().take() {
+            // A panicked peer may have poisoned the mutex mid-park; the
+            // thread handle inside is still perfectly usable.
+            if let Some(t) = self.thread.lock().unwrap_or_else(|e| e.into_inner()).take() {
                 t.unpark();
             }
         }
@@ -231,6 +234,13 @@ pub struct SpscQueue<T> {
     capacity: AtomicUsize,
     /// Stream closed (producer- or control-plane-set).
     closed: AtomicBool,
+    /// Stream poisoned: closed *because a peer died* (kernel panic,
+    /// deadline abort) rather than because the producer finished. The
+    /// flag refines `closed` — every poisoned queue is also closed, so
+    /// blocked ends unpark through the ordinary close protocol — and
+    /// lets the scheduler audit items stranded in the queue as *lost*
+    /// instead of merely undelivered.
+    poisoned: AtomicBool,
     /// Producer's park state (woken by consumer pops).
     prod_waiter: CachePadded<Waiter>,
     /// Consumer's park state (woken by producer pushes and by close).
@@ -285,6 +295,7 @@ impl<T: Send> SpscQueue<T> {
             })),
             capacity: AtomicUsize::new(capacity),
             closed: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
             prod_waiter: CachePadded::new(Waiter::new()),
             cons_waiter: CachePadded::new(Waiter::new()),
             counters: QueueCounters::new(item_bytes),
@@ -346,6 +357,24 @@ impl<T: Send> SpscQueue<T> {
         self.closed.store(true, Ordering::Release);
         self.prod_waiter.wake();
         self.cons_waiter.wake();
+    }
+
+    /// Poison the stream: a terminal state distinct from a clean close,
+    /// set when a peer kernel panicked or the run was force-terminated.
+    /// Mechanically it *is* a close — both ends unpark immediately, the
+    /// producer gets `PushError::Closed` back, the consumer drains and
+    /// then sees `Closed` — but `is_poisoned()` stays true so teardown
+    /// can tell "finished" from "died" and audit stranded items as lost.
+    /// Idempotent; poisoning an already-closed queue just sets the flag.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        self.close();
+    }
+
+    /// Was this stream poisoned (closed by a fault, not by completion)?
+    #[inline]
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
     }
 
     /// Write `v` into the next unpublished slot, growing the segment
@@ -764,6 +793,43 @@ mod tests {
         assert_eq!(q.try_pop(), PopResult::Closed);
         assert_eq!(q.pop(), None);
         assert!(q.is_finished());
+    }
+
+    #[test]
+    fn poison_is_a_close_with_a_verdict() {
+        let q = SpscQueue::new(8, 8);
+        q.try_push(1u64).unwrap();
+        assert!(!q.is_poisoned());
+        q.poison();
+        // Poison behaves exactly like close on the data path…
+        assert!(q.is_closed());
+        assert!(matches!(q.try_push(2), Err(PushError::Closed(_))));
+        assert_eq!(q.try_pop(), PopResult::Item(1));
+        assert_eq!(q.try_pop(), PopResult::Closed);
+        // …but the terminal verdict is distinguishable.
+        assert!(q.is_poisoned());
+        // Idempotent, and a plain close never sets it.
+        q.poison();
+        assert!(q.is_poisoned());
+        let q2 = SpscQueue::<u64>::new(8, 8);
+        q2.close();
+        assert!(!q2.is_poisoned());
+    }
+
+    #[test]
+    fn poison_unparks_both_ends() {
+        let q = Arc::new(SpscQueue::<u64>::new(1, 8));
+        q.try_push(0).unwrap();
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || qp.push(1));
+        let q2 = Arc::new(SpscQueue::<u64>::new(1, 8));
+        let qc = q2.clone();
+        let cons = std::thread::spawn(move || qc.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.poison();
+        q2.poison();
+        assert!(matches!(prod.join().unwrap(), Err(PushError::Closed(1))));
+        assert_eq!(cons.join().unwrap(), None);
     }
 
     #[test]

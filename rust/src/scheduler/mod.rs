@@ -19,11 +19,13 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::elastic::{
-    ElasticConfig, ElasticController, ElasticEvent, StageBinding, StageTrajectory,
-    StreamBinding,
+    ElasticConfig, ElasticController, ElasticEvent, FaultRecord, ShedBinding,
+    StageBinding, StageFaultLog, StageTrajectory, StreamBinding,
 };
+use crate::error::panic_message;
 use crate::estimator::RateEstimate;
 use crate::kernel::{KernelContext, KernelStatus};
 use crate::monitor::{MonitorConfig, MonitorEvent, QueueEnd, QueueMonitor};
@@ -90,6 +92,25 @@ pub struct RunReport {
     /// holds — audited here and as `sf_events_dropped_total`, never
     /// silently truncated.
     pub events_dropped: u64,
+    /// Supervision faults captured during the run, in timestamp order:
+    /// lane panics (with restart/escalation state), kernel-thread panics,
+    /// and the deadline abort. Empty on a healthy run.
+    pub faults: Vec<FaultRecord>,
+    /// Items audited as lost to faults: panicked mid-process, drained by
+    /// an escalated lane, or stranded in a poisoned stream. Conservation
+    /// holds as `items delivered + items_lost (+ items_shed at the
+    /// source) == items offered` — loss is always explicit, never silent.
+    pub items_lost: u64,
+    /// Items deliberately dropped by degraded (shedding) sources — the
+    /// other audited term of the conservation equation.
+    pub items_shed: u64,
+    /// Highest degradation level in force at the end of the run
+    /// (0 = full fidelity).
+    pub shed_level: u8,
+    /// The run was force-terminated by [`RunOptions::deadline`]
+    /// (crate::flow::RunOptions::deadline) before the topology drained;
+    /// every total in this report describes the partial run.
+    pub deadline_hit: bool,
 }
 
 /// Fraction of a run one stream spent blocked, per end.
@@ -200,6 +221,7 @@ impl RunReport {
 /// (The pre-0.4 `Scheduler::with_monitoring(..).with_elastic(..)` shim
 /// surface is gone — [`crate::flow::RunOptions`] is the one way to
 /// configure a run.)
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn execute(
     topo: &mut Topology,
     monitor_cfg: &MonitorConfig,
@@ -207,6 +229,8 @@ pub(crate) fn execute(
     elastic_forced: bool,
     placement: PlacementPolicy,
     telemetry: &TelemetryConfig,
+    deadline: Option<Duration>,
+    shedders: Vec<ShedBinding>,
 ) -> Result<RunReport> {
     topo.validate()?;
     let time = TimeRef::new();
@@ -311,6 +335,21 @@ pub(crate) fn execute(
         _ => None,
     };
 
+    // ---- panic isolation plumbing ------------------------------------
+    // Per-kernel stream handles so a panicking kernel thread can poison
+    // every edge it touches on its way down — peers parked on those
+    // queues unpark into the terminal state instead of hanging — plus a
+    // run-level fault sink for the structured panic records.
+    let mut input_handles: HashMap<usize, Vec<Arc<dyn crate::queue::MonitorHandle>>> =
+        HashMap::new();
+    let mut output_handles: HashMap<usize, Vec<Arc<dyn crate::queue::MonitorHandle>>> =
+        HashMap::new();
+    for e in topo.streams.iter() {
+        input_handles.entry(e.dst.0).or_default().push(e.monitor.clone());
+        output_handles.entry(e.src.0).or_default().push(e.monitor.clone());
+    }
+    let run_faults = Arc::new(StageFaultLog::new());
+
     // ---- assemble per-kernel contexts --------------------------------
     let mut kernel_threads = Vec::new();
     let mut closers: Vec<Vec<Box<dyn crate::port::PortCloser>>> = Vec::new();
@@ -384,6 +423,9 @@ pub(crate) fn execute(
         if let (Some(ring), Some(shared)) = (&tel_ring, &tel_shared) {
             ctl.attach_telemetry(ring.clone(), shared.clone());
         }
+        if !shedders.is_empty() {
+            ctl.attach_shedders(shedders.clone());
+        }
         let t = std::thread::Builder::new()
             .name("sf-elastic".into())
             .spawn(move || ctl.run(rx))
@@ -402,6 +444,10 @@ pub(crate) fn execute(
         // A stage's Split/Merge kernels share their lanes' cpu set, so
         // the whole stage stays co-located.
         let pin = kernel_pins.get(&idx).cloned();
+        let in_handles = input_handles.get(&idx).cloned().unwrap_or_default();
+        let out_handles = output_handles.get(&idx).cloned().unwrap_or_default();
+        let fault_sink = run_faults.clone();
+        let fault_name = name.clone();
         kernel_threads.push(
             std::thread::Builder::new()
                 .name(format!("sf-k-{name}"))
@@ -409,16 +455,39 @@ pub(crate) fn execute(
                     if let Some(p) = &pin {
                         p.pin_self();
                     }
-                    kernel.on_start(&mut ctx);
-                    loop {
-                        match kernel.run(&mut ctx) {
-                            KernelStatus::Continue => {}
-                            KernelStatus::Stall => std::thread::yield_now(),
-                            KernelStatus::Done => break,
+                    let outcome =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            kernel.on_start(&mut ctx);
+                            loop {
+                                match kernel.run(&mut ctx) {
+                                    KernelStatus::Continue => {}
+                                    KernelStatus::Stall => std::thread::yield_now(),
+                                    KernelStatus::Done => break,
+                                }
+                            }
+                            kernel.on_stop(&mut ctx);
+                        }));
+                    if let Err(payload) = outcome {
+                        // Panic isolation: poison every stream this
+                        // kernel touches so parked peers unpark into a
+                        // terminal verdict instead of hanging, and turn
+                        // the payload into a structured fault record.
+                        // Items stranded in the poisoned queues are
+                        // audited at report time (pushes − pops).
+                        for h in in_handles.iter().chain(out_handles.iter()) {
+                            h.poison();
                         }
+                        fault_sink.record(FaultRecord {
+                            at_ns: TimeRef::new().now_ns(),
+                            target: fault_name,
+                            lane: None,
+                            restarts: 0,
+                            escalated: true,
+                            message: panic_message(payload.as_ref()),
+                        });
                     }
-                    kernel.on_stop(&mut ctx);
-                    // Close downstream streams so consumers terminate.
+                    // Close downstream streams so consumers terminate
+                    // (idempotent after a poison on the panic path).
                     for c in &kernel_closers {
                         c.close_port();
                     }
@@ -427,8 +496,63 @@ pub(crate) fn execute(
         );
     }
 
-    for t in kernel_threads {
-        t.join().map_err(|_| SfError::Scheduler("kernel thread panicked".into()))?;
+    // ---- join the compute phase --------------------------------------
+    // Without a deadline this is a plain join (kernel panics are caught
+    // inside the threads above, so a join error here is exceptional).
+    // With a deadline we poll instead: on expiry every stream edge is
+    // poisoned and the elastic stages abort, unparking whatever is
+    // blocked; threads that still refuse to exit (wedged outside queue
+    // waits) are detached after a short grace rather than hanging the
+    // session — the report comes back partial, with the abort audited.
+    let mut deadline_hit = false;
+    match deadline {
+        None => {
+            for t in kernel_threads {
+                t.join().map_err(|payload| {
+                    SfError::Scheduler(format!(
+                        "kernel thread panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                })?;
+            }
+        }
+        Some(limit) => {
+            let expiry = Instant::now() + limit;
+            let mut pending = kernel_threads;
+            while !pending.is_empty() && Instant::now() < expiry {
+                pending.retain(|t| !t.is_finished());
+                if pending.is_empty() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            pending.retain(|t| !t.is_finished());
+            if !pending.is_empty() {
+                deadline_hit = true;
+                for edge in topo.streams.iter() {
+                    edge.monitor.poison();
+                }
+                for decl in &topo.elastic {
+                    decl.stage.abort();
+                }
+                run_faults.record(FaultRecord {
+                    at_ns: time.now_ns(),
+                    target: "session".into(),
+                    lane: None,
+                    restarts: 0,
+                    escalated: true,
+                    message: format!("deadline {limit:?} exceeded; topology force-closed"),
+                });
+                let grace = Instant::now() + Duration::from_millis(500);
+                while !pending.is_empty() && Instant::now() < grace {
+                    pending.retain(|t| !t.is_finished());
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                // Whatever remains is stuck somewhere the poison cannot
+                // reach (e.g. sleeping inside a kernel body): detach.
+                drop(pending);
+            }
+        }
     }
     // Replica workers exit once their stage's splitter closed; join
     // them before declaring the compute phase over.
@@ -440,7 +564,12 @@ pub(crate) fn execute(
     // ---- stop monitors, then the controller, drain events ------------
     stop.store(true, Ordering::Relaxed);
     for t in monitor_threads {
-        t.join().map_err(|_| SfError::Scheduler("monitor thread panicked".into()))?;
+        t.join().map_err(|payload| {
+            SfError::Scheduler(format!(
+                "monitor thread panicked: {}",
+                panic_message(payload.as_ref())
+            ))
+        })?;
     }
     ctl_stop.store(true, Ordering::Relaxed);
     #[allow(clippy::type_complexity)]
@@ -449,7 +578,7 @@ pub(crate) fn execute(
         replica_trajectories,
         budget_timeline,
         ctl_notes,
-        control_events,
+        mut control_events,
         events_dropped,
     ): (
         Vec<ElasticEvent>,
@@ -460,9 +589,12 @@ pub(crate) fn execute(
         u64,
     ) = match ctl_thread {
         Some(t) => {
-            let outcome = t
-                .join()
-                .map_err(|_| SfError::Scheduler("elastic controller panicked".into()))?;
+            let outcome = t.join().map_err(|payload| {
+                SfError::Scheduler(format!(
+                    "elastic controller panicked: {}",
+                    panic_message(payload.as_ref())
+                ))
+            })?;
             (
                 outcome.events,
                 outcome.trajectories,
@@ -477,6 +609,34 @@ pub(crate) fn execute(
             (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), dropped)
         }
     };
+    // Kernel-level faults (panics, the deadline abort) reach the
+    // structured journal here: the controller only tails *stage* fault
+    // logs live, and with it joined this thread is the ring's sole
+    // producer. They are appended to the report's event journal too so
+    // the Perfetto export sees them.
+    let run_fault_records = run_faults.snapshot();
+    for rec in &run_fault_records {
+        let ev = ControlEvent::Fault {
+            at_ns: rec.at_ns,
+            target: rec.target.clone(),
+            lane: rec.lane,
+            restarts: rec.restarts,
+            escalated: rec.escalated,
+            message: rec.message.clone(),
+        };
+        if let Some(ring) = &tel_ring {
+            ring.emit(ev.clone());
+        }
+        control_events.push(ev);
+    }
+    if let Some(ring) = &tel_ring {
+        if !run_fault_records.is_empty() {
+            ring.sync();
+        }
+    }
+    if let Some(shared) = &tel_shared {
+        shared.inc_faults(run_fault_records.len() as u64);
+    }
     // Producer (the controller) has stopped: the tail's final drain is
     // complete, and the last scrape window closes after it.
     if let Some(tail) = jsonl_tail {
@@ -548,6 +708,34 @@ pub(crate) fn execute(
             write_frac: (c.total_write_blocked_ns() as f64 / wall).min(1.0),
         });
     }
+    // ---- fault & degradation accounting ------------------------------
+    // One merged, time-ordered fault history (kernel panics + deadline
+    // from the run-level sink, lane panics from each stage's log), and
+    // the two audited loss terms of the conservation equation:
+    //   delivered + items_lost + items_shed == offered.
+    // `items_lost` sums per-item audits (lane losses) with the items
+    // stranded in poisoned streams (pushed, never popped — both peers
+    // are gone, so these lifetime counters are final).
+    let mut faults = run_fault_records;
+    let mut items_lost: u64 = 0;
+    for decl in &topo.elastic {
+        if let Some(log) = decl.stage.fault_log() {
+            faults.extend(log.snapshot());
+            items_lost += log.items_lost();
+        }
+    }
+    faults.sort_by_key(|r| r.at_ns);
+    for edge in topo.streams() {
+        if edge.monitor.is_poisoned() {
+            let c = edge.monitor.counters();
+            items_lost += c.total_pushes().saturating_sub(c.total_pops());
+        }
+    }
+    report.faults = faults;
+    report.items_lost = items_lost;
+    report.items_shed = shedders.iter().map(|s| s.control.shed_total()).sum();
+    report.shed_level = shedders.iter().map(|s| s.control.level()).max().unwrap_or(0);
+    report.deadline_hit = deadline_hit;
     Ok(report)
 }
 

@@ -10,7 +10,10 @@
 //!   (spawns and retirements are visible as the span edges),
 //! * one **track per stream** carrying read/write **blocked spans**, and
 //! * **instant events** on the control-plane track for every scale,
-//!   resize, gate, budget change, note, and converged rate estimate.
+//!   resize, gate, budget change, note, converged rate estimate, and —
+//!   from the supervision layer — every **fault** (lane/kernel panic,
+//!   deadline abort) and **stall suspicion**, plus a **degradation-level
+//!   counter track** per shedding source.
 //!
 //! Timestamps are re-based so the earliest control-plane event is t=0;
 //! microsecond floats as the format requires.
@@ -302,6 +305,50 @@ pub fn trace_json(report: &RunReport) -> Json {
                             ("s", Json::Str("t".into())),
                             ("args", obj(vec![("note", Json::Str(note.clone()))])),
                         ],
+                    ));
+                }
+                ControlEvent::Fault { at_ns, target, lane, restarts, escalated, message } => {
+                    let mut args = vec![
+                        ("restarts", Json::Num(*restarts as f64)),
+                        ("escalated", Json::Bool(*escalated)),
+                        ("message", Json::Str(message.clone())),
+                    ];
+                    if let Some(lane) = lane {
+                        args.push(("lane", Json::Num(*lane as f64)));
+                    }
+                    events.push(event(
+                        &format!("{target} fault"),
+                        "i",
+                        us(*at_ns),
+                        TID_CONTROL,
+                        vec![("s", Json::Str("t".into())), ("args", obj(args))],
+                    ));
+                }
+                ControlEvent::StallSuspected { at_ns, stage, epochs } => {
+                    events.push(event(
+                        &format!("{stage} stall suspected"),
+                        "i",
+                        us(*at_ns),
+                        TID_CONTROL,
+                        vec![
+                            ("s", Json::Str("t".into())),
+                            ("args", obj(vec![("epochs", Json::Num(*epochs as f64))])),
+                        ],
+                    ));
+                }
+                ControlEvent::Shed { at_ns, target, level, shed_total } => {
+                    events.push(event(
+                        &format!("degradation {target}"),
+                        "C",
+                        us(*at_ns),
+                        TID_CONTROL,
+                        vec![(
+                            "args",
+                            obj(vec![
+                                ("level", Json::Num(*level as f64)),
+                                ("shed_total", Json::Num(*shed_total as f64)),
+                            ]),
+                        )],
                     ));
                 }
                 _ => {}

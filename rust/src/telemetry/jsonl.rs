@@ -22,6 +22,9 @@
 //! | `lane` | `stage`, `lane` (index), `event` (`spawn`\|`retire`) |
 //! | `blocked-span` | `stream` (label), `end` (`read`\|`write`), `dur_ns`; `at_ns` is the span **end** |
 //! | `rate-converged` | `stream` (numeric id), `end` (`head`\|`tail`), `mbps` |
+//! | `fault` | `target` (stage/kernel/`session`), `restarts`, `escalated` (bool), `message` (panic payload or abort reason); `lane` (index) on lane panics |
+//! | `stall-suspected` | `stage`, `epochs` (consecutive zero-progress control epochs) |
+//! | `shed` | `target` (source label), `level` (degradation level now in force), `shed_total` (lifetime items shed at this source) |
 //!
 //! The schema is additive: consumers must ignore unknown fields and
 //! unknown `type`s.

@@ -27,6 +27,9 @@
 //! | `sf_stage_mu_items_per_sec` | gauge | `stage` |
 //! | `sf_worker_budget` | gauge | — |
 //! | `sf_events_dropped_total` | counter | — |
+//! | `sf_faults_total` | counter | — |
+//! | `sf_degradation_level` | gauge | — |
+//! | `sf_items_shed_total` | counter | — |
 //! | `sf_build_info` | gauge | `version` |
 //!
 //! Conservation invariant (tested in `tests/telemetry.rs`): for every
@@ -74,6 +77,12 @@ pub struct MetricsShared {
     stages: Vec<StageGauges>,
     /// Latest converged rate per (stream, end), MB/s.
     rates: Mutex<BTreeMap<(usize, &'static str), f64>>,
+    /// Supervision faults observed (panics, escalations, deadline aborts).
+    faults: AtomicU64,
+    /// Highest degradation level currently in force across shedders.
+    shed_level: AtomicU64,
+    /// Lifetime items deliberately shed across all sources.
+    shed_total: AtomicU64,
 }
 
 impl std::fmt::Debug for MetricsShared {
@@ -91,7 +100,35 @@ impl MetricsShared {
             budget: AtomicI64::new(-1),
             stages: (0..num_stages).map(|_| StageGauges::new()).collect(),
             rates: Mutex::new(BTreeMap::new()),
+            faults: AtomicU64::new(0),
+            shed_level: AtomicU64::new(0),
+            shed_total: AtomicU64::new(0),
         })
+    }
+
+    /// Controller-side: count supervision faults as they are tailed.
+    pub fn inc_faults(&self, n: u64) {
+        self.faults.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Supervision faults observed so far.
+    pub fn faults_total(&self) -> u64 {
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    /// Controller-side: publish the degradation state (highest level in
+    /// force, lifetime shed count summed across sources).
+    pub fn set_shed(&self, level: u8, total: u64) {
+        self.shed_level.store(level as u64, Ordering::Relaxed);
+        self.shed_total.store(total, Ordering::Relaxed);
+    }
+
+    /// Current `(degradation level, items shed)`.
+    pub fn shed(&self) -> (u8, u64) {
+        (
+            self.shed_level.load(Ordering::Relaxed) as u8,
+            self.shed_total.load(Ordering::Relaxed),
+        )
     }
 
     /// Controller-side: publish the coordinated budget (`None` ⇒ unlimited).
@@ -129,11 +166,13 @@ impl MetricsShared {
             QueueEnd::Head => "head",
             QueueEnd::Tail => "tail",
         });
-        self.rates.lock().unwrap().insert(key, mbps);
+        // A scrape or tick must survive a panicked peer: take the data
+        // through the poison.
+        self.rates.lock().unwrap_or_else(|e| e.into_inner()).insert(key, mbps);
     }
 
     fn rates_snapshot(&self) -> BTreeMap<(usize, &'static str), f64> {
-        self.rates.lock().unwrap().clone()
+        self.rates.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 }
 
@@ -267,6 +306,18 @@ impl MetricsRegistry {
                 "Control-plane events lost to ring overflow (audited).", "counter");
             let _ = writeln!(out, "sf_events_dropped_total {}", ring.dropped());
         }
+
+        header(&mut out, "sf_faults_total",
+            "Supervision faults observed (panics, escalations, aborts).", "counter");
+        let _ = writeln!(out, "sf_faults_total {}", self.shared.faults_total());
+        let (level, shed) = self.shared.shed();
+        header(&mut out, "sf_degradation_level",
+            "Highest load-shedding level currently in force (0 = full fidelity).",
+            "gauge");
+        let _ = writeln!(out, "sf_degradation_level {level}");
+        header(&mut out, "sf_items_shed_total",
+            "Items deliberately dropped by degraded sources.", "counter");
+        let _ = writeln!(out, "sf_items_shed_total {shed}");
 
         header(&mut out, "sf_build_info", "Build metadata (constant 1).", "gauge");
         let _ = writeln!(out, "sf_build_info{{version=\"{}\"}} 1", crate::version());
@@ -408,6 +459,22 @@ mod tests {
         assert_eq!(shared.budget(), Some(6));
         shared.set_budget(None);
         assert_eq!(shared.budget(), None);
+    }
+
+    #[test]
+    fn fault_and_shed_metrics_render_from_zero() {
+        let reg = MetricsRegistry::standalone();
+        let text = reg.render();
+        assert!(text.contains("sf_faults_total 0"), "{text}");
+        assert!(text.contains("sf_degradation_level 0"), "{text}");
+        assert!(text.contains("sf_items_shed_total 0"), "{text}");
+        reg.shared().inc_faults(2);
+        reg.shared().set_shed(3, 4096);
+        let text = reg.render();
+        assert!(text.contains("sf_faults_total 2"), "{text}");
+        assert!(text.contains("sf_degradation_level 3"), "{text}");
+        assert!(text.contains("sf_items_shed_total 4096"), "{text}");
+        assert_eq!(reg.shared().shed(), (3, 4096));
     }
 
     #[test]

@@ -94,6 +94,27 @@ pub enum ControlEvent {
     BlockedSpan { at_ns: u64, label: String, end: BlockEnd, dur_ns: u64 },
     /// A monitor estimate converged for one stream end.
     RateConverged { at_ns: u64, stream: StreamId, end: QueueEnd, mbps: f64 },
+    /// A kernel or replica lane panicked (or the run was force-closed).
+    /// `lane` is `None` for plain (non-elastic) kernels and for
+    /// run-level faults such as a deadline abort; `restarts` counts
+    /// supervised respawns consumed so far; `escalated` marks the
+    /// budget-exhausted transition to stage failure.
+    Fault {
+        at_ns: u64,
+        target: String,
+        lane: Option<usize>,
+        restarts: u32,
+        escalated: bool,
+        message: String,
+    },
+    /// A stage made zero progress (no ingress pushes, no lane pops) for
+    /// `epochs` consecutive control ticks while its input was still
+    /// open. Emitted once per stall episode, not every tick.
+    StallSuspected { at_ns: u64, stage: String, epochs: u32 },
+    /// A sheddable source's degradation level changed (awstream-style
+    /// load shedding). `shed_total` is the source's lifetime count of
+    /// deliberately dropped items at the moment of the change.
+    Shed { at_ns: u64, target: String, level: u8, shed_total: u64 },
 }
 
 impl ControlEvent {
@@ -107,7 +128,10 @@ impl ControlEvent {
             | ControlEvent::ScaleGated { at_ns, .. }
             | ControlEvent::Lane { at_ns, .. }
             | ControlEvent::BlockedSpan { at_ns, .. }
-            | ControlEvent::RateConverged { at_ns, .. } => *at_ns,
+            | ControlEvent::RateConverged { at_ns, .. }
+            | ControlEvent::Fault { at_ns, .. }
+            | ControlEvent::StallSuspected { at_ns, .. }
+            | ControlEvent::Shed { at_ns, .. } => *at_ns,
         }
     }
 
@@ -181,6 +205,27 @@ impl ControlEvent {
                     .into()),
                 );
                 o.insert("mbps".into(), Json::Num(*mbps));
+            }
+            ControlEvent::Fault { target, lane, restarts, escalated, message, .. } => {
+                o.insert("type".into(), Json::Str("fault".into()));
+                o.insert("target".into(), Json::Str(target.clone()));
+                if let Some(lane) = lane {
+                    o.insert("lane".into(), Json::Num(*lane as f64));
+                }
+                o.insert("restarts".into(), Json::Num(*restarts as f64));
+                o.insert("escalated".into(), Json::Bool(*escalated));
+                o.insert("message".into(), Json::Str(message.clone()));
+            }
+            ControlEvent::StallSuspected { stage, epochs, .. } => {
+                o.insert("type".into(), Json::Str("stall-suspected".into()));
+                o.insert("stage".into(), Json::Str(stage.clone()));
+                o.insert("epochs".into(), Json::Num(*epochs as f64));
+            }
+            ControlEvent::Shed { target, level, shed_total, .. } => {
+                o.insert("type".into(), Json::Str("shed".into()));
+                o.insert("target".into(), Json::Str(target.clone()));
+                o.insert("level".into(), Json::Num(*level as f64));
+                o.insert("shed_total".into(), Json::Num(*shed_total as f64));
             }
         }
         Json::Obj(o)
@@ -275,7 +320,10 @@ impl EventRing {
     /// Drain every published event into the journal. Safe from any
     /// thread; concurrent callers serialize on the journal mutex.
     pub fn sync(&self) {
-        let mut journal = self.journal.lock().unwrap();
+        // Poison-tolerant: the journal is plain data, and a reader that
+        // panicked mid-drain must not cascade into every later drain
+        // (faults are exactly when this journal matters most).
+        let mut journal = self.journal.lock().unwrap_or_else(|e| e.into_inner());
         self.drain_into(&mut journal);
     }
 
@@ -297,7 +345,7 @@ impl EventRing {
 
     /// Number of events in the journal right now (drains first).
     pub fn journal_len(&self) -> usize {
-        let mut journal = self.journal.lock().unwrap();
+        let mut journal = self.journal.lock().unwrap_or_else(|e| e.into_inner());
         self.drain_into(&mut journal);
         journal.len()
     }
@@ -306,7 +354,7 @@ impl EventRing {
     /// Returns the events and the new cursor — the JSONL tailer's
     /// incremental read.
     pub fn read_from(&self, cursor: usize) -> (Vec<ControlEvent>, usize) {
-        let mut journal = self.journal.lock().unwrap();
+        let mut journal = self.journal.lock().unwrap_or_else(|e| e.into_inner());
         self.drain_into(&mut journal);
         let start = cursor.min(journal.len());
         (journal[start..].to_vec(), journal.len())
@@ -314,7 +362,7 @@ impl EventRing {
 
     /// Drain, then clone the full journal (the report builder's read).
     pub fn snapshot(&self) -> Vec<ControlEvent> {
-        let mut journal = self.journal.lock().unwrap();
+        let mut journal = self.journal.lock().unwrap_or_else(|e| e.into_inner());
         self.drain_into(&mut journal);
         journal.clone()
     }
@@ -392,6 +440,43 @@ mod tests {
     }
 
     #[test]
+    fn restart_storm_overflow_is_audited() {
+        // A supervision storm — one tick's worth of lane faults and
+        // respawns far beyond the transport capacity — must keep the
+        // oldest burst and count every refused event, never silently
+        // truncate the fault timeline.
+        let ring = EventRing::new(4);
+        let mut accepted = 0u64;
+        for k in 0..16u64 {
+            let ok = if k % 2 == 0 {
+                ring.emit(ControlEvent::Fault {
+                    at_ns: k,
+                    target: "work".into(),
+                    lane: Some((k / 2) as usize),
+                    restarts: (k / 2) as u32,
+                    escalated: false,
+                    message: "lane panicked".into(),
+                })
+            } else {
+                ring.emit(ControlEvent::Lane {
+                    at_ns: k,
+                    stage: "work".into(),
+                    lane: (k / 2) as usize,
+                    spawned: true,
+                })
+            };
+            if ok {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 4);
+        assert_eq!(ring.dropped(), 12, "every refused event must be counted");
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 4);
+        assert!(matches!(got[0], ControlEvent::Fault { at_ns: 0, .. }));
+    }
+
+    #[test]
     fn every_variant_serializes_to_a_json_object() {
         let evs = vec![
             ControlEvent::Action(ElasticEvent {
@@ -438,6 +523,24 @@ mod tests {
                 end: QueueEnd::Head,
                 mbps: 321.5,
             },
+            ControlEvent::Fault {
+                at_ns: 9,
+                target: "work".into(),
+                lane: Some(3),
+                restarts: 2,
+                escalated: false,
+                message: "index out of bounds".into(),
+            },
+            ControlEvent::Fault {
+                at_ns: 10,
+                target: "session".into(),
+                lane: None,
+                restarts: 0,
+                escalated: true,
+                message: "deadline exceeded".into(),
+            },
+            ControlEvent::StallSuspected { at_ns: 11, stage: "work".into(), epochs: 8 },
+            ControlEvent::Shed { at_ns: 12, target: "source".into(), level: 3, shed_total: 4096 },
         ];
         for ev in evs {
             let line = ev.to_json().to_string();

@@ -1,0 +1,256 @@
+//! Deterministic fault-injection kernels for the supervision layer.
+//!
+//! Testing fault tolerance needs faults on demand: a panic at exactly
+//! item *N*, a stall of exactly *d* milliseconds, a consumer slow enough
+//! to pin the budget gate. These kernels inject each failure mode
+//! deterministically so `tests/faults.rs` and `benches/faults.rs` can
+//! assert the supervision invariants — restart-with-backoff, escalation,
+//! poison propagation, watchdog flags, deadline aborts — and the
+//! conservation equation (`delivered + lost + shed == offered`) exactly,
+//! run after run.
+//!
+//! Two shapes per failure mode where it matters:
+//!
+//! * [`Replicable`] workers ([`PanicAtItem`], [`OpaquePanic`]) inject
+//!   into **supervised lanes** — the panic lands in a replica worker,
+//!   exercising restart budgets and lost-item audits.
+//! * Plain [`Kernel`]s ([`PanicRelay`], [`StallRelay`], [`SlowConsumer`])
+//!   inject into **unsupervised** pipeline threads — the panic/stall
+//!   lands where only stream poisoning and the watchdog can contain it.
+
+use std::time::Duration;
+
+use super::Item;
+use crate::elastic::Replicable;
+use crate::kernel::{Kernel, KernelContext, KernelStatus};
+
+/// Replicable pass-through worker that panics (with a string payload)
+/// the first time it processes the item equal to `trip`.
+#[derive(Debug, Clone)]
+pub struct PanicAtItem {
+    trip: Item,
+}
+
+impl PanicAtItem {
+    pub fn new(trip: Item) -> Self {
+        PanicAtItem { trip }
+    }
+}
+
+impl Replicable for PanicAtItem {
+    type In = Item;
+    type Out = Item;
+
+    fn process(&mut self, item: Item) -> Item {
+        if item == self.trip {
+            panic!("injected fault: panic at item {item}");
+        }
+        item
+    }
+}
+
+/// Replicable worker that panics with a **non-string payload**
+/// (`panic_any`) — exercises the opaque branch of
+/// [`crate::error::panic_message`] end to end.
+#[derive(Debug, Clone)]
+pub struct OpaquePanic {
+    trip: Item,
+}
+
+impl OpaquePanic {
+    pub fn new(trip: Item) -> Self {
+        OpaquePanic { trip }
+    }
+}
+
+impl Replicable for OpaquePanic {
+    type In = Item;
+    type Out = Item;
+
+    fn process(&mut self, item: Item) -> Item {
+        if item == self.trip {
+            std::panic::panic_any(item);
+        }
+        item
+    }
+}
+
+/// Plain pass-through kernel that panics once it has relayed `trip`
+/// items — a kernel-thread failure outside any supervised stage,
+/// containable only by panic isolation + stream poisoning. The panic
+/// fires *before* the next pop, so no item is ever consumed without
+/// being produced: everything unrelayed strands in the poisoned input
+/// queue, where the run report's stranded-item audit counts it.
+pub struct PanicRelay {
+    name: String,
+    trip: u64,
+    relayed: u64,
+}
+
+impl PanicRelay {
+    /// Panic after exactly `trip` items have been relayed.
+    pub fn new(name: impl Into<String>, trip: u64) -> Self {
+        PanicRelay { name: name.into(), trip, relayed: 0 }
+    }
+}
+
+impl Kernel for PanicRelay {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.relayed == self.trip {
+            panic!("injected fault: relay panic after {} items", self.relayed);
+        }
+        let inp = ctx.input::<Item>(0).expect("relay needs input port 0");
+        match inp.pop() {
+            None => KernelStatus::Done,
+            Some(v) => {
+                self.relayed += 1;
+                if ctx.output::<Item>(0).expect("relay output").push(v).is_err() {
+                    return KernelStatus::Done;
+                }
+                KernelStatus::Continue
+            }
+        }
+    }
+}
+
+/// Pass-through kernel that stalls **once** — sleeps for `stall` when it
+/// pops the item equal to `at`, then resumes relaying. While it sleeps,
+/// neither of its queues moves, which is exactly the zero-progress
+/// signature the controller's stall watchdog flags.
+pub struct StallRelay {
+    name: String,
+    at: Item,
+    stall: Duration,
+    stalled: bool,
+}
+
+impl StallRelay {
+    pub fn new(name: impl Into<String>, at: Item, stall: Duration) -> Self {
+        StallRelay { name: name.into(), at, stall, stalled: false }
+    }
+}
+
+impl Kernel for StallRelay {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let inp = ctx.input::<Item>(0).expect("relay needs input port 0");
+        match inp.pop() {
+            None => KernelStatus::Done,
+            Some(v) => {
+                if v == self.at && !self.stalled {
+                    self.stalled = true;
+                    std::thread::sleep(self.stall);
+                }
+                if ctx.output::<Item>(0).expect("relay output").push(v).is_err() {
+                    return KernelStatus::Done;
+                }
+                KernelStatus::Continue
+            }
+        }
+    }
+}
+
+/// Sink that sleeps `per_item` after every pop — sustained backpressure
+/// on demand, for driving the budget gate (and from there load shedding)
+/// or for holding a deadline-bounded run past its deadline.
+pub struct SlowConsumer {
+    name: String,
+    per_item: Duration,
+    received: u64,
+}
+
+impl SlowConsumer {
+    pub fn new(name: impl Into<String>, per_item: Duration) -> Self {
+        SlowConsumer { name: name.into(), per_item, received: 0 }
+    }
+
+    pub fn received(&self) -> u64 {
+        self.received
+    }
+}
+
+impl Kernel for SlowConsumer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let inp = ctx.input::<Item>(0).expect("consumer needs input port 0");
+        match inp.pop() {
+            None => KernelStatus::Done,
+            Some(_) => {
+                self.received += 1;
+                std::thread::sleep(self.per_item);
+                KernelStatus::Continue
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_workers_trip_exactly_once_at_the_trip_item() {
+        let mut w = PanicAtItem::new(3);
+        assert_eq!(w.process(2), 2);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| w.process(3)))
+            .expect_err("must panic at the trip item");
+        assert_eq!(
+            crate::error::panic_message(err.as_ref()),
+            "injected fault: panic at item 3"
+        );
+        assert_eq!(w.process(4), 4, "non-trip items still pass");
+
+        let mut o = OpaquePanic::new(1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| o.process(1)))
+            .expect_err("must panic at the trip item");
+        assert_eq!(
+            crate::error::panic_message(err.as_ref()),
+            "opaque panic payload",
+            "panic_any payloads are reported opaquely, not lost"
+        );
+    }
+
+    #[test]
+    fn stall_relay_stalls_once_then_delivers_everything() {
+        use crate::flow::{Flow, RunOptions, Session};
+        use crate::kernel::{ClosureSink, ClosureSource};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let mut i = 0u64;
+        let n = 100u64;
+        let delivered = Arc::new(AtomicU64::new(0));
+        let d2 = delivered.clone();
+        let flow = Flow::new("stall")
+            .source::<Item>(Box::new(ClosureSource::new("src", move || {
+                i += 1;
+                (i <= n).then_some(i - 1)
+            })))
+            .then::<Item>(Box::new(StallRelay::new(
+                "stall",
+                10,
+                Duration::from_millis(30),
+            )))
+            .unwrap()
+            .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+                d2.fetch_add(1, Ordering::Relaxed);
+            })))
+            .unwrap();
+        let report = Session::run_flow(flow, RunOptions::default()).unwrap();
+        assert_eq!(delivered.load(Ordering::Relaxed), n, "a stall loses nothing");
+        assert!(
+            report.wall_ns >= 29_000_000,
+            "the injected stall must show up in the wall clock"
+        );
+        assert!(report.faults.is_empty() && report.items_lost == 0);
+    }
+}

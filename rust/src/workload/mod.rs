@@ -10,6 +10,11 @@
 //! own service time. Dual-phase variants shift the distribution mean
 //! halfway through (by items sent) for the Fig. 10/14/15 experiments.
 
+pub mod faults;
+
+use std::sync::Arc;
+
+use crate::elastic::{ShedControl, Sheddable};
 use crate::flow::Flow;
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
 use crate::queue::StreamConfig;
@@ -288,6 +293,8 @@ pub struct PacedProducer {
     sent: u64,
     time: TimeRef,
     pacer: Pacer,
+    /// Degradation knob (see [`PacedProducer::with_shedding`]).
+    shed: Option<Arc<ShedControl>>,
 }
 
 impl PacedProducer {
@@ -306,6 +313,7 @@ impl PacedProducer {
             sent: 0,
             time: TimeRef::new(),
             pacer: Pacer::default(),
+            shed: None,
         }
     }
 
@@ -317,9 +325,38 @@ impl PacedProducer {
         self
     }
 
+    /// Attach an awstream-style degradation knob: each burst, the
+    /// current [`ShedControl::level`] decides how many of the burst's
+    /// items are deliberately dropped (tail of the burst, audited via
+    /// [`ShedControl::record_shed`]) instead of published. Register the
+    /// same control with
+    /// [`RunOptions::with_shedder`](crate::flow::RunOptions::with_shedder)
+    /// and the elastic controller moves the level at run time.
+    /// Conservation holds exactly: `delivered + shed == offered`.
+    ///
+    /// Note the per-burst floor: level `l` sheds
+    /// `⌊burst · l / (SHED_LEVEL_MAX+1)⌋`, so shedding needs
+    /// `burst > SHED_LEVEL_MAX / l` to bite (use [`with_burst`] ≥ 5).
+    ///
+    /// [`with_burst`]: PacedProducer::with_burst
+    pub fn with_shedding(mut self, control: Arc<ShedControl>) -> Self {
+        self.shed = Some(control);
+        self
+    }
+
     /// Items pushed so far.
     pub fn sent(&self) -> u64 {
         self.sent
+    }
+}
+
+impl Sheddable for PacedProducer {
+    /// The control installed by [`PacedProducer::with_shedding`].
+    ///
+    /// # Panics
+    /// If the producer was built without one.
+    fn shed_control(&self) -> Arc<ShedControl> {
+        self.shed.clone().expect("PacedProducer built without with_shedding")
     }
 }
 
@@ -337,9 +374,25 @@ impl Kernel for PacedProducer {
         self.time.wait_until_with_tail(deadline, 20_000);
         let out = ctx.output::<Item>(0).expect("producer needs output port 0");
         let hi = (self.sent + self.burst).min(self.total_items);
-        match out.push_iter(self.sent..hi) {
+        // Degradation: publish only the kept prefix of the burst; the
+        // shed tail is skipped *and audited*, never silently dropped.
+        // `quota(n) < n` for any level, so the burst always carries at
+        // least one real item and `sent` always advances on success.
+        let offered = hi - self.sent;
+        let shed = self.shed.as_ref().map(|c| c.quota(offered)).unwrap_or(0);
+        let keep_hi = hi - shed;
+        match out.push_iter(self.sent..keep_hi) {
             Ok(n) => {
                 self.sent += n as u64;
+                if shed > 0 && self.sent == keep_hi {
+                    // Kept prefix fully published — account the tail.
+                    // (On a partial push the unsent remainder is simply
+                    // re-offered, and re-quota'd, next wakeup.)
+                    if let Some(c) = &self.shed {
+                        c.record_shed(shed);
+                    }
+                    self.sent = hi;
+                }
                 KernelStatus::Continue
             }
             Err(_) => KernelStatus::Done,
@@ -523,6 +576,34 @@ mod tests {
             .unwrap();
         Session::run_flow(flow, RunOptions::default()).unwrap();
         assert_eq!(delivered.load(Ordering::Relaxed), items, "burst lost items");
+    }
+
+    #[test]
+    fn shedding_producer_conserves_offered_items() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let ctl = ShedControl::new();
+        ctl.set_level(2); // shed 2/5 of every burst
+        let items = 1_000u64;
+        let delivered = Arc::new(AtomicU64::new(0));
+        let d2 = delivered.clone();
+        let flow = Flow::new("shed")
+            .stream_defaults(StreamConfig::default().with_capacity(4096))
+            .source::<Item>(Box::new(
+                PacedProducer::from_rate_items_per_sec("shed", 1_000_000.0, items)
+                    .with_burst(10)
+                    .with_shedding(ctl.clone()),
+            ))
+            .sink(Box::new(crate::kernel::ClosureSink::new("cnt", move |_: Item| {
+                d2.fetch_add(1, Ordering::Relaxed);
+            })))
+            .unwrap();
+        Session::run_flow(flow, RunOptions::default()).unwrap();
+        let got = delivered.load(Ordering::Relaxed);
+        let shed = ctl.shed_total();
+        assert!(shed > 0, "level 2 over 10-item bursts must shed");
+        assert_eq!(got + shed, items, "delivered + shed must equal offered");
+        // Level 2 sheds exactly ⌊10·2/5⌋ = 4 of every full burst.
+        assert_eq!(shed, items / 10 * 4);
     }
 
     /// Minimal counting sink for the pacing test.

@@ -112,6 +112,7 @@ fn coordinated_controller_scales_loaded_stage_and_refuses_starved_one() {
         },
         initial_replicas: 1,
         lane_capacity: 128,
+        ..Default::default()
     };
     let count = Arc::new(AtomicU64::new(0));
     let c2 = count.clone();
@@ -233,6 +234,7 @@ fn phase_shifting_rabin_karp_rescales_hash_stage_after_shift() {
         },
         initial_replicas: 1,
         lane_capacity: 64,
+        ..Default::default()
     };
 
     let found = Arc::new(std::sync::Mutex::new(Vec::new()));

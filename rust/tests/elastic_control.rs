@@ -173,6 +173,7 @@ fn elastic_stage_preserves_order_under_scheduler() {
         policy: ElasticPolicy::pinned(3),
         initial_replicas: 3,
         lane_capacity: 64,
+        ..Default::default()
     };
 
     let out = Arc::new(Mutex::new(Vec::new()));
@@ -217,6 +218,7 @@ fn controller_scales_up_under_overload_and_audits_actions() {
         },
         initial_replicas: 1,
         lane_capacity: 128,
+        ..Default::default()
     };
     let count = Arc::new(AtomicU64::new(0));
     let c2 = count.clone();

@@ -1,0 +1,329 @@
+//! The supervision layer, outside-in: injected panics, stalls, and
+//! overload driven through the real scheduler via the public API.
+//!
+//! Every test closes the conservation ledger — `items delivered +
+//! items_lost + items_shed == items offered` — because the whole point
+//! of audited degradation is that nothing ever disappears silently:
+//! a lane restart loses exactly the in-flight item, an escalated lane
+//! accounts for everything it drains, a poisoned stream counts its
+//! stranded items, and a shedding source counts every drop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use streamflow::elastic::ElasticConfig;
+use streamflow::kernel::{ClosureSink, ClosureSource};
+use streamflow::telemetry::ControlEvent;
+use streamflow::workload::faults::{PanicAtItem, PanicRelay, SlowConsumer};
+use streamflow::workload::{Item, PacedProducer, PhasedServiceWorker};
+use streamflow::prelude::*;
+
+/// One pinned supervised lane with the given restart budget.
+fn one_lane(restart_budget: u32) -> ElasticStageConfig {
+    ElasticStageConfig {
+        policy: ElasticPolicy::pinned(1),
+        initial_replicas: 1,
+        lane_capacity: 64,
+        supervisor: SupervisorPolicy::with_restart_budget(restart_budget),
+    }
+}
+
+// ------------------------------------------------------ lane supervision --
+
+#[test]
+fn lane_panic_restarts_under_backoff_and_audits_the_lost_item() {
+    // A supervised lane panics on exactly one item. The lane must come
+    // back (budget 2), every other item must arrive in order, and the
+    // report must account for the single in-flight casualty.
+    let items = 2_000u64;
+    let out = Arc::new(Mutex::new(Vec::new()));
+    let o2 = out.clone();
+    let flow = Flow::new("restart")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec(
+            "prod", 50_000.0, items,
+        )))
+        .elastic("work", one_lane(2), |_| PanicAtItem::new(700))
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: Item| {
+            o2.lock().unwrap().push(v)
+        })))
+        .unwrap();
+
+    let report = Session::run_flow(flow, RunOptions::default()).unwrap();
+
+    let v = out.lock().unwrap();
+    let mut expect = (0..items).filter(|&x| x != 700);
+    for (idx, &x) in v.iter().enumerate() {
+        assert_eq!(Some(x), expect.next(), "order broken at {idx}");
+    }
+    assert_eq!(report.items_lost, 1, "exactly the in-flight item is lost");
+    assert_eq!(v.len() as u64 + report.items_lost, items, "conservation");
+    assert_eq!(report.faults.len(), 1, "{:?}", report.faults);
+    let f = &report.faults[0];
+    assert_eq!((f.target.as_str(), f.lane), ("work", Some(0)));
+    assert!(!f.escalated, "one panic under budget 2 must not escalate");
+    assert!(f.message.contains("panic at item 700"), "{}", f.message);
+}
+
+#[test]
+fn restart_budget_exhaustion_escalates_and_conserves_items() {
+    // The replica panics on *every* item from `trip` on, so the restart
+    // budget (1) must burn down and escalate. The escalated lane keeps
+    // draining — auditing each item as lost — so upstream never wedges
+    // and the ledger closes exactly.
+    struct PanicFrom {
+        trip: Item,
+    }
+    impl Replicable for PanicFrom {
+        type In = Item;
+        type Out = Item;
+        fn process(&mut self, v: Item) -> Item {
+            if v >= self.trip {
+                panic!("injected fault: panic from item {v}");
+            }
+            v
+        }
+    }
+
+    let items = 400u64;
+    let trip = 100u64;
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let mut expect = 0u64;
+    let flow = Flow::new("escalate")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec(
+            "prod", 50_000.0, items,
+        )))
+        .elastic("work", one_lane(1), move |_| PanicFrom { trip })
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |v: Item| {
+            assert_eq!(v, expect, "reordered delivery");
+            expect += 1;
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+
+    let report = Session::run_flow(flow, RunOptions::default()).unwrap();
+
+    let delivered = count.load(Ordering::Relaxed);
+    assert_eq!(delivered, trip, "everything before the trip item survives");
+    assert_eq!(report.items_lost, items - trip, "escalated drain is audited");
+    assert_eq!(delivered + report.items_lost, items, "conservation");
+    assert_eq!(report.faults.len(), 2, "{:?}", report.faults);
+    assert!(
+        !report.faults[0].escalated && report.faults[0].restarts == 0,
+        "first panic is within budget: {:?}",
+        report.faults[0]
+    );
+    assert!(
+        report.faults[1].escalated && report.faults[1].restarts == 1,
+        "second panic exhausts budget 1: {:?}",
+        report.faults[1]
+    );
+}
+
+// --------------------------------------------------- kernel panic poison --
+
+#[test]
+fn kernel_panic_poisons_streams_instead_of_hanging() {
+    // A plain (unsupervised) kernel panics mid-run. The run must return
+    // Ok — the panic is caught on the kernel thread, its streams are
+    // poisoned so both neighbors unwedge, and everything the relay never
+    // forwarded strands in the poisoned input queue, where the report
+    // audits it.
+    let n = 5_000u64;
+    let mut i = 0u64;
+    let delivered = Arc::new(AtomicU64::new(0));
+    let d2 = delivered.clone();
+    let flow = Flow::new("poison")
+        .source::<Item>(Box::new(ClosureSource::new("src", move || {
+            i += 1;
+            (i <= n).then_some(i - 1)
+        })))
+        .then::<Item>(Box::new(PanicRelay::new("relay", 100)))
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            d2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+
+    let report = Session::run_flow(flow, RunOptions::default()).unwrap();
+
+    let got = delivered.load(Ordering::Relaxed);
+    assert_eq!(got, 100, "the sink drains exactly what was relayed");
+    let (produced, _) = report.stream_totals["src.0 -> relay.0"];
+    assert_eq!(got + report.items_lost, produced, "conservation");
+    assert_eq!(report.faults.len(), 1, "{:?}", report.faults);
+    let f = &report.faults[0];
+    assert_eq!((f.target.as_str(), f.lane, f.escalated), ("relay", None, true));
+    assert!(f.message.contains("relay panic after 100 items"), "{}", f.message);
+}
+
+// ----------------------------------------------------------- deadline --
+
+#[test]
+fn deadline_force_closes_a_wedged_topology_with_partial_report() {
+    // A consumer at 2 ms/item against a fast source can't finish 10k
+    // items inside 250 ms. The deadline must force-close the topology
+    // and hand back a partial — but honest — report, instead of hanging.
+    let n = 10_000u64;
+    let mut i = 0u64;
+    let flow = Flow::new("deadline")
+        .stream_defaults(StreamConfig::default().with_capacity(64))
+        .source::<Item>(Box::new(ClosureSource::new("src", move || {
+            i += 1;
+            (i <= n).then_some(i - 1)
+        })))
+        .sink(Box::new(SlowConsumer::new("snk", Duration::from_millis(2))))
+        .unwrap();
+
+    let t0 = Instant::now();
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_deadline(Duration::from_millis(250)),
+    )
+    .unwrap();
+    let elapsed = t0.elapsed();
+
+    assert!(elapsed < Duration::from_secs(10), "force-close took {elapsed:?}");
+    assert!(report.deadline_hit, "the report must say it is partial");
+    assert!(
+        report.faults.iter().any(|f| f.target == "session" && f.escalated),
+        "deadline abort must be audited: {:?}",
+        report.faults
+    );
+    let (pushes, pops) = report.stream_totals["src.0 -> snk.0"];
+    assert!(pops < n, "the run really was cut short");
+    assert!(pushes >= pops);
+}
+
+// ------------------------------------------------------ stall watchdog --
+
+#[test]
+fn stall_watchdog_flags_a_wedged_elastic_stage() {
+    // The lane worker goes dark for 200 ms mid-run. With a 5 ms control
+    // tick and a 3-epoch watchdog, the controller must emit
+    // StallSuspected for the stage — and the run must still finish with
+    // zero loss once the worker wakes.
+    struct StallOnce {
+        at: Item,
+        stall: Duration,
+        hit: bool,
+    }
+    impl Replicable for StallOnce {
+        type In = Item;
+        type Out = Item;
+        fn process(&mut self, v: Item) -> Item {
+            if v == self.at && !self.hit {
+                self.hit = true;
+                std::thread::sleep(self.stall);
+            }
+            v
+        }
+    }
+
+    let items = 6_000u64;
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let flow = Flow::new("stall")
+        .stream_defaults(StreamConfig::default().with_capacity(256))
+        .source::<Item>(Box::new(PacedProducer::from_rate_items_per_sec(
+            "prod", 20_000.0, items,
+        )))
+        .elastic("work", one_lane(2), |_| StallOnce {
+            at: 50,
+            stall: Duration::from_millis(200),
+            hit: false,
+        })
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+
+    let ecfg = ElasticConfig {
+        tick: Duration::from_millis(5),
+        buffer_advice: false,
+        stall_epochs: 3,
+        ..Default::default()
+    };
+    let report =
+        Session::run_flow(flow, RunOptions::default().with_elastic(ecfg)).unwrap();
+
+    assert_eq!(count.load(Ordering::Relaxed), items, "a stall loses nothing");
+    assert!(
+        report
+            .control_events
+            .iter()
+            .any(|e| matches!(e, ControlEvent::StallSuspected { stage, .. } if stage == "work")),
+        "the wedged stage must be flagged: {:?}",
+        report.control_events
+    );
+    assert!(report.faults.is_empty() && report.items_lost == 0);
+}
+
+// ------------------------------------------------------- load shedding --
+
+#[test]
+fn budget_pinned_overload_sheds_load_and_conserves_the_ledger() {
+    // 2k items/s offered into a 0.5k items/s lane, with the worker
+    // budget pinned at 1 so scaling out is off the table. The controller
+    // must degrade the source instead of letting the topology grind into
+    // backpressure — and every shed item must be on the ledger.
+    let items = 1_000u64;
+    let shed = ShedControl::new();
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let stage_cfg = ElasticStageConfig {
+        policy: ElasticPolicy {
+            target_rho: 0.7,
+            band: 0.15,
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown_ticks: 0,
+        },
+        initial_replicas: 1,
+        lane_capacity: 128,
+        supervisor: SupervisorPolicy::default(),
+    };
+    let flow = Flow::new("shed")
+        .stream_defaults(StreamConfig::default().with_capacity(1024))
+        .source::<Item>(Box::new(
+            PacedProducer::from_rate_items_per_sec("prod", 2_000.0, items)
+                .with_burst(10)
+                .with_shedding(shed.clone()),
+        ))
+        .elastic("work", stage_cfg, |_| PhasedServiceWorker::new(2_000_000, 2_000_000, 0))
+        .unwrap()
+        .sink(Box::new(ClosureSink::new("snk", move |_: Item| {
+            c2.fetch_add(1, Ordering::Relaxed);
+        })))
+        .unwrap();
+
+    let ecfg = ElasticConfig {
+        tick: Duration::from_millis(5),
+        buffer_advice: false,
+        shed_after_ticks: 2,
+        worker_budget: BudgetPolicy::Fixed(1),
+        ..Default::default()
+    };
+    let report = Session::run_flow(
+        flow,
+        RunOptions::default().with_elastic(ecfg).with_shedder("prod", shed.clone()),
+    )
+    .unwrap();
+
+    let delivered = count.load(Ordering::Relaxed);
+    assert!(report.items_shed > 0, "pinned overload must engage shedding");
+    assert_eq!(report.items_shed, shed.shed_total());
+    assert_eq!(delivered + report.items_shed, items, "conservation");
+    assert!(
+        report.control_events.iter().any(|e| matches!(e, ControlEvent::Shed { .. })),
+        "degradation moves must be audited: {:?}",
+        report.control_events
+    );
+    assert!(report.faults.is_empty() && report.items_lost == 0);
+}

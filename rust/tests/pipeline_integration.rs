@@ -350,6 +350,7 @@ fn elastic_merge_into_midgraph_kernel_preserves_order_and_totals() {
                 policy: ElasticPolicy::pinned(3),
                 initial_replicas: 3,
                 lane_capacity: 64,
+                ..Default::default()
             },
             |_| AddOne,
         )

@@ -144,6 +144,7 @@ fn budget_timeline_lands_in_the_run_report_end_to_end() {
                 policy: ElasticPolicy { max_replicas: 4, ..Default::default() },
                 initial_replicas: 1,
                 lane_capacity: 256,
+                ..Default::default()
             },
             |_| NoopWorker,
         )
@@ -255,6 +256,7 @@ fn run_pinned_pipeline() -> RunReport {
                 policy: ElasticPolicy::pinned(2),
                 initial_replicas: 2,
                 lane_capacity: 128,
+                ..Default::default()
             },
             |_| AddOne,
         )

@@ -466,6 +466,7 @@ fn jsonl_tail_captures_a_real_elastic_run() {
         policy: ElasticPolicy { max_replicas: 4, ..Default::default() },
         initial_replicas: 1,
         lane_capacity: 64,
+        ..Default::default()
     };
     let flow = Flow::new("jsonl-e2e")
         .stream_defaults(StreamConfig::default().with_capacity(512))
