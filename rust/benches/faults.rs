@@ -53,6 +53,7 @@ fn lane_run(n: u64, trip: Option<Item>) -> (f64, RunReport, u64) {
         initial_replicas: 1,
         lane_capacity: 256,
         supervisor: SupervisorPolicy::with_restart_budget(3),
+        ..Default::default()
     };
     let count = Arc::new(AtomicU64::new(0));
     let c2 = count.clone();
@@ -110,6 +111,7 @@ fn shed_run(items: u64) -> (u64, u64, u64) {
         initial_replicas: 1,
         lane_capacity: 128,
         supervisor: SupervisorPolicy::default(),
+        ..Default::default()
     };
     let flow = Flow::new("bench-shed")
         .stream_defaults(StreamConfig::default().with_capacity(1024))

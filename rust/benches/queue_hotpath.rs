@@ -9,7 +9,15 @@
 //!   400 µs cadence and at a pathological 2 µs spin cadence, with the
 //!   counter-conservation invariant (sum of samples + residue ==
 //!   monotonic totals) asserted under that concurrency,
-//! * the counter sample itself.
+//! * the counter sample itself,
+//! * **ring vs segmented backend**: steady-state two-thread throughput
+//!   (acceptance: segmented within 5% of the contiguous ring) and
+//!   resize-under-burst — a paced producer at 2× the consumer's rate
+//!   with the `BufferAdvisor` live — where the segmented backend's
+//!   allocation-cheap growth must cut producer blocked-ns ≥ 2× vs the
+//!   ring whose advisor is capped at the provisioned allocation, with
+//!   conservation `pushes == pops + occupancy` asserted at every scrape
+//!   on both backends.
 //!
 //! Emits `target/figures/BENCH_queue_hotpath.json` (acceptance: ≥ 2×
 //! two-thread throughput vs the legacy baseline) plus the usual CSV.
@@ -23,8 +31,11 @@ use std::sync::Arc;
 use crossbeam_utils::CachePadded;
 use streamflow::bench::{black_box, Runner};
 use streamflow::config::Json;
-use streamflow::queue::{PopResult, SpscQueue};
+use streamflow::classify::DistributionClass;
+use streamflow::control::{BufferAdvisor, StreamRates};
+use streamflow::queue::{build, PopResult, QueueBackend, SpscQueue, StreamConfig};
 use streamflow::report::{figures_dir, Cell, Table};
+use streamflow::topology::StreamId;
 
 // ---------------------------------------------------------------------------
 // Legacy baseline: the pre-change protocol, kept here verbatim-in-spirit so
@@ -232,6 +243,117 @@ fn spsc_throughput(n: u64, monitor_period_ns: Option<u64>, batched: bool) -> (f6
     (n as f64 / secs, conserved)
 }
 
+/// Two-thread per-item streaming throughput on a chosen backend — the
+/// ring-vs-segmented steady-state comparison (acceptance: segmented
+/// within 5% of the contiguous ring).
+fn backend_throughput(backend: QueueBackend, n: u64) -> f64 {
+    let cfg = StreamConfig::default().with_capacity(4096).with_backend(backend);
+    let (q, _handle) = build::<u64>(&cfg);
+    let qp = q.clone();
+    let t0 = std::time::Instant::now();
+    let prod = std::thread::spawn(move || {
+        for i in 0..n {
+            qp.push(i).unwrap();
+        }
+        qp.close();
+    });
+    let mut sum = 0u64;
+    while let Some(v) = q.pop() {
+        sum = sum.wrapping_add(v);
+    }
+    prod.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    black_box(sum);
+    assert_eq!(q.counters().total_pushes(), n);
+    assert_eq!(q.counters().total_pops(), n);
+    n as f64 / secs
+}
+
+/// Resize-under-burst: a paced producer at 2× the consumer's service
+/// rate with the [`BufferAdvisor`] live on the stream (scraping every
+/// 500 µs, 25% relative-change gate — the controller's loop in
+/// miniature). The ring run clamps the advisor at the provisioned 256
+/// slots ("allocated once at its maximum"); the segmented run lets the
+/// sizing follow the burst. Returns the producer's `write_blocked_ns`;
+/// conservation `pushes == pops + occupancy` is asserted at every
+/// mid-run scrape.
+fn burst_blocked_ns(backend: QueueBackend, advisor_max: usize, n: u64) -> u64 {
+    let cfg = StreamConfig::default().with_capacity(256).with_backend(backend);
+    let (q, handle) = build::<u64>(&cfg);
+    let done = Arc::new(AtomicBool::new(false));
+    let advisor = BufferAdvisor { max_capacity: advisor_max, ..Default::default() };
+    let mon_handle = handle.clone();
+    let mon_done = done.clone();
+    let monitor = std::thread::spawn(move || {
+        let c = mon_handle.counters();
+        let (mut last_pushes, mut last_pops) = (0u64, 0u64);
+        let mut last_t = std::time::Instant::now();
+        while !mon_done.load(Ordering::Acquire) {
+            std::thread::sleep(std::time::Duration::from_micros(500));
+            // Pops (head) read before pushes (tail): the difference is
+            // the occupancy at some instant in between, never negative.
+            let pops = c.total_pops();
+            let pushes = c.total_pushes();
+            assert!(pushes >= pops, "conservation violated: {pushes} < {pops}");
+            let occupancy = pushes - pops;
+            assert_eq!(pushes, pops + occupancy);
+            let dt = last_t.elapsed().as_secs_f64().max(1e-6);
+            last_t = std::time::Instant::now();
+            let lambda = (pushes - last_pushes) as f64 / dt;
+            let mu = (pops - last_pops) as f64 / dt;
+            (last_pushes, last_pops) = (pushes, pops);
+            if lambda <= 0.0 || mu <= 0.0 {
+                continue;
+            }
+            let rates = StreamRates { lambda_items: Some(lambda), mu_items: Some(mu) };
+            let Some(advice) = advisor.advise(StreamId(0), rates, DistributionClass::Unknown)
+            else {
+                continue;
+            };
+            let cur = mon_handle.capacity();
+            if cur > 0 && advice.capacity.abs_diff(cur) as f64 / cur as f64 >= 0.25 {
+                mon_handle.set_capacity(advice.capacity);
+            }
+        }
+    });
+    let qp = q.clone();
+    let producer = std::thread::spawn(move || {
+        for i in 0..n {
+            qp.push(i).unwrap();
+            if (i + 1) % 64 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(250));
+            }
+        }
+        qp.close();
+    });
+    let qc = q.clone();
+    let consumer = std::thread::spawn(move || {
+        let mut popped = 0u64;
+        let mut buf = Vec::with_capacity(64);
+        loop {
+            let got = qc.pop_batch(&mut buf, 64);
+            popped += got as u64;
+            buf.clear();
+            if got == 0 {
+                if qc.is_finished() {
+                    break;
+                }
+                std::thread::yield_now();
+                continue;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        }
+        popped
+    });
+    producer.join().unwrap();
+    assert_eq!(consumer.join().unwrap(), n);
+    done.store(true, Ordering::Release);
+    monitor.join().unwrap();
+    assert_eq!(q.counters().total_pushes(), n);
+    assert_eq!(q.counters().total_pops(), n);
+    q.counters().total_write_blocked_ns()
+}
+
 fn main() {
     let mut runner = Runner::new();
     let mut table = Table::new("queue_hotpath", &["case", "value", "unit"]);
@@ -300,6 +422,17 @@ fn main() {
     let speedup = bare / legacy;
     let speedup_batched = batched / legacy;
 
+    // ---- backend comparison: ring vs segmented ----------------------------
+    let ring_tp = backend_throughput(QueueBackend::Ring, n);
+    let seg_tp = backend_throughput(QueueBackend::Segmented, n);
+    let seg_ratio = seg_tp / ring_tp;
+    // Resize-under-burst: the ring's advisor is clamped at the
+    // provisioned 256 slots; the segmented advisor may follow the burst.
+    let burst_n = ((16_384.0 * Runner::scale()) as u64).max(2_048);
+    let ring_burst = burst_blocked_ns(QueueBackend::Ring, 256, burst_n);
+    let seg_burst = burst_blocked_ns(QueueBackend::Segmented, 1 << 16, burst_n);
+    let burst_improvement = ring_burst as f64 / seg_burst.max(1) as f64;
+
     for (label, v, unit) in [
         ("spsc_throughput_legacy_len_protocol", legacy / 1.0e6, "M items/s"),
         ("spsc_throughput_bare", bare / 1.0e6, "M items/s"),
@@ -310,6 +443,12 @@ fn main() {
         ("speedup_batched_vs_legacy", speedup_batched, "x"),
         ("monitor_degradation_400us", degradation, "%"),
         ("monitor_degradation_2us_stress", stress_deg, "%"),
+        ("spsc_throughput_ring", ring_tp / 1.0e6, "M items/s"),
+        ("spsc_throughput_segmented", seg_tp / 1.0e6, "M items/s"),
+        ("segmented_vs_ring", seg_ratio, "x"),
+        ("burst_blocked_ring_advisor", ring_burst as f64 / 1.0e6, "ms"),
+        ("burst_blocked_segmented", seg_burst as f64 / 1.0e6, "ms"),
+        ("burst_blocked_improvement", burst_improvement, "x"),
     ] {
         table.row_mixed(&[Cell::S(label.into()), Cell::F(v), Cell::S(unit.into())]);
     }
@@ -320,7 +459,21 @@ fn main() {
     two.insert("batched_items_per_sec".to_string(), Json::Num(batched));
     two.insert("monitored_400us_items_per_sec".to_string(), Json::Num(monitored));
     two.insert("stress_2us_items_per_sec".to_string(), Json::Num(stress));
+    two.insert("ring_items_per_sec".to_string(), Json::Num(ring_tp));
+    two.insert("segmented_items_per_sec".to_string(), Json::Num(seg_tp));
     json.insert("two_thread".into(), Json::Obj(two));
+    json.insert("segmented_vs_ring".into(), Json::Num(seg_ratio));
+    json.insert("acceptance_max_segmented_regression_pct".into(), Json::Num(5.0));
+    let mut burst = BTreeMap::new();
+    burst.insert("items".to_string(), Json::Num(burst_n as f64));
+    burst.insert("ring_advisor_blocked_ns".to_string(), Json::Num(ring_burst as f64));
+    burst.insert("segmented_blocked_ns".to_string(), Json::Num(seg_burst as f64));
+    burst.insert("blocked_improvement_x".to_string(), Json::Num(burst_improvement));
+    // The per-scrape `pushes == pops + occupancy` asserts ran live on
+    // both backends inside burst_blocked_ns; reaching here means passed.
+    burst.insert("conservation".to_string(), Json::Bool(true));
+    json.insert("resize_under_burst".into(), Json::Obj(burst));
+    json.insert("acceptance_min_burst_improvement".into(), Json::Num(2.0));
     json.insert("items_streamed".into(), Json::Num(n as f64));
     json.insert("speedup_vs_legacy".into(), Json::Num(speedup));
     json.insert("speedup_batched_vs_legacy".into(), Json::Num(speedup_batched));
@@ -344,6 +497,16 @@ fn main() {
         bare / 1e6,
         batched / 1e6,
         if cons_mon && cons_stress { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "# backends: ring {:.1} M/s vs segmented {:.1} M/s ({:.3}x); \
+         resize-under-burst blocked {:.2} ms (ring+advisor) -> {:.2} ms (segmented), \
+         {burst_improvement:.1}x better",
+        ring_tp / 1e6,
+        seg_tp / 1e6,
+        seg_ratio,
+        ring_burst as f64 / 1e6,
+        seg_burst as f64 / 1e6,
     );
     println!("# JSON ledger: {}", json_path.display());
 }

@@ -299,6 +299,12 @@ struct StageState {
 #[derive(Debug, Default)]
 struct StreamState {
     cooldown: u32,
+    /// Remaining ticks of the post-grow shrink hold (burst heal). Set to
+    /// a full `resize_cooldown_ticks` whenever a grow is applied; while
+    /// non-zero, shrink advice is suppressed so a periodic burst does not
+    /// thrash the capacity (grow → shrink → grow) on consecutive
+    /// advisory epochs. Decays one per non-cooldown tick.
+    grow_hold: u32,
     /// Lifetime read-blocked ns at the last tick (blocked-span deltas).
     last_rb: u64,
     /// Lifetime write-blocked ns at the last tick.
@@ -359,6 +365,7 @@ impl ElasticController {
             .iter()
             .map(|sb| StreamState {
                 cooldown: 0,
+                grow_hold: 0,
                 last_rb: sb.handle.counters().total_read_blocked_ns(),
                 last_wb: sb.handle.counters().total_write_blocked_ns(),
             })
@@ -1033,6 +1040,10 @@ impl ElasticController {
                 stt.cooldown -= 1;
                 continue;
             }
+            let holding = stt.grow_hold > 0;
+            if holding {
+                stt.grow_hold -= 1;
+            }
             let Some(rates) = self.registry.get(sb.id) else { continue };
             if rates.lambda_items.is_none() || rates.mu_items.is_none() {
                 continue;
@@ -1047,24 +1058,51 @@ impl ElasticController {
                 continue;
             }
             let rel = advice.capacity.abs_diff(cur) as f64 / cur as f64;
-            if rel >= self.cfg.resize_min_rel_change {
-                sb.handle.set_capacity(advice.capacity);
-                self.ring.emit(ControlEvent::Action(ElasticEvent {
+            if rel < self.cfg.resize_min_rel_change {
+                continue;
+            }
+            let growing = advice.capacity > cur;
+            // Burst heal: a grow means the advisor underestimated demand
+            // once already this burst — refuse to shrink again for one
+            // extra full cooldown so periodic bursts heal instead of
+            // thrashing capacity on back-to-back advisory epochs.
+            if !growing && holding {
+                continue;
+            }
+            // A shrink gates *admissions* immediately, but the backing
+            // memory only shrinks as the consumer drains below the new
+            // cap. Audit the gap so a "why is the queue still big"
+            // investigation finds the answer in the event ring.
+            let occupancy = sb.handle.len();
+            if !growing && advice.capacity < occupancy {
+                self.ring.emit(ControlEvent::Note {
                     at_ns,
-                    target: sb.label.clone(),
-                    action: ElasticAction::Resize {
-                        from: cur,
-                        to: advice.capacity,
-                        model: advice.model,
-                    },
-                    rho: advice.rho,
-                    lambda_items: rates.lambda_items.unwrap_or(0.0),
-                    mu_items: rates.mu_items.unwrap_or(0.0),
-                    pressure: false,
-                    starved_frac: 0.0,
-                    backpressure_frac: 0.0,
-                }));
-                stt.cooldown = self.cfg.resize_cooldown_ticks;
+                    note: format!(
+                        "resize: stream '{}' shrink to {} is below occupancy {}; \
+                         gating admissions only until the consumer drains",
+                        sb.label, advice.capacity, occupancy
+                    ),
+                });
+            }
+            sb.handle.set_capacity(advice.capacity);
+            self.ring.emit(ControlEvent::Action(ElasticEvent {
+                at_ns,
+                target: sb.label.clone(),
+                action: ElasticAction::Resize {
+                    from: cur,
+                    to: advice.capacity,
+                    model: advice.model,
+                },
+                rho: advice.rho,
+                lambda_items: rates.lambda_items.unwrap_or(0.0),
+                mu_items: rates.mu_items.unwrap_or(0.0),
+                pressure: false,
+                starved_frac: 0.0,
+                backpressure_frac: 0.0,
+            }));
+            stt.cooldown = self.cfg.resize_cooldown_ticks;
+            if growing {
+                stt.grow_hold = self.cfg.resize_cooldown_ticks;
             }
         }
     }
@@ -1124,6 +1162,7 @@ mod tests {
                             tc_tail: 0,
                             read_blocked_ns: starved,
                             write_blocked_ns: 0,
+                            ..Default::default()
                         }
                     } else {
                         MonitorSample {
@@ -1131,6 +1170,7 @@ mod tests {
                             tc_tail: tc,
                             read_blocked_ns: 0,
                             write_blocked_ns: 0,
+                            ..Default::default()
                         }
                     }
                 })
@@ -1669,5 +1709,105 @@ mod tests {
             backpressure_frac: 0.0,
         };
         assert!(r.to_string().contains("resize 64 -> 256"), "{r}");
+    }
+
+    /// A converged estimate reporting `items_per_sec` (1-byte items).
+    fn est(items_per_sec: f64) -> crate::estimator::RateEstimate {
+        crate::estimator::RateEstimate {
+            q_bar: 0.0,
+            rate_bps: items_per_sec,
+            period_ns: 1_000_000,
+            item_bytes: 1,
+            n_q: 1,
+            at_ns: 0,
+        }
+    }
+
+    /// Controller bound to one monitored stream and no stages: the
+    /// buffer-advice loop is the only actor.
+    fn stream_controller(
+        handle: Arc<dyn MonitorHandle>,
+        cfg: ElasticConfig,
+    ) -> ElasticController {
+        let (fwd_tx, _fwd_rx) = std::sync::mpsc::channel();
+        ElasticController::new(
+            cfg,
+            vec![],
+            vec![StreamBinding { id: StreamId(0), label: "a -> b".into(), handle }],
+            fwd_tx,
+            Arc::new(AtomicBool::new(false)),
+        )
+    }
+
+    #[test]
+    fn shrink_below_occupancy_is_applied_and_audited() {
+        let (q, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(1024));
+        for i in 0..600u64 {
+            assert!(q.try_push(i).is_ok());
+        }
+        let mut ctl = stream_controller(handle.clone(), ElasticConfig::default());
+        // ρ = 0.5 ⇒ the M/M/1/C advice is a handful of slots — far below
+        // both the current capacity and the 600 items still queued.
+        ctl.registry.update(StreamId(0), QueueEnd::Tail, &est(500.0));
+        ctl.registry.update(StreamId(0), QueueEnd::Head, &est(1000.0));
+        ctl.tick_buffers(1);
+        let cap = handle.capacity();
+        assert!(cap < 600, "advice must shrink below occupancy, got {cap}");
+        assert_eq!(handle.len(), 600, "a shrink must not drop queued items");
+        let rep = ctl.snapshot_report();
+        let noted = rep.control_events.iter().any(|e| match e {
+            ControlEvent::Note { note, .. } => note.contains("below occupancy"),
+            _ => false,
+        });
+        assert!(noted, "deferred shrink must be audited: {:?}", rep.control_events);
+        // Drain below the new cap: admission reopens without further help.
+        while q.len() > cap.saturating_sub(1) {
+            let _ = q.try_pop();
+        }
+        assert!(q.try_push(7).is_ok(), "drained queue must re-admit at the new cap");
+    }
+
+    #[test]
+    fn advisor_grow_holds_off_reshrink_for_a_full_cooldown() {
+        let (_q, handle) = instrumented::<u64>(&StreamConfig::default().with_capacity(8));
+        let mut ctl = stream_controller(
+            handle.clone(),
+            ElasticConfig { resize_cooldown_ticks: 2, ..Default::default() },
+        );
+        // Burst: ρ = 0.95 wants a few dozen slots ⇒ grow.
+        ctl.registry.update(StreamId(0), QueueEnd::Tail, &est(950.0));
+        ctl.registry.update(StreamId(0), QueueEnd::Head, &est(1000.0));
+        ctl.tick_buffers(1);
+        let grown = handle.capacity();
+        assert!(grown > 8, "burst must grow the stream, got {grown}");
+        // Burst passes: ρ = 0.5 advises a small buffer again. The shrink
+        // must wait out the resize cooldown (2 ticks) PLUS one extra
+        // full cooldown of post-grow hold (2 ticks) before applying.
+        ctl.registry.update(StreamId(0), QueueEnd::Tail, &est(500.0));
+        for tick in 2..=5u64 {
+            ctl.tick_buffers(tick);
+            assert_eq!(
+                handle.capacity(),
+                grown,
+                "tick {tick}: shrink applied inside cooldown + post-grow hold"
+            );
+        }
+        ctl.tick_buffers(6);
+        assert!(handle.capacity() < grown, "hold expired: shrink must now apply");
+        let resizes = ctl
+            .snapshot_report()
+            .control_events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    ControlEvent::Action(ElasticEvent {
+                        action: ElasticAction::Resize { .. },
+                        ..
+                    })
+                )
+            })
+            .count();
+        assert_eq!(resizes, 2, "exactly the grow and the one deferred shrink");
     }
 }

@@ -45,7 +45,9 @@ use std::time::Duration;
 
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
 use crate::placement::ThreadPin;
-use crate::queue::{MonitorSample, PopResult, PushError, SpscQueue};
+use crate::queue::{
+    MonitorSample, PopResult, PushError, QueueBackend, SegmentedSpsc, SpscQueue, StreamQueue,
+};
 
 use super::policy::ElasticPolicy;
 
@@ -224,8 +226,8 @@ impl<U> Ord for SeqEntry<U> {
 /// One replica's plumbing: its private queue pair.
 struct LaneCore<T: Send + 'static, U: Send + 'static> {
     id: usize,
-    inq: Arc<SpscQueue<Tagged<T>>>,
-    outq: Arc<SpscQueue<Tagged<U>>>,
+    inq: StreamQueue<Tagged<T>>,
+    outq: StreamQueue<Tagged<U>>,
     /// Two-phase retirement: the control plane only *marks* the lane
     /// (and removes it from the active set); the actual `inq.close()`
     /// is performed by the splitter — the lane's unique producer — so
@@ -263,6 +265,13 @@ pub struct ElasticStageConfig {
     pub lane_capacity: usize,
     /// Panic supervision (restart budget + backoff) for the lanes.
     pub supervisor: SupervisorPolicy,
+    /// Queue implementation for the per-lane queues. Defaults to
+    /// [`QueueBackend::Segmented`]: lane queues live directly under
+    /// `BufferAdvisor` resizes and lane churn, where segment reuse and
+    /// memory return pay off — and each worker first-touches its own
+    /// initial segments right after core pinning, so the lane's working
+    /// set lands on the NUMA node Pack assigned to the stage.
+    pub lane_backend: QueueBackend,
 }
 
 impl Default for ElasticStageConfig {
@@ -272,6 +281,7 @@ impl Default for ElasticStageConfig {
             initial_replicas: 1,
             lane_capacity: 256,
             supervisor: SupervisorPolicy::default(),
+            lane_backend: QueueBackend::Segmented,
         }
     }
 }
@@ -287,6 +297,9 @@ pub struct ReplicaSet<T: Send + 'static, U: Send + 'static> {
     factory: Arc<dyn Fn(usize) -> Box<dyn Replicable<In = T, Out = U>> + Send + Sync>,
     policy: ElasticPolicy,
     lane_capacity: usize,
+    /// Queue implementation for the per-lane queues (see
+    /// [`ElasticStageConfig::lane_backend`]).
+    lane_backend: QueueBackend,
     /// Lane panic supervision (restart budget + backoff).
     supervisor: SupervisorPolicy,
     /// Shared panic/loss audit (workers write, merge + reports read).
@@ -322,6 +335,7 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
             factory: Arc::new(factory),
             policy: cfg.policy.clone(),
             lane_capacity: cfg.lane_capacity.max(1),
+            lane_backend: cfg.lane_backend,
             supervisor: cfg.supervisor.clone(),
             faults: Arc::new(StageFaultLog::new()),
             gen: AtomicU64::new(0),
@@ -392,15 +406,31 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
 
     /// Spawn one lane + worker. Caller holds the table lock.
     fn spawn_lane(&self, t: &mut LaneTable<T, U>) -> bool {
+        fn lane_queue<V: Send + 'static>(
+            backend: QueueBackend,
+            cap: usize,
+            item_bytes: usize,
+        ) -> StreamQueue<V> {
+            match backend {
+                QueueBackend::Ring => {
+                    StreamQueue::Ring(Arc::new(SpscQueue::new(cap, item_bytes)))
+                }
+                QueueBackend::Segmented => {
+                    StreamQueue::Segmented(Arc::new(SegmentedSpsc::new(cap, item_bytes)))
+                }
+            }
+        }
         let id = t.next_id;
-        let inq = Arc::new(SpscQueue::<Tagged<T>>::new(
+        let inq = lane_queue::<Tagged<T>>(
+            self.lane_backend,
             self.lane_capacity,
             std::mem::size_of::<T>().max(1),
-        ));
-        let outq = Arc::new(SpscQueue::<Tagged<U>>::new(
+        );
+        let outq = lane_queue::<Tagged<U>>(
+            self.lane_backend,
             self.lane_capacity,
             std::mem::size_of::<U>().max(1),
-        ));
+        );
         let lane = Arc::new(LaneCore {
             id,
             inq: inq.clone(),
@@ -430,6 +460,16 @@ impl<T: Send + 'static, U: Send + 'static> ReplicaSet<T, U> {
                         pin.pin_self();
                     }
                 }
+                // First-touch the lane queues' initial segments from this
+                // thread, *after* pinning: the kernel's first-touch policy
+                // binds the pages to the NUMA node of the cores Pack
+                // assigned to this stage. The splitter and merger share
+                // the stage's cpu set (one ThreadPin per stage), so the
+                // inq producer sits on the same node as this consumer —
+                // the "splitter/merger edges on the producer's node"
+                // placement falls out for free. No-op on ring lanes.
+                lane_for_worker.inq.prefault_initial();
+                lane_for_worker.outq.prefault_initial();
                 drop(lane_for_worker);
                 // Per-item pop/process/push — deliberately NOT pop_batch:
                 // the controller derives each replica's service rate μ
@@ -1082,6 +1122,36 @@ mod tests {
     }
 
     #[test]
+    fn lane_queues_default_to_segmented_backend() {
+        let set = mul_set(2, 4, SEG_SLOTS_TEST);
+        for s in set.lane_probe() {
+            assert!(s.segments >= 1, "segmented lane must own its first segment");
+        }
+        set.close_input();
+        set.join_workers();
+
+        // And the ring stays selectable per stage.
+        let cfg = ElasticStageConfig {
+            policy: ElasticPolicy { min_replicas: 1, max_replicas: 2, ..Default::default() },
+            initial_replicas: 1,
+            lane_capacity: 16,
+            lane_backend: QueueBackend::Ring,
+            ..Default::default()
+        };
+        let ring_set = ReplicaSet::new("mul-ring", cfg, |_i| {
+            Box::new(Mul(3)) as Box<dyn Replicable<In = u64, Out = u64>>
+        })
+        .unwrap();
+        for s in ring_set.lane_probe() {
+            assert_eq!(s.segments, 0, "ring lanes report no segments");
+        }
+        ring_set.close_input();
+        ring_set.join_workers();
+    }
+
+    const SEG_SLOTS_TEST: usize = crate::queue::SEG_SLOTS;
+
+    #[test]
     fn scale_to_respects_bounds_and_counts() {
         let set = mul_set(2, 4, 16);
         assert_eq!(set.replicas(), 2);
@@ -1359,6 +1429,7 @@ mod tests {
                 backoff_base: Duration::from_millis(1),
                 backoff_cap: Duration::from_millis(4),
             },
+            ..Default::default()
         };
         ReplicaSet::new("panicky", cfg, move |_| {
             Box::new(PanicOn(trip)) as Box<dyn Replicable<In = u64, Out = u64>>

@@ -18,6 +18,10 @@ pub struct CpuInfo {
     pub core: usize,
     /// Physical package (socket) id.
     pub package: usize,
+    /// NUMA node id (`/sys/devices/system/node/node<k>/cpulist`); 0 when
+    /// the node tree is absent or unreadable (see
+    /// [`CpuTopology::numa_fallback_reason`]).
+    pub node: usize,
 }
 
 /// Where a topology came from.
@@ -35,20 +39,61 @@ pub enum TopologySource {
 pub struct CpuTopology {
     cpus: Vec<CpuInfo>,
     source: TopologySource,
+    /// Why every cpu sits on node 0 despite a readable cpu tree: the
+    /// NUMA node tree was absent or unreadable. `None` when node ids
+    /// were genuinely parsed (including the trivial one-node host).
+    numa_note: Option<String>,
 }
 
 impl CpuTopology {
-    /// Discover from the canonical sysfs root.
+    /// Discover from the canonical sysfs roots.
     pub fn discover() -> CpuTopology {
-        Self::from_sysfs_root(Path::new("/sys/devices/system/cpu"))
+        Self::from_sysfs_roots(
+            Path::new("/sys/devices/system/cpu"),
+            Path::new("/sys/devices/system/node"),
+        )
     }
 
-    /// Discover from an explicit root (tests point this at a synthetic
-    /// tree).
+    /// Discover from an explicit cpu root, deriving the node tree as its
+    /// sibling `node` directory (the canonical `/sys/devices/system`
+    /// layout). Tests with fully synthetic trees use
+    /// [`CpuTopology::from_sysfs_roots`] to place both explicitly.
     pub fn from_sysfs_root(root: &Path) -> CpuTopology {
+        let node_root = match root.parent() {
+            Some(p) => p.join("node"),
+            None => Path::new("/sys/devices/system/node").to_path_buf(),
+        };
+        Self::from_sysfs_roots(root, &node_root)
+    }
+
+    /// Discover from explicit cpu and NUMA-node sysfs roots. An
+    /// unreadable *cpu* tree is a full flat fallback; an unreadable
+    /// *node* tree only degrades node ids to a single recorded node 0 —
+    /// never an error, and always audited in
+    /// [`CpuTopology::numa_fallback_reason`].
+    pub fn from_sysfs_roots(root: &Path, node_root: &Path) -> CpuTopology {
         match read_sysfs(root) {
-            Ok(cpus) if !cpus.is_empty() => {
-                CpuTopology { cpus, source: TopologySource::Sysfs }
+            Ok(mut cpus) if !cpus.is_empty() => {
+                let numa_note = match read_numa_nodes(node_root) {
+                    Ok(nodes) if !nodes.is_empty() => {
+                        for (node, ids) in &nodes {
+                            for id in ids {
+                                if let Some(c) = cpus.iter_mut().find(|c| c.cpu == *id) {
+                                    c.node = *node;
+                                }
+                            }
+                        }
+                        None
+                    }
+                    Ok(_) => Some(format!(
+                        "{}: no node*/cpulist entries; assuming single NUMA node 0",
+                        node_root.display()
+                    )),
+                    Err(e) => {
+                        Some(format!("{e}; assuming single NUMA node 0"))
+                    }
+                };
+                CpuTopology { cpus, source: TopologySource::Sysfs, numa_note }
             }
             Ok(_) => Self::fallback("sysfs listed no online cpus"),
             Err(e) => Self::fallback(&e),
@@ -59,8 +104,9 @@ impl CpuTopology {
     pub fn fallback(reason: &str) -> CpuTopology {
         let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         CpuTopology {
-            cpus: (0..n).map(|i| CpuInfo { cpu: i, core: i, package: 0 }).collect(),
+            cpus: (0..n).map(|i| CpuInfo { cpu: i, core: i, package: 0, node: 0 }).collect(),
             source: TopologySource::Fallback(reason.to_string()),
+            numa_note: Some(format!("cpu topology fallback ({reason}); assuming single NUMA node 0")),
         }
     }
 
@@ -88,6 +134,36 @@ impl CpuTopology {
         }
     }
 
+    /// Why NUMA node ids degraded to a single node 0, if they did.
+    /// Distinct from [`CpuTopology::fallback_reason`]: the cpu layout
+    /// can be perfectly readable while the node tree is absent
+    /// (containers routinely mask `/sys/devices/system/node`).
+    pub fn numa_fallback_reason(&self) -> Option<&str> {
+        self.numa_note.as_deref()
+    }
+
+    /// NUMA node of one logical cpu (0 for unknown cpus — the flat
+    /// answer a single-node host gives anyway).
+    pub fn node_of(&self, cpu: usize) -> usize {
+        self.cpus.iter().find(|c| c.cpu == cpu).map(|c| c.node).unwrap_or(0)
+    }
+
+    /// Distinct NUMA nodes spanned by a cpu set, ascending. The
+    /// placement pass calls this with a stage's assigned cpus; a
+    /// single-element answer means the stage's first-touch segments are
+    /// node-local by construction.
+    pub fn nodes_of(&self, cpus: &[usize]) -> Vec<usize> {
+        let mut nodes: Vec<usize> = cpus.iter().map(|&c| self.node_of(c)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    /// Number of distinct NUMA nodes (1 on flat/fallback hosts).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes_of(&self.cpus.iter().map(|c| c.cpu).collect::<Vec<_>>()).len()
+    }
+
     /// Logical cpu ids in co-location order: grouped by package, then by
     /// physical core (SMT siblings adjacent), then by cpu id. Walking
     /// this order front-to-back keeps one stage's threads on neighboring
@@ -111,13 +187,37 @@ fn read_sysfs(root: &Path) -> Result<Vec<CpuInfo>, String> {
         // without topology data is its own core on package 0.
         let core = read_id(&tdir.join("core_id")).unwrap_or(id);
         let package = read_id(&tdir.join("physical_package_id")).unwrap_or(0);
-        cpus.push(CpuInfo { cpu: id, core, package });
+        cpus.push(CpuInfo { cpu: id, core, package, node: 0 });
     }
     Ok(cpus)
 }
 
 fn read_id(p: &Path) -> Option<usize> {
     std::fs::read_to_string(p).ok()?.trim().parse().ok()
+}
+
+/// Read `node<k>/cpulist` for every node directory under `node_root`.
+/// Returns `(node id, cpus)` pairs; an unreadable root is an `Err` the
+/// caller downgrades to a recorded single-node fallback. A node whose
+/// `cpulist` is missing or malformed is skipped (memory-only nodes have
+/// an empty cpulist and contribute no cpu mappings, which is correct).
+fn read_numa_nodes(node_root: &Path) -> Result<Vec<(usize, Vec<usize>)>, String> {
+    let entries = std::fs::read_dir(node_root)
+        .map_err(|e| format!("{}: {e}", node_root.display()))?;
+    let mut nodes = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(idx) = name.strip_prefix("node") else { continue };
+        let Ok(node) = idx.parse::<usize>() else { continue };
+        let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+            continue;
+        };
+        let Ok(ids) = parse_cpu_list(list.trim()) else { continue };
+        nodes.push((node, ids));
+    }
+    nodes.sort_unstable_by_key(|(n, _)| *n);
+    Ok(nodes)
 }
 
 /// Parse the kernel's cpu-list format: `"0-3,5,7-8"` → `[0,1,2,3,5,7,8]`.
@@ -174,23 +274,69 @@ mod tests {
         assert!(parse_cpu_list("x").is_err());
     }
 
-    #[test]
-    fn discovers_synthetic_sysfs_tree() {
-        let root = scratch_dir("ok");
-        write(&root, "online", "0-3\n");
+    /// Lay down a 4-cpu synthetic cpu tree under `root/cpu`.
+    fn write_cpu_tree(root: &Path) -> PathBuf {
+        let cpu_root = root.join("cpu");
+        write(root, "cpu/online", "0-3\n");
         for (cpu, core, pkg) in [(0, 0, 0), (1, 0, 0), (2, 1, 0), (3, 1, 0)] {
-            write(&root, &format!("cpu{cpu}/topology/core_id"), &format!("{core}\n"));
+            write(root, &format!("cpu/cpu{cpu}/topology/core_id"), &format!("{core}\n"));
             write(
-                &root,
-                &format!("cpu{cpu}/topology/physical_package_id"),
+                root,
+                &format!("cpu/cpu{cpu}/topology/physical_package_id"),
                 &format!("{pkg}\n"),
             );
         }
-        let t = CpuTopology::from_sysfs_root(&root);
+        cpu_root
+    }
+
+    #[test]
+    fn discovers_synthetic_sysfs_tree_with_numa_nodes() {
+        let root = scratch_dir("ok");
+        let cpu_root = write_cpu_tree(&root);
+        write(&root, "node/node0/cpulist", "0-1\n");
+        write(&root, "node/node1/cpulist", "2-3\n");
+        let t = CpuTopology::from_sysfs_roots(&cpu_root, &root.join("node"));
         assert!(t.is_discovered());
         assert_eq!(t.num_cpus(), 4);
         // SMT siblings (same core) are adjacent in pack order.
         assert_eq!(t.pack_order(), vec![0, 1, 2, 3]);
+        assert_eq!(t.numa_fallback_reason(), None);
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.node_of(1), 0);
+        assert_eq!(t.node_of(3), 1);
+        assert_eq!(t.nodes_of(&[0, 2]), vec![0, 1]);
+        assert_eq!(t.nodes_of(&[2, 3]), vec![1], "a packed stage spans one node");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn missing_node_tree_degrades_to_recorded_node_zero() {
+        // Satellite: a readable cpu tree with NO node tree must come back
+        // as a single audited node 0 — never an error, never node-less.
+        let root = scratch_dir("no-numa");
+        let cpu_root = write_cpu_tree(&root);
+        let t = CpuTopology::from_sysfs_roots(&cpu_root, &root.join("node"));
+        assert!(t.is_discovered(), "cpu discovery must survive a missing node tree");
+        let reason = t.numa_fallback_reason().expect("degradation must be audited");
+        assert!(
+            reason.contains("single NUMA node 0"),
+            "note must say what was assumed: {reason}"
+        );
+        assert!(t.cpus().iter().all(|c| c.node == 0));
+        assert_eq!(t.num_nodes(), 1);
+        assert_eq!(t.nodes_of(&[0, 3]), vec![0]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn empty_node_tree_is_also_a_recorded_fallback() {
+        let root = scratch_dir("empty-numa");
+        let cpu_root = write_cpu_tree(&root);
+        fs::create_dir_all(root.join("node")).unwrap(); // exists, but no node*/
+        let t = CpuTopology::from_sysfs_roots(&cpu_root, &root.join("node"));
+        assert!(t.is_discovered());
+        assert!(t.numa_fallback_reason().unwrap().contains("no node*/cpulist"));
+        assert_eq!(t.num_nodes(), 1);
         let _ = fs::remove_dir_all(&root);
     }
 
@@ -198,14 +344,16 @@ mod tests {
     fn pack_order_groups_by_package_then_core() {
         let t = CpuTopology {
             cpus: vec![
-                CpuInfo { cpu: 0, core: 0, package: 0 },
-                CpuInfo { cpu: 1, core: 0, package: 1 },
-                CpuInfo { cpu: 2, core: 1, package: 0 },
-                CpuInfo { cpu: 3, core: 0, package: 0 }, // SMT sibling of cpu 0
+                CpuInfo { cpu: 0, core: 0, package: 0, node: 0 },
+                CpuInfo { cpu: 1, core: 0, package: 1, node: 1 },
+                CpuInfo { cpu: 2, core: 1, package: 0, node: 0 },
+                CpuInfo { cpu: 3, core: 0, package: 0, node: 0 }, // SMT sibling of cpu 0
             ],
             source: TopologySource::Sysfs,
+            numa_note: None,
         };
         assert_eq!(t.pack_order(), vec![0, 3, 2, 1]);
+        assert_eq!(t.nodes_of(&[0, 1]), vec![0, 1]);
     }
 
     #[test]
@@ -214,19 +362,24 @@ mod tests {
         assert!(!t.is_discovered());
         assert!(t.num_cpus() >= 1);
         assert!(t.fallback_reason().is_some());
+        assert!(
+            t.numa_fallback_reason().is_some(),
+            "flat fallback also records the single-node assumption"
+        );
         assert_eq!(t.pack_order().len(), t.num_cpus());
+        assert_eq!(t.num_nodes(), 1);
     }
 
     #[test]
     fn missing_topology_files_degrade_per_cpu() {
         let root = scratch_dir("partial");
-        write(&root, "online", "0-1");
+        write(&root, "cpu/online", "0-1");
         // cpu0 has data, cpu1 has none: cpu1 becomes its own core.
-        write(&root, "cpu0/topology/core_id", "0");
-        write(&root, "cpu0/topology/physical_package_id", "0");
-        let t = CpuTopology::from_sysfs_root(&root);
+        write(&root, "cpu/cpu0/topology/core_id", "0");
+        write(&root, "cpu/cpu0/topology/physical_package_id", "0");
+        let t = CpuTopology::from_sysfs_roots(&root.join("cpu"), &root.join("node"));
         assert!(t.is_discovered());
-        assert_eq!(t.cpus()[1], CpuInfo { cpu: 1, core: 1, package: 0 });
+        assert_eq!(t.cpus()[1], CpuInfo { cpu: 1, core: 1, package: 0, node: 0 });
         let _ = fs::remove_dir_all(&root);
     }
 }

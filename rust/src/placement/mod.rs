@@ -185,6 +185,12 @@ pub struct PlacementAssignment {
     pub pinned_threads: usize,
     /// Pin attempts that were refused (permission, platform, env).
     pub denied_threads: usize,
+    /// NUMA node the stage's cpu set sits on — the node its lane queues'
+    /// segments are first-touched onto. `None` when the set straddles
+    /// nodes (first-touch still lands per-lane on each worker's node) or
+    /// when node ids were a recorded fallback (see
+    /// [`PlacementReport::notes`]).
+    pub numa_node: Option<usize>,
     /// First refusal reason, if any.
     pub note: Option<String>,
 }

@@ -5,18 +5,18 @@
 //! type-erased inside [`crate::kernel::KernelContext`] and recovered with
 //! `ctx.input::<T>(i)` / `ctx.output::<T>(i)`.
 
-use std::sync::Arc;
-
-use crate::queue::{PopResult, PushError, SpscQueue};
+use crate::queue::{PopResult, PushError, StreamQueue};
 
 /// Consumer end of a stream.
 pub struct InputPort<T: Send> {
-    q: Arc<SpscQueue<T>>,
+    q: StreamQueue<T>,
 }
 
 impl<T: Send> InputPort<T> {
-    pub fn new(q: Arc<SpscQueue<T>>) -> Self {
-        InputPort { q }
+    /// Wrap either backend: an `Arc<SpscQueue<T>>`, an
+    /// `Arc<SegmentedSpsc<T>>`, or an already-erased [`StreamQueue`].
+    pub fn new(q: impl Into<StreamQueue<T>>) -> Self {
+        InputPort { q: q.into() }
     }
 
     /// Non-blocking pop.
@@ -62,12 +62,13 @@ impl<T: Send> InputPort<T> {
 
 /// Producer end of a stream.
 pub struct OutputPort<T: Send> {
-    q: Arc<SpscQueue<T>>,
+    q: StreamQueue<T>,
 }
 
 impl<T: Send> OutputPort<T> {
-    pub fn new(q: Arc<SpscQueue<T>>) -> Self {
-        OutputPort { q }
+    /// Wrap either backend (see [`InputPort::new`]).
+    pub fn new(q: impl Into<StreamQueue<T>>) -> Self {
+        OutputPort { q: q.into() }
     }
 
     /// Non-blocking push.
@@ -165,6 +166,22 @@ mod tests {
         op.close();
         assert_eq!(ip.pop_batch(&mut out, 8), 0);
         assert!(ip.is_finished());
+    }
+
+    #[test]
+    fn ports_accept_segmented_backend() {
+        use crate::queue::{build, QueueBackend};
+        let cfg = StreamConfig::default().with_backend(QueueBackend::Segmented).with_capacity(32);
+        let (q, h) = build::<u32>(&cfg);
+        let ip = InputPort::new(q.clone());
+        let op = OutputPort::new(q);
+        assert_eq!(op.push_iter(0..20u32).unwrap(), 20);
+        let mut out = Vec::new();
+        assert_eq!(ip.pop_batch(&mut out, usize::MAX), 20);
+        assert_eq!(out, (0..20u32).collect::<Vec<_>>());
+        op.close();
+        assert!(ip.is_finished());
+        assert!(h.counters().segments() >= 1);
     }
 
     #[test]

@@ -76,12 +76,27 @@ struct SamplerLine {
     write_blocked_ns: AtomicU64,
 }
 
+/// Segment-backend memory audit (cold line: touched only at segment
+/// boundaries, roughly once per `SEG_SLOTS` items, never per item).
+/// A contiguous-ring queue leaves both at zero.
+#[derive(Debug)]
+struct SegmentLine {
+    /// Segments currently owned by the queue: the live chain plus the
+    /// per-queue free list. This is the gauge a shrink audit watches —
+    /// memory is only *returned* when it drops.
+    owned: AtomicU64,
+    /// Lifetime segments taken from the global allocator (free-list
+    /// reuses do not count — that is the point of the free list).
+    allocs: AtomicU64,
+}
+
 /// Shared instrumentation state between a queue's two ends and its monitor.
 #[derive(Debug)]
 pub struct QueueCounters {
     cons: CachePadded<ConsumerLine>,
     prod: CachePadded<ProducerLine>,
     sampler: CachePadded<SamplerLine>,
+    seg: CachePadded<SegmentLine>,
     /// Bytes per item `d̄`.
     item_bytes: usize,
 }
@@ -98,6 +113,15 @@ pub struct MonitorSample {
     pub read_blocked_ns: u64,
     /// Nanoseconds the producer spent blocked on full during the period.
     pub write_blocked_ns: u64,
+    /// Segments currently owned by the queue (live chain + free list) at
+    /// sample time. **Gauge semantics** — an absolute reading, not a
+    /// delta: the controller audits a shrink by watching this fall.
+    /// Always 0 for the contiguous-ring backend.
+    pub segments: u64,
+    /// Lifetime segment allocations from the global allocator at sample
+    /// time. **Counter semantics** — absolute, monotonic; free-list
+    /// reuses do not advance it. Always 0 for the ring backend.
+    pub segment_allocs: u64,
 }
 
 impl MonitorSample {
@@ -155,6 +179,10 @@ impl QueueCounters {
                 tail: AtomicU64::new(0),
                 read_blocked_ns: AtomicU64::new(0),
                 write_blocked_ns: AtomicU64::new(0),
+            }),
+            seg: CachePadded::new(SegmentLine {
+                owned: AtomicU64::new(0),
+                allocs: AtomicU64::new(0),
             }),
             item_bytes,
         }
@@ -254,6 +282,8 @@ impl QueueCounters {
             tc_tail: tail.saturating_sub(prev_tail),
             read_blocked_ns: rb,
             write_blocked_ns: wb,
+            segments: self.seg.owned.load(Ordering::Relaxed),
+            segment_allocs: self.seg.allocs.load(Ordering::Relaxed),
         }
     }
 
@@ -280,6 +310,35 @@ impl QueueCounters {
     /// Bytes per item `d̄`.
     pub fn item_bytes(&self) -> usize {
         self.item_bytes
+    }
+
+    // ------------------------------------------ segment-backend audit --
+
+    /// Segment-backend hook: one segment taken from the global allocator.
+    /// Called off the per-item path (at most once per `SEG_SLOTS` items).
+    #[inline]
+    pub fn note_segment_alloc(&self) {
+        self.seg.allocs.fetch_add(1, Ordering::Relaxed);
+        self.seg.owned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Segment-backend hook: one segment returned to the global allocator
+    /// (free-list handoffs between the two ends do not call this).
+    #[inline]
+    pub fn note_segment_freed(&self) {
+        self.seg.owned.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Segments currently owned by the queue (live chain + free list);
+    /// 0 for the contiguous-ring backend. Gauge for `sf_queue_segments`.
+    pub fn segments(&self) -> u64 {
+        self.seg.owned.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime allocator-backed segment allocations; 0 for the ring
+    /// backend. Counter for `sf_segment_allocs_total`.
+    pub fn segment_allocs(&self) -> u64 {
+        self.seg.allocs.load(Ordering::Relaxed)
     }
 }
 
@@ -363,6 +422,25 @@ mod tests {
         let residue = c.sample().tc_tail;
         assert_eq!(sampled + residue, n);
         assert_eq!(c.total_pushes(), n);
+    }
+
+    #[test]
+    fn segment_audit_is_gauge_plus_counter() {
+        let c = QueueCounters::new(8);
+        assert_eq!(c.segments(), 0);
+        assert_eq!(c.segment_allocs(), 0);
+        c.note_segment_alloc();
+        c.note_segment_alloc();
+        c.note_segment_freed();
+        // Gauge: absolute owned count. Counter: lifetime allocs.
+        assert_eq!(c.segments(), 1);
+        assert_eq!(c.segment_allocs(), 2);
+        // The sample carries absolute readings (no delta semantics) —
+        // two consecutive samples see the same values.
+        let s1 = c.sample();
+        let s2 = c.sample();
+        assert_eq!((s1.segments, s1.segment_allocs), (1, 2));
+        assert_eq!((s2.segments, s2.segment_allocs), (1, 2));
     }
 
     #[test]

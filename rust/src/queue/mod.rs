@@ -20,14 +20,41 @@
 //!   writes for the monitor to observe;
 //! * **batched transfer** ([`SpscQueue::try_push_iter`] /
 //!   [`SpscQueue::pop_batch`]) publishing one Release store per batch.
+//!
+//! Two backends speak this protocol — the contiguous block ring
+//! ([`SpscQueue`], the default) and the linked-segment queue
+//! ([`SegmentedSpsc`], default for elastic lane queues), selected per
+//! edge via [`StreamConfig::with_backend`] and erased behind
+//! [`StreamQueue`] for ports and stages.
 
 pub mod counters;
+pub mod segmented;
 pub mod spsc;
 
 pub use counters::{MonitorSample, QueueCounters};
+pub use segmented::{SegmentedSpsc, SEG_SLOTS};
 pub use spsc::{PopResult, PushError, SpscQueue};
 
 use std::sync::Arc;
+
+/// Which SPSC implementation backs a stream. Both speak the identical
+/// protocol (monotonic head/tail in [`QueueCounters`], cached peer
+/// snapshots, one Release per publish, flagged close); they differ only
+/// in how capacity maps to memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueBackend {
+    /// Contiguous block ring ([`SpscQueue`]): memory provisioned by the
+    /// fixed block chain, resize moves only the admission bound. Best
+    /// for steady-state edges sized once.
+    #[default]
+    Ring,
+    /// Linked segments ([`SegmentedSpsc`]): capacity is a segment
+    /// *budget* — grows link memory only when the producer is behind,
+    /// shrinks return drained segments past a small free list to the
+    /// allocator, with every allocator interaction audited. Best for
+    /// elastic lane queues living under `BufferAdvisor` resizes.
+    Segmented,
+}
 
 /// Per-stream configuration.
 #[derive(Debug, Clone)]
@@ -43,6 +70,10 @@ pub struct StreamConfig {
     /// the default — value equality alone cannot tell a deliberate
     /// `with_capacity(1024)` from an untouched config.
     pub capacity_overridden: bool,
+    /// Queue implementation for this edge. Defaults to the contiguous
+    /// ring; elastic lane queues default to [`QueueBackend::Segmented`]
+    /// via `ElasticStageConfig::lane_backend`.
+    pub backend: QueueBackend,
 }
 
 impl Default for StreamConfig {
@@ -52,6 +83,7 @@ impl Default for StreamConfig {
             item_bytes: None,
             instrument: true,
             capacity_overridden: false,
+            backend: QueueBackend::default(),
         }
     }
 }
@@ -70,6 +102,11 @@ impl StreamConfig {
 
     pub fn uninstrumented(mut self) -> Self {
         self.instrument = false;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: QueueBackend) -> Self {
+        self.backend = backend;
         self
     }
 }
@@ -123,7 +160,176 @@ impl<T: Send> MonitorHandle for SpscQueue<T> {
     }
 }
 
-/// Build a queue + its monitor view in one step.
+impl<T: Send> MonitorHandle for SegmentedSpsc<T> {
+    fn counters(&self) -> &QueueCounters {
+        SegmentedSpsc::counters(self)
+    }
+    fn capacity(&self) -> usize {
+        SegmentedSpsc::capacity(self)
+    }
+    fn set_capacity(&self, cap: usize) {
+        SegmentedSpsc::set_capacity(self, cap)
+    }
+    fn len(&self) -> usize {
+        SegmentedSpsc::len(self)
+    }
+    fn is_closed(&self) -> bool {
+        SegmentedSpsc::is_closed(self)
+    }
+    fn poison(&self) {
+        SegmentedSpsc::poison(self)
+    }
+    fn is_poisoned(&self) -> bool {
+        SegmentedSpsc::is_poisoned(self)
+    }
+}
+
+/// Backend-erased handle to one stream end-pair. Enum dispatch rather
+/// than a trait object because the batched transfer methods are generic
+/// over the iterator type (not object-safe); the match compiles to a
+/// predictable two-way branch and the per-item work inlines per arm.
+pub enum StreamQueue<T: Send> {
+    Ring(Arc<SpscQueue<T>>),
+    Segmented(Arc<SegmentedSpsc<T>>),
+}
+
+impl<T: Send> Clone for StreamQueue<T> {
+    fn clone(&self) -> Self {
+        match self {
+            StreamQueue::Ring(q) => StreamQueue::Ring(q.clone()),
+            StreamQueue::Segmented(q) => StreamQueue::Segmented(q.clone()),
+        }
+    }
+}
+
+impl<T: Send> From<Arc<SpscQueue<T>>> for StreamQueue<T> {
+    fn from(q: Arc<SpscQueue<T>>) -> Self {
+        StreamQueue::Ring(q)
+    }
+}
+
+impl<T: Send> From<Arc<SegmentedSpsc<T>>> for StreamQueue<T> {
+    fn from(q: Arc<SegmentedSpsc<T>>) -> Self {
+        StreamQueue::Segmented(q)
+    }
+}
+
+/// Forward a method to whichever backend is live.
+macro_rules! forward {
+    ($self:ident, $q:ident => $e:expr) => {
+        match $self {
+            StreamQueue::Ring($q) => $e,
+            StreamQueue::Segmented($q) => $e,
+        }
+    };
+}
+
+impl<T: Send> StreamQueue<T> {
+    /// Which backend this stream runs on (for reports and placement
+    /// audit notes).
+    pub fn backend(&self) -> QueueBackend {
+        match self {
+            StreamQueue::Ring(_) => QueueBackend::Ring,
+            StreamQueue::Segmented(_) => QueueBackend::Segmented,
+        }
+    }
+
+    /// Monitor view of this queue, backend-independent.
+    pub fn monitor_handle(&self) -> Arc<dyn MonitorHandle> {
+        match self {
+            StreamQueue::Ring(q) => q.clone(),
+            StreamQueue::Segmented(q) => q.clone(),
+        }
+    }
+
+    #[inline]
+    pub fn try_push(&self, v: T) -> Result<(), PushError<T>> {
+        forward!(self, q => q.try_push(v))
+    }
+
+    #[inline]
+    pub fn push(&self, v: T) -> Result<(), PushError<T>> {
+        forward!(self, q => q.push(v))
+    }
+
+    #[inline]
+    pub fn try_push_iter<I: Iterator<Item = T>>(&self, iter: &mut I) -> usize {
+        forward!(self, q => q.try_push_iter(iter))
+    }
+
+    #[inline]
+    pub fn push_iter<I: IntoIterator<Item = T>>(&self, iter: I) -> Result<usize, PushError<T>> {
+        forward!(self, q => q.push_iter(iter))
+    }
+
+    #[inline]
+    pub fn try_pop(&self) -> PopResult<T> {
+        forward!(self, q => q.try_pop())
+    }
+
+    #[inline]
+    pub fn pop(&self) -> Option<T> {
+        forward!(self, q => q.pop())
+    }
+
+    #[inline]
+    pub fn pop_batch(&self, out: &mut Vec<T>, max: usize) -> usize {
+        forward!(self, q => q.pop_batch(out, max))
+    }
+
+    pub fn close(&self) {
+        forward!(self, q => q.close())
+    }
+
+    pub fn poison(&self) {
+        forward!(self, q => q.poison())
+    }
+
+    pub fn len(&self) -> usize {
+        forward!(self, q => q.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        forward!(self, q => q.is_empty())
+    }
+
+    pub fn capacity(&self) -> usize {
+        forward!(self, q => q.capacity())
+    }
+
+    pub fn set_capacity(&self, cap: usize) {
+        forward!(self, q => q.set_capacity(cap))
+    }
+
+    pub fn counters(&self) -> &QueueCounters {
+        forward!(self, q => q.counters())
+    }
+
+    pub fn is_closed(&self) -> bool {
+        forward!(self, q => q.is_closed())
+    }
+
+    pub fn is_finished(&self) -> bool {
+        forward!(self, q => q.is_finished())
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        forward!(self, q => q.is_poisoned())
+    }
+
+    /// First-touch the initial working set from the calling thread
+    /// (segmented backend; no-op on the ring, whose chain is touched at
+    /// construction). Returns segments actually faulted in.
+    pub fn prefault_initial(&self) -> usize {
+        match self {
+            StreamQueue::Ring(_) => 0,
+            StreamQueue::Segmented(q) => q.prefault_initial(),
+        }
+    }
+}
+
+/// Build a queue + its monitor view in one step (contiguous ring — the
+/// default backend; see [`build`] for backend-honoring construction).
 pub fn instrumented<T: Send + 'static>(
     cfg: &StreamConfig,
 ) -> (Arc<SpscQueue<T>>, Arc<dyn MonitorHandle>) {
@@ -131,6 +337,23 @@ pub fn instrumented<T: Send + 'static>(
     let q = Arc::new(SpscQueue::<T>::new(cfg.capacity, item_bytes));
     let h: Arc<dyn MonitorHandle> = q.clone();
     (q, h)
+}
+
+/// Build a queue honoring `cfg.backend` + its monitor view.
+pub fn build<T: Send + 'static>(cfg: &StreamConfig) -> (StreamQueue<T>, Arc<dyn MonitorHandle>) {
+    let item_bytes = cfg.item_bytes.unwrap_or(std::mem::size_of::<T>());
+    match cfg.backend {
+        QueueBackend::Ring => {
+            let q = Arc::new(SpscQueue::<T>::new(cfg.capacity, item_bytes));
+            let h: Arc<dyn MonitorHandle> = q.clone();
+            (StreamQueue::Ring(q), h)
+        }
+        QueueBackend::Segmented => {
+            let q = Arc::new(SegmentedSpsc::<T>::new(cfg.capacity, item_bytes));
+            let h: Arc<dyn MonitorHandle> = q.clone();
+            (StreamQueue::Segmented(q), h)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -154,5 +377,49 @@ mod tests {
         assert_eq!(h.capacity(), 1024);
         assert!(h.is_empty());
         assert!(!h.is_closed());
+    }
+
+    #[test]
+    fn build_honors_backend_selection() {
+        let (q, h) = build::<u64>(&StreamConfig::default());
+        assert_eq!(q.backend(), QueueBackend::Ring, "default stays the ring");
+        assert_eq!(h.counters().segments(), 0, "ring reports no segments");
+
+        let cfg = StreamConfig::default().with_backend(QueueBackend::Segmented).with_capacity(64);
+        let (q, h) = build::<u64>(&cfg);
+        assert_eq!(q.backend(), QueueBackend::Segmented);
+        assert_eq!(q.capacity(), 64);
+        assert!(h.counters().segments() >= 1, "segmented owns its first segment");
+    }
+
+    #[test]
+    fn stream_queue_forwards_both_backends() {
+        for backend in [QueueBackend::Ring, QueueBackend::Segmented] {
+            let cfg = StreamConfig::default().with_backend(backend).with_capacity(8);
+            let (q, h) = build::<u64>(&cfg);
+            q.push(1).unwrap();
+            assert_eq!(q.len(), 1);
+            assert_eq!(q.pop(), Some(1));
+            q.set_capacity(16);
+            assert_eq!(h.capacity(), 16);
+            assert_eq!(q.try_push_iter(&mut (0..100u64)), 16, "admission bound via handle");
+            let mut out = Vec::new();
+            assert_eq!(q.pop_batch(&mut out, usize::MAX), 16);
+            q.close();
+            assert!(q.is_finished() && h.is_closed());
+            let s = h.counters().sample();
+            assert_eq!(s.tc_head, 17, "{backend:?}: monitor deltas survive the facade");
+        }
+    }
+
+    #[test]
+    fn stream_queue_poison_is_flagged_close() {
+        let cfg = StreamConfig::default().with_backend(QueueBackend::Segmented);
+        let (q, h) = build::<u64>(&cfg);
+        q.push(9).unwrap();
+        h.poison();
+        assert!(q.is_poisoned() && q.is_closed());
+        assert_eq!(q.pop(), Some(9), "peers drain past a poisoned close");
+        assert_eq!(q.pop(), None);
     }
 }

@@ -1,0 +1,1232 @@
+//! Segmented SPSC queue — elastic *memory*, not just elastic admission.
+//!
+//! [`crate::queue::spsc::SpscQueue`] already made the §III capacity
+//! resize a single atomic store, but only for the **admission** bound:
+//! its block chain grows on demand and shrinks only as fast as the
+//! consumer happens to drain, and every boundary crossing is a global
+//! allocator round-trip. [`SegmentedSpsc`] keeps the exact PR-2 protocol
+//! — monotonic head/tail indices living in
+//! [`QueueCounters`], cached peer snapshots, one
+//! Release store per publish, no RMW on the per-item path, the same
+//! `close()`/`poison()` flagged-close semantics — and changes only what
+//! happens at segment boundaries:
+//!
+//! * segments are **fixed-size ([`SEG_SLOTS`] slots) and cache-line
+//!   aligned**, linked producer-side exactly like the ring's blocks;
+//! * a drained segment is **retired to a per-queue free list** (bounded
+//!   by the current segment budget) instead of going straight back to
+//!   the allocator, so a producer crossing a boundary *reuses* warm,
+//!   already-faulted, already-local memory — the steady-state hot path
+//!   performs **zero** allocator calls;
+//! * [`SegmentedSpsc::set_capacity`] is a **segment-budget change**:
+//!   grows still take effect lazily — a fresh segment is linked only
+//!   when the producer is actually behind (at a boundary with the free
+//!   list empty) — and shrinks lower the free-list retention target so
+//!   drained segments fall through to the allocator and memory is
+//!   *actually returned*;
+//! * every allocator interaction is audited in the counters
+//!   ([`QueueCounters::segments`] /
+//!   [`QueueCounters::segment_allocs`], surfaced as the
+//!   `sf_queue_segments` gauge and `sf_segment_allocs_total` counter),
+//!   so the controller can verify a shrink returned memory instead of
+//!   trusting it did;
+//! * [`SegmentedSpsc::prefault`] lets the *consuming* thread allocate
+//!   and touch the initial segments before traffic starts. On a NUMA
+//!   host, first-touch places those pages on the node of the thread
+//!   that faults them — the elastic lane worker calls this right after
+//!   pinning itself to the cores `PlacementPolicy::Pack` assigned, so a
+//!   lane's working set is node-local by construction (no libnuma, no
+//!   syscalls: the OS first-touch policy does the placement).
+//!
+//! # Free-list safety
+//!
+//! The free list is a Treiber stack with exactly one pusher (the
+//! consumer, retiring drained segments; plus pre-traffic `prefault`
+//! calls) and exactly one popper (the producer, at a boundary). The ABA
+//! problem needs a popped node to be *re-pushed* while a pop is
+//! in-flight — impossible here: only the producer pops, so no node it
+//! observed can re-enter the stack mid-pop. A reused segment's `next`
+//! pointer is nulled by the producer *before* the segment is linked, and
+//! the link is published by the same Release tail store the consumer
+//! already Acquires, so no new ordering edges are needed beyond PR-2's.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crossbeam_utils::CachePadded;
+
+use super::counters::QueueCounters;
+use super::spsc::{PopResult, PushError};
+
+/// Items per segment. 128 keeps a `u64` segment ~1 KiB (one or two pages
+/// with headers), small enough that a shrink returns memory at fine
+/// granularity and a first-touch prefault is cheap, large enough that
+/// boundary crossings stay off the per-item path (1 in 128 operations).
+/// Matches the fixed 128-slot segments of the linked-segment SPSC design
+/// this backend follows.
+pub const SEG_SLOTS: usize = 128;
+
+/// Hard ceiling on free-list retention, independent of budget: a "small
+/// per-queue free list", not a hoard. Shrinks below this still return
+/// memory because the retention target is `min(budget_segments, FREE_CAP)`.
+const FREE_CAP: usize = 8;
+
+/// Backoff ladder — identical to the ring's so the two backends are
+/// comparable under the same blocked-duration accounting.
+const SPIN_PASSES: u32 = 64;
+const YIELD_PASSES: u32 = 64;
+const PARK_MIN_NS: u64 = 100_000;
+const PARK_MAX_NS: u64 = 2_000_000;
+
+/// One fixed-size segment. `#[repr(align(64))]` starts every segment on
+/// a cache-line boundary so the producer's slot writes and the link word
+/// never straddle a line shared with a neighboring allocation.
+#[repr(align(64))]
+struct Segment<T> {
+    slots: [UnsafeCell<MaybeUninit<T>>; SEG_SLOTS],
+    /// Next segment in the live chain — or in the free stack, where the
+    /// same word doubles as the stack link (a segment is only ever in
+    /// one of the two structures).
+    next: AtomicPtr<Segment<T>>,
+}
+
+impl<T> Segment<T> {
+    fn alloc() -> *mut Segment<T> {
+        let s: Box<Segment<T>> = Box::new(Segment {
+            // SAFETY: an array of MaybeUninit is validly uninitialized.
+            slots: unsafe { MaybeUninit::uninit().assume_init() },
+            next: AtomicPtr::new(std::ptr::null_mut()),
+        });
+        Box::into_raw(s)
+    }
+}
+
+/// Producer-private state: write cursor + local/cached indices.
+struct ProdState<T> {
+    seg: *mut Segment<T>,
+    idx: usize,
+    tail: u64,
+    head_cache: u64,
+}
+
+/// Consumer-private state: read cursor + local/cached indices.
+struct ConsState<T> {
+    seg: *mut Segment<T>,
+    idx: usize,
+    head: u64,
+    tail_cache: u64,
+}
+
+/// Park/wake handshake — same protocol as the ring's waiter.
+struct Waiter {
+    parked: AtomicBool,
+    thread: std::sync::Mutex<Option<std::thread::Thread>>,
+}
+
+impl Waiter {
+    fn new() -> Self {
+        Waiter { parked: AtomicBool::new(false), thread: std::sync::Mutex::new(None) }
+    }
+
+    fn prepare(&self) {
+        *self.thread.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(std::thread::current());
+        self.parked.store(true, Ordering::SeqCst);
+    }
+
+    fn cancel(&self) {
+        self.parked.store(false, Ordering::SeqCst);
+    }
+
+    #[inline]
+    fn wake(&self) {
+        if self.parked.load(Ordering::Relaxed) {
+            self.wake_slow();
+        }
+    }
+
+    #[cold]
+    fn wake_slow(&self) {
+        if self.parked.swap(false, Ordering::SeqCst) {
+            if let Some(t) = self.thread.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                t.unpark();
+            }
+        }
+    }
+}
+
+/// Blocked-time bookkeeping — same drop-guard discipline as the ring's.
+struct WaitGuard<'a> {
+    counters: &'a QueueCounters,
+    time: crate::timing::TimeRef,
+    last_flush: u64,
+    write_side: bool,
+}
+
+impl<'a> WaitGuard<'a> {
+    fn new(counters: &'a QueueCounters, write_side: bool) -> Self {
+        let time = crate::timing::TimeRef::new();
+        let now = time.now_ns();
+        if write_side {
+            counters.mark_write_waiting(now.max(1));
+        } else {
+            counters.mark_read_waiting(now.max(1));
+        }
+        WaitGuard { counters, time, last_flush: now, write_side }
+    }
+
+    fn flush(&mut self) {
+        let now = self.time.now_ns();
+        let span = now.saturating_sub(self.last_flush);
+        self.last_flush = now;
+        if self.write_side {
+            self.counters.note_write_blocked(span);
+            self.counters.mark_write_waiting(now.max(1));
+        } else {
+            self.counters.note_read_blocked(span);
+            self.counters.mark_read_waiting(now.max(1));
+        }
+    }
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let span = self.time.now_ns().saturating_sub(self.last_flush);
+        if self.write_side {
+            self.counters.note_write_blocked(span);
+            self.counters.mark_write_waiting(0);
+        } else {
+            self.counters.note_read_blocked(span);
+            self.counters.mark_read_waiting(0);
+        }
+    }
+}
+
+/// The segmented queue. See module docs; the public API is method-for-
+/// method identical to [`crate::queue::SpscQueue`] so
+/// [`crate::queue::StreamQueue`] can dispatch over both.
+pub struct SegmentedSpsc<T> {
+    prod: CachePadded<UnsafeCell<ProdState<T>>>,
+    cons: CachePadded<UnsafeCell<ConsState<T>>>,
+    /// Admission bound in items; `set_capacity` stores here. The segment
+    /// budget and free-list retention target derive from it on demand.
+    capacity: AtomicUsize,
+    /// Retired-segment free stack head (Treiber; see module docs).
+    free: AtomicPtr<Segment<T>>,
+    /// Approximate free-stack depth (Relaxed bookkeeping either side of
+    /// the CAS; only used to bound retention, so drift is harmless).
+    free_len: AtomicUsize,
+    closed: AtomicBool,
+    poisoned: AtomicBool,
+    prod_waiter: CachePadded<Waiter>,
+    cons_waiter: CachePadded<Waiter>,
+    counters: QueueCounters,
+}
+
+// SAFETY: same SPSC contract as the ring — one pusher thread, one popper
+// thread; the free stack tolerates the prefault third-party pusher (see
+// module docs on ABA).
+unsafe impl<T: Send> Send for SegmentedSpsc<T> {}
+unsafe impl<T: Send> Sync for SegmentedSpsc<T> {}
+
+impl<T: Send> SegmentedSpsc<T> {
+    /// New queue with an admission capacity of `capacity` items (min 1)
+    /// and `item_bytes` = d̄. Allocates exactly one segment up front; the
+    /// rest of the working set arrives via [`SegmentedSpsc::prefault`]
+    /// (first-touch placement) or lazily as the producer gets behind.
+    pub fn new(capacity: usize, item_bytes: usize) -> Self {
+        let capacity = capacity.max(1);
+        let counters = QueueCounters::new(item_bytes);
+        let first = Segment::alloc();
+        counters.note_segment_alloc();
+        SegmentedSpsc {
+            prod: CachePadded::new(UnsafeCell::new(ProdState {
+                seg: first,
+                idx: 0,
+                tail: 0,
+                head_cache: 0,
+            })),
+            cons: CachePadded::new(UnsafeCell::new(ConsState {
+                seg: first,
+                idx: 0,
+                head: 0,
+                tail_cache: 0,
+            })),
+            capacity: AtomicUsize::new(capacity),
+            free: AtomicPtr::new(std::ptr::null_mut()),
+            free_len: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+            prod_waiter: CachePadded::new(Waiter::new()),
+            cons_waiter: CachePadded::new(Waiter::new()),
+            counters,
+        }
+    }
+
+    /// Instrumentation block (shared with the monitor).
+    pub fn counters(&self) -> &QueueCounters {
+        &self.counters
+    }
+
+    /// Current item count: `tail − head`, computed on demand.
+    #[inline]
+    pub fn len(&self) -> usize {
+        let head = self.counters.head_index().load(Ordering::Relaxed);
+        let tail = self.counters.tail_index().load(Ordering::Acquire);
+        tail.saturating_sub(head) as usize
+    }
+
+    /// True when no items are in flight.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admission capacity (items).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Segment-budget change (the §III resize, memory edition). A grow
+    /// opens admission immediately but links memory only when the
+    /// producer is actually behind — a fresh segment is taken at a
+    /// boundary, from the free list first. A shrink gates admissions at
+    /// once (occupancy above the new bound drains naturally, exactly
+    /// like the ring — see `SpscQueue::set_capacity`) *and* lowers the
+    /// free-list retention target, so segments the consumer drains from
+    /// now on fall through to the allocator: watch
+    /// [`QueueCounters::segments`] fall to audit the memory coming back.
+    pub fn set_capacity(&self, cap: usize) {
+        self.capacity.store(cap.max(1), Ordering::Relaxed);
+        self.prod_waiter.wake();
+    }
+
+    /// Segments the current capacity is entitled to retain (live or on
+    /// the free list): the budget a shrink audit converges toward.
+    pub fn segment_budget(&self) -> usize {
+        // Manual ceil-div (`div_ceil` would raise the crate's MSRV).
+        ((self.capacity() + SEG_SLOTS - 1) / SEG_SLOTS).max(1)
+    }
+
+    /// Free-list retention target: small, and never above the budget.
+    #[inline]
+    fn free_target(&self) -> usize {
+        self.segment_budget().min(FREE_CAP)
+    }
+
+    /// Allocate and **touch** up to `n` segments into the free list from
+    /// the calling thread, returning how many were added. On a NUMA host
+    /// the first write to each fresh page binds it to the caller's node
+    /// (the kernel's first-touch policy), so a pinned lane worker calling
+    /// this right after `pin_self()` gets node-local segments for the
+    /// whole initial working set. Capped at the segment budget; safe to
+    /// call from any thread before or during traffic (it only pushes to
+    /// the free stack).
+    pub fn prefault(&self, n: usize) -> usize {
+        let want = n.min(self.segment_budget());
+        let mut added = 0;
+        while added < want {
+            if self.free_len.load(Ordering::Relaxed) >= self.free_target() {
+                break;
+            }
+            let seg = Segment::<T>::alloc();
+            // First-touch every page of the segment. The slots are
+            // MaybeUninit and the link word is re-nulled below, so a
+            // byte-level zero of the whole allocation is sound.
+            unsafe {
+                std::ptr::write_bytes(seg.cast::<u8>(), 0, std::mem::size_of::<Segment<T>>());
+                (*seg).next = AtomicPtr::new(std::ptr::null_mut());
+            }
+            self.counters.note_segment_alloc();
+            self.push_free(seg);
+            added += 1;
+        }
+        added
+    }
+
+    /// Prefault the working set an elastic lane wants at spawn: the
+    /// whole (small) segment budget, bounded by the free-list cap.
+    pub fn prefault_initial(&self) -> usize {
+        self.prefault(self.free_target())
+    }
+
+    #[inline]
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn is_finished(&self) -> bool {
+        self.is_closed() && self.is_empty()
+    }
+
+    /// Close the stream. Idempotent; wakes both ends.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.prod_waiter.wake();
+        self.cons_waiter.wake();
+    }
+
+    /// Poison: a close with a fault verdict — same flagged-close
+    /// protocol as the ring (`poison()` ⇒ `close()`; peers drain past).
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        self.close();
+    }
+
+    #[inline]
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    // ------------------------------------------------- free list ------
+
+    /// Push a segment onto the free stack. Callers: the consumer's
+    /// retire path, and `prefault` before/around traffic.
+    fn push_free(&self, seg: *mut Segment<T>) {
+        loop {
+            let head = self.free.load(Ordering::Acquire);
+            unsafe { (*seg).next.store(head, Ordering::Relaxed) };
+            if self
+                .free
+                .compare_exchange_weak(head, seg, Ordering::Release, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.free_len.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+
+    /// Pop a segment from the free stack (producer only — the single-
+    /// popper rule is what makes the stack ABA-free).
+    fn pop_free(&self) -> *mut Segment<T> {
+        loop {
+            let head = self.free.load(Ordering::Acquire);
+            if head.is_null() {
+                return std::ptr::null_mut();
+            }
+            let next = unsafe { (*head).next.load(Ordering::Relaxed) };
+            if self
+                .free
+                .compare_exchange_weak(head, next, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.free_len.fetch_sub(1, Ordering::Relaxed);
+                return head;
+            }
+        }
+    }
+
+    /// Producer-side: the next segment to link — reuse before alloc.
+    fn take_segment(&self) -> *mut Segment<T> {
+        let seg = self.pop_free();
+        if !seg.is_null() {
+            return seg;
+        }
+        let seg = Segment::alloc();
+        self.counters.note_segment_alloc();
+        seg
+    }
+
+    /// Consumer-side: a fully drained segment leaves the live chain.
+    /// Kept while the free list is under the retention target (derived
+    /// from the *current* capacity, so a shrink takes effect here),
+    /// otherwise returned to the allocator and audited.
+    fn retire_segment(&self, seg: *mut Segment<T>) {
+        if self.free_len.load(Ordering::Relaxed) < self.free_target() {
+            self.push_free(seg);
+        } else {
+            unsafe { drop(Box::from_raw(seg)) };
+            self.counters.note_segment_freed();
+        }
+    }
+
+    // ------------------------------------------------- hot path -------
+
+    /// Write `v` into the next unpublished slot, linking a segment at
+    /// the boundary. Does not publish.
+    #[inline]
+    fn write_slot(&self, st: &mut ProdState<T>, v: T) {
+        if st.idx == SEG_SLOTS {
+            let ns = self.take_segment();
+            // A reused segment's link word still points into the free
+            // stack — null it *before* linking so the consumer can never
+            // walk from the live chain into the free list.
+            unsafe { (*ns).next.store(std::ptr::null_mut(), Ordering::Relaxed) };
+            // Link before publish; the consumer discovers `next` only
+            // via an Acquire tail load that postdates this store.
+            unsafe { (*st.seg).next.store(ns, Ordering::Release) };
+            st.seg = ns;
+            st.idx = 0;
+        }
+        // SAFETY: the slot at (seg, idx) is unpublished — ours to write.
+        unsafe {
+            (*(*st.seg).slots[st.idx].get()).write(v);
+        }
+        st.idx += 1;
+    }
+
+    /// Read the next published slot, retiring exhausted segments. The
+    /// caller must have established `head < tail`, which also guarantees
+    /// the `next` link of an exhausted segment is set.
+    #[inline]
+    fn read_slot(&self, st: &mut ConsState<T>) -> T {
+        if st.idx == SEG_SLOTS {
+            let next = unsafe { (*st.seg).next.load(Ordering::Acquire) };
+            debug_assert!(!next.is_null(), "published item but next segment missing");
+            self.retire_segment(st.seg);
+            st.seg = next;
+            st.idx = 0;
+        }
+        // SAFETY: the Acquire that refreshed tail_cache made this slot's
+        // write visible; it is published and not yet consumed.
+        let v = unsafe { (*(*st.seg).slots[st.idx].get()).assume_init_read() };
+        st.idx += 1;
+        v
+    }
+
+    /// Publish `pushed` freshly written items with one Release store.
+    #[inline]
+    fn publish(&self, st: &mut ProdState<T>, pushed: u64) {
+        st.tail = st.tail.wrapping_add(pushed);
+        self.counters.tail_index().store(st.tail, Ordering::Release);
+        self.cons_waiter.wake();
+    }
+
+    /// Non-blocking push. ⚠ producer thread only.
+    #[inline]
+    pub fn try_push(&self, v: T) -> Result<(), PushError<T>> {
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(PushError::Closed(v));
+        }
+        // SAFETY: single producer — we are the only toucher of `prod`.
+        let st = unsafe { &mut *self.prod.get() };
+        let cap = self.capacity.load(Ordering::Relaxed) as u64;
+        if st.tail.wrapping_sub(st.head_cache) >= cap {
+            st.head_cache = self.counters.head_index().load(Ordering::Relaxed);
+            if st.tail.wrapping_sub(st.head_cache) >= cap {
+                return Err(PushError::Full(v));
+            }
+        }
+        self.write_slot(st, v);
+        self.publish(st, 1);
+        Ok(())
+    }
+
+    /// Non-blocking bulk push with a single publish; see the ring's
+    /// `try_push_iter` — semantics are identical, including the
+    /// panic-safe publish-on-unwind guard.
+    pub fn try_push_iter<I>(&self, iter: &mut I) -> usize
+    where
+        I: Iterator<Item = T>,
+    {
+        if self.closed.load(Ordering::Relaxed) {
+            return 0;
+        }
+        struct BatchGuard<'a, T: Send> {
+            q: &'a SegmentedSpsc<T>,
+            st: &'a mut ProdState<T>,
+            pushed: u64,
+        }
+        impl<T: Send> Drop for BatchGuard<'_, T> {
+            fn drop(&mut self) {
+                if self.pushed > 0 {
+                    self.q.publish(self.st, self.pushed);
+                }
+            }
+        }
+        // SAFETY: single producer.
+        let st = unsafe { &mut *self.prod.get() };
+        let cap = self.capacity.load(Ordering::Relaxed) as u64;
+        let mut g = BatchGuard { q: self, st, pushed: 0 };
+        loop {
+            let used = g.st.tail.wrapping_add(g.pushed).wrapping_sub(g.st.head_cache);
+            let mut free = cap.saturating_sub(used);
+            if free == 0 {
+                let head = self.counters.head_index().load(Ordering::Relaxed);
+                if head == g.st.head_cache {
+                    break; // genuinely full
+                }
+                g.st.head_cache = head;
+                continue;
+            }
+            while free > 0 {
+                match iter.next() {
+                    Some(v) => {
+                        self.write_slot(g.st, v);
+                        g.pushed += 1;
+                        free -= 1;
+                    }
+                    None => return g.pushed as usize, // guard publishes
+                }
+            }
+        }
+        g.pushed as usize // guard publishes on drop
+    }
+
+    /// Blocking bulk push: delivers every item, batching while space
+    /// remains; same contract as the ring's `push_iter`.
+    pub fn push_iter<I>(&self, iter: I) -> Result<usize, PushError<T>>
+    where
+        I: IntoIterator<Item = T>,
+    {
+        let mut it = iter.into_iter();
+        let mut n = self.try_push_iter(&mut it);
+        loop {
+            match it.next() {
+                None => return Ok(n),
+                Some(v) => match self.push(v) {
+                    Ok(()) => n += 1,
+                    Err(e) => return Err(e),
+                },
+            }
+            n += self.try_push_iter(&mut it);
+        }
+    }
+
+    /// Blocking push: spin → yield → park while full, blocked duration
+    /// recorded. Returns the item if the queue is closed.
+    pub fn push(&self, v: T) -> Result<(), PushError<T>> {
+        match self.try_push(v) {
+            Ok(()) => Ok(()),
+            Err(PushError::Closed(x)) => Err(PushError::Closed(x)),
+            Err(PushError::Full(x)) => self.push_slow(x),
+        }
+    }
+
+    #[cold]
+    fn push_slow(&self, mut v: T) -> Result<(), PushError<T>> {
+        let mut wait = WaitGuard::new(&self.counters, true);
+        let mut pass: u32 = 0;
+        let mut park_ns = PARK_MIN_NS;
+        loop {
+            match self.try_push(v) {
+                Ok(()) => return Ok(()),
+                Err(PushError::Closed(x)) => return Err(PushError::Closed(x)),
+                Err(PushError::Full(x)) => v = x,
+            }
+            pass = pass.saturating_add(1);
+            if pass <= SPIN_PASSES {
+                std::hint::spin_loop();
+                continue;
+            }
+            wait.flush();
+            if pass <= SPIN_PASSES + YIELD_PASSES {
+                std::thread::yield_now();
+                continue;
+            }
+            self.prod_waiter.prepare();
+            match self.try_push(v) {
+                Ok(()) => {
+                    self.prod_waiter.cancel();
+                    return Ok(());
+                }
+                Err(PushError::Closed(x)) => {
+                    self.prod_waiter.cancel();
+                    return Err(PushError::Closed(x));
+                }
+                Err(PushError::Full(x)) => {
+                    v = x;
+                    std::thread::park_timeout(Duration::from_nanos(park_ns));
+                    self.prod_waiter.cancel();
+                    park_ns = (park_ns * 2).min(PARK_MAX_NS);
+                }
+            }
+        }
+    }
+
+    /// Non-blocking pop. ⚠ consumer thread only.
+    #[inline]
+    pub fn try_pop(&self) -> PopResult<T> {
+        // SAFETY: single consumer — we are the only toucher of `cons`.
+        let st = unsafe { &mut *self.cons.get() };
+        if st.head == st.tail_cache {
+            st.tail_cache = self.counters.tail_index().load(Ordering::Acquire);
+            if st.head == st.tail_cache {
+                if self.closed.load(Ordering::Acquire) {
+                    // Close-is-final: re-read tail after observing
+                    // `closed` so the verdict cannot race a last publish.
+                    st.tail_cache = self.counters.tail_index().load(Ordering::Acquire);
+                    if st.head == st.tail_cache {
+                        return PopResult::Closed;
+                    }
+                } else {
+                    return PopResult::Empty;
+                }
+            }
+        }
+        let v = self.read_slot(st);
+        st.head = st.head.wrapping_add(1);
+        self.counters.head_index().store(st.head, Ordering::Release);
+        self.prod_waiter.wake();
+        PopResult::Item(v)
+    }
+
+    /// Non-blocking bulk pop with a single head publish; same contract
+    /// as the ring's `pop_batch`.
+    pub fn pop_batch(&self, out: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        // SAFETY: single consumer.
+        let st = unsafe { &mut *self.cons.get() };
+        let mut avail = st.tail_cache.wrapping_sub(st.head);
+        if avail == 0 {
+            st.tail_cache = self.counters.tail_index().load(Ordering::Acquire);
+            avail = st.tail_cache.wrapping_sub(st.head);
+            if avail == 0 {
+                return 0;
+            }
+        }
+        let take = (avail.min(max as u64)) as usize;
+        out.reserve(take);
+        for _ in 0..take {
+            out.push(self.read_slot(st));
+        }
+        st.head = st.head.wrapping_add(take as u64);
+        self.counters.head_index().store(st.head, Ordering::Release);
+        self.prod_waiter.wake();
+        take
+    }
+
+    /// Blocking pop; `None` ⇒ closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        match self.try_pop() {
+            PopResult::Item(v) => Some(v),
+            PopResult::Closed => None,
+            PopResult::Empty => self.pop_slow(),
+        }
+    }
+
+    #[cold]
+    fn pop_slow(&self) -> Option<T> {
+        let mut wait = WaitGuard::new(&self.counters, false);
+        let mut pass: u32 = 0;
+        let mut park_ns = PARK_MIN_NS;
+        loop {
+            match self.try_pop() {
+                PopResult::Item(v) => return Some(v),
+                PopResult::Closed => return None,
+                PopResult::Empty => {}
+            }
+            pass = pass.saturating_add(1);
+            if pass <= SPIN_PASSES {
+                std::hint::spin_loop();
+                continue;
+            }
+            wait.flush();
+            if pass <= SPIN_PASSES + YIELD_PASSES {
+                std::thread::yield_now();
+                continue;
+            }
+            self.cons_waiter.prepare();
+            match self.try_pop() {
+                PopResult::Item(v) => {
+                    self.cons_waiter.cancel();
+                    return Some(v);
+                }
+                PopResult::Closed => {
+                    self.cons_waiter.cancel();
+                    return None;
+                }
+                PopResult::Empty => {
+                    std::thread::park_timeout(Duration::from_nanos(park_ns));
+                    self.cons_waiter.cancel();
+                    park_ns = (park_ns * 2).min(PARK_MAX_NS);
+                }
+            }
+        }
+    }
+}
+
+impl<T> Drop for SegmentedSpsc<T> {
+    fn drop(&mut self) {
+        // SAFETY: &mut self — no concurrent access remains.
+        let cons = unsafe { &mut *self.cons.get() };
+        let tail = self.counters.total_pushes();
+        let mut remaining = tail.saturating_sub(cons.head);
+        let mut seg = cons.seg;
+        let mut idx = cons.idx;
+        // Drop all published-but-unconsumed items.
+        while remaining > 0 {
+            if idx == SEG_SLOTS {
+                let next = unsafe { (*seg).next.load(Ordering::Relaxed) };
+                unsafe { drop(Box::from_raw(seg)) };
+                seg = next;
+                idx = 0;
+                continue;
+            }
+            unsafe {
+                (*(*seg).slots[idx].get()).assume_init_drop();
+            }
+            idx += 1;
+            remaining -= 1;
+        }
+        // Free the rest of the (now empty) live chain.
+        while !seg.is_null() {
+            let next = unsafe { (*seg).next.load(Ordering::Relaxed) };
+            unsafe { drop(Box::from_raw(seg)) };
+            seg = next;
+        }
+        // And the free stack.
+        let mut f = *self.free.get_mut();
+        while !f.is_null() {
+            let next = unsafe { (*f).next.load(Ordering::Relaxed) };
+            unsafe { drop(Box::from_raw(f)) };
+            f = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = SegmentedSpsc::new(16, 8);
+        for i in 0..10u64 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..10u64 {
+            assert_eq!(q.try_pop(), PopResult::Item(i));
+        }
+        assert_eq!(q.try_pop(), PopResult::Empty);
+    }
+
+    #[test]
+    fn capacity_enforced_and_resize_opens_admission() {
+        let q = SegmentedSpsc::new(2, 8);
+        q.try_push(0u64).unwrap();
+        q.try_push(1).unwrap();
+        assert!(matches!(q.try_push(2), Err(PushError::Full(_))));
+        q.set_capacity(4);
+        q.try_push(2).unwrap();
+        q.try_push(3).unwrap();
+        assert_eq!(q.len(), 4);
+        // Shrink below occupancy gates admissions only; items drain.
+        q.set_capacity(1);
+        assert!(matches!(q.try_push(4), Err(PushError::Full(_))));
+        assert_eq!(q.try_pop(), PopResult::Item(0));
+    }
+
+    #[test]
+    fn crosses_segment_boundaries_and_reuses_memory() {
+        let n = SEG_SLOTS as u64 * 4 + 17;
+        let q = SegmentedSpsc::new(SEG_SLOTS * 2, 8);
+        let mut pushed = 0u64;
+        let mut popped = 0u64;
+        // Stream 4+ segments' worth through a 2-segment-budget queue:
+        // boundary crossings must reuse retired segments, not allocate.
+        while popped < n {
+            while pushed < n {
+                if q.try_push(pushed).is_err() {
+                    break;
+                }
+                pushed += 1;
+            }
+            match q.try_pop() {
+                PopResult::Item(v) => {
+                    assert_eq!(v, popped);
+                    popped += 1;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let c = q.counters();
+        assert_eq!(c.total_pushes(), n);
+        assert_eq!(c.total_pops(), n);
+        // Budget is 2 segments (+1 transient at a boundary): far fewer
+        // allocations than the ceil(n / SEG_SLOTS) = 5 a no-reuse chain
+        // would make.
+        assert!(
+            c.segment_allocs() <= 3,
+            "free-list reuse failed: {} allocs for a 2-segment budget",
+            c.segment_allocs()
+        );
+        assert!(c.segments() as usize <= q.segment_budget() + 1);
+    }
+
+    #[test]
+    fn shrink_returns_memory_to_the_allocator() {
+        // Grow a large chain, then shrink the budget and drain: the
+        // owned-segments gauge must fall back toward the new budget.
+        let big = SEG_SLOTS * 6;
+        let q = SegmentedSpsc::new(big, 8);
+        for i in 0..big as u64 {
+            q.try_push(i).unwrap();
+        }
+        let grown = q.counters().segments();
+        assert!(grown >= 6, "expected a long chain, got {grown} segments");
+        q.set_capacity(SEG_SLOTS); // budget: 6 → 1
+        for i in 0..big as u64 {
+            assert_eq!(q.try_pop(), PopResult::Item(i));
+        }
+        let after = q.counters().segments();
+        assert!(
+            after <= q.segment_budget() as u64 + 1,
+            "shrink did not return memory: {after} segments owned for budget {}",
+            q.segment_budget()
+        );
+        assert!(after < grown, "gauge must fall after shrink+drain");
+    }
+
+    #[test]
+    fn prefault_fills_the_free_list_and_is_reused() {
+        let q = SegmentedSpsc::<u64>::new(SEG_SLOTS * 4, 8);
+        let allocs_before = q.counters().segment_allocs();
+        let added = q.prefault_initial();
+        assert!(added >= 1);
+        let allocs_after_prefault = q.counters().segment_allocs();
+        assert_eq!(allocs_after_prefault - allocs_before, added as u64);
+        // Stream enough to cross several boundaries: the prefaulted
+        // segments are consumed before any new allocation happens.
+        for i in 0..(SEG_SLOTS as u64 * (added as u64 + 1)) {
+            q.try_push(i).unwrap();
+            assert_eq!(q.try_pop(), PopResult::Item(i));
+        }
+        assert_eq!(
+            q.counters().segment_allocs(),
+            allocs_after_prefault,
+            "boundary crossings must come from the prefaulted free list"
+        );
+    }
+
+    #[test]
+    fn close_and_poison_semantics_match_the_ring() {
+        let q = SegmentedSpsc::new(8, 8);
+        q.try_push(1u64).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(2), Err(PushError::Closed(_))));
+        assert_eq!(q.try_pop(), PopResult::Item(1));
+        assert_eq!(q.try_pop(), PopResult::Closed);
+        assert!(q.is_finished());
+        assert!(!q.is_poisoned());
+
+        let q2 = SegmentedSpsc::new(8, 8);
+        q2.try_push(7u64).unwrap();
+        q2.poison();
+        assert!(q2.is_closed() && q2.is_poisoned());
+        assert_eq!(q2.try_pop(), PopResult::Item(7));
+        assert_eq!(q2.try_pop(), PopResult::Closed);
+    }
+
+    #[test]
+    fn poison_unparks_both_ends() {
+        let q = Arc::new(SegmentedSpsc::<u64>::new(1, 8));
+        q.try_push(0).unwrap();
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || qp.push(1));
+        let q2 = Arc::new(SegmentedSpsc::<u64>::new(1, 8));
+        let qc = q2.clone();
+        let cons = std::thread::spawn(move || qc.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.poison();
+        q2.poison();
+        assert!(matches!(prod.join().unwrap(), Err(PushError::Closed(1))));
+        assert_eq!(cons.join().unwrap(), None);
+    }
+
+    #[test]
+    fn batched_roundtrip_across_segments() {
+        let n = SEG_SLOTS as u64 * 2 + 100;
+        let q = SegmentedSpsc::new(n as usize, 8);
+        let mut it = 0..n;
+        assert_eq!(q.try_push_iter(&mut it), n as usize);
+        assert!(it.next().is_none());
+        let s = q.counters().sample();
+        assert_eq!(s.tc_tail, n, "one publish covered the batch");
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch(&mut out, 64), 64);
+        assert_eq!(q.pop_batch(&mut out, usize::MAX), n as usize - 64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+        assert_eq!(q.counters().total_pops(), n);
+    }
+
+    #[test]
+    fn spsc_stress_no_loss_no_dup() {
+        let q = Arc::new(SegmentedSpsc::new(64, 8));
+        let n = 1_000_000u64;
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || {
+            for i in 0..n {
+                qp.push(i).unwrap();
+            }
+            qp.close();
+        });
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || {
+            let mut expect = 0u64;
+            while let Some(v) = qc.pop() {
+                assert_eq!(v, expect, "out of order");
+                expect += 1;
+            }
+            expect
+        });
+        prod.join().unwrap();
+        assert_eq!(cons.join().unwrap(), n);
+        assert_eq!(q.counters().total_pushes(), n);
+        assert_eq!(q.counters().total_pops(), n);
+        // Conservation of memory, too: a bounded queue must not have
+        // allocated anywhere near n / SEG_SLOTS segments.
+        assert!(
+            q.counters().segment_allocs() < 64,
+            "steady-state streaming must reuse segments ({} allocs)",
+            q.counters().segment_allocs()
+        );
+    }
+
+    #[test]
+    fn resize_thrash_while_streaming() {
+        let q = Arc::new(SegmentedSpsc::new(4, 8));
+        let n = 100_000u64;
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || {
+            for i in 0..n {
+                qp.push(i).unwrap();
+            }
+            qp.close();
+        });
+        let qm = q.clone();
+        let monitor = std::thread::spawn(move || {
+            for c in (1..=1024u64).cycle().take(10_000) {
+                qm.set_capacity(c as usize);
+                std::hint::spin_loop();
+            }
+        });
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || {
+            let mut expect = 0u64;
+            while let Some(v) = qc.pop() {
+                assert_eq!(v, expect);
+                expect += 1;
+            }
+            expect
+        });
+        prod.join().unwrap();
+        monitor.join().unwrap();
+        assert_eq!(cons.join().unwrap(), n);
+    }
+
+    #[test]
+    fn concurrent_sampling_conserves_counts() {
+        let q = Arc::new(SegmentedSpsc::new(128, 8));
+        let n = 400_000u64;
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || {
+            for i in 0..n {
+                qp.push(i).unwrap();
+            }
+            qp.close();
+        });
+        let qm = q.clone();
+        let stop_m = stop.clone();
+        let mon = std::thread::spawn(move || {
+            let (mut heads, mut tails) = (0u64, 0u64);
+            while !stop_m.load(Ordering::Relaxed) {
+                let s = qm.counters().sample();
+                heads += s.tc_head;
+                tails += s.tc_tail;
+                std::thread::yield_now();
+            }
+            (heads, tails)
+        });
+        let qc = q.clone();
+        let cons = std::thread::spawn(move || {
+            let mut count = 0u64;
+            while qc.pop().is_some() {
+                count += 1;
+            }
+            count
+        });
+        prod.join().unwrap();
+        assert_eq!(cons.join().unwrap(), n);
+        stop.store(true, Ordering::Relaxed);
+        let (heads, tails) = mon.join().unwrap();
+        let residue = q.counters().sample();
+        assert_eq!(heads + residue.tc_head, n, "head samples + residue != total");
+        assert_eq!(tails + residue.tc_tail, n, "tail samples + residue != total");
+    }
+
+    #[test]
+    fn drop_releases_unconsumed_items_and_free_list() {
+        let marker = Arc::new(());
+        {
+            let q = SegmentedSpsc::new(SEG_SLOTS * 4, 8);
+            q.prefault(2);
+            for _ in 0..(SEG_SLOTS + 13) {
+                q.try_push(marker.clone()).unwrap();
+            }
+            for _ in 0..7 {
+                let _ = q.try_pop();
+            }
+        } // q dropped here
+        assert_eq!(Arc::strong_count(&marker), 1, "leaked items on drop");
+    }
+
+    #[test]
+    fn segment_header_is_cache_line_aligned() {
+        assert_eq!(std::mem::align_of::<Segment<u64>>() % 64, 0);
+        let seg = Segment::<u64>::alloc();
+        assert_eq!(seg as usize % 64, 0, "allocated segment not aligned");
+        unsafe { drop(Box::from_raw(seg)) };
+    }
+}
+
+/// Model-checks the *segment* protocol on top of PR-2's head/tail/close
+/// model: producer-side linking of a fresh-or-reused segment (link-word
+/// reset → Release link → Release publish), consumer-side retirement
+/// into a free slot the producer concurrently pops from, and the
+/// close-is-final re-read — all while a third (control-plane) thread
+/// closes/poisons mid-stream. The free handoff is modeled as a single
+/// CAS cell, which is exactly the Treiber-stack head with one pusher and
+/// one popper.
+///
+/// Runs in the CI `loom`/`queue-segments` lanes:
+/// `RUSTFLAGS="--cfg loom" cargo test --features loom --release --lib queue`.
+#[cfg(all(test, feature = "loom", loom))]
+mod loom_model {
+    use loom::cell::UnsafeCell;
+    use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    use loom::sync::Arc;
+
+    const SLOTS: usize = 2; // slots per modeled segment
+    const NONE: usize = usize::MAX;
+
+    struct Seg {
+        slots: [UnsafeCell<u64>; SLOTS],
+        next: AtomicUsize, // index into Proto::segs; NONE = null
+    }
+
+    struct Proto {
+        segs: [Seg; 3],
+        tail: AtomicU64,
+        head: AtomicU64,
+        closed: AtomicBool,
+        poisoned: AtomicBool,
+        /// Free "stack" head: one pusher (consumer retire), one popper
+        /// (producer link) — the SegmentedSpsc free-list shape.
+        free: AtomicUsize,
+    }
+
+    fn seg() -> Seg {
+        Seg {
+            slots: [UnsafeCell::new(0), UnsafeCell::new(0)],
+            next: AtomicUsize::new(NONE),
+        }
+    }
+
+    #[test]
+    fn segment_link_retire_under_close() {
+        loom::model(|| {
+            let p = Arc::new(Proto {
+                segs: [seg(), seg(), seg()],
+                tail: AtomicU64::new(0),
+                head: AtomicU64::new(0),
+                closed: AtomicBool::new(false),
+                poisoned: AtomicBool::new(false),
+                free: AtomicUsize::new(NONE),
+            });
+            let n: u64 = 5; // crosses two boundaries in 2-slot segments
+
+            let q = p.clone();
+            let prod = loom::thread::spawn(move || {
+                let mut seg = 0usize; // start on segment 0
+                let mut next_fresh = 1usize; // segments 1, 2 are "the allocator"
+                for i in 0..n {
+                    let idx = (i as usize) % SLOTS;
+                    if i > 0 && idx == 0 {
+                        // Boundary: pop the free cell (reuse) or "alloc".
+                        let got = loop {
+                            let f = q.free.load(Ordering::Acquire);
+                            if f == NONE {
+                                let fresh = next_fresh;
+                                next_fresh += 1;
+                                break fresh;
+                            }
+                            let fnext = q.segs[f].next.load(Ordering::Relaxed);
+                            if q.free
+                                .compare_exchange(f, fnext, Ordering::AcqRel, Ordering::Relaxed)
+                                .is_ok()
+                            {
+                                break f;
+                            }
+                        };
+                        // Reset the link word BEFORE linking (reuse path),
+                        // then link with Release.
+                        q.segs[got].next.store(NONE, Ordering::Relaxed);
+                        q.segs[seg].next.store(got, Ordering::Release);
+                        seg = got;
+                    }
+                    q.segs[seg].slots[idx].with_mut(|s| unsafe { *s = i + 1 });
+                    q.tail.store(i + 1, Ordering::Release);
+                }
+                q.closed.store(true, Ordering::Release);
+            });
+
+            // Control plane: a concurrent close/poison mid-stream. The
+            // consumer must still drain every published item (flagged
+            // close: poison ⇒ close, drain past).
+            let k = p.clone();
+            let killer = loom::thread::spawn(move || {
+                k.poisoned.store(true, Ordering::Release);
+                k.closed.store(true, Ordering::Release);
+            });
+
+            // Consumer (main loom thread).
+            let mut head = 0u64;
+            let mut seg = 0usize;
+            let mut got = Vec::new();
+            loop {
+                let tail = p.tail.load(Ordering::Acquire);
+                if head == tail {
+                    if p.closed.load(Ordering::Acquire) {
+                        // Close-is-final: re-read tail after `closed`.
+                        if head == p.tail.load(Ordering::Acquire) {
+                            break;
+                        }
+                        continue;
+                    }
+                    loom::thread::yield_now();
+                    continue;
+                }
+                let idx = (head as usize) % SLOTS;
+                if head > 0 && idx == 0 {
+                    // Boundary: follow the Acquire-published link, then
+                    // retire the drained segment into the free cell.
+                    let next = p.segs[seg].next.load(Ordering::Acquire);
+                    assert_ne!(next, NONE, "published item but next segment missing");
+                    loop {
+                        let f = p.free.load(Ordering::Acquire);
+                        p.segs[seg].next.store(f, Ordering::Relaxed);
+                        if p.free
+                            .compare_exchange(f, seg, Ordering::Release, Ordering::Relaxed)
+                            .is_ok()
+                        {
+                            break;
+                        }
+                    }
+                    seg = next;
+                }
+                let v = p.segs[seg].slots[idx].with(|s| unsafe { *s });
+                assert_eq!(v, head + 1, "read an unpublished or recycled slot");
+                got.push(v);
+                head += 1;
+                p.head.store(head, Ordering::Release);
+            }
+            prod.join().unwrap();
+            killer.join().unwrap();
+            // The producer published all n before its own close; the
+            // concurrent poison-close must not have lost any of them.
+            assert_eq!(got, (1..=n).collect::<Vec<_>>(), "lost or reordered items");
+        });
+    }
+}

@@ -334,6 +334,17 @@ impl<T: Send> SpscQueue<T> {
     /// admission check, so growth opens the §III non-blocking window on
     /// its very next attempt — including a parked one, which is woken
     /// here rather than left to sleep out its park timeout.
+    ///
+    /// **Shrink semantics:** a shrink below the current occupancy never
+    /// drops or blocks items already queued — it only gates *new*
+    /// admissions (`try_push` reports `Full`) until the consumer drains
+    /// the stream below the new cap, at which point admission reopens by
+    /// itself. The controller audits this deferred window with a
+    /// `ControlEvent::Note` ("below occupancy") so a mid-drain scrape
+    /// showing `len() > capacity()` is explicable from the event ring.
+    /// The ring never returns memory on shrink (slots are a fixed block);
+    /// the segmented backend retires drained segments as that drain
+    /// happens (see [`super::SegmentedSpsc`]).
     pub fn set_capacity(&self, cap: usize) {
         self.capacity.store(cap.max(1), Ordering::Relaxed);
         self.prod_waiter.wake();
@@ -781,6 +792,40 @@ mod tests {
         q.set_capacity(1);
         assert!(matches!(q.try_push(4), Err(PushError::Full(_))));
         assert_eq!(q.try_pop(), PopResult::Item(0));
+    }
+
+    #[test]
+    fn shrink_below_occupancy_defers_until_drained() {
+        // Regression for the advisor's shrink path: capacity 16 with 10
+        // queued, shrunk to 4. No item may be lost, admission must stay
+        // gated while len > cap, and must reopen exactly when the
+        // consumer drains below the new cap — with no second resize.
+        let q = SpscQueue::new(16, 8);
+        for i in 0..10u64 {
+            q.try_push(i).unwrap();
+        }
+        q.set_capacity(4);
+        assert_eq!(q.len(), 10, "shrink must not drop queued items");
+        assert_eq!(q.capacity(), 4);
+        // Gated the whole way down to the cap…
+        for expect in 0..6u64 {
+            assert!(
+                matches!(q.try_push(99), Err(PushError::Full(_))),
+                "len {} > cap must gate admission",
+                q.len()
+            );
+            assert_eq!(q.try_pop(), PopResult::Item(expect));
+        }
+        // …and open again the moment occupancy dips below it.
+        assert_eq!(q.len(), 4);
+        assert!(matches!(q.try_push(99), Err(PushError::Full(_))));
+        assert_eq!(q.try_pop(), PopResult::Item(6));
+        q.try_push(10).unwrap();
+        // FIFO order across the squeeze is intact.
+        for expect in [7u64, 8, 9, 10] {
+            assert_eq!(q.try_pop(), PopResult::Item(expect));
+        }
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -253,7 +253,7 @@ pub(crate) fn execute(
     // and future) and remembered per split/merge kernel id for the spawn
     // loop below. Every failure mode — no stages, unreadable topology,
     // denied syscalls — degrades to a recorded no-op in the report.
-    let mut stage_pins: Vec<(String, Arc<ThreadPin>)> = Vec::new();
+    let mut stage_pins: Vec<(String, Arc<ThreadPin>, Option<usize>)> = Vec::new();
     let mut kernel_pins: HashMap<usize, Arc<ThreadPin>> = HashMap::new();
     let mut placement_notes: Vec<String> = Vec::new();
     if placement == PlacementPolicy::Pack {
@@ -268,6 +268,15 @@ pub(crate) fn execute(
                      cpu list"
                 ));
             }
+            // First-touch NUMA audit: lane queues are prefaulted by their
+            // (pinned) workers, so each stage's cpu chunk decides where
+            // its segments land. Degraded node ids must say so — a run
+            // report claiming "node 0" on a masked-node container would
+            // otherwise be a silent lie.
+            let numa_degraded = host.numa_fallback_reason().is_some();
+            if let Some(reason) = host.numa_fallback_reason() {
+                placement_notes.push(format!("placement: numa fallback — {reason}"));
+            }
             let order = host.pack_order();
             let weights: Vec<usize> = topo
                 .elastic
@@ -275,11 +284,29 @@ pub(crate) fn execute(
                 .map(|d| d.stage.policy().max_replicas.max(1))
                 .collect();
             for (decl, cpus) in topo.elastic.iter().zip(partition_cpus(&order, &weights)) {
+                let nodes = host.nodes_of(&cpus);
+                let numa_node = match (numa_degraded, nodes.as_slice()) {
+                    (false, [node]) => Some(*node),
+                    _ => None,
+                };
+                match (numa_degraded, nodes.as_slice()) {
+                    (true, _) => {} // global fallback note already covers it
+                    (false, [node]) => placement_notes.push(format!(
+                        "placement: stage '{}' lane queues first-touch on numa node \
+                         {node} (cpus {cpus:?})",
+                        decl.stage.stage_name()
+                    )),
+                    (false, nodes) => placement_notes.push(format!(
+                        "placement: stage '{}' cpu set spans numa nodes {nodes:?}; lane \
+                         queues first-touch per-worker",
+                        decl.stage.stage_name()
+                    )),
+                }
                 let pin = ThreadPin::new(cpus);
                 decl.stage.install_pin(pin.clone());
                 kernel_pins.insert(decl.split.0, pin.clone());
                 kernel_pins.insert(decl.merge.0, pin.clone());
-                stage_pins.push((decl.stage.stage_name().to_string(), pin));
+                stage_pins.push((decl.stage.stage_name().to_string(), pin, numa_node));
             }
         }
     }
@@ -652,11 +679,12 @@ pub(crate) fn execute(
     let placement_report = PlacementReport {
         assignments: stage_pins
             .into_iter()
-            .map(|(target, pin)| PlacementAssignment {
+            .map(|(target, pin, numa_node)| PlacementAssignment {
                 target,
                 cpus: pin.cpus().to_vec(),
                 pinned_threads: pin.applied(),
                 denied_threads: pin.denied(),
+                numa_node,
                 note: pin.note(),
             })
             .collect(),

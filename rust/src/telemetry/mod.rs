@@ -12,6 +12,10 @@
 //!   from the **already-free** counter reads (the SPSC queue's monotonic
 //!   head/tail indices are the pop/push counters) plus a small
 //!   controller-refreshed gauge block ([`registry::MetricsShared`]);
+//!   segmented streams additionally export the `sf_queue_segments`
+//!   gauge (segments currently owned, free list included) and the
+//!   `sf_segment_allocs_total` counter (heap segment allocations since
+//!   construction) — both render `0` for the classic ring backend;
 //! * [`ring::EventRing`] — a bounded lock-free ring the controller
 //!   publishes structured [`ControlEvent`]s into (scales with gate
 //!   reasons, budget recomputes, resizes, lane spawns/retires, blocked

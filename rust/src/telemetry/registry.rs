@@ -20,6 +20,8 @@
 //! | `sf_stream_occupancy` | gauge | `stream` |
 //! | `sf_stream_capacity` | gauge | `stream` |
 //! | `sf_stream_closed` | gauge | `stream` |
+//! | `sf_queue_segments` | gauge | `stream` |
+//! | `sf_segment_allocs_total` | counter | `stream` |
 //! | `sf_stream_rate_mbps` | gauge | `stream`, `end` |
 //! | `sf_stage_replicas` | gauge | `stage` |
 //! | `sf_stage_rho` | gauge | `stage` |
@@ -256,6 +258,15 @@ impl MetricsRegistry {
         self.gauge_section(&mut out, "sf_stream_closed",
             "1 once the producer has closed the stream.",
             |h| if h.is_closed() { 1.0 } else { 0.0 });
+        self.gauge_section(&mut out, "sf_queue_segments",
+            "Segments the queue currently owns (live chain + free list); \
+             0 for the contiguous-ring backend. Watch it fall after a \
+             shrink to audit memory actually returned.",
+            |h| h.counters().segments() as f64);
+        self.counter_section(&mut out, "sf_segment_allocs_total",
+            "Segment allocations that hit the allocator (free-list reuse \
+             does not count); 0 for the contiguous-ring backend.",
+            |h| h.counters().segment_allocs());
 
         // Converged monitor estimates, keyed back to stream labels.
         let rates = self.shared.rates_snapshot();
@@ -445,6 +456,32 @@ mod tests {
         let again = reg.render();
         assert!(again.contains("sf_stream_pushes_total{stream=\"a.0 -> b.0\"} 2"), "{again}");
         assert_eq!(h.counters().total_pushes(), 2);
+        // Ring backend: segment metrics render as zero, not absent.
+        assert!(text.contains("sf_queue_segments{stream=\"a.0 -> b.0\"} 0"), "{text}");
+        assert!(text.contains("sf_segment_allocs_total{stream=\"a.0 -> b.0\"} 0"), "{text}");
+    }
+
+    #[test]
+    fn segment_metrics_render_for_segmented_streams() {
+        use crate::queue::{build, QueueBackend};
+        let cfg = StreamConfig::default()
+            .with_backend(QueueBackend::Segmented)
+            .with_capacity(crate::queue::SEG_SLOTS * 2);
+        let (q, h) = build::<u64>(&cfg);
+        for i in 0..(crate::queue::SEG_SLOTS as u64 + 1) {
+            q.try_push(i).unwrap();
+        }
+        let mut reg = MetricsRegistry::standalone();
+        reg.add_stream(StreamId(0), "seg", h.clone());
+        let text = reg.render();
+        let owned = h.counters().segments();
+        let allocs = h.counters().segment_allocs();
+        assert!(owned >= 2 && allocs >= 2, "crossed one boundary: {owned}/{allocs}");
+        assert!(text.contains(&format!("sf_queue_segments{{stream=\"seg\"}} {owned}")), "{text}");
+        assert!(
+            text.contains(&format!("sf_segment_allocs_total{{stream=\"seg\"}} {allocs}")),
+            "{text}"
+        );
     }
 
     #[test]

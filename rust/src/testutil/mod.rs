@@ -60,6 +60,7 @@ impl ElasticStage for ScriptedStage {
                 tc_tail: self.tc_per_lane,
                 read_blocked_ns: 0,
                 write_blocked_ns: 0,
+                ..Default::default()
             })
             .collect()
     }

@@ -22,7 +22,7 @@ use crate::elastic::{
 use crate::flow::{Inlet, Outlet, StageIo};
 use crate::kernel::Kernel;
 use crate::port::{InputPort, OutputPort, PortCloser};
-use crate::queue::{instrumented, MonitorHandle, StreamConfig};
+use crate::queue::{MonitorHandle, StreamConfig};
 use crate::{Result, SfError};
 
 /// Kernel identifier within a topology.
@@ -215,7 +215,7 @@ impl Topology {
             )));
         }
         let id = StreamId(self.streams.len());
-        let (q, monitor) = instrumented::<T>(&cfg);
+        let (q, monitor) = crate::queue::build::<T>(&cfg);
         let label = format!(
             "{}.{} -> {}.{}",
             self.kernel_name(src),

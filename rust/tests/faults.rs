@@ -26,6 +26,7 @@ fn one_lane(restart_budget: u32) -> ElasticStageConfig {
         initial_replicas: 1,
         lane_capacity: 64,
         supervisor: SupervisorPolicy::with_restart_budget(restart_budget),
+        ..Default::default()
     }
 }
 
@@ -288,6 +289,7 @@ fn budget_pinned_overload_sheds_load_and_conserves_the_ledger() {
         initial_replicas: 1,
         lane_capacity: 128,
         supervisor: SupervisorPolicy::default(),
+        ..Default::default()
     };
     let flow = Flow::new("shed")
         .stream_defaults(StreamConfig::default().with_capacity(1024))

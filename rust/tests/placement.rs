@@ -302,6 +302,17 @@ fn pack_placement_pins_or_degrades_to_annotated_noop() {
     } else if a.denied_threads > 0 {
         assert!(a.note.is_some(), "denials must carry a reason: {a:?}");
     }
+    // First-touch NUMA audit: either the stage resolved to one node (the
+    // note names it), its cpu set straddles nodes, or node discovery
+    // degraded — every case leaves a written trace, never silence.
+    let numa_audited = a.numa_node.is_some()
+        || report.placement.notes.iter().any(|n| {
+            n.contains("numa fallback")
+                || n.contains("first-touch")
+                || n.contains("spans numa nodes")
+                || n.contains("cpu topology unreadable")
+        });
+    assert!(numa_audited, "numa placement must be audited: {:?}", report.placement.notes);
 }
 
 #[test]

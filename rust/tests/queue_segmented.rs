@@ -1,0 +1,192 @@
+//! Resize-under-burst acceptance (ISSUE 8 satellite): a paced producer
+//! running at 2× the consumer's service rate with the [`BufferAdvisor`]
+//! live on the stream.
+//!
+//! The contiguous ring stands in for "provisioned once at its maximum":
+//! the advisor may only gate admission inside that allocation
+//! (`max_capacity` = the provisioned slots), so the burst stalls the
+//! producer. The segmented backend makes growth allocation-cheap, so the
+//! same advisor is allowed to follow the burst — producer
+//! `write_blocked_ns` must drop. Conservation
+//! `pushes == pops + occupancy` is asserted at every mid-run scrape on
+//! both backends.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use streamflow::classify::DistributionClass;
+use streamflow::control::{BufferAdvisor, StreamRates};
+use streamflow::queue::{build, QueueBackend, StreamConfig};
+use streamflow::topology::StreamId;
+
+/// Items pushed end to end. Small enough for CI, large enough that the
+/// ring-capped run (256 slots, consumer at half the producer's pace)
+/// must block the producer for most of the run.
+const TOTAL: u64 = 4096;
+/// Provisioned ring capacity — the advisor's ceiling on the ring run.
+const PROVISIONED: usize = 256;
+/// Producer burst granularity (items between pacing sleeps).
+const PROD_BATCH: u64 = 64;
+
+/// One burst run on `backend`, with the advisor live and clamped at
+/// `advisor_max`. Returns the producer's total `write_blocked_ns`.
+fn burst_run(backend: QueueBackend, advisor_max: usize) -> u64 {
+    let cfg = StreamConfig::default().with_capacity(PROVISIONED).with_backend(backend);
+    let (q, handle) = build::<u64>(&cfg);
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Advisor live: a monitor thread scrapes every 500 µs, re-derives
+    // λ/μ from the counter deltas, and applies the analytic sizing under
+    // the controller's 25% relative-change gate.
+    let advisor = BufferAdvisor { max_capacity: advisor_max, ..Default::default() };
+    let mon_handle = handle.clone();
+    let mon_done = done.clone();
+    let monitor = thread::spawn(move || {
+        let c = mon_handle.counters();
+        let (mut last_pushes, mut last_pops) = (0u64, 0u64);
+        let mut last_t = Instant::now();
+        let mut scrapes = 0u32;
+        while !mon_done.load(Ordering::Acquire) {
+            thread::sleep(Duration::from_micros(500));
+            // Conservation at every mid-run scrape: reading pops (head)
+            // before pushes (tail) makes the difference the occupancy at
+            // some instant in between — it may never go negative.
+            let pops = c.total_pops();
+            let pushes = c.total_pushes();
+            assert!(
+                pushes >= pops,
+                "conservation violated mid-run: pushes {pushes} < pops {pops}"
+            );
+            let occupancy = pushes - pops;
+            assert_eq!(pushes, pops + occupancy);
+            scrapes += 1;
+            let dt = last_t.elapsed().as_secs_f64().max(1e-6);
+            last_t = Instant::now();
+            let lambda = (pushes - last_pushes) as f64 / dt;
+            let mu = (pops - last_pops) as f64 / dt;
+            (last_pushes, last_pops) = (pushes, pops);
+            if lambda <= 0.0 || mu <= 0.0 {
+                continue;
+            }
+            let rates = StreamRates { lambda_items: Some(lambda), mu_items: Some(mu) };
+            let Some(advice) = advisor.advise(StreamId(0), rates, DistributionClass::Unknown)
+            else {
+                continue;
+            };
+            let cur = mon_handle.capacity();
+            if cur > 0 && advice.capacity.abs_diff(cur) as f64 / cur as f64 >= 0.25 {
+                mon_handle.set_capacity(advice.capacity);
+            }
+        }
+        scrapes
+    });
+
+    // Paced producer: bursts of PROD_BATCH with blocking pushes, then a
+    // 250 µs breather — an offered load of ~2× the consumer's rate.
+    let prod_q = q.clone();
+    let producer = thread::spawn(move || {
+        for i in 0..TOTAL {
+            prod_q.push(i).expect("stream closed under the producer");
+            if (i + 1) % PROD_BATCH == 0 {
+                thread::sleep(Duration::from_micros(250));
+            }
+        }
+        prod_q.close();
+    });
+
+    // Paced consumer: up to PROD_BATCH items per 500 µs — half the
+    // producer's offered rate — verifying FIFO order end to end.
+    let cons_q = q.clone();
+    let consumer = thread::spawn(move || {
+        let mut expect = 0u64;
+        let mut buf = Vec::with_capacity(PROD_BATCH as usize);
+        loop {
+            let n = cons_q.pop_batch(&mut buf, PROD_BATCH as usize);
+            for v in buf.drain(..) {
+                assert_eq!(v, expect, "items lost or reordered under resize");
+                expect += 1;
+            }
+            if n == 0 {
+                if cons_q.is_finished() {
+                    break;
+                }
+                thread::yield_now();
+                continue;
+            }
+            thread::sleep(Duration::from_micros(500));
+        }
+        expect
+    });
+
+    producer.join().unwrap();
+    assert_eq!(consumer.join().unwrap(), TOTAL);
+    done.store(true, Ordering::Release);
+    let scrapes = monitor.join().unwrap();
+    assert!(scrapes > 0, "the advisor never scraped the stream");
+
+    // End-state conservation: everything pushed was popped.
+    let c = q.counters();
+    assert_eq!(c.total_pushes(), TOTAL);
+    assert_eq!(c.total_pops(), TOTAL);
+    assert_eq!(q.len(), 0);
+    match backend {
+        QueueBackend::Ring => {
+            assert_eq!(c.segments(), 0, "ring must not report segments");
+        }
+        QueueBackend::Segmented => {
+            assert!(c.segments() >= 1, "segmented stream lost its tail segment");
+            assert!(c.segment_allocs() >= 1, "segment allocations must be audited");
+        }
+    }
+    c.total_write_blocked_ns()
+}
+
+#[test]
+fn resize_under_burst_segmented_blocks_less_than_ring() {
+    // Ring: provisioned at 256 slots; the live advisor can only gate
+    // admission within that allocation, so the 2× burst stalls the
+    // producer for roughly the consumer's half of the run.
+    let ring_blocked = burst_run(QueueBackend::Ring, PROVISIONED);
+    // Segmented: identical workload and advisor, but growth is
+    // allocation-cheap so the sizing may follow the burst.
+    let seg_blocked = burst_run(QueueBackend::Segmented, 1 << 16);
+    assert!(
+        ring_blocked > 0,
+        "ring-with-advisor must stall the producer under a 2x burst"
+    );
+    assert!(
+        seg_blocked < ring_blocked,
+        "segmented backend must cut producer write_blocked_ns: \
+         segmented {seg_blocked} ns vs ring {ring_blocked} ns"
+    );
+}
+
+#[test]
+fn conservation_holds_through_shrink_below_occupancy() {
+    // Both backends: fill half, shrink the admission cap below the
+    // occupancy, and scrape the conservation identity while a consumer
+    // drains — the deferred shrink must never lose an item.
+    for backend in [QueueBackend::Ring, QueueBackend::Segmented] {
+        let cfg = StreamConfig::default().with_capacity(1024).with_backend(backend);
+        let (q, handle) = build::<u64>(&cfg);
+        for i in 0..512u64 {
+            q.try_push(i).unwrap();
+        }
+        handle.set_capacity(32);
+        assert_eq!(q.len(), 512, "{backend:?}: shrink dropped queued items");
+        let mut expect = 0u64;
+        while let streamflow::queue::PopResult::Item(v) = q.try_pop() {
+            assert_eq!(v, expect);
+            expect += 1;
+            let pops = q.counters().total_pops();
+            let pushes = q.counters().total_pushes();
+            assert_eq!(pushes, pops + q.len() as u64, "{backend:?}: conservation broke mid-drain");
+        }
+        assert_eq!(expect, 512);
+        // Admission reopened at the shrunken cap.
+        assert!(q.try_push(0).is_ok());
+        assert_eq!(handle.capacity(), 32);
+    }
+}

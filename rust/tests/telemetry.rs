@@ -87,6 +87,7 @@ impl ElasticStage for ScriptedStage {
                 tc_tail: tc,
                 read_blocked_ns: 0,
                 write_blocked_ns: 0,
+                ..Default::default()
             })
             .collect()
     }
