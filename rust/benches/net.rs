@@ -1,0 +1,213 @@
+//! Distributed data-plane overhead — what a process boundary costs: the
+//! frame codec's per-batch encode/decode micro cost, and end-to-end
+//! loopback-TCP edge throughput (`NetSink → socket → NetSource`) against
+//! the in-process SPSC queue the edge replaces. The gap is the price of
+//! `--shards`; the ledger keeps it honest across PRs.
+//!
+//! Emits `target/figures/BENCH_net.json`. `SF_SCALE`/`SF_BENCH_SECS`
+//! shrink everything for CI smoke runs.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use streamflow::bench::{black_box, Runner};
+use streamflow::config::Json;
+use streamflow::flow::{Inlet, Outlet, RunOptions, Session};
+use streamflow::kernel::{Kernel, KernelContext, KernelStatus};
+use streamflow::net::{
+    decode_batch, encode_batch, ConnSpec, Frame, FrameDecoder, NetEdgeStats, NetListener,
+    NetSink, NetSource, SINK_BURST,
+};
+use streamflow::queue::{instrumented, StreamConfig};
+use streamflow::report::{figures_dir, Cell, Table};
+use streamflow::topology::Topology;
+
+/// Source kernel: emits `0..n` as `u64` items in bursts.
+struct CountSource {
+    n: u64,
+    next: u64,
+}
+
+impl Kernel for CountSource {
+    fn name(&self) -> &str {
+        "count_source"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.next >= self.n {
+            return KernelStatus::Done;
+        }
+        let hi = (self.next + 64).min(self.n);
+        let burst: Vec<u64> = (self.next..hi).collect();
+        self.next = hi;
+        let port = ctx.output::<u64>(0).expect("source port");
+        if port.push_iter(burst).is_err() {
+            return KernelStatus::Done;
+        }
+        KernelStatus::Continue
+    }
+}
+
+/// Sink kernel: folds every received item into a checksum.
+struct SumSink {
+    sum: Arc<Mutex<u64>>,
+    scratch: Vec<u64>,
+}
+
+impl Kernel for SumSink {
+    fn name(&self) -> &str {
+        "sum_sink"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let port = ctx.input::<u64>(0).expect("sink input");
+        if port.pop_batch(&mut self.scratch, 64) == 0 {
+            match port.pop() {
+                Some(v) => self.scratch.push(v),
+                None => return KernelStatus::Done,
+            }
+        }
+        let mut sum = self.sum.lock().unwrap();
+        for v in self.scratch.drain(..) {
+            *sum = sum.wrapping_add(v);
+        }
+        KernelStatus::Continue
+    }
+}
+
+/// End-to-end items/sec through one loopback TCP edge inside a real
+/// scheduler run.
+fn loopback_throughput(n: u64) -> f64 {
+    let tid = streamflow::net::topology_id(&[b"bench-loopback"]);
+    let listener = NetListener::bind("127.0.0.1:0", tid).expect("bind");
+    let accept_spec = listener.expect_edge("bench");
+    let connect_spec = ConnSpec::Connect {
+        addr: listener.local_addr().to_string(),
+        topology_id: tid,
+        edge_id: "bench".to_string(),
+        retries: 10,
+    };
+
+    let sum = Arc::new(Mutex::new(0u64));
+    let tx_stats = NetEdgeStats::new("bench:tx");
+    let rx_stats = NetEdgeStats::new("bench:rx");
+    let mut topo = Topology::new("net_bench");
+    let cfg = StreamConfig::default().with_capacity(4096).with_item_bytes(8).uninstrumented();
+    let gen = topo.add_kernel(Box::new(CountSource { n, next: 0 }));
+    let tx = topo.add_kernel(Box::new(NetSink::<u64>::new(connect_spec, tx_stats.clone())));
+    topo.connect(Outlet::<u64>::new(gen, 0), Inlet::new(tx, 0), cfg.clone()).expect("wire tx");
+    let rx = topo.add_kernel(Box::new(NetSource::<u64>::new(accept_spec, rx_stats.clone())));
+    let snk = topo.add_kernel(Box::new(SumSink { sum: sum.clone(), scratch: Vec::new() }));
+    topo.connect(Outlet::<u64>::new(rx, 0), Inlet::new(snk, 0), cfg).expect("wire rx");
+    topo.register_net_edge(tx_stats.clone());
+    topo.register_net_edge(rx_stats.clone());
+
+    let report = Session::run(topo, RunOptions::default()).expect("run");
+    assert!(report.faults.is_empty(), "clean loopback run: {:?}", report.faults);
+    assert_eq!(rx_stats.received(), n, "all items crossed the socket");
+    black_box(*sum.lock().unwrap());
+    n as f64 / report.wall_secs()
+}
+
+/// Two-thread in-process SPSC throughput (the edge the socket replaces).
+fn spsc_throughput(n: u64) -> f64 {
+    let (q, _handle) =
+        instrumented::<u64>(&StreamConfig::default().with_capacity(4096).with_item_bytes(8));
+    let qp = q.clone();
+    let t0 = std::time::Instant::now();
+    let prod = std::thread::spawn(move || {
+        for i in 0..n {
+            qp.push(i).unwrap();
+        }
+        qp.close();
+    });
+    let mut sum = 0u64;
+    while let Some(v) = q.pop() {
+        sum = sum.wrapping_add(v);
+    }
+    prod.join().unwrap();
+    black_box(sum);
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut runner = Runner::new();
+    let mut table = Table::new("net", &["case", "value", "unit"]);
+    let mut json: BTreeMap<String, Json> = BTreeMap::new();
+
+    // ---- micro: one SINK_BURST Data frame, encode → decode round trip ------
+    let items: Vec<u64> = (0..SINK_BURST as u64).collect();
+    let mut body = Vec::new();
+    let r = runner.bench("net/frame_encode", Some(1.0), || {
+        body.clear();
+        encode_batch(&items, &mut body);
+        let frame = Frame::Data {
+            pushes: 1,
+            blocked_ns: 0,
+            count: items.len() as u32,
+            body: std::mem::take(&mut body),
+        };
+        let bytes = frame.to_bytes();
+        black_box(bytes.len());
+        if let Frame::Data { body: b, .. } = frame {
+            body = b;
+        }
+    });
+    let encode_ns = r.ns.mean;
+
+    let mut wire = Vec::new();
+    encode_batch(&items, &mut wire);
+    let frame =
+        Frame::Data { pushes: 1, blocked_ns: 0, count: items.len() as u32, body: wire };
+    let bytes = frame.to_bytes();
+    let r = runner.bench("net/frame_decode", Some(1.0), || {
+        let mut dec = FrameDecoder::new();
+        dec.push_bytes(&bytes);
+        let got = dec.poll().expect("well-formed").expect("complete");
+        if let Frame::Data { count, body, .. } = got {
+            let items: Vec<u64> = decode_batch(count as usize, &body).expect("decode");
+            black_box(items.len());
+        }
+    });
+    let decode_ns = r.ns.mean;
+    let per_item_ns = (encode_ns + decode_ns) / SINK_BURST as f64;
+
+    for (label, v) in
+        [("frame_encode", encode_ns), ("frame_decode", decode_ns), ("codec_per_item", per_item_ns)]
+    {
+        table.row_mixed(&[Cell::S(label.into()), Cell::F(v), Cell::S("ns".into())]);
+    }
+    json.insert("frame_encode_ns".into(), Json::Num(encode_ns));
+    json.insert("frame_decode_ns".into(), Json::Num(decode_ns));
+    json.insert("codec_per_item_ns".into(), Json::Num(per_item_ns));
+
+    // ---- macro: loopback TCP edge vs the in-process queue ------------------
+    let n = (1_000_000.0 * Runner::scale()).max(10_000.0) as u64;
+    let spsc = spsc_throughput(n);
+    let net = loopback_throughput(n);
+    let relative_pct = net / spsc * 100.0;
+
+    for (label, v, unit) in [
+        ("spsc_in_process", spsc / 1.0e6, "M items/s"),
+        ("loopback_tcp_edge", net / 1.0e6, "M items/s"),
+        ("net_vs_spsc", relative_pct, "%"),
+    ] {
+        table.row_mixed(&[Cell::S(label.into()), Cell::F(v), Cell::S(unit.into())]);
+    }
+    json.insert("spsc_items_per_sec".into(), Json::Num(spsc));
+    json.insert("loopback_items_per_sec".into(), Json::Num(net));
+    json.insert("net_vs_spsc_pct".into(), Json::Num(relative_pct));
+    json.insert("items_streamed".into(), Json::Num(n as f64));
+
+    table.emit().expect("emit");
+    let json_path = figures_dir().join("BENCH_net.json");
+    std::fs::create_dir_all(figures_dir()).expect("figures dir");
+    std::fs::write(&json_path, Json::Obj(json).to_string()).expect("write json");
+    println!(
+        "# codec {per_item_ns:.0} ns/item; spsc {:.2} M/s vs loopback TCP {:.3} M/s \
+         ({relative_pct:.1}% of in-process)",
+        spsc / 1e6,
+        net / 1e6,
+    );
+    println!("# JSON ledger: {}", json_path.display());
+}

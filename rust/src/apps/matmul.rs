@@ -26,12 +26,16 @@ use std::time::Duration;
 
 use crate::config::MatmulConfig;
 use crate::elastic::{ElasticConfig, Replicable};
-use crate::flow::{Flow, RunOptions, Session};
+use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session};
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
+use crate::net::{
+    ConnSpec, FrameError, NetEdgeStats, NetSink, NetSource, ShardRouter, ShardedSession, Wire,
+    WireReader, WorkerExit,
+};
 use crate::queue::StreamConfig;
 use crate::rng::Xoshiro256pp;
 use crate::scheduler::RunReport;
-use crate::topology::StreamId;
+use crate::topology::{StreamId, Topology};
 use crate::{Result, SfError};
 
 /// One streamed unit: `rows` consecutive rows of `A` starting at `start`.
@@ -480,6 +484,265 @@ fn take_output(cell: &Arc<std::sync::Mutex<Option<Vec<f32>>>>) -> Result<Vec<f32
         .unwrap()
         .take()
         .ok_or_else(|| SfError::Scheduler("reducer produced no output".into()))
+}
+
+// ------------------------------------------------------------------------
+// Sharded (multi-process) wiring: the dot stage fans out to worker
+// processes over net edges. Workers regenerate `B` locally from the seed
+// (only row blocks of `A` and result blocks of `C` cross the wire):
+//
+//   coordinator:  MatrixSource ─► ShardRouter ─► NetSink ×N  (feed:i)
+//                 NetSource ×N ─► Reducer → C                (results:i)
+//   worker i:     NetSource(feed:i) ─► dot stage ─► NetSink(results:i)
+//
+// Result blocks land in `C` by row index, so shard routing cannot change
+// the product. The reducer's N inbound streams are the instrumented
+// Fig. 16 queues, now fed from across the process boundary.
+// ------------------------------------------------------------------------
+
+impl Wire for RowBlock {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.start.encode(out);
+        self.rows.encode(out);
+        self.data.encode(out);
+    }
+
+    fn decode(r: &mut WireReader<'_>) -> std::result::Result<Self, FrameError> {
+        Ok(RowBlock {
+            start: usize::decode(r)?,
+            rows: usize::decode(r)?,
+            data: Vec::<f32>::decode(r)?,
+        })
+    }
+}
+
+impl Wire for ResultBlock {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.start.encode(out);
+        self.rows.encode(out);
+        self.data.encode(out);
+    }
+
+    fn decode(r: &mut WireReader<'_>) -> std::result::Result<Self, FrameError> {
+        Ok(ResultBlock {
+            start: usize::decode(r)?,
+            rows: usize::decode(r)?,
+            data: Vec::<f32>::decode(r)?,
+        })
+    }
+}
+
+/// The shared-topology fingerprint both sides of a sharded run must agree
+/// on (the handshake rejects a worker whose workload parameters differ).
+pub fn matmul_topology_id(cfg: &MatmulConfig, shards: usize) -> u64 {
+    crate::net::topology_id(&[
+        b"matmul",
+        &(cfg.n as u64).to_le_bytes(),
+        &cfg.seed.to_le_bytes(),
+        &(cfg.block_rows as u64).to_le_bytes(),
+        &(shards as u64).to_le_bytes(),
+    ])
+}
+
+/// Dial retries for worker-side edges (see the Rabin–Karp twin).
+const WORKER_DIAL_RETRIES: u32 = 40;
+
+/// Everything a sharded matmul run produced.
+pub struct ShardedMatmulRun {
+    /// The computed product (rows of shed or lost blocks stay zero).
+    pub c: Vec<f32>,
+    pub report: RunReport,
+    /// The instrumented NetSource → reducer streams (Fig. 16's queues,
+    /// remote-fed).
+    pub reduce_streams: Vec<StreamId>,
+    /// Worker process exits, in spawn order.
+    pub workers: Vec<WorkerExit>,
+}
+
+/// The `mmworker` argv the coordinator hands [`ShardedSession::spawn_worker`].
+fn mm_worker_args(cfg: &MatmulConfig, shards: usize, shard: usize, addr: &str) -> Vec<String> {
+    let mut args: Vec<String> = [
+        "mmworker",
+        "--connect",
+        addr,
+        "--shard",
+        &shard.to_string(),
+        "--shards",
+        &shards.to_string(),
+        "--n",
+        &cfg.n.to_string(),
+        "--seed",
+        &cfg.seed.to_string(),
+        "--block-rows",
+        &cfg.block_rows.to_string(),
+        "--kernels",
+        &cfg.dot_kernels.to_string(),
+        "--capacity",
+        &cfg.capacity.to_string(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    if cfg.use_xla {
+        args.push("--xla".into());
+    }
+    args
+}
+
+/// Coordinator side of the sharded run: bind `listen`, spawn `shards`
+/// worker processes, stream row blocks out and result blocks back, and
+/// reassemble `C` locally. Worker crashes poison the affected edges and
+/// yield a partial product plus `FaultRecord`s — never a hang.
+pub fn run_matmul_sharded(
+    cfg: &MatmulConfig,
+    shards: usize,
+    listen: &str,
+    opts: RunOptions,
+) -> Result<ShardedMatmulRun> {
+    if cfg.n == 0 || cfg.dot_kernels == 0 || cfg.block_rows == 0 {
+        return Err(SfError::Config("matmul: n, dot_kernels, block_rows must be > 0".into()));
+    }
+    if shards == 0 {
+        return Err(SfError::Config("matmul: shards must be > 0".into()));
+    }
+    let a = Arc::new(random_matrix(cfg.n, cfg.seed));
+    let n = cfg.n;
+    let block_rows = cfg.block_rows;
+    let tid = matmul_topology_id(cfg, shards);
+
+    let mut session = ShardedSession::bind(listen, tid)?;
+    let mut feed_specs: Vec<ConnSpec> =
+        (0..shards).map(|i| session.expect_edge(format!("feed:{i}"))).collect();
+    let mut result_specs: Vec<ConnSpec> =
+        (0..shards).map(|i| session.expect_edge(format!("results:{i}"))).collect();
+    let addr = session.local_addr().to_string();
+    for i in 0..shards {
+        session.spawn_worker(&mm_worker_args(cfg, shards, i, &addr))?;
+    }
+
+    let block_bytes = block_rows * n * 4;
+    let edge_cfg = StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes);
+    let out_cell = Arc::new(std::sync::Mutex::new(None));
+
+    let mut topo = Topology::new("matmul_sharded");
+    let src = topo.add_kernel(Box::new(MatrixSource {
+        a,
+        n,
+        block_rows,
+        next_row: 0,
+        next_port: 0,
+        n_out: 1,
+        shed: opts.shedders.first().map(|s| s.control.clone()),
+    }));
+    let router = topo.add_kernel(Box::new(ShardRouter::<RowBlock>::new(
+        "shard_router",
+        shards,
+        move |blk: &RowBlock| (blk.start / block_rows.max(1)) as u64,
+    )));
+    topo.connect(
+        Outlet::<RowBlock>::new(src, 0),
+        Inlet::new(router, 0),
+        edge_cfg.clone().uninstrumented(),
+    )?;
+    for (i, spec) in feed_specs.drain(..).enumerate() {
+        let stats = NetEdgeStats::new(format!("feed:{i}"));
+        let sink = topo.add_kernel(Box::new(NetSink::<RowBlock>::new(spec, stats.clone())));
+        topo.connect(
+            Outlet::<RowBlock>::new(router, i),
+            Inlet::new(sink, 0),
+            edge_cfg.clone().uninstrumented(),
+        )?;
+        topo.register_net_edge(stats);
+    }
+
+    // Inbound: the reducer drains every shard's stream directly — its
+    // multi-port sweep already gives round-robin fairness.
+    let red = topo.add_kernel(Box::new(Reducer {
+        n,
+        c: None,
+        out: out_cell.clone(),
+        scratch: Vec::new(),
+    }));
+    let mut reduce_streams = Vec::with_capacity(shards);
+    for (i, spec) in result_specs.drain(..).enumerate() {
+        let stats = NetEdgeStats::new(format!("results:{i}"));
+        let src = topo.add_kernel(Box::new(NetSource::<ResultBlock>::new(spec, stats.clone())));
+        let s =
+            topo.connect(Outlet::<ResultBlock>::new(src, 0), Inlet::new(red, i), edge_cfg.clone())?;
+        reduce_streams.push(s);
+        topo.register_net_edge(stats);
+    }
+
+    let report = Session::run(topo, opts)?;
+    let workers = session.finish();
+    let c = take_output(&out_cell)?;
+    Ok(ShardedMatmulRun { c, report, reduce_streams, workers })
+}
+
+/// Worker side of the sharded run (the hidden `mmworker` subcommand):
+/// dial the coordinator, regenerate `B` from the seed, run the elastic
+/// dot stage, stream result blocks back.
+pub fn run_matmul_shard_worker(
+    cfg: &MatmulConfig,
+    shards: usize,
+    shard: usize,
+    connect: &str,
+    mut opts: RunOptions,
+) -> Result<RunReport> {
+    if cfg.n == 0 || cfg.dot_kernels == 0 || cfg.block_rows == 0 {
+        return Err(SfError::Config("matmul: n, dot_kernels, block_rows must be > 0".into()));
+    }
+    if shard >= shards {
+        return Err(SfError::Config(format!("matmul: shard {shard} out of range {shards}")));
+    }
+    let b = Arc::new(random_matrix(cfg.n, cfg.seed ^ 0xFEED));
+    let tid = matmul_topology_id(cfg, shards);
+    let block_bytes = cfg.block_rows * cfg.n * 4;
+    let edge_cfg = StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes);
+
+    let feed_stats = NetEdgeStats::new(format!("feed:{shard}"));
+    let feed = ConnSpec::Connect {
+        addr: connect.to_string(),
+        topology_id: tid,
+        edge_id: format!("feed:{shard}"),
+        retries: WORKER_DIAL_RETRIES,
+    };
+    let results_stats = NetEdgeStats::new(format!("results:{shard}"));
+    let results = ConnSpec::Connect {
+        addr: connect.to_string(),
+        topology_id: tid,
+        edge_id: format!("results:{shard}"),
+        retries: WORKER_DIAL_RETRIES,
+    };
+
+    let stage_cfg = cfg.dot_tuning.stage_config(cfg.dot_kernels, cfg.capacity);
+    let worker_cfg = cfg.clone();
+    let n = cfg.n;
+    let flow = Flow::new(format!("matmul_worker{shard}"))
+        .stream_defaults(edge_cfg.clone())
+        .source::<RowBlock>(Box::new(NetSource::<RowBlock>::new(feed, feed_stats.clone())))
+        .elastic_with(
+            "dot",
+            stage_cfg,
+            move |_replica| DotWorker {
+                b: b.clone(),
+                n,
+                backend: DotBackend::for_config(&worker_cfg),
+            },
+            edge_cfg.clone(),
+        )?
+        .sink_with(
+            Box::new(NetSink::<ResultBlock>::new(results, results_stats.clone())),
+            edge_cfg.uninstrumented(),
+        )?;
+
+    if opts.elastic.is_none() {
+        opts.elastic = Some(ElasticConfig { tick: Duration::from_millis(5), ..Default::default() });
+    }
+    let mut topo = flow.finish();
+    topo.register_net_edge(feed_stats);
+    topo.register_net_edge(results_stats);
+    Session::run(topo, opts)
 }
 
 #[cfg(test)]

@@ -29,6 +29,10 @@ use std::time::Duration;
 use crate::config::RabinKarpConfig;
 use crate::elastic::{ElasticConfig, Replicable};
 use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session};
+use crate::net::{
+    ConnSpec, FrameError, NetEdgeStats, NetSink, NetSource, ShardMerge, ShardRouter,
+    ShardedSession, Wire, WireReader, WorkerExit,
+};
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
 use crate::queue::StreamConfig;
 use crate::scheduler::RunReport;
@@ -818,6 +822,284 @@ fn finish_matches(cell: &Arc<std::sync::Mutex<Vec<usize>>>) -> Vec<usize> {
     matches.sort_unstable();
     matches.dedup();
     matches
+}
+
+// ------------------------------------------------------------------------
+// Sharded (multi-process) wiring: the distributed data plane. The
+// coordinator keeps segmentation, verification and reduction in-process;
+// the rolling-hash stage — the compute bottleneck — fans out to `shards`
+// worker *processes* over net edges:
+//
+//   coordinator:  Segmenter ─► ShardRouter ─► NetSink ×N   (feed:i)
+//                 NetSource ×N ─► ShardMerge ─► verify stage ─► Reducer
+//   worker i:     NetSource(feed:i) ─► hash stage ─► NetSink(results:i)
+//
+// Candidate positions are absolute corpus offsets (each `Segment` carries
+// its offset), so shard routing never changes the answer — only where the
+// hashing happens. Each worker runs its own elastic controller over the
+// hash stage; the coordinator's controller governs the verify stage whose
+// upstream is a `NetSource`, which is exactly the cross-process
+// service-rate estimation path the data plane exists to exercise.
+// ------------------------------------------------------------------------
+
+impl Wire for Segment {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.offset.encode(out);
+        self.data.encode(out);
+    }
+
+    fn decode(r: &mut WireReader<'_>) -> std::result::Result<Self, FrameError> {
+        Ok(Segment { offset: usize::decode(r)?, data: Vec::<u8>::decode(r)? })
+    }
+}
+
+/// The shared-topology fingerprint both sides of a sharded run must agree
+/// on: the handshake rejects a worker whose workload parameters differ.
+pub fn rabin_karp_topology_id(cfg: &RabinKarpConfig, shards: usize) -> u64 {
+    crate::net::topology_id(&[
+        b"rabin_karp",
+        &(cfg.corpus_bytes as u64).to_le_bytes(),
+        cfg.pattern.as_bytes(),
+        &(cfg.segment_bytes as u64).to_le_bytes(),
+        &(shards as u64).to_le_bytes(),
+    ])
+}
+
+/// Dial retries for worker-side edges: the coordinator binds before
+/// spawning, but a loaded host may still delay the accept loop.
+const WORKER_DIAL_RETRIES: u32 = 40;
+
+/// Everything a sharded Rabin–Karp run produced.
+pub struct ShardedRabinKarpRun {
+    /// Sorted, deduplicated match positions (coordinator side).
+    pub matches: Vec<usize>,
+    /// The coordinator's run report: its `stream_totals` /
+    /// `items_lost` / `faults` cover the local half **plus** the folded
+    /// per-edge transport accounting.
+    pub report: RunReport,
+    /// The instrumented merge → verify stream (the remote-fed stage's
+    /// input queue — the sharded analogue of Fig. 17's edge).
+    pub verify_streams: Vec<StreamId>,
+    /// Worker process exits, in spawn order.
+    pub workers: Vec<WorkerExit>,
+}
+
+/// The `rkworker` argv the coordinator hands [`ShardedSession::spawn_worker`]
+/// — every workload parameter the worker needs to derive the same
+/// topology id and build its half of the pipeline.
+fn rk_worker_args(cfg: &RabinKarpConfig, shards: usize, shard: usize, addr: &str) -> Vec<String> {
+    [
+        "rkworker",
+        "--connect",
+        addr,
+        "--shard",
+        &shard.to_string(),
+        "--shards",
+        &shards.to_string(),
+        "--pattern",
+        &cfg.pattern,
+        "--corpus-bytes",
+        &cfg.corpus_bytes.to_string(),
+        "--segment-bytes",
+        &cfg.segment_bytes.to_string(),
+        "--kernels",
+        &cfg.hash_kernels.to_string(),
+        "--capacity",
+        &cfg.capacity.to_string(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Coordinator side of the sharded run: bind `listen`, spawn `shards`
+/// worker processes (the current executable re-entered via the hidden
+/// `rkworker` subcommand, or `SF_WORKER_BIN`), stream segments out and
+/// candidates back, verify and reduce locally.
+///
+/// A worker crash or socket drop poisons the affected edges and surfaces
+/// as `FaultRecord`s in the report (plus `items_lost` for frames caught
+/// in flight) — the run returns a partial result rather than hanging.
+pub fn run_rabin_karp_sharded(
+    cfg: &RabinKarpConfig,
+    shards: usize,
+    listen: &str,
+    mut opts: RunOptions,
+) -> Result<ShardedRabinKarpRun> {
+    let pattern = cfg.pattern.as_bytes().to_vec();
+    if pattern.is_empty() {
+        return Err(SfError::Config("rabin-karp: empty pattern".into()));
+    }
+    if shards == 0 {
+        return Err(SfError::Config("rabin-karp: shards must be > 0".into()));
+    }
+    if cfg.hash_kernels == 0 || cfg.verify_kernels == 0 {
+        return Err(SfError::Config("rabin-karp: kernel counts must be > 0".into()));
+    }
+    let corpus = Arc::new(foobar_corpus(cfg.corpus_bytes));
+    let m = pattern.len();
+    let overlap = m - 1;
+    let tid = rabin_karp_topology_id(cfg, shards);
+
+    let mut session = ShardedSession::bind(listen, tid)?;
+    // Register every route before any worker can dial in.
+    let mut feed_specs: Vec<ConnSpec> =
+        (0..shards).map(|i| session.expect_edge(format!("feed:{i}"))).collect();
+    let mut result_specs: Vec<ConnSpec> =
+        (0..shards).map(|i| session.expect_edge(format!("results:{i}"))).collect();
+    let addr = session.local_addr().to_string();
+    for i in 0..shards {
+        session.spawn_worker(&rk_worker_args(cfg, shards, i, &addr))?;
+    }
+
+    let batch_bytes = (cfg.segment_bytes / m).max(1) * std::mem::size_of::<usize>();
+    let seg_cfg = StreamConfig::default()
+        .with_capacity(cfg.capacity)
+        .with_item_bytes(cfg.segment_bytes)
+        .uninstrumented();
+    let cand_cfg =
+        StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(batch_bytes);
+
+    let mut topo = Topology::new("rabin_karp_sharded");
+
+    // Outbound half: Segmenter → ShardRouter → NetSink ×N.
+    let seg = topo.add_kernel(Box::new(Segmenter {
+        corpus: corpus.clone(),
+        segment_bytes: cfg.segment_bytes,
+        overlap,
+        next_off: 0,
+        next_port: 0,
+        n_out: 1,
+        shed: opts.shedders.first().map(|s| s.control.clone()),
+    }));
+    // Key = segment index (offsets are overlap-shifted, so add it back):
+    // deterministic round-robin over shards.
+    let seg_bytes = cfg.segment_bytes.max(1);
+    let router = topo.add_kernel(Box::new(ShardRouter::<Segment>::new(
+        "shard_router",
+        shards,
+        move |s: &Segment| ((s.offset + overlap) / seg_bytes) as u64,
+    )));
+    topo.connect(Outlet::<Segment>::new(seg, 0), Inlet::new(router, 0), seg_cfg.clone())?;
+    for (i, spec) in feed_specs.drain(..).enumerate() {
+        let stats = NetEdgeStats::new(format!("feed:{i}"));
+        let sink = topo.add_kernel(Box::new(NetSink::<Segment>::new(spec, stats.clone())));
+        topo.connect(Outlet::<Segment>::new(router, i), Inlet::new(sink, 0), seg_cfg.clone())?;
+        topo.register_net_edge(stats);
+    }
+
+    // Inbound half: NetSource ×N → ShardMerge → verify stage → Reducer.
+    let merge = topo.add_kernel(Box::new(ShardMerge::<Vec<usize>>::new("shard_merge")));
+    for (i, spec) in result_specs.drain(..).enumerate() {
+        let stats = NetEdgeStats::new(format!("results:{i}"));
+        let src = topo.add_kernel(Box::new(NetSource::<Vec<usize>>::new(spec, stats.clone())));
+        topo.connect(Outlet::<Vec<usize>>::new(src, 0), Inlet::new(merge, i), cand_cfg.clone())?;
+        topo.register_net_edge(stats);
+    }
+    let verify_cfg = cfg.verify_tuning.stage_config(cfg.verify_kernels, cfg.capacity);
+    let (vcorpus, vpattern) = (corpus.clone(), pattern.clone());
+    let stage = topo.add_elastic_stage("verify", verify_cfg, move |_replica| VerifyWorker {
+        corpus: vcorpus.clone(),
+        pattern: vpattern.clone(),
+    })?;
+    // The instrumented remote-fed stream: merge → verify split.
+    let s_mv = topo.connect(Outlet::<Vec<usize>>::new(merge, 0), stage.inlet(), cand_cfg)?;
+    let matches_cell = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let red = topo
+        .add_kernel(Box::new(BatchMatchReducer { out: matches_cell.clone(), scratch: Vec::new() }));
+    topo.connect(
+        stage.outlet(),
+        Inlet::new(red, 0),
+        StreamConfig::default()
+            .with_capacity(cfg.capacity)
+            .with_item_bytes(std::mem::size_of::<usize>())
+            .uninstrumented(),
+    )?;
+
+    if opts.elastic.is_none() {
+        opts.elastic = Some(ElasticConfig {
+            tick: Duration::from_millis(5),
+            worker_budget: crate::placement::BudgetPolicy::Fixed(cfg.verify_kernels),
+            ..Default::default()
+        });
+    }
+    let report = Session::run(topo, opts)?;
+    let workers = session.finish();
+    let matches = finish_matches(&matches_cell);
+    Ok(ShardedRabinKarpRun { matches, report, verify_streams: vec![s_mv], workers })
+}
+
+/// Worker side of the sharded run (the hidden `rkworker` subcommand):
+/// dial the coordinator, stream segments in, run the elastic hash stage,
+/// stream candidate batches back. Needs only the pattern — the corpus
+/// never crosses the wire except as segments.
+pub fn run_rabin_karp_shard_worker(
+    cfg: &RabinKarpConfig,
+    shards: usize,
+    shard: usize,
+    connect: &str,
+    mut opts: RunOptions,
+) -> Result<RunReport> {
+    let pattern = cfg.pattern.as_bytes().to_vec();
+    if pattern.is_empty() {
+        return Err(SfError::Config("rabin-karp: empty pattern".into()));
+    }
+    if shard >= shards {
+        return Err(SfError::Config(format!("rabin-karp: shard {shard} out of range {shards}")));
+    }
+    if cfg.hash_kernels == 0 {
+        return Err(SfError::Config("rabin-karp: kernel counts must be > 0".into()));
+    }
+    let m = pattern.len();
+    let (pattern_hash, pow) = (hash_of(&pattern), leading_pow(m));
+    let tid = rabin_karp_topology_id(cfg, shards);
+    let batch_bytes = (cfg.segment_bytes / m).max(1) * std::mem::size_of::<usize>();
+
+    let feed_stats = NetEdgeStats::new(format!("feed:{shard}"));
+    let feed = ConnSpec::Connect {
+        addr: connect.to_string(),
+        topology_id: tid,
+        edge_id: format!("feed:{shard}"),
+        retries: WORKER_DIAL_RETRIES,
+    };
+    let results_stats = NetEdgeStats::new(format!("results:{shard}"));
+    let results = ConnSpec::Connect {
+        addr: connect.to_string(),
+        topology_id: tid,
+        edge_id: format!("results:{shard}"),
+        retries: WORKER_DIAL_RETRIES,
+    };
+
+    let hash_cfg = cfg.hash_tuning.stage_config(cfg.hash_kernels, cfg.capacity);
+    let flow = Flow::new(format!("rabin_karp_worker{shard}"))
+        .source::<Segment>(Box::new(NetSource::<Segment>::new(feed, feed_stats.clone())))
+        .elastic_with(
+            "hash",
+            hash_cfg,
+            move |_replica| HashWorker { pattern_len: m, pattern_hash, pow },
+            StreamConfig::default()
+                .with_capacity(cfg.capacity)
+                .with_item_bytes(cfg.segment_bytes),
+        )?
+        .sink_with(
+            Box::new(NetSink::<Vec<usize>>::new(results, results_stats.clone())),
+            StreamConfig::default()
+                .with_capacity(cfg.capacity)
+                .with_item_bytes(batch_bytes)
+                .uninstrumented(),
+        )?;
+
+    if opts.elastic.is_none() {
+        opts.elastic = Some(ElasticConfig {
+            tick: Duration::from_millis(5),
+            worker_budget: crate::placement::BudgetPolicy::Fixed(cfg.hash_kernels),
+            ..Default::default()
+        });
+    }
+    let mut topo = flow.finish();
+    topo.register_net_edge(feed_stats);
+    topo.register_net_edge(results_stats);
+    Session::run(topo, opts)
 }
 
 #[cfg(test)]

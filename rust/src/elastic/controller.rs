@@ -56,7 +56,7 @@ use crate::classify::DistributionClass;
 use crate::control::{BufferAdvisor, RateRegistry};
 use crate::monitor::{MonitorEvent, QueueEnd};
 use crate::placement::{
-    BudgetPolicy, CpuTopology, HostLoadMonitor, LoadSource, LoadSourceHandle,
+    BudgetLease, BudgetPolicy, CpuTopology, HostLoadMonitor, LoadSource, LoadSourceHandle,
     ProcStatSource,
 };
 use crate::queue::MonitorHandle;
@@ -220,6 +220,14 @@ pub struct ElasticConfig {
     /// degradation level on attached shedders is raised — and,
     /// symmetrically, consecutive clear epochs before it is lowered.
     pub shed_after_ticks: u32,
+    /// Host-local budget lease (see [`BudgetLease`]). When set and the
+    /// budget policy is [`BudgetPolicy::HostAware`], every control epoch
+    /// divides the evaluated budget by the number of live streamflow
+    /// processes sharing the lease file — fixing the double-claim where
+    /// co-located processes each took the full idle capacity. Ignored
+    /// for `Unlimited`/`Fixed` policies (those caps are per-run by
+    /// intent).
+    pub budget_lease: Option<Arc<BudgetLease>>,
 }
 
 impl Default for ElasticConfig {
@@ -237,6 +245,7 @@ impl Default for ElasticConfig {
             host_cpus_override: None,
             stall_epochs: 8,
             shed_after_ticks: 4,
+            budget_lease: None,
         }
     }
 }
@@ -336,6 +345,7 @@ pub struct ElasticController {
     host_cpus: usize,
     last_budget: Option<usize>,
     budget_note_emitted: bool,
+    lease_note_emitted: bool,
     /// Degradation knobs the shedding loop may turn (sources).
     shedders: Vec<ShedBinding>,
     /// Consecutive budget-gated epochs (shedding pressure).
@@ -420,6 +430,7 @@ impl ElasticController {
             host_cpus,
             last_budget: None,
             budget_note_emitted: false,
+            lease_note_emitted: false,
             shedders: Vec::new(),
             shed_hot: 0,
             shed_cool: 0,
@@ -825,8 +836,32 @@ impl ElasticController {
     fn effective_budget(&mut self, at_ns: u64) -> Option<usize> {
         let external = self.host_load.as_mut().and_then(|m| m.tick());
         let decision = self.cfg.worker_budget.evaluate(self.host_cpus, external);
+        let mut budget = decision.budget;
+        // Host-local lease: co-located streamflow processes only see each
+        // other as "external" load after the fact, so without coordination
+        // every one of them claims the same idle CPUs. When a lease is
+        // attached, split the host-aware budget by the live participant
+        // count each epoch (heartbeating our own slot as a side effect).
+        if let BudgetPolicy::HostAware { .. } = self.cfg.worker_budget {
+            if let (Some(lease), Some(b)) = (&self.cfg.budget_lease, budget) {
+                let n = lease.participants().max(1);
+                budget = Some((b / n).max(1));
+                if !self.lease_note_emitted {
+                    self.lease_note_emitted = true;
+                    self.ring.emit(ControlEvent::Note {
+                        at_ns,
+                        note: format!(
+                            "budget lease {}: {} live process(es) share the host-aware \
+                             budget",
+                            lease.path().display(),
+                            n
+                        ),
+                    });
+                }
+            }
+        }
         if let Some(g) = &self.gauges {
-            g.set_budget(decision.budget);
+            g.set_budget(budget);
         }
         if let Some(note) = decision.note {
             if !self.budget_note_emitted {
@@ -834,13 +869,13 @@ impl ElasticController {
                 self.ring.emit(ControlEvent::Note { at_ns, note });
             }
         }
-        if let Some(b) = decision.budget {
+        if let Some(b) = budget {
             if self.last_budget != Some(b) {
                 self.last_budget = Some(b);
                 self.ring.emit(ControlEvent::Budget { at_ns, budget: b });
             }
         }
-        decision.budget
+        budget
     }
 
     /// Snapshot one stage's telemetry and fold it into the EWMAs.

@@ -36,6 +36,13 @@
 //!   host-load sampling, the [`placement::BudgetPolicy`] that turns idle
 //!   capacity into a dynamic worker budget, and core-affinity pinning of
 //!   stage threads (recorded no-op where denied).
+//! * [`net`] — the **distributed data plane**: any stream edge can cross a
+//!   process boundary through a `NetSink`/`NetSource` pair carrying
+//!   length-prefixed frames over TCP (std-only wire codec). Frame headers
+//!   piggyback the sender's monotonic push counter and blocked time, so
+//!   conservation checks, service-rate estimation and the elastic
+//!   controller keep working across the boundary; `ShardedSession` spawns
+//!   and supervises worker processes for sharded application runs.
 //! * [`queueing`] — the M/M/1 analytics of Eq. 1 (non-blocking observation
 //!   probabilities) and analytic buffer sizing.
 //! * [`telemetry`] — the **live observability plane**: a Prometheus
@@ -63,6 +70,7 @@ pub mod estimator;
 pub mod flow;
 pub mod kernel;
 pub mod monitor;
+pub mod net;
 pub mod placement;
 pub mod port;
 pub mod queue;
@@ -93,7 +101,8 @@ pub mod prelude {
     pub use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session, StageIo};
     pub use crate::kernel::{Kernel, KernelContext, KernelStatus};
     pub use crate::monitor::MonitorConfig;
-    pub use crate::placement::{BudgetPolicy, PlacementPolicy};
+    pub use crate::net::{ConnSpec, NetEdgeStats, NetSink, NetSource, ShardedSession, Wire};
+    pub use crate::placement::{BudgetLease, BudgetPolicy, PlacementPolicy};
     pub use crate::queue::StreamConfig;
     pub use crate::scheduler::RunReport;
     pub use crate::telemetry::TelemetryConfig;

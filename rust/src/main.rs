@@ -8,6 +8,11 @@
 //! * `matmul`       — the matrix-multiply application (§V-B1)
 //! * `rabinkarp`    — the Rabin–Karp application (§V-B2)
 //! * `artifacts`    — validate the AOT artifact directory end to end
+//!
+//! With `--shards N` the two applications run distributed: the
+//! coordinator binds `--listen HOST:PORT` and re-invokes this executable
+//! through the hidden `rkworker` / `mmworker` subcommands (one process
+//! per shard, dialing back over net edges).
 
 use std::time::Duration;
 
@@ -36,6 +41,10 @@ fn main() {
         Some("matmul") => cmd_matmul(&args),
         Some("rabinkarp") => cmd_rabinkarp(&args),
         Some("artifacts") => cmd_artifacts(&args),
+        // Hidden worker entry points for the sharded runs (spawned by the
+        // coordinator; not part of the human-facing surface).
+        Some("rkworker") => cmd_rkworker(&args),
+        Some("mmworker") => cmd_mmworker(&args),
         _ => {
             eprintln!(
                 "usage: streamflow <probe|microbench|dualphase|matmul|rabinkarp|artifacts> \
@@ -43,7 +52,9 @@ fn main() {
                  telemetry: [--metrics-addr HOST:PORT] [--events-jsonl PATH] \
                  [--trace-out PATH]\n\
                  fault tolerance (matmul/rabinkarp): [--deadline SECS] [--shed] \
-                 [--restart-budget N]"
+                 [--restart-budget N]\n\
+                 distributed (matmul/rabinkarp): [--shards N] [--listen HOST:PORT] \
+                 [--budget-lease PATH]"
             );
             2
         }
@@ -234,6 +245,22 @@ fn app_run_options(args: &Args, default_pool: usize) -> Option<RunOptions> {
             });
         }
     }
+    // --budget-lease <path>: split a host-aware budget between streamflow
+    // processes on this machine through a lock-file lease.
+    if let Some(path) = args.options.get("budget-lease") {
+        match opts.elastic.as_mut() {
+            Some(e) => {
+                e.budget_lease =
+                    Some(std::sync::Arc::new(streamflow::placement::BudgetLease::new(path)));
+            }
+            None => {
+                eprintln!(
+                    "error: --budget-lease needs an elastic budget (--budget or --host-aware)"
+                );
+                return None;
+            }
+        }
+    }
     if args.has_flag("pin") {
         opts.placement = PlacementPolicy::Pack;
     }
@@ -313,6 +340,28 @@ fn cmd_matmul(args: &Args) -> i32 {
     let Some(opts) = app_run_options(args, cfg.dot_kernels) else {
         return 2;
     };
+    let shards: usize = args.get_or("shards", 0).unwrap_or(0);
+    if shards > 0 {
+        let listen: String = args.get_or("listen", "127.0.0.1:0".to_string()).unwrap();
+        return match matmul::run_matmul_sharded(&cfg, shards, &listen, opts) {
+            Ok(run) => {
+                let checksum: f64 = run.c.iter().map(|&x| x as f64).sum();
+                println!(
+                    "matmul {}×{} sharded over {} worker processes, checksum {checksum:.3}",
+                    cfg.n, cfg.n, shards
+                );
+                report_rates(&run.report, "matmul");
+                report_scaling(&run.report);
+                report_faults(&run.report);
+                trace_out(args, &run.report);
+                report_workers(&run.workers)
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        };
+    }
     match matmul::run_matmul(&cfg, opts) {
         Ok(run) => {
             let checksum: f64 = run.c.iter().map(|&x| x as f64).sum();
@@ -352,6 +401,31 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
     let Some(opts) = app_run_options(args, cfg.hash_kernels + cfg.verify_kernels) else {
         return 2;
     };
+    let shards: usize = args.get_or("shards", 0).unwrap_or(0);
+    if shards > 0 {
+        let listen: String = args.get_or("listen", "127.0.0.1:0".to_string()).unwrap();
+        return match rabin_karp::run_rabin_karp_sharded(&cfg, shards, &listen, opts) {
+            Ok(run) => {
+                println!(
+                    "rabin-karp over {} bytes sharded across {} worker processes: \
+                     {} matches of '{}'",
+                    cfg.corpus_bytes,
+                    shards,
+                    run.matches.len(),
+                    cfg.pattern
+                );
+                report_rates(&run.report, "rabinkarp");
+                report_scaling(&run.report);
+                report_faults(&run.report);
+                trace_out(args, &run.report);
+                report_workers(&run.workers)
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        };
+    }
     match rabin_karp::run_rabin_karp(&cfg, opts) {
         Ok(run) => {
             println!(
@@ -366,6 +440,89 @@ fn cmd_rabinkarp(args: &Args) -> i32 {
             report_faults(&run.report);
             trace_out(args, &run.report);
             0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Print worker process exits; nonzero if any shard failed.
+fn report_workers(workers: &[streamflow::net::WorkerExit]) -> i32 {
+    let mut code = 0;
+    for w in workers {
+        if !w.success {
+            println!("  worker pid {} FAILED (exit {:?})", w.pid, w.code);
+            code = 1;
+        }
+    }
+    code
+}
+
+/// Hidden shard-worker entry for the sharded Rabin–Karp run: spawned by
+/// the coordinator with the workload parameters on the command line.
+fn cmd_rkworker(args: &Args) -> i32 {
+    let mut cfg = RabinKarpConfig::default();
+    cfg.corpus_bytes = args.get_or("corpus-bytes", cfg.corpus_bytes).unwrap_or(cfg.corpus_bytes);
+    cfg.segment_bytes =
+        args.get_or("segment-bytes", cfg.segment_bytes).unwrap_or(cfg.segment_bytes);
+    if let Some(p) = args.options.get("pattern") {
+        cfg.pattern = p.clone();
+    }
+    cfg.hash_kernels = args.get_or("kernels", cfg.hash_kernels).unwrap_or(cfg.hash_kernels);
+    cfg.capacity = args.get_or("capacity", cfg.capacity).unwrap_or(cfg.capacity);
+    let shards: usize = args.get_or("shards", 1).unwrap_or(1);
+    let shard: usize = args.get_or("shard", 0).unwrap_or(0);
+    let Some(connect) = args.options.get("connect") else {
+        eprintln!("error: rkworker needs --connect HOST:PORT");
+        return 2;
+    };
+    let Some(opts) = app_run_options(args, cfg.hash_kernels) else {
+        return 2;
+    };
+    match rabin_karp::run_rabin_karp_shard_worker(&cfg, shards, shard, connect, opts) {
+        Ok(report) => {
+            report_faults(&report);
+            if report.faults.is_empty() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Hidden shard-worker entry for the sharded matmul run.
+fn cmd_mmworker(args: &Args) -> i32 {
+    let mut cfg = MatmulConfig::default();
+    cfg.n = args.get_or("n", cfg.n).unwrap_or(cfg.n);
+    cfg.seed = args.get_or("seed", cfg.seed).unwrap_or(cfg.seed);
+    cfg.block_rows = args.get_or("block-rows", cfg.block_rows).unwrap_or(cfg.block_rows);
+    cfg.dot_kernels = args.get_or("kernels", cfg.dot_kernels).unwrap_or(cfg.dot_kernels);
+    cfg.capacity = args.get_or("capacity", cfg.capacity).unwrap_or(cfg.capacity);
+    cfg.use_xla = args.has_flag("xla");
+    let shards: usize = args.get_or("shards", 1).unwrap_or(1);
+    let shard: usize = args.get_or("shard", 0).unwrap_or(0);
+    let Some(connect) = args.options.get("connect") else {
+        eprintln!("error: mmworker needs --connect HOST:PORT");
+        return 2;
+    };
+    let Some(opts) = app_run_options(args, cfg.dot_kernels) else {
+        return 2;
+    };
+    match matmul::run_matmul_shard_worker(&cfg, shards, shard, connect, opts) {
+        Ok(report) => {
+            report_faults(&report);
+            if report.faults.is_empty() {
+                0
+            } else {
+                1
+            }
         }
         Err(e) => {
             eprintln!("error: {e}");

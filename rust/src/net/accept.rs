@@ -1,0 +1,127 @@
+//! Shared non-blocking accept loop.
+//!
+//! One dedicated thread owns a non-blocking [`TcpListener`] and hands
+//! every accepted connection to a caller-supplied handler. This is the
+//! machinery the PR-6 `/metrics` exporter hand-rolled; it now backs both
+//! [`crate::telemetry::MetricsServer`] (handler = serve one scrape) and
+//! [`crate::net::NetListener`] (handler = handshake + route to the
+//! waiting [`crate::net::NetSource`]/[`crate::net::NetSink`]).
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+
+/// Poll cadence while no connection is pending.
+const IDLE_POLL: Duration = Duration::from_millis(5);
+
+/// Handle to an accept-loop thread; dropping (or [`AcceptLoop::shutdown`])
+/// stops accepting and joins the thread.
+pub struct AcceptLoop {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for AcceptLoop {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AcceptLoop").field("addr", &self.addr).finish()
+    }
+}
+
+impl AcceptLoop {
+    /// Bind `addr` (port 0 ⇒ ephemeral; see [`AcceptLoop::local_addr`])
+    /// and run `handler` on every accepted connection, serially, on the
+    /// `thread_name` thread until shutdown.
+    pub fn spawn(
+        addr: &str,
+        thread_name: &str,
+        handler: impl Fn(TcpStream) + Send + 'static,
+    ) -> Result<AcceptLoop> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name(thread_name.to_string())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((conn, _peer)) => handler(conn),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(IDLE_POLL);
+                        }
+                        Err(_) => std::thread::sleep(IDLE_POLL),
+                    }
+                }
+            })?;
+        Ok(AcceptLoop { addr, stop, thread: Some(thread) })
+    }
+
+    /// The realized bind address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the loop thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for AcceptLoop {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn accepts_and_dispatches_serially() {
+        let served = Arc::new(AtomicUsize::new(0));
+        let s2 = served.clone();
+        let lp = AcceptLoop::spawn("127.0.0.1:0", "sf-test-accept", move |mut conn| {
+            let mut byte = [0u8; 1];
+            let _ = conn.read_exact(&mut byte);
+            let _ = conn.write_all(&[byte[0] + 1]);
+            s2.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        let addr = lp.local_addr();
+        for i in 0..3u8 {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(&[i]).unwrap();
+            let mut back = [0u8; 1];
+            c.read_exact(&mut back).unwrap();
+            assert_eq!(back[0], i + 1);
+        }
+        assert_eq!(served.load(Ordering::SeqCst), 3);
+        lp.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_and_port_is_released_eventually() {
+        let lp = AcceptLoop::spawn("127.0.0.1:0", "sf-test-accept2", |_c| {}).unwrap();
+        let addr = lp.local_addr();
+        assert_ne!(addr.port(), 0, "ephemeral port resolved");
+        lp.shutdown();
+        // Connecting after shutdown must not be served; either refused or
+        // accepted by the OS backlog and then dropped — just assert no hang.
+        let _ = TcpStream::connect(addr);
+    }
+}

@@ -1,0 +1,601 @@
+//! Network-backed stream edges: [`NetSink`] / [`NetSource`] kernel pair.
+//!
+//! A net edge splits one logical stream across a process boundary while
+//! keeping the hot path the PR-2 zero-RMW SPSC protocol: each side is an
+//! ordinary kernel over an ordinary local queue, and only the kernel body
+//! touches the socket. The sender batches `pop_batch` bursts into `Data`
+//! frames and piggybacks its monotonic cumulative item counter plus its
+//! upstream blocked-ns accumulator; the receiver folds those into its
+//! local [`crate::queue::QueueCounters`], so delta-sampling, conservation
+//! (`pushes == pops + occupancy + in_flight`), blocked-duration validity
+//! gates, service-rate estimation, and the elastic controller all keep
+//! working across the wire.
+//!
+//! Failure semantics (PR-7 preserved end-to-end): a kernel panic or
+//! upstream poison on the sending side travels as `Fin { poisoned: true }`
+//! and poisons the receiving side's local stream; a socket error or
+//! malformed frame on either side poisons the edge locally and records a
+//! [`FaultRecord`] on the shared [`NetEdgeStats`] — the run always ends
+//! with a partial [`crate::scheduler::RunReport`], never a hang and never
+//! a transport-induced panic.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::elastic::FaultRecord;
+use crate::kernel::{Kernel, KernelContext, KernelStatus};
+use crate::timing::TimeRef;
+
+use super::frame::{decode_batch, encode_batch, Frame, FrameDecoder, Wire, WIRE_VERSION};
+
+/// Items drained per `Data` frame (one batched publish each side).
+pub const SINK_BURST: usize = 64;
+/// Receiver socket-read quantum: bounded so a quiet edge still returns
+/// to the scheduler (Stall) instead of parking in the kernel body.
+const READ_TIMEOUT: Duration = Duration::from_millis(10);
+/// Handshake patience (dial + Hello/HelloAck round trip).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Data-write patience before a wedged peer poisons the edge.
+const WRITE_PATIENCE: Duration = Duration::from_secs(30);
+/// Pause between dial retries.
+const RETRY_PAUSE: Duration = Duration::from_millis(50);
+
+/// Shared per-edge transport accounting: the remote half of the
+/// conservation ledger plus the `sf_net_*` gauge block. Registered on the
+/// [`crate::topology::Topology`] so the scheduler exports it during the
+/// run and folds its faults/losses into the final report.
+#[derive(Debug)]
+pub struct NetEdgeStats {
+    label: String,
+    frames: AtomicU64,
+    bytes: AtomicU64,
+    reconnects: AtomicU64,
+    /// Items this side has sent (sink side).
+    sent: AtomicU64,
+    /// Items this side has delivered into its local queue (source side).
+    received: AtomicU64,
+    /// Sender's cumulative push counter from the latest `Data` header.
+    remote_pushes: AtomicU64,
+    /// Sender's cumulative upstream blocked-ns from the latest header.
+    remote_blocked_ns: AtomicU64,
+    poisoned: AtomicBool,
+    faults: Mutex<Vec<FaultRecord>>,
+}
+
+impl NetEdgeStats {
+    pub fn new(label: impl Into<String>) -> Arc<Self> {
+        Arc::new(NetEdgeStats {
+            label: label.into(),
+            frames: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            sent: AtomicU64::new(0),
+            received: AtomicU64::new(0),
+            remote_pushes: AtomicU64::new(0),
+            remote_blocked_ns: AtomicU64::new(0),
+            poisoned: AtomicBool::new(false),
+            faults: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Edge id (also the `edge=` label on the `sf_net_*` gauges).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Frames carried (either direction of this half-edge).
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes carried.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Dial attempts beyond each first try.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Items sent over the wire (sink side).
+    pub fn sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+
+    /// Items delivered into the local queue (source side).
+    pub fn received(&self) -> u64 {
+        self.received.load(Ordering::Relaxed)
+    }
+
+    /// Sender's cumulative push counter as of the latest `Data` header.
+    pub fn remote_pushes(&self) -> u64 {
+        self.remote_pushes.load(Ordering::Relaxed)
+    }
+
+    /// Sender's cumulative blocked-ns as of the latest `Data` header.
+    pub fn remote_blocked_ns(&self) -> u64 {
+        self.remote_blocked_ns.load(Ordering::Relaxed)
+    }
+
+    /// Items the sender has committed to the wire that this side has not
+    /// yet delivered into its local queue — the cross-boundary term of
+    /// `pushes == pops + occupancy + in_flight`.
+    pub fn in_flight(&self) -> u64 {
+        self.remote_pushes().saturating_sub(self.received())
+    }
+
+    /// The edge transport has failed (socket error / malformed frame).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn note_frame(&self, wire_bytes: u64) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(wire_bytes, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_sent(&self, n: u64) {
+        self.sent.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_received(&self, n: u64) {
+        self.received.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_remote(&self, pushes: u64, blocked_ns: u64) {
+        self.remote_pushes.fetch_max(pushes, Ordering::Relaxed);
+        self.remote_blocked_ns.fetch_max(blocked_ns, Ordering::Relaxed);
+    }
+
+    /// Mark the edge transport failed and record why. Never panics.
+    pub fn poison_with(&self, target: &str, message: impl Into<String>) {
+        self.poisoned.store(true, Ordering::Release);
+        self.faults.lock().unwrap_or_else(|e| e.into_inner()).push(FaultRecord {
+            at_ns: TimeRef::new().now_ns(),
+            target: target.to_string(),
+            lane: None,
+            restarts: 0,
+            escalated: true,
+            message: message.into(),
+        });
+    }
+
+    /// Drain the recorded transport faults (scheduler, end of run).
+    pub fn take_faults(&self) -> Vec<FaultRecord> {
+        std::mem::take(&mut *self.faults.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+/// How a net-edge kernel obtains its connection.
+pub enum ConnSpec {
+    /// Dial out (worker side): connect, send `Hello`, await `HelloAck`.
+    Connect {
+        addr: String,
+        topology_id: u64,
+        edge_id: String,
+        /// Additional dial attempts after the first (each audited as a
+        /// reconnect).
+        retries: u32,
+    },
+    /// Wait for the local [`super::NetListener`] to route an accepted,
+    /// already-handshaken connection for this edge id.
+    Accept { pending: mpsc::Receiver<TcpStream> },
+}
+
+impl std::fmt::Debug for ConnSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConnSpec::Connect { addr, edge_id, .. } => {
+                f.debug_struct("Connect").field("addr", addr).field("edge_id", edge_id).finish()
+            }
+            ConnSpec::Accept { .. } => f.debug_struct("Accept").finish_non_exhaustive(),
+        }
+    }
+}
+
+enum Dial {
+    Ready(TcpStream),
+    NotYet,
+    Failed(String),
+}
+
+fn prep_stream(conn: &TcpStream) -> std::io::Result<()> {
+    conn.set_nodelay(true)?;
+    conn.set_read_timeout(Some(READ_TIMEOUT))?;
+    // Long write patience: a full receiver queue propagates backpressure
+    // through the TCP window and legitimately stalls the sender's write;
+    // the timeout only exists so a wedged peer eventually poisons the
+    // edge instead of pinning the thread forever.
+    conn.set_write_timeout(Some(WRITE_PATIENCE))?;
+    Ok(())
+}
+
+/// Read frames until one arrives or `patience` passes (handshake only).
+pub(crate) fn read_one_frame(conn: &mut TcpStream, patience: Duration) -> Result<Frame, String> {
+    let mut dec = FrameDecoder::new();
+    let mut chunk = [0u8; 1024];
+    let start = std::time::Instant::now();
+    loop {
+        match dec.poll() {
+            Ok(Some(f)) => return Ok(f),
+            Ok(None) => {}
+            Err(e) => return Err(e.to_string()),
+        }
+        if start.elapsed() > patience {
+            return Err("handshake timed out".into());
+        }
+        match conn.read(&mut chunk) {
+            Ok(0) => return Err("peer closed during handshake".into()),
+            Ok(n) => dec.push_bytes(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+}
+
+impl ConnSpec {
+    fn establish(&mut self, stats: &NetEdgeStats) -> Dial {
+        match self {
+            ConnSpec::Connect { addr, topology_id, edge_id, retries } => {
+                let mut last_err = String::new();
+                for attempt in 0..=*retries {
+                    if attempt > 0 {
+                        stats.note_reconnect();
+                        std::thread::sleep(RETRY_PAUSE.saturating_mul(attempt));
+                    }
+                    let mut conn = match TcpStream::connect(&*addr) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            last_err = format!("dial {addr}: {e}");
+                            continue;
+                        }
+                    };
+                    if let Err(e) = prep_stream(&conn) {
+                        last_err = format!("socket options: {e}");
+                        continue;
+                    }
+                    let hello = Frame::Hello {
+                        version: WIRE_VERSION,
+                        topology_id: *topology_id,
+                        edge_id: edge_id.clone(),
+                    };
+                    if let Err(e) = conn.write_all(&hello.to_bytes()) {
+                        last_err = format!("send hello: {e}");
+                        continue;
+                    }
+                    match read_one_frame(&mut conn, HANDSHAKE_TIMEOUT) {
+                        Ok(Frame::HelloAck) => return Dial::Ready(conn),
+                        Ok(other) => {
+                            last_err = format!("expected HelloAck, got {other:?}");
+                            continue;
+                        }
+                        Err(e) => {
+                            last_err = format!("await HelloAck: {e}");
+                            continue;
+                        }
+                    }
+                }
+                Dial::Failed(last_err)
+            }
+            ConnSpec::Accept { pending } => {
+                match pending.recv_timeout(Duration::from_millis(50)) {
+                    Ok(conn) => match prep_stream(&conn) {
+                        Ok(()) => Dial::Ready(conn),
+                        Err(e) => Dial::Failed(format!("socket options: {e}")),
+                    },
+                    Err(mpsc::RecvTimeoutError::Timeout) => Dial::NotYet,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Dial::Failed("listener gone before the edge connected".into())
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sending half of a net edge: an ordinary sink kernel that drains its
+/// local input stream into length-prefixed `Data` frames.
+pub struct NetSink<T: Wire + 'static> {
+    name: String,
+    spec: ConnSpec,
+    conn: Option<TcpStream>,
+    stats: Arc<NetEdgeStats>,
+    scratch: Vec<T>,
+    wire_buf: Vec<u8>,
+    body_buf: Vec<u8>,
+    /// Cumulative items committed to the wire (the `Data` header value).
+    sent: u64,
+}
+
+impl<T: Wire + 'static> NetSink<T> {
+    pub fn new(spec: ConnSpec, stats: Arc<NetEdgeStats>) -> Self {
+        NetSink {
+            name: format!("net_sink:{}", stats.label()),
+            spec,
+            conn: None,
+            stats,
+            scratch: Vec::with_capacity(SINK_BURST),
+            wire_buf: Vec::new(),
+            body_buf: Vec::new(),
+            sent: 0,
+        }
+    }
+
+    /// Transport accounting handle (for tests / manual registration).
+    pub fn stats(&self) -> Arc<NetEdgeStats> {
+        self.stats.clone()
+    }
+
+    fn fail(&self, ctx: &KernelContext, message: String) -> KernelStatus {
+        self.stats.poison_with(&self.name, message);
+        if let Ok(input) = ctx.input::<T>(0) {
+            input.poison();
+        }
+        KernelStatus::Done
+    }
+
+    fn send_frame(&mut self, frame: &Frame) -> std::io::Result<u64> {
+        self.wire_buf.clear();
+        frame.encode(&mut self.wire_buf);
+        let conn = self.conn.as_mut().expect("send_frame after connect");
+        conn.write_all(&self.wire_buf)?;
+        Ok(self.wire_buf.len() as u64)
+    }
+}
+
+impl<T: Wire + 'static> Kernel for NetSink<T> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.conn.is_none() {
+            match self.spec.establish(&self.stats) {
+                Dial::Ready(c) => self.conn = Some(c),
+                Dial::NotYet => return KernelStatus::Stall,
+                Dial::Failed(msg) => return self.fail(ctx, format!("connect failed: {msg}")),
+            }
+        }
+        let input = ctx.input::<T>(0).expect("net sink input");
+        self.scratch.clear();
+        if input.pop_batch(&mut self.scratch, SINK_BURST) == 0 {
+            // Blocking pop keeps the local queue's read-blocked-ns honest
+            // while the sender is starved; None ⇒ closed and drained.
+            match input.pop() {
+                Some(v) => self.scratch.push(v),
+                None => {
+                    let fin = Frame::Fin { poisoned: input.is_poisoned() };
+                    match self.send_frame(&fin) {
+                        Ok(n) => self.stats.note_frame(n),
+                        Err(e) => return self.fail(ctx, format!("send fin: {e}")),
+                    }
+                    return KernelStatus::Done;
+                }
+            }
+        }
+        let count = self.scratch.len();
+        self.body_buf.clear();
+        encode_batch(&self.scratch, &mut self.body_buf);
+        let frame = Frame::Data {
+            pushes: self.sent + count as u64,
+            // The producer-side blocked accumulator of the local edge
+            // queue: how long *upstream* has been blocked pushing toward
+            // this boundary. The receiver folds the delta into its own
+            // counters so §IV validity gating survives the wire.
+            blocked_ns: input.counters().total_write_blocked_ns(),
+            count: count as u32,
+            body: std::mem::take(&mut self.body_buf),
+        };
+        let wire_bytes = match self.send_frame(&frame) {
+            Ok(n) => n,
+            Err(e) => return self.fail(ctx, format!("send data: {e}")),
+        };
+        // Reclaim the body allocation for the next frame.
+        if let Frame::Data { body, .. } = frame {
+            self.body_buf = body;
+        }
+        self.sent += count as u64;
+        self.stats.add_sent(count as u64);
+        self.stats.note_frame(wire_bytes);
+        KernelStatus::Continue
+    }
+}
+
+/// Receiving half of a net edge: an ordinary source kernel that decodes
+/// `Data` frames into its local output stream and mirrors the sender's
+/// counters into [`NetEdgeStats`] / the local [`crate::queue::QueueCounters`].
+pub struct NetSource<T: Wire + 'static> {
+    name: String,
+    spec: ConnSpec,
+    conn: Option<TcpStream>,
+    stats: Arc<NetEdgeStats>,
+    dec: FrameDecoder,
+    read_buf: Vec<u8>,
+    /// Remote blocked-ns already folded into the local counters.
+    folded_blocked_ns: u64,
+    /// A `Fin` frame arrived; `Some(poisoned)`.
+    fin: Option<bool>,
+}
+
+impl<T: Wire + 'static> NetSource<T> {
+    pub fn new(spec: ConnSpec, stats: Arc<NetEdgeStats>) -> Self {
+        NetSource {
+            name: format!("net_source:{}", stats.label()),
+            spec,
+            conn: None,
+            stats,
+            dec: FrameDecoder::new(),
+            read_buf: vec![0u8; 16 * 1024],
+            folded_blocked_ns: 0,
+            fin: None,
+        }
+    }
+
+    /// Transport accounting handle (for tests / manual registration).
+    pub fn stats(&self) -> Arc<NetEdgeStats> {
+        self.stats.clone()
+    }
+
+    fn fail(&self, ctx: &KernelContext, message: String) -> KernelStatus {
+        self.stats.poison_with(&self.name, message);
+        if let Ok(out) = ctx.output::<T>(0) {
+            out.poison();
+        }
+        KernelStatus::Done
+    }
+
+    fn finish(&self, ctx: &KernelContext, poisoned: bool) -> KernelStatus {
+        let out = ctx.output::<T>(0).expect("net source output");
+        if poisoned {
+            // Propagate the remote fault locally: downstream drains what
+            // already arrived, the scheduler audits the poisoned edge.
+            self.stats.poison_with(
+                &self.name,
+                "remote peer poisoned the edge (FIN poisoned=true)",
+            );
+            out.poison();
+        } else {
+            out.close();
+        }
+        KernelStatus::Done
+    }
+}
+
+impl<T: Wire + 'static> Kernel for NetSource<T> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if let Some(poisoned) = self.fin {
+            return self.finish(ctx, poisoned);
+        }
+        if self.conn.is_none() {
+            match self.spec.establish(&self.stats) {
+                Dial::Ready(c) => self.conn = Some(c),
+                Dial::NotYet => return KernelStatus::Stall,
+                Dial::Failed(msg) => return self.fail(ctx, format!("connect failed: {msg}")),
+            }
+        }
+        let conn = self.conn.as_mut().expect("connected above");
+        let n = match conn.read(&mut self.read_buf) {
+            Ok(0) => {
+                return self.fail(
+                    ctx,
+                    "connection dropped without FIN (remote crash or network fault)".into(),
+                );
+            }
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Quiet edge: yield to the scheduler, try again. The
+                // downstream consumer's read-blocked time accrues on the
+                // local queue exactly as for an in-process slow source.
+                return KernelStatus::Stall;
+            }
+            Err(e) => return self.fail(ctx, format!("read: {e}")),
+        };
+        self.dec.push_bytes(&self.read_buf[..n]);
+        loop {
+            let frame = match self.dec.poll() {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(e) => return self.fail(ctx, format!("corrupt stream: {e}")),
+            };
+            match frame {
+                Frame::Data { pushes, blocked_ns, count, body } => {
+                    self.stats.set_remote(pushes, blocked_ns);
+                    self.stats.note_frame((body.len() + 25) as u64);
+                    let out = ctx.output::<T>(0).expect("net source output");
+                    // Fold the sender's blocked-ns *delta* into the local
+                    // queue's producer-side accumulator: to the monitor
+                    // this queue now blocks exactly when the remote
+                    // upstream blocked.
+                    let delta = blocked_ns.saturating_sub(self.folded_blocked_ns);
+                    if delta > 0 {
+                        out.counters().note_write_blocked(delta);
+                        self.folded_blocked_ns = blocked_ns;
+                    }
+                    let items = match decode_batch::<T>(count as usize, &body) {
+                        Ok(v) => v,
+                        Err(e) => return self.fail(ctx, format!("corrupt data frame: {e}")),
+                    };
+                    let delivered = items.len() as u64;
+                    if out.push_iter(items).is_err() {
+                        // Downstream force-closed (deadline abort): stop
+                        // quietly; the scheduler audits the losses.
+                        return KernelStatus::Done;
+                    }
+                    self.stats.add_received(delivered);
+                }
+                Frame::Fin { poisoned } => {
+                    self.fin = Some(poisoned);
+                    return self.finish(ctx, poisoned);
+                }
+                Frame::Hello { .. } | Frame::HelloAck => {
+                    return self.fail(ctx, "handshake frame on an established edge".into());
+                }
+            }
+        }
+        KernelStatus::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_conservation_terms() {
+        let s = NetEdgeStats::new("feed:0");
+        s.set_remote(10, 500);
+        s.add_received(7);
+        assert_eq!(s.in_flight(), 3);
+        assert_eq!(s.remote_pushes(), 10);
+        assert_eq!(s.remote_blocked_ns(), 500);
+        // Headers are monotonic: a late/reordered smaller header never
+        // regresses the ledger.
+        s.set_remote(9, 400);
+        assert_eq!(s.remote_pushes(), 10);
+        assert!(!s.is_poisoned());
+        s.poison_with("net_source:feed:0", "test fault");
+        assert!(s.is_poisoned());
+        let faults = s.take_faults();
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].target, "net_source:feed:0");
+        assert!(faults[0].escalated);
+        assert!(s.take_faults().is_empty(), "drained");
+    }
+
+    #[test]
+    fn dial_failure_is_reported_not_panicked() {
+        // A port nobody listens on: establish must come back Failed after
+        // the retry budget, counting each retry.
+        let stats = NetEdgeStats::new("feed:x");
+        let mut spec = ConnSpec::Connect {
+            // Reserved port 1 on localhost: refused immediately.
+            addr: "127.0.0.1:1".into(),
+            topology_id: 1,
+            edge_id: "feed:x".into(),
+            retries: 2,
+        };
+        match spec.establish(&stats) {
+            Dial::Failed(msg) => assert!(msg.contains("dial"), "{msg}"),
+            _ => panic!("expected failure"),
+        }
+        assert_eq!(stats.reconnects(), 2);
+    }
+}

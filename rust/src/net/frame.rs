@@ -1,0 +1,513 @@
+//! Length-prefixed wire frames and the std-only item codec.
+//!
+//! The offline-build rule forbids serde/bincode, so the wire format is a
+//! hand-rolled little-endian encoding behind one small trait ([`Wire`]).
+//! Every frame on a net edge is
+//!
+//! ```text
+//! [len: u32 le][kind: u8][body: len−1 bytes]
+//! ```
+//!
+//! | kind | frame      | body                                                        |
+//! |------|------------|-------------------------------------------------------------|
+//! | 1    | `Hello`    | magic `SFNET1` · version u16 · topology_id u64 · edge_id str |
+//! | 2    | `HelloAck` | (empty)                                                     |
+//! | 3    | `Data`     | pushes u64 · blocked_ns u64 · count u32 · count items       |
+//! | 4    | `Fin`      | poisoned u8                                                 |
+//!
+//! `Data` piggybacks the sender's **monotonic** cumulative push counter
+//! and its upstream blocked-ns accumulator, so the receiver can fold the
+//! remote side's conservation and blocked-duration accounting into its
+//! local [`crate::queue::QueueCounters`] — the monitor and the elastic
+//! controller never notice the process boundary.
+//!
+//! [`FrameDecoder`] is a pure incremental parser: feed it arbitrary byte
+//! slices (1-byte dribbles, torn headers) and poll complete frames out.
+//! A length prefix above [`MAX_FRAME_BYTES`] or an undecodable body is a
+//! hard [`FrameError`] — the edge layer turns that into a poisoned edge,
+//! never a panic.
+
+use std::fmt;
+
+/// Handshake magic: the first bytes a listener ever sees from a peer.
+pub const MAGIC: &[u8; 6] = b"SFNET1";
+/// Wire protocol version carried in `Hello`.
+pub const WIRE_VERSION: u16 = 1;
+/// Upper bound on one frame's `len` prefix. Anything larger is treated
+/// as a corrupt or hostile stream and poisons the edge.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+const KIND_HELLO: u8 = 1;
+const KIND_HELLO_ACK: u8 = 2;
+const KIND_DATA: u8 = 3;
+const KIND_FIN: u8 = 4;
+
+/// A malformed or truncated wire payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The body ended before the value it claimed to carry.
+    Truncated,
+    /// Structurally invalid bytes (bad magic, unknown kind, oversized
+    /// length prefix, trailing garbage, …).
+    Malformed(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated => write!(f, "frame body truncated"),
+            FrameError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Cursor over a frame body during decode.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.remaining() < n {
+            return Err(FrameError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, FrameError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// A `u32 le` length followed by that many raw bytes.
+    pub fn bytes(&mut self) -> Result<&'a [u8], FrameError> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME_BYTES {
+            return Err(FrameError::Malformed(format!("byte run of {n} exceeds frame cap")));
+        }
+        self.take(n)
+    }
+}
+
+/// One encodable/decodable stream item. Implemented for the primitives
+/// the built-in apps stream; applications implement it for their own
+/// item types (see `Segment` / `RowBlock` in [`crate::apps`]).
+pub trait Wire: Send + Sized {
+    fn encode(&self, out: &mut Vec<u8>);
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError>;
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+impl Wire for u64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, *self);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError> {
+        r.u64()
+    }
+}
+
+impl Wire for usize {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, *self as u64);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError> {
+        let v = r.u64()?;
+        usize::try_from(v).map_err(|_| FrameError::Malformed(format!("usize overflow: {v}")))
+    }
+}
+
+impl Wire for f32 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.to_bits());
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError> {
+        Ok(f32::from_bits(r.u32()?))
+    }
+}
+
+impl Wire for Vec<u8> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.len() as u32);
+        out.extend_from_slice(self);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError> {
+        Ok(r.bytes()?.to_vec())
+    }
+}
+
+impl Wire for Vec<usize> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.len() as u32);
+        for v in self {
+            v.encode(out);
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError> {
+        let n = r.u32()? as usize;
+        if n.saturating_mul(8) > MAX_FRAME_BYTES {
+            return Err(FrameError::Malformed(format!("usize vec of {n} exceeds frame cap")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(usize::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Wire for Vec<f32> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.len() as u32);
+        for v in self {
+            v.encode(out);
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError> {
+        let n = r.u32()? as usize;
+        if n.saturating_mul(4) > MAX_FRAME_BYTES {
+            return Err(FrameError::Malformed(format!("f32 vec of {n} exceeds frame cap")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Wire for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.len() as u32);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, FrameError> {
+        let b = r.bytes()?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| FrameError::Malformed("non-utf8 string".into()))
+    }
+}
+
+/// Encode a batch of items (no count prefix — the `Data` header carries
+/// the count so the decoder knows when the body must be exhausted).
+pub fn encode_batch<T: Wire>(items: &[T], out: &mut Vec<u8>) {
+    for it in items {
+        it.encode(out);
+    }
+}
+
+/// Decode exactly `count` items, requiring the body to be consumed to
+/// the last byte (trailing garbage ⇒ corrupt frame).
+pub fn decode_batch<T: Wire>(count: usize, body: &[u8]) -> Result<Vec<T>, FrameError> {
+    let mut r = WireReader::new(body);
+    let mut out = Vec::with_capacity(count.min(1 << 16));
+    for _ in 0..count {
+        out.push(T::decode(&mut r)?);
+    }
+    if r.remaining() != 0 {
+        return Err(FrameError::Malformed(format!(
+            "{} trailing bytes after {count} items",
+            r.remaining()
+        )));
+    }
+    Ok(out)
+}
+
+/// One wire frame (see the module table for the layout).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → listener: identify the edge this connection carries.
+    Hello { version: u16, topology_id: u64, edge_id: String },
+    /// Listener → client: handshake accepted.
+    HelloAck,
+    /// A batch of encoded items plus the sender's cumulative counters.
+    Data {
+        /// Sender's lifetime item count *including* this frame's batch
+        /// (monotonic — the remote half of the conservation ledger).
+        pushes: u64,
+        /// Sender-side upstream blocked-ns accumulator (monotonic); the
+        /// receiver folds the delta into its local counters.
+        blocked_ns: u64,
+        /// Items in `body`.
+        count: u32,
+        /// `count` back-to-back [`Wire`]-encoded items.
+        body: Vec<u8>,
+    },
+    /// Flagged close: the edge ends here. `poisoned` propagates a fault
+    /// (kernel panic, upstream poison) across the process boundary.
+    Fin { poisoned: bool },
+}
+
+impl Frame {
+    /// Serialize with the `[len][kind]` envelope appended to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let at = out.len();
+        put_u32(out, 0); // len backpatched below
+        match self {
+            Frame::Hello { version, topology_id, edge_id } => {
+                out.push(KIND_HELLO);
+                out.extend_from_slice(MAGIC);
+                out.extend_from_slice(&version.to_le_bytes());
+                put_u64(out, *topology_id);
+                edge_id.encode(out);
+            }
+            Frame::HelloAck => out.push(KIND_HELLO_ACK),
+            Frame::Data { pushes, blocked_ns, count, body } => {
+                out.push(KIND_DATA);
+                put_u64(out, *pushes);
+                put_u64(out, *blocked_ns);
+                put_u32(out, *count);
+                out.extend_from_slice(body);
+            }
+            Frame::Fin { poisoned } => {
+                out.push(KIND_FIN);
+                out.push(u8::from(*poisoned));
+            }
+        }
+        let len = (out.len() - at - 4) as u32;
+        out[at..at + 4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// Serialize into a fresh buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        self.encode(&mut out);
+        out
+    }
+
+    fn decode_body(kind: u8, body: &[u8]) -> Result<Frame, FrameError> {
+        let mut r = WireReader::new(body);
+        let f = match kind {
+            KIND_HELLO => {
+                let magic = r.take(MAGIC.len())?;
+                if magic != MAGIC {
+                    return Err(FrameError::Malformed("bad handshake magic".into()));
+                }
+                let version = r.u16()?;
+                let topology_id = r.u64()?;
+                let edge_id = String::decode(&mut r)?;
+                Frame::Hello { version, topology_id, edge_id }
+            }
+            KIND_HELLO_ACK => Frame::HelloAck,
+            KIND_DATA => {
+                let pushes = r.u64()?;
+                let blocked_ns = r.u64()?;
+                let count = r.u32()?;
+                let body = r.take(r.remaining())?.to_vec();
+                Frame::Data { pushes, blocked_ns, count, body }
+            }
+            KIND_FIN => Frame::Fin { poisoned: r.u8()? != 0 },
+            other => return Err(FrameError::Malformed(format!("unknown frame kind {other}"))),
+        };
+        if r.remaining() != 0 {
+            return Err(FrameError::Malformed(format!(
+                "{} trailing bytes in frame body",
+                r.remaining()
+            )));
+        }
+        Ok(f)
+    }
+}
+
+/// Incremental frame parser: tolerant of arbitrary read fragmentation
+/// (the property test drives it one byte at a time), intolerant of
+/// structural corruption.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        FrameDecoder::default()
+    }
+
+    /// Append raw bytes read off the socket.
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet parsed into a frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Parse the next complete frame, if one is fully buffered.
+    /// `Ok(None)` ⇒ need more bytes. `Err` ⇒ the stream is corrupt and
+    /// the edge must be poisoned (the decoder is dead afterwards).
+    pub fn poll(&mut self) -> Result<Option<Frame>, FrameError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len == 0 || len > MAX_FRAME_BYTES {
+            return Err(FrameError::Malformed(format!("frame length {len} out of range")));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let kind = self.buf[4];
+        let frame = Frame::decode_body(kind, &self.buf[5..4 + len])?;
+        self.buf.drain(..4 + len);
+        Ok(Some(frame))
+    }
+}
+
+/// FNV-1a of arbitrary bytes — the deterministic topology-id hash both
+/// sides of a [`crate::net::ShardedSession`] compute from the workload
+/// parameters, so a mis-matched worker is refused at handshake.
+pub fn topology_id(parts: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        // Separator so ("ab","c") and ("a","bc") differ.
+        h ^= 0xff;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip() {
+        let frames = vec![
+            Frame::Hello { version: WIRE_VERSION, topology_id: 42, edge_id: "feed:0".into() },
+            Frame::HelloAck,
+            Frame::Data { pushes: 7, blocked_ns: 123, count: 0, body: Vec::new() },
+            Frame::Fin { poisoned: true },
+            Frame::Fin { poisoned: false },
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            f.encode(&mut wire);
+        }
+        let mut dec = FrameDecoder::new();
+        dec.push_bytes(&wire);
+        for f in &frames {
+            assert_eq!(dec.poll().unwrap().as_ref(), Some(f));
+        }
+        assert_eq!(dec.poll().unwrap(), None);
+        assert_eq!(dec.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn one_byte_dribble_decodes() {
+        let f = Frame::Data {
+            pushes: 999,
+            blocked_ns: 5,
+            count: 3,
+            body: {
+                let mut b = Vec::new();
+                encode_batch(&[1usize, 2, 3], &mut b);
+                b
+            },
+        };
+        let wire = f.to_bytes();
+        let mut dec = FrameDecoder::new();
+        let mut got = None;
+        for &b in &wire {
+            dec.push_bytes(&[b]);
+            if let Some(frame) = dec.poll().unwrap() {
+                got = Some(frame);
+            }
+        }
+        let Some(Frame::Data { count, body, .. }) = got else { panic!("no frame") };
+        assert_eq!(decode_batch::<usize>(count as usize, &body).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_not_buffered() {
+        let mut dec = FrameDecoder::new();
+        dec.push_bytes(&(u32::MAX).to_le_bytes());
+        assert!(matches!(dec.poll(), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn bad_magic_and_unknown_kind_are_malformed() {
+        let mut hello = Frame::Hello {
+            version: WIRE_VERSION,
+            topology_id: 1,
+            edge_id: "e".into(),
+        }
+        .to_bytes();
+        hello[5] = b'X'; // first magic byte
+        let mut dec = FrameDecoder::new();
+        dec.push_bytes(&hello);
+        assert!(matches!(dec.poll(), Err(FrameError::Malformed(_))));
+
+        let mut dec = FrameDecoder::new();
+        dec.push_bytes(&[1, 0, 0, 0, 99]); // len 1, kind 99
+        assert!(matches!(dec.poll(), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn batch_decode_requires_exact_consumption() {
+        let mut body = Vec::new();
+        encode_batch(&[vec![1usize, 2], vec![3]], &mut body);
+        assert_eq!(
+            decode_batch::<Vec<usize>>(2, &body).unwrap(),
+            vec![vec![1, 2], vec![3]]
+        );
+        body.push(0); // trailing garbage
+        assert!(matches!(
+            decode_batch::<Vec<usize>>(2, &body),
+            Err(FrameError::Malformed(_))
+        ));
+        assert!(matches!(
+            decode_batch::<Vec<usize>>(3, &body[..body.len() - 1]),
+            Err(FrameError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn topology_id_is_order_sensitive_and_stable() {
+        let a = topology_id(&[b"ab", b"c"]);
+        let b = topology_id(&[b"a", b"bc"]);
+        assert_ne!(a, b);
+        assert_eq!(a, topology_id(&[b"ab", b"c"]));
+    }
+}

@@ -1,0 +1,44 @@
+//! # Distributed data plane: network-backed stream edges.
+//!
+//! The paper's estimator is *online* so the runtime can re-tune under
+//! shared, dynamic conditions — but a single-process `Topology` stops
+//! the control loop at the process boundary. This subsystem lets any
+//! stream edge cross that boundary while the monitor, the conservation
+//! ledger, and the elastic controller keep working end to end:
+//!
+//! * [`frame`] — the std-only wire format (offline-build rule: no serde):
+//!   length-prefixed frames, a [`Wire`] item codec, and an incremental
+//!   [`FrameDecoder`] that tolerates any read fragmentation and treats
+//!   structural corruption as a poisoned edge, never a panic;
+//! * [`edge`] — the [`NetSink`]/[`NetSource`] kernel pair. Each side
+//!   keeps a local SPSC queue (the PR-2 zero-RMW hot path); `Data`
+//!   frames batch `push_iter`-sized bursts and piggyback the sender's
+//!   monotonic push counter + blocked-ns so the receiver's
+//!   [`QueueCounters`](crate::queue::QueueCounters) stay exact across
+//!   the wire (`pushes == pops + occupancy + in_flight`);
+//! * [`accept`] — the shared [`AcceptLoop`] (also the machinery behind
+//!   [`crate::telemetry::MetricsServer`] since this PR);
+//! * [`session`] — [`NetListener`] handshake routing (magic + version +
+//!   topology-id validation), [`ShardedSession`] worker-process launch,
+//!   and the [`ShardRouter`]/[`ShardMerge`] key-hash sharding kernels.
+//!
+//! Per-edge transport accounting ([`NetEdgeStats`]) is registered on the
+//! [`Topology`](crate::topology::Topology) and exported live as the
+//! `sf_net_*` gauges; transport faults land in
+//! [`RunReport::faults`](crate::scheduler::RunReport::faults) like any
+//! other fault, and in-flight items on a poisoned edge are audited into
+//! `items_lost` so `delivered + items_lost + items_shed == offered`
+//! holds across process boundaries.
+
+pub mod accept;
+pub mod edge;
+pub mod frame;
+pub mod session;
+
+pub use accept::AcceptLoop;
+pub use edge::{ConnSpec, NetEdgeStats, NetSink, NetSource, SINK_BURST};
+pub use frame::{
+    decode_batch, encode_batch, topology_id, Frame, FrameDecoder, FrameError, Wire, WireReader,
+    MAX_FRAME_BYTES, WIRE_VERSION,
+};
+pub use session::{NetListener, ShardMerge, ShardRouter, ShardedSession, WorkerExit};

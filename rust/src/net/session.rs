@@ -1,0 +1,394 @@
+//! Multi-process sessions: handshake routing, worker process launch, and
+//! key-hash sharding kernels.
+//!
+//! The coordinator binds one [`NetListener`]; every worker process dials
+//! it, identifies itself with a `Hello { topology_id, edge_id }` frame,
+//! and the listener routes the authenticated connection to whichever
+//! [`crate::net::NetSink`] / [`crate::net::NetSource`] registered that
+//! edge id. A mismatched topology id (different workload parameters,
+//! stale binary) is refused at handshake, so a sharded run can never
+//! silently mix incompatible processes.
+//!
+//! [`ShardedSession`] adds worker lifecycle: it spawns N child processes
+//! (`SF_WORKER_BIN` overrides the binary — integration tests point it at
+//! the `streamflow` CLI — defaulting to `current_exe`), and joins them at
+//! the end. [`ShardRouter`] / [`ShardMerge`] are the in-graph fan-out /
+//! fan-in kernels that route items to shard edges by key hash and
+//! consolidate result streams.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Result, SfError};
+use crate::kernel::{Kernel, KernelContext, KernelStatus};
+
+use super::accept::AcceptLoop;
+use super::edge::{read_one_frame, ConnSpec};
+use super::frame::{topology_id as hash_topology_id, Frame, WIRE_VERSION};
+
+/// How long the listener waits for a `Hello` on a fresh connection.
+const HELLO_PATIENCE: Duration = Duration::from_secs(5);
+
+type Routes = Arc<Mutex<HashMap<String, mpsc::Sender<TcpStream>>>>;
+
+/// The coordinator's front door: accepts worker connections, validates
+/// the handshake, and routes each connection to the net-edge kernel that
+/// registered its edge id via [`NetListener::expect_edge`].
+pub struct NetListener {
+    accept: AcceptLoop,
+    topology_id: u64,
+    routes: Routes,
+}
+
+impl std::fmt::Debug for NetListener {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetListener")
+            .field("addr", &self.accept.local_addr())
+            .field("topology_id", &self.topology_id)
+            .finish()
+    }
+}
+
+impl NetListener {
+    /// Bind `addr` (port 0 ⇒ ephemeral) and start routing handshakes for
+    /// `topology_id`.
+    pub fn bind(addr: &str, topology_id: u64) -> Result<NetListener> {
+        let routes: Routes = Arc::new(Mutex::new(HashMap::new()));
+        let r2 = routes.clone();
+        let accept = AcceptLoop::spawn(addr, "sf-net-listener", move |conn| {
+            handshake(conn, topology_id, &r2);
+        })?;
+        Ok(NetListener { accept, topology_id, routes })
+    }
+
+    /// The realized bind address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.accept.local_addr()
+    }
+
+    /// The topology id this listener accepts.
+    pub fn topology_id(&self) -> u64 {
+        self.topology_id
+    }
+
+    /// Register an edge id and get the [`ConnSpec`] its local kernel
+    /// waits on. Re-registering an id replaces the previous route.
+    pub fn expect_edge(&self, edge_id: impl Into<String>) -> ConnSpec {
+        let (tx, rx) = mpsc::channel();
+        self.routes
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(edge_id.into(), tx);
+        ConnSpec::Accept { pending: rx }
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn shutdown(self) {
+        self.accept.shutdown();
+    }
+}
+
+/// Validate one fresh connection. Every failure path just drops the
+/// socket — the dialing side retries and audits a reconnect.
+fn handshake(mut conn: TcpStream, topology_id: u64, routes: &Routes) {
+    if conn.set_read_timeout(Some(Duration::from_millis(50))).is_err() {
+        return;
+    }
+    let hello = match read_one_frame(&mut conn, HELLO_PATIENCE) {
+        Ok(f) => f,
+        Err(_) => return,
+    };
+    let Frame::Hello { version, topology_id: tid, edge_id } = hello else {
+        return;
+    };
+    if version != WIRE_VERSION || tid != topology_id {
+        return;
+    }
+    let route = routes.lock().unwrap_or_else(|e| e.into_inner()).get(&edge_id).cloned();
+    let Some(tx) = route else {
+        return;
+    };
+    if conn.write_all(&Frame::HelloAck.to_bytes()).is_err() {
+        return;
+    }
+    // A dropped receiver (kernel already finished) just drops the conn.
+    let _ = tx.send(conn);
+}
+
+/// A sharded run's coordinator handle: the listener plus the worker
+/// process group.
+pub struct ShardedSession {
+    listener: NetListener,
+    workers: WorkerGroup,
+}
+
+/// Worker children; unjoined processes are killed on drop so an
+/// error-path coordinator never strands workers blocked on a listener
+/// that no longer routes.
+#[derive(Default)]
+struct WorkerGroup(Vec<std::process::Child>);
+
+impl Drop for WorkerGroup {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// One worker's exit, from [`ShardedSession::join_workers`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerExit {
+    pub pid: u32,
+    /// Process exit code (`None` ⇒ killed by signal or unknowable).
+    pub code: Option<i32>,
+    pub success: bool,
+}
+
+impl ShardedSession {
+    /// Bind the coordinator listener. `topology_id` should come from
+    /// [`crate::net::topology_id`] over the workload parameters so both
+    /// sides derive it independently.
+    pub fn bind(addr: &str, topology_id: u64) -> Result<ShardedSession> {
+        Ok(ShardedSession {
+            listener: NetListener::bind(addr, topology_id)?,
+            workers: WorkerGroup::default(),
+        })
+    }
+
+    /// The realized listener address (pass to workers as `--connect`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr()
+    }
+
+    /// See [`NetListener::expect_edge`].
+    pub fn expect_edge(&self, edge_id: impl Into<String>) -> ConnSpec {
+        self.listener.expect_edge(edge_id)
+    }
+
+    /// The worker binary: `SF_WORKER_BIN` override (integration tests —
+    /// `current_exe` there is the *test* binary) or this executable.
+    pub fn worker_binary() -> Result<std::path::PathBuf> {
+        if let Ok(p) = std::env::var("SF_WORKER_BIN") {
+            return Ok(std::path::PathBuf::from(p));
+        }
+        std::env::current_exe().map_err(SfError::from)
+    }
+
+    /// Launch one worker process with `args`; returns its pid.
+    pub fn spawn_worker(&mut self, args: &[String]) -> Result<u32> {
+        let bin = Self::worker_binary()?;
+        let child = std::process::Command::new(&bin)
+            .args(args)
+            .stdin(std::process::Stdio::null())
+            .spawn()
+            .map_err(|e| {
+                SfError::Config(format!("spawn worker {}: {e}", bin.display()))
+            })?;
+        let pid = child.id();
+        self.workers.0.push(child);
+        Ok(pid)
+    }
+
+    /// Live worker count.
+    pub fn worker_count(&self) -> usize {
+        self.workers.0.len()
+    }
+
+    /// Wait for every worker to exit (they exit when their edges close).
+    pub fn join_workers(&mut self) -> Vec<WorkerExit> {
+        let mut out = Vec::with_capacity(self.workers.0.len());
+        for mut child in self.workers.0.drain(..) {
+            let pid = child.id();
+            match child.wait() {
+                Ok(status) => out.push(WorkerExit {
+                    pid,
+                    code: status.code(),
+                    success: status.success(),
+                }),
+                Err(_) => out.push(WorkerExit { pid, code: None, success: false }),
+            }
+        }
+        out
+    }
+
+    /// Join workers and shut the listener down.
+    pub fn finish(self) -> Vec<WorkerExit> {
+        let ShardedSession { listener, mut workers } = self;
+        let mut out = Vec::with_capacity(workers.0.len());
+        for mut child in workers.0.drain(..) {
+            let pid = child.id();
+            match child.wait() {
+                Ok(status) => out.push(WorkerExit {
+                    pid,
+                    code: status.code(),
+                    success: status.success(),
+                }),
+                Err(_) => out.push(WorkerExit { pid, code: None, success: false }),
+            }
+        }
+        listener.shutdown();
+        out
+    }
+}
+
+/// Fan-out kernel routing each item to `hash(key) % n_out`. Keyed
+/// routing keeps a shard's items on one worker (locality / per-key
+/// state); the hash is caller-supplied so apps choose the key.
+pub struct ShardRouter<T: Send + 'static> {
+    name: String,
+    key: Box<dyn Fn(&T) -> u64 + Send>,
+    n_out: usize,
+    scratch: Vec<T>,
+}
+
+impl<T: Send + 'static> ShardRouter<T> {
+    pub fn new(
+        name: impl Into<String>,
+        n_out: usize,
+        key: impl Fn(&T) -> u64 + Send + 'static,
+    ) -> Self {
+        assert!(n_out > 0, "shard router needs at least one output");
+        ShardRouter { name: name.into(), key: Box::new(key), n_out, scratch: Vec::new() }
+    }
+}
+
+impl<T: Send + 'static> Kernel for ShardRouter<T> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let input = ctx.input::<T>(0).expect("router input");
+        self.scratch.clear();
+        if input.pop_batch(&mut self.scratch, super::edge::SINK_BURST) == 0 {
+            match input.pop() {
+                Some(v) => self.scratch.push(v),
+                None => return KernelStatus::Done,
+            }
+        }
+        for item in self.scratch.drain(..) {
+            let shard = ((self.key)(&item) % self.n_out as u64) as usize;
+            let port = ctx.output::<T>(shard).expect("router output");
+            if port.push(item).is_err() {
+                return KernelStatus::Done;
+            }
+        }
+        KernelStatus::Continue
+    }
+}
+
+/// Fan-in kernel consolidating `n_in` shard result streams into one
+/// output, batch-draining each input per quantum for fairness.
+pub struct ShardMerge<T: Send + 'static> {
+    name: String,
+    scratch: Vec<T>,
+}
+
+impl<T: Send + 'static> ShardMerge<T> {
+    pub fn new(name: impl Into<String>) -> Self {
+        ShardMerge { name: name.into(), scratch: Vec::new() }
+    }
+}
+
+impl<T: Send + 'static> Kernel for ShardMerge<T> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let mut all_finished = true;
+        let mut any = false;
+        for i in 0..ctx.num_inputs() {
+            let port = ctx.input::<T>(i).expect("merge input");
+            if port.pop_batch(&mut self.scratch, super::edge::SINK_BURST) == 0 {
+                if !port.is_finished() {
+                    all_finished = false;
+                }
+                continue;
+            }
+            all_finished = false;
+            any = true;
+            let out = ctx.output::<T>(0).expect("merge output");
+            if out.push_iter(self.scratch.drain(..)).is_err() {
+                return KernelStatus::Done;
+            }
+        }
+        if all_finished {
+            KernelStatus::Done
+        } else if any {
+            KernelStatus::Continue
+        } else {
+            KernelStatus::Stall
+        }
+    }
+}
+
+/// Re-export of the frame-level hash for callers building topology ids.
+pub fn session_topology_id(parts: &[&[u8]]) -> u64 {
+    hash_topology_id(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetEdgeStats;
+    use std::io::Read as _;
+
+    fn dial_hello(addr: SocketAddr, tid: u64, edge: &str) -> TcpStream {
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(
+            &Frame::Hello { version: WIRE_VERSION, topology_id: tid, edge_id: edge.into() }
+                .to_bytes(),
+        )
+        .unwrap();
+        c
+    }
+
+    #[test]
+    fn listener_routes_by_edge_id_and_refuses_mismatches() {
+        let lst = NetListener::bind("127.0.0.1:0", 42).unwrap();
+        let addr = lst.local_addr();
+        let spec = lst.expect_edge("feed:0");
+
+        // Wrong topology id: dropped without an ack.
+        let mut bad = dial_hello(addr, 7, "feed:0");
+        bad.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        let mut buf = [0u8; 16];
+        match bad.read(&mut buf) {
+            Ok(0) => {}                 // dropped
+            Ok(n) => panic!("mismatched hello got {n} bytes back"),
+            Err(_) => {}                // reset/timeout — also fine
+        }
+
+        // Unknown edge id: dropped.
+        let mut unknown = dial_hello(addr, 42, "nope");
+        unknown.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        assert!(!matches!(unknown.read(&mut buf), Ok(n) if n > 0));
+
+        // Correct handshake: acked and routed to the registered spec.
+        let mut ok = dial_hello(addr, 42, "feed:0");
+        ok.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let ack = read_one_frame(&mut ok, Duration::from_secs(5)).unwrap();
+        assert_eq!(ack, Frame::HelloAck);
+        let stats = NetEdgeStats::new("feed:0");
+        let ConnSpec::Accept { pending } = spec else { panic!("accept spec") };
+        let routed = pending.recv_timeout(Duration::from_secs(5));
+        assert!(routed.is_ok(), "handshaken connection routed to the edge");
+        assert_eq!(stats.reconnects(), 0);
+        lst.shutdown();
+    }
+
+    #[test]
+    fn worker_binary_env_override() {
+        // Only exercise the override path: a plain env read, no spawn.
+        std::env::set_var("SF_WORKER_BIN", "/tmp/sf-test-worker-bin");
+        let bin = ShardedSession::worker_binary().unwrap();
+        assert_eq!(bin, std::path::PathBuf::from("/tmp/sf-test-worker-bin"));
+        std::env::remove_var("SF_WORKER_BIN");
+    }
+}

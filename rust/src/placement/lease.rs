@@ -1,0 +1,252 @@
+//! Host-local budget lease: split the idle-capacity budget between
+//! streamflow processes on one machine.
+//!
+//! Bugfix for the PR-5 `HostAware` policy: two streamflow processes on
+//! one host each observed "the other's" load as external and *both*
+//! claimed every remaining idle CPU — double-counting the machine. The
+//! lease broker is the minimal fix: every participating process
+//! heartbeats one line in a shared lock file, and each control epoch divides
+//! its budget by the number of live participants.
+//!
+//! Design constraints: std + libc only (offline-build rule), no daemon,
+//! crash-safe. The file holds one `pid token heartbeat_ns` line per
+//! participant, serialized read-modify-write under an exclusive
+//! `flock(2)`. Staleness is double-gated: a dead pid (`kill(pid, 0)` ⇒
+//! `ESRCH`) is pruned immediately, and a heartbeat older than the TTL is
+//! pruned even if its pid was recycled — so a crashed process's share is
+//! reclaimed without any coordination.
+
+use std::fs::OpenOptions;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+/// Default heartbeat TTL: a participant silent this long is presumed
+/// dead even if its pid is (re)used.
+pub const DEFAULT_LEASE_TTL: Duration = Duration::from_secs(30);
+
+/// Distinguishes multiple lease handles inside one process (tests run
+/// two brokers in one pid; each must count as a participant).
+static TOKEN_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// One participant's handle on a shared lease file.
+#[derive(Debug)]
+pub struct BudgetLease {
+    path: PathBuf,
+    pid: u32,
+    token: u64,
+    ttl: Duration,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    pid: u32,
+    token: u64,
+    heartbeat_ns: u64,
+}
+
+fn now_ns() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+/// Is `pid` a live process? `kill(pid, 0)` probes without signaling:
+/// 0 or `EPERM` ⇒ alive, `ESRCH` ⇒ dead.
+fn pid_alive(pid: u32) -> bool {
+    if pid == 0 || pid > i32::MAX as u32 {
+        return false;
+    }
+    let r = unsafe { libc::kill(pid as libc::pid_t, 0) };
+    if r == 0 {
+        return true;
+    }
+    std::io::Error::last_os_error().raw_os_error() != Some(libc::ESRCH)
+}
+
+impl BudgetLease {
+    /// Join (or create) the lease file at `path` with the default TTL.
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self::with_ttl(path, DEFAULT_LEASE_TTL)
+    }
+
+    /// Join with an explicit heartbeat TTL (tests use short TTLs).
+    pub fn with_ttl(path: impl Into<PathBuf>, ttl: Duration) -> Self {
+        BudgetLease {
+            path: path.into(),
+            pid: std::process::id(),
+            token: TOKEN_SEQ.fetch_add(1, Ordering::Relaxed),
+            ttl: if ttl.is_zero() { Duration::from_nanos(1) } else { ttl },
+        }
+    }
+
+    /// The lease file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Heartbeat this participant, prune stale/dead entries, and return
+    /// the live participant count (always ≥ 1: ourselves). Any I/O
+    /// failure degrades to `1` — a broken lease file must never shrink a
+    /// budget below what a lease-less run would use.
+    pub fn participants(&self) -> usize {
+        self.sync().unwrap_or(1)
+    }
+
+    /// This participant's share of `budget`, never below 1.
+    pub fn share(&self, budget: usize) -> usize {
+        (budget / self.participants().max(1)).max(1)
+    }
+
+    /// Remove this participant's entry (graceful exit). Best-effort.
+    pub fn release(&self) {
+        let _ = self.rewrite(|entries| {
+            entries.retain(|e| !(e.pid == self.pid && e.token == self.token));
+        });
+    }
+
+    fn sync(&self) -> std::io::Result<usize> {
+        let now = now_ns();
+        let ttl_ns = self.ttl.as_nanos() as u64;
+        self.rewrite(|entries| {
+            entries.retain(|e| {
+                let fresh = now.saturating_sub(e.heartbeat_ns) <= ttl_ns;
+                fresh && pid_alive(e.pid)
+            });
+            match entries.iter_mut().find(|e| e.pid == self.pid && e.token == self.token) {
+                Some(e) => e.heartbeat_ns = now,
+                None => entries.push(Entry {
+                    pid: self.pid,
+                    token: self.token,
+                    heartbeat_ns: now,
+                }),
+            }
+        })
+    }
+
+    /// Locked read-modify-write of the whole file; returns the entry
+    /// count after `edit`.
+    fn rewrite(&self, edit: impl FnOnce(&mut Vec<Entry>)) -> std::io::Result<usize> {
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).open(&self.path)?;
+        let fd = file.as_raw_fd();
+        if unsafe { libc::flock(fd, libc::LOCK_EX) } != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        // The lock is released when `file` closes at the end of scope.
+        let mut text = String::new();
+        file.read_to_string(&mut text)?;
+        let mut entries: Vec<Entry> = text
+            .lines()
+            .filter_map(|line| {
+                let mut it = line.split_whitespace();
+                Some(Entry {
+                    pid: it.next()?.parse().ok()?,
+                    token: it.next()?.parse().ok()?,
+                    heartbeat_ns: it.next()?.parse().ok()?,
+                })
+            })
+            .collect();
+        edit(&mut entries);
+        let mut out = String::with_capacity(entries.len() * 48);
+        for e in &entries {
+            out.push_str(&format!("{} {} {}\n", e.pid, e.token, e.heartbeat_ns));
+        }
+        file.seek(SeekFrom::Start(0))?;
+        file.set_len(0)?;
+        file.write_all(out.as_bytes())?;
+        file.flush()?;
+        Ok(entries.len())
+    }
+}
+
+impl Drop for BudgetLease {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_lease(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("sf-lease-{}-{}", std::process::id(), name));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn two_brokers_on_one_file_split_the_budget() {
+        let path = tmp_lease("split");
+        let a = BudgetLease::new(&path);
+        assert_eq!(a.participants(), 1, "first joiner sees only itself");
+        assert_eq!(a.share(8), 8);
+        let b = BudgetLease::new(&path);
+        assert_eq!(b.participants(), 2);
+        assert_eq!(a.participants(), 2);
+        // An 8-worker budget splits 4/4; odd budgets floor but never to 0.
+        assert_eq!(a.share(8), 4);
+        assert_eq!(b.share(7), 3);
+        assert_eq!(a.share(1), 1, "share is never zero");
+        drop(b);
+        assert_eq!(a.participants(), 1, "graceful release reclaims the slot");
+        drop(a);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_dead_pid_entry_is_taken_over() {
+        let path = tmp_lease("stale");
+        // Forge an entry for a pid that cannot exist (beyond pid_max) with
+        // a fresh heartbeat: the dead-pid gate alone must prune it.
+        std::fs::write(&path, format!("{} 1 {}\n", u32::MAX - 1, now_ns())).unwrap();
+        let a = BudgetLease::new(&path);
+        assert_eq!(a.participants(), 1, "dead-pid entry pruned, we joined");
+        assert_eq!(a.share(6), 6);
+        drop(a);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn expired_heartbeat_is_pruned_even_for_a_live_pid() {
+        let path = tmp_lease("ttl");
+        // Our own (live) pid but with a token we don't hold and an ancient
+        // heartbeat: the TTL gate must prune it.
+        std::fs::write(&path, format!("{} 999999 1\n", std::process::id())).unwrap();
+        let a = BudgetLease::with_ttl(&path, Duration::from_millis(50));
+        assert_eq!(a.participants(), 1, "expired heartbeat pruned");
+        drop(a);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn io_failure_degrades_to_one_participant() {
+        // A path that cannot be created (file as directory component).
+        let mut path = tmp_lease("noio");
+        std::fs::write(&path, "").unwrap();
+        path.push("sub"); // parent is a file → open fails
+        let a = BudgetLease::new(&path);
+        assert_eq!(a.participants(), 1);
+        assert_eq!(a.share(5), 5, "broken lease never shrinks the budget");
+    }
+
+    #[test]
+    fn corrupt_lines_are_dropped_not_fatal() {
+        let path = tmp_lease("corrupt");
+        std::fs::write(&path, "garbage line\n1 2\nnot numbers at all\n").unwrap();
+        let a = BudgetLease::new(&path);
+        assert_eq!(a.participants(), 1);
+        drop(a);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -19,7 +19,11 @@
 //! * [`affinity`] — [`ThreadPin`] core pinning (`sched_setaffinity` FFI
 //!   on Linux; explicit recorded no-op elsewhere or when denied) used by
 //!   [`PlacementPolicy::Pack`] to keep a stage's Split/Merge kernels and
-//!   its replica lanes on co-located cores.
+//!   its replica lanes on co-located cores;
+//! * [`lease`] — [`BudgetLease`], a lock-file broker that splits the
+//!   `HostAware` idle-capacity budget between streamflow *processes* on
+//!   one host (each process otherwise sees the others as "external" load
+//!   and all of them claim the same idle CPUs).
 //!
 //! Everything here degrades to an **annotated no-op** — missing sysfs,
 //! stubbed `/proc/stat`, or a denied syscall shows up as notes in
@@ -28,10 +32,12 @@
 
 pub mod affinity;
 pub mod cpu;
+pub mod lease;
 pub mod load;
 
 pub use affinity::{affinity_disabled_by_env, current_tid, pin_thread, ThreadPin};
 pub use cpu::{parse_cpu_list, CpuInfo, CpuTopology, TopologySource};
+pub use lease::BudgetLease;
 pub use load::{
     HostLoadMonitor, LoadSource, LoadSourceHandle, ProcStatSource, SyntheticLoad,
 };

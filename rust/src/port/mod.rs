@@ -58,6 +58,24 @@ impl<T: Send> InputPort<T> {
     pub fn is_finished(&self) -> bool {
         self.q.is_finished()
     }
+
+    /// Flagged close: the stream ends with the terminal state recorded as
+    /// a fault, not a normal completion (paper-faithful poison semantics).
+    pub fn poison(&self) {
+        self.q.poison()
+    }
+
+    /// Stream was closed by a fault.
+    pub fn is_poisoned(&self) -> bool {
+        self.q.is_poisoned()
+    }
+
+    /// The stream's shared monotonic counters (push/pop indices, blocked
+    /// time). Network edges read/fold these to keep conservation exact
+    /// across a process boundary.
+    pub fn counters(&self) -> &crate::queue::QueueCounters {
+        self.q.counters()
+    }
 }
 
 /// Producer end of a stream.
@@ -118,6 +136,16 @@ impl<T: Send> OutputPort<T> {
     /// Current capacity.
     pub fn capacity(&self) -> usize {
         self.q.capacity()
+    }
+
+    /// Flagged close (see [`InputPort::poison`]).
+    pub fn poison(&self) {
+        self.q.poison()
+    }
+
+    /// The stream's shared monotonic counters (see [`InputPort::counters`]).
+    pub fn counters(&self) -> &crate::queue::QueueCounters {
+        self.q.counters()
     }
 }
 

@@ -342,6 +342,9 @@ pub(crate) fn execute(
             for decl in &topo.elastic {
                 reg.add_stage(decl.stage.clone());
             }
+            for stats in topo.net_edges.iter() {
+                reg.add_net_edge(stats.clone());
+            }
             reg.set_ring(ring.clone());
             Some(Arc::new(reg))
         }
@@ -750,6 +753,18 @@ pub(crate) fn execute(
         if let Some(log) = decl.stage.fault_log() {
             faults.extend(log.snapshot());
             items_lost += log.items_lost();
+        }
+    }
+    // Network edges: transport faults (dial/handshake/socket failures,
+    // corrupt frames, remote poison) recorded by NetSink/NetSource join
+    // the merged history, and items a remote peer pushed that never
+    // arrived on a poisoned edge (in flight on the wire or in the decode
+    // backlog when the transport died) are audited as lost — the
+    // cross-process conservation equation stays exact.
+    for stats in topo.net_edges.iter() {
+        faults.extend(stats.take_faults());
+        if stats.is_poisoned() {
+            items_lost += stats.in_flight();
         }
     }
     faults.sort_by_key(|r| r.at_ns);

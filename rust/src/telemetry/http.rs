@@ -1,11 +1,15 @@
 //! Std-only blocking HTTP exporter for the Prometheus scrape.
 //!
-//! One dedicated thread (`sf-metrics`) owns a non-blocking
-//! [`std::net::TcpListener`] and serves `GET /metrics` (and `GET /`) with
-//! the registry's current render — one connection at a time, HTTP/1.1
-//! with `Connection: close`. That is exactly enough for a scraper at
-//! human cadence and keeps the exporter dependency-free; anything
-//! heavier belongs behind a real server front door (ROADMAP item 5).
+//! The `sf-metrics` thread serves `GET /metrics` (and `GET /`) with the
+//! registry's current render — one connection at a time, HTTP/1.1 with
+//! `Connection: close`. That is exactly enough for a scraper at human
+//! cadence and keeps the exporter dependency-free.
+//!
+//! Since the distributed data plane landed, the accept machinery is the
+//! shared [`crate::net::AcceptLoop`] (the same loop that fronts
+//! [`crate::net::NetListener`]); this module is just the per-connection
+//! HTTP handler plus a stable [`MetricsServer`] handle, so its behavior
+//! and endpoint are unchanged from the hand-rolled original.
 //!
 //! Off by default: the thread only exists when
 //! [`crate::telemetry::TelemetryConfig::metrics_addr`] is set (CLI:
@@ -13,73 +17,38 @@
 //! realized address is readable via [`MetricsServer::local_addr`]).
 
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::Result;
+use crate::net::AcceptLoop;
 
 use super::registry::MetricsRegistry;
 
-/// Handle to the scrape endpoint thread.
+/// Handle to the scrape endpoint; wraps the shared accept loop.
+#[derive(Debug)]
 pub struct MetricsServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    thread: Option<std::thread::JoinHandle<()>>,
-}
-
-impl std::fmt::Debug for MetricsServer {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("MetricsServer").field("addr", &self.addr).finish()
-    }
+    inner: AcceptLoop,
 }
 
 impl MetricsServer {
     /// Bind `addr` and start serving `registry.render()` until
-    /// [`MetricsServer::shutdown`].
+    /// [`MetricsServer::shutdown`] (or drop).
     pub fn spawn(addr: &str, registry: Arc<MetricsRegistry>) -> Result<MetricsServer> {
-        let listener = TcpListener::bind(addr)?;
-        listener.set_nonblocking(true)?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let thread = std::thread::Builder::new()
-            .name("sf-metrics".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Acquire) {
-                    match listener.accept() {
-                        Ok((conn, _peer)) => serve_one(conn, &registry),
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
-                    }
-                }
-            })?;
-        Ok(MetricsServer { addr, stop, thread: Some(thread) })
+        let inner =
+            AcceptLoop::spawn(addr, "sf-metrics", move |conn| serve_one(conn, &registry))?;
+        Ok(MetricsServer { inner })
     }
 
     /// The realized bind address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
-        self.addr
+        self.inner.local_addr()
     }
 
     /// Stop accepting and join the serving thread.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-impl Drop for MetricsServer {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
-        }
+    pub fn shutdown(self) {
+        self.inner.shutdown();
     }
 }
 

@@ -16,6 +16,12 @@
 //!   gauge (segments currently owned, free list included) and the
 //!   `sf_segment_allocs_total` counter (heap segment allocations since
 //!   construction) — both render `0` for the classic ring backend;
+//!   network edges registered through
+//!   [`crate::topology::Topology::register_net_edge`] export the
+//!   `sf_net_frames_total` / `sf_net_bytes_total` /
+//!   `sf_net_reconnects_total` counters and the `sf_net_in_flight` /
+//!   `sf_net_poisoned` gauges (one series per `edge` label), so a
+//!   sharded coordinator's scrape covers its process boundaries too;
 //! * [`ring::EventRing`] — a bounded lock-free ring the controller
 //!   publishes structured [`ControlEvent`]s into (scales with gate
 //!   reasons, budget recomputes, resizes, lane spawns/retires, blocked

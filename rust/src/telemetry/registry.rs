@@ -28,6 +28,11 @@
 //! | `sf_stage_lambda_items_per_sec` | gauge | `stage` |
 //! | `sf_stage_mu_items_per_sec` | gauge | `stage` |
 //! | `sf_worker_budget` | gauge | — |
+//! | `sf_net_frames_total` | counter | `edge` |
+//! | `sf_net_bytes_total` | counter | `edge` |
+//! | `sf_net_reconnects_total` | counter | `edge` |
+//! | `sf_net_in_flight` | gauge | `edge` |
+//! | `sf_net_poisoned` | gauge | `edge` |
 //! | `sf_events_dropped_total` | counter | — |
 //! | `sf_faults_total` | counter | — |
 //! | `sf_degradation_level` | gauge | — |
@@ -189,6 +194,7 @@ struct StreamEntry {
 pub struct MetricsRegistry {
     streams: Vec<StreamEntry>,
     stages: Vec<Arc<dyn ElasticStage>>,
+    net_edges: Vec<Arc<crate::net::NetEdgeStats>>,
     shared: Arc<MetricsShared>,
     ring: Option<Arc<EventRing>>,
 }
@@ -204,7 +210,13 @@ impl std::fmt::Debug for MetricsRegistry {
 
 impl MetricsRegistry {
     pub fn new(shared: Arc<MetricsShared>) -> Self {
-        MetricsRegistry { streams: Vec::new(), stages: Vec::new(), shared, ring: None }
+        MetricsRegistry {
+            streams: Vec::new(),
+            stages: Vec::new(),
+            net_edges: Vec::new(),
+            shared,
+            ring: None,
+        }
     }
 
     /// A registry with no controller behind it (bench/test harnesses).
@@ -226,6 +238,12 @@ impl MetricsRegistry {
     /// Register one elastic stage (replica gauge).
     pub fn add_stage(&mut self, stage: Arc<dyn ElasticStage>) {
         self.stages.push(stage);
+    }
+
+    /// Register one network-backed edge's transport counters (scraped
+    /// live, same pull model as streams).
+    pub fn add_net_edge(&mut self, stats: Arc<crate::net::NetEdgeStats>) {
+        self.net_edges.push(stats);
     }
 
     /// Attach the control-plane event ring (dropped-event audit metric).
@@ -312,6 +330,24 @@ impl MetricsRegistry {
             header(&mut out, "sf_worker_budget", "Coordinated replica budget in force.", "gauge");
             let _ = writeln!(out, "sf_worker_budget {b}");
         }
+
+        if !self.net_edges.is_empty() {
+            self.net_counter_section(&mut out, "sf_net_frames_total",
+                "Data frames carried over the network edge.", |e| e.frames());
+            self.net_counter_section(&mut out, "sf_net_bytes_total",
+                "Wire bytes carried over the network edge (frames incl. headers).",
+                |e| e.bytes());
+            self.net_counter_section(&mut out, "sf_net_reconnects_total",
+                "Dial attempts beyond the first on the network edge.",
+                |e| e.reconnects());
+            self.net_gauge_section(&mut out, "sf_net_in_flight",
+                "Items the remote peer pushed that have not yet landed in the \
+                 local queue (on the wire or in the decode backlog).",
+                |e| e.in_flight());
+            self.net_gauge_section(&mut out, "sf_net_poisoned",
+                "1 once the edge terminated on a transport fault or remote poison.",
+                |e| if e.is_poisoned() { 1 } else { 0 });
+        }
         if let Some(ring) = &self.ring {
             header(&mut out, "sf_events_dropped_total",
                 "Control-plane events lost to ring overflow (audited).", "counter");
@@ -373,6 +409,42 @@ impl MetricsRegistry {
                 "{name}{{stream=\"{}\"}} {}",
                 escape_label(&s.label),
                 fmt_value(read(s.handle.as_ref()))
+            );
+        }
+    }
+
+    fn net_counter_section(
+        &self,
+        out: &mut String,
+        name: &str,
+        help: &str,
+        read: impl Fn(&crate::net::NetEdgeStats) -> u64,
+    ) {
+        header(out, name, help, "counter");
+        for e in &self.net_edges {
+            let _ = writeln!(
+                out,
+                "{name}{{edge=\"{}\"}} {}",
+                escape_label(e.label()),
+                read(e.as_ref())
+            );
+        }
+    }
+
+    fn net_gauge_section(
+        &self,
+        out: &mut String,
+        name: &str,
+        help: &str,
+        read: impl Fn(&crate::net::NetEdgeStats) -> u64,
+    ) {
+        header(out, name, help, "gauge");
+        for e in &self.net_edges {
+            let _ = writeln!(
+                out,
+                "{name}{{edge=\"{}\"}} {}",
+                escape_label(e.label()),
+                read(e.as_ref())
             );
         }
     }
@@ -518,6 +590,25 @@ mod tests {
     fn label_escaping_is_prometheus_safe() {
         assert_eq!(escape_label(r#"a"b\c"#), r#"a\"b\\c"#);
         assert_eq!(escape_label("x\ny"), "x\\ny");
+    }
+
+    #[test]
+    fn net_edge_metrics_render_with_edge_label() {
+        let stats = crate::net::NetEdgeStats::new("feed:0");
+        stats.add_sent(10);
+        stats.note_frame(120);
+        stats.set_remote(10, 0);
+        stats.add_received(7);
+        let mut reg = MetricsRegistry::standalone();
+        reg.add_net_edge(stats.clone());
+        let text = reg.render();
+        assert!(text.contains("sf_net_frames_total{edge=\"feed:0\"} 1"), "{text}");
+        assert!(text.contains("sf_net_bytes_total{edge=\"feed:0\"} 120"), "{text}");
+        assert!(text.contains("sf_net_in_flight{edge=\"feed:0\"} 3"), "{text}");
+        assert!(text.contains("sf_net_poisoned{edge=\"feed:0\"} 0"), "{text}");
+        stats.poison_with("net_source:feed:0", "socket dropped");
+        let text = reg.render();
+        assert!(text.contains("sf_net_poisoned{edge=\"feed:0\"} 1"), "{text}");
     }
 
     #[test]

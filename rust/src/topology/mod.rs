@@ -73,6 +73,10 @@ pub struct Topology {
     pub(crate) kernels: Vec<KernelNode>,
     pub(crate) streams: Vec<StreamEdge>,
     pub(crate) elastic: Vec<ElasticStageDecl>,
+    /// Transport accounting for network-backed edges (see [`crate::net`]);
+    /// the scheduler exports these as `sf_net_*` gauges and folds their
+    /// faults / in-flight losses into the run report.
+    pub(crate) net_edges: Vec<Arc<crate::net::NetEdgeStats>>,
     kernel_names: Vec<String>,
     /// (kernel, port) -> stream, for duplicate-wiring detection.
     used_out: HashMap<(usize, usize), StreamId>,
@@ -86,6 +90,7 @@ impl Topology {
             kernels: Vec::new(),
             streams: Vec::new(),
             elastic: Vec::new(),
+            net_edges: Vec::new(),
             kernel_names: Vec::new(),
             used_out: HashMap::new(),
             used_in: HashMap::new(),
@@ -141,6 +146,19 @@ impl Topology {
     /// Registered replicable stages.
     pub fn elastic_stages(&self) -> &[ElasticStageDecl] {
         &self.elastic
+    }
+
+    /// Register the transport stats of a network-backed edge so the run
+    /// exports its `sf_net_*` gauges and audits its faults and in-flight
+    /// losses. Call once per [`crate::net::NetSink`]/[`crate::net::NetSource`]
+    /// added to this topology, passing the same `Arc` the kernel holds.
+    pub fn register_net_edge(&mut self, stats: Arc<crate::net::NetEdgeStats>) {
+        self.net_edges.push(stats);
+    }
+
+    /// Transport stats registered with [`Topology::register_net_edge`].
+    pub fn net_edges(&self) -> &[Arc<crate::net::NetEdgeStats>] {
+        &self.net_edges
     }
 
     /// Declare a **replicable stage**: a `Split → {replica…} → Merge`

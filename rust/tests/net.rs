@@ -1,0 +1,434 @@
+//! Integration tests for the distributed data plane (`streamflow::net`):
+//! codec robustness under arbitrary read fragmentation, fault semantics
+//! (malformed frames and socket drops poison the edge — never a panic,
+//! never a hang), single-process TCP loopback conservation, and the full
+//! two-process sharded application runs (workers spawned through the
+//! `rkworker` / `mmworker` subcommands of the real binary).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use streamflow::apps::{matmul, rabin_karp};
+use streamflow::config::{MatmulConfig, RabinKarpConfig, StageTuning};
+use streamflow::flow::{Inlet, Outlet, RunOptions, Session};
+use streamflow::kernel::{Kernel, KernelContext, KernelStatus};
+use streamflow::monitor::MonitorConfig;
+use streamflow::net::{
+    ConnSpec, Frame, FrameDecoder, NetEdgeStats, NetListener, NetSink, NetSource, Wire,
+    WIRE_VERSION,
+};
+use streamflow::queue::StreamConfig;
+use streamflow::rng::Xoshiro256pp;
+use streamflow::topology::Topology;
+
+// ---- helpers -----------------------------------------------------------
+
+/// Source kernel: emits `0..n` as `u64` items in small bursts.
+struct CountSource {
+    n: u64,
+    next: u64,
+}
+
+impl Kernel for CountSource {
+    fn name(&self) -> &str {
+        "count_source"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        if self.next >= self.n {
+            return KernelStatus::Done;
+        }
+        let hi = (self.next + 64).min(self.n);
+        let burst: Vec<u64> = (self.next..hi).collect();
+        self.next = hi;
+        let port = ctx.output::<u64>(0).expect("source port");
+        if port.push_iter(burst).is_err() {
+            return KernelStatus::Done;
+        }
+        KernelStatus::Continue
+    }
+}
+
+/// Sink kernel: collects every received `u64`.
+struct Collect {
+    seen: Arc<Mutex<Vec<u64>>>,
+}
+
+impl Kernel for Collect {
+    fn name(&self) -> &str {
+        "collect"
+    }
+
+    fn run(&mut self, ctx: &mut KernelContext) -> KernelStatus {
+        let port = ctx.input::<u64>(0).expect("collect input");
+        match port.pop() {
+            Some(v) => {
+                self.seen.lock().unwrap().push(v);
+                KernelStatus::Continue
+            }
+            None => KernelStatus::Done,
+        }
+    }
+}
+
+/// Client-side handshake over a raw socket (what a worker process does).
+fn raw_handshake(conn: &mut TcpStream, topology_id: u64, edge_id: &str) {
+    let hello = Frame::Hello {
+        version: WIRE_VERSION,
+        topology_id,
+        edge_id: edge_id.to_string(),
+    };
+    conn.write_all(&hello.to_bytes()).unwrap();
+    conn.flush().unwrap();
+    // Await the ack (a full small frame; one read suffices on loopback,
+    // but be robust to fragmentation anyway).
+    let mut dec = FrameDecoder::new();
+    let mut byte = [0u8; 64];
+    loop {
+        match dec.poll().unwrap() {
+            Some(Frame::HelloAck) => return,
+            Some(other) => panic!("expected HelloAck, got {other:?}"),
+            None => {}
+        }
+        let n = conn.read(&mut byte).unwrap();
+        assert!(n > 0, "listener hung up during handshake");
+        dec.push_bytes(&byte[..n]);
+    }
+}
+
+fn deadline_opts(secs: u64) -> RunOptions {
+    let mut opts = RunOptions::default();
+    opts.deadline = Some(Duration::from_secs(secs));
+    opts
+}
+
+// ---- codec property tests (satellite: fuzz-ish round trips) ------------
+
+#[test]
+fn frame_codec_roundtrips_under_arbitrary_fragmentation() {
+    let mut rng = Xoshiro256pp::new(0xC0DEC);
+    for trial in 0..50 {
+        // A pseudo-random mixed frame sequence.
+        let mut frames: Vec<Frame> = Vec::new();
+        frames.push(Frame::Hello {
+            version: WIRE_VERSION,
+            topology_id: rng.next_u64(),
+            edge_id: format!("edge:{trial}"),
+        });
+        frames.push(Frame::HelloAck);
+        let n_data = 1 + (rng.next_u64() % 8) as usize;
+        for _ in 0..n_data {
+            let count = (rng.next_u64() % 17) as usize;
+            let items: Vec<Vec<usize>> = (0..count)
+                .map(|_| {
+                    let len = (rng.next_u64() % 9) as usize;
+                    (0..len).map(|_| rng.next_u64() as usize).collect()
+                })
+                .collect();
+            let mut body = Vec::new();
+            streamflow::net::encode_batch(&items, &mut body);
+            frames.push(Frame::Data {
+                pushes: rng.next_u64(),
+                blocked_ns: rng.next_u64(),
+                count: count as u32,
+                body,
+            });
+        }
+        frames.push(Frame::Fin { poisoned: trial % 2 == 0 });
+
+        let mut wire = Vec::new();
+        for f in &frames {
+            f.encode(&mut wire);
+        }
+
+        // Replay under a random fragmentation schedule (trial 0: the
+        // 1-byte dribble — every torn-header offset gets exercised).
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut at = 0usize;
+        while at < wire.len() {
+            let step = if trial == 0 { 1 } else { 1 + (rng.next_u64() % 11) as usize };
+            let hi = (at + step).min(wire.len());
+            dec.push_bytes(&wire[at..hi]);
+            at = hi;
+            while let Some(f) = dec.poll().expect("well-formed stream") {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames, "trial {trial}");
+        assert_eq!(dec.pending_bytes(), 0, "trial {trial}: trailing bytes");
+    }
+}
+
+#[test]
+fn data_frame_bodies_roundtrip_item_batches() {
+    let mut rng = Xoshiro256pp::new(0xBA7C4);
+    for _ in 0..100 {
+        let count = (rng.next_u64() % 33) as usize;
+        let items: Vec<Vec<usize>> = (0..count)
+            .map(|_| {
+                let len = (rng.next_u64() % 13) as usize;
+                (0..len).map(|_| rng.next_u64() as usize).collect()
+            })
+            .collect();
+        let mut body = Vec::new();
+        streamflow::net::encode_batch(&items, &mut body);
+        let back: Vec<Vec<usize>> = streamflow::net::decode_batch(count, &body).unwrap();
+        assert_eq!(back, items);
+        // A truncated body must error, not mis-decode (torn write).
+        if !body.is_empty() {
+            assert!(streamflow::net::decode_batch::<Vec<usize>>(count, &body[..body.len() - 1])
+                .is_err());
+        }
+    }
+}
+
+#[test]
+fn segment_and_block_wire_impls_roundtrip() {
+    let seg = rabin_karp::Segment { offset: 12345, data: b"foobarfoo".to_vec() };
+    let mut buf = Vec::new();
+    seg.encode(&mut buf);
+    let back =
+        rabin_karp::Segment::decode(&mut streamflow::net::WireReader::new(&buf)).unwrap();
+    assert_eq!(back.offset, seg.offset);
+    assert_eq!(back.data, seg.data);
+
+    let blk = matmul::RowBlock { start: 32, rows: 4, data: vec![1.5f32, -2.25, 0.0, 7.75] };
+    let mut buf = Vec::new();
+    blk.encode(&mut buf);
+    let back = matmul::RowBlock::decode(&mut streamflow::net::WireReader::new(&buf)).unwrap();
+    assert_eq!((back.start, back.rows), (blk.start, blk.rows));
+    assert_eq!(back.data, blk.data);
+}
+
+// ---- fault semantics ---------------------------------------------------
+
+#[test]
+fn malformed_frame_poisons_edge_instead_of_panicking() {
+    let tid = streamflow::net::topology_id(&[b"malformed-test"]);
+    let listener = NetListener::bind("127.0.0.1:0", tid).unwrap();
+    let spec = listener.expect_edge("mal");
+    let addr = listener.local_addr();
+
+    let client = std::thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        raw_handshake(&mut conn, tid, "mal");
+        // A structurally valid envelope with an unknown kind byte.
+        let mut junk = Vec::new();
+        junk.extend_from_slice(&8u32.to_le_bytes());
+        junk.push(99); // no such frame kind
+        junk.extend_from_slice(&[0xAB; 7]);
+        conn.write_all(&junk).unwrap();
+        conn.flush().unwrap();
+        // Hold the socket open: the *decoder*, not EOF, must kill the edge.
+        std::thread::sleep(Duration::from_millis(300));
+    });
+
+    let stats = NetEdgeStats::new("mal");
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let mut topo = Topology::new("malformed");
+    let src = topo.add_kernel(Box::new(NetSource::<u64>::new(spec, stats.clone())));
+    let snk = topo.add_kernel(Box::new(Collect { seen: seen.clone() }));
+    topo.connect(Outlet::<u64>::new(src, 0), Inlet::new(snk, 0), StreamConfig::default())
+        .unwrap();
+    topo.register_net_edge(stats.clone());
+
+    let report = Session::run(topo, deadline_opts(10)).unwrap();
+    client.join().unwrap();
+    assert!(!report.deadline_hit, "poison must end the run, not the deadline");
+    assert!(stats.is_poisoned(), "malformed frame must poison the edge");
+    assert!(
+        report.faults.iter().any(|f| f.target.contains("mal")),
+        "expected a FaultRecord for the poisoned edge, got {:?}",
+        report.faults
+    );
+}
+
+#[test]
+fn socket_drop_mid_stream_yields_fault_record_not_hang() {
+    let tid = streamflow::net::topology_id(&[b"drop-test"]);
+    let listener = NetListener::bind("127.0.0.1:0", tid).unwrap();
+    let spec = listener.expect_edge("drop");
+    let addr = listener.local_addr();
+
+    let client = std::thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        raw_handshake(&mut conn, tid, "drop");
+        // One valid batch, then vanish without a FIN frame.
+        let items: Vec<u64> = vec![7, 8, 9];
+        let mut body = Vec::new();
+        streamflow::net::encode_batch(&items, &mut body);
+        let frame = Frame::Data { pushes: 3, blocked_ns: 0, count: 3, body };
+        conn.write_all(&frame.to_bytes()).unwrap();
+        conn.flush().unwrap();
+        // Dropping `conn` closes the socket abruptly.
+    });
+
+    let stats = NetEdgeStats::new("drop");
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let mut topo = Topology::new("dropped");
+    let src = topo.add_kernel(Box::new(NetSource::<u64>::new(spec, stats.clone())));
+    let snk = topo.add_kernel(Box::new(Collect { seen: seen.clone() }));
+    topo.connect(Outlet::<u64>::new(src, 0), Inlet::new(snk, 0), StreamConfig::default())
+        .unwrap();
+    topo.register_net_edge(stats.clone());
+
+    let report = Session::run(topo, deadline_opts(10)).unwrap();
+    client.join().unwrap();
+    assert!(!report.deadline_hit, "drop must poison promptly, not wait out the deadline");
+    assert!(stats.is_poisoned());
+    assert!(
+        report.faults.iter().any(|f| f.message.contains("FIN")),
+        "expected a dropped-without-FIN fault, got {:?}",
+        report.faults
+    );
+    // The batch delivered before the drop still arrived (partial result).
+    assert_eq!(*seen.lock().unwrap(), vec![7, 8, 9]);
+}
+
+// ---- loopback conservation --------------------------------------------
+
+#[test]
+fn loopback_edge_conserves_items_and_folds_remote_counters() {
+    const N: u64 = 10_000;
+    let tid = streamflow::net::topology_id(&[b"loopback-test"]);
+    let listener = NetListener::bind("127.0.0.1:0", tid).unwrap();
+    let accept_spec = listener.expect_edge("loop");
+    let connect_spec = ConnSpec::Connect {
+        addr: listener.local_addr().to_string(),
+        topology_id: tid,
+        edge_id: "loop".to_string(),
+        retries: 10,
+    };
+
+    // One topology whose middle edge is a real TCP connection:
+    //   CountSource → NetSink ⇉ socket ⇉ NetSource → Collect
+    let sink_stats = NetEdgeStats::new("loop:tx");
+    let source_stats = NetEdgeStats::new("loop:rx");
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let mut topo = Topology::new("loopback");
+    let gen = topo.add_kernel(Box::new(CountSource { n: N, next: 0 }));
+    let tx = topo.add_kernel(Box::new(NetSink::<u64>::new(connect_spec, sink_stats.clone())));
+    topo.connect(Outlet::<u64>::new(gen, 0), Inlet::new(tx, 0), StreamConfig::default())
+        .unwrap();
+    let rx = topo.add_kernel(Box::new(NetSource::<u64>::new(accept_spec, source_stats.clone())));
+    let snk = topo.add_kernel(Box::new(Collect { seen: seen.clone() }));
+    topo.connect(Outlet::<u64>::new(rx, 0), Inlet::new(snk, 0), StreamConfig::default())
+        .unwrap();
+    topo.register_net_edge(sink_stats.clone());
+    topo.register_net_edge(source_stats.clone());
+
+    let report = Session::run(topo, deadline_opts(30)).unwrap();
+    assert!(!report.deadline_hit);
+    assert!(report.faults.is_empty(), "clean run: {:?}", report.faults);
+
+    // Exact conservation across the boundary at end of run:
+    // sent == received, nothing in flight, and the piggybacked remote
+    // push counter agrees with the local receive count.
+    let mut got = seen.lock().unwrap().clone();
+    got.sort_unstable();
+    assert_eq!(got, (0..N).collect::<Vec<u64>>());
+    assert_eq!(sink_stats.sent(), N);
+    assert_eq!(source_stats.received(), N);
+    assert_eq!(source_stats.remote_pushes(), N);
+    assert_eq!(source_stats.in_flight(), 0);
+    assert!(source_stats.frames() > 0);
+    assert_eq!(report.items_lost, 0);
+}
+
+// ---- two-process sharded application runs ------------------------------
+
+fn worker_bin_env() {
+    // The coordinator re-invokes the real binary; point it at the one
+    // cargo built for this test profile.
+    std::env::set_var("SF_WORKER_BIN", env!("CARGO_BIN_EXE_streamflow"));
+}
+
+#[test]
+fn sharded_rabin_karp_is_exact_across_two_worker_processes() {
+    worker_bin_env();
+    let cfg = RabinKarpConfig {
+        corpus_bytes: 2 << 20,
+        pattern: "foobar".to_string(),
+        segment_bytes: 16 << 10,
+        hash_kernels: 2,
+        verify_kernels: 4,
+        // Aggressive verify tuning: any measurable utilization upscales,
+        // so the timeline reliably shows the controller rescaling the
+        // stage whose upstream is a NetSource.
+        verify_tuning: StageTuning {
+            target_rho: 0.01,
+            band: 0.005,
+            cooldown_ticks: 1,
+            restart_budget: None,
+        },
+        ..Default::default()
+    };
+    let mut opts = RunOptions::monitored(MonitorConfig::practical());
+    opts.deadline = Some(Duration::from_secs(120));
+    let run = rabin_karp::run_rabin_karp_sharded(&cfg, 2, "127.0.0.1:0", opts).unwrap();
+
+    // Exact result: the distributed pipeline found every match.
+    let corpus = rabin_karp::foobar_corpus(cfg.corpus_bytes);
+    let expect = rabin_karp::naive_matches(&corpus, cfg.pattern.as_bytes());
+    assert_eq!(run.matches, expect, "sharded result differs from the oracle");
+
+    // End-to-end conservation at the coordinator:
+    // delivered + items_lost + items_shed == offered with zero loss.
+    assert!(!run.report.deadline_hit, "run must drain, not time out");
+    assert!(run.report.faults.is_empty(), "clean run: {:?}", run.report.faults);
+    assert_eq!(run.report.items_lost, 0);
+    assert_eq!(run.report.items_shed, 0);
+    for (label, (pushes, pops)) in &run.report.stream_totals {
+        assert_eq!(pushes, pops, "stream {label} left items behind");
+    }
+
+    // Both worker processes exited cleanly.
+    assert_eq!(run.workers.len(), 2);
+    for w in &run.workers {
+        assert!(w.success, "worker pid {} failed: {:?}", w.pid, w.code);
+    }
+
+    // The controller rescaled the verify stage (remote-fed upstream).
+    assert!(
+        !run.report.scaling_timeline().is_empty(),
+        "expected a scaling timeline from the coordinator's controller"
+    );
+    let upscaled = run
+        .report
+        .replica_trajectories
+        .iter()
+        .any(|tr| tr.stage == "verify" && tr.points.iter().any(|&(_, r)| r > 1));
+    assert!(
+        upscaled,
+        "verify stage never rescaled: {:?}",
+        run.report.scaling_timeline()
+    );
+}
+
+#[test]
+fn sharded_matmul_is_exact_across_two_worker_processes() {
+    worker_bin_env();
+    let cfg = MatmulConfig { n: 128, dot_kernels: 2, block_rows: 16, ..Default::default() };
+    let mut opts = RunOptions::monitored(MonitorConfig::practical());
+    opts.deadline = Some(Duration::from_secs(120));
+    let run = matmul::run_matmul_sharded(&cfg, 2, "127.0.0.1:0", opts).unwrap();
+
+    let a = matmul::random_matrix(cfg.n, cfg.seed);
+    let b = matmul::random_matrix(cfg.n, cfg.seed ^ 0xFEED);
+    let expect = matmul::matmul_ref(&a, &b, cfg.n);
+    assert_eq!(run.c.len(), expect.len());
+    for (i, (&got, &want)) in run.c.iter().zip(&expect).enumerate() {
+        assert!((got - want).abs() < 1e-3, "C[{i}] = {got} vs {want}");
+    }
+    assert!(!run.report.deadline_hit);
+    assert!(run.report.faults.is_empty(), "clean run: {:?}", run.report.faults);
+    assert_eq!(run.report.items_lost, 0);
+    assert_eq!(run.workers.len(), 2);
+    for w in &run.workers {
+        assert!(w.success, "worker pid {} failed: {:?}", w.pid, w.code);
+    }
+    assert_eq!(run.reduce_streams.len(), 2, "one instrumented stream per shard");
+}
