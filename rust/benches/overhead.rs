@@ -13,8 +13,9 @@ use streamflow::report::{Summary, Table};
 use streamflow::workload::{tandem, WorkloadSpec};
 
 fn rusage_cpu_secs() -> f64 {
-    // SAFETY: plain libc call with a valid out-pointer.
+    // SAFETY: rusage is a plain-old-data struct; all-zero is a valid value.
     let mut ru: libc::rusage = unsafe { std::mem::zeroed() };
+    // SAFETY: plain libc call with a valid out-pointer.
     unsafe { libc::getrusage(libc::RUSAGE_SELF, &mut ru) };
     let tv = |t: libc::timeval| t.tv_sec as f64 + t.tv_usec as f64 / 1.0e6;
     tv(ru.ru_utime) + tv(ru.ru_stime)

@@ -59,6 +59,7 @@ struct LegacyQueue {
 
 // SAFETY: SPSC contract — one pusher, one popper; cursors are end-private.
 unsafe impl Send for LegacyQueue {}
+// SAFETY: same argument as Send above.
 unsafe impl Sync for LegacyQueue {}
 
 impl LegacyQueue {
@@ -87,6 +88,7 @@ impl LegacyQueue {
         }
         // SAFETY: single producer.
         let t = unsafe { &mut *self.tail.get() };
+        // SAFETY: len < cap, so this slot is free and consumer-untouched.
         unsafe { *self.slots[*t].get() = v };
         *t = (*t + 1) % self.cap;
         self.len.fetch_add(1, Ordering::Release);
@@ -102,6 +104,7 @@ impl LegacyQueue {
         }
         // SAFETY: single consumer.
         let h = unsafe { &mut *self.head.get() };
+        // SAFETY: len > 0, so this slot is published and producer-untouched.
         let v = unsafe { *self.slots[*h].get() };
         *h = (*h + 1) % self.cap;
         self.len.fetch_sub(1, Ordering::Release);

@@ -1,0 +1,861 @@
+//! Pre-run static analysis of an assembled [`Topology`].
+//!
+//! The paper's service-rate estimates are only valid under *non-blocking*
+//! conditions (§III) — yet nothing in the assembly API stops a user from
+//! wiring a graph that is structurally guaranteed to block forever: a
+//! bounded-queue cycle, a kernel no source can ever feed, an elastic
+//! budget that can never cover a stage's replica floor. [`GraphAnalyzer`]
+//! rejects such graphs *before a single kernel thread spawns*, and flags
+//! configurations under which the monitor's §III assumption can never be
+//! observed.
+//!
+//! It runs automatically inside [`Session::run`] (errors abort the run
+//! with the [`AnalysisReport`] attached to [`SfError::Analysis`]; warnings
+//! flow into `ControlEvent::Note`, the `sf_analysis_warnings` gauge, and
+//! [`RunReport::analysis`]) and standalone via the `streamflow verify`
+//! CLI subcommand, which assembles an application wiring without
+//! executing it.
+//!
+//! # Rules
+//!
+//! | id | severity | check |
+//! |------|----------|-------|
+//! | `A1` | error    | bounded-queue cycle: an SCC of the stream graph whose every edge has finite capacity can deadlock (every queue here is bounded, so *any* cycle is rejected); the offending cycle is printed edge by edge |
+//! | `A2` | error    | dangling/unreachable: kernels wired to nothing, kernels no source can reach, sinks that can never be fed |
+//! | `A3` | error/warning | elastic feasibility: `worker_budget` (incl. `HostAware` floor/ceil and `BudgetLease` splits) vs. Σ stage `min_replicas`; band/`max ≥ min` sanity (error), zero cooldown or floor-only shortfall (warning) |
+//! | `A4` | error    | net-edge plan: duplicate edge ids, topology-id disagreement across a sharded plan, non-`Wire` item types, a full `SINK_BURST` batch that cannot fit one 64 MiB frame |
+//! | `A5` | warning  | monitor validity: an instrumented edge whose capacity is below one producer burst keeps the producer permanently blocked — the §III non-blocking window is structurally unobservable (silence per edge with [`StreamConfig::silence_analysis`]) |
+//!
+//! [`Session::run`]: crate::flow::Session::run
+//! [`SfError::Analysis`]: crate::error::SfError::Analysis
+//! [`RunReport::analysis`]: crate::scheduler::RunReport::analysis
+//! [`StreamConfig::silence_analysis`]: crate::queue::StreamConfig::silence_analysis
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::elastic::ElasticConfig;
+use crate::net::{MAX_FRAME_BYTES, SINK_BURST};
+use crate::placement::BudgetPolicy;
+use crate::topology::{KernelId, StreamId, Topology};
+
+/// Stable rule identifiers (`A1`..`A5`). Diagnostics carry these so tests,
+/// CI greps and issue reports can match on an id that survives message
+/// rewording.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// Bounded-queue cycle deadlock.
+    A1,
+    /// Dangling / unreachable kernels.
+    A2,
+    /// Elastic budget feasibility.
+    A3,
+    /// Net-edge plan consistency.
+    A4,
+    /// Monitor §III non-blocking validity.
+    A5,
+}
+
+impl Rule {
+    /// The stable id string (`"A1"`..`"A5"`).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::A1 => "A1",
+            Rule::A2 => "A2",
+            Rule::A3 => "A3",
+            Rule::A4 => "A4",
+            Rule::A5 => "A5",
+        }
+    }
+
+    /// One-line rule summary (rendered in reports).
+    pub fn title(self) -> &'static str {
+        match self {
+            Rule::A1 => "bounded-queue cycle deadlock",
+            Rule::A2 => "dangling or unreachable kernel",
+            Rule::A3 => "elastic budget infeasible",
+            Rule::A4 => "net-edge plan inconsistency",
+            Rule::A5 => "monitor non-blocking assumption unsatisfiable",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// Diagnostic severity. Errors abort [`crate::flow::Session::run`] before
+/// any kernel spawns; warnings ride along in the report and telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One analyzer finding: rule id, severity, human message, and the
+/// kernel/stream provenance the message talks about.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub severity: Severity,
+    pub message: String,
+    /// Kernels involved, as `(id, name)` pairs.
+    pub kernels: Vec<(KernelId, String)>,
+    /// Streams involved, as `(id, label)` pairs.
+    pub streams: Vec<(StreamId, String)>,
+}
+
+impl Diagnostic {
+    fn new(rule: Rule, severity: Severity, message: impl Into<String>) -> Self {
+        Diagnostic { rule, severity, message: message.into(), kernels: Vec::new(), streams: Vec::new() }
+    }
+
+    fn kernel(mut self, id: KernelId, name: &str) -> Self {
+        self.kernels.push((id, name.to_string()));
+        self
+    }
+
+    fn stream(mut self, id: StreamId, label: &str) -> Self {
+        self.streams.push((id, label.to_string()));
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}] {}: {}", self.severity, self.rule, self.rule.title(), self.message)?;
+        for (id, name) in &self.kernels {
+            write!(f, "\n    kernel {} '{name}'", id.0)?;
+        }
+        for (id, label) in &self.streams {
+            write!(f, "\n    stream {} '{label}'", id.0)?;
+        }
+        Ok(())
+    }
+}
+
+/// The structured result of one analyzer pass.
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    /// Name of the topology that was analyzed.
+    pub topology: String,
+    /// All findings, in rule order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    /// True when at least one diagnostic is an error (the run must abort).
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// Error diagnostics only.
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    /// Warning diagnostics only.
+    pub fn warnings(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning)
+    }
+
+    /// True when the pass produced no diagnostics at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Does any diagnostic carry this rule id?
+    pub fn has_rule(&self, rule: Rule) -> bool {
+        self.diagnostics.iter().any(|d| d.rule == rule)
+    }
+
+    /// Multi-line human rendering of every diagnostic.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.is_clean() {
+            return format!("analysis of '{}': clean", self.topology);
+        }
+        out.push_str(&format!(
+            "analysis of '{}': {} error(s), {} warning(s)",
+            self.topology,
+            self.errors().count(),
+            self.warnings().count()
+        ));
+        for d in &self.diagnostics {
+            out.push_str("\n  ");
+            // Diagnostic's own Display already indents provenance lines.
+            out.push_str(&d.to_string().replace('\n', "\n  "));
+        }
+        out
+    }
+}
+
+impl fmt::Display for AnalysisReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// A planned cross-process stream edge, used by rule A4 to validate a
+/// sharded deployment *before* any socket exists. Built through the typed
+/// [`NetEdgePlan::of`] constructor, so "item type is `Wire`" is enforced
+/// by the compiler and recorded for the analyzer.
+#[derive(Debug, Clone)]
+pub struct NetEdgePlan {
+    /// The edge id both sides handshake on (`feed:0`, `results:1`, ...).
+    pub edge_id: String,
+    /// The topology fingerprint this edge belongs to. Every edge of one
+    /// sharded session must agree.
+    pub topology_id: u64,
+    /// Item type name (for diagnostics).
+    pub item: &'static str,
+    /// True when the plan entry was built from a `T: Wire` type.
+    pub wire: bool,
+    /// Nominal serialized bytes per item.
+    pub item_bytes: usize,
+    /// Items batched per `Data` frame (defaults to [`SINK_BURST`]).
+    pub burst: usize,
+}
+
+impl NetEdgePlan {
+    /// Describe one planned edge carrying items of `T`.
+    pub fn of<T: crate::net::Wire>(
+        edge_id: impl Into<String>,
+        topology_id: u64,
+        item_bytes: usize,
+    ) -> Self {
+        NetEdgePlan {
+            edge_id: edge_id.into(),
+            topology_id,
+            item: std::any::type_name::<T>(),
+            wire: true,
+            item_bytes,
+            burst: SINK_BURST,
+        }
+    }
+
+    /// Escape hatch for describing an edge whose item type is not (yet)
+    /// `Wire` — the analyzer rejects it under A4. Exists so tests and
+    /// migration tooling can represent an invalid plan.
+    pub fn untyped(edge_id: impl Into<String>, topology_id: u64, item: &'static str) -> Self {
+        NetEdgePlan {
+            edge_id: edge_id.into(),
+            topology_id,
+            item,
+            wire: false,
+            item_bytes: 0,
+            burst: SINK_BURST,
+        }
+    }
+}
+
+/// Run-level inputs the topology alone cannot answer: the elastic
+/// configuration a run would use (rule A3) and the cross-process edge
+/// plan of a sharded session (rule A4).
+#[derive(Default)]
+pub struct AnalysisContext<'a> {
+    /// The control-plane configuration the run will use, when the run is
+    /// elastic (explicit `RunOptions::elastic` or declared stages).
+    pub elastic: Option<&'a ElasticConfig>,
+    /// Planned cross-process edges of a sharded session.
+    pub net_plan: &'a [NetEdgePlan],
+}
+
+impl<'a> AnalysisContext<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_elastic(mut self, cfg: &'a ElasticConfig) -> Self {
+        self.elastic = Some(cfg);
+        self
+    }
+
+    pub fn with_net_plan(mut self, plan: &'a [NetEdgePlan]) -> Self {
+        self.net_plan = plan;
+        self
+    }
+}
+
+/// Minimum capacity (items) below which an instrumented edge draws an A5
+/// warning: one typical producer burst — the apps publish in bursts of 8,
+/// `NetSource` republishes up to [`SINK_BURST`] items per frame. A queue
+/// smaller than the burst that fills it keeps its producer permanently
+/// blocked, so the §III non-blocking window never opens.
+pub const A5_MIN_CAPACITY: usize = 8;
+
+/// One edge of the analyzed graph: a real stream, or the virtual edge an
+/// elastic stage contributes (its split → merge path runs through lane
+/// queues that are not topology streams, but is just as bounded).
+#[derive(Clone)]
+enum GraphEdge {
+    Stream { id: StreamId, label: String, capacity: usize },
+    Stage { name: String },
+}
+
+impl GraphEdge {
+    fn describe(&self) -> String {
+        match self {
+            GraphEdge::Stream { id, label, capacity } => {
+                format!("stream {} '{label}' (capacity {capacity})", id.0)
+            }
+            GraphEdge::Stage { name } => format!("elastic stage '{name}' (bounded lane queues)"),
+        }
+    }
+}
+
+/// The pre-run analyzer. Stateless; [`GraphAnalyzer::analyze`] walks the
+/// topology once per rule. See the module docs for the rule table.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GraphAnalyzer;
+
+impl GraphAnalyzer {
+    pub fn new() -> Self {
+        GraphAnalyzer
+    }
+
+    /// Run every rule over `topo` and return the combined report.
+    pub fn analyze(&self, topo: &Topology, ctx: &AnalysisContext<'_>) -> AnalysisReport {
+        let mut report = AnalysisReport { topology: topo.name().to_string(), ..Default::default() };
+        let (adj, edges) = build_graph(topo);
+        rule_a1_cycles(topo, &adj, &edges, &mut report);
+        rule_a2_reachability(topo, &adj, &mut report);
+        rule_a3_feasibility(topo, ctx, &mut report);
+        rule_a4_net_plan(topo, ctx, &mut report);
+        rule_a5_monitor_validity(topo, &mut report);
+        report
+    }
+}
+
+/// Adjacency (kernel index → outgoing `(dst, edge)` pairs) over streams
+/// plus the virtual split → merge edge of every elastic stage.
+#[allow(clippy::type_complexity)]
+fn build_graph(topo: &Topology) -> (Vec<Vec<(usize, usize)>>, Vec<GraphEdge>) {
+    let n = topo.num_kernels();
+    let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+    let mut edges = Vec::new();
+    for e in topo.streams() {
+        let idx = edges.len();
+        edges.push(GraphEdge::Stream {
+            id: e.id,
+            label: e.label.clone(),
+            capacity: e.config.capacity,
+        });
+        adj[e.src.0].push((e.dst.0, idx));
+    }
+    for decl in topo.elastic_stages() {
+        let idx = edges.len();
+        edges.push(GraphEdge::Stage { name: decl.stage.stage_name().to_string() });
+        adj[decl.split.0].push((decl.merge.0, idx));
+    }
+    (adj, edges)
+}
+
+/// A1 — every queue in this runtime is bounded (both backends cap
+/// admission), so any directed cycle can reach the classic
+/// all-queues-full deadlock: each kernel in the loop blocks pushing to
+/// the next. Detected as strongly connected components of size > 1 (or a
+/// self-loop) via iterative Tarjan; each is reported with its member
+/// edges listed one by one.
+fn rule_a1_cycles(
+    topo: &Topology,
+    adj: &[Vec<(usize, usize)>],
+    edges: &[GraphEdge],
+    report: &mut AnalysisReport,
+) {
+    let n = adj.len();
+    // Iterative Tarjan SCC (explicit stack — topologies can be deep).
+    const UNVISITED: usize = usize::MAX;
+    let mut index = vec![UNVISITED; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut next_index = 0usize;
+    let mut sccs: Vec<Vec<usize>> = Vec::new();
+    // (node, next child position) frames.
+    let mut frames: Vec<(usize, usize)> = Vec::new();
+    for start in 0..n {
+        if index[start] != UNVISITED {
+            continue;
+        }
+        frames.push((start, 0));
+        while let Some(&mut (v, ref mut child)) = frames.last_mut() {
+            if *child == 0 {
+                index[v] = next_index;
+                low[v] = next_index;
+                next_index += 1;
+                stack.push(v);
+                on_stack[v] = true;
+            }
+            if *child < adj[v].len() {
+                let (w, _) = adj[v][*child];
+                *child += 1;
+                if index[w] == UNVISITED {
+                    frames.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            } else {
+                if low[v] == index[v] {
+                    let mut comp = Vec::new();
+                    while let Some(w) = stack.pop() {
+                        on_stack[w] = false;
+                        comp.push(w);
+                        if w == v {
+                            break;
+                        }
+                    }
+                    sccs.push(comp);
+                }
+                frames.pop();
+                if let Some(&mut (parent, _)) = frames.last_mut() {
+                    low[parent] = low[parent].min(low[v]);
+                }
+            }
+        }
+    }
+    for comp in sccs {
+        let cyclic = comp.len() > 1
+            || adj[comp[0]].iter().any(|&(dst, _)| dst == comp[0]);
+        if !cyclic {
+            continue;
+        }
+        let members: std::collections::HashSet<usize> = comp.iter().copied().collect();
+        let mut msg = format!(
+            "cycle through {} kernel(s); every edge is finite-capacity, so a full \
+             loop deadlocks (each kernel blocks pushing to the next):",
+            comp.len()
+        );
+        let mut diag = Diagnostic::new(Rule::A1, Severity::Error, String::new());
+        for &v in &comp {
+            diag = diag.kernel(KernelId(v), topo.kernel_name(KernelId(v)));
+            for &(dst, eidx) in &adj[v] {
+                if members.contains(&dst) {
+                    msg.push_str(&format!(
+                        "\n      {} -> {} via {}",
+                        topo.kernel_name(KernelId(v)),
+                        topo.kernel_name(KernelId(dst)),
+                        edges[eidx].describe()
+                    ));
+                    if let GraphEdge::Stream { id, label, .. } = &edges[eidx] {
+                        diag = diag.stream(*id, label);
+                    }
+                }
+            }
+        }
+        diag.message = msg;
+        report.diagnostics.push(diag);
+    }
+}
+
+/// A2 — kernels wired to nothing, and kernels/sinks no source can reach.
+/// Ports in this runtime exist only once wired, so "unconnected declared
+/// port" materializes as a kernel with no edges at all; unreachable
+/// compute and never-fed sinks both fall out of a forward walk from the
+/// in-degree-0 source kernels.
+fn rule_a2_reachability(topo: &Topology, adj: &[Vec<(usize, usize)>], report: &mut AnalysisReport) {
+    let n = adj.len();
+    let mut in_degree = vec![0usize; n];
+    for out in adj {
+        for &(dst, _) in out {
+            in_degree[dst] += 1;
+        }
+    }
+    // Islands: no inputs, no outputs — declared but never wired.
+    for v in 0..n {
+        if in_degree[v] == 0 && adj[v].is_empty() {
+            report.diagnostics.push(
+                Diagnostic::new(
+                    Rule::A2,
+                    Severity::Error,
+                    "kernel is wired to no stream at all (declared but unconnected)",
+                )
+                .kernel(KernelId(v), topo.kernel_name(KernelId(v))),
+            );
+        }
+    }
+    // Forward reachability from every source (in-degree 0, has outputs).
+    let mut reached = vec![false; n];
+    let mut queue: Vec<usize> = (0..n).filter(|&v| in_degree[v] == 0 && !adj[v].is_empty()).collect();
+    for &v in &queue {
+        reached[v] = true;
+    }
+    while let Some(v) = queue.pop() {
+        for &(dst, _) in &adj[v] {
+            if !reached[dst] {
+                reached[dst] = true;
+                queue.push(dst);
+            }
+        }
+    }
+    for v in 0..n {
+        if reached[v] || (in_degree[v] == 0 && adj[v].is_empty()) {
+            continue;
+        }
+        let kind = if adj[v].is_empty() { "sink can never be fed" } else { "kernel" };
+        report.diagnostics.push(
+            Diagnostic::new(
+                Rule::A2,
+                Severity::Error,
+                format!(
+                    "{kind} unreachable from any source kernel — no item can ever arrive \
+                     (its upstream is a cycle or another unreachable kernel)"
+                ),
+            )
+            .kernel(KernelId(v), topo.kernel_name(KernelId(v))),
+        );
+    }
+}
+
+/// A3 — can the control plane ever satisfy the declared stages?
+/// Per-stage policy sanity (band, `max ≥ min`) plus the global check:
+/// the best-case worker budget (`Fixed(n)`, `HostAware.ceil`, divided by
+/// the `BudgetLease` participant count) must cover Σ `min_replicas`. A
+/// budget whose *floor* undershoots the minimum is a warning — feasible
+/// when the host is idle, pinned under load.
+fn rule_a3_feasibility(topo: &Topology, ctx: &AnalysisContext<'_>, report: &mut AnalysisReport) {
+    let stages = topo.elastic_stages();
+    let mut min_sum = 0usize;
+    for decl in stages {
+        let policy = decl.stage.policy();
+        let name = decl.stage.stage_name();
+        if let Err(e) = policy.validate() {
+            report.diagnostics.push(
+                Diagnostic::new(
+                    Rule::A3,
+                    Severity::Error,
+                    format!("stage '{name}': invalid policy — {e}"),
+                )
+                .kernel(decl.split, topo.kernel_name(decl.split)),
+            );
+        }
+        if policy.cooldown_ticks == 0 {
+            report.diagnostics.push(
+                Diagnostic::new(
+                    Rule::A3,
+                    Severity::Warning,
+                    format!(
+                        "stage '{name}': cooldown_ticks = 0 — every tick may rescale, \
+                         hysteresis is off and the stage can oscillate"
+                    ),
+                )
+                .kernel(decl.split, topo.kernel_name(decl.split)),
+            );
+        }
+        min_sum += policy.min_replicas;
+    }
+    let Some(cfg) = ctx.elastic else {
+        return;
+    };
+    if let Err(e) = cfg.worker_budget.validate() {
+        report.diagnostics.push(Diagnostic::new(
+            Rule::A3,
+            Severity::Error,
+            format!("invalid worker_budget — {e}"),
+        ));
+        return;
+    }
+    if stages.is_empty() {
+        return;
+    }
+    // Best case: the most workers the policy can ever grant; worst case:
+    // what it guarantees under full external load.
+    let (best, worst) = match cfg.worker_budget {
+        BudgetPolicy::Unlimited => (None, None),
+        BudgetPolicy::Fixed(n) => (Some(n), Some(n)),
+        BudgetPolicy::HostAware { floor, ceil, .. } => (Some(ceil), Some(floor)),
+    };
+    // A lease splits whatever the policy grants between participant
+    // processes (each side keeps at least 1 worker, matching
+    // `BudgetLease::share`).
+    let participants = cfg.budget_lease.as_ref().map(|l| l.participants().max(1)).unwrap_or(1);
+    let split = |b: usize| (b / participants).max(1);
+    if let Some(best) = best.map(split) {
+        if best < min_sum {
+            report.diagnostics.push(Diagnostic::new(
+                Rule::A3,
+                Severity::Error,
+                format!(
+                    "worker budget can never cover the stages: best-case budget {best}\
+                     {} < Σ min_replicas = {min_sum} over {} stage(s) — the controller \
+                     would pin every stage at its floor and still be over budget",
+                    if participants > 1 {
+                        format!(" (after a {participants}-way lease split)")
+                    } else {
+                        String::new()
+                    },
+                    stages.len()
+                ),
+            ));
+            return;
+        }
+    }
+    if let Some(worst) = worst.map(split) {
+        if worst < min_sum {
+            report.diagnostics.push(Diagnostic::new(
+                Rule::A3,
+                Severity::Warning,
+                format!(
+                    "worker budget floor {worst} < Σ min_replicas = {min_sum}: feasible \
+                     on an idle host, but under external load the host-aware budget can \
+                     drop below the stages' combined replica floor"
+                ),
+            ));
+        }
+    }
+}
+
+/// A4 — cross-process plan consistency: unique edge ids (both in the
+/// plan and among the topology's registered live edges), one topology id
+/// per session, `Wire` item types, and a full sink burst fitting one
+/// frame under the 64 MiB cap.
+fn rule_a4_net_plan(topo: &Topology, ctx: &AnalysisContext<'_>, report: &mut AnalysisReport) {
+    // Live edges registered on the topology itself.
+    let mut live_seen: HashMap<&str, usize> = HashMap::new();
+    for stats in topo.net_edges() {
+        *live_seen.entry(stats.label()).or_default() += 1;
+    }
+    for (label, count) in live_seen {
+        if count > 1 {
+            report.diagnostics.push(Diagnostic::new(
+                Rule::A4,
+                Severity::Error,
+                format!(
+                    "net edge id '{label}' registered {count} times on this topology — \
+                     the handshake routes by edge id, so duplicates cross-wire"
+                ),
+            ));
+        }
+    }
+    let plan = ctx.net_plan;
+    if plan.is_empty() {
+        return;
+    }
+    let mut plan_seen: HashMap<&str, usize> = HashMap::new();
+    for e in plan {
+        *plan_seen.entry(e.edge_id.as_str()).or_default() += 1;
+    }
+    for (id, count) in plan_seen {
+        if count > 1 {
+            report.diagnostics.push(Diagnostic::new(
+                Rule::A4,
+                Severity::Error,
+                format!("planned net edge id '{id}' appears {count} times in the shard plan"),
+            ));
+        }
+    }
+    let tid = plan[0].topology_id;
+    for e in plan {
+        if e.topology_id != tid {
+            report.diagnostics.push(Diagnostic::new(
+                Rule::A4,
+                Severity::Error,
+                format!(
+                    "edge '{}' carries topology id {:#x} but the plan's first edge \
+                     carries {:#x} — the Hello handshake would reject the connection",
+                    e.edge_id, e.topology_id, tid
+                ),
+            ));
+        }
+        if !e.wire {
+            report.diagnostics.push(Diagnostic::new(
+                Rule::A4,
+                Severity::Error,
+                format!(
+                    "edge '{}' item type {} does not implement Wire — nothing can \
+                     cross this process boundary",
+                    e.edge_id, e.item
+                ),
+            ));
+        }
+        let burst_bytes = e.item_bytes.saturating_mul(e.burst);
+        if e.wire && burst_bytes > MAX_FRAME_BYTES {
+            report.diagnostics.push(Diagnostic::new(
+                Rule::A4,
+                Severity::Error,
+                format!(
+                    "edge '{}': one {}-item burst of {} ≈ {burst_bytes} bytes exceeds \
+                     the {MAX_FRAME_BYTES}-byte frame cap — the sink's first full Data \
+                     frame would be rejected by its own decoder peer",
+                    e.edge_id, e.burst, e.item
+                ),
+            ));
+        }
+    }
+}
+
+/// A5 — instrumented edges whose capacity is below one producer burst.
+/// The monitor estimates service rates only from non-blocking windows
+/// (§III); a queue the producer can fill in a single publish never opens
+/// one, so estimates on that edge can never converge. `NetSource`-fed
+/// edges use the frame batch size as the burst.
+fn rule_a5_monitor_validity(topo: &Topology, report: &mut AnalysisReport) {
+    for e in topo.streams() {
+        if !e.config.instrument || e.config.analysis_quiet {
+            continue;
+        }
+        let src_name = topo.kernel_name(e.src);
+        let burst = if src_name.starts_with("net_source:") { SINK_BURST } else { A5_MIN_CAPACITY };
+        if e.config.capacity < burst {
+            report.diagnostics.push(
+                Diagnostic::new(
+                    Rule::A5,
+                    Severity::Warning,
+                    format!(
+                        "instrumented stream capacity {} is below one producer burst \
+                         ({burst} items): the producer refills the queue faster than it \
+                         opens, the §III non-blocking window never appears and the rate \
+                         estimate cannot converge (silence with \
+                         StreamConfig::silence_analysis() if intended)",
+                        e.config.capacity
+                    ),
+                )
+                .kernel(e.src, src_name)
+                .stream(e.id, &e.label),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{Inlet, Outlet};
+    use crate::kernel::{Kernel, KernelContext, KernelStatus};
+    use crate::queue::StreamConfig;
+
+    /// Inert kernel for graph-shape tests (never runs).
+    struct Stub(&'static str);
+
+    impl Kernel for Stub {
+        fn name(&self) -> &str {
+            self.0
+        }
+        fn run(&mut self, _ctx: &mut KernelContext) -> KernelStatus {
+            KernelStatus::Done
+        }
+    }
+
+    fn linear_topology() -> Topology {
+        let mut t = Topology::new("clean");
+        let a = t.add_kernel(Box::new(Stub("src")));
+        let b = t.add_kernel(Box::new(Stub("mid")));
+        let c = t.add_kernel(Box::new(Stub("snk")));
+        t.connect(Outlet::<u64>::new(a, 0), Inlet::new(b, 0), StreamConfig::default()).unwrap();
+        t.connect(Outlet::<u64>::new(b, 0), Inlet::new(c, 0), StreamConfig::default()).unwrap();
+        t
+    }
+
+    #[test]
+    fn clean_linear_graph_passes() {
+        let t = linear_topology();
+        let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+        assert!(r.is_clean(), "unexpected diagnostics: {}", r.render());
+    }
+
+    #[test]
+    fn a1_cycle_is_an_error_with_edge_provenance() {
+        let mut t = Topology::new("looped");
+        let a = t.add_kernel(Box::new(Stub("a")));
+        let b = t.add_kernel(Box::new(Stub("b")));
+        t.connect(Outlet::<u64>::new(a, 0), Inlet::new(b, 0), StreamConfig::default()).unwrap();
+        t.connect(Outlet::<u64>::new(b, 0), Inlet::new(a, 0), StreamConfig::default()).unwrap();
+        let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+        assert!(r.has_errors());
+        let d = r.errors().find(|d| d.rule == Rule::A1).expect("A1 diagnostic");
+        assert_eq!(d.rule.id(), "A1");
+        assert_eq!(d.kernels.len(), 2, "both cycle members in provenance");
+        assert_eq!(d.streams.len(), 2, "both cycle edges in provenance");
+        assert!(d.message.contains("via stream"), "cycle printed edge-by-edge: {}", d.message);
+    }
+
+    #[test]
+    fn a2_island_and_unreachable_are_errors() {
+        let mut t = linear_topology();
+        let _island = t.add_kernel(Box::new(Stub("island")));
+        // A two-node cycle off to the side: unreachable from the source.
+        let x = t.add_kernel(Box::new(Stub("x")));
+        let y = t.add_kernel(Box::new(Stub("y")));
+        t.connect(Outlet::<u64>::new(x, 0), Inlet::new(y, 0), StreamConfig::default()).unwrap();
+        t.connect(Outlet::<u64>::new(y, 0), Inlet::new(x, 0), StreamConfig::default()).unwrap();
+        let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+        let a2: Vec<_> = r.diagnostics.iter().filter(|d| d.rule == Rule::A2).collect();
+        assert!(
+            a2.iter().any(|d| d.kernels.iter().any(|(_, n)| n == "island")),
+            "island flagged: {}",
+            r.render()
+        );
+        assert!(
+            a2.iter().any(|d| d.kernels.iter().any(|(_, n)| n == "x" || n == "y")),
+            "unreachable cycle members flagged: {}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn a4_plan_checks_ids_types_and_frames() {
+        let t = Topology::new("plan");
+        let plan = vec![
+            NetEdgePlan::of::<u64>("feed:0", 7, 8),
+            NetEdgePlan::of::<u64>("feed:0", 7, 8), // duplicate id
+            NetEdgePlan::of::<u64>("feed:1", 8, 8), // wrong topology id
+            NetEdgePlan::untyped("feed:2", 7, "NotWire"),
+            NetEdgePlan::of::<Vec<f32>>("feed:3", 7, MAX_FRAME_BYTES), // burst > frame
+        ];
+        let ctx = AnalysisContext::new().with_net_plan(&plan);
+        let r = GraphAnalyzer::new().analyze(&t, &ctx);
+        let a4: Vec<_> = r.errors().filter(|d| d.rule == Rule::A4).collect();
+        assert!(a4.iter().any(|d| d.message.contains("appears 2 times")), "{}", r.render());
+        assert!(a4.iter().any(|d| d.message.contains("Hello handshake")), "{}", r.render());
+        assert!(a4.iter().any(|d| d.message.contains("NotWire")), "{}", r.render());
+        assert!(a4.iter().any(|d| d.message.contains("frame cap")), "{}", r.render());
+    }
+
+    #[test]
+    fn a5_small_instrumented_edge_warns_and_can_be_silenced() {
+        let mut t = Topology::new("tight");
+        let a = t.add_kernel(Box::new(Stub("src")));
+        let b = t.add_kernel(Box::new(Stub("snk")));
+        t.connect(
+            Outlet::<u64>::new(a, 0),
+            Inlet::new(b, 0),
+            StreamConfig::default().with_capacity(2),
+        )
+        .unwrap();
+        let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+        assert!(!r.has_errors(), "A5 is a warning: {}", r.render());
+        assert!(r.has_rule(Rule::A5), "{}", r.render());
+
+        let mut t = Topology::new("tight-quiet");
+        let a = t.add_kernel(Box::new(Stub("src")));
+        let b = t.add_kernel(Box::new(Stub("snk")));
+        t.connect(
+            Outlet::<u64>::new(a, 0),
+            Inlet::new(b, 0),
+            StreamConfig::default().with_capacity(2).silence_analysis(),
+        )
+        .unwrap();
+        let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+        assert!(r.is_clean(), "silenced edge stays quiet: {}", r.render());
+    }
+
+    #[test]
+    fn report_renders_rule_ids() {
+        let mut t = Topology::new("looped");
+        let a = t.add_kernel(Box::new(Stub("a")));
+        t.connect(Outlet::<u64>::new(a, 0), Inlet::new(a, 0), StreamConfig::default()).unwrap();
+        let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+        assert!(r.render().contains("error[A1]"), "{}", r.render());
+    }
+}

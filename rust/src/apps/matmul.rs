@@ -24,8 +24,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::analysis::{AnalysisReport, NetEdgePlan};
 use crate::config::MatmulConfig;
-use crate::elastic::{ElasticConfig, Replicable};
+use crate::elastic::{ElasticConfig, Replicable, ShedControl};
 use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session};
 use crate::kernel::{Kernel, KernelContext, KernelStatus};
 use crate::net::{
@@ -368,14 +369,24 @@ pub fn run_matmul(cfg: &MatmulConfig, opts: RunOptions) -> Result<MatmulRun> {
     }
 }
 
-/// The elastic wiring: one replicable dot stage under the control plane,
-/// assembled as a linear [`Flow`] chain (no port indices anywhere).
-fn run_matmul_elastic(
+/// An assembled elastic wiring plus the handles a run needs — shared by
+/// [`run_matmul`] and [`verify_matmul`] so the analyzed topology is the
+/// executed topology, byte for byte.
+struct ElasticWiring {
+    flow: Flow,
+    out_cell: Arc<std::sync::Mutex<Option<Vec<f32>>>>,
+    dot_stream: StreamId,
+    reduce_stream: StreamId,
+}
+
+/// Assemble the elastic wiring: one replicable dot stage under the
+/// control plane, a linear [`Flow`] chain (no port indices anywhere).
+fn build_matmul_elastic(
     cfg: &MatmulConfig,
-    mut opts: RunOptions,
     a: Arc<Vec<f32>>,
     b: Arc<Vec<f32>>,
-) -> Result<MatmulRun> {
+    shed: Option<Arc<ShedControl>>,
+) -> Result<ElasticWiring> {
     let n = cfg.n;
     let block_bytes = cfg.block_rows * n * 4;
     let edge_cfg = StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes);
@@ -392,7 +403,7 @@ fn run_matmul_elastic(
             next_row: 0,
             next_port: 0,
             n_out: 1,
-            shed: opts.shedders.first().map(|s| s.control.clone()),
+            shed,
         }))
         // Source → split (uninstrumented, like the static source → dot
         // edges); the controller still reads its counters for λ and
@@ -407,7 +418,7 @@ fn run_matmul_elastic(
             },
             edge_cfg.uninstrumented(),
         )?;
-    let s1 = chain.last_stream().expect("source → dot edge");
+    let dot_stream = chain.last_stream().expect("source → dot edge");
     // Merge → reduce (instrumented: the Fig. 16 measurement point).
     let flow = chain.sink(Box::new(Reducer {
         n,
@@ -415,16 +426,31 @@ fn run_matmul_elastic(
         out: out_cell.clone(),
         scratch: Vec::new(),
     }))?;
-    let s2 = flow.last_stream().expect("dot → reduce edge");
+    let reduce_stream = flow.last_stream().expect("dot → reduce edge");
+    Ok(ElasticWiring { flow, out_cell, dot_stream, reduce_stream })
+}
 
+fn run_matmul_elastic(
+    cfg: &MatmulConfig,
+    mut opts: RunOptions,
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+) -> Result<MatmulRun> {
+    let shed = opts.shedders.first().map(|s| s.control.clone());
+    let w = build_matmul_elastic(cfg, a, b, shed)?;
     // Single stage: the policy's max_replicas already is the worker cap,
     // so no global budget is set (it would never bind).
     if opts.elastic.is_none() {
         opts.elastic = Some(ElasticConfig { tick: Duration::from_millis(5), ..Default::default() });
     }
-    let report = Session::run(flow.finish(), opts)?;
-    let c = take_output(&out_cell)?;
-    Ok(MatmulRun { c, report, reduce_streams: vec![s2], dot_streams: vec![s1] })
+    let report = Session::run(w.flow.finish(), opts)?;
+    let c = take_output(&w.out_cell)?;
+    Ok(MatmulRun {
+        c,
+        report,
+        reduce_streams: vec![w.reduce_stream],
+        dot_streams: vec![w.dot_stream],
+    })
 }
 
 /// The original fixed fan-out (paper Fig. 11/16 topology) with `k` dot
@@ -437,6 +463,26 @@ fn run_matmul_static(
     a: Arc<Vec<f32>>,
     b: Arc<Vec<f32>>,
 ) -> Result<MatmulRun> {
+    let w = build_matmul_static(cfg, k, a, b)?;
+    let report = Session::run(w.flow.finish(), opts)?;
+    let c = take_output(&w.out_cell)?;
+    Ok(MatmulRun { c, report, reduce_streams: w.reduce_streams, dot_streams: w.dot_streams })
+}
+
+/// The assembled static fan, twin of [`ElasticWiring`].
+struct StaticWiring {
+    flow: Flow,
+    out_cell: Arc<std::sync::Mutex<Option<Vec<f32>>>>,
+    dot_streams: Vec<StreamId>,
+    reduce_streams: Vec<StreamId>,
+}
+
+fn build_matmul_static(
+    cfg: &MatmulConfig,
+    k: usize,
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+) -> Result<StaticWiring> {
     let n = cfg.n;
     let block_bytes = cfg.block_rows * n * 4;
     let edge_cfg = StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes);
@@ -473,15 +519,12 @@ fn run_matmul_static(
         edge_cfg,
     )?;
     let reduce_streams = flow.last_streams().to_vec();
-
-    let report = Session::run(flow.finish(), opts)?;
-    let c = take_output(&out_cell)?;
-    Ok(MatmulRun { c, report, reduce_streams, dot_streams })
+    Ok(StaticWiring { flow, out_cell, dot_streams, reduce_streams })
 }
 
 fn take_output(cell: &Arc<std::sync::Mutex<Option<Vec<f32>>>>) -> Result<Vec<f32>> {
     cell.lock()
-        .unwrap()
+        .unwrap_or_else(|e| e.into_inner())
         .take()
         .ok_or_else(|| SfError::Scheduler("reducer produced no output".into()))
 }
@@ -606,20 +649,42 @@ pub fn run_matmul_sharded(
         return Err(SfError::Config("matmul: shards must be > 0".into()));
     }
     let a = Arc::new(random_matrix(cfg.n, cfg.seed));
-    let n = cfg.n;
-    let block_rows = cfg.block_rows;
     let tid = matmul_topology_id(cfg, shards);
 
     let mut session = ShardedSession::bind(listen, tid)?;
-    let mut feed_specs: Vec<ConnSpec> =
+    let feed_specs: Vec<ConnSpec> =
         (0..shards).map(|i| session.expect_edge(format!("feed:{i}"))).collect();
-    let mut result_specs: Vec<ConnSpec> =
+    let result_specs: Vec<ConnSpec> =
         (0..shards).map(|i| session.expect_edge(format!("results:{i}"))).collect();
     let addr = session.local_addr().to_string();
     for i in 0..shards {
         session.spawn_worker(&mm_worker_args(cfg, shards, i, &addr))?;
     }
 
+    let shed = opts.shedders.first().map(|s| s.control.clone());
+    let (topo, out_cell, reduce_streams) =
+        matmul_coordinator_topology(cfg, shards, feed_specs, result_specs, a, shed)?;
+    let report = Session::run(topo, opts)?;
+    let workers = session.finish();
+    let c = take_output(&out_cell)?;
+    Ok(ShardedMatmulRun { c, report, reduce_streams, workers })
+}
+
+/// Assemble the coordinator-side topology of a sharded run over
+/// already-resolved edge specs. Constructing `NetSink`/`NetSource`
+/// kernels never dials — sockets open at run — so [`verify_matmul`] can
+/// feed this placeholder specs and analyze the identical wiring.
+#[allow(clippy::type_complexity)]
+fn matmul_coordinator_topology(
+    cfg: &MatmulConfig,
+    shards: usize,
+    mut feed_specs: Vec<ConnSpec>,
+    mut result_specs: Vec<ConnSpec>,
+    a: Arc<Vec<f32>>,
+    shed: Option<Arc<ShedControl>>,
+) -> Result<(Topology, Arc<std::sync::Mutex<Option<Vec<f32>>>>, Vec<StreamId>)> {
+    let n = cfg.n;
+    let block_rows = cfg.block_rows;
     let block_bytes = block_rows * n * 4;
     let edge_cfg = StreamConfig::default().with_capacity(cfg.capacity).with_item_bytes(block_bytes);
     let out_cell = Arc::new(std::sync::Mutex::new(None));
@@ -632,7 +697,7 @@ pub fn run_matmul_sharded(
         next_row: 0,
         next_port: 0,
         n_out: 1,
-        shed: opts.shedders.first().map(|s| s.control.clone()),
+        shed,
     }));
     let router = topo.add_kernel(Box::new(ShardRouter::<RowBlock>::new(
         "shard_router",
@@ -672,11 +737,78 @@ pub fn run_matmul_sharded(
         reduce_streams.push(s);
         topo.register_net_edge(stats);
     }
+    Ok((topo, out_cell, reduce_streams))
+}
 
-    let report = Session::run(topo, opts)?;
-    let workers = session.finish();
-    let c = take_output(&out_cell)?;
-    Ok(ShardedMatmulRun { c, report, reduce_streams, workers })
+/// Placeholder dial specs for assembling a coordinator wiring that will
+/// be analyzed, never run.
+fn placeholder_specs(prefix: &str, shards: usize, tid: u64) -> Vec<ConnSpec> {
+    (0..shards)
+        .map(|i| ConnSpec::Connect {
+            addr: "127.0.0.1:0".to_string(),
+            topology_id: tid,
+            edge_id: format!("{prefix}:{i}"),
+            retries: 0,
+        })
+        .collect()
+}
+
+/// The cross-process edge plan of a sharded matmul deployment, as rule A4
+/// validates it: one `feed:i` / `results:i` pair per shard, all carrying
+/// the same topology fingerprint.
+pub fn matmul_shard_plan(cfg: &MatmulConfig, shards: usize) -> Vec<NetEdgePlan> {
+    let tid = matmul_topology_id(cfg, shards);
+    // One encoded block: start + rows + data length header + payload.
+    let block_bytes = cfg.block_rows * cfg.n * 4 + 24;
+    (0..shards)
+        .flat_map(|i| {
+            [
+                NetEdgePlan::of::<RowBlock>(format!("feed:{i}"), tid, block_bytes),
+                NetEdgePlan::of::<ResultBlock>(format!("results:{i}"), tid, block_bytes),
+            ]
+        })
+        .collect()
+}
+
+/// Assemble the configured matmul wiring — elastic, static, or (with
+/// `shards`) the sharded coordinator — without executing it, and run the
+/// pre-run analyzer over it. Backs `streamflow verify --app matmul`.
+pub fn verify_matmul(
+    cfg: &MatmulConfig,
+    shards: Option<usize>,
+    opts: &RunOptions,
+) -> Result<AnalysisReport> {
+    if cfg.n == 0 || cfg.dot_kernels == 0 || cfg.block_rows == 0 {
+        return Err(SfError::Config("matmul: n, dot_kernels, block_rows must be > 0".into()));
+    }
+    if cfg.static_degree == Some(0) {
+        return Err(SfError::Config("matmul: static_degree must be > 0".into()));
+    }
+    let a = Arc::new(random_matrix(cfg.n, cfg.seed));
+    match shards {
+        Some(0) => Err(SfError::Config("matmul: shards must be > 0".into())),
+        Some(shards) => {
+            let tid = matmul_topology_id(cfg, shards);
+            let (topo, _out, _streams) = matmul_coordinator_topology(
+                cfg,
+                shards,
+                placeholder_specs("feed", shards, tid),
+                placeholder_specs("results", shards, tid),
+                a,
+                None,
+            )?;
+            let plan = matmul_shard_plan(cfg, shards);
+            Ok(Session::verify(&topo, opts, &plan))
+        }
+        None => {
+            let b = Arc::new(random_matrix(cfg.n, cfg.seed ^ 0xFEED));
+            let topo = match cfg.static_degree {
+                Some(k) => build_matmul_static(cfg, k, a, b)?.flow.finish(),
+                None => build_matmul_elastic(cfg, a, b, None)?.flow.finish(),
+            };
+            Ok(Session::verify(&topo, opts, &[]))
+        }
+    }
 }
 
 /// Worker side of the sharded run (the hidden `mmworker` subcommand):

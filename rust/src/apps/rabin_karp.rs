@@ -26,8 +26,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::analysis::{AnalysisReport, NetEdgePlan};
 use crate::config::RabinKarpConfig;
-use crate::elastic::{ElasticConfig, Replicable};
+use crate::elastic::{ElasticConfig, Replicable, ShedControl};
 use crate::flow::{Flow, Inlet, Outlet, RunOptions, Session};
 use crate::net::{
     ConnSpec, FrameError, NetEdgeStats, NetSink, NetSource, ShardMerge, ShardRouter,
@@ -447,11 +448,35 @@ fn run_rabin_karp_elastic(
     corpus: Arc<Vec<u8>>,
     pattern: Vec<u8>,
 ) -> Result<RabinKarpRun> {
+    let pool = cfg.hash_kernels + cfg.verify_kernels;
+    let shed = opts.shedders.first().map(|s| s.control.clone());
+    let (flow, matches_cell, s_hv) = build_rabin_karp_elastic(cfg, corpus, pattern, shed)?;
+    if opts.elastic.is_none() {
+        opts.elastic = Some(ElasticConfig {
+            tick: Duration::from_millis(5),
+            worker_budget: crate::placement::BudgetPolicy::Fixed(pool),
+            ..Default::default()
+        });
+    }
+    let report = Session::run(flow.finish(), opts)?;
+    let matches = finish_matches(&matches_cell);
+    Ok(RabinKarpRun { matches, report, verify_streams: vec![s_hv] })
+}
+
+/// Assemble the elastic two-stage wiring — shared by the run and verify
+/// paths so the analyzed topology is the executed topology.
+#[allow(clippy::type_complexity)]
+fn build_rabin_karp_elastic(
+    cfg: &RabinKarpConfig,
+    corpus: Arc<Vec<u8>>,
+    pattern: Vec<u8>,
+    shed: Option<Arc<ShedControl>>,
+) -> Result<(Flow, Arc<std::sync::Mutex<Vec<usize>>>, StreamId)> {
     // One shared worker pool of n + j threads (what the static mesh would
     // pin): either stage may claim up to the whole pool, and the global
-    // `worker_budget` below is the binding constraint — the coordinated
-    // policy routes pool capacity to whichever stage is the bottleneck
-    // (in practice the hash stage; verify is candidate-starved).
+    // `worker_budget` the caller installs is the binding constraint — the
+    // coordinated policy routes pool capacity to whichever stage is the
+    // bottleneck (in practice the hash stage; verify is candidate-starved).
     let pool = cfg.hash_kernels + cfg.verify_kernels;
     let hash_cfg = cfg.hash_tuning.stage_config(pool, cfg.capacity);
     let verify_cfg = cfg.verify_tuning.stage_config(pool, cfg.capacity);
@@ -477,7 +502,7 @@ fn run_rabin_karp_elastic(
             next_off: 0,
             next_port: 0,
             n_out: 1,
-            shed: opts.shedders.first().map(|s| s.control.clone()),
+            shed,
         }))
         // Segmenter → hash stage (uninstrumented, like the static
         // seg→hash edges; the controller reads its counters for λ and
@@ -506,17 +531,7 @@ fn run_rabin_karp_elastic(
             .with_item_bytes(std::mem::size_of::<usize>())
             .uninstrumented(),
     )?;
-
-    if opts.elastic.is_none() {
-        opts.elastic = Some(ElasticConfig {
-            tick: Duration::from_millis(5),
-            worker_budget: crate::placement::BudgetPolicy::Fixed(pool),
-            ..Default::default()
-        });
-    }
-    let report = Session::run(flow.finish(), opts)?;
-    let matches = finish_matches(&matches_cell);
-    Ok(RabinKarpRun { matches, report, verify_streams: vec![s_hv] })
+    Ok((flow, matches_cell, s_hv))
 }
 
 /// The original fixed mesh (paper Fig. 12/17 topology) with `n` hash and
@@ -937,21 +952,59 @@ pub fn run_rabin_karp_sharded(
         return Err(SfError::Config("rabin-karp: kernel counts must be > 0".into()));
     }
     let corpus = Arc::new(foobar_corpus(cfg.corpus_bytes));
-    let m = pattern.len();
-    let overlap = m - 1;
     let tid = rabin_karp_topology_id(cfg, shards);
 
     let mut session = ShardedSession::bind(listen, tid)?;
     // Register every route before any worker can dial in.
-    let mut feed_specs: Vec<ConnSpec> =
+    let feed_specs: Vec<ConnSpec> =
         (0..shards).map(|i| session.expect_edge(format!("feed:{i}"))).collect();
-    let mut result_specs: Vec<ConnSpec> =
+    let result_specs: Vec<ConnSpec> =
         (0..shards).map(|i| session.expect_edge(format!("results:{i}"))).collect();
     let addr = session.local_addr().to_string();
     for i in 0..shards {
         session.spawn_worker(&rk_worker_args(cfg, shards, i, &addr))?;
     }
 
+    let shed = opts.shedders.first().map(|s| s.control.clone());
+    let (topo, matches_cell, s_mv) = rabin_karp_coordinator_topology(
+        cfg,
+        shards,
+        feed_specs,
+        result_specs,
+        corpus,
+        pattern,
+        shed,
+    )?;
+
+    if opts.elastic.is_none() {
+        opts.elastic = Some(ElasticConfig {
+            tick: Duration::from_millis(5),
+            worker_budget: crate::placement::BudgetPolicy::Fixed(cfg.verify_kernels),
+            ..Default::default()
+        });
+    }
+    let report = Session::run(topo, opts)?;
+    let workers = session.finish();
+    let matches = finish_matches(&matches_cell);
+    Ok(ShardedRabinKarpRun { matches, report, verify_streams: vec![s_mv], workers })
+}
+
+/// Assemble the coordinator-side topology of a sharded run over
+/// already-resolved edge specs. Constructing `NetSink`/`NetSource`
+/// kernels never dials — sockets open at run — so [`verify_rabin_karp`]
+/// can feed this placeholder specs and analyze the identical wiring.
+#[allow(clippy::type_complexity)]
+fn rabin_karp_coordinator_topology(
+    cfg: &RabinKarpConfig,
+    shards: usize,
+    mut feed_specs: Vec<ConnSpec>,
+    mut result_specs: Vec<ConnSpec>,
+    corpus: Arc<Vec<u8>>,
+    pattern: Vec<u8>,
+    shed: Option<Arc<ShedControl>>,
+) -> Result<(Topology, Arc<std::sync::Mutex<Vec<usize>>>, StreamId)> {
+    let m = pattern.len();
+    let overlap = m - 1;
     let batch_bytes = (cfg.segment_bytes / m).max(1) * std::mem::size_of::<usize>();
     let seg_cfg = StreamConfig::default()
         .with_capacity(cfg.capacity)
@@ -970,7 +1023,7 @@ pub fn run_rabin_karp_sharded(
         next_off: 0,
         next_port: 0,
         n_out: 1,
-        shed: opts.shedders.first().map(|s| s.control.clone()),
+        shed,
     }));
     // Key = segment index (offsets are overlap-shifted, so add it back):
     // deterministic round-robin over shards.
@@ -1015,18 +1068,80 @@ pub fn run_rabin_karp_sharded(
             .with_item_bytes(std::mem::size_of::<usize>())
             .uninstrumented(),
     )?;
+    Ok((topo, matches_cell, s_mv))
+}
 
-    if opts.elastic.is_none() {
-        opts.elastic = Some(ElasticConfig {
-            tick: Duration::from_millis(5),
-            worker_budget: crate::placement::BudgetPolicy::Fixed(cfg.verify_kernels),
-            ..Default::default()
-        });
+/// Placeholder dial specs for assembling a coordinator wiring that will
+/// be analyzed, never run.
+fn rk_placeholder_specs(prefix: &str, shards: usize, tid: u64) -> Vec<ConnSpec> {
+    (0..shards)
+        .map(|i| ConnSpec::Connect {
+            addr: "127.0.0.1:0".to_string(),
+            topology_id: tid,
+            edge_id: format!("{prefix}:{i}"),
+            retries: 0,
+        })
+        .collect()
+}
+
+/// The cross-process edge plan of a sharded Rabin–Karp deployment, as
+/// rule A4 validates it: `feed:i` carries segments out, `results:i`
+/// candidate batches back, all under one topology fingerprint.
+pub fn rabin_karp_shard_plan(cfg: &RabinKarpConfig, shards: usize) -> Vec<NetEdgePlan> {
+    let tid = rabin_karp_topology_id(cfg, shards);
+    let m = cfg.pattern.len().max(1);
+    // One encoded segment: offset + data length header + payload (incl.
+    // the m−1 overlap tail).
+    let segment_bytes = cfg.segment_bytes + m + 24;
+    let batch_bytes = (cfg.segment_bytes / m).max(1) * std::mem::size_of::<usize>() + 8;
+    (0..shards)
+        .flat_map(|i| {
+            [
+                NetEdgePlan::of::<Segment>(format!("feed:{i}"), tid, segment_bytes),
+                NetEdgePlan::of::<Vec<usize>>(format!("results:{i}"), tid, batch_bytes),
+            ]
+        })
+        .collect()
+}
+
+/// Assemble the configured Rabin–Karp wiring — elastic or (with `shards`)
+/// the sharded coordinator — without executing it, and run the pre-run
+/// analyzer over it. Backs `streamflow verify --app rabinkarp`.
+pub fn verify_rabin_karp(
+    cfg: &RabinKarpConfig,
+    shards: Option<usize>,
+    opts: &RunOptions,
+) -> Result<AnalysisReport> {
+    let pattern = cfg.pattern.as_bytes().to_vec();
+    if pattern.is_empty() {
+        return Err(SfError::Config("rabin-karp: empty pattern".into()));
     }
-    let report = Session::run(topo, opts)?;
-    let workers = session.finish();
-    let matches = finish_matches(&matches_cell);
-    Ok(ShardedRabinKarpRun { matches, report, verify_streams: vec![s_mv], workers })
+    if cfg.hash_kernels == 0 || cfg.verify_kernels == 0 {
+        return Err(SfError::Config("rabin-karp: kernel counts must be > 0".into()));
+    }
+    let corpus = Arc::new(foobar_corpus(cfg.corpus_bytes));
+    match shards {
+        Some(0) => Err(SfError::Config("rabin-karp: shards must be > 0".into())),
+        Some(shards) => {
+            let tid = rabin_karp_topology_id(cfg, shards);
+            let (topo, _cell, _s) = rabin_karp_coordinator_topology(
+                cfg,
+                shards,
+                rk_placeholder_specs("feed", shards, tid),
+                rk_placeholder_specs("results", shards, tid),
+                corpus,
+                pattern,
+                None,
+            )?;
+            let plan = rabin_karp_shard_plan(cfg, shards);
+            Ok(Session::verify(&topo, opts, &plan))
+        }
+        None => {
+            let (flow, _cell, _s) = build_rabin_karp_elastic(cfg, corpus, pattern, None)?;
+            let topo = flow.finish();
+            Ok(Session::verify(&topo, opts, &[]))
+        }
+    }
 }
 
 /// Worker side of the sharded run (the hidden `rkworker` subcommand):

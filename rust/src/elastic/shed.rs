@@ -126,3 +126,91 @@ mod tests {
         assert_eq!(c.shed_total(), 7);
     }
 }
+
+/// Model-checks the knob's cross-thread protocol: the controller is the
+/// *single writer* of `level` (its raise/lower are load-then-store, not
+/// atomic RMW — sound only under that rule), the source concurrently
+/// reads the level and appends to the shed counter with atomic adds.
+/// Checked invariants: a read level never exceeds [`SHED_LEVEL_MAX`],
+/// the final level equals the controller's sequential walk, and no
+/// `record_shed` increment is lost.
+///
+/// Off by default — same gating as the queue models: the dedicated CI
+/// loom lane runs `RUSTFLAGS="--cfg loom" cargo test --features loom
+/// --release --lib elastic::shed`.
+#[cfg(all(test, feature = "loom", loom))]
+mod loom_model {
+    use loom::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+    use loom::sync::Arc;
+
+    const MAX: u8 = super::SHED_LEVEL_MAX;
+
+    struct Proto {
+        level: AtomicU8,
+        shed: AtomicU64,
+    }
+
+    impl Proto {
+        // The real ShedControl ops, transcribed onto loom atomics.
+        fn level(&self) -> u8 {
+            self.level.load(Ordering::Acquire)
+        }
+        fn set_level(&self, level: u8) -> u8 {
+            let l = level.min(MAX);
+            self.level.store(l, Ordering::Release);
+            l
+        }
+        fn raise(&self) -> u8 {
+            self.set_level(self.level().saturating_add(1))
+        }
+        fn lower(&self) -> u8 {
+            self.set_level(self.level().saturating_sub(1))
+        }
+        fn quota(&self, n: u64) -> u64 {
+            n * self.level() as u64 / (MAX as u64 + 1)
+        }
+    }
+
+    #[test]
+    fn single_writer_level_vs_concurrent_reads() {
+        loom::model(|| {
+            let p = Arc::new(Proto { level: AtomicU8::new(0), shed: AtomicU64::new(0) });
+
+            // Controller: the sole writer walks the level up twice and
+            // back down once (ends at 1).
+            let c = p.clone();
+            let controller = loom::thread::spawn(move || {
+                c.raise();
+                c.raise();
+                c.lower();
+            });
+
+            // Source: reads the knob per burst and audits what it drops.
+            let s = p.clone();
+            let source = loom::thread::spawn(move || {
+                let mut dropped = 0u64;
+                for _ in 0..2 {
+                    let lvl = s.level();
+                    assert!(lvl <= MAX, "level escaped the clamp: {lvl}");
+                    let q = s.quota(10);
+                    assert!(
+                        q <= 10 * MAX as u64 / (MAX as u64 + 1),
+                        "quota exceeds the top-level fraction: {q}"
+                    );
+                    s.shed.fetch_add(q, Ordering::Relaxed);
+                    dropped += q;
+                }
+                dropped
+            });
+
+            controller.join().unwrap();
+            let dropped = source.join().unwrap();
+            assert_eq!(p.level(), 1, "single-writer walk must land on 1");
+            assert_eq!(
+                p.shed.load(Ordering::Relaxed),
+                dropped,
+                "lost a record_shed increment"
+            );
+        });
+    }
+}

@@ -35,6 +35,10 @@ pub enum SfError {
 
     /// I/O wrapper.
     Io(std::io::Error),
+
+    /// The pre-run graph analyzer rejected the topology. Carries the full
+    /// report (boxed — it is much larger than the other variants).
+    Analysis(Box<crate::analysis::AnalysisReport>),
 }
 
 impl fmt::Display for SfError {
@@ -51,6 +55,7 @@ impl fmt::Display for SfError {
                 write!(f, "json error at byte {offset}: {message}")
             }
             SfError::Io(e) => write!(f, "io error: {e}"),
+            SfError::Analysis(report) => write!(f, "analysis error: {}", report.render()),
         }
     }
 }

@@ -734,6 +734,29 @@ impl Session {
     pub fn run_flow(flow: Flow, opts: RunOptions) -> Result<RunReport> {
         Self::run(flow.finish(), opts)
     }
+
+    /// Statically analyze `topo` under `opts` *without executing it*:
+    /// the exact [`GraphAnalyzer`](crate::analysis::GraphAnalyzer) pass
+    /// [`Session::run`] would perform before spawning, plus the caller's
+    /// cross-process edge plan (rule A4). Backs the `streamflow verify`
+    /// CLI subcommand.
+    pub fn verify(
+        topo: &Topology,
+        opts: &RunOptions,
+        net_plan: &[crate::analysis::NetEdgePlan],
+    ) -> crate::analysis::AnalysisReport {
+        let elastic_default;
+        let elastic_cfg = match &opts.elastic {
+            Some(cfg) => Some(cfg),
+            None if !topo.elastic_stages().is_empty() => {
+                elastic_default = crate::elastic::ElasticConfig::default();
+                Some(&elastic_default)
+            }
+            None => None,
+        };
+        let ctx = crate::analysis::AnalysisContext { elastic: elastic_cfg, net_plan };
+        crate::analysis::GraphAnalyzer::new().analyze(topo, &ctx)
+    }
 }
 
 #[cfg(test)]

@@ -58,7 +58,19 @@
 //! * [`apps`] — the two full applications: dense matrix multiply and
 //!   Rabin–Karp string search.
 //! * [`runtime`] — PJRT artifact loading/execution (HLO text interchange).
+//! * [`analysis`] — pre-run static analysis: the [`analysis::GraphAnalyzer`]
+//!   rejects structurally-deadlocked or unreachable wirings and flags
+//!   configurations under which the §III non-blocking assumption can never
+//!   hold, before any kernel thread spawns (also exposed as the
+//!   `streamflow verify` CLI subcommand).
 
+// Verification wall: no implicit unsafe inside `unsafe fn`, and every
+// unsafe block must carry a `// SAFETY:` justification (enforced with
+// `-D warnings` in the CI `analysis` lane).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+pub mod analysis;
 pub mod bench;
 pub mod campaign;
 pub mod cli;
@@ -93,6 +105,7 @@ pub use error::{Result, SfError};
 
 /// Convenience re-exports for application authors.
 pub mod prelude {
+    pub use crate::analysis::{AnalysisContext, AnalysisReport, GraphAnalyzer, NetEdgePlan};
     pub use crate::elastic::{
         ElasticPolicy, ElasticStageConfig, Replicable, ShedControl, SupervisorPolicy,
     };

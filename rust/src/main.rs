@@ -7,6 +7,8 @@
 //! * `dualphase`    — one dual-phase run (Fig. 10/14/15 setup)
 //! * `matmul`       — the matrix-multiply application (§V-B1)
 //! * `rabinkarp`    — the Rabin–Karp application (§V-B2)
+//! * `verify`       — statically analyze an application wiring without
+//!   running it (graph analyzer rules A1–A5)
 //! * `artifacts`    — validate the AOT artifact directory end to end
 //!
 //! With `--shards N` the two applications run distributed: the
@@ -40,6 +42,7 @@ fn main() {
         Some("dualphase") => cmd_dualphase(&args),
         Some("matmul") => cmd_matmul(&args),
         Some("rabinkarp") => cmd_rabinkarp(&args),
+        Some("verify") => cmd_verify(&args),
         Some("artifacts") => cmd_artifacts(&args),
         // Hidden worker entry points for the sharded runs (spawned by the
         // coordinator; not part of the human-facing surface).
@@ -47,8 +50,9 @@ fn main() {
         Some("mmworker") => cmd_mmworker(&args),
         _ => {
             eprintln!(
-                "usage: streamflow <probe|microbench|dualphase|matmul|rabinkarp|artifacts> \
+                "usage: streamflow <probe|microbench|dualphase|matmul|rabinkarp|verify|artifacts> \
                  [--key value]...\n\
+                 static analysis: verify [--app matmul|rabinkarp|all] [--shards N] [--static]\n\
                  telemetry: [--metrics-addr HOST:PORT] [--events-jsonl PATH] \
                  [--trace-out PATH]\n\
                  fault tolerance (matmul/rabinkarp): [--deadline SECS] [--shed] \
@@ -382,6 +386,66 @@ fn cmd_matmul(args: &Args) -> i32 {
         Err(e) => {
             eprintln!("error: {e}");
             1
+        }
+    }
+}
+
+/// `streamflow verify [--app matmul|rabinkarp|all] [--shards N] [--static]`:
+/// assemble the selected application wiring(s) exactly as the matching
+/// run command would — including the sharded coordinator topology when
+/// `--shards` is given, over placeholder edge specs that never dial —
+/// and run the pre-run graph analyzer over them without executing.
+/// Exit 0 when every wiring is error-free, 1 on analyzer errors.
+fn cmd_verify(args: &Args) -> i32 {
+    let app: String = args.get_or("app", "all".to_string()).unwrap_or_else(|_| "all".to_string());
+    let shards: usize = args.get_or("shards", 0).unwrap_or(0);
+    let shards = (shards > 0).then_some(shards);
+    if !matches!(app.as_str(), "matmul" | "rabinkarp" | "all") {
+        eprintln!("error: --app must be matmul, rabinkarp, or all (got '{app}')");
+        return 2;
+    }
+    let mut code = 0;
+    if app == "matmul" || app == "all" {
+        let mut cfg = MatmulConfig::default();
+        cfg.n = args.get_or("n", cfg.n).unwrap_or(cfg.n);
+        cfg.dot_kernels = args.get_or("dots", cfg.dot_kernels).unwrap_or(cfg.dot_kernels);
+        if args.has_flag("static") {
+            cfg.static_degree = Some(cfg.dot_kernels);
+        }
+        let Some(opts) = app_run_options(args, cfg.dot_kernels) else {
+            return 2;
+        };
+        code = code.max(print_verify("matmul", matmul::verify_matmul(&cfg, shards, &opts)));
+    }
+    if app == "rabinkarp" || app == "all" {
+        let mut cfg = RabinKarpConfig::default();
+        cfg.corpus_bytes = args.get_or("bytes", cfg.corpus_bytes).unwrap_or(cfg.corpus_bytes);
+        cfg.hash_kernels = args.get_or("hash", cfg.hash_kernels).unwrap_or(cfg.hash_kernels);
+        cfg.verify_kernels =
+            args.get_or("verify", cfg.verify_kernels).unwrap_or(cfg.verify_kernels);
+        let Some(opts) = app_run_options(args, cfg.hash_kernels + cfg.verify_kernels) else {
+            return 2;
+        };
+        code = code
+            .max(print_verify("rabinkarp", rabin_karp::verify_rabin_karp(&cfg, shards, &opts)));
+    }
+    code
+}
+
+/// Print one wiring's analysis report; map it to the process exit code.
+fn print_verify(label: &str, result: streamflow::Result<AnalysisReport>) -> i32 {
+    match result {
+        Ok(report) => {
+            println!("[{label}] {}", report.render());
+            if report.has_errors() {
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {label}: {e}");
+            2
         }
     }
 }

@@ -185,7 +185,10 @@ impl Wire for Vec<usize> {
         if n.saturating_mul(8) > MAX_FRAME_BYTES {
             return Err(FrameError::Malformed(format!("usize vec of {n} exceeds frame cap")));
         }
-        let mut out = Vec::with_capacity(n);
+        // Reserve no more than the buffered bytes can actually yield — a
+        // hostile count inside a tiny frame must fail on decode, not
+        // allocate the claimed capacity up front.
+        let mut out = Vec::with_capacity(n.min(r.remaining() / 8));
         for _ in 0..n {
             out.push(usize::decode(r)?);
         }
@@ -205,7 +208,9 @@ impl Wire for Vec<f32> {
         if n.saturating_mul(4) > MAX_FRAME_BYTES {
             return Err(FrameError::Malformed(format!("f32 vec of {n} exceeds frame cap")));
         }
-        let mut out = Vec::with_capacity(n);
+        // Same clamp as Vec<usize>: never reserve beyond the buffered
+        // bytes on the strength of an unvalidated count.
+        let mut out = Vec::with_capacity(n.min(r.remaining() / 4));
         for _ in 0..n {
             out.push(f32::decode(r)?);
         }
@@ -464,6 +469,57 @@ mod tests {
         let mut dec = FrameDecoder::new();
         dec.push_bytes(&(u32::MAX).to_le_bytes());
         assert!(matches!(dec.poll(), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn hostile_u32_max_length_header_rejected_before_reservation() {
+        // A hostile peer sends only the 4-byte length prefix claiming a
+        // u32::MAX-byte frame (plus one body byte so the header check has
+        // company). The decoder must reject it against MAX_FRAME_BYTES
+        // from the length word alone — without ever buffering toward, or
+        // reserving, the claimed size.
+        let mut dec = FrameDecoder::new();
+        let mut wire = u32::MAX.to_le_bytes().to_vec();
+        wire.push(KIND_DATA);
+        dec.push_bytes(&wire);
+        let before = dec.pending_bytes();
+        assert_eq!(before, 5, "only the received bytes are buffered");
+        assert!(matches!(dec.poll(), Err(FrameError::Malformed(_))));
+        // One past the cap fails the same way; the cap itself is the
+        // largest accepted prefix (it then just waits for the body).
+        let mut dec = FrameDecoder::new();
+        dec.push_bytes(&((MAX_FRAME_BYTES as u32 + 1).to_le_bytes()));
+        assert!(matches!(dec.poll(), Err(FrameError::Malformed(_))));
+        let mut dec = FrameDecoder::new();
+        dec.push_bytes(&((MAX_FRAME_BYTES as u32).to_le_bytes()));
+        assert!(matches!(dec.poll(), Ok(None)));
+    }
+
+    #[test]
+    fn hostile_vec_count_fails_without_upfront_reservation() {
+        // Body claims 8M usizes (exactly the 64MiB cap, so the cap check
+        // passes) but carries no elements: the clamped reservation makes
+        // this fail as Truncated after a tiny allocation, instead of
+        // reserving 64MiB on a hostile count.
+        let mut body = Vec::new();
+        put_u32(&mut body, (MAX_FRAME_BYTES / 8) as u32);
+        let mut r = WireReader::new(&body);
+        assert_eq!(Vec::<usize>::decode(&mut r), Err(FrameError::Truncated));
+
+        // Over the cap is Malformed from the count alone.
+        let mut body = Vec::new();
+        put_u32(&mut body, u32::MAX);
+        let mut r = WireReader::new(&body);
+        assert!(matches!(Vec::<usize>::decode(&mut r), Err(FrameError::Malformed(_))));
+        let mut r = WireReader::new(&body);
+        assert!(matches!(Vec::<f32>::decode(&mut r), Err(FrameError::Malformed(_))));
+
+        // An honest short vector still round-trips through the clamp.
+        let v = vec![3usize, 1, 4, 1, 5];
+        let mut body = Vec::new();
+        v.encode(&mut body);
+        let mut r = WireReader::new(&body);
+        assert_eq!(Vec::<usize>::decode(&mut r).unwrap(), v);
     }
 
     #[test]

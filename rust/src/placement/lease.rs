@@ -60,6 +60,8 @@ fn pid_alive(pid: u32) -> bool {
     if pid == 0 || pid > i32::MAX as u32 {
         return false;
     }
+    // SAFETY: signal 0 performs only the existence/permission check —
+    // no signal is delivered to the target pid.
     let r = unsafe { libc::kill(pid as libc::pid_t, 0) };
     if r == 0 {
         return true;
@@ -138,6 +140,8 @@ impl BudgetLease {
         let mut file =
             OpenOptions::new().read(true).write(true).create(true).open(&self.path)?;
         let fd = file.as_raw_fd();
+        // SAFETY: `fd` is a valid open descriptor owned by `file`, which
+        // outlives the call.
         if unsafe { libc::flock(fd, libc::LOCK_EX) } != 0 {
             return Err(std::io::Error::last_os_error());
         }

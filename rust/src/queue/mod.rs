@@ -74,6 +74,10 @@ pub struct StreamConfig {
     /// ring; elastic lane queues default to [`QueueBackend::Segmented`]
     /// via `ElasticStageConfig::lane_backend`.
     pub backend: QueueBackend,
+    /// Suppress pre-run analyzer warnings (rule A5) on this edge. Set via
+    /// [`StreamConfig::silence_analysis`] when a deliberately tiny
+    /// instrumented queue is intended.
+    pub analysis_quiet: bool,
 }
 
 impl Default for StreamConfig {
@@ -84,6 +88,7 @@ impl Default for StreamConfig {
             instrument: true,
             capacity_overridden: false,
             backend: QueueBackend::default(),
+            analysis_quiet: false,
         }
     }
 }
@@ -107,6 +112,14 @@ impl StreamConfig {
 
     pub fn with_backend(mut self, backend: QueueBackend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Opt this edge out of pre-run analyzer warnings (rule A5). Use when
+    /// an instrumented queue smaller than one producer burst is deliberate
+    /// — e.g. a back-pressure probe edge.
+    pub fn silence_analysis(mut self) -> Self {
+        self.analysis_quiet = true;
         self
     }
 }

@@ -229,6 +229,8 @@ pub struct SegmentedSpsc<T> {
 // thread; the free stack tolerates the prefault third-party pusher (see
 // module docs on ABA).
 unsafe impl<T: Send> Send for SegmentedSpsc<T> {}
+// SAFETY: same argument as Send above — shared references only expose the
+// SPSC protocol plus the atomic free stack.
 unsafe impl<T: Send> Sync for SegmentedSpsc<T> {}
 
 impl<T: Send> SegmentedSpsc<T> {
@@ -333,7 +335,8 @@ impl<T: Send> SegmentedSpsc<T> {
                 break;
             }
             let seg = Segment::<T>::alloc();
-            // First-touch every page of the segment. The slots are
+            // SAFETY: `seg` is a fresh, exclusively-owned allocation.
+            // First-touch every page of the segment: the slots are
             // MaybeUninit and the link word is re-nulled below, so a
             // byte-level zero of the whole allocation is sound.
             unsafe {
@@ -389,6 +392,8 @@ impl<T: Send> SegmentedSpsc<T> {
     fn push_free(&self, seg: *mut Segment<T>) {
         loop {
             let head = self.free.load(Ordering::Acquire);
+            // SAFETY: `seg` is exclusively ours until the CAS below
+            // publishes it onto the stack.
             unsafe { (*seg).next.store(head, Ordering::Relaxed) };
             if self
                 .free
@@ -409,6 +414,9 @@ impl<T: Send> SegmentedSpsc<T> {
             if head.is_null() {
                 return std::ptr::null_mut();
             }
+            // SAFETY: stack nodes are never freed while on the stack, and
+            // the single-popper rule keeps `head` alive and un-recycled
+            // between the load above and the CAS below (no ABA).
             let next = unsafe { (*head).next.load(Ordering::Relaxed) };
             if self
                 .free
@@ -440,6 +448,8 @@ impl<T: Send> SegmentedSpsc<T> {
         if self.free_len.load(Ordering::Relaxed) < self.free_target() {
             self.push_free(seg);
         } else {
+            // SAFETY: the consumer fully drained this segment and unlinked
+            // it from the live chain; it came from Box::into_raw in alloc().
             unsafe { drop(Box::from_raw(seg)) };
             self.counters.note_segment_freed();
         }
@@ -453,12 +463,15 @@ impl<T: Send> SegmentedSpsc<T> {
     fn write_slot(&self, st: &mut ProdState<T>, v: T) {
         if st.idx == SEG_SLOTS {
             let ns = self.take_segment();
-            // A reused segment's link word still points into the free
-            // stack — null it *before* linking so the consumer can never
-            // walk from the live chain into the free list.
+            // SAFETY: `ns` is exclusively ours until linked below. A reused
+            // segment's link word still points into the free stack — null
+            // it *before* linking so the consumer can never walk from the
+            // live chain into the free list.
             unsafe { (*ns).next.store(std::ptr::null_mut(), Ordering::Relaxed) };
-            // Link before publish; the consumer discovers `next` only
-            // via an Acquire tail load that postdates this store.
+            // SAFETY: `st.seg` is the producer-owned live tail segment and
+            // stays allocated until the consumer retires it. Link before
+            // publish; the consumer discovers `next` only via an Acquire
+            // tail load that postdates this store.
             unsafe { (*st.seg).next.store(ns, Ordering::Release) };
             st.seg = ns;
             st.idx = 0;
@@ -476,6 +489,9 @@ impl<T: Send> SegmentedSpsc<T> {
     #[inline]
     fn read_slot(&self, st: &mut ConsState<T>) -> T {
         if st.idx == SEG_SLOTS {
+            // SAFETY: `st.seg` is the consumer-owned live head segment; the
+            // caller established an item exists past it, so the producer
+            // linked `next` before publishing that item.
             let next = unsafe { (*st.seg).next.load(Ordering::Acquire) };
             debug_assert!(!next.is_null(), "published item but next segment missing");
             self.retire_segment(st.seg);
@@ -754,12 +770,19 @@ impl<T> Drop for SegmentedSpsc<T> {
         // Drop all published-but-unconsumed items.
         while remaining > 0 {
             if idx == SEG_SLOTS {
+                // SAFETY: items remain past this segment, so the producer
+                // linked `next` before publishing them; &mut self means no
+                // other thread can still reach the old segment.
                 let next = unsafe { (*seg).next.load(Ordering::Relaxed) };
+                // SAFETY: every slot was consumed or drained here; the
+                // segment came from Box::into_raw in alloc().
                 unsafe { drop(Box::from_raw(seg)) };
                 seg = next;
                 idx = 0;
                 continue;
             }
+            // SAFETY: slots in [cons.idx, tail) were published (written)
+            // and never consumed, so each holds an initialized T.
             unsafe {
                 (*(*seg).slots[idx].get()).assume_init_drop();
             }
@@ -768,14 +791,20 @@ impl<T> Drop for SegmentedSpsc<T> {
         }
         // Free the rest of the (now empty) live chain.
         while !seg.is_null() {
+            // SAFETY: &mut self — the chain is exclusively ours; each
+            // segment came from Box::into_raw in alloc().
             let next = unsafe { (*seg).next.load(Ordering::Relaxed) };
+            // SAFETY: see above; all items in it were already dropped.
             unsafe { drop(Box::from_raw(seg)) };
             seg = next;
         }
         // And the free stack.
         let mut f = *self.free.get_mut();
         while !f.is_null() {
+            // SAFETY: free-stack segments are empty and, under &mut self,
+            // exclusively ours; each came from Box::into_raw in alloc().
             let next = unsafe { (*f).next.load(Ordering::Relaxed) };
+            // SAFETY: see above.
             unsafe { drop(Box::from_raw(f)) };
             f = next;
         }
@@ -1077,6 +1106,7 @@ mod tests {
         assert_eq!(std::mem::align_of::<Segment<u64>>() % 64, 0);
         let seg = Segment::<u64>::alloc();
         assert_eq!(seg as usize % 64, 0, "allocated segment not aligned");
+        // SAFETY: fresh exclusively-owned allocation from Box::into_raw.
         unsafe { drop(Box::from_raw(seg)) };
     }
 }
@@ -1166,6 +1196,8 @@ mod loom_model {
                         q.segs[seg].next.store(got, Ordering::Release);
                         seg = got;
                     }
+                    // SAFETY: slot (seg, idx) is unpublished (tail == i),
+                    // so the consumer never touches it concurrently.
                     q.segs[seg].slots[idx].with_mut(|s| unsafe { *s = i + 1 });
                     q.tail.store(i + 1, Ordering::Release);
                 }
@@ -1216,6 +1248,8 @@ mod loom_model {
                     }
                     seg = next;
                 }
+                // SAFETY: head < tail was observed via Acquire, so the
+                // producer's write to this slot happened-before this read.
                 let v = p.segs[seg].slots[idx].with(|s| unsafe { *s });
                 assert_eq!(v, head + 1, "read an unpublished or recycled slot");
                 got.push(v);

@@ -253,6 +253,9 @@ pub struct SpscQueue<T> {
 // and at most one thread calls pop-side methods — makes the UnsafeCell
 // cursors data-race free; everything else is atomics.
 unsafe impl<T: Send> Send for SpscQueue<T> {}
+// SAFETY: same argument as Send above — shared references only expose the
+// single-producer/single-consumer protocol, whose cursor cells are never
+// touched by both sides.
 unsafe impl<T: Send> Sync for SpscQueue<T> {}
 
 /// Outcome of a non-blocking pop.
@@ -394,8 +397,10 @@ impl<T: Send> SpscQueue<T> {
     fn write_slot(&self, st: &mut ProdState<T>, v: T) {
         if st.idx == BLOCK {
             let nb = Block::alloc();
-            // Link before publish; the consumer discovers `next` only via
-            // an Acquire tail load that postdates this store.
+            // SAFETY: `st.block` is the producer-owned live tail block and
+            // stays allocated until the consumer retires it. Link before
+            // publish: the consumer discovers `next` only via an Acquire
+            // tail load that postdates this store.
             unsafe { (*st.block).next.store(nb, Ordering::Release) };
             st.block = nb;
             st.idx = 0;
@@ -413,6 +418,9 @@ impl<T: Send> SpscQueue<T> {
     #[inline]
     fn read_slot(&self, st: &mut ConsState<T>) -> T {
         if st.idx == BLOCK {
+            // SAFETY: `st.block` is the consumer-owned live head block; the
+            // caller established an item exists past it, so the producer
+            // linked `next` before publishing that item.
             let next = unsafe { (*st.block).next.load(Ordering::Acquire) };
             debug_assert!(!next.is_null(), "published item but next block missing");
             // SAFETY: we are past every slot of the old block, and the
@@ -727,12 +735,19 @@ impl<T> Drop for SpscQueue<T> {
         // Drop all published-but-unconsumed items.
         while remaining > 0 {
             if idx == BLOCK {
+                // SAFETY: items remain past this block, so the producer
+                // linked `next` before publishing them; &mut self means no
+                // other thread can still reach the old block.
                 let next = unsafe { (*block).next.load(Ordering::Relaxed) };
+                // SAFETY: every slot of this block was consumed or is being
+                // drained here; the block came from Box::into_raw in alloc().
                 unsafe { drop(Box::from_raw(block)) };
                 block = next;
                 idx = 0;
                 continue;
             }
+            // SAFETY: slots in [cons.idx, tail) were published (written)
+            // and never consumed, so each holds an initialized T.
             unsafe {
                 (*(*block).slots[idx].get()).assume_init_drop();
             }
@@ -741,7 +756,10 @@ impl<T> Drop for SpscQueue<T> {
         }
         // Free the remaining chain of (now empty) blocks.
         while !block.is_null() {
+            // SAFETY: &mut self — the chain is exclusively ours; each block
+            // came from Box::into_raw in alloc().
             let next = unsafe { (*block).next.load(Ordering::Relaxed) };
+            // SAFETY: see above; all items in it were already dropped.
             unsafe { drop(Box::from_raw(block)) };
             block = next;
         }
@@ -1239,6 +1257,8 @@ mod loom_model {
             let q = p.clone();
             let prod = loom::thread::spawn(move || {
                 for i in 0..2u64 {
+                    // SAFETY: slot i is unpublished (tail == i), so the
+                    // consumer never touches it concurrently.
                     q.slots[i as usize].with_mut(|s| unsafe { *s = i + 1 });
                     q.tail.store(i + 1, Ordering::Release);
                 }
@@ -1260,6 +1280,8 @@ mod loom_model {
                     loom::thread::yield_now();
                     continue;
                 }
+                // SAFETY: head < tail was observed via Acquire, so the
+                // producer's write to this slot happened-before this read.
                 let v = p.slots[head as usize].with(|s| unsafe { *s });
                 assert_eq!(v, head + 1, "read an unpublished slot");
                 got.push(v);

@@ -107,6 +107,13 @@ pub struct RunReport {
     /// Highest degradation level in force at the end of the run
     /// (0 = full fidelity).
     pub shed_level: u8,
+    /// The pre-run static analysis report
+    /// ([`GraphAnalyzer`](crate::analysis::GraphAnalyzer)). A run that
+    /// reaches a report at all passed with no errors, so only warnings
+    /// (e.g. rule A5 monitor-validity notes) appear here; they are also
+    /// mirrored into `control_events` as `ControlEvent::Note`s and the
+    /// `sf_analysis_warnings` gauge.
+    pub analysis: crate::analysis::AnalysisReport,
     /// The run was force-terminated by [`RunOptions::deadline`]
     /// (crate::flow::RunOptions::deadline) before the topology drained;
     /// every total in this report describes the partial run.
@@ -233,6 +240,18 @@ pub(crate) fn execute(
     shedders: Vec<ShedBinding>,
 ) -> Result<RunReport> {
     topo.validate()?;
+    // Pre-run static analysis: a structurally-doomed graph (bounded-queue
+    // cycle, unreachable kernel, infeasible budget) aborts here, before a
+    // single kernel thread spawns, with the full report attached.
+    // Warnings survive into the report/journal/gauge below.
+    let analysis_ctx = crate::analysis::AnalysisContext {
+        elastic: (elastic_forced || !topo.elastic.is_empty()).then_some(elastic_cfg),
+        net_plan: &[],
+    };
+    let analysis = crate::analysis::GraphAnalyzer::new().analyze(topo, &analysis_ctx);
+    if analysis.has_errors() {
+        return Err(SfError::Analysis(Box::new(analysis)));
+    }
     let time = TimeRef::new();
 
     // ---- elastic control-plane bindings (resolved before the kernel
@@ -333,6 +352,11 @@ pub(crate) fn execute(
     let tel_ring = tel_active
         .then(|| Arc::new(EventRing::new(telemetry.effective_ring_capacity())));
     let tel_shared = tel_active.then(|| MetricsShared::new(topo.elastic.len()));
+    if let Some(shared) = &tel_shared {
+        // The analyzer ran before spawn; its warning count is a static
+        // property of this run, so the gauge is live from the first scrape.
+        shared.set_analysis_warnings(analysis.warnings().count() as u64);
+    }
     let tel_registry = match (&tel_ring, &tel_shared) {
         (Some(ring), Some(shared)) => {
             let mut reg = MetricsRegistry::new(shared.clone());
@@ -659,8 +683,21 @@ pub(crate) fn execute(
         }
         control_events.push(ev);
     }
+    // Analyzer warnings join the journal the same way — `at_ns: 0`
+    // because they predate the kernel phase.
+    let analysis_warning_count = analysis.warnings().count() as u64;
+    for w in analysis.warnings() {
+        let ev = ControlEvent::Note {
+            at_ns: 0,
+            note: format!("analysis {} ({}): {}", w.rule, w.rule.title(), w.message),
+        };
+        if let Some(ring) = &tel_ring {
+            ring.emit(ev.clone());
+        }
+        control_events.push(ev);
+    }
     if let Some(ring) = &tel_ring {
-        if !run_fault_records.is_empty() {
+        if !run_fault_records.is_empty() || analysis_warning_count > 0 {
             ring.sync();
         }
     }
@@ -702,6 +739,7 @@ pub(crate) fn execute(
         placement: placement_report,
         control_events,
         events_dropped,
+        analysis,
         ..Default::default()
     };
     while let Ok(ev) = drain_rx.try_recv() {

@@ -37,6 +37,7 @@
 //! | `sf_faults_total` | counter | — |
 //! | `sf_degradation_level` | gauge | — |
 //! | `sf_items_shed_total` | counter | — |
+//! | `sf_analysis_warnings` | gauge | — |
 //! | `sf_build_info` | gauge | `version` |
 //!
 //! Conservation invariant (tested in `tests/telemetry.rs`): for every
@@ -90,6 +91,8 @@ pub struct MetricsShared {
     shed_level: AtomicU64,
     /// Lifetime items deliberately shed across all sources.
     shed_total: AtomicU64,
+    /// Warnings the pre-run graph analyzer attached to this run.
+    analysis_warnings: AtomicU64,
 }
 
 impl std::fmt::Debug for MetricsShared {
@@ -110,7 +113,19 @@ impl MetricsShared {
             faults: AtomicU64::new(0),
             shed_level: AtomicU64::new(0),
             shed_total: AtomicU64::new(0),
+            analysis_warnings: AtomicU64::new(0),
         })
+    }
+
+    /// Scheduler-side: record the pre-run analyzer's warning count once,
+    /// before the first scrape window opens.
+    pub fn set_analysis_warnings(&self, n: u64) {
+        self.analysis_warnings.store(n, Ordering::Relaxed);
+    }
+
+    /// Warnings the pre-run analyzer attached to this run.
+    pub fn analysis_warnings(&self) -> u64 {
+        self.analysis_warnings.load(Ordering::Relaxed)
     }
 
     /// Controller-side: count supervision faults as they are tailed.
@@ -365,6 +380,9 @@ impl MetricsRegistry {
         header(&mut out, "sf_items_shed_total",
             "Items deliberately dropped by degraded sources.", "counter");
         let _ = writeln!(out, "sf_items_shed_total {shed}");
+        header(&mut out, "sf_analysis_warnings",
+            "Warnings from the pre-run graph analyzer (rules A1-A5).", "gauge");
+        let _ = writeln!(out, "sf_analysis_warnings {}", self.shared.analysis_warnings());
 
         header(&mut out, "sf_build_info", "Build metadata (constant 1).", "gauge");
         let _ = writeln!(out, "sf_build_info{{version=\"{}\"}} 1", crate::version());
@@ -577,12 +595,15 @@ mod tests {
         assert!(text.contains("sf_faults_total 0"), "{text}");
         assert!(text.contains("sf_degradation_level 0"), "{text}");
         assert!(text.contains("sf_items_shed_total 0"), "{text}");
+        assert!(text.contains("sf_analysis_warnings 0"), "{text}");
         reg.shared().inc_faults(2);
         reg.shared().set_shed(3, 4096);
+        reg.shared().set_analysis_warnings(5);
         let text = reg.render();
         assert!(text.contains("sf_faults_total 2"), "{text}");
         assert!(text.contains("sf_degradation_level 3"), "{text}");
         assert!(text.contains("sf_items_shed_total 4096"), "{text}");
+        assert!(text.contains("sf_analysis_warnings 5"), "{text}");
         assert_eq!(reg.shared().shed(), (3, 4096));
     }
 

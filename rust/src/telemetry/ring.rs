@@ -260,6 +260,8 @@ pub struct EventRing {
 // and consumers (serialized by the journal mutex) read it only once the
 // tail Release store has published it.
 unsafe impl Send for EventRing {}
+// SAFETY: same argument as Send above — the head/tail handshake plus the
+// journal mutex serialize every slot access across threads.
 unsafe impl Sync for EventRing {}
 
 impl std::fmt::Debug for EventRing {
@@ -552,5 +554,111 @@ mod tests {
                 "{line}"
             );
         }
+    }
+}
+
+/// Model-checks the transport half of the ring (not the full
+/// [`EventRing`]): the producer writes a slot only when `tail - head`
+/// (head read with Acquire) leaves room, Release-publishes `tail`, and
+/// counts the event as dropped otherwise; consumers serialize on the
+/// journal mutex, Acquire-load `tail`, take each published slot exactly
+/// once, and Release-store `head` to re-own the slot to the producer.
+/// The checked invariants are conservation (drained + dropped == emitted)
+/// and publish-order delivery with no unpublished or double reads.
+///
+/// Off by default — same gating as the queue models: the dedicated CI
+/// loom lane runs `RUSTFLAGS="--cfg loom" cargo test --features loom
+/// --release --lib telemetry::ring`.
+#[cfg(all(test, feature = "loom", loom))]
+mod loom_model {
+    use loom::cell::UnsafeCell;
+    use loom::sync::atomic::{AtomicU64, Ordering};
+    use loom::sync::{Arc, Mutex};
+
+    const CAP: u64 = 2;
+
+    struct Proto {
+        tail: AtomicU64,
+        head: AtomicU64,
+        dropped: AtomicU64,
+        slots: [UnsafeCell<u64>; CAP as usize],
+        journal: Mutex<Vec<u64>>,
+    }
+
+    impl Proto {
+        /// The consumer path of `EventRing::sync`: serialized by the
+        /// journal mutex, Acquire on `tail`, Release on `head`.
+        fn drain(&self) {
+            let mut journal = self.journal.lock().unwrap();
+            let tail = self.tail.load(Ordering::Acquire);
+            let mut head = self.head.load(Ordering::Relaxed);
+            while head != tail {
+                let idx = (head % CAP) as usize;
+                // SAFETY: slot `idx` is inside [head, tail) — published
+                // by the tail Release store, exclusively ours under the
+                // journal mutex.
+                let v = self.slots[idx].with(|s| unsafe { *s });
+                journal.push(v);
+                head = head.wrapping_add(1);
+                self.head.store(head, Ordering::Release);
+            }
+        }
+    }
+
+    #[test]
+    fn emit_drain_overflow_conservation() {
+        const EMITS: u64 = 3;
+        loom::model(|| {
+            let p = Arc::new(Proto {
+                tail: AtomicU64::new(0),
+                head: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                slots: [UnsafeCell::new(0), UnsafeCell::new(0)],
+                journal: Mutex::new(Vec::new()),
+            });
+
+            // Producer: the control thread's `emit`.
+            let q = p.clone();
+            let prod = loom::thread::spawn(move || {
+                for i in 0..EMITS {
+                    let tail = q.tail.load(Ordering::Relaxed);
+                    let head = q.head.load(Ordering::Acquire);
+                    if tail.wrapping_sub(head) >= CAP {
+                        q.dropped.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    let idx = (tail % CAP) as usize;
+                    // SAFETY: slot `idx` is outside [head, tail) — the
+                    // consumer re-owned it via the head Release store.
+                    q.slots[idx].with_mut(|s| unsafe { *s = i + 1 });
+                    q.tail.store(tail.wrapping_add(1), Ordering::Release);
+                }
+            });
+
+            // A live exporter draining concurrently with the producer.
+            let c = p.clone();
+            let cons = loom::thread::spawn(move || c.drain());
+
+            prod.join().unwrap();
+            cons.join().unwrap();
+            // End-of-run: the report builder's final drain.
+            p.drain();
+
+            let journal = p.journal.lock().unwrap();
+            let dropped = p.dropped.load(Ordering::Relaxed);
+            assert_eq!(
+                journal.len() as u64 + dropped,
+                EMITS,
+                "conservation: drained + dropped != emitted"
+            );
+            // Publish-order delivery of exactly the accepted events: the
+            // journal must be a strictly increasing subsequence of 1..=N
+            // (a repeat would be a double read, a 0 an unpublished read).
+            let mut prev = 0u64;
+            for &v in journal.iter() {
+                assert!(v > prev && v <= EMITS, "out-of-order or invalid value {v}");
+                prev = v;
+            }
+        });
     }
 }

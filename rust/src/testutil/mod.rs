@@ -46,11 +46,11 @@ impl ElasticStage for ScriptedStage {
         self.name
     }
     fn replicas(&self) -> usize {
-        *self.replicas.lock().unwrap()
+        *self.replicas.lock().unwrap_or_else(|e| e.into_inner())
     }
     fn scale_to(&self, n: usize) -> usize {
         let n = self.policy.clamp(n);
-        *self.replicas.lock().unwrap() = n;
+        *self.replicas.lock().unwrap_or_else(|e| e.into_inner()) = n;
         n
     }
     fn lane_probe(&self) -> Vec<MonitorSample> {

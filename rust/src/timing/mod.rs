@@ -29,8 +29,8 @@ static CALIBRATION: OnceLock<Option<Calibration>> = OnceLock::new();
 
 #[inline]
 fn raw_monotonic_ns() -> Nanos {
-    // SAFETY: plain libc call with a valid out-pointer.
     let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain libc call with a valid out-pointer.
     unsafe {
         libc::clock_gettime(libc::CLOCK_MONOTONIC, &mut ts);
     }

@@ -1,0 +1,312 @@
+//! Integration tests for the pre-run graph analyzer: random clean DAGs
+//! pass, and a seeded defect per rule (A1–A5) is rejected with that
+//! rule's stable id and kernel/stream provenance. Both shipped app
+//! wirings must verify clean in every deployment shape.
+
+use streamflow::analysis::{Rule, Severity, A5_MIN_CAPACITY};
+use streamflow::apps::{matmul, rabin_karp};
+use streamflow::config::{MatmulConfig, RabinKarpConfig};
+use streamflow::elastic::ElasticConfig;
+use streamflow::prelude::*;
+use streamflow::rng::Xoshiro256pp;
+use streamflow::testutil::{check, PropConfig};
+
+/// Inert kernel for graph-shape tests (analysis never runs kernels).
+struct Stub(String);
+
+impl Kernel for Stub {
+    fn name(&self) -> &str {
+        &self.0
+    }
+    fn run(&mut self, _ctx: &mut KernelContext) -> KernelStatus {
+        KernelStatus::Done
+    }
+}
+
+fn stub(name: impl Into<String>) -> Box<dyn Kernel> {
+    Box::new(Stub(name.into()))
+}
+
+/// A random DAG that is clean by construction: node 0 is the unique
+/// source, every later node takes at least one edge from an earlier node
+/// (so everything is reachable), and all edges point forward (so there
+/// is no cycle). Extra forward edges are sprinkled at random.
+#[derive(Debug, Clone)]
+struct DagSpec {
+    nodes: usize,
+    /// (src, dst) with src < dst; includes the spanning edges.
+    edges: Vec<(usize, usize)>,
+}
+
+fn gen_dag(rng: &mut Xoshiro256pp) -> DagSpec {
+    let nodes = 2 + rng.next_bounded(7) as usize; // 2..=8
+    let mut edges = Vec::new();
+    for dst in 1..nodes {
+        let src = rng.next_bounded(dst as u32) as usize;
+        edges.push((src, dst));
+    }
+    let extras = rng.next_bounded(2 * nodes as u32) as usize;
+    for _ in 0..extras {
+        let src = rng.next_bounded(nodes as u32 - 1) as usize;
+        let dst = src + 1 + rng.next_bounded((nodes - src - 1) as u32) as usize;
+        edges.push((src, dst));
+    }
+    DagSpec { nodes, edges }
+}
+
+/// Build the spec as a topology; each wire claims the next free port on
+/// both ends so ports stay contiguous.
+fn build_dag(spec: &DagSpec) -> Topology {
+    let mut t = Topology::new("prop-dag");
+    let ids: Vec<KernelId> = (0..spec.nodes).map(|i| t.add_kernel(stub(format!("k{i}")))).collect();
+    let mut out_ports = vec![0usize; spec.nodes];
+    let mut in_ports = vec![0usize; spec.nodes];
+    for &(src, dst) in &spec.edges {
+        let op = out_ports[src];
+        let ip = in_ports[dst];
+        out_ports[src] += 1;
+        in_ports[dst] += 1;
+        t.connect(
+            Outlet::<u64>::new(ids[src], op),
+            Inlet::<u64>::new(ids[dst], ip),
+            StreamConfig::default(),
+        )
+        .unwrap();
+    }
+    t
+}
+
+#[test]
+fn random_clean_dags_pass() {
+    check(
+        PropConfig { cases: 48, ..Default::default() },
+        gen_dag,
+        |spec| {
+            let t = build_dag(spec);
+            let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+            r.is_clean()
+        },
+    );
+}
+
+#[test]
+fn random_dag_with_a_back_edge_is_rejected_as_a1() {
+    // Seeded defect: close any clean DAG into a cycle by wiring its last
+    // node back to node 0. The analyzer must flag A1 (the cycle) — and
+    // since node 0 is then no longer a source, rules may stack, but the
+    // cycle id itself must always be present with its provenance.
+    check(
+        PropConfig { cases: 24, ..Default::default() },
+        gen_dag,
+        |spec| {
+            let mut t = build_dag(spec);
+            let last = KernelId(spec.nodes - 1);
+            let op = spec.edges.iter().filter(|&&(s, _)| s == spec.nodes - 1).count();
+            let ip = spec.edges.iter().filter(|&&(_, d)| d == 0).count();
+            t.connect(
+                Outlet::<u64>::new(last, op),
+                Inlet::<u64>::new(KernelId(0), ip),
+                StreamConfig::default(),
+            )
+            .unwrap();
+            let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+            let Some(d) = r.errors().find(|d| d.rule == Rule::A1) else {
+                return false;
+            };
+            d.rule.id() == "A1" && !d.kernels.is_empty() && !d.streams.is_empty()
+        },
+    );
+}
+
+#[test]
+fn a1_two_kernel_cycle_reports_both_edges() {
+    let mut t = Topology::new("looped");
+    let a = t.add_kernel(stub("a"));
+    let b = t.add_kernel(stub("b"));
+    t.connect(Outlet::<u64>::new(a, 0), Inlet::new(b, 0), StreamConfig::default()).unwrap();
+    t.connect(Outlet::<u64>::new(b, 0), Inlet::new(a, 0), StreamConfig::default()).unwrap();
+    let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+    let d = r.errors().find(|d| d.rule == Rule::A1).expect("A1 fires");
+    assert_eq!(d.rule.id(), "A1");
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.kernels.len(), 2, "both members in provenance: {}", r.render());
+    assert_eq!(d.streams.len(), 2, "both edges in provenance: {}", r.render());
+    assert!(r.render().contains("error[A1]"), "{}", r.render());
+}
+
+#[test]
+fn a2_island_and_starved_sink_report_their_kernels() {
+    let mut t = Topology::new("dangling");
+    let a = t.add_kernel(stub("src"));
+    let b = t.add_kernel(stub("snk"));
+    t.connect(Outlet::<u64>::new(a, 0), Inlet::new(b, 0), StreamConfig::default()).unwrap();
+    let island = t.add_kernel(stub("island"));
+    // A side cycle no source feeds: x <-> y, with a sink hanging off it.
+    let x = t.add_kernel(stub("x"));
+    let y = t.add_kernel(stub("y"));
+    let dead = t.add_kernel(stub("dead-sink"));
+    t.connect(Outlet::<u64>::new(x, 0), Inlet::new(y, 0), StreamConfig::default()).unwrap();
+    t.connect(Outlet::<u64>::new(y, 0), Inlet::new(x, 0), StreamConfig::default()).unwrap();
+    t.connect(Outlet::<u64>::new(y, 1), Inlet::new(dead, 0), StreamConfig::default()).unwrap();
+    let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+    let a2: Vec<_> = r.errors().filter(|d| d.rule == Rule::A2).collect();
+    assert!(!a2.is_empty(), "{}", r.render());
+    for d in &a2 {
+        assert_eq!(d.rule.id(), "A2");
+        assert!(!d.kernels.is_empty(), "A2 without kernel provenance: {}", r.render());
+    }
+    let named = |name: &str| {
+        a2.iter().any(|d| d.kernels.iter().any(|(_, n)| n == name))
+    };
+    assert!(named("island"), "island flagged: {}", r.render());
+    assert!(named("dead-sink"), "starved sink flagged: {}", r.render());
+    assert_eq!(t.kernel_name(island), "island");
+}
+
+#[test]
+fn a3_budget_below_replica_floor_is_rejected() {
+    struct Id;
+    impl Replicable for Id {
+        type In = u64;
+        type Out = u64;
+        fn process(&mut self, v: u64) -> u64 {
+            v
+        }
+    }
+    let mut t = Topology::new("over-floored");
+    let a = t.add_kernel(stub("src"));
+    let cfg = ElasticStageConfig {
+        policy: ElasticPolicy { min_replicas: 3, max_replicas: 8, ..Default::default() },
+        ..Default::default()
+    };
+    let stage = t.add_elastic_stage("wide", cfg, |_| Id).unwrap();
+    let b = t.add_kernel(stub("snk"));
+    t.connect(Outlet::new(a, 0), stage.inlet(), StreamConfig::default()).unwrap();
+    t.connect(stage.outlet(), Inlet::new(b, 0), StreamConfig::default()).unwrap();
+
+    // Fixed(2) can never cover min_replicas = 3.
+    let elastic = ElasticConfig { worker_budget: BudgetPolicy::Fixed(2), ..Default::default() };
+    let ctx = AnalysisContext::new().with_elastic(&elastic);
+    let r = GraphAnalyzer::new().analyze(&t, &ctx);
+    let d = r.errors().find(|d| d.rule == Rule::A3).expect("A3 fires");
+    assert_eq!(d.rule.id(), "A3");
+    assert!(d.message.contains("min_replicas"), "{}", r.render());
+
+    // A HostAware budget whose *floor* undershoots but whose ceiling
+    // covers is only a warning (feasible on an idle host).
+    let elastic = ElasticConfig {
+        worker_budget: BudgetPolicy::HostAware { headroom: 0.25, floor: 1, ceil: 8 },
+        ..Default::default()
+    };
+    let ctx = AnalysisContext::new().with_elastic(&elastic);
+    let r = GraphAnalyzer::new().analyze(&t, &ctx);
+    assert!(!r.has_errors(), "floor shortfall is a warning: {}", r.render());
+    assert!(
+        r.warnings().any(|d| d.rule == Rule::A3 && d.message.contains("floor")),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn a4_defective_shard_plans_are_rejected_with_ids() {
+    let t = Topology::new("sharded");
+    let plan = vec![
+        NetEdgePlan::of::<u64>("feed:0", 0xF00D, 8),
+        NetEdgePlan::of::<u64>("feed:0", 0xF00D, 8), // duplicate edge id
+        NetEdgePlan::of::<u64>("results:0", 0xBEEF, 8), // topology-id split
+        NetEdgePlan::untyped("raw:0", 0xF00D, "NotWireType"),
+    ];
+    let ctx = AnalysisContext::new().with_net_plan(&plan);
+    let r = GraphAnalyzer::new().analyze(&t, &ctx);
+    let a4: Vec<_> = r.errors().filter(|d| d.rule == Rule::A4).collect();
+    assert!(a4.iter().all(|d| d.rule.id() == "A4"));
+    assert!(a4.iter().any(|d| d.message.contains("feed:0")), "{}", r.render());
+    assert!(a4.iter().any(|d| d.message.contains("Hello handshake")), "{}", r.render());
+    assert!(a4.iter().any(|d| d.message.contains("NotWireType")), "{}", r.render());
+}
+
+#[test]
+fn a5_undersized_instrumented_edge_warns_with_stream_provenance() {
+    let mut t = Topology::new("tight");
+    let a = t.add_kernel(stub("burst-src"));
+    let b = t.add_kernel(stub("snk"));
+    t.connect(
+        Outlet::<u64>::new(a, 0),
+        Inlet::new(b, 0),
+        StreamConfig::default().with_capacity(A5_MIN_CAPACITY - 1),
+    )
+    .unwrap();
+    let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+    assert!(!r.has_errors(), "A5 is a warning: {}", r.render());
+    let d = r.warnings().find(|d| d.rule == Rule::A5).expect("A5 fires");
+    assert_eq!(d.rule.id(), "A5");
+    assert_eq!(d.streams.len(), 1, "stream provenance: {}", r.render());
+    assert!(
+        d.kernels.iter().any(|(_, n)| n == "burst-src"),
+        "producer provenance: {}",
+        r.render()
+    );
+
+    // Same wiring, silenced per edge: clean.
+    let mut t = Topology::new("tight-ack");
+    let a = t.add_kernel(stub("burst-src"));
+    let b = t.add_kernel(stub("snk"));
+    t.connect(
+        Outlet::<u64>::new(a, 0),
+        Inlet::new(b, 0),
+        StreamConfig::default().with_capacity(A5_MIN_CAPACITY - 1).silence_analysis(),
+    )
+    .unwrap();
+    let r = GraphAnalyzer::new().analyze(&t, &AnalysisContext::new());
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+// ---------------------------------------------------------------- apps --
+
+fn small_matmul() -> MatmulConfig {
+    MatmulConfig { n: 64, block_rows: 8, ..Default::default() }
+}
+
+fn small_rabin_karp() -> RabinKarpConfig {
+    RabinKarpConfig { corpus_bytes: 64 << 10, segment_bytes: 8 << 10, ..Default::default() }
+}
+
+#[test]
+fn matmul_wirings_verify_clean() {
+    let opts = RunOptions::default();
+    let elastic = matmul::verify_matmul(&small_matmul(), None, &opts).unwrap();
+    assert!(elastic.is_clean(), "{}", elastic.render());
+
+    let mut cfg = small_matmul();
+    cfg.static_degree = Some(4);
+    let fixed = matmul::verify_matmul(&cfg, None, &opts).unwrap();
+    assert!(fixed.is_clean(), "{}", fixed.render());
+
+    let sharded = matmul::verify_matmul(&small_matmul(), Some(2), &opts).unwrap();
+    assert!(sharded.is_clean(), "{}", sharded.render());
+}
+
+#[test]
+fn rabin_karp_wirings_verify_clean() {
+    let opts = RunOptions::default();
+    let elastic = rabin_karp::verify_rabin_karp(&small_rabin_karp(), None, &opts).unwrap();
+    assert!(elastic.is_clean(), "{}", elastic.render());
+
+    let sharded = rabin_karp::verify_rabin_karp(&small_rabin_karp(), Some(2), &opts).unwrap();
+    assert!(sharded.is_clean(), "{}", sharded.render());
+}
+
+#[test]
+fn degenerate_app_configs_are_config_errors_not_reports() {
+    let opts = RunOptions::default();
+    let mut cfg = small_matmul();
+    cfg.n = 0;
+    assert!(matmul::verify_matmul(&cfg, None, &opts).is_err());
+    assert!(matmul::verify_matmul(&small_matmul(), Some(0), &opts).is_err());
+
+    let mut cfg = small_rabin_karp();
+    cfg.pattern = String::new();
+    assert!(rabin_karp::verify_rabin_karp(&cfg, None, &opts).is_err());
+    assert!(rabin_karp::verify_rabin_karp(&small_rabin_karp(), Some(0), &opts).is_err());
+}
